@@ -1,0 +1,151 @@
+//! §Perf hot path — wall-clock of the real three-layer stack (PJRT on
+//! this host): per-kernel execute latency/throughput, coordinator
+//! round-trip overhead, and the CFD dispatch ablation (stepwise vs fused
+//! 10-step chunk). This is the bench the §Perf iteration log in
+//! EXPERIMENTS.md is measured with.
+
+use gdrk::cfd::GpuModelDriver;
+use gdrk::coordinator::{Service, ServiceConfig};
+use gdrk::report::Table;
+use gdrk::runtime::{Runtime, Tensor};
+use gdrk::tensor::{NdArray, Shape};
+use gdrk::util::rng::Rng;
+use gdrk::util::timing::bench;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP hotpath: artifacts/ not built (make artifacts)");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    println!("platform: {}\n", rt.platform());
+    let mut rng = Rng::new(0xBE9C);
+
+    // --- per-kernel execute latency + effective host bandwidth ----------
+    let mut t = Table::new(
+        "hot path: Runtime::execute wall-clock (XLA-CPU, this host)",
+        &["artifact", "p50 ms", "p95 ms", "GB/s (useful)"],
+    );
+    let cases: Vec<(&str, Vec<Tensor>)> = vec![
+        ("copy_4m", vec![Tensor::F32(NdArray::random(Shape::new(&[1 << 22]), &mut rng))]),
+        ("scale_4m", vec![Tensor::F32(NdArray::random(Shape::new(&[1 << 22]), &mut rng))]),
+        (
+            "bandwidth_chain_4m",
+            vec![Tensor::F32(NdArray::random(Shape::new(&[1 << 22]), &mut rng))],
+        ),
+        (
+            "permute3d_o102_med",
+            vec![Tensor::F32(NdArray::random(Shape::new(&[64, 256, 512]), &mut rng))],
+        ),
+        (
+            "permute3d_o021_med",
+            vec![Tensor::F32(NdArray::random(Shape::new(&[64, 256, 512]), &mut rng))],
+        ),
+        (
+            "interlace_n4",
+            (0..4)
+                .map(|_| Tensor::F32(NdArray::random(Shape::new(&[1 << 18]), &mut rng)))
+                .collect(),
+        ),
+        (
+            "fd1_2048",
+            vec![Tensor::F32(NdArray::random(Shape::new(&[2048, 2048]), &mut rng))],
+        ),
+    ];
+    for (name, inputs) in &cases {
+        let entry = rt.entry(name).expect("entry");
+        let bytes = entry
+            .meta_usize("bytes_moved")
+            .unwrap_or_else(|| entry.inputs.iter().map(|s| s.shape.num_elements() * 4 * 2).sum());
+        let stats = bench(2, 8, || {
+            rt.execute(name, inputs).expect("execute");
+        });
+        t.row(&[
+            (*name).into(),
+            format!("{:.3}", stats.p50 * 1e3),
+            format!("{:.3}", stats.p95 * 1e3),
+            format!("{:.2}", stats.bandwidth_gbs(bytes)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- coordinator overhead vs direct execute -------------------------
+    let direct = bench(2, 16, || {
+        rt.execute("permute3d_o102", &[Tensor::F32(NdArray::iota(Shape::new(&[32, 48, 64])))])
+            .expect("direct");
+    });
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: dir.clone(),
+        max_batch: 8,
+        preload: vec!["permute3d_o102".into()],
+    })
+    .expect("service");
+    let x = Tensor::F32(NdArray::iota(Shape::new(&[32, 48, 64])));
+    let serve = bench(2, 16, || {
+        service.call("permute3d_o102", vec![x.clone()]).expect("serve");
+    });
+    // Pipelined throughput: submit a burst, then await.
+    let burst = 64;
+    let t0 = std::time::Instant::now();
+    let pending: Vec<_> = (0..burst)
+        .map(|_| service.submit("permute3d_o102", vec![x.clone()]).1)
+        .collect();
+    for rx in pending {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let burst_dt = t0.elapsed().as_secs_f64();
+    let mut c = Table::new(
+        "hot path: coordinator overhead (permute3d_o102, 32x48x64)",
+        &["path", "p50 us", "p95 us"],
+    );
+    c.row(&[
+        "direct Runtime::execute".into(),
+        format!("{:.1}", direct.p50 * 1e6),
+        format!("{:.1}", direct.p95 * 1e6),
+    ]);
+    c.row(&[
+        "Service::call (queue+batch+reply)".into(),
+        format!("{:.1}", serve.p50 * 1e6),
+        format!("{:.1}", serve.p95 * 1e6),
+    ]);
+    println!("{}", c.render());
+    println!(
+        "burst throughput: {burst} reqs in {:.3} ms = {:.0} req/s; {}",
+        burst_dt * 1e3,
+        burst as f64 / burst_dt,
+        service.metrics().summary()
+    );
+    let overhead = serve.p50 - direct.p50;
+    println!(
+        "coordinator adds {:.1} us p50 over direct execute",
+        overhead * 1e6
+    );
+    service.shutdown();
+
+    // --- CFD dispatch ablation: stepwise vs fused chunk ------------------
+    let driver = GpuModelDriver::new(&rt, 128).expect("driver");
+    let _ = driver.run_stepwise(10, 10).expect("warm step");
+    let _ = driver.run_chunked(10).expect("warm chunk");
+    let stepwise = driver.run_stepwise(100, 100).expect("stepwise");
+    let chunked = driver.run_chunked(100).expect("chunked");
+    let mut f = Table::new(
+        "hot path: cavity 128^2 dispatch ablation (100 steps)",
+        &["strategy", "steps/s", "ms/step"],
+    );
+    f.row(&[
+        "stepwise (1 dispatch/step)".into(),
+        format!("{:.1}", stepwise.steps_per_second()),
+        format!("{:.3}", 1e3 * stepwise.wall_seconds / stepwise.steps as f64),
+    ]);
+    f.row(&[
+        "chunked (10 steps/dispatch)".into(),
+        format!("{:.1}", chunked.steps_per_second()),
+        format!("{:.3}", 1e3 * chunked.wall_seconds / chunked.steps as f64),
+    ]);
+    println!("{}", f.render());
+    println!(
+        "chunking speedup: {:.2}x",
+        chunked.steps_per_second() / stepwise.steps_per_second()
+    );
+}

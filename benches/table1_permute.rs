@@ -1,0 +1,110 @@
+//! Table 1 — 3D permute kernel, all six orders on the paper's
+//! 128x256x512 f32 data set (simulated C1060), plus the ablations that
+//! justify the paper's design: naive scatter baseline, row-major vs
+//! diagonal block order, padded vs unpadded shared memory.
+
+use gdrk::gpusim::{simulate, Device};
+use gdrk::kernels::{MemcpyKernel, NaivePermuteKernel, TiledPermuteKernel};
+use gdrk::planner::plan_reorder;
+use gdrk::report::{gbs, Table};
+use gdrk::tensor::{Order, Shape};
+
+const PAPER: &[(&str, f64)] = &[
+    ("[0 1 2] memcpy", 77.82),
+    ("[0 2 1]", 62.55),
+    ("[1 0 2]", 63.17),
+    ("[1 2 0]", 57.38),
+    ("[2 0 1]", 59.63),
+    ("[2 1 0]", 58.42),
+];
+
+fn main() {
+    let dev = Device::tesla_c1060();
+    let shape = Shape::from_paper_dims(&[128, 256, 512]);
+    println!(
+        "workload: 128x256x512 f32 = {} MiB\n",
+        shape.num_elements() * 4 / (1 << 20)
+    );
+
+    let mut t = Table::new(
+        "Table 1: 3D permute kernel (simulated C1060)",
+        &["order", "paper GB/s", "sim GB/s", "naive GB/s", "camping"],
+    );
+    let memcpy = simulate(&MemcpyKernel::f32(shape.num_elements()), &dev);
+    t.row(&[
+        "[0 1 2] memcpy".into(),
+        gbs(PAPER[0].1),
+        gbs(memcpy.bandwidth_gbs),
+        "-".into(),
+        format!("{:.2}", memcpy.camping_factor),
+    ]);
+
+    let mut lo = f64::INFINITY;
+    let mut hi = 0.0f64;
+    let mut worst_naive = f64::INFINITY;
+    for (i, order) in [[0usize, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]]
+        .iter()
+        .enumerate()
+    {
+        let ord = Order::new(order).unwrap();
+        let plan = plan_reorder(&shape, &ord, true).unwrap();
+        let opt = simulate(&TiledPermuteKernel::new(plan.clone()), &dev);
+        let naive = simulate(&NaivePermuteKernel::new(plan), &dev);
+        lo = lo.min(opt.bandwidth_gbs);
+        hi = hi.max(opt.bandwidth_gbs);
+        worst_naive = worst_naive.min(naive.bandwidth_gbs);
+        t.row(&[
+            PAPER[i + 1].0.into(),
+            gbs(PAPER[i + 1].1),
+            gbs(opt.bandwidth_gbs),
+            gbs(naive.bandwidth_gbs),
+            format!("{:.2}", opt.camping_factor),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Ablations on the classic transpose order [1 0 2].
+    let ord = Order::new(&[1, 0, 2]).unwrap();
+    let mut a = Table::new(
+        "Table 1 ablations: [1 0 2] design choices",
+        &["variant", "GB/s", "camping", "smem ms"],
+    );
+    for (label, diag, unpadded) in [
+        ("optimized (diag, padded)", true, false),
+        ("row-major blocks", false, false),
+        ("unpadded smem", true, true),
+    ] {
+        let mut k = TiledPermuteKernel::new(plan_reorder(&shape, &ord, diag).unwrap());
+        k.unpadded_smem = unpadded;
+        let r = simulate(&k, &dev);
+        a.row(&[
+            label.into(),
+            gbs(r.bandwidth_gbs),
+            format!("{:.2}", r.camping_factor),
+            format!("{:.3}", r.t_smem * 1e3),
+        ]);
+    }
+    let naive = simulate(
+        &NaivePermuteKernel::new(plan_reorder(&shape, &ord, false).unwrap()),
+        &dev,
+    );
+    a.row(&[
+        "naive scatter".into(),
+        gbs(naive.bandwidth_gbs),
+        format!("{:.2}", naive.camping_factor),
+        "-".into(),
+    ]);
+    println!("{}", a.render());
+
+    // Shape assertions (the reproduction criteria).
+    let ratio_lo = lo / memcpy.bandwidth_gbs;
+    let ratio_hi = hi / memcpy.bandwidth_gbs;
+    println!(
+        "paper:    permutes at 74-81% of memcpy; measured: {:.0}-{:.0}%",
+        ratio_lo * 100.0,
+        ratio_hi * 100.0
+    );
+    assert!(ratio_lo > 0.6 && ratio_hi < 0.95, "permute band off paper shape");
+    assert!(worst_naive < 0.5 * lo, "naive baseline should lose badly");
+    println!("SHAPE OK: memcpy > permutes (~80-90% band) > naive scatter");
+}

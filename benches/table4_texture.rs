@@ -1,0 +1,62 @@
+//! Table 4 — stencil kernel variants with texture memory, I-order 2D-FD
+//! on a 4096x4096 f32 grid (simulated C1060).
+//!
+//! Paper: global 51.07 | 1D-tex 54.34 | hybrid-1D 52.88 | 2D-tex 47.22 |
+//! hybrid-2D 53.91 — i.e. the 1D texture path helps a little, the pure
+//! 2D texture *loses* to plain global (it gives up row-burst coalescing),
+//! hybrids sit in between.
+
+use gdrk::gpusim::{simulate, Device};
+use gdrk::kernels::{MemPath, StencilKernel};
+use gdrk::report::{gbs, Table};
+
+const PAPER: &[(MemPath, f64)] = &[
+    (MemPath::Global, 51.07),
+    (MemPath::Tex1d, 54.34),
+    (MemPath::HybridTex1d, 52.88),
+    (MemPath::Tex2d, 47.22),
+    (MemPath::Tex2dHybrid, 53.91),
+];
+
+fn main() {
+    let dev = Device::tesla_c1060();
+    let mut t = Table::new(
+        "Table 4: stencil variants, I-order FD on 4096^2 f32 (simulated C1060)",
+        &["variant", "paper GB/s", "sim GB/s", "coalesce", "tex hit"],
+    );
+    let mut sim = std::collections::HashMap::new();
+    for &(path, paper) in PAPER {
+        let k = StencilKernel::fd(4096, 4096, 1, path);
+        let hit = {
+            use gdrk::gpusim::GpuKernel;
+            k.texture_hit_rate(&dev)
+        };
+        let r = simulate(&k, &dev);
+        sim.insert(path.label(), r.bandwidth_gbs);
+        t.row(&[
+            path.label().into(),
+            gbs(paper),
+            gbs(r.bandwidth_gbs),
+            format!("{:.2}", r.coalescing_efficiency),
+            if matches!(path, MemPath::Global) {
+                "-".into()
+            } else {
+                format!("{hit:.2}")
+            },
+        ]);
+    }
+    println!("{}", t.render());
+
+    // The paper's qualitative ordering.
+    let g = sim["global"];
+    assert!(sim["tex1d"] > g, "1D texture must beat global");
+    assert!(sim["hybrid_tex1d"] > g, "hybrid 1D must beat global");
+    assert!(sim["hybrid_tex2d"] > g, "hybrid 2D must beat global");
+    assert!(sim["tex2d"] < g, "pure 2D texture must lose to global");
+    println!(
+        "paper:    tex1d > hyb2d > hyb1d > global > tex2d (within ~15%)\nmeasured: \
+         tex1d {:.1} | hyb2d {:.1} | hyb1d {:.1} | global {:.1} | tex2d {:.1}",
+        sim["tex1d"], sim["hybrid_tex2d"], sim["hybrid_tex1d"], g, sim["tex2d"]
+    );
+    println!("SHAPE OK: texture helps apron loads, pure 2D texture loses coalescing");
+}

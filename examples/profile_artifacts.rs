@@ -1,0 +1,26 @@
+use gdrk::runtime::{Runtime, Tensor};
+use gdrk::tensor::{NdArray, Shape};
+use gdrk::util::rng::Rng;
+fn main() {
+    let rt = Runtime::new("artifacts").unwrap();
+    let mut rng = Rng::new(1);
+    for (name, shapes) in [
+        ("copy_4m", vec![vec![1usize<<22]]),
+        ("scale_4m", vec![vec![1<<22]]),
+        ("bandwidth_chain_4m", vec![vec![1<<22]]),
+        ("permute3d_o102", vec![vec![32,48,64]]),
+        ("permute3d_o102_med", vec![vec![64,256,512]]),
+        ("interlace_n4", vec![vec![1<<18],vec![1<<18],vec![1<<18],vec![1<<18]]),
+        ("fd1_512", vec![vec![512,512]]),
+        ("fd1_2048", vec![vec![2048,2048]]),
+    ] {
+        let inputs: Vec<Tensor> = shapes.iter().map(|s| Tensor::F32(NdArray::random(Shape::new(s), &mut rng))).collect();
+        let t0 = std::time::Instant::now();
+        rt.execute(name, &inputs).unwrap();
+        let compile_and_first = t0.elapsed().as_secs_f64();
+        let t1 = std::time::Instant::now();
+        rt.execute(name, &inputs).unwrap();
+        let second = t1.elapsed().as_secs_f64();
+        println!("{name:24} first {:8.1} ms   warm {:8.1} ms", compile_and_first*1e3, second*1e3);
+    }
+}

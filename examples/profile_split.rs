@@ -1,0 +1,29 @@
+use gdrk::runtime::{Runtime, Tensor};
+use gdrk::tensor::{NdArray, Shape};
+use gdrk::util::rng::Rng;
+fn main() {
+    let rt = Runtime::new("artifacts").unwrap();
+    let mut rng = Rng::new(1);
+    let x = Tensor::F32(NdArray::random(Shape::new(&[1usize<<22]), &mut rng));
+    rt.execute("copy_4m", &[x.clone()]).unwrap(); // warm-compile
+    let exe = rt.load("copy_4m").unwrap();
+    // manual split timing
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        let lit = match &x { Tensor::F32(a) => xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32, a.shape().dims(),
+            unsafe { std::slice::from_raw_parts(a.data().as_ptr() as *const u8, a.data().len()*4) }).unwrap(),
+            _ => unreachable!() };
+        let t1 = std::time::Instant::now();
+        let bufs = exe.execute::<xla::Literal>(&[lit]).unwrap();
+        let t2 = std::time::Instant::now();
+        let out_lit = bufs[0][0].to_literal_sync().unwrap();
+        let t3 = std::time::Instant::now();
+        let parts = out_lit.to_tuple().unwrap();
+        let v = parts[0].to_vec::<f32>().unwrap();
+        let t4 = std::time::Instant::now();
+        println!("lit {:6.1}ms exec {:6.1}ms sync {:6.1}ms tovec {:6.1}ms (len {})",
+            (t1-t0).as_secs_f64()*1e3, (t2-t1).as_secs_f64()*1e3,
+            (t3-t2).as_secs_f64()*1e3, (t4-t3).as_secs_f64()*1e3, v.len());
+    }
+}

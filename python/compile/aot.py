@@ -1,0 +1,297 @@
+"""AOT pipeline: lower every L1/L2 entry point to HLO text + manifest.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the Rust ``xla`` crate) rejects; the HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only NAME_PREFIX] [--list]
+
+Python runs ONLY here (build time). The Rust runtime loads
+``artifacts/manifest.json`` and the per-entry ``<name>.hlo.txt`` files and
+never touches Python again.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import cfd, model
+from .kernels import copy as k_copy
+from .kernels import gridding as k_gridding
+from .kernels import interlace as k_interlace
+from .kernels import permute3d as k_permute
+from .kernels import reorder as k_reorder
+from .kernels import stencil as k_stencil
+
+_DTYPE_NAMES = {
+    jnp.dtype("float32"): "f32",
+    jnp.dtype("int32"): "i32",
+    jnp.dtype("bfloat16"): "bf16",
+}
+
+
+class Entry(NamedTuple):
+    name: str
+    group: str
+    fn: Callable               # returns a tuple of outputs
+    inputs: tuple[jax.ShapeDtypeStruct, ...]
+    note: str = ""
+    meta: dict = {}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _astuple(out):
+    if isinstance(out, (tuple, list)):
+        return tuple(out)
+    return (out,)
+
+
+def build_entries() -> list[Entry]:
+    entries: list[Entry] = []
+    add = entries.append
+
+    # ---- §III.A basic read/write --------------------------------------
+    # Bench-scale artifacts use a 64K-element block: interpret-mode grid
+    # steps cost ~1.5 ms each on XLA-CPU (EXPERIMENTS.md §Perf L1-1), so
+    # the CPU-bench HBM schedule is coarser than the 32-wide C1060 tile.
+    BIG = 1 << 16
+    add(Entry("copy_4m", "copy", lambda x: (k_copy.tiled_copy(x, block=BIG),), (f32(1 << 22),),
+              "streaming D2D copy, Fig 1 workload",
+              {"bytes_moved": 2 * 4 * (1 << 22), "block": BIG}))
+    add(Entry("scale_4m", "copy", lambda x: (k_copy.scale_write(x, 1.5, block=BIG),), (f32(1 << 22),),
+              "read-modify-write stream", {"bytes_moved": 2 * 4 * (1 << 22), "block": BIG}))
+    add(Entry("read_range_1m", "copy",
+              lambda x: (k_copy.read_range(x, 4096, 1 << 20, block=BIG),), (f32(1 << 21),),
+              "contiguous range read (base+range in 'constant memory')",
+              {"bytes_moved": 2 * 4 * (1 << 20)}))
+    add(Entry("read_strided_s2", "copy",
+              lambda x: (k_copy.read_strided(x, 0, 2, 1 << 19),), (f32(1 << 20),),
+              "stride-2 gather (uncoalesced on the C1060)",
+              {"bytes_moved": 4 * ((1 << 20) + (1 << 19))}))
+    add(Entry("gather_256k", "copy",
+              lambda x, idx: (k_copy.gather(x, idx, block=1 << 15),), (f32(1 << 20), i32(1 << 18)),
+              "indexed read", {"bytes_moved": 4 * (3 * (1 << 18))}))
+
+    # ---- §III.B permute / reorder --------------------------------------
+    small = (32, 48, 64)       # jax shape; paper dims are reversed
+    for order in k_permute.TABLE1_ORDERS:
+        tag = "".join(map(str, order))
+        add(Entry(f"permute3d_o{tag}", "permute",
+                  (lambda o: lambda x: (k_permute.permute(x, o),))(order),
+                  (f32(*small),),
+                  f"3D permute to order {list(order)} (Table 1 family)",
+                  {"order": list(order)}))
+    med = (64, 256, 512)
+    for order in ((0, 2, 1), (1, 0, 2)):
+        tag = "".join(map(str, order))
+        add(Entry(f"permute3d_o{tag}_med", "permute",
+                  (lambda o: lambda x: (k_permute.permute(x, o, tile=128),))(order),
+                  (f32(*med),),
+                  "medium 3D permute for the Rust hot-path bench (tile=128)",
+                  {"order": list(order), "bytes_moved": 2 * 4 * 64 * 256 * 512,
+                   "tile": 128}))
+    add(Entry("transpose2d_2048", "permute",
+              lambda x: (k_permute.transpose(x, (1, 0), tile=128),), (f32(2048, 2048),),
+              "classic 2D transpose (NVIDIA ref [2])",
+              {"bytes_moved": 2 * 4 * 2048 * 2048}))
+    add(Entry("transpose2d_2048_diag", "permute",
+              lambda x: (k_permute.transpose(x, (1, 0), tile=128, diagonal=True),), (f32(2048, 2048),),
+              "diagonalized block-order variant (bitwise-identical output)",
+              {"bytes_moved": 2 * 4 * 2048 * 2048}))
+
+    reorder_cfgs = [
+        ("r102", (1, 0, 2), (128, 128, 128), None),
+        ("r1023", (1, 0, 2, 3), (1, 128, 128, 128), None),
+        ("r3201", (3, 2, 0, 1), (128, 1, 128, 128), None),
+        ("r30214", (3, 0, 2, 1, 4), (16, 128, 1, 16, 128), None),
+        ("r3201_c2", (3, 2, 0, 1), (128, 1, 128, 128), 2),
+    ]
+    for tag, order, jshape, out_rank in reorder_cfgs:
+        if out_rank is None:
+            fn = (lambda o: lambda x: (k_reorder.reorder(x, o),))(order)
+            note = f"generic reorder, order {list(order)} (Table 2 family, reduced size)"
+        else:
+            fn = (lambda o, m: lambda x: (k_reorder.reorder_collapse(x, o, m),))(order, out_rank)
+            note = f"N-to-M reorder, order {list(order)} -> rank {out_rank}"
+        add(Entry(f"reorder_{tag}", "reorder", fn, (f32(*jshape),), note,
+                  {"order": list(order)}))
+    add(Entry("subarray_256", "reorder",
+              lambda x: (k_reorder.subarray(x, (32, 64), (128, 128)),),
+              (f32(256, 256),), "dense sub-block extraction (base+range)"))
+
+    # ---- §III.C interlace / de-interlace --------------------------------
+    lane = 1 << 18
+    for n in (2, 4, 8):
+        add(Entry(f"interlace_n{n}", "interlace",
+                  (lambda m: lambda *a: (k_interlace.interlace(list(a), block=16384),))(n),
+                  tuple(f32(lane) for _ in range(n)),
+                  f"interlace {n} arrays (Table 3 family)",
+                  {"n": n, "bytes_moved": 2 * 4 * n * lane}))
+        add(Entry(f"deinterlace_n{n}", "interlace",
+                  (lambda m: lambda x: tuple(k_interlace.deinterlace(x, m, block=16384)))(n),
+                  (f32(n * lane),),
+                  f"de-interlace into {n} arrays (Table 3 family)",
+                  {"n": n, "bytes_moved": 2 * 4 * n * lane}))
+
+    # ---- §III.D stencil ---------------------------------------------------
+    for order in k_stencil.FIG2_ORDERS:
+        add(Entry(f"fd{order}_512", "stencil",
+                  (lambda o: lambda x: (k_stencil.fd_stencil(x, o),))(order),
+                  (f32(512, 512),),
+                  f"2D-FD Laplacian stencil, order {order} (Fig 2 family)",
+                  {"fd_order": order, "bytes_moved": 2 * 4 * 512 * 512}))
+    add(Entry("fd1_2048", "stencil", lambda x: (k_stencil.fd_stencil(x, 1),),
+              (f32(2048, 2048),), "I-order FD at bench scale (Table 4 workload)",
+              {"fd_order": 1, "bytes_moved": 2 * 4 * 2048 * 2048}))
+    add(Entry("smooth3x3_512", "stencil", lambda x: (k_stencil.smooth3x3(x),),
+              (f32(512, 512),), "3x3 box filter (image smoothing example)"))
+
+    # ---- L2 pipelines ----------------------------------------------------
+    add(Entry("image_pipeline_256", "model",
+              lambda x: (model.image_pipeline(x, 3),), (f32(256, 768),),
+              "deinterlace -> smooth -> interlace on packed RGB (fused)"))
+    # Stage-by-stage building blocks of the same pipeline (the composable
+    # path examples/image_pipeline.rs drives through the coordinator).
+    add(Entry("deinterlace_n3_img", "model",
+              lambda x: tuple(k_interlace.deinterlace(x, 3)), (f32(3 * 256 * 256),),
+              "image pipeline stage 1: split packed RGB"))
+    add(Entry("smooth3x3_256", "model",
+              lambda x: (k_stencil.smooth3x3(x),), (f32(256, 256),),
+              "image pipeline stage 2: per-plane 3x3 box filter"))
+    add(Entry("interlace_n3_img", "model",
+              lambda a, b, c: (k_interlace.interlace([a, b, c]),),
+              tuple(f32(256 * 256) for _ in range(3)),
+              "image pipeline stage 3: re-pack planes"))
+    add(Entry("complex_mag_1m", "model",
+              lambda x: (model.complex_magnitude(x),), (f32(1 << 21),),
+              "split (re,im) pairs then |z|"))
+    add(Entry("permute_roundtrip", "model",
+              lambda x: model.permute_roundtrip(x, (2, 0, 1)), (f32(32, 48, 64),),
+              "permute + inverse; output[1] must be exactly 0"))
+    add(Entry("bandwidth_chain_4m", "model",
+              lambda x: (model.bandwidth_chain(x),), (f32(1 << 22),),  # block=64K inside
+              "copy->scale->copy stream", {"bytes_moved": 6 * 4 * (1 << 22)}))
+    add(Entry("fd_cascade_512", "model",
+              lambda x: (model.fd_cascade(x),), (f32(512, 512),),
+              "chained FD stencils"))
+
+    # ---- Gridding (the paper's §IV future-work extension) ---------------
+    rot_mat, rot_off = k_gridding.rot90_params(256)
+    add(Entry("regrid_rot90_256", "gridding",
+              (lambda m, o: lambda x: (k_gridding.affine_regrid(x, m, o, (256, 256)),))(rot_mat, rot_off),
+              (f32(256, 256),),
+              "affine regrid: 90-degree rotation (gridding future work)"))
+    sc_mat, sc_off = k_gridding.scale2_params()
+    add(Entry("regrid_scale2_128", "gridding",
+              (lambda m, o: lambda x: (k_gridding.affine_regrid(x, m, o, (256, 256)),))(sc_mat, sc_off),
+              (f32(128, 128),),
+              "affine regrid: 2x nearest-neighbor upsample"))
+
+    # ---- CFD application ---------------------------------------------------
+    for n, jac in ((64, 20), (128, 20)):
+        p = cfd.CavityParams.default(n=n, jacobi_iters=jac)
+        add(Entry(f"cavity_step_n{n}", "cfd",
+                  (lambda pp: lambda o, s: cfd.cavity_step(o, s, pp))(p),
+                  (f32(n, n), f32(n, n)),
+                  f"one lid-driven-cavity step, n={n}, Re={p.reynolds}",
+                  {"n": n, "dt": p.dt, "jacobi_iters": jac,
+                   "bytes_moved": cfd.bytes_moved_per_step(p)}))
+    p128 = cfd.CavityParams.default(n=128, jacobi_iters=20)
+    add(Entry("cavity_run10_n128", "cfd",
+              lambda o, s: cfd.cavity_run(o, s, p128, 10), (f32(128, 128), f32(128, 128)),
+              "10 chained cavity steps (amortized dispatch)",
+              {"n": 128, "dt": p128.dt, "jacobi_iters": 20, "steps": 10,
+               "bytes_moved": 10 * cfd.bytes_moved_per_step(p128)}))
+    return entries
+
+
+def lower_entry(e: Entry) -> tuple[str, dict]:
+    """Lower one entry; returns (hlo_text, manifest record)."""
+    wrapped = lambda *a: _astuple(e.fn(*a))  # noqa: E731
+    out_shapes = jax.eval_shape(wrapped, *e.inputs)
+    lowered = jax.jit(wrapped).lower(*e.inputs)
+    text = to_hlo_text(lowered)
+    rec = {
+        "name": e.name,
+        "group": e.group,
+        "file": f"{e.name}.hlo.txt",
+        "inputs": [
+            {"shape": list(s.shape), "dtype": _DTYPE_NAMES[jnp.dtype(s.dtype)]}
+            for s in e.inputs
+        ],
+        "outputs": [
+            {"shape": list(s.shape), "dtype": _DTYPE_NAMES[jnp.dtype(s.dtype)]}
+            for s in out_shapes
+        ],
+        "note": e.note,
+        "meta": e.meta,
+    }
+    return text, rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="only entries with this prefix")
+    ap.add_argument("--list", action="store_true", help="list entries and exit")
+    args = ap.parse_args()
+
+    entries = build_entries()
+    if args.only:
+        entries = [e for e in entries if e.name.startswith(args.only)]
+    if args.list:
+        for e in entries:
+            print(f"{e.group:10s} {e.name:24s} {e.note}")
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    records = []
+    t0 = time.time()
+    for e in entries:
+        t1 = time.time()
+        text, rec = lower_entry(e)
+        path = os.path.join(args.out_dir, rec["file"])
+        with open(path, "w") as f:
+            f.write(text)
+        records.append(rec)
+        print(f"  {e.name:24s} {len(text):8d} chars  {time.time() - t1:5.2f}s")
+    manifest = {
+        "format": 1,
+        "generated_by": "compile.aot",
+        "entries": records,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(records)} artifacts + manifest in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,209 @@
+"""L2: 2D lid-driven cavity Navier-Stokes solver built on the L1 kernels.
+
+This is the paper's demonstration application (conclusion + ref [12]:
+"Optimized CUDA Implementation of a Navier-Stokes based flow solver for the
+2D Lid Driven Cavity") — a flow solver whose inner loop is dominated by the
+library's data-rearrangement/stencil kernels.
+
+Formulation: vorticity–streamfunction (omega–psi) on a unit square,
+uniform N x N grid, lid at the top row moving with speed U:
+
+    1. Poisson solve  lap(psi) = -omega   (K Jacobi sweeps / step,
+       Dirichlet psi = 0 on all walls)
+    2. u =  d(psi)/dy,  v = -d(psi)/dx    (central differences)
+    3. wall vorticity via Thom's formula (lid term on the top wall)
+    4. explicit Euler vorticity transport:
+       omega_t = -u omega_x - v omega_y + nu lap(omega)
+
+Every Laplacian / derivative / Jacobi sweep goes through the generic L1
+stencil kernel with a functor, exactly how the paper's CFD code consumes
+the library. The step function is jitted and AOT-lowered to HLO by aot.py;
+the Rust L3 drives it step by step (state stays device-side).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import stencil as k_stencil
+from .kernels.common import TILE
+
+
+class CavityParams(NamedTuple):
+    """Static solver configuration (baked into the AOT artifact)."""
+
+    n: int              # grid points per side
+    reynolds: float     # lid Reynolds number (U * L / nu), L = 1
+    lid_u: float        # lid speed U
+    jacobi_iters: int   # Jacobi sweeps per time step
+    dt: float           # time step
+
+    @staticmethod
+    def default(n: int = 128, reynolds: float = 1000.0, jacobi_iters: int = 20):
+        h = 1.0 / (n - 1)
+        nu = 1.0 / reynolds
+        # Stability: diffusion limit h^2/(4 nu) and advection limit h / U,
+        # with a 0.4 safety factor (explicit Euler + central differences).
+        dt = 0.4 * min(0.25 * h * h / nu, h)
+        return CavityParams(n=n, reynolds=reynolds, lid_u=1.0,
+                            jacobi_iters=jacobi_iters, dt=dt)
+
+
+# --- stencil functors (the paper's functor objects) -----------------------
+
+def _jacobi_functor(nb):
+    """Sum of the 4 neighbors — one Jacobi sweep body for lap(psi) = -omega."""
+    return nb(0, 1) + nb(0, -1) + nb(1, 0) + nb(-1, 0)
+
+
+def _ddx_functor_factory(inv2h: float):
+    def functor(nb):
+        return inv2h * (nb(0, 1) - nb(0, -1))
+
+    return functor
+
+
+def _ddy_functor_factory(inv2h: float):
+    def functor(nb):
+        return inv2h * (nb(1, 0) - nb(-1, 0))
+
+    return functor
+
+
+def _lap_functor_factory(invh2: float):
+    def functor(nb):
+        return invh2 * (nb(0, 1) + nb(0, -1) + nb(1, 0) + nb(-1, 0) - 4.0 * nb(0, 0))
+
+    return functor
+
+
+def _interior_mask(n: int) -> jnp.ndarray:
+    m = jnp.zeros((n, n), dtype=jnp.float32)
+    return m.at[1:-1, 1:-1].set(1.0)
+
+
+def _tile_for(n: int) -> tuple[int, int]:
+    return (min(TILE, n), min(TILE, n))
+
+
+def poisson_jacobi(psi: jnp.ndarray, omega: jnp.ndarray, p: CavityParams) -> jnp.ndarray:
+    """K Jacobi sweeps of lap(psi) = -omega with psi = 0 on the walls."""
+    n = p.n
+    h2 = (1.0 / (n - 1)) ** 2
+    mask = _interior_mask(n)
+    tile = _tile_for(n)
+
+    def sweep(_, psi):
+        nbsum = k_stencil.stencil(psi, _jacobi_functor, 1, tile=tile)
+        new = 0.25 * (nbsum + h2 * omega)
+        return new * mask  # re-impose psi = 0 on all walls
+
+    return jax.lax.fori_loop(0, p.jacobi_iters, sweep, psi)
+
+
+def velocities(psi: jnp.ndarray, p: CavityParams) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """u = dpsi/dy, v = -dpsi/dx (interior; walls handled by masks/BCs)."""
+    inv2h = 0.5 * (p.n - 1)
+    tile = _tile_for(p.n)
+    u = k_stencil.stencil(psi, _ddy_functor_factory(inv2h), 1, tile=tile)
+    v = -k_stencil.stencil(psi, _ddx_functor_factory(inv2h), 1, tile=tile)
+    mask = _interior_mask(p.n)
+    u = u * mask
+    v = v * mask
+    # Lid: u = U on the top wall (row n-1), v = 0 there.
+    u = u.at[-1, :].set(p.lid_u)
+    return u, v
+
+
+def wall_vorticity(omega: jnp.ndarray, psi: jnp.ndarray, p: CavityParams) -> jnp.ndarray:
+    """Thom's first-order wall vorticity formula on all four walls."""
+    n = p.n
+    h = 1.0 / (n - 1)
+    invh2 = 1.0 / (h * h)
+    omega = omega.at[0, :].set(-2.0 * invh2 * psi[1, :])                      # bottom
+    omega = omega.at[-1, :].set(-2.0 * invh2 * psi[-2, :] - 2.0 * p.lid_u / h)  # lid
+    omega = omega.at[:, 0].set(-2.0 * invh2 * psi[:, 1])                      # left
+    omega = omega.at[:, -1].set(-2.0 * invh2 * psi[:, -2])                    # right
+    return omega
+
+
+def vorticity_transport(
+    omega: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray, p: CavityParams
+) -> jnp.ndarray:
+    """One explicit Euler step of the vorticity transport equation."""
+    n = p.n
+    inv2h = 0.5 * (n - 1)
+    invh2 = float((n - 1) ** 2)
+    nu = p.lid_u / p.reynolds
+    tile = _tile_for(n)
+    wx = k_stencil.stencil(omega, _ddx_functor_factory(inv2h), 1, tile=tile)
+    wy = k_stencil.stencil(omega, _ddy_functor_factory(inv2h), 1, tile=tile)
+    lap = k_stencil.stencil(omega, _lap_functor_factory(invh2), 1, tile=tile)
+    rhs = -u * wx - v * wy + nu * lap
+    mask = _interior_mask(n)
+    return omega + p.dt * rhs * mask
+
+
+def cavity_step(
+    omega: jnp.ndarray, psi: jnp.ndarray, p: CavityParams
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One full time step; returns (omega', psi', linf residual of omega)."""
+    psi = poisson_jacobi(psi, omega, p)
+    u, v = velocities(psi, p)
+    omega = wall_vorticity(omega, psi, p)
+    new_omega = vorticity_transport(omega, u, v, p)
+    res = jnp.max(jnp.abs(new_omega - omega))
+    return new_omega, psi, res
+
+
+def cavity_run(
+    omega: jnp.ndarray, psi: jnp.ndarray, p: CavityParams, steps: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``steps`` chained time steps in one executable (amortizes dispatch)."""
+
+    def body(_, state):
+        omega, psi, _ = state
+        return cavity_step(omega, psi, p)
+
+    zero = jnp.zeros((), dtype=omega.dtype)
+    return jax.lax.fori_loop(0, steps, body, (omega, psi, zero))
+
+
+def initial_state(n: int, dtype=jnp.float32) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fluid at rest; the lid BC introduces vorticity from step one."""
+    return jnp.zeros((n, n), dtype), jnp.zeros((n, n), dtype)
+
+
+def step_fn(p: CavityParams):
+    """Jittable (omega, psi) -> (omega', psi', res) closure over params."""
+
+    def fn(omega, psi):
+        return cavity_step(omega, psi, p)
+
+    return fn
+
+
+def run_fn(p: CavityParams, steps: int):
+    def fn(omega, psi):
+        return cavity_run(omega, psi, p, steps)
+
+    return fn
+
+
+def bytes_moved_per_step(p: CavityParams, dtype_bytes: int = 4) -> int:
+    """Device-memory traffic of one step, for bandwidth accounting.
+
+    Per Jacobi sweep: read psi + omega, write psi (3 fields). Velocities:
+    read psi twice, write u, v (4). Transport: 3 stencils over omega
+    (read 3, write 3) + pointwise over 5 fields. Wall BCs are O(n).
+    """
+    field = p.n * p.n * dtype_bytes
+    jacobi = p.jacobi_iters * 3 * field
+    vel = 4 * field
+    transport = (3 * 2 + 5) * field
+    return jacobi + vel + transport

@@ -1,0 +1,14 @@
+"""L1 Pallas data-rearrangement kernels (build-time only).
+
+Modules:
+    common    — order-vector algebra, tiling helpers, shared constants
+    copy      — basic read/write streams (paper §III.A)
+    permute3d — batched-2D-tile permute engine (paper §III.B, Table 1)
+    reorder   — generic N→N / N→M reorder on top of permute (Table 2)
+    interlace — interlace / de-interlace (paper §III.C, Table 3)
+    stencil   — generic functor-based 2D stencil (paper §III.D, Fig 2)
+    gridding  — affine coordinate-transform regrid (paper §IV future work)
+    ref       — pure-jnp golden oracles for all of the above
+"""
+
+from . import common, copy, gridding, interlace, permute3d, ref, reorder, stencil  # noqa: F401

@@ -1,0 +1,89 @@
+"""Shared conventions and helpers for the L1 Pallas kernels.
+
+Order-vector convention (the paper's, §III.B):
+    An N-dimensional data set has a storage 'order' vector containing a
+    permutation of 0..N-1, *fastest-changing dimension first*. The default
+    order of an input is [0, 1, ..., N-1], i.e. "dim 0" is the fastest.
+
+JAX arrays are row-major: the *last* axis is fastest. So paper dim ``k``
+corresponds to JAX axis ``N-1-k`` of the default-order array.
+
+``order_to_axes`` converts a paper order vector into the ``axes`` argument
+of ``jnp.transpose`` such that transposing realizes the reorder: the output
+array, read row-major, is the input linearized in the requested order.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax.numpy as jnp
+
+# Tile extents mirroring the paper's 32x32 CUDA blocks (32x8 threads, 4
+# elements per thread). On TPU these become the VMEM BlockSpec tile; under
+# interpret=True they only shape the HBM<->VMEM schedule, not wallclock.
+TILE = 32
+# 1D copy kernels: one "block" of work, paper's vector computing model
+# (threads x elems-per-thread). 1024 threads x 4 elems = 4096 elements.
+COPY_BLOCK = 4096
+
+
+def check_order(order: Sequence[int], n: int) -> None:
+    """Validate that ``order`` is a permutation of 0..n-1."""
+    if sorted(order) != list(range(n)):
+        raise ValueError(f"order {list(order)} is not a permutation of 0..{n - 1}")
+
+
+def order_to_axes(order: Sequence[int], n: int) -> tuple[int, ...]:
+    """Convert a paper order vector (fastest-first) to jnp.transpose axes.
+
+    Output JAX axis ``j`` holds paper dim ``order[n-1-j]``; paper dim ``k``
+    lives on input JAX axis ``n-1-k``. Hence ``axes[j] = n-1-order[n-1-j]``.
+    """
+    check_order(order, n)
+    return tuple(n - 1 - order[n - 1 - j] for j in range(n))
+
+
+def axes_to_order(axes: Sequence[int], n: int) -> tuple[int, ...]:
+    """Inverse of :func:`order_to_axes`."""
+    check_order(axes, n)  # any permutation of jax axes is also 0..n-1
+    return tuple(n - 1 - axes[n - 1 - k] for k in range(n))
+
+
+def paper_shape_to_jax(shape_paper: Sequence[int]) -> tuple[int, ...]:
+    """Paper lists sizes per dim 0..N-1 (fastest first); JAX shape reverses."""
+    return tuple(reversed(tuple(shape_paper)))
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_to_multiple(x: jnp.ndarray, multiples: Sequence[int]) -> jnp.ndarray:
+    """Zero-pad each axis of ``x`` up to the given multiple (1 = untouched)."""
+    pads = []
+    for dim, m in zip(x.shape, multiples):
+        pads.append((0, round_up(dim, m) - dim))
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads)
+
+
+def diag_remap(i, j, gi: int):
+    """Diagonalized block ordering (paper §III.B / Harris [10]).
+
+    Logical grid coordinate (i, j) is remapped to ((i + j) % gi, j) so that
+    concurrently scheduled blocks touch distinct DRAM partitions. A pure
+    permutation of the grid: the overall result is unchanged.
+    """
+    return (i + j) % gi, j
+
+
+def flops_bytes_note(nbytes_moved: int) -> str:
+    """Human-readable note used by aot.py manifests."""
+    return f"moves {nbytes_moved} bytes ({nbytes_moved / 2**30:.3f} GiB)"

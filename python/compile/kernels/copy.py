@@ -1,0 +1,180 @@
+"""L1 basic read/write Pallas kernels (paper §III.A).
+
+The paper's primitive kernels: optimal streaming read/write of global
+memory, templatized over access pattern (contiguous, range, strided,
+indexed). One-dimensional blocks, each thread handling four elements
+("vector computing model"); here a block is a VMEM tile and the
+4-elements/thread register blocking becomes a (4, B/4) sub-tiling.
+
+Kernel structure (PERF, see EXPERIMENTS.md §Perf L1-2): inputs stay
+HBM-resident (full-array BlockSpec with a constant index_map) and the
+kernel windows them with `pl.dslice`; only the *output* is blocked. With
+the xla_extension 0.5.1 runtime the blocked-input form defeats XLA's
+in-place dynamic-update-slice and copies the whole output every grid
+step (~23x slower at 4M elements). On a real TPU the blocked-input form
+is the canonical schedule; interpret=True artifacts use this one.
+
+All kernels run under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the block structure carries the paper's access pattern
+and is what ``gpusim`` consumes to predict C1060 bandwidth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import COPY_BLOCK, pad_to_multiple
+
+
+def _resident(shape):
+    """Full-array (HBM-resident) input spec."""
+    n = len(shape)
+    return pl.BlockSpec(shape, lambda *g: (0,) * n)
+
+
+def tiled_copy(x: jnp.ndarray, block: int = COPY_BLOCK) -> jnp.ndarray:
+    """Streaming device-to-device copy of a flat array, tiled by ``block``."""
+    (n,) = x.shape
+    xp = pad_to_multiple(x, (block,))
+
+    def kernel(x_ref, o_ref):
+        # The paper's 4-elements/thread vector model lives in the C1060
+        # simulator's kernel descriptors; here the tile moves whole (a
+        # reshape in the body inserts a copy that defeats XLA's in-place
+        # update — §Perf L1-3).
+        i = pl.program_id(0)
+        o_ref[...] = x_ref[pl.dslice(i * block, block)]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(xp.shape[0] // block,),
+        in_specs=[_resident(xp.shape)],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:n]
+
+
+def scale_write(x: jnp.ndarray, alpha: float, block: int = COPY_BLOCK) -> jnp.ndarray:
+    """Read-modify-write stream: ``alpha * x`` (write-pattern benchmark)."""
+    (n,) = x.shape
+    xp = pad_to_multiple(x, (block,))
+
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        o_ref[...] = jnp.asarray(alpha, x_ref.dtype) * x_ref[pl.dslice(i * block, block)]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(xp.shape[0] // block,),
+        in_specs=[_resident(xp.shape)],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:n]
+
+
+def read_range(x: jnp.ndarray, base: int, count: int, block: int = COPY_BLOCK) -> jnp.ndarray:
+    """Copy a contiguous ``[base, base+count)`` range of a flat array.
+
+    ``base``/``count`` are trace-time constants — the paper kept them in
+    GPU constant memory; AOT per configuration constant-folds them into
+    the HLO, which is the TPU analogue (DESIGN.md §4).
+    """
+    (n,) = x.shape
+    if not (0 <= base and base + count <= n):
+        raise ValueError(f"range [{base}, {base + count}) out of bounds for {n}")
+    if count == 0:
+        return x[0:0]
+    block = min(block, count)
+    gridded = count - count % block
+
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        o_ref[...] = x_ref[pl.dslice(base + i * block, block)]
+
+    pieces = []
+    if gridded:
+        pieces.append(
+            pl.pallas_call(
+                kernel,
+                grid=(gridded // block,),
+                in_specs=[_resident(x.shape)],
+                out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((gridded,), x.dtype),
+                interpret=True,
+            )(x)
+        )
+    tail = count - gridded
+    if tail:
+        pieces.append(jax.lax.dynamic_slice(x, (base + gridded,), (tail,)))
+    return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+
+
+def read_strided(x: jnp.ndarray, base: int, stride: int, count: int) -> jnp.ndarray:
+    """Strided gather from a flat array (the paper's strided access pattern).
+
+    Each grid step windows ``block * stride`` contiguous elements of the
+    HBM-resident source and keeps every ``stride``-th — on the C1060 this
+    is the uncoalesced pattern whose cost gpusim quantifies.
+    """
+    (n,) = x.shape
+    if stride < 1 or count < 1 or base + (count - 1) * stride >= n:
+        raise ValueError("strided window out of bounds")
+    block = min(COPY_BLOCK, count)
+    gridded = count - count % block
+
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        win = x_ref[pl.dslice(base + i * block * stride, block * stride)]
+        o_ref[...] = win.reshape(block, stride)[:, 0]
+
+    pieces = []
+    if gridded:
+        # The last window must stay in bounds: pad the source once.
+        need = base + gridded * stride
+        xp = pad_to_multiple(x, (need,)) if need > n else x
+        pieces.append(
+            pl.pallas_call(
+                kernel,
+                grid=(gridded // block,),
+                in_specs=[_resident(xp.shape)],
+                out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((gridded,), x.dtype),
+                interpret=True,
+            )(xp)
+        )
+    if count - gridded:
+        idx = base + (gridded + jnp.arange(count - gridded)) * stride
+        pieces.append(x[idx])
+    return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+
+
+def gather(x: jnp.ndarray, idx: jnp.ndarray, block: int = COPY_BLOCK) -> jnp.ndarray:
+    """Indexed read: out[k] = x[idx[k]] ("specified set of indices").
+
+    Both the source and the index array stay HBM-resident; each grid step
+    resolves one tile of indices in VMEM.
+    """
+    (count,) = idx.shape
+    block = min(block, count) or 1
+    idxp = pad_to_multiple(idx, (block,))
+
+    def kernel(x_ref, i_ref, o_ref):
+        i = pl.program_id(0)
+        sel = i_ref[pl.dslice(i * block, block)]
+        o_ref[...] = x_ref[sel]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(idxp.shape[0] // block,),
+        in_specs=[_resident(x.shape), _resident(idxp.shape)],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(idxp.shape, x.dtype),
+        interpret=True,
+    )(x, idxp)
+    return out[:count]

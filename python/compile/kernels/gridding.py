@@ -1,0 +1,111 @@
+"""L1 gridding kernel — the paper's future-work item (§IV: "generic
+multi-dimensional coordinate transformations (gridding operation)").
+
+``affine_regrid`` resamples a 2D field onto a new grid through an affine
+coordinate transform: ``out[o] = x[round(A @ o + b)]`` with zero outside
+the source domain (nearest-neighbor gridding — the data-rearrangement
+core of regridding; interpolation weights would be a functor on top).
+
+The transform (A, b) is a trace-time constant, like the paper's
+constant-memory stride tables: each configuration is AOT-compiled.
+Kernel structure follows the §Perf L1-2 rule: HBM-resident input,
+blocked output tiles, per-tile source coordinates computed in VMEM.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import TILE, round_up
+
+
+def _as_mat(matrix, offset):
+    a = np.asarray(matrix, dtype=np.float64)
+    b = np.asarray(offset, dtype=np.float64)
+    if a.shape != (2, 2) or b.shape != (2,):
+        raise ValueError("matrix must be 2x2 and offset length-2")
+    return a, b
+
+
+def affine_regrid_ref(
+    x: jnp.ndarray, matrix, offset, out_shape: Sequence[int]
+) -> jnp.ndarray:
+    """Pure-jnp oracle for :func:`affine_regrid`."""
+    a, b = _as_mat(matrix, offset)
+    h, w = x.shape
+    oh, ow = out_shape
+    oi = jnp.arange(oh)[:, None]
+    oj = jnp.arange(ow)[None, :]
+    si = jnp.round(a[0, 0] * oi + a[0, 1] * oj + b[0]).astype(jnp.int32)
+    sj = jnp.round(a[1, 0] * oi + a[1, 1] * oj + b[1]).astype(jnp.int32)
+    valid = (si >= 0) & (si < h) & (sj >= 0) & (sj < w)
+    sic = jnp.clip(si, 0, h - 1)
+    sjc = jnp.clip(sj, 0, w - 1)
+    vals = x[sic, sjc]
+    return jnp.where(valid, vals, jnp.zeros((), x.dtype))
+
+
+def affine_regrid(
+    x: jnp.ndarray,
+    matrix,
+    offset,
+    out_shape: Sequence[int],
+    tile: int = TILE,
+) -> jnp.ndarray:
+    """Nearest-neighbor affine regrid via a Pallas gather kernel."""
+    if x.ndim != 2:
+        raise ValueError("affine_regrid expects a 2D field")
+    a, b = _as_mat(matrix, offset)
+    h, w = x.shape
+    oh, ow = out_shape
+    th = min(tile, oh)
+    tw = min(tile, ow)
+    ph, pw = round_up(oh, th), round_up(ow, tw)
+
+    a00, a01, a10, a11 = (float(v) for v in a.reshape(-1))
+    b0, b1 = float(b[0]), float(b[1])
+
+    def kernel(x_ref, o_ref):
+        ti = pl.program_id(0)
+        tj = pl.program_id(1)
+        oi = (ti * th + jax.lax.broadcasted_iota(jnp.int32, (th, tw), 0)).astype(
+            jnp.float32
+        )
+        oj = (tj * tw + jax.lax.broadcasted_iota(jnp.int32, (th, tw), 1)).astype(
+            jnp.float32
+        )
+        si = jnp.round(a00 * oi + a01 * oj + b0).astype(jnp.int32)
+        sj = jnp.round(a10 * oi + a11 * oj + b1).astype(jnp.int32)
+        valid = (si >= 0) & (si < h) & (sj >= 0) & (sj < w)
+        sic = jnp.clip(si, 0, h - 1)
+        sjc = jnp.clip(sj, 0, w - 1)
+        vals = x_ref[sic, sjc]
+        o_ref[...] = jnp.where(valid, vals, jnp.zeros((), x_ref.dtype))
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(ph // th, pw // tw),
+        in_specs=[pl.BlockSpec(x.shape, lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((th, tw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ph, pw), x.dtype),
+        interpret=True,
+    )(x)
+    return out[:oh, :ow]
+
+
+def rot90_params(n: int):
+    """(matrix, offset) rotating an n x n grid by 90 degrees CCW.
+
+    out[i, j] = in[j, n-1-i]  (matches jnp.rot90 on a square array).
+    """
+    return [[0.0, 1.0], [-1.0, 0.0]], [0.0, float(n - 1)]
+
+
+def scale2_params():
+    """Nearest-neighbor 2x upsample: out[i, j] = in[i // 2, j // 2]."""
+    return [[0.5, 0.0], [0.0, 0.5]], [-0.25, -0.25]

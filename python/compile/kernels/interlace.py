@@ -1,0 +1,131 @@
+"""L1 interlace / de-interlace Pallas kernels (paper §III.C, Table 3).
+
+n arrays are merged element-wise into one (interlace) or one array is split
+into n (de-interlace). The paper stages through shared memory so that both
+global streams stay coalesced: each CUDA block reads coalesced runs, does
+the non-contiguous shuffle in shared memory (n*64 elements), writes
+coalesced runs.
+
+Pallas realization: each grid step brings one VMEM tile per input array
+(coalesced HBM reads), the shuffle is a register-level stack/reshape inside
+VMEM, and the interleaved tile is written back as one contiguous run
+(coalesced HBM write). De-interlace is the mirror image.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import cdiv, pad_to_multiple
+
+# Paper: blocks of 8x8 = 64 elements per array, n*64 threads. Our VMEM tile
+# is larger (one HBM transaction is wider than a half-warp) but keeps the
+# same structure: BLOCK elements of each of the n arrays per grid step.
+BLOCK = 2048
+
+
+def _interlace_kernel_factory(n: int, block: int):
+    def kernel(*refs):
+        in_refs, o_ref = refs[:-1], refs[-1]
+        i = pl.program_id(0)
+        # VMEM staging: (BLOCK, n) buffer, rows are output positions.
+        # Inputs are HBM-resident; the kernel windows them (PERF, see
+        # EXPERIMENTS.md §Perf L1-2).
+        buf = jnp.stack([r[pl.dslice(i * block, block)] for r in in_refs], axis=1)
+        o_ref[...] = buf.reshape(-1)
+
+    return kernel
+
+
+def interlace(arrays: Sequence[jnp.ndarray], block: int = BLOCK) -> jnp.ndarray:
+    """out[i*n + j] = arrays[j][i] for n flat arrays of equal length."""
+    n = len(arrays)
+    if n < 2:
+        raise ValueError("interlace needs at least 2 arrays")
+    (length,) = arrays[0].shape
+    for a in arrays:
+        if a.shape != (length,) or a.dtype != arrays[0].dtype:
+            raise ValueError("interlace arrays must share shape and dtype")
+    block = min(block, length) or 1
+    padded = [pad_to_multiple(a, (block,)) for a in arrays]
+    plen = padded[0].shape[0]
+
+    out = pl.pallas_call(
+        _interlace_kernel_factory(n, block),
+        grid=(plen // block,),
+        in_specs=[pl.BlockSpec((plen,), lambda i: (0,)) for _ in range(n)],
+        out_specs=pl.BlockSpec((block * n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((plen * n,), arrays[0].dtype),
+        interpret=True,
+    )(*padded)
+    return out[: length * n]
+
+
+def _deinterlace_kernel_factory(n: int, block: int):
+    def kernel(x_ref, *o_refs):
+        i = pl.program_id(0)
+        buf = x_ref[pl.dslice(i * block * n, block * n)].reshape(block, n)
+        for j, o_ref in enumerate(o_refs):
+            o_ref[...] = buf[:, j]
+
+    return kernel
+
+
+def deinterlace(x: jnp.ndarray, n: int, block: int = BLOCK) -> list[jnp.ndarray]:
+    """Split a flat interleaved array into its n component arrays."""
+    (total,) = x.shape
+    if total % n != 0:
+        raise ValueError(f"length {total} not divisible by n={n}")
+    length = total // n
+    block = min(block, length) or 1
+    xp = pad_to_multiple(x, (block * n,))
+    plen = xp.shape[0] // n
+
+    outs = pl.pallas_call(
+        _deinterlace_kernel_factory(n, block),
+        grid=(plen // block,),
+        in_specs=[pl.BlockSpec(xp.shape, lambda i: (0,))],
+        out_specs=tuple(pl.BlockSpec((block,), lambda i: (i,)) for _ in range(n)),
+        out_shape=tuple(jax.ShapeDtypeStruct((plen,), x.dtype) for _ in range(n)),
+        interpret=True,
+    )(xp)
+    return [o[:length] for o in outs]
+
+
+def interlace2d(arrays: Sequence[jnp.ndarray], block: int = BLOCK) -> jnp.ndarray:
+    """Pixel-interleave n HxW planes into Hx(nW) (e.g. RGB planes -> packed)."""
+    h, w = arrays[0].shape
+    flat = interlace([a.reshape(-1) for a in arrays], block=block)
+    return flat.reshape(h, w * len(arrays))
+
+
+def deinterlace2d(x: jnp.ndarray, n: int, block: int = BLOCK) -> list[jnp.ndarray]:
+    """Split packed Hx(nW) pixels into n HxW planes."""
+    h, wn = x.shape
+    outs = deinterlace(x.reshape(-1), n, block=block)
+    return [o.reshape(h, wn // n) for o in outs]
+
+
+def split_complex(x_interleaved: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The paper's motivating example: split (re, im) pairs into two arrays."""
+    re, im = deinterlace(x_interleaved, 2)
+    return re, im
+
+
+def merge_complex(re: jnp.ndarray, im: jnp.ndarray) -> jnp.ndarray:
+    return interlace([re, im])
+
+
+#: Table 3 row parameters: (#arrays, total gigabytes).
+TABLE3_CONFIGS: tuple[tuple[int, float], ...] = (
+    (4, 0.27),
+    (5, 0.34),
+    (6, 0.41),
+    (7, 0.48),
+    (8, 0.55),
+    (9, 0.62),
+)

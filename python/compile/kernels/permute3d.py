@@ -1,0 +1,152 @@
+"""L1 generic permute Pallas kernel (paper §III.B, Table 1).
+
+The paper handles a 3D permutation as a set of batched 2D tile moves:
+the 2D *movement plane* is spanned by the fastest-changing dimension of
+the input order and the fastest-changing dimension of the output order, so
+both global-memory streams stay coalesced; the non-contiguous shuffle
+happens inside a 32x32 shared-memory tile.
+
+Pallas realization: the output is produced in ``TILE``-sized blocks over
+the movement plane; the input BlockSpec fetches the *permuted* tile. The
+whole tile lives in VMEM (the shared-memory analogue) and is transposed
+there by ``jnp.transpose`` on registers. A ``diagonal=True`` variant remaps
+the grid walk the way the paper diagonalizes CUDA block scheduling to dodge
+partition camping — a pure permutation of the grid, bitwise-identical
+output (property-tested).
+
+Works for any rank >= 1, so this module is also the engine behind the
+generic reorder kernel (reorder.py).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, check_order, diag_remap, order_to_axes, pad_to_multiple
+
+
+def _invert(perm: Sequence[int]) -> tuple[int, ...]:
+    inv = [0] * len(perm)
+    for i, p in enumerate(perm):
+        inv[p] = i
+    return tuple(inv)
+
+
+def plan_block_shapes(in_shape: Sequence[int], axes: Sequence[int], tile: int):
+    """Choose the movement-plane tile (DESIGN.md §4, paper §III.B).
+
+    The plane is spanned by the output's fastest axis (last output axis)
+    and the axis where the *input's* fastest axis lands in the output. Both
+    get a ``tile`` extent; every other axis is blocked at 1 (the batch
+    dims of the batched-2D-move formulation).
+
+    Returns (out_block, in_block, plane_axes_out).
+    """
+    n = len(in_shape)
+    axes = tuple(axes)
+    out_fast = n - 1                      # output's fastest storage axis
+    in_fast_in_out = axes.index(n - 1)    # where input's fastest axis went
+    plane = {out_fast, in_fast_in_out}
+    out_block = tuple(tile if a in plane else 1 for a in range(n))
+    in_block = tuple(out_block[_invert(axes)[a]] for a in range(n))
+    return out_block, in_block, tuple(sorted(plane))
+
+
+def permute(
+    x: jnp.ndarray,
+    order: Sequence[int],
+    tile: int = TILE,
+    diagonal: bool = False,
+) -> jnp.ndarray:
+    """Reorder ``x`` into paper storage order ``order`` (fastest-first).
+
+    Semantics match ``ref.permute``; see common.order_to_axes for the
+    order-vector <-> transpose-axes mapping.
+    """
+    n = x.ndim
+    check_order(order, n)
+    axes = order_to_axes(order, n)
+    return transpose(x, axes, tile=tile, diagonal=diagonal)
+
+
+def transpose(
+    x: jnp.ndarray,
+    axes: Sequence[int],
+    tile: int = TILE,
+    diagonal: bool = False,
+) -> jnp.ndarray:
+    """``jnp.transpose`` semantics, realized as batched 2D VMEM tile moves.
+
+    PERF note (EXPERIMENTS.md §Perf L1-2): the input stays HBM-resident
+    (constant index_map) and the kernel windows it with ``pl.dslice`` —
+    blocking the input defeats XLA 0.5.1's in-place dynamic-update-slice
+    on the output and costs ~20x at bench sizes. The output is blocked
+    with the movement-plane tile exactly as the paper's kernels are.
+    """
+    n = x.ndim
+    axes = tuple(axes)
+    check_order(axes, n)
+    if n == 1 or axes == tuple(range(n)):
+        # Identity order: degenerate to the streaming copy plane.
+        out_block = tuple(min(tile, s) if i >= n - 2 else 1 for i, s in enumerate(x.shape))
+        in_block = out_block
+        plane = (n - 1,)
+    else:
+        out_block, in_block, plane = plan_block_shapes(x.shape, axes, tile)
+        out_block = tuple(min(b, s) for b, s in zip(out_block, tuple(x.shape[a] for a in axes)))
+        in_block = tuple(out_block[_invert(axes)[a]] for a in range(n))
+
+    xp = pad_to_multiple(x, in_block)
+    out_shape = tuple(xp.shape[a] for a in axes)
+    grid = tuple(out_shape[a] // out_block[a] for a in range(n))
+    inv = _invert(axes)
+    gi_plane = grid[plane[0]] if len(plane) == 2 else 1
+
+    def remap(g):
+        if diagonal and len(plane) == 2 and gi_plane > 1:
+            g = list(g)
+            g[plane[0]], g[plane[1]] = diag_remap(g[plane[0]], g[plane[1]], gi_plane)
+            return tuple(g)
+        return tuple(g)
+
+    def out_index(*g):
+        return remap(g)
+
+    def kernel(x_ref, o_ref):
+        # Tile coordinates in output space (same remap as out_index).
+        g = remap(tuple(pl.program_id(a) for a in range(n)))
+        # Window the HBM-resident input at the permuted offsets and stage
+        # the tile through VMEM in output layout.
+        win = x_ref[
+            tuple(pl.dslice(g[inv[a]] * in_block[a], in_block[a]) for a in range(n))
+        ]
+        o_ref[...] = jnp.transpose(win, axes)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(xp.shape, lambda *g: (0,) * n)],
+        out_specs=pl.BlockSpec(out_block, out_index),
+        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        interpret=True,
+    )(xp)
+
+    true_out = tuple(x.shape[a] for a in axes)
+    if out.shape != true_out:
+        out = out[tuple(slice(0, s) for s in true_out)]
+    return out
+
+
+#: The six 3D permutations of Table 1, paper order-vector convention.
+TABLE1_ORDERS: tuple[tuple[int, int, int], ...] = (
+    (0, 1, 2),
+    (0, 2, 1),
+    (1, 0, 2),
+    (1, 2, 0),
+    (2, 0, 1),
+    (2, 1, 0),
+)

@@ -1,0 +1,193 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+These are the golden references the pytest suite checks the kernels
+against, and they define the exact semantics of each operation (the Rust
+``ops::reference`` module mirrors them independently).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+from .common import check_order, order_to_axes
+
+
+# --------------------------------------------------------------------------
+# Basic read/write (§III.A)
+# --------------------------------------------------------------------------
+
+def copy(x: jnp.ndarray) -> jnp.ndarray:
+    return x
+
+
+def read_range(x: jnp.ndarray, base: int, count: int) -> jnp.ndarray:
+    """Contiguous range read from a flat array (the paper's range pattern)."""
+    return x[base : base + count]
+
+
+def read_strided(x: jnp.ndarray, base: int, stride: int, count: int) -> jnp.ndarray:
+    """Strided read from a flat array."""
+    return x[base : base + stride * count : stride]
+
+
+def gather(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Indexed read ("accessing specified set of indices")."""
+    return x[idx]
+
+
+def scale_write(x: jnp.ndarray, alpha: float) -> jnp.ndarray:
+    """Read-modify-write stream (saxpy-like single-array write pattern)."""
+    return alpha * x
+
+
+# --------------------------------------------------------------------------
+# Permute / reorder (§III.B)
+# --------------------------------------------------------------------------
+
+def permute(x: jnp.ndarray, order: Sequence[int]) -> jnp.ndarray:
+    """Reorder ``x`` (default storage order) into paper order ``order``."""
+    return jnp.transpose(x, order_to_axes(order, x.ndim))
+
+
+def reorder(x: jnp.ndarray, order: Sequence[int]) -> jnp.ndarray:
+    """Generic N-dim reorder — same semantics as :func:`permute`."""
+    return permute(x, order)
+
+
+def reorder_collapse(x: jnp.ndarray, order: Sequence[int], out_rank: int) -> jnp.ndarray:
+    """N→M reorder: permute, then merge the slowest axes down to ``out_rank``.
+
+    The data movement is identical to the full permute; merging adjacent
+    row-major axes is free. This is the interpretation of the paper's
+    N-to-M operation documented in DESIGN.md §5.
+    """
+    check_order(order, x.ndim)
+    if not (1 <= out_rank <= x.ndim):
+        raise ValueError(f"out_rank {out_rank} out of range for rank {x.ndim}")
+    y = permute(x, order)
+    merged = y.shape[: x.ndim - out_rank + 1]
+    lead = 1
+    for s in merged:
+        lead *= s
+    return y.reshape((lead,) + y.shape[x.ndim - out_rank + 1 :])
+
+
+def subarray(x: jnp.ndarray, base: Sequence[int], shape: Sequence[int]) -> jnp.ndarray:
+    """Extract a dense sub-block (base index + range, paper §III.B N-to-M)."""
+    slices = tuple(slice(b, b + s) for b, s in zip(base, shape))
+    return x[slices]
+
+
+# --------------------------------------------------------------------------
+# Interlace / de-interlace (§III.C)
+# --------------------------------------------------------------------------
+
+def interlace(arrays: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """n arrays of length L -> length n*L with out[i*n + j] = arrays[j][i]."""
+    return jnp.stack(arrays, axis=-1).reshape(-1)
+
+
+def deinterlace(x: jnp.ndarray, n: int) -> list[jnp.ndarray]:
+    """Inverse of :func:`interlace`."""
+    if x.shape[-1] % n != 0:
+        raise ValueError(f"length {x.shape[-1]} not divisible by n={n}")
+    y = x.reshape(-1, n)
+    return [y[:, j] for j in range(n)]
+
+
+def interlace2d(arrays: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Row-wise interlace of n HxW arrays into Hx(nW) (pixel-interleaved)."""
+    return jnp.stack(arrays, axis=-1).reshape(arrays[0].shape[0], -1)
+
+
+def deinterlace2d(x: jnp.ndarray, n: int) -> list[jnp.ndarray]:
+    h, w = x.shape
+    y = x.reshape(h, w // n, n)
+    return [y[:, :, j] for j in range(n)]
+
+
+# --------------------------------------------------------------------------
+# 2D stencil (§III.D)
+# --------------------------------------------------------------------------
+
+# 2k-order accurate central-difference second-derivative coefficients
+# (same family as Micikevicius's 3DFD report [3]); index 0 is the center.
+FD_COEFFS: dict[int, list[float]] = {
+    1: [-2.0, 1.0],
+    2: [-5.0 / 2.0, 4.0 / 3.0, -1.0 / 12.0],
+    3: [-49.0 / 18.0, 3.0 / 2.0, -3.0 / 20.0, 1.0 / 90.0],
+    4: [-205.0 / 72.0, 8.0 / 5.0, -1.0 / 5.0, 8.0 / 315.0, -1.0 / 560.0],
+}
+
+
+def stencil(
+    x: jnp.ndarray,
+    functor: Callable,
+    radius: int,
+) -> jnp.ndarray:
+    """Apply a 2D stencil functor with zero ghost cells outside the domain.
+
+    ``functor(nb)`` receives ``nb(dy, dx)`` returning the input shifted so
+    that element (i, j) of ``nb(dy, dx)`` is ``x[i + dy, j + dx]`` (zero
+    outside), and returns the output array. This mirrors the paper's C++
+    functor-object interface; the Pallas kernel inlines the same callable.
+    """
+    xp = jnp.pad(x, radius)
+    h, w = x.shape
+
+    def nb(dy: int, dx: int) -> jnp.ndarray:
+        return xp[radius + dy : radius + dy + h, radius + dx : radius + dx + w]
+
+    return functor(nb)
+
+
+def fd_laplacian_functor(radius: int, scale: float = 1.0) -> Callable:
+    """Functor computing the 2D Laplacian at accuracy order 2*radius."""
+    coeffs = FD_COEFFS[radius]
+
+    def functor(nb):
+        acc = 2.0 * coeffs[0] * nb(0, 0)
+        for k in range(1, radius + 1):
+            c = coeffs[k]
+            acc = acc + c * (nb(0, k) + nb(0, -k) + nb(k, 0) + nb(-k, 0))
+        return scale * acc
+
+    return functor
+
+
+def conv_functor(mask) -> Callable:
+    """Functor applying an arbitrary (2r+1)x(2r+1) convolution mask.
+
+    Coefficients are Python floats so they constant-fold when the functor is
+    inlined into a Pallas kernel (a traced jnp mask would be captured as a
+    kernel constant, which pallas_call rejects).
+    """
+    import numpy as np
+
+    mask = np.asarray(mask, dtype=np.float64)
+    r = mask.shape[0] // 2
+
+    def functor(nb):
+        acc = None
+        for dy in range(-r, r + 1):
+            for dx in range(-r, r + 1):
+                c = float(mask[dy + r, dx + r])
+                if c == 0.0:
+                    continue
+                term = c * nb(dy, dx)
+                acc = term if acc is None else acc + term
+        return acc
+
+    return functor
+
+
+def fd_laplacian(x: jnp.ndarray, radius: int, scale: float = 1.0) -> jnp.ndarray:
+    return stencil(x, fd_laplacian_functor(radius, scale), radius)
+
+
+def smooth3x3(x: jnp.ndarray) -> jnp.ndarray:
+    """3x3 box smoothing filter (the paper's image-filter example)."""
+    mask = jnp.full((3, 3), 1.0 / 9.0, dtype=x.dtype)
+    return stencil(x, conv_functor(mask), 1)

@@ -1,0 +1,116 @@
+"""L1 generic reorder Pallas kernels (paper §III.B, Table 2).
+
+The generic reorder takes: number of dimensions, per-dimension sizes, the
+desired order vector, and the data; the N→M variant additionally the output
+rank. The 3D permute (permute3d.py) is the building block, exactly as in
+the paper; the offset/striding bookkeeping (the paper's constant-memory
+stride tables) constant-folds into the HLO because each configuration is
+AOT-compiled separately.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import permute3d
+from .common import TILE, check_order
+
+
+def reorder(
+    x: jnp.ndarray,
+    order: Sequence[int],
+    tile: int = TILE,
+    diagonal: bool = False,
+) -> jnp.ndarray:
+    """Generic N-dim reorder into paper storage order ``order``."""
+    return permute3d.permute(x, order, tile=tile, diagonal=diagonal)
+
+
+def reorder_collapse(
+    x: jnp.ndarray,
+    order: Sequence[int],
+    out_rank: int,
+    tile: int = TILE,
+    diagonal: bool = False,
+) -> jnp.ndarray:
+    """N→M reorder: permute then merge the slowest axes down to ``out_rank``.
+
+    Matches ``ref.reorder_collapse``. The merge is a free row-major view;
+    all data movement happens in the permute, so coalescing behaviour is
+    exactly the paper's: it degrades when ``order`` does not keep the input's
+    fastest dimension among the output's fast dimensions.
+    """
+    check_order(order, x.ndim)
+    if not (1 <= out_rank <= x.ndim):
+        raise ValueError(f"out_rank {out_rank} out of range for rank {x.ndim}")
+    y = permute3d.permute(x, order, tile=tile, diagonal=diagonal)
+    lead = 1
+    for s in y.shape[: x.ndim - out_rank + 1]:
+        lead *= s
+    return y.reshape((lead,) + y.shape[x.ndim - out_rank + 1 :])
+
+
+def subarray(
+    x: jnp.ndarray,
+    base: Sequence[int],
+    shape: Sequence[int],
+    tile: int = TILE,
+) -> jnp.ndarray:
+    """Dense sub-block extraction (base index + range in constant memory).
+
+    The output is produced in 2D tiles over the two fastest axes; the input
+    BlockSpec offsets every tile by ``base`` (trace-time constants).
+    """
+    n = x.ndim
+    if n == 0:
+        raise ValueError("subarray requires rank >= 1")
+    for b, s, d in zip(base, shape, x.shape):
+        if b < 0 or b + s > d:
+            raise ValueError(f"subarray window out of bounds: {base} + {shape} vs {x.shape}")
+
+    block = tuple(
+        min(tile, s) if i >= n - 2 else 1 for i, s in enumerate(shape)
+    )
+    # Grid covers the output exactly only when shape divides block; slice after.
+    padded = tuple(-(-s // b) * b for s, b in zip(shape, block))
+    grid = tuple(p // b for p, b in zip(padded, block))
+
+    # Clamp the last tile so the input window never exceeds bounds: fall back
+    # to element-exact extraction when padding would spill.
+    spill = any(b + p > d for b, p, d in zip(base, padded, x.shape))
+    if spill:
+        return x[tuple(slice(b, b + s) for b, s in zip(base, shape))]
+
+    rank = len(block)
+
+    def kernel(x_ref, o_ref):
+        # HBM-resident input, kernel-side window (PERF, §Perf L1-2).
+        offs = tuple(
+            pl.dslice(base[a] + pl.program_id(a) * block[a], block[a]) for a in range(rank)
+        )
+        o_ref[...] = x_ref[offs]
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec(x.shape, lambda *g: (0,) * rank)],
+        out_specs=pl.BlockSpec(block, lambda *g: g),
+        out_shape=jax.ShapeDtypeStruct(padded, x.dtype),
+        interpret=True,
+    )(x)
+    if out.shape != tuple(shape):
+        out = out[tuple(slice(0, s) for s in shape)]
+    return out
+
+
+#: Table 2 configurations: (order, paper shape fastest-first).
+TABLE2_CONFIGS: tuple[tuple[tuple[int, ...], tuple[int, ...]], ...] = (
+    ((1, 0, 2), (256, 256, 256)),
+    ((1, 0, 2, 3), (256, 256, 256, 1)),
+    ((3, 2, 0, 1), (256, 256, 1, 256)),
+    ((3, 0, 2, 1, 4), (256, 16, 1, 256, 16)),
+)

@@ -1,0 +1,130 @@
+"""L1 generic 2D stencil Pallas kernel (paper §III.D, Fig 2 / Table 4).
+
+The paper's stencil kernel is generic over a *functor object*: application
+code writes the single-point stencil as a functor and the framework fuses
+it into the tuned data-movement skeleton. Here the functor is a Python
+callable ``functor(nb)`` over a neighborhood accessor, inlined at trace
+time — the same compile-time genericity.
+
+Data movement skeleton: the output is produced in ``tile`` blocks; the
+input stays HBM-resident (un-blocked spec) and each grid step loads a
+(tile+2r)x(tile+2r) *apron window* into VMEM with a dynamic slice — the
+TPU analogue of the paper's 34x34 shared-memory load for a 32x32 block
+(redundant ghost rows between neighboring blocks, the paper's warp-
+divergence / misaligned-load hotspot, which gpusim costs out explicitly).
+
+The domain is zero-padded by ``radius`` ghost cells (the wrapper pads, the
+kernel sees a halo-complete array), matching ``ref.stencil``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import TILE, cdiv, round_up
+from .ref import FD_COEFFS, conv_functor, fd_laplacian_functor
+
+
+def _stencil_kernel_factory(functor: Callable, radius: int, tile_h: int, tile_w: int):
+    r = radius
+
+    def kernel(x_ref, o_ref):
+        i = pl.program_id(0)
+        j = pl.program_id(1)
+        # Apron load: (tile+2r)^2 window around this block, staged in VMEM.
+        win = x_ref[
+            pl.dslice(i * tile_h, tile_h + 2 * r),
+            pl.dslice(j * tile_w, tile_w + 2 * r),
+        ]
+
+        def nb(dy: int, dx: int):
+            return jax.lax.slice(
+                win, (r + dy, r + dx), (r + dy + tile_h, r + dx + tile_w)
+            )
+
+        o_ref[...] = functor(nb)
+
+    return kernel
+
+
+def stencil(
+    x: jnp.ndarray,
+    functor: Callable,
+    radius: int,
+    tile: tuple[int, int] = (TILE, TILE),
+) -> jnp.ndarray:
+    """Apply a 2D stencil functor over ``x`` with zero ghost cells.
+
+    Semantics identical to ``ref.stencil``: out[i, j] = functor evaluated
+    on the neighborhood of x[i, j], where x is extended with zeros.
+    """
+    if x.ndim != 2:
+        raise ValueError("stencil expects a 2D array")
+    h, w = x.shape
+    th = min(tile[0], h)
+    tw = min(tile[1], w)
+    ph, pw = round_up(h, th), round_up(w, tw)
+    # Halo-complete padded input: radius ghost cells plus tile round-up.
+    xp = jnp.pad(x, ((radius, ph - h + radius), (radius, pw - w + radius)))
+
+    out = pl.pallas_call(
+        _stencil_kernel_factory(functor, radius, th, tw),
+        grid=(ph // th, pw // tw),
+        in_specs=[pl.BlockSpec(xp.shape, lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((th, tw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ph, pw), x.dtype),
+        interpret=True,
+    )(xp)
+    return out[:h, :w]
+
+
+def fd_stencil(
+    x: jnp.ndarray,
+    order: int,
+    scale: float = 1.0,
+    tile: tuple[int, int] = (TILE, TILE),
+) -> jnp.ndarray:
+    """2D finite-difference Laplacian stencil of order I..IV (radius=order)."""
+    if order not in FD_COEFFS:
+        raise ValueError(f"FD order {order} not in {sorted(FD_COEFFS)}")
+    return stencil(x, fd_laplacian_functor(order, scale), order, tile=tile)
+
+
+def conv2d(
+    x: jnp.ndarray,
+    mask,
+    tile: tuple[int, int] = (TILE, TILE),
+) -> jnp.ndarray:
+    """Arbitrary odd-sized 2D convolution via the generic stencil skeleton."""
+    import numpy as np
+
+    mask = np.asarray(mask)
+    if mask.ndim != 2 or mask.shape[0] != mask.shape[1] or mask.shape[0] % 2 == 0:
+        raise ValueError("mask must be square with odd side")
+    r = mask.shape[0] // 2
+    return stencil(x, conv_functor(mask), r, tile=tile)
+
+
+def smooth3x3(x: jnp.ndarray, tile: tuple[int, int] = (TILE, TILE)) -> jnp.ndarray:
+    """3x3 box smoothing filter (the paper's image-filter example)."""
+    import numpy as np
+
+    mask = np.full((3, 3), 1.0 / 9.0)
+    return conv2d(x, mask, tile=tile)
+
+
+#: Fig 2 sweep: FD orders I..IV. Table 4 variants are a memory-path
+#: property of the C1060 (texture units); functionally all variants equal
+#: this kernel, and gpusim models the path differences (DESIGN.md §2).
+FIG2_ORDERS: tuple[int, ...] = (1, 2, 3, 4)
+TABLE4_VARIANTS: tuple[str, ...] = (
+    "global",
+    "tex1d",
+    "hybrid_tex1d",
+    "tex2d",
+    "hybrid_tex2d",
+)

@@ -1,0 +1,77 @@
+"""L2: JAX compute graphs composing the L1 kernels into applications.
+
+These are the "larger data-intensive applications" the paper's kernels are
+building blocks for (§IV): an image-filter pipeline (deinterlace → stencil
+→ interlace), complex split/merge, and permute/copy chains used by the
+benches. Each entry point here is AOT-lowered by aot.py and driven from
+the Rust coordinator.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import copy as k_copy
+from .kernels import interlace as k_interlace
+from .kernels import permute3d as k_permute
+from .kernels import stencil as k_stencil
+from .kernels.common import order_to_axes
+
+
+def image_pipeline(packed: jnp.ndarray, n_channels: int = 3) -> jnp.ndarray:
+    """Pixel-packed H x (n*W) image → smoothed, same packing.
+
+    The paper's motivating image-filter workload: de-interlace the packed
+    pixels into planes, run the 3x3 smoothing stencil per plane, re-interlace.
+    """
+    planes = k_interlace.deinterlace2d(packed, n_channels)
+    smoothed = [k_stencil.smooth3x3(p) for p in planes]
+    return k_interlace.interlace2d(smoothed)
+
+
+def complex_magnitude(interleaved: jnp.ndarray) -> jnp.ndarray:
+    """|z| for an (re, im)-interleaved array — deinterlace feeding compute."""
+    re, im = k_interlace.split_complex(interleaved)
+    return jnp.sqrt(re * re + im * im)
+
+
+def permute_roundtrip(x: jnp.ndarray, order: tuple[int, ...]) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Permute and invert; returns (permuted, max abs roundtrip error).
+
+    Exercises chained rearrangements through VMEM; the error output is a
+    device-side self-check the Rust integration tests assert is zero.
+    """
+    inv = [0] * len(order)
+    for i, o in enumerate(order):
+        inv[o] = i
+    y = k_permute.permute(x, order)
+    back = k_permute.permute(y, tuple(inv))
+    err = jnp.max(jnp.abs(back - x))
+    return y, err
+
+
+def fd_cascade(x: jnp.ndarray, orders: tuple[int, ...] = (1, 2)) -> jnp.ndarray:
+    """Chain of FD stencils of increasing order (PDE-pipeline shape)."""
+    y = x
+    for o in orders:
+        y = k_stencil.fd_stencil(y, o, scale=1.0 / (4.0 ** o))
+    return y
+
+
+def bandwidth_chain(x: jnp.ndarray, alpha: float = 1.0001, block: int = 65536) -> jnp.ndarray:
+    """copy → scale → copy stream (pure-bandwidth pipeline for the benches).
+
+    Bench-scale block (64K elements): interpret-mode grid steps cost ~1.5 ms
+    each on XLA-CPU, so the HBM-schedule tile for CPU-bench artifacts is
+    larger than the 32-wide C1060-mirroring tile (see DESIGN.md §Perf).
+    """
+    return k_copy.tiled_copy(
+        k_copy.scale_write(k_copy.tiled_copy(x, block=block), alpha, block=block),
+        block=block,
+    )
+
+
+def transpose2d(x: jnp.ndarray, diagonal: bool = False) -> jnp.ndarray:
+    """The classic matrix transpose (NVIDIA ref [2]) via the permute engine."""
+    return k_permute.transpose(x, (1, 0), diagonal=diagonal)

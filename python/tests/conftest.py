@@ -1,0 +1,24 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest is launched from python/ or repo root.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PYDIR = os.path.dirname(_HERE)
+if _PYDIR not in sys.path:
+    sys.path.insert(0, _PYDIR)
+
+from hypothesis import settings  # noqa: E402
+
+# Pallas interpret mode is slow; keep hypothesis example counts modest but
+# meaningful. CI profile can be selected with HYPOTHESIS_PROFILE=ci.
+settings.register_profile("default", max_examples=25, deadline=None)
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+
+
+@pytest.fixture
+def rng() -> np.random.RandomState:
+    return np.random.RandomState(0xC1060)

@@ -1,0 +1,118 @@
+"""L2 lid-driven cavity solver: stability, physics sanity, step contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import cfd
+
+
+@pytest.fixture(scope="module")
+def solved_64():
+    p = cfd.CavityParams.default(n=64, jacobi_iters=20)
+    omega, psi = cfd.initial_state(64)
+    step = jax.jit(cfd.step_fn(p))
+    residuals = []
+    for _ in range(150):
+        omega, psi, res = step(omega, psi)
+        residuals.append(float(res))
+    return p, np.asarray(omega), np.asarray(psi), residuals
+
+
+def test_no_nans_and_bounded(solved_64):
+    _, omega, psi, _ = solved_64
+    assert np.isfinite(omega).all()
+    assert np.isfinite(psi).all()
+    assert np.abs(psi).max() < 1.0  # streamfunction stays O(0.1) at Re=1000
+
+
+def test_residual_decreases(solved_64):
+    _, _, _, residuals = solved_64
+    assert residuals[-1] < residuals[0] * 0.5
+
+
+def test_primary_vortex_forms(solved_64):
+    """Lid drives a clockwise primary vortex: psi has one dominant extremum
+    in the upper half of the cavity, and the flow is not symmetric."""
+    _, _, psi, _ = solved_64
+    n = psi.shape[0]
+    interior = np.abs(psi[1:-1, 1:-1])
+    iy, ix = np.unravel_index(interior.argmax(), interior.shape)
+    assert iy + 1 > n // 2  # vortex core in the upper half (lid side)
+    assert interior.max() > 1e-3
+
+
+def test_wall_conditions(solved_64):
+    p, omega, psi, _ = solved_64
+    # psi = 0 on all walls.
+    assert np.abs(psi[0, :]).max() == 0
+    assert np.abs(psi[-1, :]).max() == 0
+    assert np.abs(psi[:, 0]).max() == 0
+    assert np.abs(psi[:, -1]).max() == 0
+
+
+def test_velocities_lid_bc():
+    p = cfd.CavityParams.default(n=32)
+    psi = jnp.zeros((32, 32), dtype=jnp.float32)
+    u, v = cfd.velocities(psi, p)
+    np.testing.assert_allclose(np.asarray(u)[-1, :], p.lid_u)
+    assert float(jnp.abs(v).max()) == 0.0
+
+
+def test_poisson_jacobi_converges_toward_solution():
+    """More sweeps → smaller lap(psi) + omega residual."""
+    n = 32
+    p20 = cfd.CavityParams.default(n=n, jacobi_iters=20)
+    p200 = p20._replace(jacobi_iters=200)
+    rng = np.random.RandomState(3)
+    omega = jnp.asarray(rng.rand(n, n).astype(np.float32))
+    psi0 = jnp.zeros((n, n), dtype=jnp.float32)
+
+    def poisson_residual(psi):
+        h2 = (1.0 / (n - 1)) ** 2
+        lap = (
+            np.roll(psi, 1, 0) + np.roll(psi, -1, 0) + np.roll(psi, 1, 1) + np.roll(psi, -1, 1) - 4 * psi
+        ) / h2
+        r = lap[1:-1, 1:-1] + np.asarray(omega)[1:-1, 1:-1]
+        return np.abs(r).max()
+
+    r20 = poisson_residual(np.asarray(cfd.poisson_jacobi(psi0, omega, p20)))
+    r200 = poisson_residual(np.asarray(cfd.poisson_jacobi(psi0, omega, p200)))
+    assert r200 < r20
+
+
+def test_cavity_run_matches_repeated_steps():
+    p = cfd.CavityParams.default(n=32, jacobi_iters=5)
+    omega, psi = cfd.initial_state(32)
+    o1, p1 = omega, psi
+    for _ in range(5):
+        o1, p1, _ = cfd.cavity_step(o1, p1, p)
+    o2, p2, _ = cfd.cavity_run(omega, psi, p, 5)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5, atol=1e-6)
+
+
+def test_zero_lid_stays_at_rest():
+    p = cfd.CavityParams.default(n=32)._replace(lid_u=0.0)
+    omega, psi = cfd.initial_state(32)
+    for _ in range(10):
+        omega, psi, res = cfd.cavity_step(omega, psi, p)
+    assert float(jnp.abs(omega).max()) == 0.0
+    assert float(jnp.abs(psi).max()) == 0.0
+
+
+def test_dt_respects_stability_bounds():
+    for n in (32, 64, 128):
+        p = cfd.CavityParams.default(n=n)
+        h = 1.0 / (n - 1)
+        nu = p.lid_u / p.reynolds
+        assert p.dt <= 0.25 * h * h / nu
+        assert p.dt <= h
+
+
+def test_bytes_moved_accounting():
+    p = cfd.CavityParams.default(n=128, jacobi_iters=20)
+    b = cfd.bytes_moved_per_step(p)
+    field = 128 * 128 * 4
+    assert b == 20 * 3 * field + 4 * field + 11 * field

@@ -1,0 +1,90 @@
+"""§III.A basic read/write kernels vs pure-jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import copy as k
+from compile.kernels import ref
+
+
+def _rand(rng, n, dtype=np.float32):
+    return jnp.asarray(rng.rand(n).astype(dtype))
+
+
+@pytest.mark.parametrize("n", [1, 5, 4096, 4097, 10_000, 65_536])
+def test_tiled_copy_sizes(rng, n):
+    x = _rand(rng, n)
+    np.testing.assert_array_equal(np.asarray(k.tiled_copy(x)), np.asarray(x))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32, jnp.bfloat16])
+def test_tiled_copy_dtypes(dtype):
+    x = jnp.arange(5000).astype(dtype)
+    np.testing.assert_array_equal(np.asarray(k.tiled_copy(x)), np.asarray(x))
+
+
+@given(st.integers(1, 20_000), st.sampled_from([64, 1024, 4096]))
+def test_tiled_copy_property(n, block):
+    x = jnp.arange(n, dtype=jnp.float32)
+    np.testing.assert_array_equal(np.asarray(k.tiled_copy(x, block=block)), np.asarray(x))
+
+
+def test_scale_write(rng):
+    x = _rand(rng, 9999)
+    np.testing.assert_allclose(
+        np.asarray(k.scale_write(x, 2.5)), np.asarray(ref.scale_write(x, 2.5)), rtol=1e-6
+    )
+
+
+@pytest.mark.parametrize("base,count", [(0, 100), (7, 8192), (100, 1), (0, 65536)])
+def test_read_range(rng, base, count):
+    x = _rand(rng, 70_000)
+    got = k.read_range(x, base, count)
+    want = ref.read_range(x, base, count)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_read_range_bounds():
+    x = jnp.zeros(100)
+    with pytest.raises(ValueError):
+        k.read_range(x, 50, 51)
+
+
+@given(
+    st.integers(0, 50),
+    st.integers(1, 9),
+    st.integers(1, 3000),
+)
+def test_read_strided_property(base, stride, count):
+    n = base + stride * count + 1
+    x = jnp.arange(n, dtype=jnp.float32)
+    got = k.read_strided(x, base, stride, count)
+    want = ref.read_strided(x, base, stride, count)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_read_strided_bounds():
+    x = jnp.zeros(100)
+    with pytest.raises(ValueError):
+        k.read_strided(x, 0, 10, 11)
+    with pytest.raises(ValueError):
+        k.read_strided(x, 0, 0, 5)
+
+
+@pytest.mark.parametrize("count", [1, 100, 4096, 5000])
+def test_gather(rng, count):
+    x = _rand(rng, 10_000)
+    idx = jnp.asarray(rng.randint(0, 10_000, count), dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(k.gather(x, idx)), np.asarray(ref.gather(x, idx))
+    )
+
+
+def test_gather_repeated_indices(rng):
+    x = _rand(rng, 64)
+    idx = jnp.zeros(500, dtype=jnp.int32)
+    out = np.asarray(k.gather(x, idx))
+    assert (out == float(x[0])).all()

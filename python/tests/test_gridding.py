@@ -1,0 +1,76 @@
+"""Gridding kernel (the paper's future-work extension) vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import gridding as k
+
+
+def test_identity_transform_is_copy(rng):
+    x = jnp.asarray(rng.rand(50, 70).astype(np.float32))
+    out = k.affine_regrid(x, [[1, 0], [0, 1]], [0, 0], (50, 70))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+
+
+def test_translation_shifts_with_zero_fill(rng):
+    x = jnp.asarray(rng.rand(20, 20).astype(np.float32))
+    # out[i,j] = x[i-3, j+5] (zero where out of range)
+    out = np.asarray(k.affine_regrid(x, [[1, 0], [0, 1]], [-3, 5], (20, 20)))
+    xn = np.asarray(x)
+    for i in range(20):
+        for j in range(20):
+            si, sj = i - 3, j + 5
+            want = xn[si, sj] if 0 <= si < 20 and 0 <= sj < 20 else 0.0
+            assert out[i, j] == want, (i, j)
+
+
+def test_rot90_matches_jnp(rng):
+    n = 48
+    x = jnp.asarray(rng.rand(n, n).astype(np.float32))
+    mat, off = k.rot90_params(n)
+    out = k.affine_regrid(x, mat, off, (n, n))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(jnp.rot90(x)))
+
+
+def test_scale2_is_nearest_upsample(rng):
+    x = jnp.asarray(rng.rand(16, 16).astype(np.float32))
+    mat, off = k.scale2_params()
+    out = np.asarray(k.affine_regrid(x, mat, off, (32, 32)))
+    xn = np.asarray(x)
+    for i in range(32):
+        for j in range(32):
+            assert out[i, j] == xn[i // 2, j // 2], (i, j)
+
+
+@given(
+    st.integers(4, 60),
+    st.integers(4, 60),
+    st.integers(-4, 4),
+    st.integers(-4, 4),
+    st.sampled_from([8, 32]),
+)
+def test_matches_ref_property(h, w, di, dj, tile):
+    x = jnp.arange(h * w, dtype=jnp.float32).reshape(h, w)
+    mat = [[1, 0], [0, 1]]
+    off = [di, dj]
+    got = k.affine_regrid(x, mat, off, (h, w), tile=tile)
+    want = k.affine_regrid_ref(x, mat, off, (h, w))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rect_output_shape(rng):
+    x = jnp.asarray(rng.rand(30, 40).astype(np.float32))
+    got = k.affine_regrid(x, [[1, 0], [0, 1]], [0, 0], (17, 53))
+    want = k.affine_regrid_ref(x, [[1, 0], [0, 1]], [0, 0], (17, 53))
+    assert got.shape == (17, 53)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_validates():
+    with pytest.raises(ValueError):
+        k.affine_regrid(jnp.zeros((4,)), [[1, 0], [0, 1]], [0, 0], (4, 4))
+    with pytest.raises(ValueError):
+        k.affine_regrid(jnp.zeros((4, 4)), [[1, 0]], [0, 0], (4, 4))

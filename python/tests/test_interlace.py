@@ -1,0 +1,87 @@
+"""§III.C interlace / de-interlace kernels, n = 2..9 (Table 3 family)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import interlace as k
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 6, 7, 8, 9])
+def test_interlace_table3_n(rng, n):
+    arrays = [jnp.asarray(rng.rand(5000).astype(np.float32)) for _ in range(n)]
+    got = k.interlace(arrays)
+    want = ref.interlace(arrays)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 6, 7, 8, 9])
+def test_deinterlace_table3_n(rng, n):
+    x = jnp.asarray(rng.rand(n * 4096).astype(np.float32))
+    got = k.deinterlace(x, n)
+    want = ref.deinterlace(x, n)
+    assert len(got) == n
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@given(st.integers(2, 9), st.integers(1, 5000))
+def test_roundtrip_property(n, length):
+    arrays = [
+        jnp.arange(length, dtype=jnp.float32) + 10_000.0 * j for j in range(n)
+    ]
+    back = k.deinterlace(k.interlace(arrays), n)
+    for a, b in zip(arrays, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_interlace_layout():
+    """Defining property: out[i*n + j] == arrays[j][i]."""
+    a = jnp.array([1.0, 2.0, 3.0])
+    b = jnp.array([10.0, 20.0, 30.0])
+    out = np.asarray(k.interlace([a, b]))
+    np.testing.assert_array_equal(out, [1, 10, 2, 20, 3, 30])
+
+
+def test_interlace_validates():
+    with pytest.raises(ValueError):
+        k.interlace([jnp.zeros(4)])
+    with pytest.raises(ValueError):
+        k.interlace([jnp.zeros(4), jnp.zeros(5)])
+    with pytest.raises(ValueError):
+        k.interlace([jnp.zeros(4), jnp.zeros(4, dtype=jnp.int32)])
+    with pytest.raises(ValueError):
+        k.deinterlace(jnp.zeros(10), 3)
+
+
+def test_interlace_dtypes():
+    for dt in (jnp.int32, jnp.bfloat16):
+        arrays = [jnp.arange(100).astype(dt) * (j + 1) for j in range(3)]
+        got = k.interlace(arrays)
+        want = ref.interlace(arrays)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_2d_interlace_roundtrip(rng):
+    planes = [jnp.asarray(rng.rand(33, 47).astype(np.float32)) for _ in range(3)]
+    packed = k.interlace2d(planes)
+    assert packed.shape == (33, 141)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(ref.interlace2d(planes)))
+    back = k.deinterlace2d(packed, 3)
+    for p, b in zip(planes, back):
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(b))
+
+
+def test_complex_split_merge(rng):
+    z = rng.rand(1000) + 1j * rng.rand(1000)
+    inter = jnp.asarray(
+        np.stack([z.real, z.imag], axis=-1).reshape(-1).astype(np.float32)
+    )
+    re, im = k.split_complex(inter)
+    np.testing.assert_allclose(np.asarray(re), z.real.astype(np.float32))
+    np.testing.assert_allclose(np.asarray(im), z.imag.astype(np.float32))
+    merged = k.merge_complex(re, im)
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(inter))

@@ -1,0 +1,58 @@
+"""L2 pipeline compositions (model.py) vs oracle compositions."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_image_pipeline_matches_ref_composition(rng):
+    h, w, n = 40, 56, 3
+    planes = [rng.rand(h, w).astype(np.float32) for _ in range(n)]
+    packed = jnp.asarray(np.stack(planes, axis=-1).reshape(h, w * n))
+    got = model.image_pipeline(packed, n)
+    want = ref.interlace2d([ref.smooth3x3(jnp.asarray(p)) for p in planes])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_image_pipeline_preserves_shape(rng):
+    packed = jnp.asarray(rng.rand(64, 192).astype(np.float32))
+    assert model.image_pipeline(packed, 3).shape == (64, 192)
+
+
+def test_complex_magnitude(rng):
+    z = rng.rand(4096) + 1j * rng.rand(4096)
+    inter = jnp.asarray(np.stack([z.real, z.imag], -1).reshape(-1).astype(np.float32))
+    got = model.complex_magnitude(inter)
+    np.testing.assert_allclose(np.asarray(got), np.abs(z).astype(np.float32), rtol=1e-5)
+
+
+@pytest.mark.parametrize("order", [(1, 0, 2), (2, 0, 1), (2, 1, 0)])
+def test_permute_roundtrip_error_is_zero(rng, order):
+    x = jnp.asarray(rng.rand(8, 24, 40).astype(np.float32))
+    y, err = model.permute_roundtrip(x, order)
+    assert float(err) == 0.0
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(ref.permute(x, order)))
+
+
+def test_fd_cascade_matches_ref(rng):
+    x = jnp.asarray(rng.rand(70, 70).astype(np.float32))
+    got = model.fd_cascade(x, (1, 2))
+    want = ref.fd_laplacian(ref.fd_laplacian(x, 1, 1.0 / 4.0), 2, 1.0 / 16.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_bandwidth_chain(rng):
+    x = jnp.asarray(rng.rand(10_000).astype(np.float32))
+    got = model.bandwidth_chain(x, alpha=2.0)
+    np.testing.assert_allclose(np.asarray(got), 2.0 * np.asarray(x), rtol=1e-6)
+
+
+def test_transpose2d_both_orderings(rng):
+    x = jnp.asarray(rng.rand(65, 130).astype(np.float32))
+    a = np.asarray(model.transpose2d(x))
+    b = np.asarray(model.transpose2d(x, diagonal=True))
+    np.testing.assert_array_equal(a, np.asarray(x).T)
+    np.testing.assert_array_equal(a, b)

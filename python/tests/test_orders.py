@@ -1,0 +1,97 @@
+"""Order-vector algebra: the convention everything else hangs off."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels.common import (
+    axes_to_order,
+    order_to_axes,
+    paper_shape_to_jax,
+    check_order,
+    cdiv,
+    round_up,
+    pad_to_multiple,
+)
+
+
+def test_identity_order_is_identity_axes():
+    for n in range(1, 7):
+        assert order_to_axes(tuple(range(n)), n) == tuple(range(n))
+
+
+def test_swap_fastest_two_is_swap_last_two_axes():
+    # Paper order [1 0 2] swaps the two fastest dims = last two jax axes.
+    assert order_to_axes((1, 0, 2), 3) == (0, 2, 1)
+
+
+def test_full_reversal():
+    # Order [2 1 0] reverses storage order = reverse all jax axes.
+    assert order_to_axes((2, 1, 0), 3) == (2, 1, 0)
+
+
+def test_known_4d_case():
+    # dim3 fastest, then dim2, dim0, dim1 (paper [3 2 0 1]).
+    axes = order_to_axes((3, 2, 0, 1), 4)
+    # output jax axis 3 (fastest) must hold paper dim 3 = input jax axis 0.
+    assert axes[3] == 0
+    assert axes[2] == 1  # next-fastest: paper dim 2 = input axis 1
+
+
+@given(st.permutations(list(range(5))))
+def test_axes_order_roundtrip_rank5(perm):
+    assert list(axes_to_order(order_to_axes(perm, 5), 5)) == list(perm)
+
+
+@given(st.integers(1, 6).flatmap(lambda n: st.permutations(list(range(n)))))
+def test_axes_order_roundtrip_any_rank(perm):
+    n = len(perm)
+    assert list(order_to_axes(axes_to_order(perm, n), n)) == list(perm)
+
+
+def test_order_semantics_against_linearization():
+    """The defining property: transposing by order_to_axes makes the output,
+    read row-major, equal to the input linearized in the requested order."""
+    shape_paper = (3, 4, 5)  # sizes per paper dim 0 (fastest), 1, 2
+    x = jnp.arange(np.prod(shape_paper)).reshape(paper_shape_to_jax(shape_paper))
+    order = (1, 0, 2)
+    y = jnp.transpose(x, order_to_axes(order, 3)).reshape(-1)
+    # Manual linearization: index (d0, d1, d2) in paper coords; output
+    # position = d1 + s1*(d0 + s0*d2) for order [1 0 2].
+    s0, s1, s2 = shape_paper
+    expect = np.empty(s0 * s1 * s2, dtype=np.int64)
+    xn = np.asarray(x)
+    for d2 in range(s2):
+        for d1 in range(s1):
+            for d0 in range(s0):
+                val = xn[d2, d1, d0]  # jax axis k = paper dim n-1-k
+                pos = d1 + s1 * (d0 + s0 * d2)
+                expect[pos] = val
+    np.testing.assert_array_equal(np.asarray(y), expect)
+
+
+def test_check_order_rejects_bad():
+    with pytest.raises(ValueError):
+        check_order((0, 0, 1), 3)
+    with pytest.raises(ValueError):
+        check_order((0, 1), 3)
+    with pytest.raises(ValueError):
+        check_order((0, 1, 3), 3)
+
+
+def test_cdiv_round_up():
+    assert cdiv(7, 3) == 3
+    assert cdiv(6, 3) == 2
+    assert round_up(7, 32) == 32
+    assert round_up(32, 32) == 32
+
+
+def test_pad_to_multiple():
+    x = jnp.ones((5, 7))
+    y = pad_to_multiple(x, (4, 8))
+    assert y.shape == (8, 8)
+    assert float(y.sum()) == 35.0
+    z = pad_to_multiple(x, (1, 1))
+    assert z.shape == (5, 7)

@@ -1,0 +1,103 @@
+"""§III.B generic reorder kernels: Table-2 configs + N→M + subarray."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import reorder as k
+from compile.kernels import ref
+from compile.kernels.common import paper_shape_to_jax
+
+
+@pytest.mark.parametrize("order,paper_shape", k.TABLE2_CONFIGS)
+def test_table2_configs_reduced(rng, order, paper_shape):
+    # Same orders as Table 2, sizes reduced 8x per big axis for test speed.
+    shape = tuple(min(s, 32) for s in paper_shape)
+    jshape = paper_shape_to_jax(shape)
+    x = jnp.asarray(rng.rand(*jshape).astype(np.float32))
+    got = k.reorder(x, order)
+    want = ref.reorder(x, order)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("out_rank", [1, 2, 3, 4])
+def test_reorder_collapse_ranks(rng, out_rank):
+    x = jnp.asarray(rng.rand(3, 5, 7, 11).astype(np.float32))
+    order = (3, 2, 0, 1)
+    got = k.reorder_collapse(x, order, out_rank)
+    want = ref.reorder_collapse(x, order, out_rank)
+    assert got.ndim == out_rank
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_reorder_collapse_data_equals_full_permute(rng):
+    """N→M moves exactly the same data as the full permute (free merge)."""
+    x = jnp.asarray(rng.rand(4, 6, 8).astype(np.float32))
+    full = ref.reorder(x, (2, 0, 1)).reshape(-1)
+    collapsed = k.reorder_collapse(x, (2, 0, 1), 1)
+    np.testing.assert_array_equal(np.asarray(collapsed), np.asarray(full))
+
+
+def test_reorder_collapse_validates():
+    x = jnp.zeros((2, 3, 4))
+    with pytest.raises(ValueError):
+        k.reorder_collapse(x, (0, 1, 2), 0)
+    with pytest.raises(ValueError):
+        k.reorder_collapse(x, (0, 1, 2), 4)
+    with pytest.raises(ValueError):
+        k.reorder_collapse(x, (0, 0, 2), 2)
+
+
+@st.composite
+def rank5_case(draw):
+    shape = tuple(draw(st.sampled_from([1, 2, 3, 8, 17])) for _ in range(5))
+    order = tuple(draw(st.permutations(list(range(5)))))
+    return shape, order
+
+
+@given(rank5_case())
+def test_rank5_reorder_property(case):
+    shape, order = case
+    x = jnp.arange(int(np.prod(shape)), dtype=jnp.float32).reshape(shape)
+    np.testing.assert_array_equal(
+        np.asarray(k.reorder(x, order)), np.asarray(ref.reorder(x, order))
+    )
+
+
+@pytest.mark.parametrize(
+    "base,shape",
+    [((0, 0), (32, 32)), ((32, 64), (128, 128)), ((1, 3), (10, 20)), ((0, 0), (256, 256))],
+)
+def test_subarray(rng, base, shape):
+    x = jnp.asarray(rng.rand(256, 256).astype(np.float32))
+    got = k.subarray(x, base, shape)
+    want = ref.subarray(x, base, shape)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_subarray_3d(rng):
+    x = jnp.asarray(rng.rand(8, 64, 64).astype(np.float32))
+    got = k.subarray(x, (2, 0, 32), (4, 64, 32))
+    want = ref.subarray(x, (2, 0, 32), (4, 64, 32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_subarray_bounds():
+    x = jnp.zeros((16, 16))
+    with pytest.raises(ValueError):
+        k.subarray(x, (8, 0), (9, 4))
+
+
+@given(
+    st.integers(0, 100),
+    st.integers(1, 100),
+    st.integers(0, 100),
+    st.integers(1, 100),
+)
+def test_subarray_property(b0, s0, b1, s1):
+    x = jnp.arange(200 * 200, dtype=jnp.float32).reshape(200, 200)
+    got = k.subarray(x, (b0, b1), (s0, s1))
+    want = ref.subarray(x, (b0, b1), (s0, s1))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

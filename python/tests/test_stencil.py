@@ -1,0 +1,100 @@
+"""§III.D generic 2D stencil kernel: FD orders I-IV, functors, tiles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+from compile.kernels import stencil as k
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4])
+def test_fd_orders_vs_ref(rng, order):
+    x = jnp.asarray(rng.rand(96, 130).astype(np.float32))
+    got = k.fd_stencil(x, order)
+    want = ref.fd_laplacian(x, order)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+
+def test_fd_rejects_unknown_order():
+    with pytest.raises(ValueError):
+        k.fd_stencil(jnp.zeros((8, 8)), 5)
+
+
+def test_fd_laplacian_of_quadratic_is_constant():
+    """Analytic check: lap(x^2 + y^2) = 4 exactly for order-1 FD interior."""
+    n = 64
+    h = 1.0
+    ii = jnp.arange(n, dtype=jnp.float32)
+    f = (ii[:, None] ** 2 + ii[None, :] ** 2) * h
+    lap = np.asarray(k.fd_stencil(f, 1))
+    np.testing.assert_allclose(lap[2:-2, 2:-2], 4.0, rtol=1e-4)
+
+
+def test_smooth3x3_constant_field_interior():
+    x = jnp.full((40, 40), 7.0, dtype=jnp.float32)
+    out = np.asarray(k.smooth3x3(x))
+    np.testing.assert_allclose(out[1:-1, 1:-1], 7.0, rtol=1e-5)
+    # boundary rows see zero ghosts: 6/9 of the value on edges
+    np.testing.assert_allclose(out[0, 1:-1], 7.0 * 6 / 9, rtol=1e-5)
+    np.testing.assert_allclose(out[0, 0], 7.0 * 4 / 9, rtol=1e-5)
+
+
+def test_custom_functor_inlines():
+    """The functor interface: arbitrary user code fused into the skeleton."""
+
+    def shift_diff(nb):  # du/dxy-ish cross derivative
+        return nb(1, 1) - nb(-1, -1)
+
+    x = jnp.arange(48 * 48, dtype=jnp.float32).reshape(48, 48)
+    got = k.stencil(x, shift_diff, 1)
+    want = ref.stencil(x, shift_diff, 1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("tile", [(8, 8), (16, 32), (32, 32), (64, 64)])
+def test_tile_invariance(rng, tile):
+    x = jnp.asarray(rng.rand(70, 70).astype(np.float32))
+    got = k.fd_stencil(x, 2, tile=tile)
+    want = ref.fd_laplacian(x, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+
+@given(
+    st.integers(5, 90),
+    st.integers(5, 90),
+    st.integers(1, 4),
+)
+def test_shape_sweep_property(h, w, order):
+    x = (jnp.arange(h * w, dtype=jnp.float32).reshape(h, w) % 37) * 0.1
+    got = k.fd_stencil(x, order)
+    want = ref.fd_laplacian(x, order)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=1e-4)
+
+
+def test_conv2d_matches_ref(rng):
+    mask = rng.rand(5, 5).astype(np.float32)
+    x = jnp.asarray(rng.rand(64, 80).astype(np.float32))
+    got = k.conv2d(x, mask)
+    want = ref.stencil(x, ref.conv_functor(mask), 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_conv2d_validates_mask():
+    x = jnp.zeros((8, 8))
+    with pytest.raises(ValueError):
+        k.conv2d(x, np.zeros((2, 2)))
+    with pytest.raises(ValueError):
+        k.conv2d(x, np.zeros((3, 5)))
+    with pytest.raises(ValueError):
+        k.stencil(jnp.zeros((2, 2, 2)), lambda nb: nb(0, 0), 1)
+
+
+def test_nonsquare_and_tiny(rng):
+    for shape in [(1, 1), (1, 33), (33, 1), (3, 200)]:
+        x = jnp.asarray(rng.rand(*shape).astype(np.float32))
+        got = k.fd_stencil(x, 1)
+        want = ref.fd_laplacian(x, 1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,151 @@
+//! GPU-model cavity driver: the AOT JAX/Pallas step via PJRT.
+//!
+//! Two dispatch strategies (the §Perf ablation):
+//! * **stepwise** — one executable invocation per time step (three
+//!   outputs downloaded each step: omega, psi, residual);
+//! * **chunked** — the fused K-step artifact (`cavity_runK_nN`) invoked
+//!   once per K steps, amortizing dispatch + host transfers by K.
+//!
+//! (Buffer-level device-resident chaining is not expressible through the
+//! `xla` 0.1.6 bindings — multi-output results come back as one tuple
+//! buffer; see `runtime/mod.rs`.)
+
+use crate::runtime::{Runtime, RuntimeError, Tensor};
+use crate::tensor::{NdArray, Shape};
+
+/// Summary of a driven run.
+#[derive(Debug, Clone)]
+pub struct CavityRun {
+    pub n: usize,
+    pub steps: usize,
+    pub wall_seconds: f64,
+    pub final_residual: f32,
+    pub residual_log: Vec<(usize, f32)>,
+    pub final_omega: NdArray<f32>,
+    pub final_psi: NdArray<f32>,
+}
+
+impl CavityRun {
+    pub fn steps_per_second(&self) -> f64 {
+        self.steps as f64 / self.wall_seconds
+    }
+}
+
+/// Driver over the `cavity_step_n{N}` / `cavity_run10_n{N}` artifacts.
+pub struct GpuModelDriver<'rt> {
+    runtime: &'rt Runtime,
+    step_artifact: String,
+    chunk_artifact: Option<(String, usize)>,
+    pub n: usize,
+}
+
+impl<'rt> GpuModelDriver<'rt> {
+    /// Pick the artifacts for grid size `n` from the manifest.
+    pub fn new(runtime: &'rt Runtime, n: usize) -> Result<GpuModelDriver<'rt>, RuntimeError> {
+        let step_artifact = format!("cavity_step_n{n}");
+        runtime.entry(&step_artifact)?;
+        let chunk_name = format!("cavity_run10_n{n}");
+        let chunk_artifact = runtime
+            .entry(&chunk_name)
+            .ok()
+            .and_then(|e| e.meta_usize("steps"))
+            .map(|k| (chunk_name, k));
+        Ok(GpuModelDriver {
+            runtime,
+            step_artifact,
+            chunk_artifact,
+            n,
+        })
+    }
+
+    pub fn has_chunk(&self) -> bool {
+        self.chunk_artifact.is_some()
+    }
+
+    fn unpack3(
+        mut out: Vec<Tensor>,
+    ) -> Result<(Tensor, Tensor, f32), RuntimeError> {
+        let res = out.pop().expect("residual output");
+        let psi = out.pop().expect("psi output");
+        let omega = out.pop().expect("omega output");
+        let r = match res {
+            Tensor::F32(a) => a.data()[0],
+            _ => f32::NAN,
+        };
+        Ok((omega, psi, r))
+    }
+
+    /// One executable invocation per step.
+    pub fn run_stepwise(&self, steps: usize, log_every: usize) -> Result<CavityRun, RuntimeError> {
+        let shape = Shape::new(&[self.n, self.n]);
+        let mut omega = Tensor::F32(NdArray::zeros(shape.clone()));
+        let mut psi = Tensor::F32(NdArray::zeros(shape));
+        let mut residual_log = Vec::new();
+        let mut final_residual = f32::NAN;
+        let t0 = std::time::Instant::now();
+        for step in 1..=steps {
+            let out = self.runtime.execute(&self.step_artifact, &[omega, psi])?;
+            let (o, p, r) = Self::unpack3(out)?;
+            omega = o;
+            psi = p;
+            final_residual = r;
+            if step % log_every.max(1) == 0 || step == steps {
+                residual_log.push((step, r));
+            }
+        }
+        let wall_seconds = t0.elapsed().as_secs_f64();
+        Ok(CavityRun {
+            n: self.n,
+            steps,
+            wall_seconds,
+            final_residual,
+            residual_log,
+            final_omega: omega.into_f32().expect("omega f32"),
+            final_psi: psi.into_f32().expect("psi f32"),
+        })
+    }
+
+    /// Fused-chunk dispatch: K steps per invocation; `steps` is rounded
+    /// down to a multiple of K (returns an error if no chunk artifact).
+    pub fn run_chunked(&self, steps: usize) -> Result<CavityRun, RuntimeError> {
+        let (name, k) = self
+            .chunk_artifact
+            .clone()
+            .ok_or_else(|| RuntimeError::UnknownArtifact(format!("cavity_run10_n{}", self.n)))?;
+        let chunks = (steps / k).max(1);
+        let shape = Shape::new(&[self.n, self.n]);
+        let mut omega = Tensor::F32(NdArray::zeros(shape.clone()));
+        let mut psi = Tensor::F32(NdArray::zeros(shape));
+        let mut residual_log = Vec::new();
+        let mut final_residual = f32::NAN;
+        let t0 = std::time::Instant::now();
+        for c in 1..=chunks {
+            let out = self.runtime.execute(&name, &[omega, psi])?;
+            let (o, p, r) = Self::unpack3(out)?;
+            omega = o;
+            psi = p;
+            final_residual = r;
+            residual_log.push((c * k, r));
+        }
+        let wall_seconds = t0.elapsed().as_secs_f64();
+        Ok(CavityRun {
+            n: self.n,
+            steps: chunks * k,
+            wall_seconds,
+            final_residual,
+            residual_log,
+            final_omega: omega.into_f32().expect("omega f32"),
+            final_psi: psi.into_f32().expect("psi f32"),
+        })
+    }
+
+    /// Preferred strategy: chunked when available and steps permit.
+    pub fn run(&self, steps: usize, log_every: usize) -> Result<CavityRun, RuntimeError> {
+        match &self.chunk_artifact {
+            Some((_, k)) if steps % k == 0 && steps >= *k => self.run_chunked(steps),
+            _ => self.run_stepwise(steps, log_every),
+        }
+    }
+}
+
+// Exercised by rust/tests/cfd_integration.rs (needs built artifacts).

@@ -1,0 +1,303 @@
+//! Pure-Rust lid-driven cavity solvers (the paper's CPU baselines).
+//!
+//! Bit-for-bit the same discretization as `python/compile/cfd.py`:
+//! omega-psi formulation, K Jacobi sweeps per step, Thom wall vorticity,
+//! explicit Euler transport, zero ghost cells outside the domain.
+
+use crate::tensor::{NdArray, Shape};
+
+/// Solver parameters (mirrors `cfd.CavityParams`).
+#[derive(Debug, Clone, Copy)]
+pub struct Params {
+    pub n: usize,
+    pub reynolds: f64,
+    pub lid_u: f64,
+    pub jacobi_iters: usize,
+    pub dt: f64,
+}
+
+impl Params {
+    /// Same defaults as `CavityParams.default` in python.
+    pub fn default_for(n: usize, reynolds: f64, jacobi_iters: usize) -> Params {
+        let h = 1.0 / (n as f64 - 1.0);
+        let nu = 1.0 / reynolds;
+        let dt = 0.4 * (0.25 * h * h / nu).min(h);
+        Params {
+            n,
+            reynolds,
+            lid_u: 1.0,
+            jacobi_iters,
+            dt,
+        }
+    }
+
+    pub fn h(&self) -> f64 {
+        1.0 / (self.n as f64 - 1.0)
+    }
+
+    pub fn nu(&self) -> f64 {
+        self.lid_u / self.reynolds
+    }
+
+    /// Device-memory traffic of one step (mirrors python accounting).
+    pub fn bytes_moved_per_step(&self) -> u64 {
+        let field = (self.n * self.n * 4) as u64;
+        self.jacobi_iters as u64 * 3 * field + 4 * field + 11 * field
+    }
+}
+
+/// Serial (and optionally threaded) CPU solver state.
+pub struct CpuSolver {
+    pub params: Params,
+    pub omega: NdArray<f32>,
+    pub psi: NdArray<f32>,
+}
+
+#[inline]
+fn at(f: &[f32], n: usize, i: usize, j: usize) -> f32 {
+    f[i * n + j]
+}
+
+/// Zero-ghost neighbor fetch.
+#[inline]
+fn nb(f: &[f32], n: usize, i: i64, j: i64) -> f32 {
+    if i < 0 || j < 0 || i >= n as i64 || j >= n as i64 {
+        0.0
+    } else {
+        f[i as usize * n + j as usize]
+    }
+}
+
+impl CpuSolver {
+    pub fn new(params: Params) -> CpuSolver {
+        let shape = Shape::new(&[params.n, params.n]);
+        CpuSolver {
+            params,
+            omega: NdArray::zeros(shape.clone()),
+            psi: NdArray::zeros(shape),
+        }
+    }
+
+    /// One time step; returns the Linf residual of omega (as in python).
+    pub fn step(&mut self) -> f32 {
+        self.step_impl(1)
+    }
+
+    /// One time step with row-parallel Jacobi/transport over `threads`.
+    pub fn step_parallel(&mut self, threads: usize) -> f32 {
+        self.step_impl(threads.max(1))
+    }
+
+    fn step_impl(&mut self, threads: usize) -> f32 {
+        let p = self.params;
+        let n = p.n;
+        let h = p.h();
+        let h2 = (h * h) as f32;
+        let inv2h = (0.5 * (n as f64 - 1.0)) as f32;
+        let invh2 = ((n as f64 - 1.0) * (n as f64 - 1.0)) as f32;
+        let nu = p.nu() as f32;
+        let dt = p.dt as f32;
+        let lid = p.lid_u as f32;
+
+        // 1. Poisson solve: K Jacobi sweeps, psi = 0 on walls.
+        let mut psi = self.psi.data().to_vec();
+        let omega = self.omega.data().to_vec();
+        let mut psi_next = vec![0.0f32; n * n];
+        for _ in 0..p.jacobi_iters {
+            par_rows(threads, n, &mut psi_next, |i, row| {
+                for j in 0..n {
+                    let s = nb(&psi, n, i as i64, j as i64 + 1)
+                        + nb(&psi, n, i as i64, j as i64 - 1)
+                        + nb(&psi, n, i as i64 + 1, j as i64)
+                        + nb(&psi, n, i as i64 - 1, j as i64);
+                    let v = 0.25 * (s + h2 * at(&omega, n, i, j));
+                    // interior mask
+                    row[j] = if i == 0 || j == 0 || i == n - 1 || j == n - 1 {
+                        0.0
+                    } else {
+                        v
+                    };
+                }
+            });
+            std::mem::swap(&mut psi, &mut psi_next);
+        }
+
+        // 2. Velocities (masked central differences + lid BC).
+        let mut u = vec![0.0f32; n * n];
+        let mut v = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let interior = i > 0 && j > 0 && i < n - 1 && j < n - 1;
+                if interior {
+                    u[i * n + j] = inv2h
+                        * (nb(&psi, n, i as i64 + 1, j as i64) - nb(&psi, n, i as i64 - 1, j as i64));
+                    v[i * n + j] = -inv2h
+                        * (nb(&psi, n, i as i64, j as i64 + 1) - nb(&psi, n, i as i64, j as i64 - 1));
+                }
+            }
+        }
+        for j in 0..n {
+            u[(n - 1) * n + j] = lid;
+        }
+
+        // 3. Thom wall vorticity.
+        let mut om = omega.clone();
+        for j in 0..n {
+            om[j] = -2.0 * invh2 * at(&psi, n, 1, j); // bottom
+            om[(n - 1) * n + j] = -2.0 * invh2 * at(&psi, n, n - 2, j) - 2.0 * lid / h as f32;
+        }
+        for i in 0..n {
+            om[i * n] = -2.0 * invh2 * at(&psi, n, i, 1); // left
+            om[i * n + n - 1] = -2.0 * invh2 * at(&psi, n, i, n - 2); // right
+        }
+
+        // 4. Explicit Euler transport (interior only).
+        let mut new_om = om.clone();
+        par_rows(threads, n, &mut new_om, |i, row| {
+            for j in 0..n {
+                if i == 0 || j == 0 || i == n - 1 || j == n - 1 {
+                    continue;
+                }
+                let wx = inv2h
+                    * (nb(&om, n, i as i64, j as i64 + 1) - nb(&om, n, i as i64, j as i64 - 1));
+                let wy = inv2h
+                    * (nb(&om, n, i as i64 + 1, j as i64) - nb(&om, n, i as i64 - 1, j as i64));
+                let lap = invh2
+                    * (nb(&om, n, i as i64, j as i64 + 1)
+                        + nb(&om, n, i as i64, j as i64 - 1)
+                        + nb(&om, n, i as i64 + 1, j as i64)
+                        + nb(&om, n, i as i64 - 1, j as i64)
+                        - 4.0 * at(&om, n, i, j));
+                let rhs = -at(&u, n, i, j) * wx - at(&v, n, i, j) * wy + nu * lap;
+                row[j] = at(&om, n, i, j) + dt * rhs;
+            }
+        });
+
+        let res = new_om
+            .iter()
+            .zip(&om)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+
+        let shape = Shape::new(&[n, n]);
+        self.omega = NdArray::from_vec(shape.clone(), new_om);
+        self.psi = NdArray::from_vec(shape, psi);
+        res
+    }
+
+    /// Run `steps` serial steps; returns the last residual.
+    pub fn run(&mut self, steps: usize) -> f32 {
+        let mut res = 0.0;
+        for _ in 0..steps {
+            res = self.step();
+        }
+        res
+    }
+
+    /// Run `steps` with `threads` worker threads.
+    pub fn run_parallel(&mut self, steps: usize, threads: usize) -> f32 {
+        let mut res = 0.0;
+        for _ in 0..steps {
+            res = self.step_parallel(threads);
+        }
+        res
+    }
+}
+
+/// Row-partitioned parallel fill of `out` (scoped threads; serial when
+/// threads == 1 to keep the baseline honest).
+fn par_rows<F>(threads: usize, n: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if threads <= 1 {
+        for (i, row) in out.chunks_mut(n).enumerate() {
+            f(i, row);
+        }
+        return;
+    }
+    let rows_per = (n + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        for (t, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let f = &f;
+            scope.spawn(move || {
+                for (k, row) in chunk.chunks_mut(n).enumerate() {
+                    f(t * rows_per + k, row);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_and_vortex_forms() {
+        let mut s = CpuSolver::new(Params::default_for(48, 1000.0, 20));
+        let first = s.step();
+        let mut last = first;
+        for _ in 0..99 {
+            last = s.step();
+        }
+        assert!(last.is_finite() && last < first);
+        // psi extremum in the upper half (lid side).
+        let n = 48;
+        let psi = s.psi.data();
+        let (mut best, mut bi) = (0.0f32, 0usize);
+        for i in 1..n - 1 {
+            for j in 1..n - 1 {
+                let v = psi[i * n + j].abs();
+                if v > best {
+                    best = v;
+                    bi = i;
+                }
+            }
+        }
+        assert!(best > 1e-4);
+        assert!(bi > n / 2, "vortex core at row {bi}");
+    }
+
+    #[test]
+    fn walls_stay_zero_psi() {
+        let mut s = CpuSolver::new(Params::default_for(32, 500.0, 10));
+        s.run(20);
+        let n = 32;
+        let psi = s.psi.data();
+        for k in 0..n {
+            assert_eq!(psi[k], 0.0);
+            assert_eq!(psi[(n - 1) * n + k], 0.0);
+            assert_eq!(psi[k * n], 0.0);
+            assert_eq!(psi[k * n + n - 1], 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let p = Params::default_for(40, 800.0, 10);
+        let mut a = CpuSolver::new(p);
+        let mut b = CpuSolver::new(p);
+        a.run(25);
+        b.run_parallel(25, 4);
+        assert_eq!(a.omega.data(), b.omega.data());
+        assert_eq!(a.psi.data(), b.psi.data());
+    }
+
+    #[test]
+    fn zero_lid_stays_at_rest() {
+        let mut p = Params::default_for(24, 1000.0, 5);
+        p.lid_u = 0.0;
+        let mut s = CpuSolver::new(p);
+        s.run(10);
+        assert!(s.omega.data().iter().all(|&x| x == 0.0));
+        assert!(s.psi.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn bytes_accounting_matches_python() {
+        let p = Params::default_for(128, 1000.0, 20);
+        let field = 128 * 128 * 4;
+        assert_eq!(p.bytes_moved_per_step(), (20 * 3 + 4 + 11) * field);
+    }
+}

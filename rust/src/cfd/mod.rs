@@ -1,0 +1,20 @@
+//! The conclusion's demo application: 2D lid-driven cavity Navier-Stokes.
+//!
+//! Three execution paths, mirroring the paper's comparison:
+//! * [`cavity::GpuModelDriver`] — the AOT JAX/Pallas step (built from the
+//!   library's stencil kernels) executed natively through PJRT, state
+//!   held device-side across steps.
+//! * [`cpu::CpuSolver`] — serial pure-Rust solver (the paper's
+//!   single-core Nehalem baseline).
+//! * [`cpu::CpuSolver::run_parallel`] — std::thread row-partitioned
+//!   solver (the paper's 16-process MPI baseline, rescaled to this host).
+//!
+//! All three implement the identical omega-psi formulation of
+//! `python/compile/cfd.py`, so their fields agree to fp tolerance —
+//! enforced by the integration tests.
+
+pub mod cavity;
+pub mod cpu;
+
+pub use cavity::{CavityRun, GpuModelDriver};
+pub use cpu::{CpuSolver, Params};

@@ -1,0 +1,153 @@
+//! Lock-free service metrics: counters + log-scale latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Log2-bucketed latency histogram from 1 µs to ~1000 s.
+#[derive(Debug)]
+pub struct Histogram {
+    /// bucket i counts samples in [2^i, 2^(i+1)) microseconds.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+const BUCKETS: usize = 30;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record_seconds(&self, s: f64) {
+        let us = (s * 1e6).max(0.0) as u64;
+        let bucket = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_seconds(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound).
+    pub fn quantile_seconds(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = (q * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << (i + 1)) as f64 / 1e6;
+            }
+        }
+        (1u64 << BUCKETS) as f64 / 1e6
+    }
+}
+
+/// Service-wide metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub queue_latency: Histogram,
+    pub exec_latency: Histogram,
+}
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(counter: &AtomicU64) -> u64 {
+        counter.load(Ordering::Relaxed)
+    }
+
+    /// One-line human summary (printed by the CLI's `serve --stats`).
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} failed={} batches={} queue_mean={:.1}us exec_mean={:.1}us exec_p95={:.1}us",
+            Metrics::get(&self.submitted),
+            Metrics::get(&self.completed),
+            Metrics::get(&self.failed),
+            Metrics::get(&self.batches),
+            self.queue_latency.mean_seconds() * 1e6,
+            self.exec_latency.mean_seconds() * 1e6,
+            self.exec_latency.quantile_seconds(0.95) * 1e6,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_mean_and_count() {
+        let h = Histogram::default();
+        h.record_seconds(0.001);
+        h.record_seconds(0.003);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_seconds() - 0.002).abs() < 1e-4);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotonic() {
+        let h = Histogram::default();
+        for i in 1..=1000 {
+            h.record_seconds(i as f64 * 1e-5); // 10us .. 10ms
+        }
+        let p50 = h.quantile_seconds(0.5);
+        let p95 = h.quantile_seconds(0.95);
+        let p99 = h.quantile_seconds(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p50 > 1e-3 && p50 < 2e-2);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_seconds(), 0.0);
+        assert_eq!(h.quantile_seconds(0.5), 0.0);
+    }
+
+    #[test]
+    fn metrics_counters() {
+        let m = Metrics::default();
+        Metrics::inc(&m.submitted);
+        Metrics::inc(&m.submitted);
+        Metrics::inc(&m.completed);
+        assert_eq!(Metrics::get(&m.submitted), 2);
+        assert_eq!(Metrics::get(&m.completed), 1);
+        assert!(m.summary().contains("submitted=2"));
+    }
+
+    #[test]
+    fn tiny_latency_goes_to_first_bucket() {
+        let h = Histogram::default();
+        h.record_seconds(0.0);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_seconds(1.0) <= 4e-6);
+    }
+}

@@ -1,0 +1,18 @@
+//! L3 coordinator: the serving layer over the PJRT runtime.
+//!
+//! Topology (vLLM-router style, scaled to one device): callers submit
+//! [`request::Request`]s over an mpsc channel; a *batcher* groups queued
+//! requests by artifact (same compiled executable) so the device worker
+//! runs them back-to-back; a single **device-worker thread** owns the
+//! non-`Send` PJRT client and executes batches; responses come back on
+//! per-request channels. Metrics count everything.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod service;
+
+pub use batcher::Batcher;
+pub use metrics::Metrics;
+pub use request::{Request, RequestId, Response};
+pub use service::{Service, ServiceConfig};

@@ -1,0 +1,80 @@
+//! Request/response types crossing the coordinator boundary.
+
+use crate::runtime::Tensor;
+use std::time::Instant;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// A rearrangement request: run `artifact` on `inputs`.
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    /// AOT artifact name (see `artifacts/manifest.json`).
+    pub artifact: String,
+    pub inputs: Vec<Tensor>,
+    pub enqueued: Instant,
+}
+
+impl Request {
+    pub fn new(id: RequestId, artifact: impl Into<String>, inputs: Vec<Tensor>) -> Request {
+        Request {
+            id,
+            artifact: artifact.into(),
+            inputs,
+            enqueued: Instant::now(),
+        }
+    }
+}
+
+/// The worker's answer.
+#[derive(Debug)]
+pub struct Response {
+    pub id: RequestId,
+    pub artifact: String,
+    pub result: Result<Vec<Tensor>, String>,
+    /// Seconds spent queued before execution started.
+    pub queue_seconds: f64,
+    /// Seconds spent executing on the device.
+    pub exec_seconds: f64,
+}
+
+impl Response {
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{NdArray, Shape};
+
+    #[test]
+    fn request_construction() {
+        let r = Request::new(7, "copy_4m", vec![Tensor::F32(NdArray::iota(Shape::new(&[4])))]);
+        assert_eq!(r.id, 7);
+        assert_eq!(r.artifact, "copy_4m");
+        assert_eq!(r.inputs.len(), 1);
+    }
+
+    #[test]
+    fn response_status() {
+        let ok = Response {
+            id: 1,
+            artifact: "x".into(),
+            result: Ok(vec![]),
+            queue_seconds: 0.0,
+            exec_seconds: 0.0,
+        };
+        assert!(ok.is_ok());
+        let err = Response {
+            id: 2,
+            artifact: "x".into(),
+            result: Err("boom".into()),
+            queue_seconds: 0.0,
+            exec_seconds: 0.0,
+        };
+        assert!(!err.is_ok());
+    }
+}

@@ -1,0 +1,220 @@
+//! The service: leader API + single device-worker thread.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so the worker thread *builds*
+//! the `Runtime` itself and owns it for its lifetime; everything crossing
+//! the thread boundary is plain data. Submission returns a `Receiver` the
+//! caller can block on or poll — a poor man's future, std-only.
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::request::{Request, RequestId, Response};
+use crate::runtime::{Runtime, Tensor};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub artifacts_dir: PathBuf,
+    /// Max requests dispatched per batch (see `Batcher`).
+    pub max_batch: usize,
+    /// Warm these artifacts (compile) at startup.
+    pub preload: Vec<String>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            artifacts_dir: crate::runtime::artifact::default_dir(),
+            max_batch: 8,
+            preload: vec![],
+        }
+    }
+}
+
+enum Message {
+    Work(Request, Sender<Response>),
+    Shutdown,
+}
+
+/// Handle to a running coordinator service.
+pub struct Service {
+    tx: Sender<Message>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Service {
+    /// Start the device worker. Fails fast (via the returned Receiver's
+    /// first response) if the runtime cannot be constructed.
+    pub fn start(config: ServiceConfig) -> std::io::Result<Service> {
+        let (tx, rx) = channel::<Message>();
+        let metrics = Arc::new(Metrics::default());
+        let worker_metrics = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("gdrk-device-worker".into())
+            .spawn(move || worker_loop(rx, config, worker_metrics))?;
+        Ok(Service {
+            tx,
+            worker: Some(worker),
+            metrics,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Submit a request; returns its id and the response channel.
+    pub fn submit(
+        &self,
+        artifact: impl Into<String>,
+        inputs: Vec<Tensor>,
+    ) -> (RequestId, Receiver<Response>) {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        Metrics::inc(&self.metrics.submitted);
+        let req = Request::new(id, artifact, inputs);
+        // A send error means the worker died; the caller sees it as a
+        // disconnected receiver.
+        let _ = self.tx.send(Message::Work(req, rtx));
+        (id, rrx)
+    }
+
+    /// Submit and block for the response.
+    pub fn call(
+        &self,
+        artifact: impl Into<String>,
+        inputs: Vec<Tensor>,
+    ) -> Result<Vec<Tensor>, String> {
+        let (_, rx) = self.submit(artifact, inputs);
+        match rx.recv() {
+            Ok(resp) => resp.result,
+            Err(_) => Err("worker disconnected".to_string()),
+        }
+    }
+
+    /// Graceful shutdown: drain in-flight work, join the worker.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Message::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Message::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    rx: std::sync::mpsc::Receiver<Message>,
+    config: ServiceConfig,
+    metrics: Arc<Metrics>,
+) {
+    // The worker owns the non-Send runtime.
+    let runtime = match Runtime::new(&config.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // Without a runtime every request fails with the same cause.
+            let msg = format!("runtime init failed: {e}");
+            while let Ok(m) = rx.recv() {
+                match m {
+                    Message::Work(req, reply) => {
+                        Metrics::inc(&metrics.failed);
+                        let _ = reply.send(Response {
+                            id: req.id,
+                            artifact: req.artifact,
+                            result: Err(msg.clone()),
+                            queue_seconds: 0.0,
+                            exec_seconds: 0.0,
+                        });
+                    }
+                    Message::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    for name in &config.preload {
+        if let Err(e) = runtime.load(name) {
+            eprintln!("gdrk: preload of '{name}' failed: {e}");
+        }
+    }
+
+    let mut batcher = Batcher::new(config.max_batch);
+    let mut replies: std::collections::HashMap<RequestId, Sender<Response>> =
+        std::collections::HashMap::new();
+    'main: loop {
+        // Block for one message, then opportunistically drain the queue
+        // so the batcher sees everything waiting.
+        match rx.recv() {
+            Ok(Message::Work(req, reply)) => {
+                replies.insert(req.id, reply);
+                batcher.push(req);
+            }
+            Ok(Message::Shutdown) | Err(_) => break 'main,
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Message::Work(req, reply)) => {
+                    replies.insert(req.id, reply);
+                    batcher.push(req);
+                }
+                Ok(Message::Shutdown) => {
+                    drain(&runtime, &mut batcher, &mut replies, &metrics);
+                    break 'main;
+                }
+                Err(_) => break,
+            }
+        }
+        drain(&runtime, &mut batcher, &mut replies, &metrics);
+    }
+    drain(&runtime, &mut batcher, &mut replies, &metrics);
+}
+
+fn drain(
+    runtime: &Runtime,
+    batcher: &mut Batcher,
+    replies: &mut std::collections::HashMap<RequestId, Sender<Response>>,
+    metrics: &Metrics,
+) {
+    while let Some((artifact, batch)) = batcher.next_batch() {
+        Metrics::inc(&metrics.batches);
+        for req in batch {
+            let queue_seconds = req.enqueued.elapsed().as_secs_f64();
+            metrics.queue_latency.record_seconds(queue_seconds);
+            let t0 = std::time::Instant::now();
+            let result = runtime
+                .execute(&artifact, &req.inputs)
+                .map_err(|e| e.to_string());
+            let exec_seconds = t0.elapsed().as_secs_f64();
+            metrics.exec_latency.record_seconds(exec_seconds);
+            match &result {
+                Ok(_) => Metrics::inc(&metrics.completed),
+                Err(_) => Metrics::inc(&metrics.failed),
+            }
+            if let Some(reply) = replies.remove(&req.id) {
+                let _ = reply.send(Response {
+                    id: req.id,
+                    artifact: artifact.clone(),
+                    result,
+                    queue_seconds,
+                    exec_seconds,
+                });
+            }
+        }
+    }
+}
+
+// Integration coverage (real artifacts + PJRT) lives in rust/tests/.

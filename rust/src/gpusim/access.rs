@@ -1,0 +1,178 @@
+//! Access-trace vocabulary: what kernels tell the simulator.
+
+use super::device::Device;
+use super::sharedmem::SmemProfile;
+
+/// Which memory path a half-warp access takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccessKind {
+    GlobalRead,
+    GlobalWrite,
+    /// Read through the texture unit (cached; Table 4 variants).
+    TextureRead {
+        /// Texture addressing: false = 1D (linear), true = 2D (CUDA array).
+        two_d: bool,
+    },
+}
+
+impl AccessKind {
+    pub fn is_read(self) -> bool {
+        !matches!(self, AccessKind::GlobalWrite)
+    }
+
+    pub fn is_texture(self) -> bool {
+        matches!(self, AccessKind::TextureRead { .. })
+    }
+}
+
+/// One half-warp (16 threads) memory instruction.
+///
+/// The overwhelmingly common case is affine: thread `i` touches
+/// `base + i * stride_bytes`, each element `elem_bytes` wide. `lanes`
+/// allows partially-active half-warps (warp divergence at tile borders).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HalfWarpAccess {
+    pub kind: AccessKind,
+    pub base: u64,
+    pub stride_bytes: i64,
+    pub elem_bytes: u32,
+    /// Active lanes, 1..=16.
+    pub lanes: u8,
+}
+
+impl HalfWarpAccess {
+    pub fn contiguous(kind: AccessKind, base: u64, elem_bytes: u32) -> HalfWarpAccess {
+        HalfWarpAccess {
+            kind,
+            base,
+            stride_bytes: elem_bytes as i64,
+            elem_bytes,
+            lanes: 16,
+        }
+    }
+
+    pub fn strided(
+        kind: AccessKind,
+        base: u64,
+        stride_bytes: i64,
+        elem_bytes: u32,
+    ) -> HalfWarpAccess {
+        HalfWarpAccess {
+            kind,
+            base,
+            stride_bytes,
+            elem_bytes,
+            lanes: 16,
+        }
+    }
+
+    pub fn with_lanes(mut self, lanes: u8) -> HalfWarpAccess {
+        assert!(lanes >= 1 && lanes <= 16);
+        self.lanes = lanes;
+        self
+    }
+
+    /// Useful bytes actually requested by the program.
+    pub fn useful_bytes(&self) -> u64 {
+        self.lanes as u64 * self.elem_bytes as u64
+    }
+
+    /// Byte address of lane `i`.
+    pub fn addr(&self, i: usize) -> u64 {
+        (self.base as i64 + i as i64 * self.stride_bytes) as u64
+    }
+}
+
+/// One DRAM transaction after coalescing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Transaction {
+    pub addr: u64,
+    pub bytes: u32,
+    pub kind: AccessKind,
+}
+
+/// CUDA-style launch configuration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaunchConfig {
+    pub grid_blocks: usize,
+    pub threads_per_block: usize,
+    pub smem_per_block: usize,
+}
+
+/// A simulatable kernel: launch shape + exact per-block access trace.
+///
+/// Implementations live in `crate::kernels`; the engine calls
+/// [`GpuKernel::block_accesses`] once per block.
+pub trait GpuKernel {
+    fn name(&self) -> String;
+
+    fn launch(&self) -> LaunchConfig;
+
+    /// Emit every half-warp global/texture access of block `block`.
+    fn block_accesses(&self, block: usize, sink: &mut dyn FnMut(HalfWarpAccess));
+
+    /// Bytes the operation usefully moves (2x data size for a copy) —
+    /// the numerator of the paper's "effective bandwidth".
+    fn useful_bytes(&self) -> u64;
+
+    /// Shared-memory activity per block (bank-conflict model input).
+    fn smem_profile(&self) -> SmemProfile {
+        SmemProfile::none()
+    }
+
+    /// Extra per-block SM compute cycles beyond the per-access issue cost
+    /// (e.g. warp-divergence penalty at stencil borders).
+    fn extra_block_cycles(&self, _dev: &Device) -> f64 {
+        0.0
+    }
+
+    /// Tensor rank driving the index-arithmetic cost model (§III.B:
+    /// higher-rank reorders walk longer constant-memory stride tables).
+    fn index_rank(&self) -> usize {
+        1
+    }
+
+    /// Fraction of texture reads served by the texture cache, if the
+    /// kernel uses the texture path (Table 4 variants).
+    fn texture_hit_rate(&self, dev: &Device) -> f64 {
+        super::texture::default_hit_rate(dev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affine_addresses() {
+        let a = HalfWarpAccess::contiguous(AccessKind::GlobalRead, 1000, 4);
+        assert_eq!(a.addr(0), 1000);
+        assert_eq!(a.addr(15), 1060);
+        assert_eq!(a.useful_bytes(), 64);
+
+        let s = HalfWarpAccess::strided(AccessKind::GlobalWrite, 0, 512, 4);
+        assert_eq!(s.addr(3), 1536);
+    }
+
+    #[test]
+    fn negative_stride() {
+        let a = HalfWarpAccess::strided(AccessKind::GlobalRead, 1024, -64, 4);
+        assert_eq!(a.addr(0), 1024);
+        assert_eq!(a.addr(2), 896);
+    }
+
+    #[test]
+    fn partial_lanes() {
+        let a = HalfWarpAccess::contiguous(AccessKind::GlobalRead, 0, 4).with_lanes(3);
+        assert_eq!(a.useful_bytes(), 12);
+    }
+
+    #[test]
+    fn kind_predicates() {
+        assert!(AccessKind::GlobalRead.is_read());
+        assert!(!AccessKind::GlobalWrite.is_read());
+        assert!(AccessKind::TextureRead { two_d: false }.is_read());
+        assert!(AccessKind::TextureRead { two_d: true }.is_texture());
+        assert!(!AccessKind::GlobalRead.is_texture());
+    }
+}

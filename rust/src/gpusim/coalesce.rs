@@ -1,0 +1,264 @@
+//! CC 1.2/1.3 coalescing: half-warp accesses → memory transactions.
+//!
+//! GT200 protocol (CUDA Programming Guide v2.3 §5.1.2.1): for each
+//! half-warp, find the 128-byte segment containing the lowest requested
+//! address, shrink it to 64 B / 32 B if all active addresses fit in a
+//! half/quarter, issue one transaction, mask the served threads, repeat.
+//! (Earlier CC 1.0/1.1 hardware instead serialized any non-sequential
+//! access into 16 transactions — we model CC 1.3.)
+
+use super::access::{HalfWarpAccess, Transaction};
+
+/// Decompose one half-warp access into its DRAM transactions.
+pub fn transactions(hw: &HalfWarpAccess, out: &mut Vec<Transaction>) {
+    if hw.kind.is_texture() {
+        // Texture reads bypass the coalescer; the texture model costs them.
+        texture_fetch_blocks(hw, out);
+        return;
+    }
+    // Fast path: fully-active unit-stride 4-byte accesses aligned to 64 —
+    // by far the most common case in these kernels (one or two 64 B
+    // transactions). Fall through to the exact algorithm otherwise.
+    if hw.lanes == 16
+        && hw.elem_bytes == 4
+        && hw.stride_bytes == 4
+        && hw.base % 64 == 0
+    {
+        out.push(Transaction {
+            addr: hw.base,
+            bytes: 64,
+            kind: hw.kind,
+        });
+        return;
+    }
+    general(hw, out);
+}
+
+fn general(hw: &HalfWarpAccess, out: &mut Vec<Transaction>) {
+    // Collect active byte ranges.
+    let mut pending: Vec<(u64, u64)> = (0..hw.lanes as usize)
+        .map(|i| {
+            let a = hw.addr(i);
+            (a, a + hw.elem_bytes as u64)
+        })
+        .collect();
+
+    while let Some(&(min_start, _)) = pending.iter().min_by_key(|r| r.0) {
+        // 128-byte segment containing the lowest address.
+        let seg128 = min_start & !127;
+        // Threads whose whole element lies inside this 128B segment.
+        let served: Vec<(u64, u64)> = pending
+            .iter()
+            .copied()
+            .filter(|&(s, e)| s >= seg128 && e <= seg128 + 128)
+            .collect();
+        if served.is_empty() {
+            // Element straddles a segment boundary (misaligned wide type):
+            // serve just the first element with its own transactions.
+            let (s, e) = *pending.iter().min_by_key(|r| r.0).unwrap();
+            let mut a = s & !31;
+            while a < e {
+                out.push(Transaction {
+                    addr: a,
+                    bytes: 32,
+                    kind: hw.kind,
+                });
+                a += 32;
+            }
+            pending.retain(|&r| r != (s, e));
+            continue;
+        }
+        let lo = served.iter().map(|r| r.0).min().unwrap();
+        let hi = served.iter().map(|r| r.1).max().unwrap();
+        // Shrink 128 -> 64 -> 32 while all served accesses still fit.
+        let (mut addr, mut size) = (seg128, 128u64);
+        loop {
+            let half = size / 2;
+            if half < 32 {
+                break;
+            }
+            if hi <= addr + half {
+                size = half; // low half
+            } else if lo >= addr + half {
+                addr += half; // high half
+                size = half;
+            } else {
+                break;
+            }
+        }
+        out.push(Transaction {
+            addr,
+            bytes: size as u32,
+            kind: hw.kind,
+        });
+        pending.retain(|&(s, e)| !(s >= addr && e <= addr + size));
+    }
+}
+
+/// Texture fetches are serviced in 32-byte cache blocks; dedup the blocks
+/// touched by the half-warp (the cache model then applies the hit rate).
+///
+/// 1D (linear-memory) textures are row-contiguous in DRAM, so adjacent
+/// missed blocks fill as one larger burst — merge them up to 128 B. 2D
+/// (CUDA-array) textures use a space-filling layout: consecutive texture
+/// coordinates are *not* DRAM-adjacent, so each block stays its own
+/// 32-byte fetch (and later pays the 64-byte burst rounding) — this is
+/// exactly why Table 4's pure-2D-texture kernel loses to plain global.
+fn texture_fetch_blocks(hw: &HalfWarpAccess, out: &mut Vec<Transaction>) {
+    let two_d = matches!(
+        hw.kind,
+        super::access::AccessKind::TextureRead { two_d: true }
+    );
+    let mut blocks: Vec<u64> = (0..hw.lanes as usize)
+        .flat_map(|i| {
+            let s = hw.addr(i) & !31;
+            let e = (hw.addr(i) + hw.elem_bytes as u64 - 1) & !31;
+            [s, e]
+        })
+        .collect();
+    blocks.sort_unstable();
+    blocks.dedup();
+    if two_d {
+        for b in blocks {
+            out.push(Transaction {
+                addr: b,
+                bytes: 32,
+                kind: hw.kind,
+            });
+        }
+        return;
+    }
+    // Merge adjacent 32 B blocks into bursts of up to 128 B.
+    let mut i = 0;
+    while i < blocks.len() {
+        let start = blocks[i];
+        let mut len = 32u64;
+        while i + 1 < blocks.len() && blocks[i + 1] == start + len && len < 128 {
+            len += 32;
+            i += 1;
+        }
+        out.push(Transaction {
+            addr: start,
+            bytes: len as u32,
+            kind: hw.kind,
+        });
+        i += 1;
+    }
+}
+
+/// Coalescing efficiency of a transaction list: useful / transferred bytes.
+pub fn efficiency(useful_bytes: u64, txs: &[Transaction]) -> f64 {
+    let moved: u64 = txs.iter().map(|t| t.bytes as u64).sum();
+    if moved == 0 {
+        1.0
+    } else {
+        useful_bytes as f64 / moved as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::access::AccessKind::*;
+
+    fn txs(hw: &HalfWarpAccess) -> Vec<Transaction> {
+        let mut v = Vec::new();
+        transactions(hw, &mut v);
+        v
+    }
+
+    #[test]
+    fn perfectly_coalesced_float_row() {
+        // 16 consecutive floats aligned to 64 B -> one 64 B transaction.
+        let t = txs(&HalfWarpAccess::contiguous(GlobalRead, 256, 4));
+        assert_eq!(t, vec![Transaction { addr: 256, bytes: 64, kind: GlobalRead }]);
+    }
+
+    #[test]
+    fn misaligned_row_takes_two_transactions() {
+        // Offset by one float: spans two 64 B halves of one 128 B segment
+        // -> the CC1.3 algorithm issues a single 128 B transaction.
+        let t = txs(&HalfWarpAccess::contiguous(GlobalRead, 260, 4));
+        assert_eq!(t, vec![Transaction { addr: 256, bytes: 128, kind: GlobalRead }]);
+        // Offset across a 128 B boundary: two transactions (64 + 32 or similar).
+        let t = txs(&HalfWarpAccess::contiguous(GlobalRead, 356, 4));
+        let moved: u64 = t.iter().map(|x| x.bytes as u64).sum();
+        assert!(t.len() == 2 && moved <= 160, "{t:?}");
+    }
+
+    #[test]
+    fn stride_2_floats_single_segment() {
+        // 16 floats at stride 8 B span 124 B -> one 128 B transaction
+        // (half the bytes wasted).
+        let t = txs(&HalfWarpAccess::strided(GlobalRead, 0, 8, 4));
+        assert_eq!(t, vec![Transaction { addr: 0, bytes: 128, kind: GlobalRead }]);
+        assert!((efficiency(64, &t) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn large_stride_fully_uncoalesced() {
+        // Column walk with 2 KiB rows: 16 transactions of 32 B each.
+        let t = txs(&HalfWarpAccess::strided(GlobalWrite, 0, 2048, 4));
+        assert_eq!(t.len(), 16);
+        assert!(t.iter().all(|x| x.bytes == 32 && x.kind == GlobalWrite));
+        assert!((efficiency(64, &t) - 0.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quarter_segment_shrinks_to_32() {
+        // 8 active lanes over 32 B, aligned -> one 32 B transaction.
+        let t = txs(&HalfWarpAccess::contiguous(GlobalRead, 1024, 4).with_lanes(8));
+        assert_eq!(t, vec![Transaction { addr: 1024, bytes: 32, kind: GlobalRead }]);
+    }
+
+    #[test]
+    fn half_segment_shrinks_to_64() {
+        let t = txs(&HalfWarpAccess::contiguous(GlobalRead, 128, 4));
+        assert_eq!(t, vec![Transaction { addr: 128, bytes: 64, kind: GlobalRead }]);
+    }
+
+    #[test]
+    fn eight_byte_elements_full_warp() {
+        // 16 x 8 B contiguous = 128 B -> one 128 B transaction.
+        let t = txs(&HalfWarpAccess::contiguous(GlobalRead, 0, 8));
+        assert_eq!(t, vec![Transaction { addr: 0, bytes: 128, kind: GlobalRead }]);
+    }
+
+    #[test]
+    fn texture_blocks_merge_1d_not_2d() {
+        // Contiguous 16 floats via 1D texture = two adjacent 32 B blocks,
+        // merged into one 64 B burst.
+        let t = txs(&HalfWarpAccess::contiguous(TextureRead { two_d: false }, 0, 4));
+        assert_eq!(t, vec![Transaction { addr: 0, bytes: 64, kind: TextureRead { two_d: false } }]);
+        // The same access through a 2D texture stays two 32 B fetches.
+        let t = txs(&HalfWarpAccess::contiguous(TextureRead { two_d: true }, 0, 4));
+        assert_eq!(t.len(), 2);
+        assert!(t.iter().all(|x| x.bytes == 32));
+        // Strided texture fetch touches one block per lane either way.
+        let t = txs(&HalfWarpAccess::strided(TextureRead { two_d: false }, 0, 4096, 4));
+        assert_eq!(t.len(), 16);
+    }
+
+    #[test]
+    fn moved_bytes_never_less_than_useful() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0A1E5CE);
+        for _ in 0..500 {
+            let hw = HalfWarpAccess {
+                kind: if rng.gen_bool() { GlobalRead } else { GlobalWrite },
+                base: rng.next_u64() % (1 << 20),
+                stride_bytes: rng.gen_between(1, 4097) as i64,
+                elem_bytes: *rng.choose(&[1, 2, 4, 8, 16]),
+                lanes: rng.gen_between(1, 17) as u8,
+            };
+            let t = txs(&hw);
+            let moved: u64 = t.iter().map(|x| x.bytes as u64).sum();
+            assert!(
+                moved >= hw.useful_bytes(),
+                "moved {moved} < useful {} for {hw:?}",
+                hw.useful_bytes()
+            );
+            assert!(t.len() <= 2 * hw.lanes as usize, "{hw:?} -> {} txs", t.len());
+        }
+    }
+}

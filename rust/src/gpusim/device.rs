@@ -1,0 +1,154 @@
+//! Device model: NVIDIA Tesla C1060 (GT200, compute capability 1.3).
+
+/// Architectural + calibration constants of the simulated device.
+///
+/// All constants are documented GT200 architecture facts except
+/// [`Device::dram_efficiency`], the one calibrated value: the paper's own
+/// measured device-to-device memcpy ceiling divided by theoretical peak.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    /// Number of streaming multiprocessors (GT200: 30).
+    pub sms: usize,
+    /// Hardware block-residency limit per SM (CC 1.3: 8).
+    pub max_blocks_per_sm: usize,
+    /// Thread-residency limit per SM (CC 1.3: 1024).
+    pub max_threads_per_sm: usize,
+    /// Shared memory per SM in bytes (CC 1.3: 16 KiB).
+    pub smem_per_sm: usize,
+    /// Shared memory banks (CC 1.x: 16, 4-byte wide).
+    pub smem_banks: usize,
+    /// Threads per warp.
+    pub warp_size: usize,
+    /// DRAM partitions (GT200: 8).
+    pub partitions: usize,
+    /// Partition interleave stride in bytes (GT200: 256).
+    pub partition_bytes: u64,
+    /// Minimum DRAM burst in bytes (GDDR3 on a 64-bit channel).
+    pub burst_bytes: u32,
+    /// Theoretical peak memory bandwidth, bytes/s (C1060: 102.4 GB/s).
+    pub peak_bw: f64,
+    /// CALIBRATED: fraction of peak a perfectly coalesced, perfectly
+    /// partition-balanced stream achieves = paper memcpy 77.82 / 102.4.
+    pub dram_efficiency: f64,
+    /// SM core clock in Hz (C1060: 1.296 GHz).
+    pub sm_clock: f64,
+    /// Scalar processors per SM (GT200: 8).
+    pub sps_per_sm: usize,
+    /// Fixed kernel launch + driver overhead in seconds.
+    pub launch_overhead: f64,
+    /// Issue cost (SM cycles) of one half-warp global memory instruction
+    /// including its address arithmetic at rank <= 3.
+    pub halfwarp_issue_cycles: f64,
+    /// Extra address-arithmetic cycles per half-warp per tensor rank
+    /// above 3 (the paper's constant-memory stride walk, §III.B).
+    pub rank_extra_cycles: f64,
+    /// DRAM page (row) size per partition stream for locality accounting.
+    pub page_bytes: u64,
+    /// Extra bytes-equivalent charged when a block's stream within a
+    /// partition switches DRAM pages (row activate/precharge). This is
+    /// what separates a scattered-row transpose (~0.8x) from a
+    /// sequential stream on real GDDR3.
+    pub page_miss_bytes: u64,
+}
+
+impl Device {
+    /// The paper's testbed.
+    pub fn tesla_c1060() -> Device {
+        Device {
+            name: "Tesla C1060 (simulated)",
+            sms: 30,
+            max_blocks_per_sm: 8,
+            max_threads_per_sm: 1024,
+            smem_per_sm: 16 * 1024,
+            smem_banks: 16,
+            warp_size: 32,
+            partitions: 8,
+            partition_bytes: 256,
+            burst_bytes: 64,
+            peak_bw: 102.4e9,
+            dram_efficiency: 77.82 / 102.4,
+            sm_clock: 1.296e9,
+            sps_per_sm: 8,
+            launch_overhead: 4.0e-6,
+            halfwarp_issue_cycles: 20.0,
+            rank_extra_cycles: 24.0,
+            page_bytes: 2048,
+            page_miss_bytes: 24,
+        }
+    }
+
+    /// Effective sustained bandwidth of a perfect stream, bytes/s.
+    pub fn sustained_bw(&self) -> f64 {
+        self.peak_bw * self.dram_efficiency
+    }
+
+    /// Per-partition *raw* bandwidth, bytes/s. The camping bound uses raw
+    /// peak: a single hot partition still runs its own pins at full rate;
+    /// the sustained derating already lives in the aggregate bound.
+    pub fn partition_bw(&self) -> f64 {
+        self.peak_bw / self.partitions as f64
+    }
+
+    /// Partition index of a byte address.
+    pub fn partition_of(&self, addr: u64) -> usize {
+        ((addr / self.partition_bytes) % self.partitions as u64) as usize
+    }
+
+    /// How many blocks of a kernel are resident per SM.
+    pub fn blocks_per_sm(&self, threads_per_block: usize, smem_per_block: usize) -> usize {
+        let by_hw = self.max_blocks_per_sm;
+        let by_threads = if threads_per_block == 0 {
+            by_hw
+        } else {
+            self.max_threads_per_sm / threads_per_block
+        };
+        let by_smem = if smem_per_block == 0 {
+            by_hw
+        } else {
+            self.smem_per_sm / smem_per_block
+        };
+        by_hw.min(by_threads).min(by_smem).max(1)
+    }
+
+    /// Concurrent blocks device-wide for a kernel configuration.
+    pub fn concurrent_blocks(&self, threads_per_block: usize, smem_per_block: usize) -> usize {
+        self.sms * self.blocks_per_sm(threads_per_block, smem_per_block)
+    }
+
+    /// Shared-memory throughput per SM, bytes/s (16 banks x 4 B / cycle).
+    pub fn smem_bw_per_sm(&self) -> f64 {
+        self.smem_banks as f64 * 4.0 * self.sm_clock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_matches_paper_memcpy() {
+        let d = Device::tesla_c1060();
+        assert!((d.sustained_bw() / 1e9 - 77.82).abs() < 0.01);
+    }
+
+    #[test]
+    fn partition_mapping() {
+        let d = Device::tesla_c1060();
+        assert_eq!(d.partition_of(0), 0);
+        assert_eq!(d.partition_of(255), 0);
+        assert_eq!(d.partition_of(256), 1);
+        assert_eq!(d.partition_of(256 * 8), 0); // wraps after 2 KiB
+        assert_eq!(d.partition_of(256 * 9 + 5), 1);
+    }
+
+    #[test]
+    fn residency_limits() {
+        let d = Device::tesla_c1060();
+        assert_eq!(d.blocks_per_sm(256, 0), 4); // 1024 threads / 256
+        assert_eq!(d.blocks_per_sm(64, 0), 8); // hw cap
+        assert_eq!(d.blocks_per_sm(64, 8 * 1024), 2); // smem cap
+        assert_eq!(d.blocks_per_sm(2048, 0), 1); // never zero
+        assert_eq!(d.concurrent_blocks(256, 0), 120);
+    }
+}

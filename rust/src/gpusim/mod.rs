@@ -1,0 +1,36 @@
+//! `gpusim` — a first-principles Tesla C1060 memory-system simulator.
+//!
+//! Every bandwidth number in the paper is a consequence of five
+//! mechanisms of the GT200 memory system:
+//!
+//! 1. **Coalescing** (CC 1.3): each half-warp's global accesses are
+//!    serviced by 32/64/128-byte segment transactions ([`coalesce`]).
+//! 2. **DRAM burst granularity**: a transaction costs at least one 64-byte
+//!    burst, so scattered small transactions waste bandwidth.
+//! 3. **Partition camping**: global memory is striped across 8 partitions
+//!    in 256-byte units; concurrent blocks hitting one partition serialize
+//!    ([`engine`]).
+//! 4. **Shared memory banking**: 16 banks, conflicts serialize half-warp
+//!    smem accesses ([`sharedmem`]).
+//! 5. **Texture cache**: cached, 2D-local reads that bypass coalescing
+//!    rules at smaller granularity ([`texture`]).
+//!
+//! Kernels are described by exact per-block half-warp access traces
+//! (the [`access::GpuKernel`] trait, implemented in `crate::kernels`);
+//! the engine schedules blocks in waves over 30 SMs and integrates the
+//! mechanisms above into a wall-clock estimate. The single calibration
+//! input is the paper's own device-to-device memcpy efficiency
+//! (77.8 of 102.4 GB/s — [`device::Device::dram_efficiency`]); everything
+//! else is architecture, so table *shapes* (who wins, by what factor)
+//! emerge rather than being fit per-experiment.
+
+pub mod access;
+pub mod coalesce;
+pub mod device;
+pub mod engine;
+pub mod sharedmem;
+pub mod texture;
+
+pub use access::{AccessKind, GpuKernel, HalfWarpAccess, LaunchConfig};
+pub use device::Device;
+pub use engine::{simulate, SimReport};

@@ -1,0 +1,118 @@
+//! Shared-memory bank-conflict model (CC 1.x: 16 banks, 4 bytes wide).
+//!
+//! A half-warp's shared-memory access is serviced in as many passes as
+//! the maximum number of distinct addresses mapped to one bank. The
+//! staged-transpose kernels read tile *columns* out of shared memory:
+//! with a 32-float row pitch every column element lands in the same bank
+//! (16-way conflict); the paper's kernels pad the pitch by one element to
+//! spread the column across all banks (conflict-free). Both variants are
+//! modeled so the benches can show why the padding matters.
+
+use super::device::Device;
+
+/// Shared-memory activity of one block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SmemProfile {
+    /// Half-warp shared-memory accesses per block (load + store).
+    pub halfwarp_accesses: u64,
+    /// Bank-conflict serialization degree (1 = conflict-free, 16 = worst).
+    pub conflict_degree: u32,
+}
+
+impl SmemProfile {
+    pub fn none() -> SmemProfile {
+        SmemProfile {
+            halfwarp_accesses: 0,
+            conflict_degree: 1,
+        }
+    }
+
+    pub fn new(halfwarp_accesses: u64, conflict_degree: u32) -> SmemProfile {
+        assert!((1..=16).contains(&conflict_degree));
+        SmemProfile {
+            halfwarp_accesses,
+            conflict_degree,
+        }
+    }
+
+    /// SM cycles this block spends on shared memory (one half-warp access
+    /// is one cycle per conflict pass on CC 1.x).
+    pub fn block_cycles(&self) -> f64 {
+        self.halfwarp_accesses as f64 * self.conflict_degree as f64
+    }
+
+    /// Seconds of shared-memory time for `blocks` blocks spread over the
+    /// device's SMs (each SM serializes its own blocks' smem passes).
+    pub fn device_time(&self, dev: &Device, blocks: usize) -> f64 {
+        if self.halfwarp_accesses == 0 || blocks == 0 {
+            return 0.0;
+        }
+        let blocks_per_sm = (blocks + dev.sms - 1) / dev.sms;
+        blocks_per_sm as f64 * self.block_cycles() / dev.sm_clock
+    }
+}
+
+/// Conflict degree of a strided half-warp access to shared memory:
+/// `stride_words` between consecutive threads' word addresses.
+pub fn conflict_degree(stride_words: usize, banks: usize) -> u32 {
+    if stride_words == 0 {
+        // Broadcast: CC 1.x serves same-word reads in one pass.
+        return 1;
+    }
+    let g = gcd(stride_words, banks);
+    g as u32
+}
+
+fn gcd(a: usize, b: usize) -> usize {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stride_conflicts() {
+        // Unit stride: conflict-free.
+        assert_eq!(conflict_degree(1, 16), 1);
+        // Stride 32 words (unpadded 32-wide tile column): all 16 threads
+        // hit the same bank -> 16-way.
+        assert_eq!(conflict_degree(32, 16), 16);
+        // Padded pitch 33: conflict-free.
+        assert_eq!(conflict_degree(33, 16), 1);
+        // Stride 2: pairs collide -> 2-way.
+        assert_eq!(conflict_degree(2, 16), 2);
+        // Broadcast.
+        assert_eq!(conflict_degree(0, 16), 1);
+    }
+
+    #[test]
+    fn block_cycles_scale_with_conflicts() {
+        let free = SmemProfile::new(128, 1);
+        let conflicted = SmemProfile::new(128, 16);
+        assert_eq!(free.block_cycles(), 128.0);
+        assert_eq!(conflicted.block_cycles(), 2048.0);
+    }
+
+    #[test]
+    fn device_time_spreads_over_sms() {
+        let dev = Device::tesla_c1060();
+        let p = SmemProfile::new(1000, 1);
+        // 30 blocks on 30 SMs: one block's worth of cycles.
+        let t30 = p.device_time(&dev, 30);
+        assert!((t30 - 1000.0 / dev.sm_clock).abs() < 1e-12);
+        // 60 blocks: two serialized per SM.
+        assert!((p.device_time(&dev, 60) - 2.0 * t30).abs() < 1e-12);
+        assert_eq!(SmemProfile::none().device_time(&dev, 1000), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_bad_conflict_degree() {
+        SmemProfile::new(1, 0);
+    }
+}

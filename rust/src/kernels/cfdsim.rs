@@ -1,0 +1,124 @@
+//! CFD application model for the simulator (conclusion's demo app).
+//!
+//! One lid-driven-cavity time step decomposes into the library's kernels
+//! exactly as `python/compile/cfd.py` composes them: `jacobi_iters`
+//! Jacobi sweeps (a radius-1 stencil + a 3-stream pointwise pass), the
+//! velocity derivatives (2 stencils + streams), and the transport update
+//! (3 stencils + a 5-stream pointwise pass). The simulated step time is
+//! the sum of the constituent kernel times; overall bandwidth is the
+//! useful bytes per step over that time — the "56 GB/s overall" figure.
+
+use super::copy::MemcpyKernel;
+use super::stencil::{MemPath, StencilKernel};
+use crate::gpusim::{simulate, Device, SimReport};
+
+/// Simulated breakdown of one cavity step on the C1060.
+#[derive(Debug, Clone)]
+pub struct CavitySim {
+    pub n: usize,
+    pub jacobi_iters: usize,
+    pub time_s: f64,
+    pub useful_bytes: u64,
+    pub bandwidth_gbs: f64,
+    pub stencil_time_s: f64,
+    pub stream_time_s: f64,
+}
+
+/// Pointwise multi-field pass modeled as a memcpy-shaped stream moving
+/// `fields` grid-sized arrays (read+write already counted by Memcpy's 2x).
+fn stream_time(n: usize, fields: usize, dev: &Device) -> (f64, u64) {
+    let elems = n * n * fields / 2; // memcpy counts 2 passes
+    let r = simulate(&MemcpyKernel::f32(elems.max(1)), dev);
+    (r.time_s, r.useful_bytes)
+}
+
+/// Simulate one full cavity time step.
+pub fn simulate_cavity_step(n: usize, jacobi_iters: usize, dev: &Device) -> CavitySim {
+    let stencil = |_tag: &str| -> SimReport {
+        simulate(&StencilKernel::fd(n, n, 1, MemPath::Global), dev)
+    };
+
+    let mut time = 0.0;
+    let mut useful = 0u64;
+    let mut stencil_time = 0.0;
+    let mut stream_time_total = 0.0;
+
+    // Jacobi sweeps: stencil(psi) + pointwise combine psi' = f(nbsum, omega)
+    // (read nbsum + omega, write psi = 3 field passes -> handled as one
+    // read+write stream of 1.5 fields).
+    let jac_stencil = stencil("jacobi");
+    let (jac_stream_t, jac_stream_b) = stream_time(n, 3, dev);
+    for _ in 0..jacobi_iters {
+        time += jac_stencil.time_s + jac_stream_t;
+        useful += jac_stencil.useful_bytes + jac_stream_b;
+        stencil_time += jac_stencil.time_s;
+        stream_time_total += jac_stream_t;
+    }
+
+    // Velocities: 2 derivative stencils + masking streams (4 fields).
+    let du = stencil("ddy");
+    let dv = stencil("ddx");
+    let (vel_stream_t, vel_stream_b) = stream_time(n, 4, dev);
+    time += du.time_s + dv.time_s + vel_stream_t;
+    useful += du.useful_bytes + dv.useful_bytes + vel_stream_b;
+    stencil_time += du.time_s + dv.time_s;
+    stream_time_total += vel_stream_t;
+
+    // Transport: 3 stencils over omega + 5-field pointwise update.
+    for tag in ["wx", "wy", "lap"] {
+        let s = stencil(tag);
+        time += s.time_s;
+        useful += s.useful_bytes;
+        stencil_time += s.time_s;
+    }
+    let (tr_stream_t, tr_stream_b) = stream_time(n, 5, dev);
+    time += tr_stream_t;
+    useful += tr_stream_b;
+    stream_time_total += tr_stream_t;
+
+    CavitySim {
+        n,
+        jacobi_iters,
+        time_s: time,
+        useful_bytes: useful,
+        bandwidth_gbs: useful as f64 / time / 1e9,
+        stencil_time_s: stencil_time,
+        stream_time_s: stream_time_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overall_bandwidth_in_papers_band() {
+        // Paper conclusion: CFD app utilizes ~56 GB/s overall (between the
+        // stencil's ~51 and the streaming ceiling ~77).
+        let dev = Device::tesla_c1060();
+        let sim = simulate_cavity_step(2048, 20, &dev);
+        assert!(
+            sim.bandwidth_gbs > 45.0 && sim.bandwidth_gbs < 70.0,
+            "cavity overall {:.1} GB/s",
+            sim.bandwidth_gbs
+        );
+        // Stencils dominate the step.
+        assert!(sim.stencil_time_s > sim.stream_time_s);
+    }
+
+    #[test]
+    fn small_grids_are_overhead_bound() {
+        let dev = Device::tesla_c1060();
+        let small = simulate_cavity_step(128, 20, &dev);
+        let large = simulate_cavity_step(2048, 20, &dev);
+        assert!(small.bandwidth_gbs < large.bandwidth_gbs);
+    }
+
+    #[test]
+    fn time_scales_with_jacobi_iters() {
+        let dev = Device::tesla_c1060();
+        let a = simulate_cavity_step(1024, 10, &dev);
+        let b = simulate_cavity_step(1024, 40, &dev);
+        assert!(b.time_s > 2.5 * a.time_s && b.time_s < 4.5 * a.time_s);
+    }
+}

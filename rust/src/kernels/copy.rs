@@ -1,0 +1,278 @@
+//! §III.A basic read/write kernel descriptors (Fig 1 workloads).
+
+use super::{align_up, emit_run};
+use crate::gpusim::{AccessKind, Device, GpuKernel, HalfWarpAccess, LaunchConfig};
+
+/// Elements per block: 256 threads × 4 elements (vector computing model).
+pub const BLOCK_ELEMS: usize = 1024;
+pub const BLOCK_THREADS: usize = 256;
+
+/// The `cudaMemcpy` reference: perfectly coalesced read + write streams.
+#[derive(Debug, Clone)]
+pub struct MemcpyKernel {
+    pub elems: usize,
+    pub elem_bytes: u32,
+}
+
+impl MemcpyKernel {
+    pub fn f32(elems: usize) -> MemcpyKernel {
+        MemcpyKernel { elems, elem_bytes: 4 }
+    }
+
+    fn out_base(&self) -> u64 {
+        align_up(self.elems as u64 * self.elem_bytes as u64)
+    }
+}
+
+impl GpuKernel for MemcpyKernel {
+    fn name(&self) -> String {
+        format!("memcpy_{}", self.elems)
+    }
+
+    fn launch(&self) -> LaunchConfig {
+        LaunchConfig {
+            grid_blocks: (self.elems + BLOCK_ELEMS - 1) / BLOCK_ELEMS,
+            threads_per_block: BLOCK_THREADS,
+            smem_per_block: 0,
+        }
+    }
+
+    fn block_accesses(&self, block: usize, sink: &mut dyn FnMut(HalfWarpAccess)) {
+        let start = block * BLOCK_ELEMS;
+        let count = BLOCK_ELEMS.min(self.elems - start);
+        let eb = self.elem_bytes as u64;
+        emit_run(AccessKind::GlobalRead, start as u64 * eb, count, self.elem_bytes, sink);
+        emit_run(
+            AccessKind::GlobalWrite,
+            self.out_base() + start as u64 * eb,
+            count,
+            self.elem_bytes,
+            sink,
+        );
+    }
+
+    fn useful_bytes(&self) -> u64 {
+        2 * self.elems as u64 * self.elem_bytes as u64
+    }
+}
+
+/// Access patterns of the templatized read kernel (paper §III.A).
+#[derive(Debug, Clone)]
+pub enum ReadPattern {
+    /// Contiguous range starting at `base` elements.
+    Range { base: usize },
+    /// Every `stride`-th element.
+    Strided { stride: usize },
+    /// Pseudo-random indices (modeled as uniformly scattered).
+    Gather { seed: u64 },
+}
+
+/// Read kernel: reads `count` elements via `pattern`, writes them out
+/// contiguously (read + write streams, like Fig 1's read kernel).
+#[derive(Debug, Clone)]
+pub struct ReadWriteKernel {
+    pub count: usize,
+    pub pattern: ReadPattern,
+    pub elem_bytes: u32,
+    /// Size of the source buffer in elements (gather index domain).
+    pub src_elems: usize,
+}
+
+impl ReadWriteKernel {
+    pub fn range_f32(count: usize, base: usize) -> ReadWriteKernel {
+        ReadWriteKernel {
+            count,
+            pattern: ReadPattern::Range { base },
+            elem_bytes: 4,
+            src_elems: base + count,
+        }
+    }
+
+    pub fn strided_f32(count: usize, stride: usize) -> ReadWriteKernel {
+        ReadWriteKernel {
+            count,
+            pattern: ReadPattern::Strided { stride },
+            elem_bytes: 4,
+            src_elems: count * stride,
+        }
+    }
+
+    pub fn gather_f32(count: usize, src_elems: usize, seed: u64) -> ReadWriteKernel {
+        ReadWriteKernel {
+            count,
+            pattern: ReadPattern::Gather { seed },
+            elem_bytes: 4,
+            src_elems,
+        }
+    }
+
+    fn out_base(&self) -> u64 {
+        align_up(self.src_elems as u64 * self.elem_bytes as u64)
+    }
+}
+
+impl GpuKernel for ReadWriteKernel {
+    fn name(&self) -> String {
+        let p = match &self.pattern {
+            ReadPattern::Range { .. } => "range".to_string(),
+            ReadPattern::Strided { stride } => format!("strided{stride}"),
+            ReadPattern::Gather { .. } => "gather".to_string(),
+        };
+        format!("read_{}_{}", p, self.count)
+    }
+
+    fn launch(&self) -> LaunchConfig {
+        LaunchConfig {
+            grid_blocks: (self.count + BLOCK_ELEMS - 1) / BLOCK_ELEMS,
+            threads_per_block: BLOCK_THREADS,
+            smem_per_block: 0,
+        }
+    }
+
+    fn block_accesses(&self, block: usize, sink: &mut dyn FnMut(HalfWarpAccess)) {
+        let start = block * BLOCK_ELEMS;
+        let count = BLOCK_ELEMS.min(self.count - start);
+        let eb = self.elem_bytes as u64;
+        match &self.pattern {
+            ReadPattern::Range { base } => {
+                emit_run(
+                    AccessKind::GlobalRead,
+                    (base + start) as u64 * eb,
+                    count,
+                    self.elem_bytes,
+                    sink,
+                );
+            }
+            ReadPattern::Strided { stride } => {
+                let mut off = 0usize;
+                while off < count {
+                    let lanes = (count - off).min(16) as u8;
+                    sink(
+                        HalfWarpAccess::strided(
+                            AccessKind::GlobalRead,
+                            ((start + off) * stride) as u64 * eb,
+                            (*stride as i64) * eb as i64,
+                            self.elem_bytes,
+                        )
+                        .with_lanes(lanes),
+                    );
+                    off += 16;
+                }
+            }
+            ReadPattern::Gather { seed } => {
+                // Scattered indices: model each lane hitting an arbitrary
+                // element; expressible exactly as 16 single-lane accesses
+                // derived from a per-halfwarp hash.
+                let mut off = 0usize;
+                while off < count {
+                    let lanes = (count - off).min(16);
+                    for l in 0..lanes {
+                        let h = hash(seed ^ ((start + off + l) as u64));
+                        let idx = (h % self.src_elems as u64) * eb;
+                        sink(
+                            HalfWarpAccess::contiguous(AccessKind::GlobalRead, idx, self.elem_bytes)
+                                .with_lanes(1),
+                        );
+                    }
+                    off += 16;
+                }
+            }
+        }
+        emit_run(
+            AccessKind::GlobalWrite,
+            self.out_base() + start as u64 * eb,
+            count,
+            self.elem_bytes,
+            sink,
+        );
+    }
+
+    fn useful_bytes(&self) -> u64 {
+        2 * self.count as u64 * self.elem_bytes as u64
+    }
+
+    fn extra_block_cycles(&self, _dev: &Device) -> f64 {
+        match self.pattern {
+            // Index fetch + dependent address arithmetic per gather lane.
+            ReadPattern::Gather { .. } => BLOCK_ELEMS as f64 * 2.0,
+            _ => 0.0,
+        }
+    }
+}
+
+fn hash(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{simulate, Device};
+
+    #[test]
+    fn memcpy_reaches_calibrated_ceiling() {
+        let dev = Device::tesla_c1060();
+        let k = MemcpyKernel::f32(1 << 24); // 64 MiB
+        let r = simulate(&k, &dev);
+        // The whole calibration: large memcpy ≈ 77.8 GB/s.
+        assert!(
+            (r.bandwidth_gbs - 77.8).abs() < 2.5,
+            "memcpy off ceiling: {}",
+            r.summary()
+        );
+    }
+
+    #[test]
+    fn fig1_ramp_small_to_large() {
+        let dev = Device::tesla_c1060();
+        let small = simulate(&MemcpyKernel::f32(1 << 12), &dev);
+        let mid = simulate(&MemcpyKernel::f32(1 << 18), &dev);
+        let large = simulate(&MemcpyKernel::f32(1 << 24), &dev);
+        assert!(small.bandwidth_gbs < mid.bandwidth_gbs);
+        assert!(mid.bandwidth_gbs < large.bandwidth_gbs);
+        assert!(small.bandwidth_gbs < 20.0);
+    }
+
+    #[test]
+    fn range_read_within_5pct_of_memcpy() {
+        // Paper: read kernel consistently > 95% of memcpy.
+        let dev = Device::tesla_c1060();
+        let m = simulate(&MemcpyKernel::f32(1 << 22), &dev);
+        let r = simulate(&ReadWriteKernel::range_f32(1 << 22, 4096), &dev);
+        assert!(
+            r.bandwidth_gbs > 0.95 * m.bandwidth_gbs,
+            "read {} vs memcpy {}",
+            r.summary(),
+            m.summary()
+        );
+    }
+
+    #[test]
+    fn strided_read_degrades_with_stride() {
+        let dev = Device::tesla_c1060();
+        let s1 = simulate(&ReadWriteKernel::strided_f32(1 << 20, 1), &dev);
+        let s2 = simulate(&ReadWriteKernel::strided_f32(1 << 20, 2), &dev);
+        let s16 = simulate(&ReadWriteKernel::strided_f32(1 << 20, 16), &dev);
+        assert!(s2.bandwidth_gbs < s1.bandwidth_gbs);
+        assert!(s16.bandwidth_gbs < 0.5 * s2.bandwidth_gbs);
+        assert!(s16.coalescing_efficiency < 0.2);
+    }
+
+    #[test]
+    fn gather_is_worst() {
+        let dev = Device::tesla_c1060();
+        let g = simulate(&ReadWriteKernel::gather_f32(1 << 20, 1 << 24, 42), &dev);
+        let s = simulate(&ReadWriteKernel::strided_f32(1 << 20, 2), &dev);
+        assert!(g.bandwidth_gbs < s.bandwidth_gbs, "{} vs {}", g.summary(), s.summary());
+    }
+
+    #[test]
+    fn useful_bytes_accounting() {
+        let k = MemcpyKernel::f32(1000);
+        assert_eq!(k.useful_bytes(), 8000);
+        let lc = k.launch();
+        assert_eq!(lc.grid_blocks, 1);
+    }
+}

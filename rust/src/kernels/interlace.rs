@@ -1,0 +1,245 @@
+//! §III.C interlace/de-interlace kernel descriptors (Table 3).
+//!
+//! Each block services a 64-element chunk of each of the `n` arrays
+//! (the paper's 8×8 blocks with n·64 threads, shared memory of n·64
+//! elements as the staging buffer). All global streams are coalesced;
+//! what moves the numbers across Table 3's rows is (a) the n input
+//! streams' base addresses aliasing onto the same DRAM partition when
+//! the per-array allocation stride is a multiple of the 2 KiB partition
+//! stripe, and (b) shared-memory bank conflicts at even n.
+
+use super::{align_up, emit_run};
+use crate::gpusim::sharedmem::{conflict_degree, SmemProfile};
+use crate::gpusim::{AccessKind, GpuKernel, HalfWarpAccess, LaunchConfig};
+
+/// Elements of each array handled per block (paper: 8x8 = 64).
+pub const CHUNK: usize = 64;
+
+/// Merge `n` equal-length arrays into one interleaved array.
+#[derive(Debug, Clone)]
+pub struct InterlaceKernel {
+    pub n: usize,
+    /// Elements per array.
+    pub len: usize,
+    pub elem_bytes: u32,
+}
+
+impl InterlaceKernel {
+    pub fn f32(n: usize, len: usize) -> InterlaceKernel {
+        InterlaceKernel {
+            n,
+            len,
+            elem_bytes: 4,
+        }
+    }
+
+    /// Base address of array `j` (contiguous 2 KiB-aligned allocations).
+    fn array_base(&self, j: usize) -> u64 {
+        j as u64 * align_up(self.len as u64 * self.elem_bytes as u64)
+    }
+
+    fn out_base(&self) -> u64 {
+        self.array_base(self.n)
+    }
+
+    fn smem_conflicts(&self) -> u32 {
+        // Staging writes into the (CHUNK, n) buffer walk stride n words.
+        conflict_degree(self.n, 16)
+    }
+}
+
+impl GpuKernel for InterlaceKernel {
+    fn name(&self) -> String {
+        format!("interlace_n{}_{}", self.n, self.len)
+    }
+
+    fn launch(&self) -> LaunchConfig {
+        LaunchConfig {
+            grid_blocks: (self.len + CHUNK - 1) / CHUNK,
+            threads_per_block: self.n * CHUNK,
+            smem_per_block: self.n * CHUNK * self.elem_bytes as usize,
+        }
+    }
+
+    fn block_accesses(&self, block: usize, sink: &mut dyn FnMut(HalfWarpAccess)) {
+        let eb = self.elem_bytes as u64;
+        let start = block * CHUNK;
+        let count = CHUNK.min(self.len - start);
+        for j in 0..self.n {
+            emit_run(
+                AccessKind::GlobalRead,
+                self.array_base(j) + start as u64 * eb,
+                count,
+                self.elem_bytes,
+                sink,
+            );
+        }
+        emit_run(
+            AccessKind::GlobalWrite,
+            self.out_base() + (start * self.n) as u64 * eb,
+            count * self.n,
+            self.elem_bytes,
+            sink,
+        );
+    }
+
+    fn useful_bytes(&self) -> u64 {
+        2 * (self.n * self.len) as u64 * self.elem_bytes as u64
+    }
+
+    fn smem_profile(&self) -> SmemProfile {
+        // Each element staged in and out: 2*n*CHUNK/16 half-warp accesses.
+        SmemProfile::new(2 * (self.n * CHUNK / 16) as u64, self.smem_conflicts())
+    }
+}
+
+/// Split one interleaved array into `n` arrays (mirror image).
+#[derive(Debug, Clone)]
+pub struct DeinterlaceKernel {
+    pub n: usize,
+    /// Elements per *output* array.
+    pub len: usize,
+    pub elem_bytes: u32,
+}
+
+impl DeinterlaceKernel {
+    pub fn f32(n: usize, len: usize) -> DeinterlaceKernel {
+        DeinterlaceKernel {
+            n,
+            len,
+            elem_bytes: 4,
+        }
+    }
+
+    fn in_bytes(&self) -> u64 {
+        (self.n * self.len) as u64 * self.elem_bytes as u64
+    }
+
+    fn out_base(&self, j: usize) -> u64 {
+        align_up(self.in_bytes())
+            + j as u64 * align_up(self.len as u64 * self.elem_bytes as u64)
+    }
+}
+
+impl GpuKernel for DeinterlaceKernel {
+    fn name(&self) -> String {
+        format!("deinterlace_n{}_{}", self.n, self.len)
+    }
+
+    fn launch(&self) -> LaunchConfig {
+        LaunchConfig {
+            grid_blocks: (self.len + CHUNK - 1) / CHUNK,
+            threads_per_block: self.n * CHUNK,
+            smem_per_block: self.n * CHUNK * self.elem_bytes as usize,
+        }
+    }
+
+    fn block_accesses(&self, block: usize, sink: &mut dyn FnMut(HalfWarpAccess)) {
+        let eb = self.elem_bytes as u64;
+        let start = block * CHUNK;
+        let count = CHUNK.min(self.len - start);
+        emit_run(
+            AccessKind::GlobalRead,
+            (start * self.n) as u64 * eb,
+            count * self.n,
+            self.elem_bytes,
+            sink,
+        );
+        for j in 0..self.n {
+            emit_run(
+                AccessKind::GlobalWrite,
+                self.out_base(j) + start as u64 * eb,
+                count,
+                self.elem_bytes,
+                sink,
+            );
+        }
+    }
+
+    fn useful_bytes(&self) -> u64 {
+        2 * (self.n * self.len) as u64 * self.elem_bytes as u64
+    }
+
+    fn smem_profile(&self) -> SmemProfile {
+        SmemProfile::new(
+            2 * (self.n * CHUNK / 16) as u64,
+            conflict_degree(self.n, 16),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{simulate, Device};
+
+    /// Table-3 row sizes: total GB over n arrays of f32.
+    fn table3_len(n: usize, total_gb: f64) -> usize {
+        (total_gb * 1e9 / n as f64 / 4.0) as usize
+    }
+
+    #[test]
+    fn accounting() {
+        let k = InterlaceKernel::f32(4, 1000);
+        assert_eq!(k.useful_bytes(), 2 * 4 * 1000 * 4);
+        let mut useful = 0u64;
+        for b in 0..k.launch().grid_blocks {
+            k.block_accesses(b, &mut |hw| useful += hw.useful_bytes());
+        }
+        assert_eq!(useful, k.useful_bytes());
+        let d = DeinterlaceKernel::f32(4, 1000);
+        let mut useful = 0u64;
+        for b in 0..d.launch().grid_blocks {
+            d.block_accesses(b, &mut |hw| useful += hw.useful_bytes());
+        }
+        assert_eq!(useful, d.useful_bytes());
+    }
+
+    #[test]
+    fn table3_band() {
+        // Paper Table 3: 58-74 GB/s across n=4..9 at 0.27-0.62 GB.
+        let dev = Device::tesla_c1060();
+        for (n, gb) in [(4, 0.27), (5, 0.34), (6, 0.41), (7, 0.48), (8, 0.55), (9, 0.62)] {
+            // Use a smaller but structurally identical size to keep the
+            // test fast (full sizes run in the bench).
+            let len = table3_len(n, gb) / 16;
+            let i = simulate(&InterlaceKernel::f32(n, len), &dev);
+            let d = simulate(&DeinterlaceKernel::f32(n, len), &dev);
+            assert!(
+                i.bandwidth_gbs > 50.0 && i.bandwidth_gbs < 78.0,
+                "interlace n={n}: {}",
+                i.summary()
+            );
+            assert!(
+                d.bandwidth_gbs > 50.0 && d.bandwidth_gbs < 78.0,
+                "deinterlace n={n}: {}",
+                d.summary()
+            );
+        }
+    }
+
+    #[test]
+    fn smem_conflicts_follow_parity() {
+        assert_eq!(InterlaceKernel::f32(8, 100).smem_conflicts(), 8);
+        assert_eq!(InterlaceKernel::f32(4, 100).smem_conflicts(), 4);
+        assert_eq!(InterlaceKernel::f32(5, 100).smem_conflicts(), 1);
+        assert_eq!(InterlaceKernel::f32(9, 100).smem_conflicts(), 1);
+    }
+
+    #[test]
+    fn even_n_bank_conflicts_show_in_smem_time() {
+        // n=8 staging has 8-way bank conflicts (stride-8 smem walk); n=9
+        // is conflict-free. The paper's Table 3 dips at n=8 (58.6 GB/s vs
+        // ~71 around it); in the model the mechanism shows as shared-
+        // memory pass time, though DRAM still hides most of it.
+        let dev = Device::tesla_c1060();
+        let r8 = simulate(&InterlaceKernel::f32(8, 1 << 20), &dev);
+        let r9 = simulate(&InterlaceKernel::f32(9, 1 << 20), &dev);
+        let per_wave8 = r8.t_smem / r8.waves as f64;
+        let per_wave9 = r9.t_smem / r9.waves as f64;
+        assert!(
+            per_wave8 > 2.0 * per_wave9,
+            "n=8 smem/wave {per_wave8:.2e} vs n=9 {per_wave9:.2e}"
+        );
+    }
+}

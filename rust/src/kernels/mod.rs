@@ -1,0 +1,77 @@
+//! Kernel descriptors: exact access-trace generators for the simulator.
+//!
+//! Each paper kernel family has an *optimized* descriptor reproducing the
+//! paper's data-movement strategy (coalesced plane runs, shared-memory
+//! staging, diagonal block order) and, where the paper's tuning matters, a
+//! *naive baseline* (direct gather/scatter, no staging, no diagonal) so
+//! the benches can show why the techniques win.
+//!
+//! Buffer layout convention: the input buffer starts at address 0; each
+//! further buffer starts at the previous end rounded up to the partition
+//! stripe (cudaMalloc-style alignment — which is exactly what makes
+//! partition camping reproducible).
+
+pub mod cfdsim;
+pub mod copy;
+pub mod interlace;
+pub mod permute;
+pub mod stencil;
+
+pub use copy::{MemcpyKernel, ReadPattern, ReadWriteKernel};
+pub use interlace::{DeinterlaceKernel, InterlaceKernel};
+pub use permute::{NaivePermuteKernel, TiledPermuteKernel};
+pub use stencil::{MemPath, StencilKernel};
+
+/// Round `addr` up to the next 2 KiB partition-stripe boundary
+/// (8 partitions × 256 B) — the allocator granularity we model.
+pub fn align_up(addr: u64) -> u64 {
+    (addr + 2047) & !2047
+}
+
+/// Emit contiguous half-warp accesses covering `elems` elements of
+/// `elem_bytes` starting at `base` (partial trailing lanes included).
+pub fn emit_run(
+    kind: crate::gpusim::AccessKind,
+    base: u64,
+    elems: usize,
+    elem_bytes: u32,
+    sink: &mut dyn FnMut(crate::gpusim::HalfWarpAccess),
+) {
+    use crate::gpusim::HalfWarpAccess;
+    let mut off = 0usize;
+    while off < elems {
+        let lanes = (elems - off).min(16) as u8;
+        sink(
+            HalfWarpAccess::contiguous(kind, base + (off as u64) * elem_bytes as u64, elem_bytes)
+                .with_lanes(lanes),
+        );
+        off += 16;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{AccessKind, HalfWarpAccess};
+
+    #[test]
+    fn align_up_works() {
+        assert_eq!(align_up(0), 0);
+        assert_eq!(align_up(1), 2048);
+        assert_eq!(align_up(2048), 2048);
+        assert_eq!(align_up(2049), 4096);
+    }
+
+    #[test]
+    fn emit_run_covers_exactly() {
+        let mut hws: Vec<HalfWarpAccess> = Vec::new();
+        emit_run(AccessKind::GlobalRead, 100, 35, 4, &mut |h| hws.push(h));
+        assert_eq!(hws.len(), 3);
+        assert_eq!(hws[0].lanes, 16);
+        assert_eq!(hws[1].lanes, 16);
+        assert_eq!(hws[2].lanes, 3);
+        let useful: u64 = hws.iter().map(|h| h.useful_bytes()).sum();
+        assert_eq!(useful, 35 * 4);
+        assert_eq!(hws[1].base, 100 + 64);
+    }
+}

@@ -1,0 +1,314 @@
+//! §III.D generic 2D stencil kernel descriptors (Fig 2, Table 4).
+//!
+//! A 32×32 output tile per block (32×8 threads, 4 rows per thread); the
+//! block loads a (32+2r)×(32+2r) window — the tile plus the *apron* of
+//! ghost values. Interior rows are coalesced but misaligned by `r`
+//! elements (the paper's misaligned-load penalty falls out of the CC 1.3
+//! coalescer); the loads of rows above/below the tile are redundant work
+//! shared with neighboring blocks; and the designated-thread apron logic
+//! costs warp divergence. Table 4's variants move the apron (or all)
+//! loads onto the texture path.
+
+use super::{align_up, emit_run};
+use crate::gpusim::sharedmem::SmemProfile;
+use crate::gpusim::texture::{apron_hit_rate, full_texture_hit_rate};
+use crate::gpusim::{AccessKind, Device, GpuKernel, HalfWarpAccess, LaunchConfig};
+
+pub const TILE: usize = 32;
+
+/// Memory path of the stencil loads (Table 4 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemPath {
+    /// Everything through plain global loads.
+    Global,
+    /// All loads through a 1D (linear-memory) texture.
+    Tex1d,
+    /// Interior via global, apron via 1D texture.
+    HybridTex1d,
+    /// All loads through a 2D (CUDA-array) texture.
+    Tex2d,
+    /// Interior via global, apron via 2D texture.
+    Tex2dHybrid,
+}
+
+impl MemPath {
+    pub fn label(self) -> &'static str {
+        match self {
+            MemPath::Global => "global",
+            MemPath::Tex1d => "tex1d",
+            MemPath::HybridTex1d => "hybrid_tex1d",
+            MemPath::Tex2d => "tex2d",
+            MemPath::Tex2dHybrid => "hybrid_tex2d",
+        }
+    }
+
+    fn all_texture(self) -> bool {
+        matches!(self, MemPath::Tex1d | MemPath::Tex2d)
+    }
+
+    fn apron_texture(self) -> bool {
+        !matches!(self, MemPath::Global)
+    }
+
+    fn two_d(self) -> bool {
+        matches!(self, MemPath::Tex2d | MemPath::Tex2dHybrid)
+    }
+}
+
+/// Generic 2D stencil kernel over an HxW f32 grid.
+#[derive(Debug, Clone)]
+pub struct StencilKernel {
+    pub h: usize,
+    pub w: usize,
+    /// Stencil radius (paper's FD order I..IV = radius 1..4).
+    pub radius: usize,
+    pub path: MemPath,
+    pub elem_bytes: u32,
+}
+
+impl StencilKernel {
+    pub fn fd(h: usize, w: usize, order: usize, path: MemPath) -> StencilKernel {
+        StencilKernel {
+            h,
+            w,
+            radius: order,
+            path,
+            elem_bytes: 4,
+        }
+    }
+
+    fn row_bytes(&self) -> u64 {
+        self.w as u64 * self.elem_bytes as u64
+    }
+
+    fn out_base(&self) -> u64 {
+        align_up(self.h as u64 * self.row_bytes())
+    }
+
+    fn grid_dims(&self) -> (usize, usize) {
+        (
+            (self.h + TILE - 1) / TILE,
+            (self.w + TILE - 1) / TILE,
+        )
+    }
+
+    fn kind_for(&self, is_apron: bool) -> AccessKind {
+        let tex = if is_apron {
+            self.path.apron_texture()
+        } else {
+            self.path.all_texture()
+        };
+        if tex {
+            AccessKind::TextureRead {
+                two_d: self.path.two_d(),
+            }
+        } else {
+            AccessKind::GlobalRead
+        }
+    }
+}
+
+impl GpuKernel for StencilKernel {
+    fn name(&self) -> String {
+        format!(
+            "stencil_r{}_{}x{}_{}",
+            self.radius,
+            self.h,
+            self.w,
+            self.path.label()
+        )
+    }
+
+    fn launch(&self) -> LaunchConfig {
+        let (gh, gw) = self.grid_dims();
+        let side = TILE + 2 * self.radius;
+        LaunchConfig {
+            grid_blocks: gh * gw,
+            threads_per_block: 32 * 8,
+            smem_per_block: side * side * self.elem_bytes as usize,
+        }
+    }
+
+    fn block_accesses(&self, block: usize, sink: &mut dyn FnMut(HalfWarpAccess)) {
+        let (gh, gw) = self.grid_dims();
+        let (bi, bj) = (block / gw, block % gw);
+        debug_assert!(bi < gh);
+        let eb = self.elem_bytes as u64;
+        let r = self.radius as i64;
+        let tile_h = TILE.min(self.h - bi * TILE);
+        let tile_w = TILE.min(self.w - bj * TILE);
+
+        // Window rows [row0-r, row0+tile_h+r) clipped to the domain; the
+        // window columns likewise. Out-of-domain ghosts are zeros supplied
+        // by predication (no memory traffic) — matching the Pallas pad.
+        let row_lo = (bi * TILE) as i64 - r;
+        let row_hi = (bi * TILE + tile_h) as i64 + r;
+        let col_lo = (bj * TILE) as i64 - r;
+        let col_hi = (bj * TILE + tile_w) as i64 + r;
+        for row in row_lo.max(0)..row_hi.min(self.h as i64) {
+            let is_apron_row =
+                row < (bi * TILE) as i64 || row >= (bi * TILE + tile_h) as i64;
+            let c0 = col_lo.max(0);
+            let c1 = col_hi.min(self.w as i64);
+            let count = (c1 - c0) as usize;
+            let base = row as u64 * self.row_bytes() + c0 as u64 * eb;
+            if is_apron_row {
+                emit_run(self.kind_for(true), base, count, self.elem_bytes, sink);
+            } else if self.path.all_texture() {
+                emit_run(self.kind_for(false), base, count, self.elem_bytes, sink);
+            } else {
+                // Interior row: the central tile_w elements are the
+                // coalesced body; the 2r halo columns are apron loads.
+                let left = ((bj * TILE) as i64 - c0).max(0) as usize;
+                let right = (c1 - (bj * TILE + tile_w) as i64).max(0) as usize;
+                if left > 0 {
+                    emit_run(self.kind_for(true), base, left, self.elem_bytes, sink);
+                }
+                emit_run(
+                    self.kind_for(false),
+                    base + left as u64 * eb,
+                    count - left - right,
+                    self.elem_bytes,
+                    sink,
+                );
+                if right > 0 {
+                    emit_run(
+                        self.kind_for(true),
+                        base + (count - right) as u64 * eb,
+                        right,
+                        self.elem_bytes,
+                        sink,
+                    );
+                }
+            }
+        }
+        // Writes: tile rows, coalesced and aligned.
+        for t in 0..tile_h {
+            let row = (bi * TILE + t) as u64;
+            emit_run(
+                AccessKind::GlobalWrite,
+                self.out_base() + row * self.row_bytes() + (bj * TILE) as u64 * eb,
+                tile_w,
+                self.elem_bytes,
+                sink,
+            );
+        }
+    }
+
+    fn useful_bytes(&self) -> u64 {
+        // The paper's effective-bandwidth accounting: one read + one write
+        // of the grid (the apron re-reads are overhead, not useful bytes).
+        2 * self.h as u64 * self.row_bytes()
+    }
+
+    fn smem_profile(&self) -> SmemProfile {
+        let side = TILE + 2 * self.radius;
+        // window in + tile out, padded layout (conflict-free).
+        SmemProfile::new(((side * side + TILE * TILE) / 16) as u64, 1)
+    }
+
+    fn extra_block_cycles(&self, dev: &Device) -> f64 {
+        // Designated-thread apron handling: the boundary warps replay
+        // their load instructions (divergence) — a few extra issues per
+        // apron row plus the per-point stencil arithmetic (taps).
+        let taps = 1 + 4 * self.radius;
+        let apron_rows = 2 * self.radius;
+        apron_rows as f64 * dev.halfwarp_issue_cycles * 2.0
+            + (TILE * TILE * taps) as f64 / dev.sps_per_sm as f64 * 0.5
+    }
+
+    fn texture_hit_rate(&self, _dev: &Device) -> f64 {
+        if self.path.all_texture() {
+            full_texture_hit_rate(self.radius, TILE, TILE, self.path.two_d())
+        } else {
+            apron_hit_rate(self.radius, TILE, TILE, self.path.two_d())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{simulate, Device};
+
+    #[test]
+    fn accounting_reads_include_apron_overhead() {
+        let k = StencilKernel::fd(128, 128, 1, MemPath::Global);
+        let mut read = 0u64;
+        let mut write = 0u64;
+        for b in 0..k.launch().grid_blocks {
+            k.block_accesses(b, &mut |hw| {
+                if hw.kind.is_read() {
+                    read += hw.useful_bytes();
+                } else {
+                    write += hw.useful_bytes();
+                }
+            });
+        }
+        assert_eq!(write, 128 * 128 * 4);
+        // Reads exceed one pass (apron redundancy) but not by much.
+        assert!(read > 128 * 128 * 4);
+        assert!(read < 2 * 128 * 128 * 4);
+    }
+
+    #[test]
+    fn fig2_bandwidth_decreases_with_order() {
+        let dev = Device::tesla_c1060();
+        let mut prev = f64::INFINITY;
+        for order in 1..=4 {
+            let r = simulate(&StencilKernel::fd(4096, 4096, order, MemPath::Global), &dev);
+            assert!(
+                r.bandwidth_gbs < prev,
+                "order {order} did not decrease: {}",
+                r.summary()
+            );
+            prev = r.bandwidth_gbs;
+        }
+    }
+
+    #[test]
+    fn table4_global_in_band() {
+        // Paper: I-order FD on 4096^2 through global memory = 51.07 GB/s.
+        let dev = Device::tesla_c1060();
+        let r = simulate(&StencilKernel::fd(4096, 4096, 1, MemPath::Global), &dev);
+        assert!(
+            r.bandwidth_gbs > 40.0 && r.bandwidth_gbs < 60.0,
+            "{}",
+            r.summary()
+        );
+    }
+
+    #[test]
+    fn table4_variant_ordering() {
+        // The paper's shape: 1D texture helps, full 2D texture hurts
+        // (below global), hybrids in between.
+        let dev = Device::tesla_c1060();
+        let bw = |p| {
+            simulate(&StencilKernel::fd(4096, 4096, 1, p), &dev).bandwidth_gbs
+        };
+        let global = bw(MemPath::Global);
+        let tex1d = bw(MemPath::Tex1d);
+        let tex2d = bw(MemPath::Tex2d);
+        let hyb1d = bw(MemPath::HybridTex1d);
+        let hyb2d = bw(MemPath::Tex2dHybrid);
+        assert!(tex1d > global, "tex1d {tex1d:.1} !> global {global:.1}");
+        assert!(tex2d < global, "tex2d {tex2d:.1} !< global {global:.1}");
+        assert!(hyb1d > global, "hyb1d {hyb1d:.1} !> global {global:.1}");
+        assert!(hyb2d > global, "hyb2d {hyb2d:.1} !> global {global:.1}");
+    }
+
+    #[test]
+    fn small_grids_edge_tiles_exact() {
+        // Non-multiple-of-32 grid: accounting still exact.
+        let k = StencilKernel::fd(45, 70, 2, MemPath::Global);
+        let mut write = 0u64;
+        for b in 0..k.launch().grid_blocks {
+            k.block_accesses(b, &mut |hw| {
+                if !hw.kind.is_read() {
+                    write += hw.useful_bytes();
+                }
+            });
+        }
+        assert_eq!(write, 45 * 70 * 4);
+    }
+}

@@ -1,0 +1,22 @@
+//! # gdrk — GPU Data Rearrangement Kernels
+//!
+//! A three-layer (Rust + JAX + Pallas) reproduction of *"Fast GPGPU Data
+//! Rearrangement Kernels using CUDA"* (Bader, Bungartz, Mudigere,
+//! Narasimhan, Narayanan — 2010).
+//!
+//! Layers:
+//! * **L1** — Pallas kernels (`python/compile/kernels/`), AOT-lowered to HLO.
+//! * **L2** — JAX compositions (`python/compile/model.py`, `cfd.py`).
+//! * **L3** — this crate: the coordinator, planner, Tesla-C1060 memory-system
+//!   simulator, PJRT runtime, and CPU reference implementations.
+
+pub mod tensor;
+pub mod ops;
+pub mod planner;
+pub mod gpusim;
+pub mod kernels;
+pub mod runtime;
+pub mod coordinator;
+pub mod cfd;
+pub mod report;
+pub mod util;

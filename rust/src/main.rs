@@ -1,0 +1,309 @@
+//! gdrk CLI — leader entry point.
+//!
+//! Subcommands:
+//!   info                         platform + manifest summary
+//!   list                         artifacts in the manifest
+//!   run --artifact NAME          execute one artifact on random inputs
+//!   serve [--requests N]         start the coordinator and push a mixed
+//!                                synthetic workload through it
+//!   cavity [--n N --steps S]     run the lid-driven cavity demo
+//!   sim [--experiment table1]    print a simulated paper table
+//!
+//! (Hand-rolled argument parsing: clap is unavailable offline.)
+
+use gdrk::cfd::{CpuSolver, GpuModelDriver, Params};
+use gdrk::coordinator::{Service, ServiceConfig};
+use gdrk::gpusim::{simulate, Device};
+use gdrk::kernels::{MemcpyKernel, TiledPermuteKernel};
+use gdrk::planner::plan_reorder;
+use gdrk::report::{gbs, Table};
+use gdrk::runtime::{Runtime, Tensor};
+use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::util::cli;
+use gdrk::util::rng::Rng;
+
+const FLAGS: &[&str] = &["verbose", "host-roundtrip"];
+const OPTS: &[&str] = &[
+    "artifact",
+    "n",
+    "steps",
+    "requests",
+    "experiment",
+    "artifacts-dir",
+    "log-every",
+];
+
+fn main() {
+    let args = match cli::parse(std::env::args().skip(1), FLAGS, OPTS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("list") => cmd_list(&args),
+        Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("cavity") => cmd_cavity(&args),
+        Some("sim") => cmd_sim(&args),
+        _ => {
+            eprintln!(
+                "usage: gdrk <info|list|run|serve|cavity|sim> [--artifact NAME] [--n N] \
+                 [--steps S] [--requests N] [--artifacts-dir DIR]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn runtime_from(args: &cli::Args) -> Result<Runtime, String> {
+    let dir = args
+        .opt("artifacts-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(gdrk::runtime::artifact::default_dir);
+    Runtime::new(&dir).map_err(|e| e.to_string())
+}
+
+fn cmd_info(args: &cli::Args) -> i32 {
+    match runtime_from(args) {
+        Ok(rt) => {
+            println!("platform: {}", rt.platform());
+            println!("artifacts: {}", rt.manifest().entries.len());
+            for group in [
+                "copy", "permute", "reorder", "interlace", "stencil", "model", "cfd",
+            ] {
+                println!("  {group}: {}", rt.manifest().group(group).len());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_list(args: &cli::Args) -> i32 {
+    match runtime_from(args) {
+        Ok(rt) => {
+            for e in rt.manifest().entries.values() {
+                println!("{:10} {:24} {}", e.group, e.name, e.note);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            1
+        }
+    }
+}
+
+fn random_inputs(rt: &Runtime, name: &str, rng: &mut Rng) -> Result<Vec<Tensor>, String> {
+    let entry = rt.entry(name).map_err(|e| e.to_string())?;
+    entry
+        .inputs
+        .iter()
+        .map(|spec| match spec.dtype {
+            gdrk::tensor::DType::F32 => Ok(Tensor::F32(NdArray::random(spec.shape.clone(), rng))),
+            gdrk::tensor::DType::I32 => {
+                let n = spec.shape.num_elements();
+                let hi = n.max(2);
+                let data: Vec<i32> = (0..n).map(|_| rng.gen_range(hi) as i32).collect();
+                Ok(Tensor::I32(NdArray::from_vec(spec.shape.clone(), data)))
+            }
+            d => Err(format!("cannot generate inputs of dtype {d}")),
+        })
+        .collect()
+}
+
+fn cmd_run(args: &cli::Args) -> i32 {
+    let name = match args.opt("artifact") {
+        Some(n) => n.to_string(),
+        None => {
+            eprintln!("gdrk run: --artifact NAME required (see `gdrk list`)");
+            return 2;
+        }
+    };
+    let rt = match runtime_from(args) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            return 1;
+        }
+    };
+    let mut rng = Rng::new(0xC1060);
+    let inputs = match random_inputs(&rt, &name, &mut rng) {
+        Ok(i) => i,
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            return 1;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match rt.execute(&name, &inputs) {
+        Ok(outputs) => {
+            let dt = t0.elapsed().as_secs_f64();
+            println!("{name}: {} output(s) in {:.3} ms", outputs.len(), dt * 1e3);
+            for (i, o) in outputs.iter().enumerate() {
+                println!("  out[{i}]: {}{}", o.dtype(), o.shape());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &cli::Args) -> i32 {
+    let requests = args.opt_usize("requests", 64);
+    let dir = args
+        .opt("artifacts-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(gdrk::runtime::artifact::default_dir);
+    let service = match Service::start(ServiceConfig {
+        artifacts_dir: dir,
+        max_batch: 8,
+        preload: vec!["permute3d_o102".into(), "interlace_n4".into()],
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            return 1;
+        }
+    };
+    let mut rng = Rng::new(1);
+    let workload = ["permute3d_o102", "permute3d_o021", "interlace_n4", "fd1_512"];
+    // Inputs per artifact kind, generated once (shapes are static).
+    let shapes: std::collections::HashMap<&str, Vec<Tensor>> = workload
+        .iter()
+        .map(|&w| {
+            let v: Vec<Tensor> = match w {
+                "permute3d_o102" | "permute3d_o021" => {
+                    vec![Tensor::F32(NdArray::random(Shape::new(&[32, 48, 64]), &mut rng))]
+                }
+                "interlace_n4" => (0..4)
+                    .map(|_| Tensor::F32(NdArray::random(Shape::new(&[1 << 18]), &mut rng)))
+                    .collect(),
+                _ => vec![Tensor::F32(NdArray::random(Shape::new(&[512, 512]), &mut rng))],
+            };
+            (w, v)
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let w = workload[i % workload.len()];
+        let (_, rx) = service.submit(w, shapes[w].clone());
+        pending.push(rx);
+    }
+    let mut failed = 0;
+    for rx in pending {
+        match rx.recv() {
+            Ok(resp) if resp.is_ok() => {}
+            _ => failed += 1,
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {requests} requests in {:.3} s ({:.1} req/s), {failed} failed",
+        dt,
+        requests as f64 / dt
+    );
+    println!("{}", service.metrics().summary());
+    service.shutdown();
+    if failed > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_cavity(args: &cli::Args) -> i32 {
+    let n = args.opt_usize("n", 128);
+    let steps = args.opt_usize("steps", 200);
+    let log_every = args.opt_usize("log-every", 50);
+    let rt = match runtime_from(args) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            return 1;
+        }
+    };
+    let driver = match GpuModelDriver::new(&rt, n) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            return 1;
+        }
+    };
+    let run = if args.has("host-roundtrip") {
+        driver.run_stepwise(steps, log_every)
+    } else {
+        driver.run(steps, log_every)
+    };
+    match run {
+        Ok(r) => {
+            for (s, res) in &r.residual_log {
+                println!("step {s:6}  residual {res:.6}");
+            }
+            println!(
+                "cavity n={n}: {} steps in {:.3} s ({:.1} steps/s), final residual {:.6}",
+                r.steps,
+                r.wall_seconds,
+                r.steps_per_second(),
+                r.final_residual
+            );
+            // CPU baseline comparison (the paper's speedup table shape).
+            let mut cpu = CpuSolver::new(Params::default_for(n, 1000.0, 20));
+            let t0 = std::time::Instant::now();
+            let cmp_steps = steps.min(50);
+            cpu.run(cmp_steps);
+            let cpu_per_step = t0.elapsed().as_secs_f64() / cmp_steps as f64;
+            println!(
+                "serial CPU baseline: {:.1} steps/s  (model path is {:.2}x)",
+                1.0 / cpu_per_step,
+                cpu_per_step / (r.wall_seconds / r.steps as f64)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_sim(args: &cli::Args) -> i32 {
+    let what = args.opt("experiment").unwrap_or("table1");
+    let dev = Device::tesla_c1060();
+    match what {
+        "table1" => {
+            let shape = Shape::from_paper_dims(&[128, 256, 512]);
+            let mut t = Table::new(
+                "Table 1: 3D permute, 128x256x512 f32 (simulated C1060)",
+                &["order", "GB/s"],
+            );
+            let m = simulate(&MemcpyKernel::f32(shape.num_elements()), &dev);
+            t.row(&["[0 1 2] memcpy".into(), gbs(m.bandwidth_gbs)]);
+            for order in [[0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
+                let plan = plan_reorder(&shape, &Order::new(&order).unwrap(), true).unwrap();
+                let r = simulate(&TiledPermuteKernel::new(plan), &dev);
+                t.row(&[
+                    format!("[{} {} {}]", order[0], order[1], order[2]),
+                    gbs(r.bandwidth_gbs),
+                ]);
+            }
+            println!("{}", t.render());
+            0
+        }
+        other => {
+            eprintln!("gdrk sim: unknown experiment '{other}' (benches cover the rest: cargo bench)");
+            2
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! §III.A basic read/write reference implementations (flat arrays).
+
+use super::OpError;
+use crate::tensor::{NdArray, Shape};
+
+/// Contiguous `[base, base+count)` read of a flat array.
+pub fn read_range(x: &NdArray<f32>, base: usize, count: usize) -> Result<NdArray<f32>, OpError> {
+    if x.rank() != 1 {
+        return Err(OpError::Invalid("read_range expects a flat array".into()));
+    }
+    if base + count > x.len() {
+        return Err(OpError::Invalid(format!(
+            "range [{base}, {}) out of bounds for {}",
+            base + count,
+            x.len()
+        )));
+    }
+    Ok(NdArray::from_vec(
+        Shape::new(&[count]),
+        x.data()[base..base + count].to_vec(),
+    ))
+}
+
+/// Strided read: `out[k] = x[base + k*stride]`.
+pub fn read_strided(
+    x: &NdArray<f32>,
+    base: usize,
+    stride: usize,
+    count: usize,
+) -> Result<NdArray<f32>, OpError> {
+    if x.rank() != 1 {
+        return Err(OpError::Invalid("read_strided expects a flat array".into()));
+    }
+    if stride == 0 {
+        return Err(OpError::Invalid("stride must be >= 1".into()));
+    }
+    if count > 0 && base + (count - 1) * stride >= x.len() {
+        return Err(OpError::Invalid("strided window out of bounds".into()));
+    }
+    let data = (0..count).map(|k| x.data()[base + k * stride]).collect();
+    Ok(NdArray::from_vec(Shape::new(&[count]), data))
+}
+
+/// Indexed gather: `out[k] = x[idx[k]]`.
+pub fn gather(x: &NdArray<f32>, idx: &[usize]) -> Result<NdArray<f32>, OpError> {
+    if x.rank() != 1 {
+        return Err(OpError::Invalid("gather expects a flat array".into()));
+    }
+    let mut data = Vec::with_capacity(idx.len());
+    for &i in idx {
+        if i >= x.len() {
+            return Err(OpError::Invalid(format!("index {i} out of bounds")));
+        }
+        data.push(x.data()[i]);
+    }
+    Ok(NdArray::from_vec(Shape::new(&[idx.len()]), data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat(n: usize) -> NdArray<f32> {
+        NdArray::iota(Shape::new(&[n]))
+    }
+
+    #[test]
+    fn range_basic() {
+        let out = read_range(&flat(10), 3, 4).unwrap();
+        assert_eq!(out.data(), &[3.0, 4.0, 5.0, 6.0]);
+        assert!(read_range(&flat(10), 8, 3).is_err());
+        assert_eq!(read_range(&flat(10), 10, 0).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn strided_basic() {
+        let out = read_strided(&flat(20), 1, 3, 5).unwrap();
+        assert_eq!(out.data(), &[1.0, 4.0, 7.0, 10.0, 13.0]);
+        assert!(read_strided(&flat(20), 0, 0, 5).is_err());
+        assert!(read_strided(&flat(20), 0, 10, 3).is_err());
+        assert_eq!(read_strided(&flat(20), 5, 7, 0).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn gather_basic() {
+        let out = gather(&flat(10), &[9, 0, 4, 4]).unwrap();
+        assert_eq!(out.data(), &[9.0, 0.0, 4.0, 4.0]);
+        assert!(gather(&flat(10), &[10]).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! §III.C interlace / de-interlace reference implementations.
+
+use super::OpError;
+use crate::tensor::{NdArray, Shape};
+
+/// Merge n flat arrays: `out[i*n + j] = arrays[j][i]`.
+pub fn interlace(arrays: &[&NdArray<f32>]) -> Result<NdArray<f32>, OpError> {
+    let n = arrays.len();
+    if n < 2 {
+        return Err(OpError::Invalid("interlace needs >= 2 arrays".into()));
+    }
+    let len = arrays[0].len();
+    for a in arrays {
+        if a.rank() != 1 || a.len() != len {
+            return Err(OpError::Invalid(
+                "interlace arrays must be flat and equally sized".into(),
+            ));
+        }
+    }
+    let mut out = Vec::with_capacity(n * len);
+    for i in 0..len {
+        for a in arrays {
+            out.push(a.data()[i]);
+        }
+    }
+    Ok(NdArray::from_vec(Shape::new(&[n * len]), out))
+}
+
+/// Split one flat array into n: `out[j][i] = x[i*n + j]`.
+pub fn deinterlace(x: &NdArray<f32>, n: usize) -> Result<Vec<NdArray<f32>>, OpError> {
+    if n < 2 {
+        return Err(OpError::Invalid("deinterlace needs n >= 2".into()));
+    }
+    if x.rank() != 1 || x.len() % n != 0 {
+        return Err(OpError::Invalid(format!(
+            "length {} not divisible by n={n}",
+            x.len()
+        )));
+    }
+    let len = x.len() / n;
+    let mut outs = vec![Vec::with_capacity(len); n];
+    for i in 0..len {
+        for (j, o) in outs.iter_mut().enumerate() {
+            o.push(x.data()[i * n + j]);
+        }
+    }
+    Ok(outs
+        .into_iter()
+        .map(|v| NdArray::from_vec(Shape::new(&[len]), v))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn layout_definition() {
+        let a = NdArray::from_vec(Shape::new(&[3]), vec![1.0, 2.0, 3.0]);
+        let b = NdArray::from_vec(Shape::new(&[3]), vec![10.0, 20.0, 30.0]);
+        let out = interlace(&[&a, &b]).unwrap();
+        assert_eq!(out.data(), &[1.0, 10.0, 2.0, 20.0, 3.0, 30.0]);
+    }
+
+    #[test]
+    fn roundtrip_all_table3_n(){
+        let mut rng = Rng::new(0x7ab1e3);
+        for n in 2..=9 {
+            let arrays: Vec<NdArray<f32>> = (0..n)
+                .map(|_| NdArray::random(Shape::new(&[257]), &mut rng))
+                .collect();
+            let refs: Vec<&NdArray<f32>> = arrays.iter().collect();
+            let merged = interlace(&refs).unwrap();
+            let split = deinterlace(&merged, n).unwrap();
+            assert_eq!(split, arrays, "n={n}");
+        }
+    }
+
+    #[test]
+    fn validation() {
+        let a = NdArray::iota(Shape::new(&[4]));
+        let b = NdArray::iota(Shape::new(&[5]));
+        assert!(interlace(&[&a]).is_err());
+        assert!(interlace(&[&a, &b]).is_err());
+        assert!(deinterlace(&NdArray::iota(Shape::new(&[10])), 3).is_err());
+        assert!(deinterlace(&NdArray::iota(Shape::new(&[10])), 1).is_err());
+    }
+
+    #[test]
+    fn interlace_then_deinterlace_empty() {
+        let a = NdArray::<f32>::zeros(Shape::new(&[0]));
+        let b = NdArray::<f32>::zeros(Shape::new(&[0]));
+        let m = interlace(&[&a, &b]).unwrap();
+        assert_eq!(m.len(), 0);
+        let s = deinterlace(&m, 2).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].len(), 0);
+    }
+}

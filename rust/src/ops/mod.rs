@@ -1,0 +1,123 @@
+//! Op IR + CPU golden-reference execution of every paper operation.
+//!
+//! These naive host implementations define the operations' semantics on
+//! the Rust side (mirroring `python/compile/kernels/ref.py`) and anchor
+//! correctness: PJRT results from the AOT artifacts are checked against
+//! them in the integration tests, and the property tests sweep them
+//! against each other.
+
+pub mod copy;
+pub mod interlace;
+pub mod permute;
+pub mod reorder;
+pub mod stencil;
+
+use crate::tensor::{NdArray, Order};
+use thiserror::Error;
+
+pub use stencil::StencilSpec;
+
+/// The rearrangement operations of the paper, as data.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// §III.A streaming copy.
+    Copy,
+    /// §III.A contiguous range read (flat arrays).
+    ReadRange { base: usize, count: usize },
+    /// §III.A strided read (flat arrays).
+    ReadStrided { base: usize, stride: usize, count: usize },
+    /// §III.B generic reorder into the given paper order.
+    Reorder { order: Order },
+    /// §III.B N→M reorder (permute + merge slowest axes to `out_rank`).
+    ReorderCollapse { order: Order, out_rank: usize },
+    /// §III.B dense sub-block extraction.
+    Subarray { base: Vec<usize>, shape: Vec<usize> },
+    /// §III.C merge n arrays element-wise (inputs = n arrays).
+    Interlace { n: usize },
+    /// §III.C split one array into n (outputs = n arrays).
+    Deinterlace { n: usize },
+    /// §III.D generic 2D stencil.
+    Stencil { spec: StencilSpec },
+}
+
+#[derive(Debug, Error)]
+pub enum OpError {
+    #[error("op expects {expected} input(s), got {got}")]
+    Arity { expected: usize, got: usize },
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+}
+
+impl Op {
+    /// Number of input tensors the op consumes.
+    pub fn arity(&self) -> usize {
+        match self {
+            Op::Interlace { n } => *n,
+            _ => 1,
+        }
+    }
+
+    /// Number of output tensors the op produces.
+    pub fn num_outputs(&self) -> usize {
+        match self {
+            Op::Deinterlace { n } => *n,
+            _ => 1,
+        }
+    }
+
+    /// Execute the golden CPU reference.
+    pub fn reference(&self, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, OpError> {
+        if inputs.len() != self.arity() {
+            return Err(OpError::Arity {
+                expected: self.arity(),
+                got: inputs.len(),
+            });
+        }
+        match self {
+            Op::Copy => Ok(vec![inputs[0].clone()]),
+            Op::ReadRange { base, count } => copy::read_range(inputs[0], *base, *count)
+                .map(|a| vec![a]),
+            Op::ReadStrided { base, stride, count } => {
+                copy::read_strided(inputs[0], *base, *stride, *count).map(|a| vec![a])
+            }
+            Op::Reorder { order } => permute::permute(inputs[0], order).map(|a| vec![a]),
+            Op::ReorderCollapse { order, out_rank } => {
+                reorder::reorder_collapse(inputs[0], order, *out_rank).map(|a| vec![a])
+            }
+            Op::Subarray { base, shape } => {
+                reorder::subarray(inputs[0], base, shape).map(|a| vec![a])
+            }
+            Op::Interlace { .. } => interlace::interlace(inputs).map(|a| vec![a]),
+            Op::Deinterlace { n } => interlace::deinterlace(inputs[0], *n),
+            Op::Stencil { spec } => stencil::apply(inputs[0], spec).map(|a| vec![a]),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn arity_and_outputs() {
+        assert_eq!(Op::Copy.arity(), 1);
+        assert_eq!(Op::Interlace { n: 5 }.arity(), 5);
+        assert_eq!(Op::Deinterlace { n: 5 }.num_outputs(), 5);
+        assert_eq!(Op::Copy.num_outputs(), 1);
+    }
+
+    #[test]
+    fn arity_enforced() {
+        let a = NdArray::iota(Shape::new(&[4]));
+        let r = Op::Interlace { n: 2 }.reference(&[&a]);
+        assert!(matches!(r, Err(OpError::Arity { expected: 2, got: 1 })));
+    }
+
+    #[test]
+    fn copy_is_identity() {
+        let a = NdArray::iota(Shape::new(&[3, 5]));
+        let out = Op::Copy.reference(&[&a]).unwrap();
+        assert_eq!(out[0], a);
+    }
+}

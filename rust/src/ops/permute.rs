@@ -1,0 +1,150 @@
+//! §III.B reference permute/transpose (naive index-walk, the golden model).
+
+use super::OpError;
+use crate::tensor::{NdArray, Order};
+
+/// Transpose with row-major axes: `out[i0,..] = in[idx[axes[0]], ..]` —
+/// i.e. output axis `j` takes input axis `axes[j]`.
+pub fn transpose(x: &NdArray<f32>, axes: &[usize]) -> Result<NdArray<f32>, OpError> {
+    let n = x.rank();
+    if axes.len() != n || Order::new(axes).is_err() {
+        return Err(OpError::Invalid(format!(
+            "axes {axes:?} is not a permutation of 0..{n}"
+        )));
+    }
+    let out_shape = x.shape().permuted(axes);
+    let in_strides = x.shape().strides();
+    // Stride of output axis j in the *input* linear space.
+    let walk: Vec<usize> = axes.iter().map(|&a| in_strides[a]).collect();
+    let dims = out_shape.dims().to_vec();
+
+    let mut out = Vec::with_capacity(x.len());
+    let mut idx = vec![0usize; n];
+    let mut lin_in = 0usize;
+    if x.len() > 0 {
+        loop {
+            out.push(x.data()[lin_in]);
+            // Odometer increment over output indices, updating lin_in.
+            let mut axis = n;
+            loop {
+                if axis == 0 {
+                    break;
+                }
+                axis -= 1;
+                idx[axis] += 1;
+                lin_in += walk[axis];
+                if idx[axis] < dims[axis] {
+                    break;
+                }
+                lin_in -= walk[axis] * dims[axis];
+                idx[axis] = 0;
+                if axis == 0 {
+                    return Ok(NdArray::from_vec(out_shape, out));
+                }
+            }
+            if n == 0 {
+                break;
+            }
+        }
+    }
+    Ok(NdArray::from_vec(out_shape, out))
+}
+
+/// Reorder into paper storage order (fastest-first convention).
+pub fn permute(x: &NdArray<f32>, order: &Order) -> Result<NdArray<f32>, OpError> {
+    if order.rank() != x.rank() {
+        return Err(OpError::Invalid(format!(
+            "order rank {} != tensor rank {}",
+            order.rank(),
+            x.rank()
+        )));
+    }
+    transpose(x, &order.to_axes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn transpose_2d_known() {
+        let x = NdArray::iota(Shape::new(&[2, 3])); // [[0,1,2],[3,4,5]]
+        let t = transpose(&x, &[1, 0]).unwrap();
+        assert_eq!(t.shape(), &Shape::new(&[3, 2]));
+        assert_eq!(t.data(), &[0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_identity() {
+        let x = NdArray::iota(Shape::new(&[3, 4, 5]));
+        assert_eq!(transpose(&x, &[0, 1, 2]).unwrap(), x);
+    }
+
+    #[test]
+    fn transpose_3d_positional() {
+        let x = NdArray::iota(Shape::new(&[2, 3, 4]));
+        let t = transpose(&x, &[2, 0, 1]).unwrap();
+        assert_eq!(t.shape(), &Shape::new(&[4, 2, 3]));
+        // Check a few positions: t[i,j,k] = x[j,k,i]
+        for i in 0..4 {
+            for j in 0..2 {
+                for k in 0..3 {
+                    assert_eq!(t.get(&[i, j, k]), x.get(&[j, k, i]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn permute_order_semantics_match_python() {
+        // Mirrors python tests/test_orders.py::test_order_semantics...:
+        // paper shape (3,4,5) => row-major shape (5,4,3); order [1 0 2].
+        let shape = Shape::from_paper_dims(&[3, 4, 5]);
+        let x = NdArray::iota(shape);
+        let order = Order::new(&[1, 0, 2]).unwrap();
+        let y = permute(&x, &order).unwrap();
+        let (s0, s1, s2) = (3usize, 4usize, 5usize);
+        let flat = y.data();
+        for d2 in 0..s2 {
+            for d1 in 0..s1 {
+                for d0 in 0..s0 {
+                    let val = x.get(&[d2, d1, d0]);
+                    let pos = d1 + s1 * (d0 + s0 * d2);
+                    assert_eq!(flat[pos], val);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn double_permute_is_identity_random() {
+        let mut rng = Rng::new(0xBADA55);
+        for _ in 0..50 {
+            let n = rng.gen_between(1, 5);
+            let dims: Vec<usize> = (0..n).map(|_| rng.gen_between(1, 7)).collect();
+            let x = NdArray::random(Shape::new(&dims), &mut rng);
+            let order = Order::new(&rng.permutation(n)).unwrap();
+            let y = permute(&x, &order).unwrap();
+            let back = permute(&y, &order.inverse()).unwrap();
+            assert_eq!(back, x);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_axes() {
+        let x = NdArray::iota(Shape::new(&[2, 2]));
+        assert!(transpose(&x, &[0, 0]).is_err());
+        assert!(transpose(&x, &[0]).is_err());
+        assert!(permute(&x, &Order::new(&[0, 1, 2]).unwrap()).is_err());
+    }
+
+    #[test]
+    fn empty_tensor() {
+        let x = NdArray::<f32>::zeros(Shape::new(&[0, 3]));
+        let t = transpose(&x, &[1, 0]).unwrap();
+        assert_eq!(t.shape(), &Shape::new(&[3, 0]));
+        assert_eq!(t.len(), 0);
+    }
+}

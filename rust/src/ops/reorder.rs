@@ -1,0 +1,124 @@
+//! §III.B generic reorder reference: N→M collapse and subarray extraction.
+
+use super::permute;
+use super::OpError;
+use crate::tensor::{NdArray, Order, Shape};
+
+/// N→M reorder: permute into `order`, then merge the slowest axes so the
+/// result has `out_rank` dimensions (free row-major merge — the data
+/// movement is exactly the full permute; see DESIGN.md §5).
+pub fn reorder_collapse(
+    x: &NdArray<f32>,
+    order: &Order,
+    out_rank: usize,
+) -> Result<NdArray<f32>, OpError> {
+    let n = x.rank();
+    if out_rank == 0 || out_rank > n {
+        return Err(OpError::Invalid(format!(
+            "out_rank {out_rank} out of range for rank {n}"
+        )));
+    }
+    let y = permute::permute(x, order)?;
+    let dims = y.shape().dims().to_vec();
+    let merged: usize = dims[..n - out_rank + 1].iter().product();
+    let mut new_dims = vec![merged];
+    new_dims.extend_from_slice(&dims[n - out_rank + 1..]);
+    Ok(y.reshaped(Shape::new(&new_dims)))
+}
+
+/// Dense sub-block extraction: `out = x[base .. base+shape]` per axis.
+pub fn subarray(
+    x: &NdArray<f32>,
+    base: &[usize],
+    shape: &[usize],
+) -> Result<NdArray<f32>, OpError> {
+    let n = x.rank();
+    if base.len() != n || shape.len() != n {
+        return Err(OpError::Invalid("base/shape rank mismatch".into()));
+    }
+    for ((&b, &s), &d) in base.iter().zip(shape).zip(x.shape().dims()) {
+        if b + s > d {
+            return Err(OpError::Invalid(format!(
+                "subarray window out of bounds: base {base:?} + shape {shape:?} vs {:?}",
+                x.shape().dims()
+            )));
+        }
+    }
+    let out_shape = Shape::new(shape);
+    let out = NdArray::from_fn(out_shape, |idx| {
+        let src: Vec<usize> = idx.iter().zip(base).map(|(i, b)| i + b).collect();
+        x.get(&src)
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn collapse_matches_full_permute_data() {
+        let x = NdArray::iota(Shape::new(&[4, 6, 8]));
+        let order = Order::new(&[2, 0, 1]).unwrap();
+        let full = permute::permute(&x, &order).unwrap();
+        for out_rank in 1..=3 {
+            let c = reorder_collapse(&x, &order, out_rank).unwrap();
+            assert_eq!(c.rank(), out_rank);
+            assert_eq!(c.data(), full.data(), "out_rank={out_rank}");
+        }
+    }
+
+    #[test]
+    fn collapse_validates() {
+        let x = NdArray::iota(Shape::new(&[2, 3]));
+        let o = Order::identity(2);
+        assert!(reorder_collapse(&x, &o, 0).is_err());
+        assert!(reorder_collapse(&x, &o, 3).is_err());
+    }
+
+    #[test]
+    fn subarray_known() {
+        let x = NdArray::iota(Shape::new(&[4, 5]));
+        let s = subarray(&x, &[1, 2], &[2, 3]).unwrap();
+        assert_eq!(s.shape(), &Shape::new(&[2, 3]));
+        assert_eq!(s.data(), &[7.0, 8.0, 9.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn subarray_full_is_identity() {
+        let x = NdArray::iota(Shape::new(&[3, 4]));
+        assert_eq!(subarray(&x, &[0, 0], &[3, 4]).unwrap(), x);
+    }
+
+    #[test]
+    fn subarray_bounds() {
+        let x = NdArray::iota(Shape::new(&[3, 4]));
+        assert!(subarray(&x, &[1, 0], &[3, 4]).is_err());
+        assert!(subarray(&x, &[0], &[3]).is_err());
+        assert_eq!(
+            subarray(&x, &[2, 3], &[0, 0]).unwrap().len(),
+            0
+        );
+    }
+
+    #[test]
+    fn subarray_random_positions() {
+        let mut rng = Rng::new(11);
+        let x = NdArray::random(Shape::new(&[9, 11, 7]), &mut rng);
+        for _ in 0..30 {
+            let base = [rng.gen_range(9), rng.gen_range(11), rng.gen_range(7)];
+            let shape = [
+                rng.gen_range(9 - base[0]) + 1,
+                rng.gen_range(11 - base[1]) + 1,
+                rng.gen_range(7 - base[2]) + 1,
+            ];
+            let s = subarray(&x, &base, &shape).unwrap();
+            for lin in 0..s.len() {
+                let idx = s.shape().delinearize(lin);
+                let src: Vec<usize> = idx.iter().zip(&base).map(|(i, b)| i + b).collect();
+                assert_eq!(s.get(&idx), x.get(&src));
+            }
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! §III.D generic 2D stencil reference (zero ghost cells outside domain).
+
+use super::OpError;
+use crate::tensor::{NdArray, Shape};
+
+/// 2k-order accurate central-difference second-derivative coefficients
+/// (index 0 = center), mirroring `ref.FD_COEFFS` on the python side.
+pub fn fd_coeffs(order: usize) -> Option<&'static [f64]> {
+    match order {
+        1 => Some(&[-2.0, 1.0]),
+        2 => Some(&[-2.5, 4.0 / 3.0, -1.0 / 12.0]),
+        3 => Some(&[-49.0 / 18.0, 1.5, -0.15, 1.0 / 90.0]),
+        4 => Some(&[
+            -205.0 / 72.0,
+            1.6,
+            -0.2,
+            8.0 / 315.0,
+            -1.0 / 560.0,
+        ]),
+        _ => None,
+    }
+}
+
+/// Stencil kinds the reference executor understands. The Pallas kernel is
+/// generic over arbitrary functors; on the Rust side the same genericity
+/// is [`StencilSpec::Taps`] — an explicit (dy, dx, coeff) list.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StencilSpec {
+    /// 2D FD Laplacian of the given order (radius = order), scaled.
+    FdLaplacian { order: usize, scale: f64 },
+    /// Arbitrary tap list (the functor-object analogue).
+    Taps { radius: usize, taps: Vec<(i64, i64, f64)> },
+    /// (2r+1)x(2r+1) convolution mask, row-major.
+    Conv { radius: usize, mask: Vec<f64> },
+}
+
+impl StencilSpec {
+    pub fn radius(&self) -> usize {
+        match self {
+            StencilSpec::FdLaplacian { order, .. } => *order,
+            StencilSpec::Taps { radius, .. } => *radius,
+            StencilSpec::Conv { radius, .. } => *radius,
+        }
+    }
+
+    /// Lower to an explicit tap list.
+    pub fn taps(&self) -> Result<Vec<(i64, i64, f64)>, OpError> {
+        match self {
+            StencilSpec::Taps { radius, taps } => {
+                for &(dy, dx, _) in taps {
+                    if dy.unsigned_abs() as usize > *radius || dx.unsigned_abs() as usize > *radius
+                    {
+                        return Err(OpError::Invalid(format!(
+                            "tap ({dy},{dx}) outside radius {radius}"
+                        )));
+                    }
+                }
+                Ok(taps.clone())
+            }
+            StencilSpec::FdLaplacian { order, scale } => {
+                let c = fd_coeffs(*order).ok_or_else(|| {
+                    OpError::Invalid(format!("FD order {order} not in 1..=4"))
+                })?;
+                let mut taps = vec![(0i64, 0i64, 2.0 * c[0] * scale)];
+                for (k, &ck) in c.iter().enumerate().skip(1) {
+                    let k = k as i64;
+                    for (dy, dx) in [(0, k), (0, -k), (k, 0), (-k, 0)] {
+                        taps.push((dy, dx, ck * scale));
+                    }
+                }
+                Ok(taps)
+            }
+            StencilSpec::Conv { radius, mask } => {
+                let side = 2 * radius + 1;
+                if mask.len() != side * side {
+                    return Err(OpError::Invalid(format!(
+                        "mask length {} != {side}x{side}",
+                        mask.len()
+                    )));
+                }
+                let r = *radius as i64;
+                let mut taps = Vec::new();
+                for dy in -r..=r {
+                    for dx in -r..=r {
+                        let c = mask[((dy + r) * (2 * r + 1) + (dx + r)) as usize];
+                        if c != 0.0 {
+                            taps.push((dy, dx, c));
+                        }
+                    }
+                }
+                Ok(taps)
+            }
+        }
+    }
+}
+
+/// Apply the stencil with zero ghost cells outside the domain
+/// (matches `ref.stencil` in python).
+pub fn apply(x: &NdArray<f32>, spec: &StencilSpec) -> Result<NdArray<f32>, OpError> {
+    if x.rank() != 2 {
+        return Err(OpError::Invalid("stencil expects a 2D array".into()));
+    }
+    let taps = spec.taps()?;
+    let (h, w) = (x.shape().dims()[0] as i64, x.shape().dims()[1] as i64);
+    let out = NdArray::from_fn(Shape::new(&[h as usize, w as usize]), |idx| {
+        let (i, j) = (idx[0] as i64, idx[1] as i64);
+        let mut acc = 0.0f64;
+        for &(dy, dx, c) in &taps {
+            let (y, xx) = (i + dy, j + dx);
+            if y >= 0 && y < h && xx >= 0 && xx < w {
+                acc += c * x.get(&[y as usize, xx as usize]) as f64;
+            }
+        }
+        acc as f32
+    });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laplacian_of_quadratic_is_constant() {
+        // f(i,j) = i^2 + j^2  =>  5-point laplacian = 4 exactly (interior).
+        let n = 16;
+        let x = NdArray::from_fn(Shape::new(&[n, n]), |idx| {
+            (idx[0] * idx[0] + idx[1] * idx[1]) as f32
+        });
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let lap = apply(&x, &spec).unwrap();
+        for i in 2..n - 2 {
+            for j in 2..n - 2 {
+                assert!((lap.get(&[i, j]) - 4.0).abs() < 1e-3, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn fd_tap_counts() {
+        for order in 1..=4usize {
+            let spec = StencilSpec::FdLaplacian { order, scale: 1.0 };
+            assert_eq!(spec.taps().unwrap().len(), 1 + 4 * order);
+            assert_eq!(spec.radius(), order);
+        }
+        assert!(StencilSpec::FdLaplacian { order: 5, scale: 1.0 }.taps().is_err());
+    }
+
+    #[test]
+    fn conv_box_filter_constant_field() {
+        let x = NdArray::from_fn(Shape::new(&[10, 10]), |_| 9.0);
+        let spec = StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] };
+        let out = apply(&x, &spec).unwrap();
+        assert!((out.get(&[5, 5]) - 9.0).abs() < 1e-5); // interior
+        assert!((out.get(&[0, 5]) - 6.0).abs() < 1e-5); // edge: 6 live taps
+        assert!((out.get(&[0, 0]) - 4.0).abs() < 1e-5); // corner: 4 live taps
+    }
+
+    #[test]
+    fn taps_validation() {
+        let bad = StencilSpec::Taps { radius: 1, taps: vec![(2, 0, 1.0)] };
+        assert!(bad.taps().is_err());
+        let bad_mask = StencilSpec::Conv { radius: 1, mask: vec![0.0; 8] };
+        assert!(bad_mask.taps().is_err());
+    }
+
+    #[test]
+    fn shift_functor_equivalent() {
+        // taps [(1,1,1), (-1,-1,-1)] = nb(1,1) - nb(-1,-1).
+        let x = NdArray::iota(Shape::new(&[6, 6]));
+        let spec = StencilSpec::Taps { radius: 1, taps: vec![(1, 1, 1.0), (-1, -1, -1.0)] };
+        let out = apply(&x, &spec).unwrap();
+        assert_eq!(out.get(&[2, 2]), x.get(&[3, 3]) - x.get(&[1, 1]));
+        assert_eq!(out.get(&[0, 0]), x.get(&[1, 1])); // nb(-1,-1) is ghost
+    }
+
+    #[test]
+    fn rejects_non_2d() {
+        let x = NdArray::iota(Shape::new(&[8]));
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        assert!(apply(&x, &spec).is_err());
+    }
+}

@@ -1,0 +1,388 @@
+//! Planner — the paper's §III.B kernel-construction logic as data.
+//!
+//! Given an input shape and a requested storage order, the planner:
+//!
+//! 1. converts the order vector to row-major transpose axes,
+//! 2. picks the **2D movement plane**: the axis that is fastest-changing
+//!    in the *input* layout and the axis that is fastest-changing in the
+//!    *output* layout, skipping any common fastest prefix the orders
+//!    share — so both global-memory streams stay contiguous (coalesced),
+//! 3. computes the stride tables the kernel walks (the paper keeps these
+//!    in constant memory; the Pallas AOT path constant-folds them),
+//! 4. chooses the launch configuration (32×32 tiles, 32×8 threads, four
+//!    elements per thread) and whether the tile must be staged through
+//!    shared memory (a genuine in-tile transpose) or is a direct
+//!    row-to-row move,
+//! 5. decides the block *scheduling* order: diagonalized tiles on the
+//!    movement plane plus batch axes enumerated smallest-input-stride
+//!    first, both to avoid partition camping.
+//!
+//! The same `Plan` drives the simulator kernel descriptors
+//! (`crate::kernels`) and artifact selection in the coordinator.
+
+use crate::tensor::{Order, Shape};
+use thiserror::Error;
+
+/// Tile/thread geometry of the paper's kernels.
+pub const TILE: usize = 32;
+pub const THREADS_X: usize = 32;
+pub const THREADS_Y: usize = 8;
+
+#[derive(Debug, Error, PartialEq)]
+pub enum PlanError {
+    #[error("order rank {order} does not match shape rank {shape}")]
+    RankMismatch { order: usize, shape: usize },
+}
+
+/// How the data moves: a streaming pass or a 2D tile move over the plane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Movement {
+    /// Identity order: contiguous runs on both sides.
+    Stream { run_elems: usize },
+    /// 32×32 tile over the movement plane.
+    TiledTranspose {
+        /// Output axis forming the tile's row dimension.
+        out_row_axis: usize,
+        /// Input axis whose stride separates consecutive *read* rows.
+        in_row_axis: usize,
+        /// True when the in-tile element order differs between read and
+        /// write (order[0] != 0): the tile is staged through shared
+        /// memory / VMEM. False for shared-fastest-dim moves (row-to-row
+        /// copies; no staging needed).
+        staged: bool,
+    },
+}
+
+/// A fully resolved rearrangement plan.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub order: Order,
+    /// Row-major transpose axes (`out axis j` takes `in axis axes[j]`).
+    pub axes: Vec<usize>,
+    pub in_shape: Shape,
+    pub out_shape: Shape,
+    /// Row-major element strides of the input/output (constant memory).
+    pub in_strides: Vec<usize>,
+    pub out_strides: Vec<usize>,
+    pub movement: Movement,
+    /// Tile extent per output axis (TILE on plane axes, 1 elsewhere).
+    pub block_extent: Vec<usize>,
+    /// Blocks per output axis.
+    pub grid: Vec<usize>,
+    /// Output axes from fastest-varying to slowest in the block id
+    /// (plane axes first, then batch axes by ascending input stride).
+    pub axis_iter: Vec<usize>,
+    /// Diagonalized tile ordering on the plane (camping avoidance).
+    pub diagonal: bool,
+    /// Whether both global streams stay coalesced (§III.B criterion).
+    pub coalesced: bool,
+}
+
+impl Plan {
+    pub fn grid_blocks(&self) -> usize {
+        self.grid.iter().product()
+    }
+
+    pub fn threads_per_block(&self) -> usize {
+        THREADS_X * THREADS_Y
+    }
+
+    /// Shared memory per block in bytes (staged tile, +1 padding column
+    /// to dodge bank conflicts — the paper's layout).
+    pub fn smem_per_block(&self, elem_bytes: usize) -> usize {
+        match self.movement {
+            Movement::TiledTranspose { staged: true, .. } => TILE * (TILE + 1) * elem_bytes,
+            _ => 0,
+        }
+    }
+
+    /// Decompose a linear block id into per-output-axis tile coordinates:
+    /// mixed radix over `axis_iter` (fastest first), then the diagonal
+    /// remap on the movement plane.
+    pub fn block_coords(&self, block: usize) -> Vec<usize> {
+        let n = self.grid.len();
+        let mut g = vec![0usize; n];
+        let mut rem = block;
+        for &ax in &self.axis_iter {
+            g[ax] = rem % self.grid[ax];
+            rem /= self.grid[ax];
+        }
+        if self.diagonal {
+            if let Movement::TiledTranspose { out_row_axis, .. } = self.movement {
+                let col_axis = n - 1;
+                let gi = self.grid[out_row_axis];
+                if gi > 1 && out_row_axis != col_axis {
+                    g[out_row_axis] = (g[out_row_axis] + g[col_axis]) % gi;
+                }
+            }
+        }
+        g
+    }
+}
+
+/// Length of the common fastest prefix of the order (dims that keep their
+/// position at the fast end and act as the run the kernel copies whole).
+fn common_prefix(order: &Order) -> usize {
+    order
+        .dims()
+        .iter()
+        .enumerate()
+        .take_while(|&(i, &d)| i == d)
+        .count()
+}
+
+/// Plan a generic reorder (permute) of `shape` into `order`.
+pub fn plan_reorder(
+    in_shape: &Shape,
+    order: &Order,
+    diagonal: bool,
+) -> Result<Plan, PlanError> {
+    let n = in_shape.rank();
+    if order.rank() != n {
+        return Err(PlanError::RankMismatch {
+            order: order.rank(),
+            shape: n,
+        });
+    }
+    let axes = order.to_axes();
+    let out_shape = in_shape.permuted(&axes);
+    let in_strides = in_shape.strides();
+    let out_strides = out_shape.strides();
+
+    let k = common_prefix(order);
+    let movement = if k == n || n == 0 {
+        Movement::Stream {
+            run_elems: TILE * TILE,
+        }
+    } else if order.dims()[0] != 0 {
+        // Input's fastest dim moves: genuine transpose. The input's
+        // fastest axis (row-major axis n-1) lands at output axis `a`;
+        // read rows advance along the input axis that becomes the
+        // output's fastest.
+        let a = axes.iter().position(|&x| x == n - 1).expect("permutation");
+        Movement::TiledTranspose {
+            out_row_axis: a,
+            in_row_axis: axes[n - 1],
+            staged: true,
+        }
+    } else {
+        // Shared fastest prefix of length k >= 1: batched row moves. The
+        // plane is (shared fastest dim run) x (output's fastest *moving*
+        // dim = order[k]); rows need no staging.
+        let moving = order.dims()[k]; // paper dim
+        let in_axis_of_moving = n - 1 - moving;
+        let out_axis_of_moving = n - 1 - k;
+        Movement::TiledTranspose {
+            out_row_axis: out_axis_of_moving,
+            in_row_axis: in_axis_of_moving,
+            staged: false,
+        }
+    };
+
+    let mut block_extent = vec![1usize; n];
+    match movement {
+        Movement::Stream { run_elems } => {
+            if n > 0 {
+                block_extent[n - 1] = run_elems.min(out_shape.dims()[n - 1].max(1));
+            }
+        }
+        Movement::TiledTranspose { out_row_axis, .. } => {
+            block_extent[n - 1] = TILE.min(out_shape.dims()[n - 1].max(1));
+            block_extent[out_row_axis] = TILE.min(out_shape.dims()[out_row_axis].max(1));
+        }
+    }
+    let grid: Vec<usize> = out_shape
+        .dims()
+        .iter()
+        .zip(&block_extent)
+        .map(|(&d, &b)| if d == 0 { 0 } else { (d + b - 1) / b })
+        .collect();
+
+    // Block scheduling order: the plane's column axis innermost, then the
+    // remaining axes (tile rows + batch) by ascending *input* stride, so
+    // that consecutive concurrent blocks sweep distinct DRAM partitions
+    // (generalized diagonalization; the (i+j)%G remap handles the plane
+    // itself, this ordering handles the batch dimensions).
+    let mut axis_iter: Vec<usize> = Vec::with_capacity(n);
+    if n > 0 {
+        axis_iter.push(n - 1);
+        let mut rest: Vec<usize> = (0..n - 1).collect();
+        rest.sort_by_key(|&a| in_strides[axes[a]]);
+        axis_iter.extend(rest);
+    }
+
+    Ok(Plan {
+        order: order.clone(),
+        axes,
+        in_shape: in_shape.clone(),
+        out_shape,
+        in_strides,
+        out_strides,
+        movement,
+        block_extent,
+        grid,
+        axis_iter,
+        diagonal,
+        coalesced: true,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn order(v: &[usize]) -> Order {
+        Order::new(v).unwrap()
+    }
+
+    #[test]
+    fn identity_is_stream() {
+        let p = plan_reorder(&Shape::new(&[64, 64, 64]), &order(&[0, 1, 2]), false).unwrap();
+        assert!(matches!(p.movement, Movement::Stream { .. }));
+        assert_eq!(p.smem_per_block(4), 0);
+        assert!(p.coalesced);
+    }
+
+    #[test]
+    fn order_021_is_unstaged_tile_move() {
+        // [0 2 1]: dim 0 stays fastest -> batched row moves over the
+        // (dim0, dim2) plane, no shared-memory staging.
+        let p = plan_reorder(&Shape::new(&[512, 256, 128]), &order(&[0, 2, 1]), true).unwrap();
+        match p.movement {
+            Movement::TiledTranspose {
+                out_row_axis,
+                in_row_axis,
+                staged,
+            } => {
+                assert!(!staged);
+                // moving dim = order[1] = 2 -> in axis 0, out axis 1.
+                assert_eq!(in_row_axis, 0);
+                assert_eq!(out_row_axis, 1);
+            }
+            _ => panic!("expected tile move, got {:?}", p.movement),
+        }
+        assert_eq!(p.smem_per_block(4), 0);
+    }
+
+    #[test]
+    fn order_102_is_staged_transpose() {
+        // [1 0 2] swaps the two fastest dims: classic staged transpose,
+        // batched over the slowest.
+        let p = plan_reorder(&Shape::new(&[4, 256, 512]), &order(&[1, 0, 2]), false).unwrap();
+        match p.movement {
+            Movement::TiledTranspose {
+                out_row_axis,
+                in_row_axis,
+                staged,
+            } => {
+                assert!(staged);
+                assert_eq!(out_row_axis, 1);
+                assert_eq!(in_row_axis, 1);
+            }
+            _ => panic!("expected transpose, got {:?}", p.movement),
+        }
+        assert_eq!(p.block_extent, vec![1, 32, 32]);
+        // out_shape = (4, 512, 256) -> grid (4, 16, 8).
+        assert_eq!(p.grid, vec![4, 16, 8]);
+        assert_eq!(p.smem_per_block(4), 32 * 33 * 4);
+    }
+
+    #[test]
+    fn full_reversal_plane() {
+        let p = plan_reorder(&Shape::new(&[64, 64, 64]), &order(&[2, 1, 0]), false).unwrap();
+        match p.movement {
+            Movement::TiledTranspose {
+                out_row_axis,
+                in_row_axis,
+                staged,
+            } => {
+                assert!(staged);
+                assert_eq!(out_row_axis, 0);
+                assert_eq!(in_row_axis, 0);
+            }
+            _ => panic!(),
+        }
+        assert_eq!(p.block_extent, vec![32, 1, 32]);
+    }
+
+    #[test]
+    fn shared_prefix_of_two() {
+        // [0 1 3 2]: dims 0,1 stay fastest; moving dim = 3.
+        let p = plan_reorder(&Shape::new(&[8, 8, 16, 16]), &order(&[0, 1, 3, 2]), false).unwrap();
+        match p.movement {
+            Movement::TiledTranspose {
+                out_row_axis,
+                in_row_axis,
+                staged,
+            } => {
+                assert!(!staged);
+                assert_eq!(in_row_axis, 0); // paper dim 3 = in axis 0
+                assert_eq!(out_row_axis, 1); // out axis n-1-k = 1
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn grid_covers_shape_with_remainders() {
+        let p = plan_reorder(&Shape::new(&[5, 33, 70]), &order(&[1, 0, 2]), false).unwrap();
+        let total: usize = p.grid.iter().product();
+        assert_eq!(p.grid_blocks(), total);
+        for (j, (&d, &b)) in p.out_shape.dims().iter().zip(&p.block_extent).enumerate() {
+            assert!(p.grid[j] * b >= d, "axis {j} under-covered");
+            assert!((p.grid[j] - 1) * b < d, "axis {j} over-covered");
+        }
+    }
+
+    #[test]
+    fn axis_iter_is_a_permutation_of_axes() {
+        for ord in [vec![0, 2, 1], vec![1, 0, 2], vec![2, 1, 0], vec![0, 1, 2]] {
+            let p = plan_reorder(&Shape::new(&[16, 32, 64]), &order(&ord), true).unwrap();
+            let mut sorted = p.axis_iter.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2], "order {ord:?}");
+            assert_eq!(p.axis_iter[0], 2, "plane col axis innermost");
+        }
+    }
+
+    #[test]
+    fn block_coords_roundtrip_and_diagonal_is_permutation() {
+        for diag in [false, true] {
+            let p =
+                plan_reorder(&Shape::new(&[4, 128, 96]), &order(&[1, 0, 2]), diag).unwrap();
+            let nblocks = p.grid_blocks();
+            let mut seen = std::collections::HashSet::new();
+            for b in 0..nblocks {
+                let c = p.block_coords(b);
+                assert!(seen.insert(c.clone()), "duplicate tile {c:?}");
+                for (j, (&cj, &g)) in c.iter().zip(&p.grid).enumerate() {
+                    assert!(cj < g, "axis {j} coord {cj} out of grid {g}");
+                }
+            }
+            assert_eq!(seen.len(), nblocks);
+        }
+    }
+
+    #[test]
+    fn rank_mismatch_rejected() {
+        let e = plan_reorder(&Shape::new(&[4, 4]), &order(&[0, 1, 2]), false);
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn rank5_table2_case() {
+        // Table 2 row 4: order [3 0 2 1 4], paper shape (256,16,1,256,16)
+        // => row-major shape (16,256,1,16,256).
+        let p = plan_reorder(
+            &Shape::new(&[16, 256, 1, 16, 256]),
+            &order(&[3, 0, 2, 1, 4]),
+            true,
+        )
+        .unwrap();
+        assert!(matches!(
+            p.movement,
+            Movement::TiledTranspose { staged: true, .. }
+        ));
+        assert_eq!(p.out_shape.num_elements(), p.in_shape.num_elements());
+    }
+}

@@ -1,0 +1,108 @@
+//! Bench report formatting: the tables/series the paper prints.
+
+use std::fmt::Write as _;
+
+/// A simple aligned text table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            for i in 0..ncols {
+                let _ = write!(out, "| {:width$} ", cells[i], width = widths[i]);
+            }
+            let _ = writeln!(out, "|");
+        };
+        line(&mut out, &self.headers);
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&mut out, &sep);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+/// Format GB/s with 2 decimals.
+pub fn gbs(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Format a ratio as a percentage.
+pub fn pct(x: f64) -> String {
+    format!("{:.0}%", 100.0 * x)
+}
+
+/// An (x, y) series for figure-style output.
+pub fn series(title: &str, points: &[(f64, f64)], xlabel: &str, ylabel: &str) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    let _ = writeln!(out, "# {xlabel}\t{ylabel}");
+    for (x, y) in points {
+        let _ = writeln!(out, "{x}\t{y:.3}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Table 1", &["order", "GB/s"]);
+        t.row(&["[0 1 2] memcpy".into(), gbs(77.82)]);
+        t.row(&["[0 2 1]".into(), gbs(62.5)]);
+        let r = t.render();
+        assert!(r.contains("== Table 1 =="));
+        assert!(r.contains("| [0 1 2] memcpy | 77.82 |"));
+        assert!(r.contains("| [0 2 1]        | 62.50 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn column_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn series_format() {
+        let s = series("Fig 1", &[(1024.0, 10.0), (2048.0, 20.5)], "bytes", "GB/s");
+        assert!(s.contains("1024\t10.000"));
+        assert!(s.contains("2048\t20.500"));
+    }
+
+    #[test]
+    fn pct_format() {
+        assert_eq!(pct(0.805), "80%");
+    }
+}

@@ -1,0 +1,238 @@
+//! Artifact registry: `artifacts/manifest.json` + per-entry HLO text.
+//!
+//! The manifest is produced by `python/compile/aot.py` (the only place
+//! Python runs); this module is the Rust-side contract for it.
+
+use crate::tensor::{DType, Shape};
+use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use thiserror::Error;
+
+/// Shape + dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Shape,
+    pub dtype: DType,
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub group: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub note: String,
+    /// Free-form numeric metadata (e.g. `bytes_moved`, `dt`, `n`).
+    pub meta: BTreeMap<String, f64>,
+}
+
+impl ArtifactEntry {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).map(|&v| v as usize)
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+#[derive(Debug, Error)]
+pub enum ManifestError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: String,
+        source: std::io::Error,
+    },
+    #[error("manifest parse error: {0}")]
+    Json(#[from] json::ParseError),
+    #[error("manifest malformed: {0}")]
+    Malformed(String),
+    #[error("unsupported manifest format {0}")]
+    Format(f64),
+}
+
+fn tensor_spec(v: &Value) -> Result<TensorSpec, ManifestError> {
+    let shape = v
+        .get("shape")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| ManifestError::Malformed("missing shape".into()))?
+        .iter()
+        .map(|d| {
+            d.as_usize()
+                .ok_or_else(|| ManifestError::Malformed("bad dim".into()))
+        })
+        .collect::<Result<Vec<_>, _>>()?;
+    let dtype = v
+        .get("dtype")
+        .and_then(Value::as_str)
+        .and_then(DType::parse)
+        .ok_or_else(|| ManifestError::Malformed("bad dtype".into()))?;
+    Ok(TensorSpec {
+        shape: Shape(shape),
+        dtype,
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|source| ManifestError::Io {
+            path: path.display().to_string(),
+            source,
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated for testability).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest, ManifestError> {
+        let root = json::parse(text)?;
+        let format = root
+            .get("format")
+            .and_then(Value::as_f64)
+            .ok_or_else(|| ManifestError::Malformed("missing format".into()))?;
+        if format != 1.0 {
+            return Err(ManifestError::Format(format));
+        }
+        let mut entries = BTreeMap::new();
+        for e in root
+            .get("entries")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| ManifestError::Malformed("missing entries".into()))?
+        {
+            let name = e
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| ManifestError::Malformed("entry missing name".into()))?
+                .to_string();
+            let get_str = |k: &str| {
+                e.get(k)
+                    .and_then(Value::as_str)
+                    .unwrap_or_default()
+                    .to_string()
+            };
+            let specs = |k: &str| -> Result<Vec<TensorSpec>, ManifestError> {
+                e.get(k)
+                    .and_then(Value::as_arr)
+                    .ok_or_else(|| ManifestError::Malformed(format!("{name}: missing {k}")))?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect()
+            };
+            let mut meta = BTreeMap::new();
+            if let Some(m) = e.get("meta").and_then(Value::as_obj) {
+                for (k, v) in m {
+                    if let Some(x) = v.as_f64() {
+                        meta.insert(k.clone(), x);
+                    } else if let Some(a) = v.as_arr() {
+                        // order vectors etc: store length-index pairs
+                        for (i, item) in a.iter().enumerate() {
+                            if let Some(x) = item.as_f64() {
+                                meta.insert(format!("{k}.{i}"), x);
+                            }
+                        }
+                        meta.insert(format!("{k}.len"), a.len() as f64);
+                    }
+                }
+            }
+            let entry = ArtifactEntry {
+                file: get_str("file"),
+                group: get_str("group"),
+                note: get_str("note"),
+                inputs: specs("inputs")?,
+                outputs: specs("outputs")?,
+                meta,
+                name: name.clone(),
+            };
+            entries.insert(name, entry);
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Entries of a group, sorted by name.
+    pub fn group(&self, group: &str) -> Vec<&ArtifactEntry> {
+        self.entries.values().filter(|e| e.group == group).collect()
+    }
+}
+
+/// Default artifacts directory: `$GDRK_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("GDRK_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "entries": [
+        {"name": "copy_4m", "group": "copy", "file": "copy_4m.hlo.txt",
+         "inputs": [{"shape": [4194304], "dtype": "f32"}],
+         "outputs": [{"shape": [4194304], "dtype": "f32"}],
+         "note": "stream", "meta": {"bytes_moved": 33554432}},
+        {"name": "gather", "group": "copy", "file": "g.hlo.txt",
+         "inputs": [{"shape": [1048576], "dtype": "f32"}, {"shape": [262144], "dtype": "i32"}],
+         "outputs": [{"shape": [262144], "dtype": "f32"}],
+         "note": "", "meta": {"order": [1, 0, 2]}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("copy_4m").unwrap();
+        assert_eq!(e.inputs[0].shape.num_elements(), 4194304);
+        assert_eq!(e.inputs[0].dtype, DType::F32);
+        assert_eq!(e.meta_usize("bytes_moved"), Some(33554432));
+        assert_eq!(m.hlo_path(e), PathBuf::from("/tmp/a/copy_4m.hlo.txt"));
+        let g = m.get("gather").unwrap();
+        assert_eq!(g.inputs[1].dtype, DType::I32);
+        assert_eq!(g.meta_usize("order.len"), Some(3));
+        assert_eq!(g.meta_usize("order.0"), Some(1));
+    }
+
+    #[test]
+    fn group_filter() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert_eq!(m.group("copy").len(), 2);
+        assert!(m.group("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 2");
+        assert!(matches!(
+            Manifest::parse(&bad, PathBuf::from(".")),
+            Err(ManifestError::Format(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}", PathBuf::from(".")).is_err());
+        assert!(Manifest::parse(
+            r#"{"format":1,"entries":[{"group":"x"}]}"#,
+            PathBuf::from(".")
+        )
+        .is_err());
+    }
+}

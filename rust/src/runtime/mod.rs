@@ -1,0 +1,279 @@
+//! PJRT runtime: load AOT HLO artifacts, compile once, execute natively.
+//!
+//! The bridge pattern (see /opt/xla-example): `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//! HLO *text* is the interchange format — jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`): the coordinator therefore owns
+//! exactly one `Runtime` on a dedicated device-worker thread
+//! (vLLM-router topology — see `crate::coordinator`).
+
+pub mod artifact;
+
+use crate::tensor::{DType, NdArray, Shape};
+use artifact::{ArtifactEntry, Manifest, ManifestError};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use thiserror::Error;
+
+pub use artifact::TensorSpec;
+
+/// A host tensor crossing the runtime boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32(NdArray<f32>),
+    I32(NdArray<i32>),
+}
+
+impl Tensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32(_) => DType::F32,
+            Tensor::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        match self {
+            Tensor::F32(a) => a.shape(),
+            Tensor::I32(a) => a.shape(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&NdArray<f32>> {
+        match self {
+            Tensor::F32(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn into_f32(self) -> Option<NdArray<f32>> {
+        match self {
+            Tensor::F32(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal, RuntimeError> {
+        // Single-copy path: build the literal with its final shape rather
+        // than vec1 + reshape (which copies the data twice) — §Perf L3-1.
+        fn bytes_of<T>(s: &[T]) -> &[u8] {
+            unsafe {
+                std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s))
+            }
+        }
+        let lit = match self {
+            Tensor::F32(a) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                a.shape().dims(),
+                bytes_of(a.data()),
+            )?,
+            Tensor::I32(a) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                a.shape().dims(),
+                bytes_of(a.data()),
+            )?,
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor, RuntimeError> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32(NdArray::from_vec(
+                Shape::new(&dims),
+                lit.to_vec::<f32>()?,
+            ))),
+            xla::ElementType::S32 => Ok(Tensor::I32(NdArray::from_vec(
+                Shape::new(&dims),
+                lit.to_vec::<i32>()?,
+            ))),
+            ty => Err(RuntimeError::UnsupportedDType(format!("{ty:?}"))),
+        }
+    }
+}
+
+impl From<NdArray<f32>> for Tensor {
+    fn from(a: NdArray<f32>) -> Tensor {
+        Tensor::F32(a)
+    }
+}
+
+impl From<NdArray<i32>> for Tensor {
+    fn from(a: NdArray<i32>) -> Tensor {
+        Tensor::I32(a)
+    }
+}
+
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    #[error(transparent)]
+    Manifest(#[from] ManifestError),
+    #[error("unknown artifact '{0}' (is `make artifacts` up to date?)")]
+    UnknownArtifact(String),
+    #[error("artifact '{name}' expects {expected} inputs, got {got}")]
+    Arity {
+        name: String,
+        expected: usize,
+        got: usize,
+    },
+    #[error("artifact '{name}' input {index}: expected {expected}, got {got}")]
+    InputMismatch {
+        name: String,
+        index: usize,
+        expected: String,
+        got: String,
+    },
+    #[error("unsupported output dtype {0}")]
+    UnsupportedDType(String),
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+}
+
+/// Stats the runtime keeps per executable.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub total_exec_seconds: f64,
+}
+
+/// The PJRT runtime: client + artifact manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime, RuntimeError> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Create a runtime from the default artifacts directory.
+    pub fn from_default_dir() -> Result<Runtime, RuntimeError> {
+        Self::new(artifact::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry, RuntimeError> {
+        self.manifest
+            .get(name)
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn load(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.entry(name)?;
+        let path = self.manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        self.stats
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_default()
+            .compiles += 1;
+        Ok(exe)
+    }
+
+    fn validate_inputs(&self, name: &str, inputs: &[Tensor]) -> Result<(), RuntimeError> {
+        let entry = self.entry(name)?;
+        if inputs.len() != entry.inputs.len() {
+            return Err(RuntimeError::Arity {
+                name: name.to_string(),
+                expected: entry.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            if t.shape() != &spec.shape || t.dtype() != spec.dtype {
+                return Err(RuntimeError::InputMismatch {
+                    name: name.to_string(),
+                    index: i,
+                    expected: format!("{}{}", spec.dtype, spec.shape),
+                    got: format!("{}{}", t.dtype(), t.shape()),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on host tensors, returning host tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
+        self.validate_inputs(name, inputs)?;
+        let exe = self.load(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_, _>>()?;
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.borrow_mut();
+            let s = stats.entry(name.to_string()).or_default();
+            s.executions += 1;
+            s.total_exec_seconds += dt;
+        }
+        // aot.py lowers with return_tuple=True: the result is an n-tuple.
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    // NOTE on device-resident state: the `xla` 0.1.6 C bindings return a
+    // multi-output computation's results as ONE tuple PjRtBuffer, and
+    // expose no buffer-level untuple — so chaining a 3-output step's
+    // buffers into the next step is not possible at this layer. The
+    // dispatch-amortization optimization is instead the fused K-step
+    // chunk artifact (`cavity_run10_n128`), measured in EXPERIMENTS §Perf.
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_dtype_shape() {
+        let t = Tensor::F32(NdArray::iota(Shape::new(&[2, 3])));
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.shape().dims(), &[2, 3]);
+        assert!(t.as_f32().is_some());
+        let i = Tensor::I32(NdArray::from_vec(Shape::new(&[2]), vec![1, 2]));
+        assert_eq!(i.dtype(), DType::I32);
+        assert!(i.as_f32().is_none());
+    }
+
+    // Literal round-trips and execution are covered by the integration
+    // tests in rust/tests/ (they need built artifacts + the PJRT client).
+}

@@ -1,0 +1,66 @@
+//! Element dtypes shared by the runtime, planner and simulator.
+
+use std::fmt;
+
+/// Element type of a tensor. Matches the dtype strings emitted by
+/// `python/compile/aot.py` into the artifact manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    Bf16,
+}
+
+impl DType {
+    /// Size of one element in bytes (drives all bandwidth accounting).
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::Bf16 => 2,
+        }
+    }
+
+    /// Parse the manifest dtype string.
+    pub fn parse(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            "bf16" => Some(DType::Bf16),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::Bf16 => "bf16",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::I32.size_bytes(), 4);
+        assert_eq!(DType::Bf16.size_bytes(), 2);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for d in [DType::F32, DType::I32, DType::Bf16] {
+            assert_eq!(DType::parse(d.name()), Some(d));
+        }
+        assert_eq!(DType::parse("f64"), None);
+    }
+}

@@ -1,0 +1,17 @@
+//! Tensor substrate: dtypes, shapes, storage-order algebra, host arrays.
+//!
+//! Conventions (mirroring `python/compile/kernels/common.py`):
+//! * Arrays are stored **row-major**: the *last* axis is fastest.
+//! * The paper's *order vector* lists dimensions fastest-first, with
+//!   "dim 0" being the fastest dimension of the default layout. Paper dim
+//!   `k` of a rank-`n` array therefore lives on row-major axis `n-1-k`.
+
+pub mod dtype;
+pub mod ndarray;
+pub mod order;
+pub mod shape;
+
+pub use dtype::DType;
+pub use ndarray::NdArray;
+pub use order::Order;
+pub use shape::Shape;

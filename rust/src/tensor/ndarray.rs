@@ -1,0 +1,180 @@
+//! Host n-dimensional array — the buffer type flowing through the
+//! coordinator, the PJRT runtime and the CPU reference implementations.
+
+use super::shape::Shape;
+use crate::util::rng::Rng;
+
+/// A dense row-major host array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NdArray<T> {
+    shape: Shape,
+    data: Vec<T>,
+}
+
+impl<T: Copy + Default> NdArray<T> {
+    /// Construct from raw parts; `data.len()` must match the shape.
+    pub fn from_vec(shape: Shape, data: Vec<T>) -> NdArray<T> {
+        assert_eq!(
+            shape.num_elements(),
+            data.len(),
+            "shape {shape} does not match data length {}",
+            data.len()
+        );
+        NdArray { shape, data }
+    }
+
+    pub fn zeros(shape: Shape) -> NdArray<T> {
+        let n = shape.num_elements();
+        NdArray {
+            shape,
+            data: vec![T::default(); n],
+        }
+    }
+
+    /// Fill from a function of the multi-index.
+    pub fn from_fn(shape: Shape, mut f: impl FnMut(&[usize]) -> T) -> NdArray<T> {
+        let n = shape.num_elements();
+        let mut data = Vec::with_capacity(n);
+        for lin in 0..n {
+            let idx = shape.delinearize(lin);
+            data.push(f(&idx));
+        }
+        NdArray { shape, data }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    pub fn get(&self, idx: &[usize]) -> T {
+        self.data[self.shape.linearize(idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let lin = self.shape.linearize(idx);
+        self.data[lin] = v;
+    }
+
+    /// Reinterpret with a new shape of equal element count (free view).
+    pub fn reshaped(self, shape: Shape) -> NdArray<T> {
+        assert_eq!(shape.num_elements(), self.data.len());
+        NdArray {
+            shape,
+            data: self.data,
+        }
+    }
+}
+
+impl NdArray<f32> {
+    /// Uniform random array (deterministic per seed) for tests/benches.
+    pub fn random(shape: Shape, rng: &mut Rng) -> NdArray<f32> {
+        let n = shape.num_elements();
+        NdArray {
+            shape,
+            data: rng.f32_vec(n),
+        }
+    }
+
+    /// `0, 1, 2, ...` — handy for exact positional checks.
+    pub fn iota(shape: Shape) -> NdArray<f32> {
+        let n = shape.num_elements();
+        NdArray {
+            shape,
+            data: (0..n).map(|i| i as f32).collect(),
+        }
+    }
+
+    /// Max |a - b| over all elements; panics on shape mismatch.
+    pub fn max_abs_diff(&self, other: &NdArray<f32>) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn allclose(&self, other: &NdArray<f32>, atol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_fn_and_get() {
+        let a = NdArray::from_fn(Shape::new(&[2, 3]), |idx| (idx[0] * 10 + idx[1]) as f32);
+        assert_eq!(a.get(&[0, 0]), 0.0);
+        assert_eq!(a.get(&[1, 2]), 12.0);
+        assert_eq!(a.data(), &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn iota_is_linear_index() {
+        let a = NdArray::iota(Shape::new(&[3, 4]));
+        for lin in 0..12 {
+            let idx = a.shape().delinearize(lin);
+            assert_eq!(a.get(&idx), lin as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_length() {
+        NdArray::from_vec(Shape::new(&[2, 2]), vec![1.0f32; 3]);
+    }
+
+    #[test]
+    fn max_abs_diff_and_allclose() {
+        let a = NdArray::from_vec(Shape::new(&[3]), vec![1.0, 2.0, 3.0]);
+        let mut b = a.clone();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+        b.data_mut()[1] = 2.5;
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        assert!(a.allclose(&b, 0.5));
+        assert!(!a.allclose(&b, 0.4));
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let a = NdArray::iota(Shape::new(&[4, 3]));
+        let b = a.clone().reshaped(Shape::new(&[2, 6]));
+        assert_eq!(a.data(), b.data());
+        assert_eq!(b.shape(), &Shape::new(&[2, 6]));
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = NdArray::random(Shape::new(&[100]), &mut r1);
+        let b = NdArray::random(Shape::new(&[100]), &mut r2);
+        assert_eq!(a, b);
+    }
+}

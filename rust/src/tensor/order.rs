@@ -1,0 +1,186 @@
+//! Order-vector algebra — the paper's §III.B storage-order formalism.
+//!
+//! An order vector is a permutation of `0..n`, fastest-changing dimension
+//! first; `[0, 1, .., n-1]` is the default order. This module converts
+//! between order vectors and row-major transpose axes, composes and
+//! inverts them, and answers the planner's coalescing questions.
+
+use thiserror::Error;
+
+/// A validated storage-order vector (paper convention, fastest-first).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Order(Vec<usize>);
+
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum OrderError {
+    #[error("order {0:?} is not a permutation of 0..{1}")]
+    NotAPermutation(Vec<usize>, usize),
+}
+
+impl Order {
+    pub fn new(v: &[usize]) -> Result<Order, OrderError> {
+        let n = v.len();
+        let mut seen = vec![false; n];
+        for &d in v {
+            if d >= n || seen[d] {
+                return Err(OrderError::NotAPermutation(v.to_vec(), n));
+            }
+            seen[d] = true;
+        }
+        Ok(Order(v.to_vec()))
+    }
+
+    pub fn identity(n: usize) -> Order {
+        Order((0..n).collect())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.0.iter().enumerate().all(|(i, &d)| i == d)
+    }
+
+    /// The fastest-changing dimension under this order.
+    pub fn fastest_dim(&self) -> usize {
+        self.0[0]
+    }
+
+    /// Row-major transpose axes realizing this reorder:
+    /// `axes[j] = n-1-order[n-1-j]` (mirrors `common.order_to_axes`).
+    pub fn to_axes(&self) -> Vec<usize> {
+        let n = self.rank();
+        (0..n).map(|j| n - 1 - self.0[n - 1 - j]).collect()
+    }
+
+    /// Inverse of [`Order::to_axes`].
+    pub fn from_axes(axes: &[usize]) -> Result<Order, OrderError> {
+        let n = axes.len();
+        // Validate as a permutation first.
+        Order::new(axes)?;
+        let v: Vec<usize> = (0..n).map(|k| n - 1 - axes[n - 1 - k]).collect();
+        Order::new(&v)
+    }
+
+    /// Inverse permutation: applying `self` then `self.inverse()` restores
+    /// the default order.
+    pub fn inverse(&self) -> Order {
+        let mut inv = vec![0usize; self.rank()];
+        for (i, &p) in self.0.iter().enumerate() {
+            inv[p] = i;
+        }
+        Order(inv)
+    }
+
+    /// Composition: first reorder by `self`, then reinterpret and reorder
+    /// the result by `other` (both as paper orders of the logical dims of
+    /// their own inputs). `compose(other)[i] = self[other[i]]`.
+    pub fn compose(&self, other: &Order) -> Order {
+        assert_eq!(self.rank(), other.rank());
+        Order(other.0.iter().map(|&i| self.0[i]).collect())
+    }
+
+    /// Does this reorder keep the input's fastest dimension among the
+    /// `k` fastest output dimensions? (The paper's coalescing criterion:
+    /// when false for small `k`, the write side cannot stay coalesced.)
+    pub fn keeps_fastest_within(&self, k: usize) -> bool {
+        self.0.iter().take(k).any(|&d| d == 0)
+    }
+}
+
+impl std::fmt::Display for Order {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn validation() {
+        assert!(Order::new(&[0, 1, 2]).is_ok());
+        assert_eq!(
+            Order::new(&[0, 0, 1]),
+            Err(OrderError::NotAPermutation(vec![0, 0, 1], 3))
+        );
+        assert!(Order::new(&[0, 3, 1]).is_err());
+        assert!(Order::new(&[]).is_ok()); // rank-0 scalar
+    }
+
+    #[test]
+    fn axes_known_cases() {
+        // Mirrors python test_orders.py exactly.
+        assert_eq!(Order::new(&[0, 1, 2]).unwrap().to_axes(), vec![0, 1, 2]);
+        assert_eq!(Order::new(&[1, 0, 2]).unwrap().to_axes(), vec![0, 2, 1]);
+        assert_eq!(Order::new(&[2, 1, 0]).unwrap().to_axes(), vec![2, 1, 0]);
+        let axes = Order::new(&[3, 2, 0, 1]).unwrap().to_axes();
+        assert_eq!(axes[3], 0);
+        assert_eq!(axes[2], 1);
+    }
+
+    #[test]
+    fn axes_roundtrip_random() {
+        let mut rng = Rng::new(0xC1060);
+        for _ in 0..200 {
+            let n = rng.gen_between(1, 7);
+            let order = Order::new(&rng.permutation(n)).unwrap();
+            let back = Order::from_axes(&order.to_axes()).unwrap();
+            assert_eq!(order, back);
+        }
+    }
+
+    #[test]
+    fn inverse_laws() {
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let n = rng.gen_between(1, 8);
+            let o = Order::new(&rng.permutation(n)).unwrap();
+            assert!(o.compose(&o.inverse()).is_identity());
+            assert!(o.inverse().compose(&o).is_identity());
+            assert_eq!(o.inverse().inverse(), o);
+        }
+    }
+
+    #[test]
+    fn compose_known() {
+        // [1,0,2] then [2,0,1] (of the intermediate) = pick intermediate
+        // dims (2,0,1) = original dims (2,1,0).
+        let a = Order::new(&[1, 0, 2]).unwrap();
+        let b = Order::new(&[2, 0, 1]).unwrap();
+        assert_eq!(a.compose(&b), Order::new(&[2, 1, 0]).unwrap());
+    }
+
+    #[test]
+    fn compose_identity_neutral() {
+        let o = Order::new(&[3, 0, 2, 1]).unwrap();
+        let id = Order::identity(4);
+        assert_eq!(o.compose(&id), o);
+        assert_eq!(id.compose(&o), o);
+    }
+
+    #[test]
+    fn fastest_dim_and_coalescing_criterion() {
+        let o = Order::new(&[1, 0, 2]).unwrap();
+        assert_eq!(o.fastest_dim(), 1);
+        assert!(o.keeps_fastest_within(2)); // dim 0 is 2nd fastest
+        assert!(!o.keeps_fastest_within(1));
+        let bad = Order::new(&[3, 2, 1, 0]).unwrap();
+        assert!(!bad.keeps_fastest_within(3));
+        assert!(bad.keeps_fastest_within(4));
+    }
+}

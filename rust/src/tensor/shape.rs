@@ -1,0 +1,130 @@
+//! Shapes and row-major stride arithmetic.
+
+use std::fmt;
+
+/// A tensor shape, row-major convention (last axis fastest).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Shape {
+        Shape(dims.to_vec())
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Row-major strides in *elements* (stride of the last axis is 1).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.0[i + 1];
+        }
+        s
+    }
+
+    /// Linearize a multi-index (must be in-bounds).
+    pub fn linearize(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.rank());
+        let strides = self.strides();
+        idx.iter().zip(&strides).map(|(i, s)| i * s).sum()
+    }
+
+    /// Inverse of [`Shape::linearize`].
+    pub fn delinearize(&self, mut lin: usize) -> Vec<usize> {
+        let mut idx = vec![0usize; self.rank()];
+        for i in (0..self.rank()).rev() {
+            idx[i] = lin % self.0[i];
+            lin /= self.0[i];
+        }
+        idx
+    }
+
+    /// Shape after transposing with row-major `axes` (out axis j = in axes[j]).
+    pub fn permuted(&self, axes: &[usize]) -> Shape {
+        Shape(axes.iter().map(|&a| self.0[a]).collect())
+    }
+
+    /// The paper lists sizes per dim 0..N-1 fastest-first; row-major reverses.
+    pub fn from_paper_dims(paper: &[usize]) -> Shape {
+        Shape(paper.iter().rev().copied().collect())
+    }
+
+    pub fn to_paper_dims(&self) -> Vec<usize> {
+        self.0.iter().rev().copied().collect()
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(Shape::new(&[2, 3, 4]).strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::new(&[5]).strides(), vec![1]);
+        assert_eq!(Shape::new(&[]).strides(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn linearize_delinearize_roundtrip() {
+        let s = Shape::new(&[3, 4, 5]);
+        for lin in 0..s.num_elements() {
+            let idx = s.delinearize(lin);
+            assert_eq!(s.linearize(&idx), lin);
+            assert!(idx.iter().zip(s.dims()).all(|(i, d)| i < d));
+        }
+    }
+
+    #[test]
+    fn linearize_known_values() {
+        let s = Shape::new(&[2, 3]);
+        assert_eq!(s.linearize(&[0, 0]), 0);
+        assert_eq!(s.linearize(&[0, 2]), 2);
+        assert_eq!(s.linearize(&[1, 0]), 3);
+        assert_eq!(s.linearize(&[1, 2]), 5);
+    }
+
+    #[test]
+    fn permuted_shape() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.permuted(&[2, 0, 1]), Shape::new(&[4, 2, 3]));
+    }
+
+    #[test]
+    fn paper_dims_reverse() {
+        // Paper "128x256x512 data set" = dims (128, 256, 512) fastest-first.
+        let s = Shape::from_paper_dims(&[128, 256, 512]);
+        assert_eq!(s, Shape::new(&[512, 256, 128]));
+        assert_eq!(s.to_paper_dims(), vec![128, 256, 512]);
+    }
+
+    #[test]
+    fn num_elements_edge_cases() {
+        assert_eq!(Shape::new(&[]).num_elements(), 1); // scalar
+        assert_eq!(Shape::new(&[0, 4]).num_elements(), 0);
+        assert_eq!(Shape::new(&[1, 1, 7]).num_elements(), 7);
+    }
+}

@@ -1,0 +1,123 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `prog SUBCOMMAND [--key value]... [--flag]... [positional]...`
+//! Flags are distinguished from key-value options by the parser caller
+//! declaring which names are boolean flags.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: BTreeSet<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("option --{0} expects a value")]
+    MissingValue(String),
+    #[error("unknown option --{0}")]
+    Unknown(String),
+}
+
+/// Parse argv (excluding program name).
+///
+/// `flag_names` lists boolean flags; everything else starting with `--`
+/// must be followed by a value. The first bare token becomes the
+/// subcommand, later bare tokens are positional.
+pub fn parse<I: IntoIterator<Item = String>>(
+    argv: I,
+    flag_names: &[&str],
+    option_names: &[&str],
+) -> Result<Args, CliError> {
+    let mut out = Args::default();
+    let mut iter = argv.into_iter().peekable();
+    while let Some(tok) = iter.next() {
+        if let Some(name) = tok.strip_prefix("--") {
+            if flag_names.contains(&name) {
+                out.flags.insert(name.to_string());
+            } else if option_names.contains(&name) {
+                let val = iter
+                    .next()
+                    .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+                out.options.insert(name.to_string(), val);
+            } else {
+                return Err(CliError::Unknown(name.to_string()));
+            }
+        } else if out.subcommand.is_none() {
+            out.subcommand = Some(tok);
+        } else {
+            out.positional.push(tok);
+        }
+    }
+    Ok(out)
+}
+
+impl Args {
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> usize {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> f64 {
+        self.opt(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.flags.contains(flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse(
+            argv("serve --port 8080 --verbose extra1 extra2"),
+            &["verbose"],
+            &["port"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse(argv("x --n 42 --r 2.5"), &[], &["n", "r"]).unwrap();
+        assert_eq!(a.opt_usize("n", 0), 42);
+        assert_eq!(a.opt_f64("r", 0.0), 2.5);
+        assert_eq!(a.opt_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing_value() {
+        assert!(parse(argv("x --bogus"), &[], &[]).is_err());
+        assert!(parse(argv("x --port"), &[], &["port"]).is_err());
+    }
+
+    #[test]
+    fn empty_argv() {
+        let a = parse(argv(""), &[], &[]).unwrap();
+        assert!(a.subcommand.is_none());
+        assert!(a.positional.is_empty());
+    }
+}

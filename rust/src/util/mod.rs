@@ -1,0 +1,9 @@
+//! Infrastructure substrates built in-repo (the offline crate registry
+//! only carries the `xla` closure — see DESIGN.md §Dependencies):
+//! a minimal JSON parser, a seeded PRNG for property tests, wall-clock
+//! statistics, and a tiny CLI argument parser.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod timing;

@@ -1,0 +1,120 @@
+//! Wall-clock measurement + summary statistics for the bench harness
+//! (criterion is unavailable offline; this provides the subset we need:
+//! warmup, repeated timed runs, robust summary stats).
+
+use std::time::Instant;
+
+/// Summary statistics over a set of per-iteration timings (seconds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: samples[0],
+            max: samples[n - 1],
+            p50: percentile(&samples, 0.50),
+            p95: percentile(&samples, 0.95),
+        }
+    }
+
+    /// Effective bandwidth in GB/s given bytes moved per iteration.
+    pub fn bandwidth_gbs(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.p50 / 1e9
+    }
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Run `f` for `warmup` untimed then `iters` timed iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Time a single invocation.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant_samples() {
+        let s = Stats::from_samples(vec![2.0; 10]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 2.0);
+        assert_eq!(s.p50, 2.0);
+        assert_eq!(s.p95, 2.0);
+    }
+
+    #[test]
+    fn stats_of_known_distribution() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!((s.p95 - 95.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bandwidth_computation() {
+        let s = Stats::from_samples(vec![0.5]);
+        // 1 GB in 0.5 s = 2 GB/s
+        assert!((s.bandwidth_gbs(1_000_000_000) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let s = bench(3, 10, || count += 1);
+        assert_eq!(count, 13);
+        assert_eq!(s.n, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_samples_panic() {
+        Stats::from_samples(vec![]);
+    }
+}

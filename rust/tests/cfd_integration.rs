@@ -1,0 +1,101 @@
+//! CFD application end-to-end: PJRT-driven JAX/Pallas step vs the pure
+//! Rust CPU solver — the conclusion's demo app, validated across stacks.
+
+mod common;
+
+use common::runtime_or_skip;
+use gdrk::cfd::{CpuSolver, GpuModelDriver, Params};
+
+#[test]
+fn model_path_matches_cpu_solver() {
+    let Some(rt) = runtime_or_skip("cfd-match") else { return };
+    let n = 64;
+    let steps = 20;
+    let driver = GpuModelDriver::new(&rt, n).unwrap();
+    let run = driver.run(steps, steps).unwrap();
+
+    let mut cpu = CpuSolver::new(Params::default_for(n, 1000.0, 20));
+    cpu.run(steps);
+
+    // Same discretization in f32: fields agree to fp tolerance.
+    let scale = cpu
+        .omega
+        .data()
+        .iter()
+        .fold(0.0f32, |m, &x| m.max(x.abs()))
+        .max(1.0);
+    let omega_err = run.final_omega.max_abs_diff(&cpu.omega) / scale;
+    let psi_err = run.final_psi.max_abs_diff(&cpu.psi);
+    assert!(omega_err < 1e-4, "omega rel err {omega_err}");
+    assert!(psi_err < 1e-5, "psi abs err {psi_err}");
+}
+
+#[test]
+fn residual_decreases_and_flow_develops() {
+    let Some(rt) = runtime_or_skip("cfd-residual") else { return };
+    let driver = GpuModelDriver::new(&rt, 64).unwrap();
+    let run = driver.run(120, 20).unwrap();
+    assert!(run.final_residual.is_finite());
+    let first = run.residual_log.first().unwrap().1;
+    let last = run.residual_log.last().unwrap().1;
+    assert!(last < first, "residual did not decay: {first} -> {last}");
+    // Primary vortex: psi extremum in the lid half.
+    let n = 64;
+    let psi = run.final_psi.data();
+    let (mut best, mut bi) = (0.0f32, 0usize);
+    for i in 1..n - 1 {
+        for j in 1..n - 1 {
+            let v = psi[i * n + j].abs();
+            if v > best {
+                best = v;
+                bi = i;
+            }
+        }
+    }
+    assert!(best > 1e-4, "no circulation developed");
+    assert!(bi > n / 2, "vortex core at row {bi}");
+}
+
+#[test]
+fn chunked_equals_stepwise_dispatch() {
+    let Some(rt) = runtime_or_skip("cfd-chunked") else { return };
+    let driver = GpuModelDriver::new(&rt, 128).unwrap();
+    assert!(driver.has_chunk());
+    let a = driver.run_chunked(10).unwrap();
+    let b = driver.run_stepwise(10, 10).unwrap();
+    // Same discretization; XLA fuses the loop body identically, so the
+    // fields agree to f32 tolerance.
+    let scale = b
+        .final_omega
+        .data()
+        .iter()
+        .fold(0.0f32, |m, &x| m.max(x.abs()))
+        .max(1.0);
+    assert!(a.final_omega.max_abs_diff(&b.final_omega) / scale < 1e-5);
+    assert!(a.final_psi.max_abs_diff(&b.final_psi) < 1e-6);
+}
+
+#[test]
+fn run10_chunk_matches_ten_steps() {
+    let Some(rt) = runtime_or_skip("cfd-chunk") else { return };
+    let n = 128;
+    let driver = GpuModelDriver::new(&rt, n).unwrap();
+    let stepwise = driver.run(10, 10).unwrap();
+
+    // One invocation of the fused 10-step chunk artifact.
+    use gdrk::runtime::Tensor;
+    use gdrk::tensor::{NdArray, Shape};
+    let zero = Tensor::F32(NdArray::zeros(Shape::new(&[n, n])));
+    let out = rt
+        .execute("cavity_run10_n128", &[zero.clone(), zero])
+        .unwrap();
+    let omega = out[0].as_f32().unwrap();
+    let psi = out[1].as_f32().unwrap();
+    let scale = omega
+        .data()
+        .iter()
+        .fold(0.0f32, |m, &x| m.max(x.abs()))
+        .max(1.0);
+    assert!(stepwise.final_omega.max_abs_diff(omega) / scale < 1e-5);
+    assert!(stepwise.final_psi.max_abs_diff(psi) < 1e-6);
+}

@@ -1,0 +1,39 @@
+//! Shared helpers for integration tests (need `make artifacts` first).
+
+use gdrk::runtime::{Runtime, Tensor};
+use gdrk::tensor::{NdArray, Shape};
+use gdrk::util::rng::Rng;
+
+/// Locate the artifacts dir relative to the crate root; None (with a
+/// notice) when artifacts have not been generated — `make test` always
+/// generates them first, so a skip only happens on bare `cargo test`.
+pub fn runtime_or_skip(test: &str) -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP {test}: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    match Runtime::new(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => panic!("runtime init failed: {e}"),
+    }
+}
+
+pub fn random_f32(shape: &[usize], seed: u64) -> NdArray<f32> {
+    let mut rng = Rng::new(seed);
+    NdArray::random(Shape::new(shape), &mut rng)
+}
+
+pub fn f32_out(outputs: &[Tensor], i: usize) -> &NdArray<f32> {
+    outputs[i].as_f32().expect("f32 output")
+}
+
+/// Relative Linf error between two arrays.
+pub fn rel_err(a: &NdArray<f32>, b: &NdArray<f32>) -> f32 {
+    let scale = b
+        .data()
+        .iter()
+        .fold(0.0f32, |m, &x| m.max(x.abs()))
+        .max(1e-12);
+    a.max_abs_diff(b) / scale
+}

@@ -1,0 +1,141 @@
+//! Coordinator service over real artifacts: correctness under
+//! concurrency, batching behavior, metrics accounting.
+
+mod common;
+
+use common::{random_f32, runtime_or_skip};
+use gdrk::coordinator::{Metrics, Service, ServiceConfig};
+use gdrk::ops::Op;
+use gdrk::runtime::Tensor;
+use gdrk::tensor::Order;
+use std::sync::Arc;
+
+fn service_or_skip(test: &str) -> Option<Service> {
+    // Reuse the artifact presence check.
+    runtime_or_skip(test)?;
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Some(
+        Service::start(ServiceConfig {
+            artifacts_dir: dir,
+            max_batch: 4,
+            preload: vec![],
+        })
+        .expect("service start"),
+    )
+}
+
+#[test]
+fn served_results_match_reference() {
+    let Some(service) = service_or_skip("serve-correct") else { return };
+    let x = random_f32(&[32, 48, 64], 0x77);
+    let out = service
+        .call("permute3d_o201", vec![Tensor::F32(x.clone())])
+        .expect("call ok");
+    let want = Op::Reorder {
+        order: Order::new(&[2, 0, 1]).unwrap(),
+    }
+    .reference(&[&x])
+    .unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), &want[0]);
+    service.shutdown();
+}
+
+#[test]
+fn unknown_artifact_fails_cleanly() {
+    let Some(service) = service_or_skip("serve-unknown") else { return };
+    let err = service
+        .call("not_a_kernel", vec![])
+        .expect_err("must fail");
+    assert!(err.contains("unknown artifact"), "got: {err}");
+    // Service still alive afterwards.
+    let x = random_f32(&[1 << 22], 1);
+    assert!(service.call("copy_4m", vec![Tensor::F32(x)]).is_ok());
+    service.shutdown();
+}
+
+#[test]
+fn concurrent_submitters_all_complete() {
+    let Some(service) = service_or_skip("serve-concurrent") else { return };
+    let service = Arc::new(service);
+    let threads = 8;
+    let per_thread = 12;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let svc = service.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0;
+            for i in 0..per_thread {
+                let x = random_f32(&[32, 48, 64], (t * 100 + i) as u64);
+                let artifact = if i % 2 == 0 {
+                    "permute3d_o102"
+                } else {
+                    "permute3d_o210"
+                };
+                let out = svc.call(artifact, vec![Tensor::F32(x.clone())]).unwrap();
+                // Spot-check correctness on every response.
+                let order = if i % 2 == 0 {
+                    Order::new(&[1, 0, 2]).unwrap()
+                } else {
+                    Order::new(&[2, 1, 0]).unwrap()
+                };
+                let want = Op::Reorder { order }.reference(&[&x]).unwrap();
+                assert_eq!(out[0].as_f32().unwrap(), &want[0]);
+                ok += 1;
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, threads * per_thread);
+
+    let m = service.metrics();
+    assert_eq!(Metrics::get(&m.submitted), (threads * per_thread) as u64);
+    assert_eq!(Metrics::get(&m.completed), (threads * per_thread) as u64);
+    assert_eq!(Metrics::get(&m.failed), 0);
+    assert!(Metrics::get(&m.batches) >= 1);
+    assert_eq!(m.exec_latency.count(), (threads * per_thread) as u64);
+}
+
+#[test]
+fn batching_amortizes_same_artifact_bursts() {
+    let Some(service) = service_or_skip("serve-batch") else { return };
+    // Burst of identical-artifact requests: batches < requests proves
+    // grouping happened (max_batch = 4).
+    let x = random_f32(&[32, 48, 64], 0x99);
+    let mut pending = Vec::new();
+    for _ in 0..16 {
+        let (_, rx) = service.submit("permute3d_o120", vec![Tensor::F32(x.clone())]);
+        pending.push(rx);
+    }
+    for rx in pending {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let m = service.metrics();
+    assert_eq!(Metrics::get(&m.completed), 16);
+    assert!(
+        Metrics::get(&m.batches) <= 16,
+        "batches {} should not exceed requests",
+        Metrics::get(&m.batches)
+    );
+    service.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_work() {
+    let Some(service) = service_or_skip("serve-shutdown") else { return };
+    let x = random_f32(&[1 << 22], 3);
+    let mut pending = Vec::new();
+    for _ in 0..8 {
+        let (_, rx) = service.submit("copy_4m", vec![Tensor::F32(x.clone())]);
+        pending.push(rx);
+    }
+    service.shutdown(); // must drain, not drop
+    let mut done = 0;
+    for rx in pending {
+        if let Ok(resp) = rx.recv() {
+            assert!(resp.is_ok());
+            done += 1;
+        }
+    }
+    assert_eq!(done, 8, "shutdown dropped in-flight work");
+}

@@ -1,0 +1,273 @@
+//! End-to-end: AOT HLO artifacts executed via PJRT vs the Rust CPU
+//! golden references — the cross-language correctness anchor.
+
+mod common;
+
+use common::{f32_out, random_f32, rel_err, runtime_or_skip};
+use gdrk::ops::{self, Op, StencilSpec};
+use gdrk::runtime::Tensor;
+use gdrk::tensor::{NdArray, Order, Shape};
+
+#[test]
+fn all_six_permute_orders_match_reference() {
+    let Some(rt) = runtime_or_skip("permute") else { return };
+    let x = random_f32(&[32, 48, 64], 0xA);
+    for order in [
+        [0, 1, 2],
+        [0, 2, 1],
+        [1, 0, 2],
+        [1, 2, 0],
+        [2, 0, 1],
+        [2, 1, 0],
+    ] {
+        let tag: String = order.iter().map(|d| d.to_string()).collect();
+        let name = format!("permute3d_o{tag}");
+        let out = rt
+            .execute(&name, &[Tensor::F32(x.clone())])
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let want = Op::Reorder {
+            order: Order::new(&order).unwrap(),
+        }
+        .reference(&[&x])
+        .unwrap();
+        assert_eq!(f32_out(&out, 0), &want[0], "order {order:?}");
+    }
+}
+
+#[test]
+fn reorder_entries_match_reference() {
+    let Some(rt) = runtime_or_skip("reorder") else { return };
+    let cases: [(&str, &[usize], Vec<usize>); 4] = [
+        ("reorder_r102", &[1, 0, 2], vec![128, 128, 128]),
+        ("reorder_r1023", &[1, 0, 2, 3], vec![1, 128, 128, 128]),
+        ("reorder_r3201", &[3, 2, 0, 1], vec![128, 1, 128, 128]),
+        ("reorder_r30214", &[3, 0, 2, 1, 4], vec![16, 128, 1, 16, 128]),
+    ];
+    for (name, order, jshape) in cases {
+        let x = random_f32(&jshape, 0xB);
+        let out = rt
+            .execute(name, &[Tensor::F32(x.clone())])
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        let want = Op::Reorder {
+            order: Order::new(order).unwrap(),
+        }
+        .reference(&[&x])
+        .unwrap();
+        assert_eq!(f32_out(&out, 0), &want[0], "{name}");
+    }
+}
+
+#[test]
+fn reorder_collapse_entry() {
+    let Some(rt) = runtime_or_skip("collapse") else { return };
+    let x = random_f32(&[128, 1, 128, 128], 0xC);
+    let out = rt.execute("reorder_r3201_c2", &[Tensor::F32(x.clone())]).unwrap();
+    let want = Op::ReorderCollapse {
+        order: Order::new(&[3, 2, 0, 1]).unwrap(),
+        out_rank: 2,
+    }
+    .reference(&[&x])
+    .unwrap();
+    assert_eq!(f32_out(&out, 0), &want[0]);
+}
+
+#[test]
+fn subarray_entry() {
+    let Some(rt) = runtime_or_skip("subarray") else { return };
+    let x = random_f32(&[256, 256], 0xD);
+    let out = rt.execute("subarray_256", &[Tensor::F32(x.clone())]).unwrap();
+    let want = Op::Subarray {
+        base: vec![32, 64],
+        shape: vec![128, 128],
+    }
+    .reference(&[&x])
+    .unwrap();
+    assert_eq!(f32_out(&out, 0), &want[0]);
+}
+
+#[test]
+fn copy_family_matches_reference() {
+    let Some(rt) = runtime_or_skip("copy") else { return };
+    let x = random_f32(&[1 << 22], 0xE);
+    let out = rt.execute("copy_4m", &[Tensor::F32(x.clone())]).unwrap();
+    assert_eq!(f32_out(&out, 0), &x);
+
+    let out = rt.execute("scale_4m", &[Tensor::F32(x.clone())]).unwrap();
+    let want: Vec<f32> = x.data().iter().map(|v| 1.5 * v).collect();
+    assert_eq!(
+        f32_out(&out, 0),
+        &NdArray::from_vec(Shape::new(&[1 << 22]), want)
+    );
+
+    let x2 = random_f32(&[1 << 21], 0xF);
+    let out = rt.execute("read_range_1m", &[Tensor::F32(x2.clone())]).unwrap();
+    let want = ops::copy::read_range(&x2, 4096, 1 << 20).unwrap();
+    assert_eq!(f32_out(&out, 0), &want);
+
+    let x3 = random_f32(&[1 << 20], 0x10);
+    let out = rt.execute("read_strided_s2", &[Tensor::F32(x3.clone())]).unwrap();
+    let want = ops::copy::read_strided(&x3, 0, 2, 1 << 19).unwrap();
+    assert_eq!(f32_out(&out, 0), &want);
+}
+
+#[test]
+fn gather_matches_reference() {
+    let Some(rt) = runtime_or_skip("gather") else { return };
+    let x = random_f32(&[1 << 20], 0x11);
+    let mut rng = gdrk::util::rng::Rng::new(0x12);
+    let idx: Vec<i32> = (0..(1 << 18)).map(|_| rng.gen_range(1 << 20) as i32).collect();
+    let idx_nd = NdArray::from_vec(Shape::new(&[1 << 18]), idx.clone());
+    let out = rt
+        .execute("gather_256k", &[Tensor::F32(x.clone()), Tensor::I32(idx_nd)])
+        .unwrap();
+    let idx_usize: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
+    let want = ops::copy::gather(&x, &idx_usize).unwrap();
+    assert_eq!(f32_out(&out, 0), &want);
+}
+
+#[test]
+fn interlace_family_roundtrip_and_reference() {
+    let Some(rt) = runtime_or_skip("interlace") else { return };
+    for n in [2usize, 4, 8] {
+        let arrays: Vec<NdArray<f32>> =
+            (0..n).map(|j| random_f32(&[1 << 18], 0x20 + j as u64)).collect();
+        let inputs: Vec<Tensor> = arrays.iter().cloned().map(Tensor::F32).collect();
+        let out = rt.execute(&format!("interlace_n{n}"), &inputs).unwrap();
+        let refs: Vec<&NdArray<f32>> = arrays.iter().collect();
+        let want = ops::interlace::interlace(&refs).unwrap();
+        assert_eq!(f32_out(&out, 0), &want, "interlace n={n}");
+
+        let back = rt
+            .execute(&format!("deinterlace_n{n}"), &[out[0].clone()])
+            .unwrap();
+        assert_eq!(back.len(), n);
+        for (j, a) in arrays.iter().enumerate() {
+            assert_eq!(f32_out(&back, j), a, "deinterlace n={n} lane {j}");
+        }
+    }
+}
+
+#[test]
+fn stencil_family_matches_reference() {
+    let Some(rt) = runtime_or_skip("stencil") else { return };
+    let x = random_f32(&[512, 512], 0x30);
+    for order in [1usize, 2, 3, 4] {
+        let out = rt
+            .execute(&format!("fd{order}_512"), &[Tensor::F32(x.clone())])
+            .unwrap();
+        let want = ops::stencil::apply(
+            &x,
+            &StencilSpec::FdLaplacian {
+                order,
+                scale: 1.0,
+            },
+        )
+        .unwrap();
+        let err = rel_err(f32_out(&out, 0), &want);
+        assert!(err < 2e-5, "fd{order}: rel err {err}");
+    }
+    let out = rt.execute("smooth3x3_512", &[Tensor::F32(x.clone())]).unwrap();
+    let want = ops::stencil::apply(
+        &x,
+        &StencilSpec::Conv {
+            radius: 1,
+            mask: vec![1.0 / 9.0; 9],
+        },
+    )
+    .unwrap();
+    let err = rel_err(f32_out(&out, 0), &want);
+    assert!(err < 1e-5, "smooth3x3 rel err {err}");
+}
+
+#[test]
+fn model_pipelines() {
+    let Some(rt) = runtime_or_skip("model") else { return };
+    // permute_roundtrip's second output is the device-side self-check.
+    let x = random_f32(&[32, 48, 64], 0x40);
+    let out = rt.execute("permute_roundtrip", &[Tensor::F32(x)]).unwrap();
+    let err = f32_out(&out, 1);
+    assert_eq!(err.data(), &[0.0], "roundtrip error must be exactly zero");
+
+    // bandwidth_chain = 1.0001 * x through three streaming kernels.
+    let x = random_f32(&[1 << 22], 0x41);
+    let out = rt.execute("bandwidth_chain_4m", &[Tensor::F32(x.clone())]).unwrap();
+    let got = f32_out(&out, 0);
+    let want: Vec<f32> = x.data().iter().map(|v| 1.0001 * v).collect();
+    let want = NdArray::from_vec(Shape::new(&[1 << 22]), want);
+    assert!(rel_err(got, &want) < 1e-6);
+
+    // image_pipeline == deinterlace + smooth + interlace composition.
+    let packed = random_f32(&[256, 768], 0x42);
+    let out = rt.execute("image_pipeline_256", &[Tensor::F32(packed.clone())]).unwrap();
+    let flat = packed.clone().reshaped(Shape::new(&[256 * 768]));
+    let planes = ops::interlace::deinterlace(&flat, 3).unwrap();
+    let smoothed: Vec<NdArray<f32>> = planes
+        .into_iter()
+        .map(|p| {
+            ops::stencil::apply(
+                &p.reshaped(Shape::new(&[256, 256])),
+                &StencilSpec::Conv {
+                    radius: 1,
+                    mask: vec![1.0 / 9.0; 9],
+                },
+            )
+            .unwrap()
+            .reshaped(Shape::new(&[256 * 256]))
+        })
+        .collect();
+    let refs: Vec<&NdArray<f32>> = smoothed.iter().collect();
+    let want = ops::interlace::interlace(&refs)
+        .unwrap()
+        .reshaped(Shape::new(&[256, 768]));
+    let err = rel_err(f32_out(&out, 0), &want);
+    assert!(err < 1e-5, "image pipeline rel err {err}");
+}
+
+#[test]
+fn input_validation_errors() {
+    let Some(rt) = runtime_or_skip("validation") else { return };
+    // Wrong shape.
+    let bad = Tensor::F32(random_f32(&[8, 8], 1));
+    assert!(rt.execute("copy_4m", &[bad]).is_err());
+    // Wrong arity.
+    assert!(rt.execute("copy_4m", &[]).is_err());
+    // Unknown artifact.
+    let x = Tensor::F32(random_f32(&[4], 1));
+    assert!(rt.execute("nope", &[x]).is_err());
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime_or_skip("cache") else { return };
+    let x = random_f32(&[32, 48, 64], 0x50);
+    for _ in 0..3 {
+        rt.execute("permute3d_o012", &[Tensor::F32(x.clone())]).unwrap();
+    }
+    let stats = rt.stats();
+    let s = &stats["permute3d_o012"];
+    assert_eq!(s.compiles, 1);
+    assert_eq!(s.executions, 3);
+}
+
+#[test]
+fn gridding_rot90_artifact() {
+    // The paper's future-work extension: affine coordinate transform.
+    let Some(rt) = runtime_or_skip("gridding") else { return };
+    let x = random_f32(&[256, 256], 0x60);
+    let out = rt.execute("regrid_rot90_256", &[Tensor::F32(x.clone())]).unwrap();
+    // out[i, j] = x[j, 255 - i]  (90-degree CCW rotation).
+    let got = f32_out(&out, 0);
+    let want = NdArray::from_fn(Shape::new(&[256, 256]), |idx| x.get(&[idx[1], 255 - idx[0]]));
+    assert_eq!(got, &want);
+}
+
+#[test]
+fn gridding_scale2_artifact() {
+    let Some(rt) = runtime_or_skip("gridding-scale") else { return };
+    let x = random_f32(&[128, 128], 0x61);
+    let out = rt.execute("regrid_scale2_128", &[Tensor::F32(x.clone())]).unwrap();
+    let got = f32_out(&out, 0);
+    assert_eq!(got.shape(), &Shape::new(&[256, 256]));
+    let want = NdArray::from_fn(Shape::new(&[256, 256]), |idx| x.get(&[idx[0] / 2, idx[1] / 2]));
+    assert_eq!(got, &want);
+}

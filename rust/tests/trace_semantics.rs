@@ -1,0 +1,198 @@
+//! Trace-semantics property tests: the simulator's kernel descriptors
+//! must *functionally* implement the operations they claim to model.
+//!
+//! For a permute descriptor we replay its exact access trace: every read
+//! address is recorded in order, every write address likewise; executing
+//! "write[i] <- read[i]" through the traced addresses must reproduce
+//! `ops::reference` exactly. This pins the gpusim bandwidth numbers to
+//! the real operation — the simulator cannot drift into modeling
+//! something easier than the paper's kernels.
+
+use gdrk::gpusim::GpuKernel;
+use gdrk::kernels::{align_up, NaivePermuteKernel, TiledPermuteKernel};
+use gdrk::ops::permute;
+use gdrk::planner::{plan_reorder, Movement, Plan};
+use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::util::rng::Rng;
+
+/// Replay a permute kernel's trace as an actual data movement.
+///
+/// The staged kernels emit reads in *input-tile* order and writes in
+/// *output-tile* order; within one block both cover the same tile, so
+/// the element-wise pairing must go through the tile's logical layout:
+/// we gather each block's reads into a tile buffer (input layout),
+/// transpose it, and scatter per the block's writes. For unstaged
+/// (row-to-row) kernels reads and writes pair 1:1.
+fn replay_permute(kernel: &TiledPermuteKernel, x: &NdArray<f32>) -> NdArray<f32> {
+    let plan: &Plan = &kernel.plan;
+    let eb = 4u64;
+    let in_bytes = plan.in_shape.num_elements() as u64 * eb;
+    let out_base = align_up(in_bytes);
+    let out_elems = plan.out_shape.num_elements();
+    let mut out = vec![f32::NAN; out_elems];
+    let staged = matches!(
+        plan.movement,
+        Movement::TiledTranspose { staged: true, .. }
+    );
+
+    for b in 0..kernel.launch().grid_blocks {
+        let mut reads: Vec<u64> = Vec::new();
+        let mut writes: Vec<u64> = Vec::new();
+        kernel.block_accesses(b, &mut |hw| {
+            for lane in 0..hw.lanes as usize {
+                if hw.kind.is_read() {
+                    reads.push(hw.addr(lane));
+                } else {
+                    writes.push(hw.addr(lane));
+                }
+            }
+        });
+        assert_eq!(reads.len(), writes.len(), "block {b} tile mismatch");
+        let vals: Vec<f32> = reads
+            .iter()
+            .map(|&a| {
+                assert_eq!(a % eb, 0);
+                let idx = (a / eb) as usize;
+                assert!(idx < x.len(), "read oob: {idx}");
+                x.data()[idx]
+            })
+            .collect();
+        let n_vals = if staged {
+            // Reads walk (c, r) = column-major over the (rows=writes)
+            // tile; writes walk (r, c). Transpose the tile buffer.
+            let (ext_c, ext_r) = tile_extents(plan, b);
+            assert_eq!(vals.len(), ext_c * ext_r);
+            let mut t = vec![0.0f32; vals.len()];
+            for c in 0..ext_c {
+                for r in 0..ext_r {
+                    t[r * ext_c + c] = vals[c * ext_r + r];
+                }
+            }
+            t
+        } else {
+            vals
+        };
+        for (&a, v) in writes.iter().zip(n_vals) {
+            assert!(a >= out_base, "write below output base");
+            let idx = ((a - out_base) / eb) as usize;
+            assert!(idx < out_elems, "write oob: {idx}");
+            assert!(out[idx].is_nan(), "double write at {idx}");
+            out[idx] = v;
+        }
+    }
+    assert!(out.iter().all(|v| !v.is_nan()), "output not fully covered");
+    NdArray::from_vec(plan.out_shape.clone(), out)
+}
+
+fn tile_extents(plan: &Plan, block: usize) -> (usize, usize) {
+    let n = plan.out_shape.rank();
+    let g = plan.block_coords(block);
+    let ext = |axis: usize| {
+        let start = g[axis] * plan.block_extent[axis];
+        plan.block_extent[axis].min(plan.out_shape.dims()[axis] - start)
+    };
+    match plan.movement {
+        Movement::TiledTranspose { out_row_axis, .. } => (ext(n - 1), ext(out_row_axis)),
+        _ => (ext(n - 1), 1),
+    }
+}
+
+#[test]
+fn tiled_permute_trace_implements_the_op_table1_orders() {
+    let shape = Shape::new(&[6, 40, 72]);
+    let mut rng = Rng::new(0x77ACE);
+    let x = NdArray::random(shape.clone(), &mut rng);
+    for order in [
+        [0usize, 1, 2],
+        [0, 2, 1],
+        [1, 0, 2],
+        [1, 2, 0],
+        [2, 0, 1],
+        [2, 1, 0],
+    ] {
+        for diagonal in [false, true] {
+            let ord = Order::new(&order).unwrap();
+            let plan = plan_reorder(&shape, &ord, diagonal).unwrap();
+            let k = TiledPermuteKernel::new(plan);
+            let got = replay_permute(&k, &x);
+            let want = permute::permute(&x, &ord).unwrap();
+            assert_eq!(got, want, "order {order:?} diagonal={diagonal}");
+        }
+    }
+}
+
+#[test]
+fn tiled_permute_trace_random_shapes_property() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..25 {
+        let n = rng.gen_between(2, 5);
+        let dims: Vec<usize> = (0..n).map(|_| rng.gen_between(1, 36)).collect();
+        let order = Order::new(&rng.permutation(n)).unwrap();
+        let shape = Shape::new(&dims);
+        let x = NdArray::random(shape.clone(), &mut rng);
+        let plan = plan_reorder(&shape, &order, rng.gen_bool()).unwrap();
+        let k = TiledPermuteKernel::new(plan);
+        let got = replay_permute(&k, &x);
+        let want = permute::permute(&x, &order).unwrap();
+        assert_eq!(got, want, "case {case}: dims {dims:?} order {order}");
+    }
+}
+
+#[test]
+fn naive_permute_trace_implements_the_op() {
+    // The baseline descriptor must ALSO be the real op (a broken baseline
+    // would make the bench comparisons meaningless).
+    let shape = Shape::new(&[5, 24, 40]);
+    let mut rng = Rng::new(0xAB);
+    let x = NdArray::random(shape.clone(), &mut rng);
+    for order in [[1usize, 0, 2], [2, 1, 0]] {
+        let ord = Order::new(&order).unwrap();
+        let plan = plan_reorder(&shape, &ord, false).unwrap();
+        let k = NaivePermuteKernel::new(plan.clone());
+        let eb = 4u64;
+        let out_base = align_up(shape.num_elements() as u64 * eb);
+        let mut out = vec![f32::NAN; shape.num_elements()];
+        for b in 0..k.launch().grid_blocks {
+            let mut reads = Vec::new();
+            let mut writes = Vec::new();
+            k.block_accesses(b, &mut |hw| {
+                for lane in 0..hw.lanes as usize {
+                    if hw.kind.is_read() {
+                        reads.push(hw.addr(lane));
+                    } else {
+                        writes.push(hw.addr(lane));
+                    }
+                }
+            });
+            assert_eq!(reads.len(), writes.len());
+            for (ra, wa) in reads.iter().zip(&writes) {
+                let src = (ra / eb) as usize;
+                let dst = ((wa - out_base) / eb) as usize;
+                assert!(out[dst].is_nan(), "double write");
+                out[dst] = x.data()[src];
+            }
+        }
+        let got = NdArray::from_vec(plan.out_shape.clone(), out);
+        let want = permute::permute(&x, &ord).unwrap();
+        assert_eq!(got, want, "naive order {order:?}");
+    }
+}
+
+#[test]
+fn memcpy_and_interlace_traces_cover_exactly() {
+    use gdrk::kernels::{DeinterlaceKernel, InterlaceKernel, MemcpyKernel};
+    // Every descriptor's useful bytes must equal its trace's lane bytes —
+    // guards against double-counted or missing traffic in the benches.
+    let kernels: Vec<Box<dyn GpuKernel>> = vec![
+        Box::new(MemcpyKernel::f32(10_000)),
+        Box::new(InterlaceKernel::f32(5, 1_000)),
+        Box::new(DeinterlaceKernel::f32(7, 900)),
+    ];
+    for k in kernels {
+        let mut useful = 0u64;
+        for b in 0..k.launch().grid_blocks {
+            k.block_accesses(b, &mut |hw| useful += hw.useful_bytes());
+        }
+        assert_eq!(useful, k.useful_bytes(), "{}", k.name());
+    }
+}
