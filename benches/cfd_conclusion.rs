@@ -46,6 +46,10 @@ fn main() {
         println!("SKIP real-path comparison: artifacts/ not built (make artifacts)");
         return;
     }
+    if !Runtime::pjrt_available() {
+        println!("SKIP real-path comparison: built without the pjrt feature");
+        return;
+    }
     let rt = Runtime::new(&dir).expect("runtime");
     let n = 128;
     let steps = 100;

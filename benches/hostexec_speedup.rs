@@ -1,0 +1,204 @@
+//! Naive-vs-hostexec host throughput for every rearrangement op — the
+//! measurement behind the hostexec backend's existence. Runs on a bare
+//! checkout (no artifacts, no PJRT) and writes the machine-readable
+//! `BENCH_hostexec.json` so the perf trajectory is tracked across PRs.
+//!
+//! Bandwidth accounting matches the paper: useful bytes = read + write
+//! of the payload, GB/s at the p50 wall clock.
+
+use gdrk::hostexec::pool;
+use gdrk::ops::{Op, StencilSpec};
+use gdrk::report::{gbs, BenchRecord, Table};
+use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::util::rng::Rng;
+use gdrk::util::timing::bench;
+
+struct Case {
+    record: BenchRecord,
+    op: Op,
+    inputs: Vec<NdArray<f32>>,
+    bytes: usize,
+}
+
+fn permute_case(shape: &[usize], order: &[usize], rng: &mut Rng) -> Case {
+    let x = NdArray::random(Shape::new(shape), rng);
+    let bytes = 2 * 4 * x.len();
+    Case {
+        record: BenchRecord {
+            op: "permute3d".into(),
+            shape: format!("{}", x.shape()),
+            order: Order::new(order).unwrap().to_string(),
+            naive_gbs: 0.0,
+            hostexec_gbs: 0.0,
+        },
+        op: Op::Reorder {
+            order: Order::new(order).unwrap(),
+        },
+        inputs: vec![x],
+        bytes,
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(0x40057);
+    let mut cases: Vec<Case> = Vec::new();
+
+    // The paper's Table-1 shape on this host (row-major [64, 256, 512],
+    // the hotpath bench's permute3d workload).
+    for order in [[0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
+        cases.push(permute_case(&[64, 256, 512], &order, &mut rng));
+    }
+
+    // Streaming copy.
+    let x = NdArray::random(Shape::new(&[1 << 22]), &mut rng);
+    cases.push(Case {
+        record: BenchRecord {
+            op: "copy".into(),
+            shape: format!("{}", x.shape()),
+            order: "-".into(),
+            naive_gbs: 0.0,
+            hostexec_gbs: 0.0,
+        },
+        op: Op::Copy,
+        bytes: 2 * 4 * x.len(),
+        inputs: vec![x],
+    });
+
+    // Interlace / deinterlace, Table-3's n = 4.
+    let lanes: Vec<NdArray<f32>> = (0..4)
+        .map(|_| NdArray::random(Shape::new(&[1 << 18]), &mut rng))
+        .collect();
+    cases.push(Case {
+        record: BenchRecord {
+            op: "interlace".into(),
+            shape: format!("4 x {}", lanes[0].shape()),
+            order: "n=4".into(),
+            naive_gbs: 0.0,
+            hostexec_gbs: 0.0,
+        },
+        op: Op::Interlace { n: 4 },
+        bytes: 2 * 4 * 4 * (1 << 18),
+        inputs: lanes,
+    });
+    let packed = NdArray::random(Shape::new(&[1 << 20]), &mut rng);
+    cases.push(Case {
+        record: BenchRecord {
+            op: "deinterlace".into(),
+            shape: format!("{}", packed.shape()),
+            order: "n=4".into(),
+            naive_gbs: 0.0,
+            hostexec_gbs: 0.0,
+        },
+        op: Op::Deinterlace { n: 4 },
+        bytes: 2 * 4 * packed.len(),
+        inputs: vec![packed],
+    });
+
+    // Generic N->M reorder (Table 2's collapse) and subarray.
+    let x = NdArray::random(Shape::new(&[16, 128, 16, 128]), &mut rng);
+    cases.push(Case {
+        record: BenchRecord {
+            op: "reorder_collapse".into(),
+            shape: format!("{}", x.shape()),
+            order: "[3 0 2 1] -> rank 2".into(),
+            naive_gbs: 0.0,
+            hostexec_gbs: 0.0,
+        },
+        op: Op::ReorderCollapse {
+            order: Order::new(&[3, 0, 2, 1]).unwrap(),
+            out_rank: 2,
+        },
+        bytes: 2 * 4 * x.len(),
+        inputs: vec![x],
+    });
+    let x = NdArray::random(Shape::new(&[2048, 2048]), &mut rng);
+    cases.push(Case {
+        record: BenchRecord {
+            op: "subarray".into(),
+            shape: format!("{}", x.shape()),
+            order: "1024^2 @ (256, 512)".into(),
+            naive_gbs: 0.0,
+            hostexec_gbs: 0.0,
+        },
+        op: Op::Subarray {
+            base: vec![256, 512],
+            shape: vec![1024, 1024],
+        },
+        bytes: 2 * 4 * 1024 * 1024,
+        inputs: vec![x],
+    });
+
+    // Generic 2D stencil (Fig. 2's FD Laplacian).
+    let img = NdArray::random(Shape::new(&[2048, 2048]), &mut rng);
+    cases.push(Case {
+        record: BenchRecord {
+            op: "stencil_fd1".into(),
+            shape: format!("{}", img.shape()),
+            order: "order 1".into(),
+            naive_gbs: 0.0,
+            hostexec_gbs: 0.0,
+        },
+        op: Op::Stencil {
+            spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
+        },
+        bytes: 2 * 4 * img.len(),
+        inputs: vec![img],
+    });
+
+    let threads = pool::num_threads();
+    println!(
+        "hostexec speedup bench: {threads} worker thread(s), \
+         naive = Op::reference, hostexec = Op::execute_fast\n"
+    );
+    let mut t = Table::new(
+        "naive vs hostexec host throughput (GB/s useful, p50)",
+        &["op", "shape", "order", "naive", "hostexec", "speedup"],
+    );
+    let mut records: Vec<BenchRecord> = Vec::new();
+    for case in &mut cases {
+        let inputs: Vec<&NdArray<f32>> = case.inputs.iter().collect();
+        // Correctness gate before timing: bit-identical or the numbers
+        // are meaningless.
+        let want = case.op.reference(&inputs).expect("reference");
+        let got = case.op.execute_fast(&inputs).expect("hostexec");
+        assert_eq!(got, want, "{:?} diverged from the golden model", case.op);
+
+        let naive = bench(1, 5, || {
+            case.op.reference(&inputs).expect("reference");
+        });
+        let fast = bench(1, 5, || {
+            case.op.execute_fast(&inputs).expect("hostexec");
+        });
+        case.record.naive_gbs = naive.bandwidth_gbs(case.bytes);
+        case.record.hostexec_gbs = fast.bandwidth_gbs(case.bytes);
+        t.row(&[
+            case.record.op.clone(),
+            case.record.shape.clone(),
+            case.record.order.clone(),
+            gbs(case.record.naive_gbs),
+            gbs(case.record.hostexec_gbs),
+            format!("{:.2}x", case.record.speedup()),
+        ]);
+        records.push(case.record.clone());
+    }
+    println!("{}", t.render());
+
+    gdrk::report::write_bench_json("BENCH_hostexec.json", threads, &records)
+        .expect("write BENCH_hostexec.json");
+    println!("wrote BENCH_hostexec.json ({} records)", records.len());
+
+    // The acceptance thresholds this backend was built against.
+    let p102 = records
+        .iter()
+        .find(|r| r.op == "permute3d" && r.order == "[1 0 2]")
+        .expect("permute [1 0 2] record");
+    let inter = records
+        .iter()
+        .find(|r| r.op == "interlace")
+        .expect("interlace record");
+    println!(
+        "permute3d [1 0 2]: {:.2}x (target >= 3x)   interlace n=4: {:.2}x (target >= 1.5x)",
+        p102.speedup(),
+        inter.speedup()
+    );
+}

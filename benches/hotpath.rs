@@ -5,17 +5,106 @@
 //! EXPERIMENTS.md is measured with.
 
 use gdrk::cfd::GpuModelDriver;
-use gdrk::coordinator::{Service, ServiceConfig};
-use gdrk::report::Table;
+use gdrk::coordinator::{Backend, Service, ServiceConfig};
+use gdrk::ops::{Op, StencilSpec};
+use gdrk::report::{BenchRecord, Table};
 use gdrk::runtime::{Runtime, Tensor};
-use gdrk::tensor::{NdArray, Shape};
+use gdrk::tensor::{NdArray, Order, Shape};
 use gdrk::util::rng::Rng;
 use gdrk::util::timing::bench;
 
+/// Artifact-free section: naive vs hostexec on the hotpath workloads
+/// (the backend every path falls back to when artifacts are absent).
+/// Writes the same `BENCH_hostexec.json` schema as the dedicated
+/// `hostexec_speedup` bench, but only when that fuller log is not
+/// already on disk — `cargo bench` runs both, and the dedicated bench's
+/// record set must win.
+fn hostexec_section(rng: &mut Rng) {
+    let threads = gdrk::hostexec::pool::num_threads();
+    let mut t = Table::new(
+        "hot path: host backends, naive vs hostexec (GB/s useful, p50)",
+        &["op", "naive", "hostexec", "speedup"],
+    );
+    let x = NdArray::random(Shape::new(&[64, 256, 512]), rng);
+    let lanes: Vec<NdArray<f32>> = (0..4)
+        .map(|_| NdArray::random(Shape::new(&[1 << 18]), rng))
+        .collect();
+    let img = NdArray::random(Shape::new(&[2048, 2048]), rng);
+    let cases: Vec<(&str, &str, Op, Vec<&NdArray<f32>>, usize)> = vec![
+        (
+            "permute3d_o102",
+            "[1 0 2]",
+            Op::Reorder { order: Order::new(&[1, 0, 2]).unwrap() },
+            vec![&x],
+            2 * 4 * x.len(),
+        ),
+        (
+            "permute3d_o021",
+            "[0 2 1]",
+            Op::Reorder { order: Order::new(&[0, 2, 1]).unwrap() },
+            vec![&x],
+            2 * 4 * x.len(),
+        ),
+        (
+            "interlace_n4",
+            "n=4",
+            Op::Interlace { n: 4 },
+            lanes.iter().collect(),
+            2 * 4 * 4 * (1 << 18),
+        ),
+        (
+            "fd1_2048",
+            "order 1",
+            Op::Stencil { spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 } },
+            vec![&img],
+            2 * 4 * img.len(),
+        ),
+    ];
+    let mut records = Vec::new();
+    for (name, order, op, inputs, bytes) in &cases {
+        let naive = bench(1, 4, || {
+            op.reference(inputs).expect("reference");
+        });
+        let fast = bench(1, 4, || {
+            op.execute_fast(inputs).expect("hostexec");
+        });
+        let rec = BenchRecord {
+            op: (*name).into(),
+            shape: format!("{}", inputs[0].shape()),
+            order: (*order).into(),
+            naive_gbs: naive.bandwidth_gbs(*bytes),
+            hostexec_gbs: fast.bandwidth_gbs(*bytes),
+        };
+        t.row(&[
+            (*name).into(),
+            format!("{:.2}", rec.naive_gbs),
+            format!("{:.2}", rec.hostexec_gbs),
+            format!("{:.2}x", rec.speedup()),
+        ]);
+        records.push(rec);
+    }
+    println!("{}", t.render());
+    if std::path::Path::new("BENCH_hostexec.json").exists() {
+        println!("BENCH_hostexec.json already written by the hostexec_speedup bench; kept\n");
+    } else if let Err(e) = gdrk::report::write_bench_json("BENCH_hostexec.json", threads, &records)
+    {
+        eprintln!("could not write BENCH_hostexec.json: {e}");
+    } else {
+        println!("wrote BENCH_hostexec.json ({threads} threads)\n");
+    }
+}
+
 fn main() {
+    let mut host_rng = Rng::new(0x405F);
+    hostexec_section(&mut host_rng);
+
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
-        println!("SKIP hotpath: artifacts/ not built (make artifacts)");
+        println!("SKIP hotpath PJRT sections: artifacts/ not built (make artifacts)");
+        return;
+    }
+    if !Runtime::pjrt_available() {
+        println!("SKIP hotpath PJRT sections: built without the pjrt feature");
         return;
     }
     let rt = Runtime::new(&dir).expect("runtime");
@@ -79,6 +168,7 @@ fn main() {
         artifacts_dir: dir.clone(),
         max_batch: 8,
         preload: vec!["permute3d_o102".into()],
+        backend: Backend::Pjrt,
     })
     .expect("service");
     let x = Tensor::F32(NdArray::iota(Shape::new(&[32, 48, 64])));

@@ -1,6 +1,7 @@
-//! GPU-model cavity driver: the AOT JAX/Pallas step via PJRT.
+//! Model-path cavity driver: the AOT JAX/Pallas step via PJRT, with a
+//! host fallback when artifacts (or the `pjrt` feature) are absent.
 //!
-//! Two dispatch strategies (the §Perf ablation):
+//! Two dispatch strategies on the PJRT path (the §Perf ablation):
 //! * **stepwise** — one executable invocation per time step (three
 //!   outputs downloaded each step: omega, psi, residual);
 //! * **chunked** — the fused K-step artifact (`cavity_runK_nN`) invoked
@@ -9,7 +10,14 @@
 //! (Buffer-level device-resident chaining is not expressible through the
 //! `xla` 0.1.6 bindings — multi-output results come back as one tuple
 //! buffer; see `runtime/mod.rs`.)
+//!
+//! The **host** path ([`GpuModelDriver::new_auto`] with no usable
+//! runtime) steps the identical omega-psi discretization with the
+//! row-parallel CPU solver, threads sized like the hostexec worker pool
+//! — same `CavityRun` surface, so callers and benches run unchanged on
+//! a bare checkout.
 
+use crate::cfd::cpu::{CpuSolver, Params};
 use crate::runtime::{Runtime, RuntimeError, Tensor};
 use crate::tensor::{NdArray, Shape};
 
@@ -31,16 +39,29 @@ impl CavityRun {
     }
 }
 
-/// Driver over the `cavity_step_n{N}` / `cavity_run10_n{N}` artifacts.
+/// How the driver executes a step.
+enum Exec<'rt> {
+    Pjrt {
+        runtime: &'rt Runtime,
+        step_artifact: String,
+        chunk_artifact: Option<(String, usize)>,
+    },
+    Host {
+        params: Params,
+        threads: usize,
+    },
+}
+
+/// Driver over the `cavity_step_n{N}` / `cavity_run10_n{N}` artifacts,
+/// or the equivalent host solver when they are unavailable.
 pub struct GpuModelDriver<'rt> {
-    runtime: &'rt Runtime,
-    step_artifact: String,
-    chunk_artifact: Option<(String, usize)>,
+    exec: Exec<'rt>,
     pub n: usize,
 }
 
 impl<'rt> GpuModelDriver<'rt> {
-    /// Pick the artifacts for grid size `n` from the manifest.
+    /// Pick the artifacts for grid size `n` from the manifest (PJRT
+    /// path; errors when the step artifact is missing).
     pub fn new(runtime: &'rt Runtime, n: usize) -> Result<GpuModelDriver<'rt>, RuntimeError> {
         let step_artifact = format!("cavity_step_n{n}");
         runtime.entry(&step_artifact)?;
@@ -51,20 +72,51 @@ impl<'rt> GpuModelDriver<'rt> {
             .and_then(|e| e.meta_usize("steps"))
             .map(|k| (chunk_name, k));
         Ok(GpuModelDriver {
-            runtime,
-            step_artifact,
-            chunk_artifact,
+            exec: Exec::Pjrt {
+                runtime,
+                step_artifact,
+                chunk_artifact,
+            },
             n,
         })
     }
 
-    pub fn has_chunk(&self) -> bool {
-        self.chunk_artifact.is_some()
+    /// PJRT when this build + manifest can serve grid size `n`,
+    /// otherwise the host path (same discretization: Re 1000, 20 Jacobi
+    /// sweeps — the parameters `aot.py` bakes into the artifacts).
+    pub fn new_auto(runtime: Option<&'rt Runtime>, n: usize) -> GpuModelDriver<'rt> {
+        if Runtime::pjrt_available() {
+            if let Some(rt) = runtime {
+                if let Ok(driver) = GpuModelDriver::new(rt, n) {
+                    return driver;
+                }
+            }
+        }
+        GpuModelDriver {
+            exec: Exec::Host {
+                params: Params::default_for(n, 1000.0, 20),
+                threads: crate::hostexec::pool::num_threads(),
+            },
+            n,
+        }
     }
 
-    fn unpack3(
-        mut out: Vec<Tensor>,
-    ) -> Result<(Tensor, Tensor, f32), RuntimeError> {
+    /// True when the driver runs on the host solver (no artifacts).
+    pub fn is_host(&self) -> bool {
+        matches!(self.exec, Exec::Host { .. })
+    }
+
+    pub fn has_chunk(&self) -> bool {
+        matches!(
+            &self.exec,
+            Exec::Pjrt {
+                chunk_artifact: Some(_),
+                ..
+            }
+        )
+    }
+
+    fn unpack3(mut out: Vec<Tensor>) -> Result<(Tensor, Tensor, f32), RuntimeError> {
         let res = out.pop().expect("residual output");
         let psi = out.pop().expect("psi output");
         let omega = out.pop().expect("omega output");
@@ -75,8 +127,49 @@ impl<'rt> GpuModelDriver<'rt> {
         Ok((omega, psi, r))
     }
 
-    /// One executable invocation per step.
+    /// Host path: step the CPU solver, logging every `log_every`.
+    fn run_host(
+        &self,
+        params: Params,
+        threads: usize,
+        steps: usize,
+        log_every: usize,
+    ) -> CavityRun {
+        let mut solver = CpuSolver::new(params);
+        let mut residual_log = Vec::new();
+        let mut final_residual = f32::NAN;
+        let t0 = std::time::Instant::now();
+        for step in 1..=steps {
+            let r = solver.step_parallel(threads);
+            final_residual = r;
+            if step % log_every.max(1) == 0 || step == steps {
+                residual_log.push((step, r));
+            }
+        }
+        let wall_seconds = t0.elapsed().as_secs_f64();
+        CavityRun {
+            n: self.n,
+            steps,
+            wall_seconds,
+            final_residual,
+            residual_log,
+            final_omega: solver.omega,
+            final_psi: solver.psi,
+        }
+    }
+
+    /// One executable invocation per step (host path: one solver step).
     pub fn run_stepwise(&self, steps: usize, log_every: usize) -> Result<CavityRun, RuntimeError> {
+        let (runtime, step_artifact) = match &self.exec {
+            Exec::Host { params, threads } => {
+                return Ok(self.run_host(*params, *threads, steps, log_every));
+            }
+            Exec::Pjrt {
+                runtime,
+                step_artifact,
+                ..
+            } => (runtime, step_artifact),
+        };
         let shape = Shape::new(&[self.n, self.n]);
         let mut omega = Tensor::F32(NdArray::zeros(shape.clone()));
         let mut psi = Tensor::F32(NdArray::zeros(shape));
@@ -84,7 +177,7 @@ impl<'rt> GpuModelDriver<'rt> {
         let mut final_residual = f32::NAN;
         let t0 = std::time::Instant::now();
         for step in 1..=steps {
-            let out = self.runtime.execute(&self.step_artifact, &[omega, psi])?;
+            let out = runtime.execute(step_artifact, &[omega, psi])?;
             let (o, p, r) = Self::unpack3(out)?;
             omega = o;
             psi = p;
@@ -106,12 +199,26 @@ impl<'rt> GpuModelDriver<'rt> {
     }
 
     /// Fused-chunk dispatch: K steps per invocation; `steps` is rounded
-    /// down to a multiple of K (returns an error if no chunk artifact).
+    /// down to a multiple of K. On the host path this is stepwise with
+    /// K-step logging; on PJRT it errors if no chunk artifact exists.
     pub fn run_chunked(&self, steps: usize) -> Result<CavityRun, RuntimeError> {
-        let (name, k) = self
-            .chunk_artifact
-            .clone()
-            .ok_or_else(|| RuntimeError::UnknownArtifact(format!("cavity_run10_n{}", self.n)))?;
+        let (runtime, name, k) = match &self.exec {
+            Exec::Host { params, threads } => {
+                let k = 10usize;
+                let steps = (steps / k).max(1) * k;
+                return Ok(self.run_host(*params, *threads, steps, k));
+            }
+            Exec::Pjrt {
+                runtime,
+                chunk_artifact,
+                ..
+            } => {
+                let (name, k) = chunk_artifact.clone().ok_or_else(|| {
+                    RuntimeError::UnknownArtifact(format!("cavity_run10_n{}", self.n))
+                })?;
+                (runtime, name, k)
+            }
+        };
         let chunks = (steps / k).max(1);
         let shape = Shape::new(&[self.n, self.n]);
         let mut omega = Tensor::F32(NdArray::zeros(shape.clone()));
@@ -120,7 +227,7 @@ impl<'rt> GpuModelDriver<'rt> {
         let mut final_residual = f32::NAN;
         let t0 = std::time::Instant::now();
         for c in 1..=chunks {
-            let out = self.runtime.execute(&name, &[omega, psi])?;
+            let out = runtime.execute(&name, &[omega, psi])?;
             let (o, p, r) = Self::unpack3(out)?;
             omega = o;
             psi = p;
@@ -141,11 +248,15 @@ impl<'rt> GpuModelDriver<'rt> {
 
     /// Preferred strategy: chunked when available and steps permit.
     pub fn run(&self, steps: usize, log_every: usize) -> Result<CavityRun, RuntimeError> {
-        match &self.chunk_artifact {
-            Some((_, k)) if steps % k == 0 && steps >= *k => self.run_chunked(steps),
+        match &self.exec {
+            Exec::Pjrt {
+                chunk_artifact: Some((_, k)),
+                ..
+            } if steps % k == 0 && steps >= *k => self.run_chunked(steps),
             _ => self.run_stepwise(steps, log_every),
         }
     }
 }
 
-// Exercised by rust/tests/cfd_integration.rs (needs built artifacts).
+// PJRT-path coverage: rust/tests/cfd_integration.rs (needs artifacts).
+// Host-path coverage: rust/tests/hostexec_service.rs (artifact-free).

@@ -1,11 +1,18 @@
-//! L3 coordinator: the serving layer over the PJRT runtime.
+//! L3 coordinator: the serving layer over the execution backends.
 //!
 //! Topology (vLLM-router style, scaled to one device): callers submit
 //! [`request::Request`]s over an mpsc channel; a *batcher* groups queued
-//! requests by artifact (same compiled executable) so the device worker
-//! runs them back-to-back; a single **device-worker thread** owns the
-//! non-`Send` PJRT client and executes batches; responses come back on
-//! per-request channels. Metrics count everything.
+//! requests by artifact (same compiled executable / resolved op) so the
+//! device worker runs them back-to-back; a single **device-worker
+//! thread** owns the executor (the PJRT client is not `Send`) and
+//! executes batches; responses come back on per-request channels.
+//! Metrics count everything.
+//!
+//! The executor behind the worker is selected by
+//! [`service::Backend`]: native PJRT over the AOT artifacts, the tiled
+//! multi-threaded host backend (`crate::hostexec`), or the naive golden
+//! references — `Auto` picks PJRT when available and falls back to
+//! hostexec, so the service answers with or without built artifacts.
 
 pub mod batcher;
 pub mod metrics;
@@ -15,4 +22,4 @@ pub mod service;
 pub use batcher::Batcher;
 pub use metrics::Metrics;
 pub use request::{Request, RequestId, Response};
-pub use service::{Service, ServiceConfig};
+pub use service::{Backend, Service, ServiceConfig};

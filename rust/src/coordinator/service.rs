@@ -1,19 +1,60 @@
 //! The service: leader API + single device-worker thread.
 //!
 //! `PjRtClient` is `Rc`-based (not `Send`), so the worker thread *builds*
-//! the `Runtime` itself and owns it for its lifetime; everything crossing
-//! the thread boundary is plain data. Submission returns a `Receiver` the
-//! caller can block on or poll — a poor man's future, std-only.
+//! the execution backend itself and owns it for its lifetime; everything
+//! crossing the thread boundary is plain data. Submission returns a
+//! `Receiver` the caller can block on or poll — a poor man's future,
+//! std-only.
+//!
+//! Three executors sit behind one [`Backend`] knob:
+//! * `Pjrt` — compiled AOT artifacts through the native runtime;
+//! * `HostExec` — the tiled multi-threaded host backend
+//!   (`crate::hostexec`), resolving artifact names to op IR;
+//! * `Naive` — the scalar golden references (debugging / baselines).
+//!
+//! `Auto` (the default) serves PJRT when this build carries it *and*
+//! the artifacts are present, and otherwise falls back to `HostExec` —
+//! so a bare checkout serves every rearrangement op out of the box.
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
+use crate::ops::ExecBackend;
 use crate::runtime::{Runtime, Tensor};
+use crate::tensor::NdArray;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+
+/// Which executor the device worker runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// PJRT when available (feature + artifacts), else `HostExec`.
+    #[default]
+    Auto,
+    /// Scalar golden references.
+    Naive,
+    /// Tiled multi-threaded host backend.
+    HostExec,
+    /// Native PJRT execution of the AOT artifacts (requires the `pjrt`
+    /// feature and built artifacts; requests fail otherwise).
+    Pjrt,
+}
+
+impl Backend {
+    /// Parse a CLI knob value.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "auto" => Some(Backend::Auto),
+            "naive" => Some(Backend::Naive),
+            "hostexec" | "host" => Some(Backend::HostExec),
+            "pjrt" => Some(Backend::Pjrt),
+            _ => None,
+        }
+    }
+}
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -23,6 +64,8 @@ pub struct ServiceConfig {
     pub max_batch: usize,
     /// Warm these artifacts (compile) at startup.
     pub preload: Vec<String>,
+    /// Executor selection (see [`Backend`]).
+    pub backend: Backend,
 }
 
 impl Default for ServiceConfig {
@@ -31,6 +74,7 @@ impl Default for ServiceConfig {
             artifacts_dir: crate::runtime::artifact::default_dir(),
             max_batch: 8,
             preload: vec![],
+            backend: Backend::Auto,
         }
     }
 }
@@ -50,7 +94,7 @@ pub struct Service {
 
 impl Service {
     /// Start the device worker. Fails fast (via the returned Receiver's
-    /// first response) if the runtime cannot be constructed.
+    /// first response) if the selected backend cannot be constructed.
     pub fn start(config: ServiceConfig) -> std::io::Result<Service> {
         let (tx, rx) = channel::<Message>();
         let metrics = Arc::new(Metrics::default());
@@ -117,40 +161,103 @@ impl Drop for Service {
     }
 }
 
+/// The executor the worker thread owns (resolved from the config's
+/// [`Backend`]; `Failed` answers every request with the init error).
+enum Executor {
+    Pjrt(Runtime),
+    Host(ExecBackend),
+    Failed(String),
+}
+
+impl Executor {
+    fn resolve(config: &ServiceConfig) -> Executor {
+        match config.backend {
+            Backend::Naive => Executor::Host(ExecBackend::Naive),
+            Backend::HostExec => Executor::Host(ExecBackend::Host),
+            Backend::Pjrt => {
+                if !Runtime::pjrt_available() {
+                    return Executor::Failed(
+                        "backend pjrt requested but this build lacks the pjrt feature".into(),
+                    );
+                }
+                match Runtime::new(&config.artifacts_dir) {
+                    Ok(rt) => Executor::Pjrt(rt),
+                    Err(e) => Executor::Failed(format!("runtime init failed: {e}")),
+                }
+            }
+            Backend::Auto => {
+                if Runtime::pjrt_available() {
+                    if let Ok(rt) = Runtime::new(&config.artifacts_dir) {
+                        return Executor::Pjrt(rt);
+                    }
+                }
+                eprintln!(
+                    "gdrk: PJRT unavailable (feature or artifacts missing); \
+                     serving on the hostexec backend"
+                );
+                Executor::Host(ExecBackend::Host)
+            }
+        }
+    }
+
+    fn preload(&self, names: &[String]) {
+        match self {
+            Executor::Pjrt(rt) => {
+                for name in names {
+                    if let Err(e) = rt.load(name) {
+                        eprintln!("gdrk: preload of '{name}' failed: {e}");
+                    }
+                }
+            }
+            Executor::Host(_) => {
+                for name in names {
+                    if crate::hostexec::op_for_artifact(name).is_none() {
+                        eprintln!("gdrk: '{name}' has no host-backend op; preload skipped");
+                    }
+                }
+            }
+            Executor::Failed(_) => {}
+        }
+    }
+
+    fn execute(&self, artifact: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+        match self {
+            Executor::Pjrt(rt) => rt.execute(artifact, inputs).map_err(|e| e.to_string()),
+            Executor::Host(mode) => host_execute(*mode, artifact, inputs),
+            Executor::Failed(msg) => Err(msg.clone()),
+        }
+    }
+}
+
+/// Resolve an artifact name to op IR and run it on the host backend.
+fn host_execute(
+    mode: ExecBackend,
+    artifact: &str,
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>, String> {
+    let op = crate::hostexec::op_for_artifact(artifact).ok_or_else(|| {
+        format!("unknown artifact '{artifact}' (no host-backend op for this name)")
+    })?;
+    let arrays: Vec<&NdArray<f32>> = inputs
+        .iter()
+        .map(|t| {
+            t.as_f32()
+                .ok_or_else(|| "host backend supports f32 inputs only".to_string())
+        })
+        .collect::<Result<_, _>>()?;
+    op.dispatch(&arrays, mode)
+        .map(|outs| outs.into_iter().map(Tensor::F32).collect())
+        .map_err(|e| e.to_string())
+}
+
 fn worker_loop(
     rx: std::sync::mpsc::Receiver<Message>,
     config: ServiceConfig,
     metrics: Arc<Metrics>,
 ) {
-    // The worker owns the non-Send runtime.
-    let runtime = match Runtime::new(&config.artifacts_dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            // Without a runtime every request fails with the same cause.
-            let msg = format!("runtime init failed: {e}");
-            while let Ok(m) = rx.recv() {
-                match m {
-                    Message::Work(req, reply) => {
-                        Metrics::inc(&metrics.failed);
-                        let _ = reply.send(Response {
-                            id: req.id,
-                            artifact: req.artifact,
-                            result: Err(msg.clone()),
-                            queue_seconds: 0.0,
-                            exec_seconds: 0.0,
-                        });
-                    }
-                    Message::Shutdown => break,
-                }
-            }
-            return;
-        }
-    };
-    for name in &config.preload {
-        if let Err(e) = runtime.load(name) {
-            eprintln!("gdrk: preload of '{name}' failed: {e}");
-        }
-    }
+    // The worker owns the executor (the PJRT runtime is not Send).
+    let exec = Executor::resolve(&config);
+    exec.preload(&config.preload);
 
     let mut batcher = Batcher::new(config.max_batch);
     let mut replies: std::collections::HashMap<RequestId, Sender<Response>> =
@@ -172,19 +279,19 @@ fn worker_loop(
                     batcher.push(req);
                 }
                 Ok(Message::Shutdown) => {
-                    drain(&runtime, &mut batcher, &mut replies, &metrics);
+                    drain(&exec, &mut batcher, &mut replies, &metrics);
                     break 'main;
                 }
                 Err(_) => break,
             }
         }
-        drain(&runtime, &mut batcher, &mut replies, &metrics);
+        drain(&exec, &mut batcher, &mut replies, &metrics);
     }
-    drain(&runtime, &mut batcher, &mut replies, &metrics);
+    drain(&exec, &mut batcher, &mut replies, &metrics);
 }
 
 fn drain(
-    runtime: &Runtime,
+    exec: &Executor,
     batcher: &mut Batcher,
     replies: &mut std::collections::HashMap<RequestId, Sender<Response>>,
     metrics: &Metrics,
@@ -195,9 +302,7 @@ fn drain(
             let queue_seconds = req.enqueued.elapsed().as_secs_f64();
             metrics.queue_latency.record_seconds(queue_seconds);
             let t0 = std::time::Instant::now();
-            let result = runtime
-                .execute(&artifact, &req.inputs)
-                .map_err(|e| e.to_string());
+            let result = exec.execute(&artifact, &req.inputs);
             let exec_seconds = t0.elapsed().as_secs_f64();
             metrics.exec_latency.record_seconds(exec_seconds);
             match &result {
@@ -217,4 +322,6 @@ fn drain(
     }
 }
 
-// Integration coverage (real artifacts + PJRT) lives in rust/tests/.
+// PJRT integration coverage lives in rust/tests/coordinator_integration.rs
+// (needs artifacts); artifact-free host-backend coverage in
+// rust/tests/hostexec_service.rs.

@@ -1,0 +1,224 @@
+//! §III.A copies and §III.B subarray extraction, host-parallelized.
+//!
+//! Straight-line ops where the only wins are contiguous-run collapsing
+//! and splitting the output across workers — every path here partitions
+//! the destination into disjoint `chunks_mut` slices, so no unsafe.
+
+use super::pool;
+use crate::ops::OpError;
+use crate::tensor::{NdArray, Shape, StridedWalk};
+
+/// Parallel memcpy: split `dst` into per-worker chunks.
+pub fn par_copy(src: &[f32], dst: &mut [f32], threads: usize) {
+    assert_eq!(src.len(), dst.len());
+    let t = pool::effective_threads(threads, dst.len(), threads.max(1));
+    if t <= 1 {
+        dst.copy_from_slice(src);
+        return;
+    }
+    let per = (dst.len() + t - 1) / t;
+    std::thread::scope(|scope| {
+        for (i, chunk) in dst.chunks_mut(per).enumerate() {
+            let src = &src[i * per..i * per + chunk.len()];
+            scope.spawn(move || chunk.copy_from_slice(src));
+        }
+    });
+}
+
+/// Identity copy (the §III.A streaming kernel).
+pub fn copy(x: &NdArray<f32>, threads: usize) -> NdArray<f32> {
+    let mut out = vec![0.0f32; x.len()];
+    par_copy(x.data(), &mut out, threads);
+    NdArray::from_vec(x.shape().clone(), out)
+}
+
+/// Contiguous range read — bit-identical to [`crate::ops::copy::read_range`].
+pub fn read_range(
+    x: &NdArray<f32>,
+    base: usize,
+    count: usize,
+    threads: usize,
+) -> Result<NdArray<f32>, OpError> {
+    if x.rank() != 1 {
+        return Err(OpError::Invalid("read_range expects a flat array".into()));
+    }
+    if base + count > x.len() {
+        return Err(OpError::Invalid(format!(
+            "range [{base}, {}) out of bounds for {}",
+            base + count,
+            x.len()
+        )));
+    }
+    let mut out = vec![0.0f32; count];
+    par_copy(&x.data()[base..base + count], &mut out, threads);
+    Ok(NdArray::from_vec(Shape::new(&[count]), out))
+}
+
+/// Strided read — bit-identical to [`crate::ops::copy::read_strided`].
+pub fn read_strided(
+    x: &NdArray<f32>,
+    base: usize,
+    stride: usize,
+    count: usize,
+    threads: usize,
+) -> Result<NdArray<f32>, OpError> {
+    if x.rank() != 1 {
+        return Err(OpError::Invalid("read_strided expects a flat array".into()));
+    }
+    if stride == 0 {
+        return Err(OpError::Invalid("stride must be >= 1".into()));
+    }
+    if count > 0 && base + (count - 1) * stride >= x.len() {
+        return Err(OpError::Invalid("strided window out of bounds".into()));
+    }
+    let mut out = vec![0.0f32; count];
+    let t = pool::effective_threads(threads, count, threads.max(1));
+    let xd = x.data();
+    if t <= 1 {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = xd[base + k * stride];
+        }
+    } else {
+        let per = (count + t - 1) / t;
+        std::thread::scope(|scope| {
+            for (ci, chunk) in out.chunks_mut(per).enumerate() {
+                scope.spawn(move || {
+                    let k0 = ci * per;
+                    for (k, o) in chunk.iter_mut().enumerate() {
+                        *o = xd[base + (k0 + k) * stride];
+                    }
+                });
+            }
+        });
+    }
+    Ok(NdArray::from_vec(Shape::new(&[count]), out))
+}
+
+/// Dense sub-block extraction — bit-identical to
+/// [`crate::ops::reorder::subarray`]. Trailing axes the window covers
+/// fully collapse into one contiguous run per copy.
+pub fn subarray(
+    x: &NdArray<f32>,
+    base: &[usize],
+    shape: &[usize],
+    threads: usize,
+) -> Result<NdArray<f32>, OpError> {
+    let n = x.rank();
+    if base.len() != n || shape.len() != n {
+        return Err(OpError::Invalid("base/shape rank mismatch".into()));
+    }
+    for ((&b, &s), &d) in base.iter().zip(shape).zip(x.shape().dims()) {
+        if b + s > d {
+            return Err(OpError::Invalid(format!(
+                "subarray window out of bounds: base {base:?} + shape {shape:?} vs {:?}",
+                x.shape().dims()
+            )));
+        }
+    }
+    let out_shape = Shape::new(shape);
+    let total = out_shape.num_elements();
+    let mut out = vec![0.0f32; total];
+    if total == 0 {
+        return Ok(NdArray::from_vec(out_shape, out));
+    }
+
+    // Collapse the trailing fully-covered axes (plus the first partial
+    // one) into a contiguous run.
+    let dims = x.shape().dims();
+    let mut t_axis = n; // first axis of the run suffix
+    while t_axis > 0 && (t_axis == n || (base[t_axis] == 0 && shape[t_axis] == dims[t_axis])) {
+        t_axis -= 1;
+    }
+    // t_axis now points at the last axis that is *not* required to be
+    // fully covered; the run spans axes t_axis..n.
+    let run: usize = shape[t_axis..].iter().product();
+    let in_strides = x.shape().strides();
+    let base_off = x.shape().linearize(base);
+    let outer_dims = &shape[..t_axis];
+    let outer_walk = &in_strides[..t_axis];
+
+    let xd = x.data();
+    let t = pool::effective_threads(threads, total, total / run.max(1));
+    if t <= 1 {
+        for (chunk, ioff) in out
+            .chunks_mut(run)
+            .zip(StridedWalk::with_base(outer_dims, outer_walk, base_off))
+        {
+            chunk.copy_from_slice(&xd[ioff..ioff + run]);
+        }
+        return Ok(NdArray::from_vec(out_shape, out));
+    }
+    // Parallel: give each worker a contiguous band of output rows.
+    let rows = total / run;
+    let rows_per = (rows + t - 1) / t;
+    std::thread::scope(|scope| {
+        for (wi, band) in out.chunks_mut(rows_per * run).enumerate() {
+            let mut walkr = StridedWalk::with_base(outer_dims, outer_walk, base_off);
+            // Advance the walker to this band's first row.
+            let skip = wi * rows_per;
+            scope.spawn(move || {
+                for (chunk, ioff) in band.chunks_mut(run).zip(walkr.by_ref().skip(skip)) {
+                    chunk.copy_from_slice(&xd[ioff..ioff + run]);
+                }
+            });
+        }
+    });
+    Ok(NdArray::from_vec(out_shape, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{copy as golden_copy, reorder as golden_reorder};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn par_copy_matches() {
+        let mut rng = Rng::new(1);
+        let src = rng.f32_vec(100_000);
+        for threads in [1, 3, 8] {
+            let mut dst = vec![0.0f32; src.len()];
+            par_copy(&src, &mut dst, threads);
+            assert_eq!(dst, src, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn range_and_strided_match_golden() {
+        let x = NdArray::iota(Shape::new(&[1 << 16]));
+        let want = golden_copy::read_range(&x, 100, 5000).unwrap();
+        assert_eq!(read_range(&x, 100, 5000, 4).unwrap(), want);
+        let want = golden_copy::read_strided(&x, 3, 7, 9000).unwrap();
+        assert_eq!(read_strided(&x, 3, 7, 9000, 4).unwrap(), want);
+        // Validation parity.
+        assert!(read_range(&x, 1 << 16, 1, 4).is_err());
+        assert!(read_strided(&x, 0, 0, 4, 4).is_err());
+    }
+
+    #[test]
+    fn subarray_matches_golden_random_windows() {
+        let mut rng = Rng::new(0x5AB);
+        let x = NdArray::random(Shape::new(&[17, 23, 9]), &mut rng);
+        for _ in 0..40 {
+            let base = [rng.gen_range(17), rng.gen_range(23), rng.gen_range(9)];
+            let shape = [
+                rng.gen_range(17 - base[0]) + 1,
+                rng.gen_range(23 - base[1]) + 1,
+                rng.gen_range(9 - base[2]) + 1,
+            ];
+            let want = golden_reorder::subarray(&x, &base, &shape).unwrap();
+            for threads in [1, 4] {
+                let got = subarray(&x, &base, &shape, threads).unwrap();
+                assert_eq!(got, want, "base {base:?} shape {shape:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn subarray_full_and_empty() {
+        let x = NdArray::iota(Shape::new(&[6, 8]));
+        assert_eq!(subarray(&x, &[0, 0], &[6, 8], 4).unwrap(), x);
+        assert_eq!(subarray(&x, &[2, 3], &[0, 0], 4).unwrap().len(), 0);
+        assert!(subarray(&x, &[1, 0], &[6, 8], 4).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! §III.C interlace / de-interlace, host-parallelized.
+//!
+//! Interlace writes are contiguous (stride-1 across the n source
+//! streams), so the output splits into per-worker `chunks_mut` bands of
+//! whole pixels; each band streams all n inputs sequentially — the host
+//! analogue of the paper's coalesced n-way merge. De-interlace splits
+//! every output plane into the same bands, so reads of the packed input
+//! stay within one cache-resident window per band.
+
+use super::pool;
+use crate::ops::OpError;
+use crate::tensor::{NdArray, Shape};
+
+/// Merge n flat arrays — bit-identical to [`crate::ops::interlace::interlace`].
+pub fn interlace(
+    arrays: &[&NdArray<f32>],
+    threads: usize,
+) -> Result<NdArray<f32>, OpError> {
+    let n = arrays.len();
+    if n < 2 {
+        return Err(OpError::Invalid("interlace needs >= 2 arrays".into()));
+    }
+    let len = arrays[0].len();
+    for a in arrays {
+        if a.rank() != 1 || a.len() != len {
+            return Err(OpError::Invalid(
+                "interlace arrays must be flat and equally sized".into(),
+            ));
+        }
+    }
+    let data: Vec<&[f32]> = arrays.iter().map(|a| a.data()).collect();
+    let mut out = vec![0.0f32; n * len];
+    let t = pool::effective_threads(threads, n * len, threads.max(1));
+    let per_i = ((len + t - 1) / t).max(1);
+    let fill = |band: &mut [f32], i0: usize| {
+        for (k, px) in band.chunks_mut(n).enumerate() {
+            let i = i0 + k;
+            for (o, d) in px.iter_mut().zip(&data) {
+                *o = d[i];
+            }
+        }
+    };
+    if t <= 1 {
+        fill(&mut out, 0);
+    } else {
+        std::thread::scope(|scope| {
+            for (wi, band) in out.chunks_mut(per_i * n).enumerate() {
+                let fill = &fill;
+                scope.spawn(move || fill(band, wi * per_i));
+            }
+        });
+    }
+    Ok(NdArray::from_vec(Shape::new(&[n * len]), out))
+}
+
+/// Split one flat array into n — bit-identical to
+/// [`crate::ops::interlace::deinterlace`].
+pub fn deinterlace(
+    x: &NdArray<f32>,
+    n: usize,
+    threads: usize,
+) -> Result<Vec<NdArray<f32>>, OpError> {
+    if n < 2 {
+        return Err(OpError::Invalid("deinterlace needs n >= 2".into()));
+    }
+    if x.rank() != 1 || x.len() % n != 0 {
+        return Err(OpError::Invalid(format!(
+            "length {} not divisible by n={n}",
+            x.len()
+        )));
+    }
+    let len = x.len() / n;
+    let xd = x.data();
+    let mut outs: Vec<Vec<f32>> = vec![vec![0.0f32; len]; n];
+    let t = pool::effective_threads(threads, x.len(), threads.max(1));
+    if t <= 1 {
+        for (j, o) in outs.iter_mut().enumerate() {
+            for (i, v) in o.iter_mut().enumerate() {
+                *v = xd[i * n + j];
+            }
+        }
+    } else {
+        // Band the i-range; worker w owns band w of every plane, so all
+        // slices handed to one worker are disjoint by construction.
+        let per_i = ((len + t - 1) / t).max(1);
+        let mut per_worker: Vec<Vec<(usize, usize, &mut [f32])>> =
+            (0..t).map(|_| Vec::with_capacity(n)).collect();
+        for (j, o) in outs.iter_mut().enumerate() {
+            for (wi, band) in o.chunks_mut(per_i).enumerate() {
+                per_worker[wi].push((j, wi * per_i, band));
+            }
+        }
+        std::thread::scope(|scope| {
+            for items in per_worker {
+                scope.spawn(move || {
+                    for (j, i0, band) in items {
+                        for (k, v) in band.iter_mut().enumerate() {
+                            *v = xd[(i0 + k) * n + j];
+                        }
+                    }
+                });
+            }
+        });
+    }
+    Ok(outs
+        .into_iter()
+        .map(|v| NdArray::from_vec(Shape::new(&[len]), v))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::interlace as golden;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_golden_all_n() {
+        let mut rng = Rng::new(0x1417);
+        for n in 2..=9 {
+            let arrays: Vec<NdArray<f32>> = (0..n)
+                .map(|_| NdArray::random(Shape::new(&[1031]), &mut rng))
+                .collect();
+            let refs: Vec<&NdArray<f32>> = arrays.iter().collect();
+            let want = golden::interlace(&refs).unwrap();
+            for threads in [1, 4] {
+                assert_eq!(interlace(&refs, threads).unwrap(), want, "n={n}");
+            }
+            let want_planes = golden::deinterlace(&want, n).unwrap();
+            for threads in [1, 4] {
+                assert_eq!(deinterlace(&want, n, threads).unwrap(), want_planes, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn validation_parity() {
+        let a = NdArray::iota(Shape::new(&[4]));
+        let b = NdArray::iota(Shape::new(&[5]));
+        assert!(interlace(&[&a], 4).is_err());
+        assert!(interlace(&[&a, &b], 4).is_err());
+        assert!(deinterlace(&NdArray::iota(Shape::new(&[10])), 3, 4).is_err());
+        assert!(deinterlace(&NdArray::iota(Shape::new(&[10])), 1, 4).is_err());
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let a = NdArray::<f32>::zeros(Shape::new(&[0]));
+        let b = NdArray::<f32>::zeros(Shape::new(&[0]));
+        let m = interlace(&[&a, &b], 4).unwrap();
+        assert_eq!(m.len(), 0);
+        let s = deinterlace(&m, 2, 4).unwrap();
+        assert_eq!(s.len(), 2);
+        assert!(s.iter().all(|p| p.len() == 0));
+    }
+}

@@ -1,0 +1,149 @@
+//! `hostexec` — the high-performance **host** execution backend.
+//!
+//! The paper's thesis is that data rearrangement is bandwidth-limited
+//! and must be executed with tiled, coalesced, contiguous-run-aware
+//! kernels. The CPU references in [`crate::ops`] deliberately ignore
+//! all of that: they are single-threaded scalar odometer walks that
+//! define *semantics*. This module is the same analysis applied to the
+//! host memory hierarchy, so the coordinator, the CFD driver and the
+//! benches have a fast execution path when PJRT artifacts are absent.
+//!
+//! ## Plan → cache-tile mapping
+//!
+//! Execution reuses the planner verbatim: `plan_reorder` classifies the
+//! movement, and [`crate::planner::Plan::host_geometry`] lowers it to
+//! host tiling geometry. The correspondence to the paper's GPU kernel:
+//!
+//! | paper kernel (Tesla C1060)          | host backend                    |
+//! |-------------------------------------|---------------------------------|
+//! | coalesced run along shared fastest dims, widened per-thread copies | shared fastest prefix collapsed into one run moved with `copy_from_slice` ([`HostGeometry::run_elems`](crate::planner::HostGeometry)) |
+//! | 32×32 tile staged through padded shared memory | 32×32 (runs) cache-blocked tile over the reduced movement plane — both streams stay inside L1/L2 while the in-tile transpose happens |
+//! | grid of blocks over batch × plane, diagonalized | work items = batch combination × tile-row band, strided over a `std::thread::scope` pool sized from `available_parallelism` |
+//!
+//! Axis bookkeeping that makes the tiles fat (unit-axis dropping,
+//! merge of permutation-preserved axis runs) lives in
+//! [`crate::tensor::collapse`]; the odometer the naive references walk
+//! is [`crate::tensor::StridedWalk`].
+//!
+//! ## Correctness contract
+//!
+//! Every entry point is **bit-identical** to its golden reference in
+//! `ops` (enforced by `rust/tests/hostexec_property.rs`): pure data
+//! movement trivially so, the stencil by accumulating in f64 in the
+//! same tap order. `Op::execute_fast` routes here; `Op::reference`
+//! remains the golden model.
+//!
+//! Thread count: `GDRK_THREADS` env override, else available
+//! parallelism; tensors under [`pool::PARALLEL_THRESHOLD`] run inline.
+
+pub mod copy;
+pub mod interlace;
+pub mod permute;
+pub mod pool;
+pub mod registry;
+pub mod stencil;
+
+pub use permute::{permute as permute_fast, transpose as transpose_fast, transpose_with_threads};
+pub use registry::op_for_artifact;
+
+use crate::ops::{reorder, Op, OpError};
+use crate::tensor::{NdArray, Shape};
+
+/// Execute an op on the host backend. Same signature, semantics and
+/// validation behaviour as [`Op::reference`], different speed.
+pub fn execute(op: &Op, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, OpError> {
+    if inputs.len() != op.arity() {
+        return Err(OpError::Arity {
+            expected: op.arity(),
+            got: inputs.len(),
+        });
+    }
+    let threads = pool::num_threads();
+    match op {
+        Op::Copy => Ok(vec![copy::copy(inputs[0], threads)]),
+        Op::ReadRange { base, count } => {
+            copy::read_range(inputs[0], *base, *count, threads).map(|a| vec![a])
+        }
+        Op::ReadStrided { base, stride, count } => {
+            copy::read_strided(inputs[0], *base, *stride, *count, threads).map(|a| vec![a])
+        }
+        Op::Reorder { order } => permute::permute(inputs[0], order).map(|a| vec![a]),
+        Op::ReorderCollapse { order, out_rank } => {
+            let n = inputs[0].rank();
+            if *out_rank == 0 || *out_rank > n {
+                return Err(OpError::Invalid(format!(
+                    "out_rank {out_rank} out of range for rank {n}"
+                )));
+            }
+            let y = permute::permute(inputs[0], order)?;
+            let merged = reorder::collapse_dims(y.shape().dims(), *out_rank);
+            Ok(vec![y.reshaped(Shape::new(&merged))])
+        }
+        Op::Subarray { base, shape } => {
+            copy::subarray(inputs[0], base, shape, threads).map(|a| vec![a])
+        }
+        Op::Interlace { .. } => interlace::interlace(inputs, threads).map(|a| vec![a]),
+        Op::Deinterlace { n } => interlace::deinterlace(inputs[0], *n, threads),
+        Op::Stencil { spec } => stencil::apply(inputs[0], spec, threads).map(|a| vec![a]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Order;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn every_op_variant_matches_reference() {
+        let mut rng = Rng::new(0xFA57);
+        let flat = NdArray::random(Shape::new(&[4096]), &mut rng);
+        let cube = NdArray::random(Shape::new(&[8, 12, 16]), &mut rng);
+        let img = NdArray::random(Shape::new(&[24, 24]), &mut rng);
+        let lanes: Vec<NdArray<f32>> = (0..3)
+            .map(|_| NdArray::random(Shape::new(&[500]), &mut rng))
+            .collect();
+        let lane_refs: Vec<&NdArray<f32>> = lanes.iter().collect();
+
+        let cases: Vec<(Op, Vec<&NdArray<f32>>)> = vec![
+            (Op::Copy, vec![&flat]),
+            (Op::ReadRange { base: 7, count: 999 }, vec![&flat]),
+            (Op::ReadStrided { base: 1, stride: 3, count: 1000 }, vec![&flat]),
+            (
+                Op::Reorder { order: Order::new(&[2, 0, 1]).unwrap() },
+                vec![&cube],
+            ),
+            (
+                Op::ReorderCollapse {
+                    order: Order::new(&[1, 0, 2]).unwrap(),
+                    out_rank: 2,
+                },
+                vec![&cube],
+            ),
+            (
+                Op::Subarray { base: vec![1, 2, 3], shape: vec![5, 7, 9] },
+                vec![&cube],
+            ),
+            (Op::Interlace { n: 3 }, lane_refs.clone()),
+            (Op::Deinterlace { n: 4 }, vec![&flat]),
+            (
+                Op::Stencil {
+                    spec: crate::ops::StencilSpec::FdLaplacian { order: 2, scale: 1.0 },
+                },
+                vec![&img],
+            ),
+        ];
+        for (op, inputs) in cases {
+            let want = op.reference(&inputs).unwrap();
+            let got = execute(&op, &inputs).unwrap();
+            assert_eq!(got, want, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn arity_enforced_like_reference() {
+        let a = NdArray::iota(Shape::new(&[4]));
+        let r = execute(&Op::Interlace { n: 2 }, &[&a]);
+        assert!(matches!(r, Err(OpError::Arity { expected: 2, got: 1 })));
+    }
+}

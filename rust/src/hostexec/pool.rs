@@ -1,0 +1,152 @@
+//! Scoped worker-pool plumbing for the host backend.
+//!
+//! No thread pool object: every parallel region is a
+//! `std::thread::scope` whose workers stride a work-item index space.
+//! Spawning costs ~10 µs per worker, so callers gate parallelism on
+//! problem size via [`effective_threads`] — tiny property-test tensors
+//! run inline on the caller's thread.
+
+/// Elements below which a rearrangement runs single-threaded.
+pub const PARALLEL_THRESHOLD: usize = 1 << 15;
+
+/// Worker count: `GDRK_THREADS` override, else the host's available
+/// parallelism, else 1. Resolved once per process (this sits on the
+/// per-request hot path of the coordinator's host backend).
+pub fn num_threads() -> usize {
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        match std::env::var("GDRK_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            Some(n) if n >= 1 => n,
+            _ => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    })
+}
+
+/// Clamp a requested worker count to the problem size: 1 below the
+/// threshold, never more workers than items.
+pub fn effective_threads(threads: usize, total_elems: usize, items: usize) -> usize {
+    if total_elems < PARALLEL_THRESHOLD {
+        1
+    } else {
+        threads.max(1).min(items.max(1))
+    }
+}
+
+/// Run `f(item)` for every item in `0..items`, striding the index space
+/// over at most `threads` scoped workers. `threads <= 1` runs inline.
+pub fn run_indexed<F: Fn(usize) + Sync>(threads: usize, items: usize, f: F) {
+    let t = threads.max(1).min(items.max(1));
+    if t <= 1 {
+        for i in 0..items {
+            f(i);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for tid in 0..t {
+            let f = &f;
+            scope.spawn(move || {
+                let mut i = tid;
+                while i < items {
+                    f(i);
+                    i += t;
+                }
+            });
+        }
+    });
+}
+
+/// A mutable f32 output buffer shared by workers that write **disjoint**
+/// element ranges. The wrapper exists because the tile decomposition's
+/// per-item output regions are disjoint but interleaved, so they cannot
+/// be expressed as `chunks_mut` slices.
+///
+/// Safety contract: every concurrent writer must target element ranges
+/// no other writer touches; the tile decompositions in this module
+/// guarantee it because each work item owns a distinct set of output
+/// rows (a row's (batch, tile-row) coordinates determine its item).
+pub struct OutPtr {
+    ptr: *mut f32,
+    len: usize,
+}
+
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+impl OutPtr {
+    pub fn new(buf: &mut [f32]) -> OutPtr {
+        OutPtr {
+            ptr: buf.as_mut_ptr(),
+            len: buf.len(),
+        }
+    }
+
+    /// Write one element.
+    ///
+    /// # Safety
+    /// `off` is in-bounds and no other thread writes it concurrently.
+    #[inline]
+    pub unsafe fn write(&self, off: usize, v: f32) {
+        debug_assert!(off < self.len);
+        *self.ptr.add(off) = v;
+    }
+
+    /// Copy a contiguous run.
+    ///
+    /// # Safety
+    /// `[off, off + src.len())` is in-bounds and no other thread writes
+    /// any of it concurrently.
+    #[inline]
+    pub unsafe fn write_run(&self, off: usize, src: &[f32]) {
+        debug_assert!(off + src.len() <= self.len);
+        std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(off), src.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_indexed_covers_every_item_once() {
+        for threads in [1, 2, 5] {
+            let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+            run_indexed(threads, hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn run_indexed_zero_items() {
+        run_indexed(4, 0, |_| panic!("no items to run"));
+    }
+
+    #[test]
+    fn effective_threads_gates_small_work() {
+        assert_eq!(effective_threads(8, 100, 50), 1);
+        assert_eq!(effective_threads(8, PARALLEL_THRESHOLD, 50), 8);
+        assert_eq!(effective_threads(8, PARALLEL_THRESHOLD, 3), 3);
+        assert_eq!(effective_threads(0, PARALLEL_THRESHOLD, 3), 1);
+    }
+
+    #[test]
+    fn outptr_disjoint_writes() {
+        let mut buf = vec![0.0f32; 64];
+        let p = OutPtr::new(&mut buf);
+        run_indexed(4, 64, |i| unsafe { p.write(i, i as f32) });
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == i as f32));
+    }
+
+    #[test]
+    fn num_threads_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

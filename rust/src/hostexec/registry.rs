@@ -1,0 +1,162 @@
+//! Artifact-name → [`Op`] mapping for the host backend.
+//!
+//! The coordinator's request keys are AOT artifact names (see
+//! `python/compile/aot.py`). When the service runs on a host backend —
+//! no artifacts built, or backend forced to `naive`/`hostexec` — the
+//! same names are resolved to op IR and executed on the host, so
+//! callers see identical semantics whichever backend serves them.
+//!
+//! Covered families (the rearrangement ops of the paper):
+//! `copy*`, `permute3d_oXYZ`, `reorder_rDIGITS[_cK]`, `interlace_nN`,
+//! `deinterlace_nN`, `subarray_N`, `fdK_N`, `smooth3x3_N`. Compute-only
+//! artifacts (scale, model pipelines, cavity steps) have no op IR and
+//! resolve to `None`.
+
+use crate::ops::{Op, StencilSpec};
+use crate::tensor::Order;
+
+fn digits_order(s: &str) -> Option<Order> {
+    if s.is_empty() {
+        return None;
+    }
+    let v: Option<Vec<usize>> = s
+        .chars()
+        .map(|c| c.to_digit(10).map(|d| d as usize))
+        .collect();
+    Order::new(&v?).ok()
+}
+
+/// Resolve an artifact name to the op it computes, if it is one of the
+/// paper's rearrangement ops.
+pub fn op_for_artifact(name: &str) -> Option<Op> {
+    if name.starts_with("copy") {
+        return Some(Op::Copy);
+    }
+    if let Some(tag) = name.strip_prefix("permute3d_o") {
+        return Some(Op::Reorder {
+            order: digits_order(tag)?,
+        });
+    }
+    if let Some(rest) = name.strip_prefix("reorder_r") {
+        // reorder_r3201 or reorder_r3201_c2 (N->M collapse).
+        return match rest.split_once("_c") {
+            Some((tag, rank)) => Some(Op::ReorderCollapse {
+                order: digits_order(tag)?,
+                out_rank: rank.parse().ok()?,
+            }),
+            None => Some(Op::Reorder {
+                order: digits_order(rest)?,
+            }),
+        };
+    }
+    if let Some(n) = name.strip_prefix("interlace_n") {
+        return Some(Op::Interlace { n: n.parse().ok()? });
+    }
+    if let Some(n) = name.strip_prefix("deinterlace_n") {
+        return Some(Op::Deinterlace { n: n.parse().ok()? });
+    }
+    if let Some(n) = name.strip_prefix("subarray_") {
+        // Mirrors the aot.py subarray entry: centre-ish n/2 window of an
+        // n x n input at base (n/8, n/4).
+        let n: usize = n.parse().ok()?;
+        if n < 8 {
+            return None;
+        }
+        return Some(Op::Subarray {
+            base: vec![n / 8, n / 4],
+            shape: vec![n / 2, n / 2],
+        });
+    }
+    if let Some(rest) = name.strip_prefix("fd") {
+        // fd2_512 -> FD Laplacian of order 2 on a 512^2 grid.
+        let (order, _) = rest.split_once('_')?;
+        return Some(Op::Stencil {
+            spec: StencilSpec::FdLaplacian {
+                order: order.parse().ok()?,
+                scale: 1.0,
+            },
+        });
+    }
+    if name.starts_with("smooth3x3") {
+        return Some(Op::Stencil {
+            spec: StencilSpec::Conv {
+                radius: 1,
+                mask: vec![1.0 / 9.0; 9],
+            },
+        });
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permute_orders_parse() {
+        let op = op_for_artifact("permute3d_o102").unwrap();
+        assert_eq!(
+            op,
+            Op::Reorder {
+                order: Order::new(&[1, 0, 2]).unwrap()
+            }
+        );
+        assert!(op_for_artifact("permute3d_o1").is_some());
+        assert!(op_for_artifact("permute3d_o133").is_none()); // not a permutation
+        assert!(op_for_artifact("permute3d_o").is_none());
+    }
+
+    #[test]
+    fn reorder_and_collapse_parse() {
+        assert_eq!(
+            op_for_artifact("reorder_r3201_c2").unwrap(),
+            Op::ReorderCollapse {
+                order: Order::new(&[3, 2, 0, 1]).unwrap(),
+                out_rank: 2
+            }
+        );
+        assert_eq!(
+            op_for_artifact("reorder_r102").unwrap(),
+            Op::Reorder {
+                order: Order::new(&[1, 0, 2]).unwrap()
+            }
+        );
+    }
+
+    #[test]
+    fn interlace_stencil_copy_parse() {
+        assert_eq!(op_for_artifact("interlace_n4").unwrap(), Op::Interlace { n: 4 });
+        // Suffixed variants ("deinterlace_n3_img") are not a plain usize.
+        assert!(op_for_artifact("deinterlace_n3_img").is_none());
+        assert_eq!(op_for_artifact("deinterlace_n3").unwrap(), Op::Deinterlace { n: 3 });
+        assert_eq!(op_for_artifact("copy_4m").unwrap(), Op::Copy);
+        assert!(matches!(
+            op_for_artifact("fd3_512").unwrap(),
+            Op::Stencil {
+                spec: StencilSpec::FdLaplacian { order: 3, .. }
+            }
+        ));
+        assert!(matches!(
+            op_for_artifact("smooth3x3_512").unwrap(),
+            Op::Stencil { spec: StencilSpec::Conv { radius: 1, .. } }
+        ));
+    }
+
+    #[test]
+    fn subarray_matches_aot_convention() {
+        assert_eq!(
+            op_for_artifact("subarray_256").unwrap(),
+            Op::Subarray {
+                base: vec![32, 64],
+                shape: vec![128, 128]
+            }
+        );
+    }
+
+    #[test]
+    fn unknown_names_resolve_to_none() {
+        for name in ["scale_4m", "bandwidth_chain_4m", "cavity_step_n128", "nope"] {
+            assert!(op_for_artifact(name).is_none(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! §III.D generic 2D stencil, host-parallelized.
+//!
+//! Row-banded over the worker pool with an interior fast path: inside
+//! the halo the taps reduce to constant flat offsets (no per-tap bounds
+//! tests), which is the host analogue of the kernel's staged tile whose
+//! interior threads skip ghost handling. Accumulation order and types
+//! (f64 accumulate, tap order from `StencilSpec::taps`) are exactly the
+//! golden reference's, so results are bit-identical.
+
+use super::pool;
+use crate::ops::stencil::StencilSpec;
+use crate::ops::OpError;
+use crate::tensor::{NdArray, Shape};
+
+/// Apply `spec` with zero ghost cells — bit-identical to
+/// [`crate::ops::stencil::apply`].
+pub fn apply(
+    x: &NdArray<f32>,
+    spec: &StencilSpec,
+    threads: usize,
+) -> Result<NdArray<f32>, OpError> {
+    if x.rank() != 2 {
+        return Err(OpError::Invalid("stencil expects a 2D array".into()));
+    }
+    let taps = spec.taps()?;
+    let (h, w) = (x.shape().dims()[0], x.shape().dims()[1]);
+    let mut out = vec![0.0f32; h * w];
+    if h * w == 0 {
+        return Ok(NdArray::from_vec(Shape::new(&[h, w]), out));
+    }
+    let radius = spec.radius();
+    let xd = x.data();
+    // Interior flat offsets: tap (dy, dx) -> dy*w + dx.
+    let flat: Vec<(isize, f64)> = taps
+        .iter()
+        .map(|&(dy, dx, c)| (dy as isize * w as isize + dx as isize, c))
+        .collect();
+
+    let checked = |i: usize, j: usize| -> f32 {
+        let (hi, wi) = (h as i64, w as i64);
+        let mut acc = 0.0f64;
+        for &(dy, dx, c) in &taps {
+            let (y, xx) = (i as i64 + dy, j as i64 + dx);
+            if y >= 0 && y < hi && xx >= 0 && xx < wi {
+                acc += c * xd[y as usize * w + xx as usize] as f64;
+            }
+        }
+        acc as f32
+    };
+
+    let do_rows = |band: &mut [f32], i0: usize| {
+        for (k, row) in band.chunks_mut(w).enumerate() {
+            let i = i0 + k;
+            let interior_row = i >= radius && i + radius < h;
+            if !interior_row || w <= 2 * radius {
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o = checked(i, j);
+                }
+                continue;
+            }
+            for (j, o) in row.iter_mut().enumerate().take(radius) {
+                *o = checked(i, j);
+            }
+            let base_row = i * w;
+            for (j, o) in row
+                .iter_mut()
+                .enumerate()
+                .take(w - radius)
+                .skip(radius)
+            {
+                let base = (base_row + j) as isize;
+                let mut acc = 0.0f64;
+                for &(off, c) in &flat {
+                    acc += c * xd[(base + off) as usize] as f64;
+                }
+                *o = acc as f32;
+            }
+            for (j, o) in row.iter_mut().enumerate().skip(w - radius) {
+                *o = checked(i, j);
+            }
+        }
+    };
+
+    let t = pool::effective_threads(threads, h * w, h);
+    if t <= 1 {
+        do_rows(&mut out, 0);
+    } else {
+        let rows_per = (h + t - 1) / t;
+        std::thread::scope(|scope| {
+            for (wi, band) in out.chunks_mut(rows_per * w).enumerate() {
+                let do_rows = &do_rows;
+                scope.spawn(move || do_rows(band, wi * rows_per));
+            }
+        });
+    }
+    Ok(NdArray::from_vec(Shape::new(&[h, w]), out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::stencil as golden;
+    use crate::util::rng::Rng;
+
+    fn specs() -> Vec<StencilSpec> {
+        let mut v: Vec<StencilSpec> = (1..=4)
+            .map(|order| StencilSpec::FdLaplacian { order, scale: 0.3 })
+            .collect();
+        v.push(StencilSpec::Conv {
+            radius: 1,
+            mask: vec![1.0 / 9.0; 9],
+        });
+        v.push(StencilSpec::Taps {
+            radius: 2,
+            taps: vec![(2, 1, 1.25), (-1, -2, -0.5), (0, 0, 3.0)],
+        });
+        v
+    }
+
+    #[test]
+    fn matches_golden_bit_identical() {
+        let mut rng = Rng::new(0x57E);
+        for (hh, ww) in [(64usize, 64usize), (33, 7), (5, 40), (9, 9), (1, 13)] {
+            let x = NdArray::random(Shape::new(&[hh, ww]), &mut rng);
+            for spec in specs() {
+                let want = golden::apply(&x, &spec).unwrap();
+                for threads in [1, 4] {
+                    let got = apply(&x, &spec, threads).unwrap();
+                    assert_eq!(got, want, "{hh}x{ww} {spec:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validation_parity() {
+        let x = NdArray::iota(Shape::new(&[8]));
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        assert!(apply(&x, &spec, 4).is_err());
+        let x2 = NdArray::iota(Shape::new(&[8, 8]));
+        let bad = StencilSpec::FdLaplacian { order: 9, scale: 1.0 };
+        assert!(apply(&x2, &bad, 4).is_err());
+    }
+}

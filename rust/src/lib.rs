@@ -8,10 +8,13 @@
 //! * **L1** — Pallas kernels (`python/compile/kernels/`), AOT-lowered to HLO.
 //! * **L2** — JAX compositions (`python/compile/model.py`, `cfd.py`).
 //! * **L3** — this crate: the coordinator, planner, Tesla-C1060 memory-system
-//!   simulator, PJRT runtime, and CPU reference implementations.
+//!   simulator, PJRT runtime (feature `pjrt`), the tiled multi-threaded
+//!   host execution backend (`hostexec`), and CPU reference
+//!   implementations.
 
 pub mod tensor;
 pub mod ops;
+pub mod hostexec;
 pub mod planner;
 pub mod gpusim;
 pub mod kernels;

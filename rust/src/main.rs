@@ -6,13 +6,15 @@
 //!   run --artifact NAME          execute one artifact on random inputs
 //!   serve [--requests N]         start the coordinator and push a mixed
 //!                                synthetic workload through it
+//!          [--backend auto|naive|hostexec|pjrt]   executor selection
 //!   cavity [--n N --steps S]     run the lid-driven cavity demo
+//!                                (host solver when artifacts missing)
 //!   sim [--experiment table1]    print a simulated paper table
 //!
 //! (Hand-rolled argument parsing: clap is unavailable offline.)
 
 use gdrk::cfd::{CpuSolver, GpuModelDriver, Params};
-use gdrk::coordinator::{Service, ServiceConfig};
+use gdrk::coordinator::{Backend, Service, ServiceConfig};
 use gdrk::gpusim::{simulate, Device};
 use gdrk::kernels::{MemcpyKernel, TiledPermuteKernel};
 use gdrk::planner::plan_reorder;
@@ -31,6 +33,7 @@ const OPTS: &[&str] = &[
     "experiment",
     "artifacts-dir",
     "log-every",
+    "backend",
 ];
 
 fn main() {
@@ -161,6 +164,13 @@ fn cmd_run(args: &cli::Args) -> i32 {
 
 fn cmd_serve(args: &cli::Args) -> i32 {
     let requests = args.opt_usize("requests", 64);
+    let backend = match Backend::parse(args.opt("backend").unwrap_or("auto")) {
+        Some(b) => b,
+        None => {
+            eprintln!("gdrk serve: --backend must be auto|naive|hostexec|pjrt");
+            return 2;
+        }
+    };
     let dir = args
         .opt("artifacts-dir")
         .map(std::path::PathBuf::from)
@@ -169,6 +179,7 @@ fn cmd_serve(args: &cli::Args) -> i32 {
         artifacts_dir: dir,
         max_batch: 8,
         preload: vec!["permute3d_o102".into(), "interlace_n4".into()],
+        backend,
     }) {
         Ok(s) => s,
         Err(e) => {
@@ -227,20 +238,11 @@ fn cmd_cavity(args: &cli::Args) -> i32 {
     let n = args.opt_usize("n", 128);
     let steps = args.opt_usize("steps", 200);
     let log_every = args.opt_usize("log-every", 50);
-    let rt = match runtime_from(args) {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("gdrk: {e}");
-            return 1;
-        }
-    };
-    let driver = match GpuModelDriver::new(&rt, n) {
-        Ok(d) => d,
-        Err(e) => {
-            eprintln!("gdrk: {e}");
-            return 1;
-        }
-    };
+    let rt = runtime_from(args).ok();
+    let driver = GpuModelDriver::new_auto(rt.as_ref(), n);
+    if driver.is_host() {
+        eprintln!("gdrk: artifacts/PJRT unavailable; cavity runs on the host solver");
+    }
     let run = if args.has("host-roundtrip") {
         driver.run_stepwise(steps, log_every)
     } else {

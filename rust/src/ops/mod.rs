@@ -5,6 +5,12 @@
 //! correctness: PJRT results from the AOT artifacts are checked against
 //! them in the integration tests, and the property tests sweep them
 //! against each other.
+//!
+//! Execution is two-tier: [`Op::reference`] is the golden model (scalar
+//! odometer walk, single thread), [`Op::execute_fast`] routes to the
+//! tiled multi-threaded host backend in [`crate::hostexec`] — same
+//! results bit for bit, measured side by side in
+//! `benches/hostexec_speedup.rs`. [`Op::dispatch`] selects between them.
 
 pub mod copy;
 pub mod interlace;
@@ -38,6 +44,16 @@ pub enum Op {
     Deinterlace { n: usize },
     /// §III.D generic 2D stencil.
     Stencil { spec: StencilSpec },
+}
+
+/// Which host implementation executes an op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecBackend {
+    /// Scalar golden reference ([`Op::reference`]).
+    Naive,
+    /// Tiled multi-threaded backend ([`crate::hostexec`]).
+    #[default]
+    Host,
 }
 
 #[derive(Debug, Error)]
@@ -90,6 +106,24 @@ impl Op {
             Op::Interlace { .. } => interlace::interlace(inputs).map(|a| vec![a]),
             Op::Deinterlace { n } => interlace::deinterlace(inputs[0], *n),
             Op::Stencil { spec } => stencil::apply(inputs[0], spec).map(|a| vec![a]),
+        }
+    }
+
+    /// Execute on the fast host backend (bit-identical to
+    /// [`Op::reference`]; see `crate::hostexec` for the technique).
+    pub fn execute_fast(&self, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, OpError> {
+        crate::hostexec::execute(self, inputs)
+    }
+
+    /// Execute on the selected host backend.
+    pub fn dispatch(
+        &self,
+        inputs: &[&NdArray<f32>],
+        backend: ExecBackend,
+    ) -> Result<Vec<NdArray<f32>>, OpError> {
+        match backend {
+            ExecBackend::Naive => self.reference(inputs),
+            ExecBackend::Host => self.execute_fast(inputs),
         }
     }
 }

@@ -1,10 +1,14 @@
 //! §III.B reference permute/transpose (naive index-walk, the golden model).
 
 use super::OpError;
-use crate::tensor::{NdArray, Order};
+use crate::tensor::{NdArray, Order, StridedWalk};
 
 /// Transpose with row-major axes: `out[i0,..] = in[idx[axes[0]], ..]` —
 /// i.e. output axis `j` takes input axis `axes[j]`.
+///
+/// This is the naive scalar walk (one element per step, no tiling, no
+/// threads): it defines the semantics and anchors the property tests;
+/// the fast path is [`crate::hostexec::permute`].
 pub fn transpose(x: &NdArray<f32>, axes: &[usize]) -> Result<NdArray<f32>, OpError> {
     let n = x.rank();
     if axes.len() != n || Order::new(axes).is_err() {
@@ -16,36 +20,11 @@ pub fn transpose(x: &NdArray<f32>, axes: &[usize]) -> Result<NdArray<f32>, OpErr
     let in_strides = x.shape().strides();
     // Stride of output axis j in the *input* linear space.
     let walk: Vec<usize> = axes.iter().map(|&a| in_strides[a]).collect();
-    let dims = out_shape.dims().to_vec();
 
-    let mut out = Vec::with_capacity(x.len());
-    let mut idx = vec![0usize; n];
-    let mut lin_in = 0usize;
-    if x.len() > 0 {
-        loop {
-            out.push(x.data()[lin_in]);
-            // Odometer increment over output indices, updating lin_in.
-            let mut axis = n;
-            loop {
-                if axis == 0 {
-                    break;
-                }
-                axis -= 1;
-                idx[axis] += 1;
-                lin_in += walk[axis];
-                if idx[axis] < dims[axis] {
-                    break;
-                }
-                lin_in -= walk[axis] * dims[axis];
-                idx[axis] = 0;
-                if axis == 0 {
-                    return Ok(NdArray::from_vec(out_shape, out));
-                }
-            }
-            if n == 0 {
-                break;
-            }
-        }
+    let mut out = vec![0.0f32; x.len()];
+    let xd = x.data();
+    for (o, ioff) in StridedWalk::new(out_shape.dims(), &walk).enumerate() {
+        out[o] = xd[ioff];
     }
     Ok(NdArray::from_vec(out_shape, out))
 }

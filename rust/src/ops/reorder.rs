@@ -2,7 +2,19 @@
 
 use super::permute;
 use super::OpError;
-use crate::tensor::{NdArray, Order, Shape};
+use crate::tensor::{NdArray, Order, Shape, StridedWalk};
+
+/// Merge the slowest axes of a permuted shape down to `out_rank` dims —
+/// the free row-major merge shared by the naive path below and the
+/// hostexec backend. `out_rank` must be in `1..=dims.len()`.
+pub fn collapse_dims(dims: &[usize], out_rank: usize) -> Vec<usize> {
+    let n = dims.len();
+    debug_assert!(out_rank >= 1 && out_rank <= n);
+    let merged: usize = dims[..n - out_rank + 1].iter().product();
+    let mut new_dims = vec![merged];
+    new_dims.extend_from_slice(&dims[n - out_rank + 1..]);
+    new_dims
+}
 
 /// N→M reorder: permute into `order`, then merge the slowest axes so the
 /// result has `out_rank` dimensions (free row-major merge — the data
@@ -19,10 +31,7 @@ pub fn reorder_collapse(
         )));
     }
     let y = permute::permute(x, order)?;
-    let dims = y.shape().dims().to_vec();
-    let merged: usize = dims[..n - out_rank + 1].iter().product();
-    let mut new_dims = vec![merged];
-    new_dims.extend_from_slice(&dims[n - out_rank + 1..]);
+    let new_dims = collapse_dims(y.shape().dims(), out_rank);
     Ok(y.reshaped(Shape::new(&new_dims)))
 }
 
@@ -44,12 +53,20 @@ pub fn subarray(
             )));
         }
     }
+    // Same odometer as the naive transpose: walk the window with the
+    // input's strides from the window corner.
     let out_shape = Shape::new(shape);
-    let out = NdArray::from_fn(out_shape, |idx| {
-        let src: Vec<usize> = idx.iter().zip(base).map(|(i, b)| i + b).collect();
-        x.get(&src)
-    });
-    Ok(out)
+    let mut out = vec![0.0f32; out_shape.num_elements()];
+    let xd = x.data();
+    let corner: usize = base
+        .iter()
+        .zip(&x.shape().strides())
+        .map(|(b, s)| b * s)
+        .sum();
+    for (o, ioff) in StridedWalk::with_base(shape, &x.shape().strides(), corner).enumerate() {
+        out[o] = xd[ioff];
+    }
+    Ok(NdArray::from_vec(out_shape, out))
 }
 
 #[cfg(test)]

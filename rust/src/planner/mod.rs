@@ -120,6 +120,69 @@ impl Plan {
     }
 }
 
+/// Cache-tile geometry for the **host** execution backend (`hostexec`),
+/// derived from a [`Plan`] the same way the launch geometry is: collapse
+/// the shared fastest prefix into one contiguous run (the host analogue
+/// of the kernels' widened per-thread copies), canonicalize the
+/// remaining permutation (drop unit axes, merge preserved runs), and
+/// tile the reduced movement plane at [`TILE`]×[`TILE`] for the cache
+/// instead of shared memory.
+///
+/// All quantities are in **runs** of `run_elems` contiguous elements:
+/// the reduced problem is a permutation of `red_in_dims`-many runs by
+/// the row-major `red_axes`. `red_axes` is either empty (the whole move
+/// is one contiguous stream) or a non-identity permutation of rank ≥ 2
+/// whose fastest input axis (`red_in_dims.len() - 1`) lands on
+/// [`HostGeometry::row_axis`] — the tile's row dimension.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostGeometry {
+    /// Contiguous elements moved per copy (product of the shared
+    /// fastest prefix extents; the whole tensor for identity orders).
+    pub run_elems: usize,
+    /// Reduced input extents, in runs (empty => memcpy).
+    pub red_in_dims: Vec<usize>,
+    /// Reduced row-major transpose axes over `red_in_dims`.
+    pub red_axes: Vec<usize>,
+    /// Square cache-tile edge on the movement plane, in runs.
+    pub tile: usize,
+}
+
+impl HostGeometry {
+    /// True when the rearrangement is a single contiguous copy.
+    pub fn is_memcpy(&self) -> bool {
+        self.red_axes.is_empty()
+    }
+
+    /// Reduced output extents (`out[j] = in[axes[j]]`).
+    pub fn red_out_dims(&self) -> Vec<usize> {
+        self.red_axes.iter().map(|&a| self.red_in_dims[a]).collect()
+    }
+
+    /// Output axis receiving the reduced input's fastest axis — the
+    /// tile's row dimension (None for memcpy).
+    pub fn row_axis(&self) -> Option<usize> {
+        let m = self.red_axes.len();
+        self.red_axes.iter().position(|&a| a == m.wrapping_sub(1))
+    }
+}
+
+impl Plan {
+    /// Derive the host backend's cache-tile geometry from this plan.
+    pub fn host_geometry(&self) -> HostGeometry {
+        let (dims, axes) =
+            crate::tensor::collapse::canonicalize_axes(self.in_shape.dims(), &self.axes);
+        let m = axes.len();
+        let s = crate::tensor::collapse::trailing_identity(&axes);
+        let run_elems: usize = dims[m - s..].iter().product();
+        HostGeometry {
+            run_elems,
+            red_in_dims: dims[..m - s].to_vec(),
+            red_axes: axes[..m - s].to_vec(),
+            tile: TILE,
+        }
+    }
+}
+
 /// Length of the common fastest prefix of the order (dims that keep their
 /// position at the fast end and act as the run the kernel copies whole).
 fn common_prefix(order: &Order) -> usize {
@@ -367,6 +430,67 @@ mod tests {
     fn rank_mismatch_rejected() {
         let e = plan_reorder(&Shape::new(&[4, 4]), &order(&[0, 1, 2]), false);
         assert!(e.is_err());
+    }
+
+    #[test]
+    fn host_geometry_identity_is_memcpy() {
+        let p = plan_reorder(&Shape::new(&[64, 64, 64]), &order(&[0, 1, 2]), false).unwrap();
+        let g = p.host_geometry();
+        assert!(g.is_memcpy());
+        assert_eq!(g.run_elems, 64 * 64 * 64);
+        assert_eq!(g.row_axis(), None);
+    }
+
+    #[test]
+    fn host_geometry_shared_prefix_collapses_to_run() {
+        // [0 2 1] keeps paper dim 0 fastest: runs of 512, reduced 2D
+        // transpose of (128, 256) runs.
+        let p = plan_reorder(&Shape::new(&[128, 256, 512]), &order(&[0, 2, 1]), false).unwrap();
+        let g = p.host_geometry();
+        assert_eq!(g.run_elems, 512);
+        assert_eq!(g.red_in_dims, vec![128, 256]);
+        assert_eq!(g.red_axes, vec![1, 0]);
+        assert_eq!(g.red_out_dims(), vec![256, 128]);
+        assert_eq!(g.row_axis(), Some(0));
+        assert_eq!(g.tile, TILE);
+    }
+
+    #[test]
+    fn host_geometry_staged_transpose_keeps_rank() {
+        // [1 0 2] swaps the two fastest paper dims: element-level tiles,
+        // batched over the slowest axis.
+        let p = plan_reorder(&Shape::new(&[64, 256, 512]), &order(&[1, 0, 2]), false).unwrap();
+        let g = p.host_geometry();
+        assert_eq!(g.run_elems, 1);
+        assert_eq!(g.red_in_dims, vec![64, 256, 512]);
+        assert_eq!(g.red_axes, vec![0, 2, 1]);
+        assert_eq!(g.row_axis(), Some(1));
+    }
+
+    #[test]
+    fn host_geometry_merges_preserved_pairs() {
+        // [2 0 1] (paper) = row-major axes [1, 2, 0]: input axes 1 and 2
+        // stay adjacent in the output and merge into one wide axis.
+        let p = plan_reorder(&Shape::new(&[4, 6, 8]), &order(&[2, 0, 1]), false).unwrap();
+        assert_eq!(p.axes, vec![1, 2, 0]);
+        let g = p.host_geometry();
+        assert_eq!(g.run_elems, 1);
+        assert_eq!(g.red_in_dims, vec![4, 48]);
+        assert_eq!(g.red_axes, vec![1, 0]);
+    }
+
+    #[test]
+    fn host_geometry_drops_unit_axes() {
+        let p = plan_reorder(
+            &Shape::new(&[16, 256, 1, 16, 256]),
+            &order(&[3, 0, 2, 1, 4]),
+            false,
+        )
+        .unwrap();
+        let g = p.host_geometry();
+        assert!(!g.red_in_dims.contains(&1));
+        let total: usize = g.red_in_dims.iter().product::<usize>() * g.run_elems;
+        assert_eq!(total, 16 * 256 * 16 * 256);
     }
 
     #[test]

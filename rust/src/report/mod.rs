@@ -61,6 +61,64 @@ pub fn pct(x: f64) -> String {
     format!("{:.0}%", 100.0 * x)
 }
 
+/// One naive-vs-hostexec measurement for the machine-readable bench log.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub op: String,
+    pub shape: String,
+    /// Paper order vector / parameter tag ("-" when not applicable).
+    pub order: String,
+    pub naive_gbs: f64,
+    pub hostexec_gbs: f64,
+}
+
+impl BenchRecord {
+    pub fn speedup(&self) -> f64 {
+        if self.naive_gbs > 0.0 {
+            self.hostexec_gbs / self.naive_gbs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Serialize bench records to the `BENCH_hostexec.json` schema tracked
+/// across PRs: `{threads, results: [{op, shape, order, naive_gbs,
+/// hostexec_gbs, speedup}]}`.
+pub fn bench_json(threads: usize, records: &[BenchRecord]) -> String {
+    let mut out = String::from("{\n");
+    let _ = writeln!(out, "  \"bench\": \"hostexec\",");
+    let _ = writeln!(out, "  \"threads\": {threads},");
+    let _ = writeln!(out, "  \"results\": [");
+    for (i, r) in records.iter().enumerate() {
+        let comma = if i + 1 < records.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"op\": \"{}\", \"shape\": \"{}\", \"order\": \"{}\", \
+             \"naive_gbs\": {:.3}, \"hostexec_gbs\": {:.3}, \"speedup\": {:.3}}}{comma}",
+            r.op,
+            r.shape,
+            r.order,
+            r.naive_gbs,
+            r.hostexec_gbs,
+            r.speedup()
+        );
+    }
+    let _ = writeln!(out, "  ]");
+    out.push('}');
+    out.push('\n');
+    out
+}
+
+/// Write [`bench_json`] to `path`.
+pub fn write_bench_json(
+    path: impl AsRef<std::path::Path>,
+    threads: usize,
+    records: &[BenchRecord],
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_json(threads, records))
+}
+
 /// An (x, y) series for figure-style output.
 pub fn series(title: &str, points: &[(f64, f64)], xlabel: &str, ylabel: &str) -> String {
     let mut out = String::new();
@@ -104,5 +162,38 @@ mod tests {
     #[test]
     fn pct_format() {
         assert_eq!(pct(0.805), "80%");
+    }
+
+    #[test]
+    fn bench_json_parses_back() {
+        let recs = vec![
+            BenchRecord {
+                op: "permute3d".into(),
+                shape: "[64, 256, 512]".into(),
+                order: "[1 0 2]".into(),
+                naive_gbs: 1.25,
+                hostexec_gbs: 5.0,
+            },
+            BenchRecord {
+                op: "interlace".into(),
+                shape: "4 x [262144]".into(),
+                order: "n=4".into(),
+                naive_gbs: 2.0,
+                hostexec_gbs: 4.0,
+            },
+        ];
+        let text = bench_json(8, &recs);
+        let v = crate::util::json::parse(&text).expect("valid json");
+        assert_eq!(v.get("threads").and_then(|t| t.as_usize()), Some(8));
+        let results = v.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("speedup").and_then(|s| s.as_f64()),
+            Some(4.0)
+        );
+        assert_eq!(
+            results[1].get("op").and_then(|s| s.as_str()),
+            Some("interlace")
+        );
     }
 }

@@ -9,13 +9,25 @@
 //! `PjRtClient` is `Rc`-based (not `Send`): the coordinator therefore owns
 //! exactly one `Runtime` on a dedicated device-worker thread
 //! (vLLM-router topology — see `crate::coordinator`).
+//!
+//! ## The `pjrt` feature
+//!
+//! The native path needs the offline `xla` crate closure, which only
+//! some hosts carry. It is gated behind the off-by-default `pjrt` cargo
+//! feature: without it this module compiles a **stub** `Runtime` with
+//! the same public surface (modulo `load`, whose success type is the
+//! native executable handle and degrades to `()`) — the manifest still
+//! loads and validates, but `execute` returns
+//! [`RuntimeError::Unavailable`].
+//! Callers that can fall back (the coordinator's `Backend::Auto`, the
+//! CFD driver's `new_auto`) probe [`Runtime::pjrt_available`] and route
+//! to the host execution backend (`crate::hostexec`) instead, so the
+//! default build serves every rearrangement op without artifacts.
 
 pub mod artifact;
 
 use crate::tensor::{DType, NdArray, Shape};
 use artifact::{ArtifactEntry, Manifest, ManifestError};
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::Path;
 use thiserror::Error;
 
@@ -56,45 +68,6 @@ impl Tensor {
             _ => None,
         }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal, RuntimeError> {
-        // Single-copy path: build the literal with its final shape rather
-        // than vec1 + reshape (which copies the data twice) — §Perf L3-1.
-        fn bytes_of<T>(s: &[T]) -> &[u8] {
-            unsafe {
-                std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s))
-            }
-        }
-        let lit = match self {
-            Tensor::F32(a) => xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                a.shape().dims(),
-                bytes_of(a.data()),
-            )?,
-            Tensor::I32(a) => xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::S32,
-                a.shape().dims(),
-                bytes_of(a.data()),
-            )?,
-        };
-        Ok(lit)
-    }
-
-    fn from_literal(lit: &xla::Literal) -> Result<Tensor, RuntimeError> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        match shape.ty() {
-            xla::ElementType::F32 => Ok(Tensor::F32(NdArray::from_vec(
-                Shape::new(&dims),
-                lit.to_vec::<f32>()?,
-            ))),
-            xla::ElementType::S32 => Ok(Tensor::I32(NdArray::from_vec(
-                Shape::new(&dims),
-                lit.to_vec::<i32>()?,
-            ))),
-            ty => Err(RuntimeError::UnsupportedDType(format!("{ty:?}"))),
-        }
-    }
 }
 
 impl From<NdArray<f32>> for Tensor {
@@ -130,6 +103,9 @@ pub enum RuntimeError {
     },
     #[error("unsupported output dtype {0}")]
     UnsupportedDType(String),
+    #[error("PJRT unavailable: {0} (build with --features pjrt, or use the host backend)")]
+    Unavailable(String),
+    #[cfg(feature = "pjrt")]
     #[error("xla: {0}")]
     Xla(#[from] xla::Error),
 }
@@ -142,122 +118,253 @@ pub struct ExecStats {
     pub total_exec_seconds: f64,
 }
 
-/// The PJRT runtime: client + artifact manifest + executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<HashMap<String, ExecStats>>,
-}
-
-impl Runtime {
-    /// Create a CPU-PJRT runtime over an artifacts directory.
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime, RuntimeError> {
-        let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(HashMap::new()),
-        })
+fn validate_inputs_against(
+    entry: &ArtifactEntry,
+    name: &str,
+    inputs: &[Tensor],
+) -> Result<(), RuntimeError> {
+    if inputs.len() != entry.inputs.len() {
+        return Err(RuntimeError::Arity {
+            name: name.to_string(),
+            expected: entry.inputs.len(),
+            got: inputs.len(),
+        });
     }
-
-    /// Create a runtime from the default artifacts directory.
-    pub fn from_default_dir() -> Result<Runtime, RuntimeError> {
-        Self::new(artifact::default_dir())
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry, RuntimeError> {
-        self.manifest
-            .get(name)
-            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))
-    }
-
-    /// Compile (or fetch from cache) the executable for an artifact.
-    pub fn load(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>, RuntimeError> {
-        if let Some(exe) = self.cache.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let entry = self.entry(name)?;
-        let path = self.manifest.hlo_path(entry);
-        let proto = xla::HloModuleProto::from_text_file(&path)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
-        self.cache
-            .borrow_mut()
-            .insert(name.to_string(), exe.clone());
-        self.stats
-            .borrow_mut()
-            .entry(name.to_string())
-            .or_default()
-            .compiles += 1;
-        Ok(exe)
-    }
-
-    fn validate_inputs(&self, name: &str, inputs: &[Tensor]) -> Result<(), RuntimeError> {
-        let entry = self.entry(name)?;
-        if inputs.len() != entry.inputs.len() {
-            return Err(RuntimeError::Arity {
+    for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+        if t.shape() != &spec.shape || t.dtype() != spec.dtype {
+            return Err(RuntimeError::InputMismatch {
                 name: name.to_string(),
-                expected: entry.inputs.len(),
-                got: inputs.len(),
+                index: i,
+                expected: format!("{}{}", spec.dtype, spec.shape),
+                got: format!("{}{}", t.dtype(), t.shape()),
             });
         }
-        for (i, (t, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
-            if t.shape() != &spec.shape || t.dtype() != spec.dtype {
-                return Err(RuntimeError::InputMismatch {
-                    name: name.to_string(),
-                    index: i,
-                    expected: format!("{}{}", spec.dtype, spec.shape),
-                    got: format!("{}{}", t.dtype(), t.shape()),
-                });
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+
+    impl Tensor {
+        fn to_literal(&self) -> Result<xla::Literal, RuntimeError> {
+            // Single-copy path: build the literal with its final shape rather
+            // than vec1 + reshape (which copies the data twice) — §Perf L3-1.
+            fn bytes_of<T>(s: &[T]) -> &[u8] {
+                unsafe {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, std::mem::size_of_val(s))
+                }
+            }
+            let lit = match self {
+                Tensor::F32(a) => xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    a.shape().dims(),
+                    bytes_of(a.data()),
+                )?,
+                Tensor::I32(a) => xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    a.shape().dims(),
+                    bytes_of(a.data()),
+                )?,
+            };
+            Ok(lit)
+        }
+
+        fn from_literal(lit: &xla::Literal) -> Result<Tensor, RuntimeError> {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            match shape.ty() {
+                xla::ElementType::F32 => Ok(Tensor::F32(NdArray::from_vec(
+                    Shape::new(&dims),
+                    lit.to_vec::<f32>()?,
+                ))),
+                xla::ElementType::S32 => Ok(Tensor::I32(NdArray::from_vec(
+                    Shape::new(&dims),
+                    lit.to_vec::<i32>()?,
+                ))),
+                ty => Err(RuntimeError::UnsupportedDType(format!("{ty:?}"))),
             }
         }
-        Ok(())
     }
 
-    /// Execute an artifact on host tensors, returning host tensors.
-    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
-        self.validate_inputs(name, inputs)?;
-        let exe = self.load(name)?;
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_, _>>()?;
-        let t0 = std::time::Instant::now();
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let dt = t0.elapsed().as_secs_f64();
-        {
-            let mut stats = self.stats.borrow_mut();
-            let s = stats.entry(name.to_string()).or_default();
-            s.executions += 1;
-            s.total_exec_seconds += dt;
+    /// The PJRT runtime: client + artifact manifest + executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+        stats: RefCell<HashMap<String, ExecStats>>,
+    }
+
+    impl Runtime {
+        /// Create a CPU-PJRT runtime over an artifacts directory.
+        pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime, RuntimeError> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Runtime {
+                client,
+                manifest,
+                cache: RefCell::new(HashMap::new()),
+                stats: RefCell::new(HashMap::new()),
+            })
         }
-        // aot.py lowers with return_tuple=True: the result is an n-tuple.
-        let parts = result.to_tuple()?;
-        parts.iter().map(Tensor::from_literal).collect()
-    }
 
-    // NOTE on device-resident state: the `xla` 0.1.6 C bindings return a
-    // multi-output computation's results as ONE tuple PjRtBuffer, and
-    // expose no buffer-level untuple — so chaining a 3-output step's
-    // buffers into the next step is not possible at this layer. The
-    // dispatch-amortization optimization is instead the fused K-step
-    // chunk artifact (`cavity_run10_n128`), measured in EXPERIMENTS §Perf.
+        /// Create a runtime from the default artifacts directory.
+        pub fn from_default_dir() -> Result<Runtime, RuntimeError> {
+            Self::new(artifact::default_dir())
+        }
 
-    pub fn stats(&self) -> HashMap<String, ExecStats> {
-        self.stats.borrow().clone()
+        /// True when this build carries the native PJRT path.
+        pub const fn pjrt_available() -> bool {
+            true
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn entry(&self, name: &str) -> Result<&ArtifactEntry, RuntimeError> {
+            self.manifest
+                .get(name)
+                .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))
+        }
+
+        /// Compile (or fetch from cache) the executable for an artifact.
+        pub fn load(
+            &self,
+            name: &str,
+        ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>, RuntimeError> {
+            if let Some(exe) = self.cache.borrow().get(name) {
+                return Ok(exe.clone());
+            }
+            let entry = self.entry(name)?;
+            let path = self.manifest.hlo_path(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+            self.cache
+                .borrow_mut()
+                .insert(name.to_string(), exe.clone());
+            self.stats
+                .borrow_mut()
+                .entry(name.to_string())
+                .or_default()
+                .compiles += 1;
+            Ok(exe)
+        }
+
+        /// Execute an artifact on host tensors, returning host tensors.
+        pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
+            validate_inputs_against(self.entry(name)?, name, inputs)?;
+            let exe = self.load(name)?;
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<_, _>>()?;
+            let t0 = std::time::Instant::now();
+            let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            let dt = t0.elapsed().as_secs_f64();
+            {
+                let mut stats = self.stats.borrow_mut();
+                let s = stats.entry(name.to_string()).or_default();
+                s.executions += 1;
+                s.total_exec_seconds += dt;
+            }
+            // aot.py lowers with return_tuple=True: the result is an n-tuple.
+            let parts = result.to_tuple()?;
+            parts.iter().map(Tensor::from_literal).collect()
+        }
+
+        // NOTE on device-resident state: the `xla` 0.1.6 C bindings return a
+        // multi-output computation's results as ONE tuple PjRtBuffer, and
+        // expose no buffer-level untuple — so chaining a 3-output step's
+        // buffers into the next step is not possible at this layer. The
+        // dispatch-amortization optimization is instead the fused K-step
+        // chunk artifact (`cavity_run10_n128`), measured in EXPERIMENTS §Perf.
+
+        pub fn stats(&self) -> HashMap<String, ExecStats> {
+            self.stats.borrow().clone()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Stub runtime for builds without the `pjrt` feature: same surface,
+    /// manifest-only. `execute`/`load` fail with
+    /// [`RuntimeError::Unavailable`]; backend-aware callers check
+    /// [`Runtime::pjrt_available`] first and use `crate::hostexec`.
+    pub struct Runtime {
+        manifest: Manifest,
+    }
+
+    impl Runtime {
+        /// Load the artifact manifest (no PJRT client in this build).
+        pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime, RuntimeError> {
+            let manifest = Manifest::load(artifacts_dir)?;
+            Ok(Runtime { manifest })
+        }
+
+        /// Create a runtime from the default artifacts directory.
+        pub fn from_default_dir() -> Result<Runtime, RuntimeError> {
+            Self::new(artifact::default_dir())
+        }
+
+        /// True when this build carries the native PJRT path.
+        pub const fn pjrt_available() -> bool {
+            false
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (built without the pjrt feature)".to_string()
+        }
+
+        pub fn entry(&self, name: &str) -> Result<&ArtifactEntry, RuntimeError> {
+            self.manifest
+                .get(name)
+                .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))
+        }
+
+        /// Compilation is unavailable without PJRT.
+        pub fn load(&self, name: &str) -> Result<(), RuntimeError> {
+            self.entry(name)?;
+            Err(RuntimeError::Unavailable(format!(
+                "cannot compile '{name}'"
+            )))
+        }
+
+        /// Validates against the manifest, then fails: execution needs
+        /// the native client.
+        pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, RuntimeError> {
+            validate_inputs_against(self.entry(name)?, name, inputs)?;
+            Err(RuntimeError::Unavailable(format!(
+                "cannot execute '{name}'"
+            )))
+        }
+
+        pub fn stats(&self) -> HashMap<String, ExecStats> {
+            HashMap::new()
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::Runtime;
 
 #[cfg(test)]
 mod tests {
@@ -274,6 +381,40 @@ mod tests {
         assert!(i.as_f32().is_none());
     }
 
+    #[test]
+    fn validate_inputs_checks_arity_and_specs() {
+        let entry = ArtifactEntry {
+            name: "t".into(),
+            group: "g".into(),
+            file: "t.hlo.txt".into(),
+            inputs: vec![TensorSpec {
+                shape: Shape::new(&[2, 2]),
+                dtype: DType::F32,
+            }],
+            outputs: vec![],
+            note: String::new(),
+            meta: Default::default(),
+        };
+        let ok = Tensor::F32(NdArray::iota(Shape::new(&[2, 2])));
+        assert!(validate_inputs_against(&entry, "t", std::slice::from_ref(&ok)).is_ok());
+        assert!(matches!(
+            validate_inputs_against(&entry, "t", &[]),
+            Err(RuntimeError::Arity { .. })
+        ));
+        let bad = Tensor::F32(NdArray::iota(Shape::new(&[4])));
+        assert!(matches!(
+            validate_inputs_against(&entry, "t", &[bad]),
+            Err(RuntimeError::InputMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn missing_manifest_is_a_manifest_error() {
+        let err = Runtime::new("/definitely/not/a/dir").unwrap_err();
+        assert!(matches!(err, RuntimeError::Manifest(_)));
+    }
+
     // Literal round-trips and execution are covered by the integration
-    // tests in rust/tests/ (they need built artifacts + the PJRT client).
+    // tests in rust/tests/ (they need built artifacts + the PJRT client
+    // behind the `pjrt` feature).
 }

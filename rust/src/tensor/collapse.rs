@@ -1,0 +1,171 @@
+//! Axis-collapse algebra for transposes.
+//!
+//! Any permutation of a dense row-major array can be *canonicalized*
+//! before execution:
+//!
+//! 1. axes of extent 1 carry no data movement and are dropped;
+//! 2. runs of input axes that stay adjacent (and in order) in the output
+//!    are merged into a single wider axis.
+//!
+//! The canonical form has the same flat data movement as the original
+//! but minimal rank; in particular an identity permutation of any rank
+//! canonicalizes to rank ≤ 1 (a memcpy), and a trailing identity block
+//! canonicalizes to one fast axis whose extent is the contiguous-run
+//! length the host backend moves with `copy_from_slice`.
+
+/// Length of the trailing identity block of `axes` (`axes[j] == j` for
+/// the last `k` positions). For row-major axes this is the shared
+/// fastest suffix — the contiguous run both sides keep.
+pub fn trailing_identity(axes: &[usize]) -> usize {
+    axes.iter()
+        .enumerate()
+        .rev()
+        .take_while(|&(j, &a)| j == a)
+        .count()
+}
+
+/// Canonicalize a transpose: drop unit axes, merge preserved runs.
+///
+/// `axes` must be a permutation of `0..in_dims.len()` in the row-major
+/// convention (output axis `j` takes input axis `axes[j]`). Returns the
+/// canonical `(in_dims, axes)` pair; the transpose it describes moves
+/// the same flat buffer the same way. The canonical `axes` is either
+/// empty / the rank-1 identity (a pure memcpy) or a permutation with no
+/// unit axes and no mergeable adjacent pair.
+///
+/// Shapes containing a zero extent are the caller's problem: the buffer
+/// is empty, there is nothing to canonicalize.
+pub fn canonicalize_axes(in_dims: &[usize], axes: &[usize]) -> (Vec<usize>, Vec<usize>) {
+    debug_assert_eq!(in_dims.len(), axes.len());
+
+    // 1. Drop unit axes, renumbering the survivors in input order.
+    let mut remap = vec![usize::MAX; in_dims.len()];
+    let mut dims1: Vec<usize> = Vec::with_capacity(in_dims.len());
+    for (old, &d) in in_dims.iter().enumerate() {
+        if d != 1 {
+            remap[old] = dims1.len();
+            dims1.push(d);
+        }
+    }
+    let axes1: Vec<usize> = axes
+        .iter()
+        .filter(|&&a| in_dims[a] != 1)
+        .map(|&a| remap[a])
+        .collect();
+
+    // 2. Merge output-adjacent runs of input-adjacent axes. Each group
+    //    is a maximal interval [start, start+len) of input axes that the
+    //    permutation keeps together in order.
+    let mut groups: Vec<(usize, usize)> = Vec::new(); // (start in-axis, len)
+    for &a in &axes1 {
+        if let Some(last) = groups.last_mut() {
+            if a == last.0 + last.1 {
+                last.1 += 1;
+                continue;
+            }
+        }
+        groups.push((a, 1));
+    }
+
+    // Groups partition 0..dims1.len() into disjoint intervals; renumber
+    // them by input position to get the canonical input dims.
+    let mut by_start: Vec<(usize, usize)> = groups
+        .iter()
+        .enumerate()
+        .map(|(gi, &(start, _))| (start, gi))
+        .collect();
+    by_start.sort_unstable();
+    let mut new_in_dims = vec![0usize; groups.len()];
+    let mut new_index_of_group = vec![0usize; groups.len()];
+    for (new_idx, &(start, gi)) in by_start.iter().enumerate() {
+        let (_, len) = groups[gi];
+        new_in_dims[new_idx] = dims1[start..start + len].iter().product();
+        new_index_of_group[gi] = new_idx;
+    }
+    let new_axes: Vec<usize> = (0..groups.len()).map(|gi| new_index_of_group[gi]).collect();
+    (new_in_dims, new_axes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trailing_identity_counts() {
+        assert_eq!(trailing_identity(&[0, 1, 2]), 3);
+        assert_eq!(trailing_identity(&[0, 2, 1]), 0);
+        assert_eq!(trailing_identity(&[1, 0, 2]), 1);
+        assert_eq!(trailing_identity(&[2, 0, 1]), 0);
+        assert_eq!(trailing_identity(&[]), 0);
+    }
+
+    #[test]
+    fn identity_collapses_to_memcpy() {
+        let (dims, axes) = canonicalize_axes(&[4, 5, 6], &[0, 1, 2]);
+        assert_eq!(dims, vec![120]);
+        assert_eq!(axes, vec![0]);
+    }
+
+    #[test]
+    fn unit_axes_dropped() {
+        // (1, 8, 1, 3) with axes [1, 0, 3, 2]: out takes (8, 1, 3, 1).
+        // Dropping units leaves in dims (8, 3), axes [0, 1] -> memcpy.
+        let (dims, axes) = canonicalize_axes(&[1, 8, 1, 3], &[1, 0, 3, 2]);
+        assert_eq!(dims, vec![24]);
+        assert_eq!(axes, vec![0]);
+    }
+
+    #[test]
+    fn all_units_is_scalar() {
+        let (dims, axes) = canonicalize_axes(&[1, 1], &[1, 0]);
+        assert!(dims.is_empty());
+        assert!(axes.is_empty());
+    }
+
+    #[test]
+    fn adjacent_pair_merges() {
+        // axes [2, 0, 1]: out0 <- in2, and (in0, in1) stay adjacent ->
+        // 2D transpose of (d0*d1, d2).
+        let (dims, axes) = canonicalize_axes(&[4, 6, 8], &[2, 0, 1]);
+        assert_eq!(dims, vec![24, 8]);
+        assert_eq!(axes, vec![1, 0]);
+    }
+
+    #[test]
+    fn trailing_block_survives_as_run() {
+        // axes [1, 0, 2, 3]: swap of the two slowest, (in2, in3) merged
+        // into the fast run axis.
+        let (dims, axes) = canonicalize_axes(&[3, 5, 7, 2], &[1, 0, 2, 3]);
+        assert_eq!(dims, vec![3, 5, 14]);
+        assert_eq!(axes, vec![1, 0, 2]);
+        assert_eq!(trailing_identity(&axes), 1);
+    }
+
+    #[test]
+    fn irreducible_permutation_untouched() {
+        let (dims, axes) = canonicalize_axes(&[2, 3, 4, 5], &[1, 3, 0, 2]);
+        assert_eq!(dims, vec![2, 3, 4, 5]);
+        assert_eq!(axes, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn canonical_movement_matches_original() {
+        // Brute-force: walking the canonical transpose visits the same
+        // flat input offsets in the same order as the original.
+        use crate::tensor::{NdArray, Shape};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0113);
+        for _ in 0..200 {
+            let n = rng.gen_between(1, 6);
+            let dims: Vec<usize> = (0..n).map(|_| rng.gen_between(1, 5)).collect();
+            let axes = rng.permutation(n);
+            let x = NdArray::random(Shape::new(&dims), &mut rng);
+            let want = crate::ops::permute::transpose(&x, &axes).unwrap();
+
+            let (cdims, caxes) = canonicalize_axes(&dims, &axes);
+            let cx = x.clone().reshaped(Shape::new(&cdims));
+            let got = crate::ops::permute::transpose(&cx, &caxes).unwrap();
+            assert_eq!(got.data(), want.data(), "dims {dims:?} axes {axes:?}");
+        }
+    }
+}

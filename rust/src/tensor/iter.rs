@@ -1,0 +1,128 @@
+//! Odometer iteration over a multi-index, tracking a strided offset.
+//!
+//! This is the index walk every naive rearrangement shares (transpose,
+//! subarray, the golden references): enumerate the output positions in
+//! row-major order while maintaining the corresponding *input* linear
+//! offset through a per-axis stride table — no per-element delinearize.
+
+/// Iterator yielding, for each row-major position of a `dims`-shaped
+/// index space (last axis fastest), the linear offset
+/// `base + Σ idx[j] * walk[j]`.
+///
+/// Rank 0 yields exactly one offset (`base`); any zero extent yields
+/// nothing.
+#[derive(Debug, Clone)]
+pub struct StridedWalk {
+    dims: Vec<usize>,
+    walk: Vec<usize>,
+    idx: Vec<usize>,
+    offset: usize,
+    remaining: usize,
+}
+
+impl StridedWalk {
+    pub fn new(dims: &[usize], walk: &[usize]) -> StridedWalk {
+        StridedWalk::with_base(dims, walk, 0)
+    }
+
+    /// Walk starting from a fixed base offset (e.g. a subarray corner).
+    pub fn with_base(dims: &[usize], walk: &[usize], base: usize) -> StridedWalk {
+        assert_eq!(dims.len(), walk.len(), "dims/walk rank mismatch");
+        StridedWalk {
+            dims: dims.to_vec(),
+            walk: walk.to_vec(),
+            idx: vec![0; dims.len()],
+            offset: base,
+            remaining: dims.iter().product(),
+        }
+    }
+}
+
+impl Iterator for StridedWalk {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let current = self.offset;
+        // Odometer increment (skipped after the final position).
+        if self.remaining > 0 {
+            for axis in (0..self.dims.len()).rev() {
+                self.idx[axis] += 1;
+                self.offset += self.walk[axis];
+                if self.idx[axis] < self.dims[axis] {
+                    break;
+                }
+                self.offset -= self.walk[axis] * self.dims[axis];
+                self.idx[axis] = 0;
+            }
+        }
+        Some(current)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
+}
+
+impl ExactSizeIterator for StridedWalk {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn identity_walk_is_linear() {
+        let s = Shape::new(&[2, 3, 4]);
+        let offs: Vec<usize> = StridedWalk::new(s.dims(), &s.strides()).collect();
+        assert_eq!(offs, (0..24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn transposed_walk_matches_linearize() {
+        // Walk a (3, 4) space through column-major strides: the offsets
+        // are the transpose gather order.
+        let offs: Vec<usize> = StridedWalk::new(&[4, 3], &[1, 4]).collect();
+        let want: Vec<usize> = {
+            let s = Shape::new(&[3, 4]);
+            let mut v = Vec::new();
+            for j in 0..4 {
+                for i in 0..3 {
+                    v.push(s.linearize(&[i, j]));
+                }
+            }
+            v
+        };
+        assert_eq!(offs, want);
+    }
+
+    #[test]
+    fn rank0_yields_base_once() {
+        let offs: Vec<usize> = StridedWalk::with_base(&[], &[], 7).collect();
+        assert_eq!(offs, vec![7]);
+    }
+
+    #[test]
+    fn zero_extent_yields_nothing() {
+        let mut w = StridedWalk::new(&[0, 3], &[3, 1]);
+        assert_eq!(w.len(), 0);
+        assert_eq!(w.next(), None);
+    }
+
+    #[test]
+    fn base_offset_applied() {
+        let offs: Vec<usize> = StridedWalk::with_base(&[2, 2], &[10, 1], 5).collect();
+        assert_eq!(offs, vec![5, 6, 15, 16]);
+    }
+
+    #[test]
+    fn exact_size() {
+        let mut w = StridedWalk::new(&[3, 3], &[3, 1]);
+        assert_eq!(w.len(), 9);
+        w.next();
+        assert_eq!(w.len(), 8);
+    }
+}

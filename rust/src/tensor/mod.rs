@@ -6,12 +6,16 @@
 //!   "dim 0" being the fastest dimension of the default layout. Paper dim
 //!   `k` of a rank-`n` array therefore lives on row-major axis `n-1-k`.
 
+pub mod collapse;
 pub mod dtype;
+pub mod iter;
 pub mod ndarray;
 pub mod order;
 pub mod shape;
 
+pub use collapse::{canonicalize_axes, trailing_identity};
 pub use dtype::DType;
+pub use iter::StridedWalk;
 pub use ndarray::NdArray;
 pub use order::Order;
 pub use shape::Shape;

@@ -5,9 +5,14 @@ use gdrk::tensor::{NdArray, Shape};
 use gdrk::util::rng::Rng;
 
 /// Locate the artifacts dir relative to the crate root; None (with a
-/// notice) when artifacts have not been generated — `make test` always
-/// generates them first, so a skip only happens on bare `cargo test`.
+/// notice) when artifacts have not been generated or this build lacks
+/// the native PJRT path — `make test` generates artifacts first, so a
+/// skip only happens on bare `cargo test` / default-feature builds.
 pub fn runtime_or_skip(test: &str) -> Option<Runtime> {
+    if !Runtime::pjrt_available() {
+        eprintln!("SKIP {test}: built without the pjrt feature (host backend only)");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("SKIP {test}: artifacts/ not built (run `make artifacts`)");

@@ -4,7 +4,7 @@
 mod common;
 
 use common::{random_f32, runtime_or_skip};
-use gdrk::coordinator::{Metrics, Service, ServiceConfig};
+use gdrk::coordinator::{Backend, Metrics, Service, ServiceConfig};
 use gdrk::ops::Op;
 use gdrk::runtime::Tensor;
 use gdrk::tensor::Order;
@@ -19,6 +19,7 @@ fn service_or_skip(test: &str) -> Option<Service> {
             artifacts_dir: dir,
             max_batch: 4,
             preload: vec![],
+            backend: Backend::Pjrt,
         })
         .expect("service start"),
     )

@@ -1,0 +1,227 @@
+//! Property tests: the hostexec backend must be **bit-identical** to
+//! the naive golden references for every op, shape and thread count —
+//! the correctness anchor that lets the fast path replace the walk
+//! everywhere. Runs on a bare checkout (no artifacts, no PJRT).
+
+use gdrk::hostexec;
+use gdrk::ops::{self, Op, StencilSpec};
+use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::util::rng::Rng;
+
+/// Random shape of rank 1..=5 with dims 1..=33 — deliberately crossing
+/// the 32-run tile boundary to exercise partial tiles.
+fn random_shape(rng: &mut Rng) -> Vec<usize> {
+    let rank = rng.gen_between(1, 6);
+    (0..rank).map(|_| rng.gen_between(1, 34)).collect()
+}
+
+#[test]
+fn permute_random_shapes_and_orders_bit_identical() {
+    let mut rng = Rng::new(0xC1060_AA);
+    for case in 0..200 {
+        let dims = random_shape(&mut rng);
+        let order = Order::new(&rng.permutation(dims.len())).unwrap();
+        let x = NdArray::random(Shape::new(&dims), &mut rng);
+        let want = ops::permute::permute(&x, &order).unwrap();
+        let got = hostexec::permute_fast(&x, &order).unwrap();
+        assert_eq!(got, want, "case {case}: dims {dims:?} order {order}");
+    }
+}
+
+#[test]
+fn permute_thread_sweep_bit_identical() {
+    let mut rng = Rng::new(0x7155);
+    // Big enough to clear the parallel threshold with partial tiles.
+    let x = NdArray::random(Shape::new(&[7, 65, 129]), &mut rng);
+    for _ in 0..20 {
+        let axes = rng.permutation(3);
+        let want = ops::permute::transpose(&x, &axes).unwrap();
+        for threads in [1, 2, 5, 16] {
+            let got = hostexec::transpose_with_threads(&x, &axes, threads).unwrap();
+            assert_eq!(got, want, "axes {axes:?} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn reorder_collapse_random_bit_identical() {
+    let mut rng = Rng::new(0xC011A);
+    for _ in 0..100 {
+        let dims = random_shape(&mut rng);
+        let order = Order::new(&rng.permutation(dims.len())).unwrap();
+        let out_rank = rng.gen_between(1, dims.len() + 1);
+        let x = NdArray::random(Shape::new(&dims), &mut rng);
+        let op = Op::ReorderCollapse { order, out_rank };
+        let want = op.reference(&[&x]).unwrap();
+        let got = op.execute_fast(&[&x]).unwrap();
+        assert_eq!(got, want, "dims {dims:?} out_rank {out_rank}");
+    }
+}
+
+#[test]
+fn subarray_random_windows_bit_identical() {
+    let mut rng = Rng::new(0x5AB5);
+    for _ in 0..100 {
+        let dims = random_shape(&mut rng);
+        let base: Vec<usize> = dims.iter().map(|&d| rng.gen_range(d)).collect();
+        let shape: Vec<usize> = dims
+            .iter()
+            .zip(&base)
+            .map(|(&d, &b)| rng.gen_range(d - b) + 1)
+            .collect();
+        let x = NdArray::random(Shape::new(&dims), &mut rng);
+        let op = Op::Subarray { base: base.clone(), shape: shape.clone() };
+        let want = op.reference(&[&x]).unwrap();
+        let got = op.execute_fast(&[&x]).unwrap();
+        assert_eq!(got, want, "dims {dims:?} base {base:?} shape {shape:?}");
+    }
+}
+
+#[test]
+fn interlace_deinterlace_random_bit_identical() {
+    let mut rng = Rng::new(0x117E);
+    for _ in 0..60 {
+        let n = rng.gen_between(2, 10);
+        let len = rng.gen_between(1, 5000);
+        let lanes: Vec<NdArray<f32>> = (0..n)
+            .map(|_| NdArray::random(Shape::new(&[len]), &mut rng))
+            .collect();
+        let refs: Vec<&NdArray<f32>> = lanes.iter().collect();
+        let op = Op::Interlace { n };
+        let want = op.reference(&refs).unwrap();
+        let got = op.execute_fast(&refs).unwrap();
+        assert_eq!(got, want, "interlace n={n} len={len}");
+
+        let op = Op::Deinterlace { n };
+        let want_planes = op.reference(&[&want[0]]).unwrap();
+        let got_planes = op.execute_fast(&[&want[0]]).unwrap();
+        assert_eq!(got_planes, want_planes, "deinterlace n={n} len={len}");
+        assert_eq!(got_planes, lanes, "roundtrip n={n} len={len}");
+    }
+}
+
+#[test]
+fn stencil_random_specs_bit_identical() {
+    let mut rng = Rng::new(0x57E4);
+    for _ in 0..60 {
+        let h = rng.gen_between(1, 70);
+        let w = rng.gen_between(1, 70);
+        let x = NdArray::random(Shape::new(&[h, w]), &mut rng);
+        let spec = match rng.gen_range(3) {
+            0 => StencilSpec::FdLaplacian {
+                order: rng.gen_between(1, 5),
+                scale: rng.gen_f64(),
+            },
+            1 => StencilSpec::Conv {
+                radius: 1,
+                mask: (0..9).map(|_| rng.gen_f64() - 0.5).collect(),
+            },
+            _ => {
+                let radius = rng.gen_between(1, 4);
+                let r = radius as i64;
+                let taps: Vec<(i64, i64, f64)> = (0..rng.gen_between(1, 6))
+                    .map(|_| {
+                        (
+                            rng.gen_range(2 * radius + 1) as i64 - r,
+                            rng.gen_range(2 * radius + 1) as i64 - r,
+                            rng.gen_f64() * 2.0 - 1.0,
+                        )
+                    })
+                    .collect();
+                StencilSpec::Taps { radius, taps }
+            }
+        };
+        let op = Op::Stencil { spec: spec.clone() };
+        let want = op.reference(&[&x]).unwrap();
+        let got = op.execute_fast(&[&x]).unwrap();
+        assert_eq!(got, want, "{h}x{w} {spec:?}");
+    }
+}
+
+#[test]
+fn copy_family_bit_identical() {
+    let mut rng = Rng::new(0xC0FE);
+    let x = NdArray::random(Shape::new(&[100_000]), &mut rng);
+    for op in [
+        Op::Copy,
+        Op::ReadRange { base: 17, count: 65_536 },
+        Op::ReadStrided { base: 3, stride: 5, count: 19_999 },
+    ] {
+        let want = op.reference(&[&x]).unwrap();
+        let got = op.execute_fast(&[&x]).unwrap();
+        assert_eq!(got, want, "{op:?}");
+    }
+}
+
+#[test]
+fn empty_and_single_element_edge_cases() {
+    // Empty tensor: a zero extent anywhere.
+    let empty = NdArray::<f32>::zeros(Shape::new(&[0, 5, 3]));
+    for order in [[0, 1, 2], [2, 1, 0], [1, 0, 2]] {
+        let op = Op::Reorder { order: Order::new(&order).unwrap() };
+        let want = op.reference(&[&empty]).unwrap();
+        let got = op.execute_fast(&[&empty]).unwrap();
+        assert_eq!(got, want, "empty, order {order:?}");
+        assert_eq!(got[0].len(), 0);
+    }
+
+    // Single element, every rank up to 5 (all dims 1).
+    for rank in 0..=5usize {
+        let dims = vec![1usize; rank];
+        let x = NdArray::from_vec(Shape::new(&dims), vec![2.75f32]);
+        let order = Order::new(&(0..rank).rev().collect::<Vec<_>>()).unwrap();
+        let op = Op::Reorder { order };
+        let want = op.reference(&[&x]).unwrap();
+        let got = op.execute_fast(&[&x]).unwrap();
+        assert_eq!(got, want, "rank {rank}");
+        assert_eq!(got[0].data(), &[2.75]);
+    }
+
+    // Empty stencil row/col and empty interlace lanes.
+    let thin = NdArray::<f32>::zeros(Shape::new(&[0, 7]));
+    let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+    let op = Op::Stencil { spec };
+    assert_eq!(
+        op.execute_fast(&[&thin]).unwrap(),
+        op.reference(&[&thin]).unwrap()
+    );
+    let e = NdArray::<f32>::zeros(Shape::new(&[0]));
+    let op = Op::Interlace { n: 2 };
+    assert_eq!(
+        op.execute_fast(&[&e, &e]).unwrap(),
+        op.reference(&[&e, &e]).unwrap()
+    );
+}
+
+#[test]
+fn validation_errors_match_reference_behaviour() {
+    let x = NdArray::iota(Shape::new(&[4, 4]));
+    // Rank-mismatched order.
+    let op = Op::Reorder { order: Order::new(&[0, 1, 2]).unwrap() };
+    assert!(op.reference(&[&x]).is_err());
+    assert!(op.execute_fast(&[&x]).is_err());
+    // Out-of-range collapse.
+    let op = Op::ReorderCollapse { order: Order::identity(2), out_rank: 3 };
+    assert!(op.reference(&[&x]).is_err());
+    assert!(op.execute_fast(&[&x]).is_err());
+    // Out-of-bounds subarray.
+    let op = Op::Subarray { base: vec![2, 2], shape: vec![3, 3] };
+    assert!(op.reference(&[&x]).is_err());
+    assert!(op.execute_fast(&[&x]).is_err());
+    // Arity.
+    let op = Op::Interlace { n: 3 };
+    assert!(op.reference(&[&x]).is_err());
+    assert!(op.execute_fast(&[&x]).is_err());
+}
+
+#[test]
+fn dispatch_selects_backends() {
+    use gdrk::ops::ExecBackend;
+    let mut rng = Rng::new(0xD15);
+    let x = NdArray::random(Shape::new(&[16, 16, 16]), &mut rng);
+    let op = Op::Reorder { order: Order::new(&[2, 0, 1]).unwrap() };
+    let naive = op.dispatch(&[&x], ExecBackend::Naive).unwrap();
+    let host = op.dispatch(&[&x], ExecBackend::Host).unwrap();
+    assert_eq!(naive, host);
+    assert_eq!(naive, op.reference(&[&x]).unwrap());
+}

@@ -1,0 +1,146 @@
+//! Coordinator + CFD driver on the host backend — the artifact-free
+//! serving path (what a bare checkout runs). No PJRT, no manifest.
+
+use gdrk::cfd::{CpuSolver, GpuModelDriver, Params};
+use gdrk::coordinator::{Backend, Metrics, Service, ServiceConfig};
+use gdrk::ops::{Op, StencilSpec};
+use gdrk::runtime::Tensor;
+use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::util::rng::Rng;
+
+fn host_service(backend: Backend) -> Service {
+    Service::start(ServiceConfig {
+        // A directory with no manifest: Auto must fall back to hostexec.
+        artifacts_dir: std::path::PathBuf::from("definitely-not-artifacts"),
+        max_batch: 4,
+        preload: vec!["permute3d_o102".into()],
+        backend,
+    })
+    .expect("service start")
+}
+
+fn random_f32(shape: &[usize], seed: u64) -> NdArray<f32> {
+    let mut rng = Rng::new(seed);
+    NdArray::random(Shape::new(shape), &mut rng)
+}
+
+#[test]
+fn hostexec_service_serves_rearrangement_ops() {
+    for backend in [Backend::HostExec, Backend::Naive, Backend::Auto] {
+        let service = host_service(backend);
+        let x = random_f32(&[32, 48, 64], 0x77);
+        let out = service
+            .call("permute3d_o201", vec![Tensor::F32(x.clone())])
+            .expect("call ok");
+        let want = Op::Reorder {
+            order: Order::new(&[2, 0, 1]).unwrap(),
+        }
+        .reference(&[&x])
+        .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &want[0], "{backend:?}");
+        service.shutdown();
+    }
+}
+
+#[test]
+fn hostexec_service_interlace_and_stencil() {
+    let service = host_service(Backend::HostExec);
+
+    let lanes: Vec<NdArray<f32>> = (0..4).map(|j| random_f32(&[1 << 12], j as u64)).collect();
+    let inputs: Vec<Tensor> = lanes.iter().cloned().map(Tensor::F32).collect();
+    let out = service.call("interlace_n4", inputs).expect("interlace");
+    let refs: Vec<&NdArray<f32>> = lanes.iter().collect();
+    let want = Op::Interlace { n: 4 }.reference(&refs).unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), &want[0]);
+
+    let img = random_f32(&[128, 128], 0x99);
+    let out = service
+        .call("fd2_128", vec![Tensor::F32(img.clone())])
+        .expect("stencil");
+    let want = Op::Stencil {
+        spec: StencilSpec::FdLaplacian { order: 2, scale: 1.0 },
+    }
+    .reference(&[&img])
+    .unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), &want[0]);
+
+    let back = service
+        .call("deinterlace_n4", vec![out.into_iter().next().unwrap()])
+        .err();
+    // fd output is 128x128 (rank 2): deinterlace must reject it cleanly.
+    assert!(back.is_some());
+    service.shutdown();
+}
+
+#[test]
+fn unknown_artifact_fails_cleanly_and_service_survives() {
+    let service = host_service(Backend::HostExec);
+    let err = service
+        .call("cavity_step_n128", vec![])
+        .expect_err("must fail");
+    assert!(err.contains("unknown artifact"), "got: {err}");
+    let x = random_f32(&[1 << 12], 1);
+    assert!(service.call("copy_4k", vec![Tensor::F32(x)]).is_ok());
+
+    let m = service.metrics();
+    assert_eq!(Metrics::get(&m.failed), 1);
+    assert_eq!(Metrics::get(&m.completed), 1);
+    service.shutdown();
+}
+
+#[test]
+fn concurrent_host_submitters_all_complete() {
+    let service = std::sync::Arc::new(host_service(Backend::HostExec));
+    let threads = 4;
+    let per_thread = 8;
+    let mut handles = Vec::new();
+    for t in 0..threads {
+        let svc = service.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..per_thread {
+                let x = random_f32(&[16, 24, 32], (t * 100 + i) as u64);
+                let artifact = if i % 2 == 0 {
+                    "permute3d_o102"
+                } else {
+                    "permute3d_o210"
+                };
+                let out = svc.call(artifact, vec![Tensor::F32(x.clone())]).unwrap();
+                let order = if i % 2 == 0 {
+                    Order::new(&[1, 0, 2]).unwrap()
+                } else {
+                    Order::new(&[2, 1, 0]).unwrap()
+                };
+                let want = Op::Reorder { order }.reference(&[&x]).unwrap();
+                assert_eq!(out[0].as_f32().unwrap(), &want[0]);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = service.metrics();
+    assert_eq!(Metrics::get(&m.completed), (threads * per_thread) as u64);
+    assert_eq!(Metrics::get(&m.failed), 0);
+}
+
+#[test]
+fn cavity_host_fallback_matches_cpu_solver() {
+    let driver = GpuModelDriver::new_auto(None, 40);
+    assert!(driver.is_host());
+    assert!(!driver.has_chunk());
+    let run = driver.run(25, 5).expect("host cavity run");
+    assert_eq!(run.steps, 25);
+    assert_eq!(run.residual_log.len(), 5);
+    assert!(run.final_residual.is_finite());
+
+    // The host path is the row-parallel CPU solver, which is bitwise
+    // equal to the serial solver — so the fields must match exactly.
+    let mut cpu = CpuSolver::new(Params::default_for(40, 1000.0, 20));
+    cpu.run(25);
+    assert_eq!(run.final_omega, cpu.omega);
+    assert_eq!(run.final_psi, cpu.psi);
+
+    // Chunked on the host path: steps round to the 10-step grain.
+    let chunked = driver.run_chunked(25).expect("chunked");
+    assert_eq!(chunked.steps, 20);
+}
