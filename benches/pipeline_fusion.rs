@@ -1,0 +1,184 @@
+//! Fused vs unfused execution of the repo's op-chain workloads — the
+//! measurement behind the pipeline subsystem. Runs on a bare checkout
+//! (no artifacts, no PJRT) and writes `BENCH_pipeline.json`.
+//!
+//! Workloads:
+//! * **cavity chain** — the CFD cavity step at n = 512, whose K = 20
+//!   Jacobi sweeps run either as K separate row-parallel passes
+//!   (`CpuSolver::step_parallel`, one spawn + one full psi round trip
+//!   per sweep) or as one fused rolling-window chain
+//!   (`CpuSolver::step_fused`). Acceptance target: fused >= 1.5x
+//!   steps/s, bit-identical residual logs.
+//! * **stencil chain** — three stacked 3x3 passes on a 2048^2 field,
+//!   sequential `Op::execute_fast` vs `hostexec::stencil::apply_chain`.
+//!
+//! Outputs are gated on bit-identity before anything is timed.
+
+use gdrk::cfd::{CpuSolver, Params};
+use gdrk::hostexec::pool;
+use gdrk::hostexec::stencil::{apply_chain, unfused_chain_traffic_bytes};
+use gdrk::ops::{Op, StencilSpec};
+use gdrk::report::Table;
+use gdrk::tensor::{NdArray, Shape};
+use gdrk::util::rng::Rng;
+use gdrk::util::timing::bench;
+use std::fmt::Write as _;
+
+struct Row {
+    workload: String,
+    metric: String,
+    unfused: f64,
+    fused: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        if self.unfused > 0.0 {
+            self.fused / self.unfused
+        } else {
+            0.0
+        }
+    }
+}
+
+fn json(threads: usize, rows: &[Row]) -> String {
+    let mut out = String::from("{\n");
+    let _ = writeln!(out, "  \"bench\": \"pipeline_fusion\",");
+    let _ = writeln!(out, "  \"threads\": {threads},");
+    let _ = writeln!(out, "  \"results\": [");
+    for (i, r) in rows.iter().enumerate() {
+        let comma = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(
+            out,
+            "    {{\"workload\": \"{}\", \"metric\": \"{}\", \"unfused\": {:.3}, \
+             \"fused\": {:.3}, \"speedup\": {:.3}}}{comma}",
+            r.workload,
+            r.metric,
+            r.unfused,
+            r.fused,
+            r.speedup()
+        );
+    }
+    let _ = writeln!(out, "  ]");
+    out.push('}');
+    out.push('\n');
+    out
+}
+
+fn main() {
+    let threads = pool::num_threads();
+    println!("pipeline fusion bench: {threads} worker thread(s)\n");
+
+    // ---- correctness gates: fused must be bit-identical or the
+    // numbers are meaningless. ----
+
+    // Cavity at the acceptance grid size: identical residual logs and
+    // final fields over a few steps.
+    let params = Params::default_for(512, 1000.0, 20);
+    {
+        let mut unfused = CpuSolver::new(params);
+        let mut fused = CpuSolver::new(params);
+        for step in 0..3 {
+            let ru = unfused.step_parallel(threads);
+            let rf = fused.step_fused(threads);
+            assert_eq!(ru, rf, "residual log diverged at step {step}");
+        }
+        assert_eq!(unfused.psi, fused.psi, "psi diverged");
+        assert_eq!(unfused.omega, fused.omega, "omega diverged");
+    }
+
+    // Stencil chain on the 2048^2 field.
+    let mut rng = Rng::new(0xF0F0);
+    let img = NdArray::random(Shape::new(&[2048, 2048]), &mut rng);
+    let smooth = StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] };
+    let chain = vec![smooth.clone(), smooth.clone(), smooth];
+    {
+        let op_chain: Vec<Op> = chain
+            .iter()
+            .map(|s| Op::Stencil { spec: s.clone() })
+            .collect();
+        let mut want = img.clone();
+        for op in &op_chain {
+            want = op.execute_fast(&[&want]).unwrap().pop().unwrap();
+        }
+        let (got, stats) = apply_chain(&img, &chain, threads).unwrap();
+        assert_eq!(got, want, "fused stencil chain diverged");
+        println!(
+            "stencil chain traffic: fused {} B vs unfused {} B ({} hot rows/worker)",
+            stats.fused_traffic_bytes(),
+            unfused_chain_traffic_bytes(2048, 2048, chain.len()),
+            stats.hot_rows_per_worker
+        );
+    }
+
+    // ---- timing ----
+    let mut rows: Vec<Row> = Vec::new();
+    let bytes_per_step = params.bytes_moved_per_step() as f64;
+
+    let mut solver = CpuSolver::new(params);
+    let t_unfused = bench(1, 5, || {
+        solver.step_parallel(threads);
+    });
+    let mut solver = CpuSolver::new(params);
+    let t_fused = bench(1, 5, || {
+        solver.step_fused(threads);
+    });
+    rows.push(Row {
+        workload: "cavity_n512_k20".into(),
+        metric: "steps_per_s".into(),
+        unfused: 1.0 / t_unfused.p50,
+        fused: 1.0 / t_fused.p50,
+    });
+    rows.push(Row {
+        workload: "cavity_n512_k20".into(),
+        metric: "gbs".into(),
+        unfused: bytes_per_step / t_unfused.p50 / 1e9,
+        fused: bytes_per_step / t_fused.p50 / 1e9,
+    });
+
+    let chain_bytes = unfused_chain_traffic_bytes(2048, 2048, chain.len()) as f64;
+    let op_chain: Vec<Op> = chain
+        .iter()
+        .map(|s| Op::Stencil { spec: s.clone() })
+        .collect();
+    let t_seq = bench(1, 5, || {
+        let mut cur = img.clone();
+        for op in &op_chain {
+            cur = op.execute_fast(&[&cur]).unwrap().pop().unwrap();
+        }
+    });
+    let t_chain = bench(1, 5, || {
+        apply_chain(&img, &chain, threads).unwrap();
+    });
+    rows.push(Row {
+        workload: "stencil_chain_2048_d3".into(),
+        metric: "gbs".into(),
+        unfused: chain_bytes / t_seq.p50 / 1e9,
+        fused: chain_bytes / t_chain.p50 / 1e9,
+    });
+
+    let mut t = Table::new(
+        "fused vs unfused op chains",
+        &["workload", "metric", "unfused", "fused", "speedup"],
+    );
+    for r in &rows {
+        t.row(&[
+            r.workload.clone(),
+            r.metric.clone(),
+            format!("{:.2}", r.unfused),
+            format!("{:.2}", r.fused),
+            format!("{:.2}x", r.speedup()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    std::fs::write("BENCH_pipeline.json", json(threads, &rows))
+        .expect("write BENCH_pipeline.json");
+    println!("wrote BENCH_pipeline.json ({} records)", rows.len());
+
+    let cavity = &rows[0];
+    println!(
+        "cavity fused chain: {:.2}x steps/s (target >= 1.5x)",
+        cavity.speedup()
+    );
+}

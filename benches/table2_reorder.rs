@@ -16,6 +16,8 @@ struct Cfg {
     paper_gbs: f64,
 }
 
+// One row per Table-2 configuration; the column alignment is the table.
+#[rustfmt::skip]
 const CONFIGS: &[Cfg] = &[
     Cfg { label: "[1 0 2]     256^3", order: &[1, 0, 2], paper_shape: &[256, 256, 256], paper_gbs: 76.00 },
     Cfg { label: "[1 0 2 3]   256^3x1", order: &[1, 0, 2, 3], paper_shape: &[256, 256, 256, 1], paper_gbs: 75.41 },
@@ -46,7 +48,10 @@ fn main() {
     println!("{}", t.render());
 
     // Shape criteria: the rank ordering and the rank-5 drop.
-    println!("paper:    rank ordering r3 ≈ r4 > r4-transposed > r5; r5/r3 = {:.2}", 43.40 / 76.00);
+    println!(
+        "paper:    rank ordering r3 ≈ r4 > r4-transposed > r5; r5/r3 = {:.2}",
+        43.40 / 76.00
+    );
     println!("measured: r5/r3 = {:.2}", sims[3] / sims[0]);
     assert!(sims[0] >= sims[1] * 0.95, "r3 vs r4 shape");
     assert!(sims[3] < sims[2], "rank-5 must be slowest");

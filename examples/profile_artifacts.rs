@@ -1,6 +1,9 @@
 use gdrk::runtime::{Runtime, Tensor};
 use gdrk::tensor::{NdArray, Shape};
 use gdrk::util::rng::Rng;
+
+// Quick profiling scripts keep their compact hand layout.
+#[rustfmt::skip]
 fn main() {
     let rt = Runtime::new("artifacts").unwrap();
     let mut rng = Rng::new(1);

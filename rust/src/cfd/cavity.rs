@@ -15,7 +15,11 @@
 //! runtime) steps the identical omega-psi discretization with the
 //! row-parallel CPU solver, threads sized like the hostexec worker pool
 //! — same `CavityRun` surface, so callers and benches run unchanged on
-//! a bare checkout.
+//! a bare checkout. Its K Jacobi sweeps execute as one fused
+//! rolling-window chain per step
+//! ([`crate::pipeline::fuse::jacobi_chain`], bit-identical to the
+//! unfused sweeps — the host analogue of the `cavity_runK` chunk
+//! artifact's on-device fusion), measured in `benches/pipeline_fusion.rs`.
 
 use crate::cfd::cpu::{CpuSolver, Params};
 use crate::runtime::{Runtime, RuntimeError, Tensor};
@@ -127,7 +131,8 @@ impl<'rt> GpuModelDriver<'rt> {
         Ok((omega, psi, r))
     }
 
-    /// Host path: step the CPU solver, logging every `log_every`.
+    /// Host path: step the CPU solver (fused Jacobi chain per step),
+    /// logging every `log_every`.
     fn run_host(
         &self,
         params: Params,
@@ -140,7 +145,7 @@ impl<'rt> GpuModelDriver<'rt> {
         let mut final_residual = f32::NAN;
         let t0 = std::time::Instant::now();
         for step in 1..=steps {
-            let r = solver.step_parallel(threads);
+            let r = solver.step_fused(threads);
             final_residual = r;
             if step % log_every.max(1) == 0 || step == steps {
                 residual_log.push((step, r));

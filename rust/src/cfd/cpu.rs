@@ -80,15 +80,24 @@ impl CpuSolver {
 
     /// One time step; returns the Linf residual of omega (as in python).
     pub fn step(&mut self) -> f32 {
-        self.step_impl(1)
+        self.step_impl(1, false)
     }
 
     /// One time step with row-parallel Jacobi/transport over `threads`.
     pub fn step_parallel(&mut self, threads: usize) -> f32 {
-        self.step_impl(threads.max(1))
+        self.step_impl(threads.max(1), false)
     }
 
-    fn step_impl(&mut self, threads: usize) -> f32 {
+    /// One time step executing the K Jacobi sweeps as a single fused
+    /// rolling-window chain ([`crate::pipeline::fuse::jacobi_chain`]):
+    /// one worker spawn and one full psi read/write for the whole
+    /// Poisson solve instead of K. Bit-identical to
+    /// [`CpuSolver::step_parallel`].
+    pub fn step_fused(&mut self, threads: usize) -> f32 {
+        self.step_impl(threads.max(1), true)
+    }
+
+    fn step_impl(&mut self, threads: usize, fused_poisson: bool) -> f32 {
         let p = self.params;
         let n = p.n;
         let h = p.h();
@@ -99,27 +108,39 @@ impl CpuSolver {
         let dt = p.dt as f32;
         let lid = p.lid_u as f32;
 
-        // 1. Poisson solve: K Jacobi sweeps, psi = 0 on walls.
+        // 1. Poisson solve: K Jacobi sweeps, psi = 0 on walls. Fused
+        // path: all K sweeps in one rolling-window pass (bit-identical).
         let mut psi = self.psi.data().to_vec();
         let omega = self.omega.data().to_vec();
-        let mut psi_next = vec![0.0f32; n * n];
-        for _ in 0..p.jacobi_iters {
-            par_rows(threads, n, &mut psi_next, |i, row| {
-                for j in 0..n {
-                    let s = nb(&psi, n, i as i64, j as i64 + 1)
-                        + nb(&psi, n, i as i64, j as i64 - 1)
-                        + nb(&psi, n, i as i64 + 1, j as i64)
-                        + nb(&psi, n, i as i64 - 1, j as i64);
-                    let v = 0.25 * (s + h2 * at(&omega, n, i, j));
-                    // interior mask
-                    row[j] = if i == 0 || j == 0 || i == n - 1 || j == n - 1 {
-                        0.0
-                    } else {
-                        v
-                    };
-                }
-            });
-            std::mem::swap(&mut psi, &mut psi_next);
+        if fused_poisson {
+            psi = crate::pipeline::fuse::jacobi_chain(
+                &psi,
+                &omega,
+                n,
+                h2,
+                p.jacobi_iters,
+                threads,
+            );
+        } else {
+            let mut psi_next = vec![0.0f32; n * n];
+            for _ in 0..p.jacobi_iters {
+                par_rows(threads, n, &mut psi_next, |i, row| {
+                    for j in 0..n {
+                        let s = nb(&psi, n, i as i64, j as i64 + 1)
+                            + nb(&psi, n, i as i64, j as i64 - 1)
+                            + nb(&psi, n, i as i64 + 1, j as i64)
+                            + nb(&psi, n, i as i64 - 1, j as i64);
+                        let v = 0.25 * (s + h2 * at(&omega, n, i, j));
+                        // interior mask
+                        row[j] = if i == 0 || j == 0 || i == n - 1 || j == n - 1 {
+                            0.0
+                        } else {
+                            v
+                        };
+                    }
+                });
+                std::mem::swap(&mut psi, &mut psi_next);
+            }
         }
 
         // 2. Velocities (masked central differences + lid BC).
@@ -129,10 +150,9 @@ impl CpuSolver {
             for j in 0..n {
                 let interior = i > 0 && j > 0 && i < n - 1 && j < n - 1;
                 if interior {
-                    u[i * n + j] = inv2h
-                        * (nb(&psi, n, i as i64 + 1, j as i64) - nb(&psi, n, i as i64 - 1, j as i64));
-                    v[i * n + j] = -inv2h
-                        * (nb(&psi, n, i as i64, j as i64 + 1) - nb(&psi, n, i as i64, j as i64 - 1));
+                    let (ii, jj) = (i as i64, j as i64);
+                    u[i * n + j] = inv2h * (nb(&psi, n, ii + 1, jj) - nb(&psi, n, ii - 1, jj));
+                    v[i * n + j] = -inv2h * (nb(&psi, n, ii, jj + 1) - nb(&psi, n, ii, jj - 1));
                 }
             }
         }
@@ -199,6 +219,15 @@ impl CpuSolver {
         let mut res = 0.0;
         for _ in 0..steps {
             res = self.step_parallel(threads);
+        }
+        res
+    }
+
+    /// Run `steps` with the fused Jacobi chain per step.
+    pub fn run_fused(&mut self, steps: usize, threads: usize) -> f32 {
+        let mut res = 0.0;
+        for _ in 0..steps {
+            res = self.step_fused(threads);
         }
         res
     }
@@ -282,6 +311,24 @@ mod tests {
         b.run_parallel(25, 4);
         assert_eq!(a.omega.data(), b.omega.data());
         assert_eq!(a.psi.data(), b.psi.data());
+    }
+
+    #[test]
+    fn fused_matches_serial_bitwise() {
+        // The fused rolling-window Poisson chain must be bit-identical
+        // to the sweep loop, residuals included.
+        for (n, iters) in [(40usize, 10usize), (48, 20), (33, 1), (24, 0)] {
+            let p = Params::default_for(n, 800.0, iters);
+            let mut a = CpuSolver::new(p);
+            let mut b = CpuSolver::new(p);
+            for step in 0..20 {
+                let ra = a.step();
+                let rb = b.step_fused(4);
+                assert_eq!(ra, rb, "n={n} iters={iters} step={step}");
+            }
+            assert_eq!(a.omega.data(), b.omega.data());
+            assert_eq!(a.psi.data(), b.psi.data());
+        }
     }
 
     #[test]

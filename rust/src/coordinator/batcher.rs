@@ -1,6 +1,9 @@
 //! Shape-keyed batcher: groups queued requests by artifact so the device
 //! worker executes one compiled executable repeatedly (warm instruction
-//! and data caches, single cache lookup) before switching.
+//! and data caches, single cache lookup) before switching. Composite
+//! `pipe:<a>+<b>+...` requests key on the full composite string — the
+//! pipeline's signature — so identical chains batch together and reuse
+//! the same rewritten plan and cached `planner::Plan`s back to back.
 //!
 //! Policy: FIFO *across* artifact groups by the arrival time of each
 //! group's oldest request (no starvation), FIFO *within* a group, at most

@@ -211,7 +211,12 @@ impl Executor {
             }
             Executor::Host(_) => {
                 for name in names {
-                    if crate::hostexec::op_for_artifact(name).is_none() {
+                    let known = if name.starts_with("pipe:") {
+                        crate::hostexec::pipeline_for_artifact(name).is_some()
+                    } else {
+                        crate::hostexec::op_for_artifact(name).is_some()
+                    };
+                    if !known {
                         eprintln!("gdrk: '{name}' has no host-backend op; preload skipped");
                     }
                 }
@@ -222,7 +227,16 @@ impl Executor {
 
     fn execute(&self, artifact: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
         match self {
-            Executor::Pjrt(rt) => rt.execute(artifact, inputs).map_err(|e| e.to_string()),
+            Executor::Pjrt(rt) => {
+                if artifact.starts_with("pipe:") {
+                    // Pipelines lower to host execution on every backend
+                    // until device-side fusion lands (ROADMAP follow-up),
+                    // so the same composite request works regardless of
+                    // which executor Auto resolved to.
+                    return host_execute(ExecBackend::Host, artifact, inputs);
+                }
+                rt.execute(artifact, inputs).map_err(|e| e.to_string())
+            }
             Executor::Host(mode) => host_execute(*mode, artifact, inputs),
             Executor::Failed(msg) => Err(msg.clone()),
         }
@@ -230,24 +244,43 @@ impl Executor {
 }
 
 /// Resolve an artifact name to op IR and run it on the host backend.
+/// Composite `pipe:<a>+<b>+...` names resolve to a whole [`Pipeline`]
+/// (rewritten + fused on the `HostExec` backend) — one request, one
+/// response, no full-size intermediates between the chained stages.
+///
+/// [`Pipeline`]: crate::pipeline::Pipeline
 fn host_execute(
     mode: ExecBackend,
     artifact: &str,
     inputs: &[Tensor],
 ) -> Result<Vec<Tensor>, String> {
+    if artifact.starts_with("pipe:") {
+        let pipe = crate::hostexec::pipeline_for_artifact(artifact).ok_or_else(|| {
+            format!("unknown pipeline '{artifact}' (expected pipe:<artifact>+<artifact>+...)")
+        })?;
+        let arrays: Vec<&NdArray<f32>> = collect_f32(inputs)?;
+        return pipe
+            .dispatch(&arrays, mode)
+            .map(|outs| outs.into_iter().map(Tensor::F32).collect())
+            .map_err(|e| e.to_string());
+    }
     let op = crate::hostexec::op_for_artifact(artifact).ok_or_else(|| {
         format!("unknown artifact '{artifact}' (no host-backend op for this name)")
     })?;
-    let arrays: Vec<&NdArray<f32>> = inputs
+    let arrays: Vec<&NdArray<f32>> = collect_f32(inputs)?;
+    op.dispatch(&arrays, mode)
+        .map(|outs| outs.into_iter().map(Tensor::F32).collect())
+        .map_err(|e| e.to_string())
+}
+
+fn collect_f32(inputs: &[Tensor]) -> Result<Vec<&NdArray<f32>>, String> {
+    inputs
         .iter()
         .map(|t| {
             t.as_f32()
                 .ok_or_else(|| "host backend supports f32 inputs only".to_string())
         })
-        .collect::<Result<_, _>>()?;
-    op.dispatch(&arrays, mode)
-        .map(|outs| outs.into_iter().map(Tensor::F32).collect())
-        .map_err(|e| e.to_string())
+        .collect()
 }
 
 fn worker_loop(

@@ -8,6 +8,41 @@ use super::pool;
 use crate::ops::OpError;
 use crate::tensor::{NdArray, Shape, StridedWalk};
 
+/// Copy one contiguous run, dispatching lengths 2..16 to const-width
+/// array moves. For such short runs the `memcpy` call behind
+/// `copy_from_slice` costs more than the move itself; a fixed-size
+/// `[f32; N]` assignment compiles to plain u64/u128/vector register
+/// moves instead (the ROADMAP's SIMD-width-aware run-copy follow-up).
+#[inline(always)]
+pub fn copy_run(dst: &mut [f32], src: &[f32]) {
+    #[inline(always)]
+    fn fixed<const N: usize>(dst: &mut [f32], src: &[f32]) {
+        let d: &mut [f32; N] = (&mut dst[..N]).try_into().expect("run length checked");
+        let s: &[f32; N] = (&src[..N]).try_into().expect("run length checked");
+        *d = *s;
+    }
+    debug_assert_eq!(dst.len(), src.len());
+    match dst.len() {
+        0 => {}
+        1 => dst[0] = src[0],
+        2 => fixed::<2>(dst, src),
+        3 => fixed::<3>(dst, src),
+        4 => fixed::<4>(dst, src),
+        5 => fixed::<5>(dst, src),
+        6 => fixed::<6>(dst, src),
+        7 => fixed::<7>(dst, src),
+        8 => fixed::<8>(dst, src),
+        9 => fixed::<9>(dst, src),
+        10 => fixed::<10>(dst, src),
+        11 => fixed::<11>(dst, src),
+        12 => fixed::<12>(dst, src),
+        13 => fixed::<13>(dst, src),
+        14 => fixed::<14>(dst, src),
+        15 => fixed::<15>(dst, src),
+        _ => dst.copy_from_slice(src),
+    }
+}
+
 /// Parallel memcpy: split `dst` into per-worker chunks.
 pub fn par_copy(src: &[f32], dst: &mut [f32], threads: usize) {
     assert_eq!(src.len(), dst.len());
@@ -144,7 +179,7 @@ pub fn subarray(
             .chunks_mut(run)
             .zip(StridedWalk::with_base(outer_dims, outer_walk, base_off))
         {
-            chunk.copy_from_slice(&xd[ioff..ioff + run]);
+            copy_run(chunk, &xd[ioff..ioff + run]);
         }
         return Ok(NdArray::from_vec(out_shape, out));
     }
@@ -158,7 +193,7 @@ pub fn subarray(
             let skip = wi * rows_per;
             scope.spawn(move || {
                 for (chunk, ioff) in band.chunks_mut(run).zip(walkr.by_ref().skip(skip)) {
-                    chunk.copy_from_slice(&xd[ioff..ioff + run]);
+                    copy_run(chunk, &xd[ioff..ioff + run]);
                 }
             });
         }
@@ -171,6 +206,17 @@ mod tests {
     use super::*;
     use crate::ops::{copy as golden_copy, reorder as golden_reorder};
     use crate::util::rng::Rng;
+
+    #[test]
+    fn copy_run_every_small_width() {
+        let mut rng = Rng::new(0x5C0);
+        let src = rng.f32_vec(64);
+        for len in 0..=64usize {
+            let mut dst = vec![0.0f32; len];
+            copy_run(&mut dst, &src[..len]);
+            assert_eq!(dst, &src[..len], "len {len}");
+        }
+    }
 
     #[test]
     fn par_copy_matches() {

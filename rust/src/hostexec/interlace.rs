@@ -151,6 +151,6 @@ mod tests {
         assert_eq!(m.len(), 0);
         let s = deinterlace(&m, 2, 4).unwrap();
         assert_eq!(s.len(), 2);
-        assert!(s.iter().all(|p| p.len() == 0));
+        assert!(s.iter().all(|p| p.is_empty()));
     }
 }

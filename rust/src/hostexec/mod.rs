@@ -44,7 +44,7 @@ pub mod registry;
 pub mod stencil;
 
 pub use permute::{permute as permute_fast, transpose as transpose_fast, transpose_with_threads};
-pub use registry::op_for_artifact;
+pub use registry::{op_for_artifact, pipeline_for_artifact};
 
 use crate::ops::{reorder, Op, OpError};
 use crate::tensor::{NdArray, Shape};

@@ -17,7 +17,7 @@
 
 use super::pool::{self, OutPtr};
 use crate::ops::OpError;
-use crate::planner::{plan_reorder, HostGeometry, Plan};
+use crate::planner::{HostGeometry, Plan};
 use crate::tensor::{NdArray, Order, Shape};
 
 /// Reorder into paper storage order — bit-identical to [`crate::ops::permute::permute`].
@@ -38,7 +38,10 @@ pub fn permute_with_threads(
             x.rank()
         )));
     }
-    let plan = plan_reorder(x.shape(), order, false)
+    // Resolved plans are memoized: repeated coordinator traffic with the
+    // same (shape, order) skips re-planning entirely.
+    let plan = crate::pipeline::plan_cache::global()
+        .plan(x.shape(), order, false)
         .map_err(|e| OpError::Invalid(e.to_string()))?;
     Ok(execute_plan(x, &plan, threads))
 }

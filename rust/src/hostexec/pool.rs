@@ -96,7 +96,8 @@ impl OutPtr {
         *self.ptr.add(off) = v;
     }
 
-    /// Copy a contiguous run.
+    /// Copy a contiguous run (short runs go through the const-width
+    /// dispatch in [`super::copy::copy_run`]).
     ///
     /// # Safety
     /// `[off, off + src.len())` is in-bounds and no other thread writes
@@ -104,7 +105,8 @@ impl OutPtr {
     #[inline]
     pub unsafe fn write_run(&self, off: usize, src: &[f32]) {
         debug_assert!(off + src.len() <= self.len);
-        std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(off), src.len());
+        let dst = std::slice::from_raw_parts_mut(self.ptr.add(off), src.len());
+        super::copy::copy_run(dst, src);
     }
 }
 

@@ -11,8 +11,14 @@
 //! `deinterlace_nN`, `subarray_N`, `fdK_N`, `smooth3x3_N`. Compute-only
 //! artifacts (scale, model pipelines, cavity steps) have no op IR and
 //! resolve to `None`.
+//!
+//! Composite pipeline requests use `pipe:<a>+<b>+...` names
+//! ([`pipeline_for_artifact`]): every `+`-separated segment is an
+//! artifact name from the families above, and the whole string is the
+//! pipeline's batching signature.
 
 use crate::ops::{Op, StencilSpec};
+use crate::pipeline::Pipeline;
 use crate::tensor::Order;
 
 fn digits_order(s: &str) -> Option<Order> {
@@ -88,6 +94,16 @@ pub fn op_for_artifact(name: &str) -> Option<Op> {
     None
 }
 
+/// Resolve a composite `pipe:<a>+<b>+...` request to a [`Pipeline`]:
+/// each `+`-separated segment must be an artifact [`op_for_artifact`]
+/// resolves. The coordinator's batcher keys on the full composite
+/// string, so requests for the same chain batch together.
+pub fn pipeline_for_artifact(name: &str) -> Option<Pipeline> {
+    let body = name.strip_prefix("pipe:")?;
+    let ops = body.split('+').map(op_for_artifact).collect::<Option<Vec<Op>>>()?;
+    Pipeline::new(ops).ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,5 +174,17 @@ mod tests {
         for name in ["scale_4m", "bandwidth_chain_4m", "cavity_step_n128", "nope"] {
             assert!(op_for_artifact(name).is_none(), "{name}");
         }
+    }
+
+    #[test]
+    fn pipeline_names_resolve() {
+        let p = pipeline_for_artifact("pipe:deinterlace_n3+smooth3x3_256+interlace_n3").unwrap();
+        assert_eq!(p.stages().len(), 3);
+        assert_eq!(p.stages()[0], Op::Deinterlace { n: 3 });
+        assert_eq!(p.stages()[2], Op::Interlace { n: 3 });
+
+        assert!(pipeline_for_artifact("pipe:").is_none());
+        assert!(pipeline_for_artifact("pipe:copy_4m+nope").is_none());
+        assert!(pipeline_for_artifact("permute3d_o102").is_none());
     }
 }

@@ -1,16 +1,27 @@
-//! §III.D generic 2D stencil, host-parallelized.
+//! §III.D generic 2D stencil, host-parallelized — single pass and the
+//! fused rolling-window **chain** executor.
 //!
-//! Row-banded over the worker pool with an interior fast path: inside
-//! the halo the taps reduce to constant flat offsets (no per-tap bounds
-//! tests), which is the host analogue of the kernel's staged tile whose
-//! interior threads skip ghost handling. Accumulation order and types
-//! (f64 accumulate, tap order from `StencilSpec::taps`) are exactly the
-//! golden reference's, so results are bit-identical.
+//! Single pass: row-banded over the worker pool with an interior fast
+//! path: inside the halo the taps reduce to constant flat offsets (no
+//! per-tap bounds tests), which is the host analogue of the kernel's
+//! staged tile whose interior threads skip ghost handling. Accumulation
+//! order and types (f64 accumulate, tap order from `StencilSpec::taps`)
+//! are exactly the golden reference's, so results are bit-identical.
+//!
+//! Chain ([`apply_chain`]): a run of stacked stencils executes as one
+//! banded pass per worker in which stage `k` keeps only the last
+//! `2*radius[k+1] + 1` produced rows hot in a ring buffer — the host
+//! analogue of the software-systolic rolling window. Intermediates
+//! never touch a full-size buffer, so the chain reads the input once
+//! and writes the output once instead of `depth` round trips; workers
+//! recompute the band-boundary halo rows so results stay bit-identical
+//! to `depth` sequential [`apply`] passes.
 
 use super::pool;
 use crate::ops::stencil::StencilSpec;
 use crate::ops::OpError;
 use crate::tensor::{NdArray, Shape};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Apply `spec` with zero ghost cells — bit-identical to
 /// [`crate::ops::stencil::apply`].
@@ -96,6 +107,259 @@ pub fn apply(
     Ok(NdArray::from_vec(Shape::new(&[h, w]), out))
 }
 
+/// Rolling window over the last `height` produced rows of one stage.
+/// Row `y` lives at slot `y % height`; the production schedule in
+/// [`apply_chain`] guarantees every row still needed is within the
+/// newest `height` rows, so slots never collide while live.
+pub(crate) struct Ring {
+    rows: Vec<f32>,
+    height: usize,
+    w: usize,
+}
+
+impl Ring {
+    pub(crate) fn new(height: usize, w: usize) -> Ring {
+        Ring {
+            rows: vec![0.0f32; height * w],
+            height,
+            w,
+        }
+    }
+
+    pub(crate) fn row_mut(&mut self, y: usize) -> &mut [f32] {
+        let s = (y % self.height) * self.w;
+        &mut self.rows[s..s + self.w]
+    }
+}
+
+/// Row lookup shared by the chain executors' stage inputs.
+pub(crate) trait RowSource {
+    fn row(&self, y: usize) -> &[f32];
+}
+
+impl RowSource for Ring {
+    fn row(&self, y: usize) -> &[f32] {
+        let s = (y % self.height) * self.w;
+        &self.rows[s..s + self.w]
+    }
+}
+
+/// Rows of a full row-major 2D buffer.
+pub(crate) struct SliceRows<'a> {
+    pub(crate) data: &'a [f32],
+    pub(crate) w: usize,
+}
+
+impl RowSource for SliceRows<'_> {
+    fn row(&self, y: usize) -> &[f32] {
+        &self.data[y * self.w..][..self.w]
+    }
+}
+
+/// Compute one output row of a stencil stage from a [`RowSource`] —
+/// bit-identical to the golden per-element walk (f64 accumulate, taps
+/// in spec order, zero ghosts outside the `h`×`w` domain).
+fn stencil_row<S: RowSource>(
+    src: &S,
+    h: usize,
+    w: usize,
+    taps: &[(i64, i64, f64)],
+    radius: usize,
+    i: usize,
+    dst: &mut [f32],
+) {
+    let (hi, wi) = (h as i64, w as i64);
+    let checked = |j: usize| -> f32 {
+        let mut acc = 0.0f64;
+        for &(dy, dx, c) in taps {
+            let (y, x) = (i as i64 + dy, j as i64 + dx);
+            if y >= 0 && y < hi && x >= 0 && x < wi {
+                acc += c * src.row(y as usize)[x as usize] as f64;
+            }
+        }
+        acc as f32
+    };
+    if w <= 2 * radius {
+        for (j, o) in dst.iter_mut().enumerate() {
+            *o = checked(j);
+        }
+        return;
+    }
+    for (j, o) in dst.iter_mut().enumerate().take(radius) {
+        *o = checked(j);
+    }
+    // Interior columns: only the row-bounds test remains; resolve each
+    // live tap to its source row once, keeping spec order (skipping a
+    // ghost row is exactly what the golden walk does).
+    let live: Vec<(&[f32], i64, f64)> = taps
+        .iter()
+        .filter(|&&(dy, _, _)| {
+            let y = i as i64 + dy;
+            y >= 0 && y < hi
+        })
+        .map(|&(dy, dx, c)| (src.row((i as i64 + dy) as usize), dx, c))
+        .collect();
+    for (j, o) in dst.iter_mut().enumerate().take(w - radius).skip(radius) {
+        let mut acc = 0.0f64;
+        for &(row, dx, c) in &live {
+            acc += c * row[(j as i64 + dx) as usize] as f64;
+        }
+        *o = acc as f32;
+    }
+    for (j, o) in dst.iter_mut().enumerate().skip(w - radius) {
+        *o = checked(j);
+    }
+}
+
+/// Traffic accounting of one fused chain execution. `input_bytes_read`
+/// and `output_bytes_written` move through full-size (DRAM-resident)
+/// buffers; `ring_bytes` is the intermediate traffic the fusion keeps
+/// inside the per-worker rolling windows (cache-resident by
+/// construction — at most `hot_rows_per_worker` rows live at once).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ChainStats {
+    pub input_bytes_read: u64,
+    pub output_bytes_written: u64,
+    pub ring_bytes: u64,
+    pub hot_rows_per_worker: usize,
+    pub depth: usize,
+}
+
+impl ChainStats {
+    /// Bytes the fused pass moves through full-size buffers.
+    pub fn fused_traffic_bytes(&self) -> u64 {
+        self.input_bytes_read + self.output_bytes_written
+    }
+}
+
+/// Bytes `depth` sequential full-array passes move (one read and one
+/// write of the whole field per stage).
+pub fn unfused_chain_traffic_bytes(h: usize, w: usize, depth: usize) -> u64 {
+    2 * depth as u64 * (h * w * 4) as u64
+}
+
+/// Apply a chain of stencils as one fused rolling-window pass —
+/// bit-identical to applying each spec in sequence with [`apply`].
+pub fn apply_chain(
+    x: &NdArray<f32>,
+    specs: &[StencilSpec],
+    threads: usize,
+) -> Result<(NdArray<f32>, ChainStats), OpError> {
+    if x.rank() != 2 {
+        return Err(OpError::Invalid("stencil chain expects a 2D array".into()));
+    }
+    if specs.is_empty() {
+        return Err(OpError::Invalid("stencil chain needs >= 1 stage".into()));
+    }
+    let taps: Vec<Vec<(i64, i64, f64)>> =
+        specs.iter().map(|s| s.taps()).collect::<Result<_, _>>()?;
+    let radii: Vec<usize> = specs.iter().map(|s| s.radius()).collect();
+    let d = specs.len();
+    // suffix[k]: how many rows past the final band stage k must produce
+    // (the summed radii of every later stage).
+    let mut suffix = vec![0usize; d];
+    for k in (0..d.saturating_sub(1)).rev() {
+        suffix[k] = suffix[k + 1] + radii[k + 1];
+    }
+    let (h, w) = (x.shape().dims()[0], x.shape().dims()[1]);
+    let mut out = vec![0.0f32; h * w];
+    let hot: usize = radii[1..].iter().map(|r| 2 * r + 1).sum();
+    if h * w == 0 {
+        let stats = ChainStats { depth: d, hot_rows_per_worker: hot, ..Default::default() };
+        return Ok((NdArray::from_vec(Shape::new(&[h, w]), out), stats));
+    }
+    let xd = x.data();
+    let in_rows = AtomicU64::new(0);
+    let ring_rows = AtomicU64::new(0);
+    let do_band = |band: &mut [f32], b0: usize| {
+        let (a, b) = chain_band(xd, h, w, &taps, &radii, &suffix, b0, band);
+        in_rows.fetch_add(a, Ordering::Relaxed);
+        ring_rows.fetch_add(b, Ordering::Relaxed);
+    };
+    let t = pool::effective_threads(threads, h * w, h);
+    if t <= 1 {
+        do_band(&mut out, 0);
+    } else {
+        let rows_per = (h + t - 1) / t;
+        std::thread::scope(|scope| {
+            for (wi, band) in out.chunks_mut(rows_per * w).enumerate() {
+                let do_band = &do_band;
+                scope.spawn(move || do_band(band, wi * rows_per));
+            }
+        });
+    }
+    let stats = ChainStats {
+        input_bytes_read: in_rows.into_inner() * (w * 4) as u64,
+        output_bytes_written: (h * w * 4) as u64,
+        ring_bytes: ring_rows.into_inner() * (w * 4) as u64,
+        hot_rows_per_worker: hot,
+        depth: d,
+    };
+    Ok((NdArray::from_vec(Shape::new(&[h, w]), out), stats))
+}
+
+/// One worker's band of the fused chain: lazily cascade row production
+/// from the first stage up, so no stage ever runs more than its
+/// consumer's radius ahead (the ring-capacity invariant). Returns
+/// (input rows fetched, ring rows produced).
+#[allow(clippy::too_many_arguments)]
+fn chain_band(
+    xd: &[f32],
+    h: usize,
+    w: usize,
+    taps: &[Vec<(i64, i64, f64)>],
+    radii: &[usize],
+    suffix: &[usize],
+    b0: usize,
+    band: &mut [f32],
+) -> (u64, u64) {
+    let d = taps.len();
+    let b1 = b0 + band.len() / w;
+    let lo = |k: usize| b0.saturating_sub(suffix[k]);
+    let hi = |k: usize| (b1 + suffix[k]).min(h);
+    let mut rings: Vec<Ring> = (0..d - 1).map(|k| Ring::new(2 * radii[k + 1] + 1, w)).collect();
+    let mut produced: Vec<i64> = (0..d).map(|k| lo(k) as i64 - 1).collect();
+    let input = SliceRows { data: xd, w };
+    for i in b0..b1 {
+        while produced[d - 1] < i as i64 {
+            // Descend to the deepest stage whose source is not ready.
+            let mut k = d - 1;
+            while k > 0 {
+                let y = produced[k] + 1;
+                let need = (y + radii[k] as i64).min(hi(k - 1) as i64 - 1);
+                if produced[k - 1] >= need {
+                    break;
+                }
+                k -= 1;
+            }
+            let y = (produced[k] + 1) as usize;
+            if k == 0 {
+                if d == 1 {
+                    let dst = &mut band[(y - b0) * w..][..w];
+                    stencil_row(&input, h, w, &taps[0], radii[0], y, dst);
+                } else {
+                    stencil_row(&input, h, w, &taps[0], radii[0], y, rings[0].row_mut(y));
+                }
+            } else {
+                let (left, right) = rings.split_at_mut(k);
+                let src = &left[k - 1];
+                if k == d - 1 {
+                    let dst = &mut band[(y - b0) * w..][..w];
+                    stencil_row(src, h, w, &taps[k], radii[k], y, dst);
+                } else {
+                    stencil_row(src, h, w, &taps[k], radii[k], y, right[0].row_mut(y));
+                }
+            }
+            produced[k] += 1;
+        }
+    }
+    let in_lo = lo(0).saturating_sub(radii[0]);
+    let in_hi = (hi(0) + radii[0]).min(h);
+    let input_rows = in_hi.saturating_sub(in_lo) as u64;
+    let ring_rows: u64 = (0..d.saturating_sub(1)).map(|k| (hi(k) - lo(k)) as u64).sum();
+    (input_rows, ring_rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +404,74 @@ mod tests {
         let x2 = NdArray::iota(Shape::new(&[8, 8]));
         let bad = StencilSpec::FdLaplacian { order: 9, scale: 1.0 };
         assert!(apply(&x2, &bad, 4).is_err());
+    }
+
+    #[test]
+    fn chain_matches_sequential_passes() {
+        let mut rng = Rng::new(0xC4A1);
+        // (256, 140) clears PARALLEL_THRESHOLD, so the threads=4 runs
+        // exercise multi-band execution with halo recompute.
+        for (hh, ww) in [(64usize, 64usize), (33, 7), (5, 40), (9, 9), (1, 13), (256, 140)] {
+            let x = NdArray::random(Shape::new(&[hh, ww]), &mut rng);
+            for depth in 1..=4usize {
+                let chain: Vec<StencilSpec> = (0..depth)
+                    .map(|k| match k % 3 {
+                        0 => StencilSpec::FdLaplacian { order: 1 + k % 2, scale: 0.2 },
+                        1 => StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] },
+                        _ => StencilSpec::Taps {
+                            radius: 2,
+                            taps: vec![(2, 1, 1.25), (-1, -2, -0.5), (0, 0, 3.0)],
+                        },
+                    })
+                    .collect();
+                let mut want = x.clone();
+                for spec in &chain {
+                    want = golden::apply(&want, spec).unwrap();
+                }
+                for threads in [1, 4] {
+                    let (got, stats) = apply_chain(&x, &chain, threads).unwrap();
+                    assert_eq!(got, want, "{hh}x{ww} depth={depth} threads={threads}");
+                    assert_eq!(stats.depth, depth);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_traffic_at_most_half_of_unfused() {
+        let mut rng = Rng::new(0xC4A2);
+        let x = NdArray::random(Shape::new(&[48, 40]), &mut rng);
+        for depth in 2..=4usize {
+            let chain = vec![StencilSpec::FdLaplacian { order: 1, scale: 1.0 }; depth];
+            // One band (threads = 1): no halo recompute, so the fused
+            // traffic is exactly one read + one write of the field.
+            let (_, stats) = apply_chain(&x, &chain, 1).unwrap();
+            assert_eq!(stats.input_bytes_read, 48 * 40 * 4);
+            assert_eq!(stats.output_bytes_written, 48 * 40 * 4);
+            assert!(
+                2 * stats.fused_traffic_bytes() <= unfused_chain_traffic_bytes(48, 40, depth),
+                "depth {depth}: fused {} vs unfused {}",
+                stats.fused_traffic_bytes(),
+                unfused_chain_traffic_bytes(48, 40, depth)
+            );
+            assert!(stats.hot_rows_per_worker <= 3 * depth);
+        }
+    }
+
+    #[test]
+    fn chain_validation() {
+        let flat = NdArray::iota(Shape::new(&[8]));
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        assert!(apply_chain(&flat, &[spec.clone()], 1).is_err());
+        let img = NdArray::iota(Shape::new(&[8, 8]));
+        assert!(apply_chain(&img, &[], 1).is_err());
+        let bad = StencilSpec::FdLaplacian { order: 9, scale: 1.0 };
+        assert!(apply_chain(&img, &[spec, bad], 1).is_err());
+
+        let empty = NdArray::<f32>::zeros(Shape::new(&[0, 7]));
+        let spec = StencilSpec::FdLaplacian { order: 2, scale: 1.0 };
+        let (y, stats) = apply_chain(&empty, &[spec.clone(), spec], 4).unwrap();
+        assert_eq!(y.len(), 0);
+        assert_eq!(stats.fused_traffic_bytes(), 0);
     }
 }

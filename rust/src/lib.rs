@@ -9,12 +9,13 @@
 //! * **L2** — JAX compositions (`python/compile/model.py`, `cfd.py`).
 //! * **L3** — this crate: the coordinator, planner, Tesla-C1060 memory-system
 //!   simulator, PJRT runtime (feature `pjrt`), the tiled multi-threaded
-//!   host execution backend (`hostexec`), and CPU reference
-//!   implementations.
+//!   host execution backend (`hostexec`), the op-graph fusion subsystem
+//!   (`pipeline`), and CPU reference implementations.
 
 pub mod tensor;
 pub mod ops;
 pub mod hostexec;
+pub mod pipeline;
 pub mod planner;
 pub mod gpusim;
 pub mod kernels;

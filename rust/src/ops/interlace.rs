@@ -64,7 +64,7 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_all_table3_n(){
+    fn roundtrip_all_table3_n() {
         let mut rng = Rng::new(0x7ab1e3);
         for n in 2..=9 {
             let arrays: Vec<NdArray<f32>> = (0..n)

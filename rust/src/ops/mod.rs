@@ -126,6 +126,45 @@ impl Op {
             ExecBackend::Host => self.execute_fast(inputs),
         }
     }
+
+    /// True when the op returns its input unchanged (bits and shape) —
+    /// the pipeline rewrite pass elides such stages.
+    pub fn is_identity(&self) -> bool {
+        match self {
+            Op::Copy => true,
+            Op::Reorder { order } => order.is_identity(),
+            _ => false,
+        }
+    }
+
+    /// The op that undoes this one, when the algebra has an inverse.
+    pub fn inverse(&self) -> Option<Op> {
+        match self {
+            Op::Copy => Some(Op::Copy),
+            Op::Reorder { order } => Some(Op::Reorder { order: order.inverse() }),
+            Op::Interlace { n } => Some(Op::Deinterlace { n: *n }),
+            Op::Deinterlace { n } => Some(Op::Interlace { n: *n }),
+            _ => None,
+        }
+    }
+
+    /// Fuse `self` followed by `next` into a single equivalent op when
+    /// the op algebra permits (§III.B order composition, §III.C
+    /// interlace/deinterlace inverses, copy elision). Assumes the two
+    /// ops form a valid chain link; returns `None` when no single-op
+    /// fusion exists.
+    pub fn compose_with(&self, next: &Op) -> Option<Op> {
+        match (self, next) {
+            (Op::Copy, other) => Some(other.clone()),
+            (other, Op::Copy) => Some(other.clone()),
+            (Op::Reorder { order: a }, Op::Reorder { order: b }) if a.rank() == b.rank() => {
+                Some(Op::Reorder { order: a.compose(b) })
+            }
+            (Op::Deinterlace { n: a }, Op::Interlace { n: b }) if a == b => Some(Op::Copy),
+            (Op::Interlace { n: a }, Op::Deinterlace { n: b }) if a == b => Some(Op::Copy),
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -153,5 +192,50 @@ mod tests {
         let a = NdArray::iota(Shape::new(&[3, 5]));
         let out = Op::Copy.reference(&[&a]).unwrap();
         assert_eq!(out[0], a);
+    }
+
+    #[test]
+    fn identity_detection() {
+        assert!(Op::Copy.is_identity());
+        assert!(Op::Reorder { order: Order::identity(3) }.is_identity());
+        assert!(!Op::Reorder { order: Order::new(&[1, 0]).unwrap() }.is_identity());
+        assert!(!Op::Interlace { n: 2 }.is_identity());
+    }
+
+    #[test]
+    fn inverse_pairs_compose_to_identity() {
+        let o = Order::new(&[2, 0, 1]).unwrap();
+        let op = Op::Reorder { order: o };
+        let inv = op.inverse().unwrap();
+        assert!(op.compose_with(&inv).unwrap().is_identity());
+        assert_eq!(
+            Op::Interlace { n: 3 }.inverse().unwrap(),
+            Op::Deinterlace { n: 3 }
+        );
+        assert!(Op::Subarray { base: vec![0], shape: vec![1] }.inverse().is_none());
+    }
+
+    #[test]
+    fn composition_rules() {
+        let a = Order::new(&[1, 0, 2]).unwrap();
+        let b = Order::new(&[2, 0, 1]).unwrap();
+        let fused = Op::Reorder { order: a.clone() }
+            .compose_with(&Op::Reorder { order: b.clone() })
+            .unwrap();
+        assert_eq!(fused, Op::Reorder { order: a.compose(&b) });
+        // Copy is neutral on either side.
+        let s = Op::Subarray { base: vec![1], shape: vec![2] };
+        assert_eq!(Op::Copy.compose_with(&s).unwrap(), s);
+        assert_eq!(s.compose_with(&Op::Copy).unwrap(), s);
+        // Interlace/deinterlace inverse pairs cancel to Copy.
+        assert_eq!(
+            Op::Deinterlace { n: 4 }.compose_with(&Op::Interlace { n: 4 }).unwrap(),
+            Op::Copy
+        );
+        assert!(Op::Deinterlace { n: 4 }.compose_with(&Op::Interlace { n: 3 }).is_none());
+        // Rank-mismatched reorders (an invalid link) do not fuse.
+        let r1 = Op::Reorder { order: Order::identity(2) };
+        let r2 = Op::Reorder { order: Order::new(&[2, 0, 1]).unwrap() };
+        assert!(r1.compose_with(&r2).is_none());
     }
 }

@@ -1,0 +1,287 @@
+//! Fusion decisions + the fused CFD Jacobi pass.
+//!
+//! [`segment`] lowers a rewritten stage list to execution segments:
+//! runs of ≥ 2 consecutive `Stencil` stages become one
+//! [`Segment::StencilChain`], executed by the rolling-window chain
+//! executor in [`crate::hostexec::stencil::apply_chain`]; everything
+//! else stays a [`Segment::Single`].
+//!
+//! [`jacobi_chain`] is the same rolling-window technique specialized to
+//! the cavity solver's Poisson step: the K Jacobi sweeps of
+//! [`crate::cfd::CpuSolver`] execute as one banded pass per worker
+//! (radius-1 stages, an `omega` source term, Dirichlet walls), keeping
+//! 3 rows per sweep hot instead of writing K full `psi` fields — and
+//! spawning one worker set instead of K. Bit-identical to the unfused
+//! sweeps: same f32 expression per element, same neighbour order.
+
+use crate::hostexec::stencil::{Ring, RowSource, SliceRows};
+use crate::ops::{Op, StencilSpec};
+
+/// One executable unit of a rewritten pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Segment {
+    Single(Op),
+    /// ≥ 2 stacked stencils fused into one rolling-window pass.
+    StencilChain(Vec<StencilSpec>),
+}
+
+impl Segment {
+    pub fn arity(&self) -> usize {
+        match self {
+            Segment::Single(op) => op.arity(),
+            Segment::StencilChain(_) => 1,
+        }
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        match self {
+            Segment::Single(op) => op.num_outputs(),
+            Segment::StencilChain(_) => 1,
+        }
+    }
+}
+
+/// Group consecutive stencil stages into fused chains.
+pub fn segment(stages: &[Op]) -> Vec<Segment> {
+    let mut out = Vec::new();
+    let mut run: Vec<StencilSpec> = Vec::new();
+    for op in stages {
+        match op {
+            Op::Stencil { spec } => run.push(spec.clone()),
+            other => {
+                flush(&mut out, &mut run);
+                out.push(Segment::Single(other.clone()));
+            }
+        }
+    }
+    flush(&mut out, &mut run);
+    out
+}
+
+fn flush(out: &mut Vec<Segment>, run: &mut Vec<StencilSpec>) {
+    match run.len() {
+        0 => {}
+        1 => out.push(Segment::Single(Op::Stencil {
+            spec: run.pop().expect("run of one"),
+        })),
+        _ => out.push(Segment::StencilChain(std::mem::take(run))),
+    }
+}
+
+/// `iters` Jacobi sweeps of the cavity Poisson solve, fused into one
+/// rolling-window pass: `psi_next[i][j] = 0.25 * (psi[i][j+1] +
+/// psi[i][j-1] + psi[i+1][j] + psi[i-1][j] + h2 * omega[i][j])` on the
+/// interior, 0 on the walls — bit-identical to `iters` sequential
+/// sweeps of [`crate::cfd::CpuSolver`]'s loop.
+pub fn jacobi_chain(
+    psi: &[f32],
+    omega: &[f32],
+    n: usize,
+    h2: f32,
+    iters: usize,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(psi.len(), n * n, "psi field must be n x n");
+    assert_eq!(omega.len(), n * n, "omega field must be n x n");
+    if iters == 0 || n == 0 {
+        return psi.to_vec();
+    }
+    let mut out = vec![0.0f32; n * n];
+    let do_band = |band: &mut [f32], b0: usize| {
+        jacobi_band(psi, omega, n, h2, iters, b0, band);
+    };
+    let t = crate::hostexec::pool::effective_threads(threads, n * n, n);
+    if t <= 1 {
+        do_band(&mut out, 0);
+    } else {
+        let rows_per = (n + t - 1) / t;
+        std::thread::scope(|scope| {
+            for (wi, band) in out.chunks_mut(rows_per * n).enumerate() {
+                let do_band = &do_band;
+                scope.spawn(move || do_band(band, wi * rows_per));
+            }
+        });
+    }
+    out
+}
+
+/// One worker's band: lazily cascade sweep-row production (radius 1 per
+/// sweep) so each sweep keeps only 3 rows of the previous sweep hot.
+/// Band-boundary halo rows are recomputed, keeping workers independent
+/// and results bit-identical to the barriered sweeps.
+fn jacobi_band(
+    psi0: &[f32],
+    omega: &[f32],
+    n: usize,
+    h2: f32,
+    iters: usize,
+    b0: usize,
+    band: &mut [f32],
+) {
+    let d = iters;
+    let b1 = b0 + band.len() / n;
+    let lo = |k: usize| b0.saturating_sub(d - 1 - k);
+    let hi = |k: usize| (b1 + (d - 1 - k)).min(n);
+    let mut rings: Vec<Ring> = (0..d - 1).map(|_| Ring::new(3, n)).collect();
+    let mut produced: Vec<i64> = (0..d).map(|k| lo(k) as i64 - 1).collect();
+    let input = SliceRows { data: psi0, w: n };
+    for i in b0..b1 {
+        while produced[d - 1] < i as i64 {
+            // Descend to the deepest sweep whose source is not ready.
+            let mut k = d - 1;
+            while k > 0 {
+                let need = (produced[k] + 2).min(hi(k - 1) as i64 - 1);
+                if produced[k - 1] >= need {
+                    break;
+                }
+                k -= 1;
+            }
+            let y = (produced[k] + 1) as usize;
+            let omega_row = &omega[y * n..][..n];
+            if k == 0 {
+                if d == 1 {
+                    let dst = &mut band[(y - b0) * n..][..n];
+                    jacobi_row(&input, n, omega_row, h2, y, dst);
+                } else {
+                    jacobi_row(&input, n, omega_row, h2, y, rings[0].row_mut(y));
+                }
+            } else {
+                let (left, right) = rings.split_at_mut(k);
+                let src = &left[k - 1];
+                if k == d - 1 {
+                    let dst = &mut band[(y - b0) * n..][..n];
+                    jacobi_row(src, n, omega_row, h2, y, dst);
+                } else {
+                    jacobi_row(src, n, omega_row, h2, y, right[0].row_mut(y));
+                }
+            }
+            produced[k] += 1;
+        }
+    }
+}
+
+/// One sweep row. Wall rows/columns are 0 (the psi Dirichlet BC); the
+/// interior expression and neighbour order mirror the unfused sweep
+/// exactly, so the f32 results are bitwise equal.
+fn jacobi_row<S: RowSource>(
+    src: &S,
+    n: usize,
+    omega_row: &[f32],
+    h2: f32,
+    y: usize,
+    dst: &mut [f32],
+) {
+    if y == 0 || y + 1 == n {
+        for v in dst.iter_mut() {
+            *v = 0.0;
+        }
+        return;
+    }
+    dst[0] = 0.0;
+    dst[n - 1] = 0.0;
+    let mid = src.row(y);
+    let up = src.row(y + 1);
+    let dn = src.row(y - 1);
+    for j in 1..n - 1 {
+        let s = mid[j + 1] + mid[j - 1] + up[j] + dn[j];
+        dst[j] = 0.25 * (s + h2 * omega_row[j]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Order;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn segmentation_fuses_runs_of_two_or_more() {
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let st = Op::Stencil { spec: spec.clone() };
+        let r = Op::Reorder { order: Order::new(&[1, 0]).unwrap() };
+
+        let segs = segment(&[st.clone(), st.clone(), r.clone(), st.clone()]);
+        assert_eq!(segs.len(), 3);
+        assert!(matches!(&segs[0], Segment::StencilChain(c) if c.len() == 2));
+        assert_eq!(segs[1], Segment::Single(r.clone()));
+        assert_eq!(segs[2], Segment::Single(st.clone()));
+
+        // A lone stencil stays single; triple fuses into one chain.
+        assert_eq!(segment(&[st.clone()]), vec![Segment::Single(st.clone())]);
+        let segs = segment(&[st.clone(), st.clone(), st]);
+        assert!(matches!(&segs[..], [Segment::StencilChain(c)] if c.len() == 3));
+    }
+
+    /// The unfused sweeps, verbatim from the solver's Poisson loop.
+    fn jacobi_unfused(psi: &[f32], omega: &[f32], n: usize, h2: f32, iters: usize) -> Vec<f32> {
+        let nb = |f: &[f32], i: i64, j: i64| -> f32 {
+            if i < 0 || j < 0 || i >= n as i64 || j >= n as i64 {
+                0.0
+            } else {
+                f[i as usize * n + j as usize]
+            }
+        };
+        let mut cur = psi.to_vec();
+        let mut next = vec![0.0f32; n * n];
+        for _ in 0..iters {
+            for i in 0..n {
+                for j in 0..n {
+                    let s = nb(&cur, i as i64, j as i64 + 1)
+                        + nb(&cur, i as i64, j as i64 - 1)
+                        + nb(&cur, i as i64 + 1, j as i64)
+                        + nb(&cur, i as i64 - 1, j as i64);
+                    let v = 0.25 * (s + h2 * omega[i * n + j]);
+                    next[i * n + j] = if i == 0 || j == 0 || i == n - 1 || j == n - 1 {
+                        0.0
+                    } else {
+                        v
+                    };
+                }
+            }
+            std::mem::swap(&mut cur, &mut next);
+        }
+        cur
+    }
+
+    #[test]
+    fn jacobi_chain_bit_identical_to_sweeps() {
+        let mut rng = Rng::new(0x1AC0B1);
+        for n in [1usize, 2, 3, 7, 40, 65] {
+            let psi = rng.f32_vec(n * n);
+            let omega = rng.f32_vec(n * n);
+            let h2 = 1.0 / ((n.max(2) - 1) as f32 * (n.max(2) - 1) as f32);
+            for iters in [0usize, 1, 2, 5, 20] {
+                let want = jacobi_unfused(&psi, &omega, n, h2, iters);
+                for threads in [1, 4] {
+                    let got = jacobi_chain(&psi, &omega, n, h2, iters, threads);
+                    assert_eq!(got, want, "n={n} iters={iters} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_chain_multiband_bit_identical() {
+        // n*n clears PARALLEL_THRESHOLD so the worker bands (and their
+        // halo recompute) actually run.
+        let mut rng = Rng::new(0x1AC0B2);
+        let n = 192usize;
+        let psi = rng.f32_vec(n * n);
+        let omega = rng.f32_vec(n * n);
+        let h2 = 1.0 / (((n - 1) * (n - 1)) as f32);
+        for iters in [1usize, 2, 7, 20] {
+            let want = jacobi_unfused(&psi, &omega, n, h2, iters);
+            for threads in [2, 5] {
+                let got = jacobi_chain(&psi, &omega, n, h2, iters, threads);
+                assert_eq!(got, want, "iters={iters} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn jacobi_chain_zero_iters_is_identity() {
+        let psi = vec![1.5f32; 16];
+        let omega = vec![0.25f32; 16];
+        assert_eq!(jacobi_chain(&psi, &omega, 4, 0.1, 0, 4), psi);
+    }
+}

@@ -1,0 +1,291 @@
+//! `pipeline` — op-graph fusion: a first-class IR for chains of
+//! rearrangement ops, an algebraic rewrite pass, fused stencil-chain
+//! execution, and plan caching.
+//!
+//! The paper's kernels exist so rearrangement composes cheaply into
+//! real applications, yet a naive composition executes one full memory
+//! round trip per op. This subsystem closes that gap on the host path
+//! (and gives every future backend a shared fusion layer):
+//!
+//! * **IR** — a [`Pipeline`] is a validated sequence of [`Op`] stages.
+//!   Stage outputs feed the next stage; a multi-output stage
+//!   (`Deinterlace`) widens the chain into parallel *lanes*, a matching
+//!   multi-input stage (`Interlace`) narrows it back — the diamond DAG
+//!   of the paper's image-filter application. Unary stages apply
+//!   lane-wise.
+//! * **Rewrites** ([`rewrite`]) — the §III.B storage-order algebra as
+//!   graph rules: `Reorder∘Reorder` composes into one order
+//!   ([`Order::compose`](crate::tensor::Order::compose)), inverse
+//!   permute pairs cancel, §III.C `Interlace∘Deinterlace` pairs cancel,
+//!   `Copy` elides, and `Subarray` pushes down through permutes so
+//!   §III.B cropping happens *before* data movement.
+//! * **Fusion** ([`fuse`]) — runs of ≥ 2 §III.D `Stencil` stages lower
+//!   to the rolling-window chain executor
+//!   ([`hostexec::stencil::apply_chain`](crate::hostexec::stencil::apply_chain)):
+//!   one read of the input and one write of the output instead of
+//!   `depth` round trips, with only `~2·radius·depth` intermediate rows
+//!   hot per worker. The same pass steps the CFD cavity's K Jacobi
+//!   sweeps ([`fuse::jacobi_chain`]).
+//! * **Plan cache** ([`plan_cache`]) — resolved
+//!   [`planner::Plan`](crate::planner::Plan)s keyed by (shape, order,
+//!   diagonal) so repeated coordinator traffic skips re-planning.
+//!
+//! Everything is bit-identical to the unfused naive chain — enforced by
+//! `rust/tests/pipeline_property.rs` (random op chains, rank 1–5) and
+//! the chain tests in `hostexec::stencil`.
+
+pub mod fuse;
+pub mod plan_cache;
+pub mod rewrite;
+
+pub use fuse::{segment, Segment};
+pub use plan_cache::PlanCache;
+pub use rewrite::rewrite;
+
+use crate::hostexec;
+use crate::ops::{ExecBackend, Op, OpError};
+use crate::tensor::NdArray;
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum PipelineError {
+    #[error("pipeline needs at least one stage")]
+    Empty,
+    #[error("stage {stage} cannot accept {width} input lane(s)")]
+    WidthMismatch { stage: usize, width: usize },
+    #[error("stage {stage}: {source}")]
+    Stage {
+        stage: usize,
+        #[source]
+        source: OpError,
+    },
+}
+
+/// Execution accounting for one [`Pipeline::execute_with_stats`] call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipeStats {
+    /// Stages before / after the rewrite pass.
+    pub stages_in: usize,
+    pub stages_rewritten: usize,
+    /// Fused stencil chains executed (per lane).
+    pub fused_chains: usize,
+    /// Full-size-buffer bytes the fused chains moved.
+    pub fused_traffic_bytes: u64,
+    /// Bytes the same chains would move unfused (one read + one write
+    /// of the field per stage).
+    pub unfused_chain_traffic_bytes: u64,
+}
+
+/// A validated chain of rearrangement ops (see the module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pipeline {
+    stages: Vec<Op>,
+}
+
+impl Pipeline {
+    pub fn new(stages: Vec<Op>) -> Result<Pipeline, PipelineError> {
+        if stages.is_empty() {
+            return Err(PipelineError::Empty);
+        }
+        Ok(Pipeline { stages })
+    }
+
+    pub fn stages(&self) -> &[Op] {
+        &self.stages
+    }
+
+    /// Execute the chain stage by stage on the golden references — no
+    /// rewrites, no fusion. The semantic anchor the fast path is tested
+    /// against.
+    pub fn reference(&self, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, PipelineError> {
+        let segments: Vec<Segment> =
+            self.stages.iter().cloned().map(Segment::Single).collect();
+        run_segments(&segments, inputs, &mut |seg, ins| match seg {
+            Segment::Single(op) => op.reference(ins),
+            Segment::StencilChain(_) => unreachable!("reference path never fuses"),
+        })
+    }
+
+    /// Rewrite, fuse and execute on the host backend.
+    pub fn execute(&self, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, PipelineError> {
+        self.execute_with_stats(inputs).map(|(outs, _)| outs)
+    }
+
+    /// [`Pipeline::execute`] returning the traffic/rewrite accounting.
+    pub fn execute_with_stats(
+        &self,
+        inputs: &[&NdArray<f32>],
+    ) -> Result<(Vec<NdArray<f32>>, PipeStats), PipelineError> {
+        let rewritten = rewrite::rewrite(&self.stages);
+        let segments = fuse::segment(&rewritten);
+        let mut stats = PipeStats {
+            stages_in: self.stages.len(),
+            stages_rewritten: rewritten.len(),
+            ..Default::default()
+        };
+        let threads = hostexec::pool::num_threads();
+        let outs = run_segments(&segments, inputs, &mut |seg, ins| match seg {
+            Segment::Single(op) => op.execute_fast(ins),
+            Segment::StencilChain(specs) => {
+                let (y, s) = hostexec::stencil::apply_chain(ins[0], specs, threads)?;
+                let dims = ins[0].shape().dims();
+                stats.fused_chains += 1;
+                stats.fused_traffic_bytes += s.fused_traffic_bytes();
+                stats.unfused_chain_traffic_bytes +=
+                    hostexec::stencil::unfused_chain_traffic_bytes(dims[0], dims[1], specs.len());
+                Ok(vec![y])
+            }
+        })?;
+        Ok((outs, stats))
+    }
+
+    /// Execute on the selected backend (mirrors [`Op::dispatch`]).
+    pub fn dispatch(
+        &self,
+        inputs: &[&NdArray<f32>],
+        backend: ExecBackend,
+    ) -> Result<Vec<NdArray<f32>>, PipelineError> {
+        match backend {
+            ExecBackend::Naive => self.reference(inputs),
+            ExecBackend::Host => self.execute(inputs),
+        }
+    }
+}
+
+/// Drive a segment chain over the lane-width rules: a segment either
+/// consumes every current lane at once (arity == width) or, when unary
+/// with a single output, maps over the lanes independently.
+fn run_segments<F>(
+    segments: &[Segment],
+    inputs: &[&NdArray<f32>],
+    exec: &mut F,
+) -> Result<Vec<NdArray<f32>>, PipelineError>
+where
+    F: FnMut(&Segment, &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, OpError>,
+{
+    let mut cur: Vec<NdArray<f32>> = Vec::new();
+    let mut first = true;
+    for (si, seg) in segments.iter().enumerate() {
+        let refs: Vec<&NdArray<f32>> = if first {
+            inputs.to_vec()
+        } else {
+            cur.iter().collect()
+        };
+        let width = refs.len();
+        let next = if seg.arity() == width {
+            exec(seg, &refs).map_err(|e| PipelineError::Stage { stage: si, source: e })?
+        } else if seg.arity() == 1 && seg.num_outputs() == 1 {
+            let mut lanes = Vec::with_capacity(width);
+            for lane in &refs {
+                let mut outs = exec(seg, &[*lane])
+                    .map_err(|e| PipelineError::Stage { stage: si, source: e })?;
+                lanes.push(outs.pop().expect("single-output segment"));
+            }
+            lanes
+        } else {
+            return Err(PipelineError::WidthMismatch { stage: si, width });
+        };
+        cur = next;
+        first = false;
+    }
+    if first {
+        return Ok(inputs.iter().map(|x| (*x).clone()).collect());
+    }
+    Ok(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::StencilSpec;
+    use crate::tensor::{Order, Shape};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_pipeline_rejected() {
+        assert!(matches!(Pipeline::new(vec![]), Err(PipelineError::Empty)));
+    }
+
+    #[test]
+    fn linear_chain_matches_manual_composition() {
+        let mut rng = Rng::new(0xF1FE);
+        let x = NdArray::random(Shape::new(&[6, 10, 14]), &mut rng);
+        let o1 = Order::new(&[1, 0, 2]).unwrap();
+        let o2 = Order::new(&[2, 0, 1]).unwrap();
+        let p = Pipeline::new(vec![
+            Op::Reorder { order: o1.clone() },
+            Op::Copy,
+            Op::Reorder { order: o2.clone() },
+        ])
+        .unwrap();
+        let mut want = Op::Reorder { order: o1 }.reference(&[&x]).unwrap();
+        want = Op::Reorder { order: o2 }.reference(&[&want[0]]).unwrap();
+        assert_eq!(p.reference(&[&x]).unwrap(), want);
+        let (got, stats) = p.execute_with_stats(&[&x]).unwrap();
+        assert_eq!(got, want);
+        // Copy elided, the two reorders composed into one stage.
+        assert_eq!(stats.stages_in, 3);
+        assert_eq!(stats.stages_rewritten, 1);
+    }
+
+    #[test]
+    fn lane_widening_and_narrowing() {
+        // The image-filter diamond: deinterlace -> lane-wise stencil ->
+        // interlace, rank-1 lanes reshaped on the outside.
+        let mut rng = Rng::new(0x1394);
+        let x = NdArray::random(Shape::new(&[3 * 500]), &mut rng);
+        let p = Pipeline::new(vec![
+            Op::Deinterlace { n: 3 },
+            Op::Copy,
+            Op::Interlace { n: 3 },
+        ])
+        .unwrap();
+        let out = p.reference(&[&x]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], x);
+        let fast = p.execute(&[&x]).unwrap();
+        assert_eq!(fast[0], x);
+    }
+
+    #[test]
+    fn width_mismatch_is_an_error() {
+        let x = NdArray::iota(Shape::new(&[8]));
+        let y = NdArray::iota(Shape::new(&[8]));
+        // Interlace{3} at width 2: neither consume-all nor lane-wise.
+        let p = Pipeline::new(vec![Op::Interlace { n: 3 }]).unwrap();
+        let err = p.reference(&[&x, &y]).unwrap_err();
+        assert!(matches!(err, PipelineError::WidthMismatch { stage: 0, width: 2 }));
+    }
+
+    #[test]
+    fn stage_errors_carry_the_stage_index() {
+        let x = NdArray::iota(Shape::new(&[4, 4]));
+        let p = Pipeline::new(vec![
+            Op::Copy,
+            Op::Subarray { base: vec![2, 2], shape: vec![9, 9] },
+        ])
+        .unwrap();
+        match p.reference(&[&x]) {
+            Err(PipelineError::Stage { stage: 1, .. }) => {}
+            other => panic!("expected stage-1 error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fused_stencil_chain_counts_traffic() {
+        let mut rng = Rng::new(0x57E9);
+        let x = NdArray::random(Shape::new(&[40, 40]), &mut rng);
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 0.5 };
+        let p = Pipeline::new(vec![
+            Op::Stencil { spec: spec.clone() },
+            Op::Stencil { spec: spec.clone() },
+            Op::Stencil { spec },
+        ])
+        .unwrap();
+        let want = p.reference(&[&x]).unwrap();
+        let (got, stats) = p.execute_with_stats(&[&x]).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(stats.fused_chains, 1);
+        assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
+    }
+}

@@ -1,0 +1,157 @@
+//! Resolved-plan cache: `planner::Plan` construction is pure, so plans
+//! are memoized by (shape, order, diagonal). The coordinator's host
+//! backend re-plans the same handful of (op, shape, order) keys on
+//! every request; with the cache, repeated traffic costs one HashMap
+//! probe instead of a fresh §III.B analysis. `hostexec::permute`
+//! resolves through [`global`].
+
+use crate::planner::{plan_reorder, Plan, PlanError};
+use crate::tensor::{Order, Shape};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PlanKey {
+    dims: Vec<usize>,
+    order: Vec<usize>,
+    diagonal: bool,
+}
+
+/// A bounded, thread-safe memo of resolved plans with hit/miss
+/// counters. When the map reaches capacity it is cleared wholesale —
+/// plans are tiny and rebuild in one miss each, so the simple policy
+/// keeps the hot path to a single lock + probe.
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanKey, Arc<Plan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    capacity: usize,
+}
+
+impl PlanCache {
+    pub fn with_capacity(capacity: usize) -> PlanCache {
+        PlanCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Resolve (and memoize) the plan for reordering `shape` into
+    /// `order` — same contract as [`plan_reorder`].
+    pub fn plan(
+        &self,
+        shape: &Shape,
+        order: &Order,
+        diagonal: bool,
+    ) -> Result<Arc<Plan>, PlanError> {
+        let key = PlanKey {
+            dims: shape.dims().to_vec(),
+            order: order.dims().to_vec(),
+            diagonal,
+        };
+        if let Some(plan) = self.map.lock().expect("plan cache lock").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(plan.clone());
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(plan_reorder(shape, order, diagonal)?);
+        let mut map = self.map.lock().expect("plan cache lock");
+        if map.len() >= self.capacity {
+            map.clear();
+        }
+        map.insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("plan cache lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.lock().expect("plan cache lock").is_empty()
+    }
+}
+
+/// The process-wide cache every hostexec permute resolves through.
+pub fn global() -> &'static PlanCache {
+    static CACHE: OnceLock<PlanCache> = OnceLock::new();
+    CACHE.get_or_init(|| PlanCache::with_capacity(1024))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn order(v: &[usize]) -> Order {
+        Order::new(v).unwrap()
+    }
+
+    #[test]
+    fn second_lookup_hits() {
+        let cache = PlanCache::with_capacity(16);
+        let shape = Shape::new(&[8, 16, 32]);
+        let p1 = cache.plan(&shape, &order(&[1, 0, 2]), false).unwrap();
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.hits(), 0);
+        let p2 = cache.plan(&shape, &order(&[1, 0, 2]), false).unwrap();
+        assert_eq!(cache.hits(), 1);
+        assert!(Arc::ptr_eq(&p1, &p2));
+        // Same order, different diagonal flag: a distinct plan.
+        cache.plan(&shape, &order(&[1, 0, 2]), true).unwrap();
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cached_plan_equals_fresh_plan() {
+        let cache = PlanCache::with_capacity(16);
+        let shape = Shape::new(&[5, 33, 70]);
+        let o = order(&[2, 1, 0]);
+        let cached = cache.plan(&shape, &o, true).unwrap();
+        let fresh = plan_reorder(&shape, &o, true).unwrap();
+        assert_eq!(cached.axes, fresh.axes);
+        assert_eq!(cached.grid, fresh.grid);
+        assert_eq!(cached.movement, fresh.movement);
+        assert_eq!(cached.host_geometry(), fresh.host_geometry());
+    }
+
+    #[test]
+    fn errors_are_not_cached() {
+        let cache = PlanCache::with_capacity(16);
+        let shape = Shape::new(&[4, 4]);
+        assert!(cache.plan(&shape, &order(&[0, 1, 2]), false).is_err());
+        assert_eq!(cache.len(), 0);
+    }
+
+    #[test]
+    fn capacity_bound_holds() {
+        let cache = PlanCache::with_capacity(4);
+        for d in 1..=20usize {
+            cache.plan(&Shape::new(&[d, d + 1]), &order(&[1, 0]), false).unwrap();
+            assert!(cache.len() <= 4);
+        }
+    }
+
+    #[test]
+    fn global_cache_serves_hostexec() {
+        use crate::tensor::NdArray;
+        let x = NdArray::iota(Shape::new(&[40, 41, 42]));
+        let o = order(&[2, 1, 0]);
+        let before = global().hits() + global().misses();
+        crate::hostexec::permute_fast(&x, &o).unwrap();
+        crate::hostexec::permute_fast(&x, &o).unwrap();
+        let after = global().hits() + global().misses();
+        assert!(after >= before + 2, "both permutes should consult the cache");
+    }
+}

@@ -1,0 +1,168 @@
+//! Algebraic rewrites over a pipeline's stage list.
+//!
+//! Three rule families run to a fixpoint (each assumes the chain is
+//! well-formed — the rewritten chain is bit-identical on every input
+//! the original accepts):
+//!
+//! 1. **Identity elision** — `Copy` and identity `Reorder` stages drop.
+//! 2. **Pair fusion** — adjacent stages fuse through
+//!    [`Op::compose_with`]: `Reorder∘Reorder` composes into one order
+//!    (inverse pairs thereby cancel via rule 1),
+//!    `Deinterlace∘Interlace` / `Interlace∘Deinterlace` pairs cancel,
+//!    `Copy` is neutral.
+//! 3. **Subarray pushdown** — `[Reorder, Subarray]` becomes
+//!    `[Subarray', Reorder]` with the window mapped through the
+//!    permutation, so cropping happens before data movement (strictly
+//!    less traffic; the §III.B plane walk then moves only the window).
+//!
+//! Termination: rules 1–2 strictly shrink the stage list; rule 3
+//! strictly moves a `Subarray` left past a `Reorder` and nothing moves
+//! one right, so the fixpoint loop is finite.
+
+use crate::ops::Op;
+
+/// Rewrite `stages` to a shorter/cheaper equivalent chain. The result
+/// may be empty — an identity pipeline.
+pub fn rewrite(stages: &[Op]) -> Vec<Op> {
+    let mut v: Vec<Op> = stages.to_vec();
+    loop {
+        let mut changed = false;
+
+        // Rule 1: identity elision.
+        let before = v.len();
+        v.retain(|op| !op.is_identity());
+        changed |= v.len() != before;
+
+        // Rule 2: adjacent pair fusion.
+        let mut i = 0;
+        while i + 1 < v.len() {
+            if let Some(fused) = v[i].compose_with(&v[i + 1]) {
+                v.splice(i..i + 2, std::iter::once(fused));
+                changed = true;
+                // The fused op may combine with its left neighbour.
+                i = i.saturating_sub(1);
+            } else {
+                i += 1;
+            }
+        }
+
+        // Rule 3: subarray pushdown through reorders.
+        let mut i = 0;
+        while i + 1 < v.len() {
+            let mut swapped = None;
+            if let (Op::Reorder { order }, Op::Subarray { base, shape }) = (&v[i], &v[i + 1]) {
+                if order.rank() == base.len() {
+                    // Output axis j of the permute takes input axis
+                    // axes[j]; map the crop window into input coords.
+                    let axes = order.to_axes();
+                    let mut b = vec![0usize; base.len()];
+                    let mut s = vec![0usize; shape.len()];
+                    for (j, &a) in axes.iter().enumerate() {
+                        b[a] = base[j];
+                        s[a] = shape[j];
+                    }
+                    swapped = Some((
+                        Op::Subarray { base: b, shape: s },
+                        Op::Reorder { order: order.clone() },
+                    ));
+                }
+            }
+            if let Some((first, second)) = swapped {
+                v[i] = first;
+                v[i + 1] = second;
+                changed = true;
+            }
+            i += 1;
+        }
+
+        if !changed {
+            return v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::StencilSpec;
+    use crate::tensor::{NdArray, Order, Shape};
+    use crate::util::rng::Rng;
+
+    fn reorder(v: &[usize]) -> Op {
+        Op::Reorder { order: Order::new(v).unwrap() }
+    }
+
+    #[test]
+    fn copies_and_identity_reorders_elide() {
+        let out = rewrite(&[Op::Copy, reorder(&[0, 1, 2]), Op::Copy]);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn reorders_compose_and_inverse_pairs_cancel() {
+        let a = Order::new(&[2, 0, 1]).unwrap();
+        let out = rewrite(&[
+            Op::Reorder { order: a.clone() },
+            Op::Reorder { order: a.inverse() },
+        ]);
+        assert!(out.is_empty(), "inverse pair should cancel, got {out:?}");
+
+        let b = Order::new(&[1, 0, 2]).unwrap();
+        let out = rewrite(&[Op::Reorder { order: a.clone() }, Op::Reorder { order: b.clone() }]);
+        assert_eq!(out, vec![Op::Reorder { order: a.compose(&b) }]);
+    }
+
+    #[test]
+    fn interlace_pairs_cancel() {
+        assert!(rewrite(&[Op::Deinterlace { n: 4 }, Op::Interlace { n: 4 }]).is_empty());
+        assert!(rewrite(&[Op::Interlace { n: 2 }, Op::Deinterlace { n: 2 }]).is_empty());
+        // Mismatched n does not cancel.
+        let kept = rewrite(&[Op::Deinterlace { n: 4 }, Op::Interlace { n: 3 }]);
+        assert_eq!(kept.len(), 2);
+    }
+
+    #[test]
+    fn subarray_pushes_down_through_reorder() {
+        let order = Order::new(&[1, 0, 2]).unwrap();
+        let crop = Op::Subarray { base: vec![1, 2, 3], shape: vec![4, 5, 6] };
+        let out = rewrite(&[Op::Reorder { order: order.clone() }, crop.clone()]);
+        assert_eq!(out.len(), 2);
+        assert!(matches!(out[0], Op::Subarray { .. }));
+        assert_eq!(out[1], Op::Reorder { order: order.clone() });
+
+        // Semantics preserved on a concrete tensor.
+        let mut rng = Rng::new(0x5BAA);
+        let x = NdArray::random(Shape::new(&[8, 9, 10]), &mut rng);
+        let mut want = Op::Reorder { order }.reference(&[&x]).unwrap();
+        want = crop.reference(&[&want[0]]).unwrap();
+        let mut got = out[0].reference(&[&x]).unwrap();
+        got = out[1].reference(&[&got[0]]).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn pushdown_then_compose_chains() {
+        // [R1, S, R2] -> [S', R1, R2] -> [S', R1∘R2].
+        let r1 = Order::new(&[1, 0, 2]).unwrap();
+        let r2 = Order::new(&[2, 0, 1]).unwrap();
+        let out = rewrite(&[
+            Op::Reorder { order: r1.clone() },
+            Op::Subarray { base: vec![0, 1, 2], shape: vec![3, 3, 3] },
+            Op::Reorder { order: r2.clone() },
+        ]);
+        assert_eq!(out.len(), 2);
+        assert!(matches!(out[0], Op::Subarray { .. }));
+        assert_eq!(out[1], Op::Reorder { order: r1.compose(&r2) });
+    }
+
+    #[test]
+    fn stencils_and_opaque_ops_are_untouched() {
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let stages = vec![
+            Op::Stencil { spec: spec.clone() },
+            Op::Stencil { spec },
+            Op::ReadRange { base: 0, count: 4 },
+        ];
+        assert_eq!(rewrite(&stages), stages);
+    }
+}

@@ -73,6 +73,45 @@ fn hostexec_service_interlace_and_stencil() {
 }
 
 #[test]
+fn pipeline_requests_execute_whole_chains() {
+    for backend in [Backend::HostExec, Backend::Naive, Backend::Auto] {
+        let service = host_service(backend);
+        // A widening/narrowing chain as one request: the rewrite pass
+        // cancels the deinterlace/interlace pair, so the service
+        // answers with the input bits whichever backend serves it.
+        let x = random_f32(&[3 * 4096], 0xABC);
+        let out = service
+            .call(
+                "pipe:deinterlace_n3+interlace_n3",
+                vec![Tensor::F32(x.clone())],
+            )
+            .expect("pipeline call ok");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].as_f32().unwrap(), &x, "{backend:?}");
+
+        // Two stacked smoothing passes on a 2D field, fused on the
+        // host path, vs the sequential reference composition.
+        let img = random_f32(&[96, 96], 0xDEF);
+        let out = service
+            .call("pipe:smooth3x3_96+smooth3x3_96", vec![Tensor::F32(img.clone())])
+            .expect("stencil pipeline ok");
+        let smooth = Op::Stencil {
+            spec: StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] },
+        };
+        let mut want = smooth.reference(&[&img]).unwrap();
+        want = smooth.reference(&[&want[0]]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &want[0], "{backend:?}");
+
+        // Pipelines with unknown segments fail cleanly.
+        let err = service
+            .call("pipe:copy_4k+nope", vec![Tensor::F32(random_f32(&[16], 1))])
+            .expect_err("must fail");
+        assert!(err.contains("unknown pipeline"), "got: {err}");
+        service.shutdown();
+    }
+}
+
+#[test]
 fn unknown_artifact_fails_cleanly_and_service_survives() {
     let service = host_service(Backend::HostExec);
     let err = service

@@ -1,0 +1,206 @@
+//! Property tests for the pipeline subsystem: the rewritten + fused
+//! execution must be **bit-identical** to the naive unfused chain for
+//! random op chains (rank 1–5, dims 1–33, length 1–6), and fused
+//! stencil chains must move at most half the full-size-buffer bytes of
+//! the unfused chain. Runs on a bare checkout (no artifacts, no PJRT).
+
+use gdrk::ops::{Op, StencilSpec};
+use gdrk::pipeline::Pipeline;
+use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::util::rng::Rng;
+
+/// The unfused naive chain, written independently of the pipeline
+/// driver: apply each op with `Op::reference`, consuming all lanes when
+/// the arity matches and mapping lane-wise otherwise.
+fn naive_chain(stages: &[Op], inputs: &[&NdArray<f32>]) -> Vec<NdArray<f32>> {
+    let mut cur: Vec<NdArray<f32>> = inputs.iter().map(|x| (*x).clone()).collect();
+    for op in stages {
+        let refs: Vec<&NdArray<f32>> = cur.iter().collect();
+        cur = if op.arity() == refs.len() {
+            op.reference(&refs).unwrap()
+        } else {
+            refs.iter()
+                .map(|lane| op.reference(&[*lane]).unwrap().pop().unwrap())
+                .collect()
+        };
+    }
+    cur
+}
+
+fn random_spec(rng: &mut Rng) -> StencilSpec {
+    match rng.gen_range(3) {
+        0 => StencilSpec::FdLaplacian {
+            order: rng.gen_between(1, 4),
+            scale: rng.gen_f64(),
+        },
+        1 => StencilSpec::Conv {
+            radius: 1,
+            mask: (0..9).map(|_| rng.gen_f64() - 0.5).collect(),
+        },
+        _ => {
+            let radius = rng.gen_between(1, 4);
+            let r = radius as i64;
+            let taps: Vec<(i64, i64, f64)> = (0..rng.gen_between(1, 6))
+                .map(|_| {
+                    (
+                        rng.gen_range(2 * radius + 1) as i64 - r,
+                        rng.gen_range(2 * radius + 1) as i64 - r,
+                        rng.gen_f64() * 2.0 - 1.0,
+                    )
+                })
+                .collect();
+            StencilSpec::Taps { radius, taps }
+        }
+    }
+}
+
+/// Build a random chain that is valid for `dims0`, tracking the lane
+/// shape and width the way the pipeline's execution rules do.
+fn random_chain(rng: &mut Rng, dims0: &[usize], len: usize) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(len);
+    let mut dims = dims0.to_vec();
+    let mut width = 1usize;
+    for _ in 0..len {
+        loop {
+            match rng.gen_range(7) {
+                0 => {
+                    ops.push(Op::Copy);
+                    break;
+                }
+                1 => {
+                    let order = Order::new(&rng.permutation(dims.len())).unwrap();
+                    dims = Shape::new(&dims).permuted(&order.to_axes()).dims().to_vec();
+                    ops.push(Op::Reorder { order });
+                    break;
+                }
+                2 => {
+                    let base: Vec<usize> = dims.iter().map(|&d| rng.gen_range(d)).collect();
+                    let shape: Vec<usize> = dims
+                        .iter()
+                        .zip(&base)
+                        .map(|(&d, &b)| rng.gen_range(d - b) + 1)
+                        .collect();
+                    dims = shape.clone();
+                    ops.push(Op::Subarray { base, shape });
+                    break;
+                }
+                3 | 4 if dims.len() == 2 => {
+                    // Bias toward stencils on rank-2 lanes so fusable
+                    // runs of >= 2 appear often.
+                    ops.push(Op::Stencil { spec: random_spec(rng) });
+                    break;
+                }
+                5 if width == 1 && dims.len() == 1 => {
+                    let n = (2..=4usize).find(|n| dims[0] % n == 0 && dims[0] >= *n);
+                    match n {
+                        Some(n) => {
+                            dims = vec![dims[0] / n];
+                            width = n;
+                            ops.push(Op::Deinterlace { n });
+                            break;
+                        }
+                        None => continue,
+                    }
+                }
+                6 if width >= 2 => {
+                    ops.push(Op::Interlace { n: width });
+                    dims = vec![width * dims[0]];
+                    width = 1;
+                    break;
+                }
+                _ => continue,
+            }
+        }
+    }
+    ops
+}
+
+#[test]
+fn random_chains_rewritten_and_fused_bit_identical() {
+    let mut rng = Rng::new(0xB1BE11E);
+    for case in 0..150 {
+        let rank = rng.gen_between(1, 6);
+        let dims: Vec<usize> = (0..rank).map(|_| rng.gen_between(1, 34)).collect();
+        let len = rng.gen_between(1, 7);
+        let stages = random_chain(&mut rng, &dims, len);
+        let x = NdArray::random(Shape::new(&dims), &mut rng);
+
+        let want = naive_chain(&stages, &[&x]);
+        let pipe = Pipeline::new(stages.clone()).unwrap();
+        let got_ref = pipe.reference(&[&x]).unwrap();
+        assert_eq!(got_ref, want, "case {case}: reference diverged, stages {stages:?}");
+        let (got, stats) = pipe.execute_with_stats(&[&x]).unwrap();
+        assert_eq!(
+            got, want,
+            "case {case}: rewritten+fused diverged, dims {dims:?} stages {stages:?}"
+        );
+        if stats.fused_chains > 0 {
+            assert!(
+                2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes,
+                "case {case}: fused chain moved {} of {} unfused bytes",
+                stats.fused_traffic_bytes,
+                stats.unfused_chain_traffic_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn rank2_stencil_heavy_chains_fuse_and_match() {
+    // Dedicated sweep guaranteeing long fusable stencil runs.
+    let mut rng = Rng::new(0xF05E7);
+    for case in 0..60 {
+        let h = rng.gen_between(1, 40);
+        let w = rng.gen_between(1, 40);
+        let depth = rng.gen_between(2, 6);
+        let stages: Vec<Op> = (0..depth)
+            .map(|_| Op::Stencil { spec: random_spec(&mut rng) })
+            .collect();
+        let x = NdArray::random(Shape::new(&[h, w]), &mut rng);
+        let want = naive_chain(&stages, &[&x]);
+        let pipe = Pipeline::new(stages).unwrap();
+        let (got, stats) = pipe.execute_with_stats(&[&x]).unwrap();
+        assert_eq!(got, want, "case {case}: {h}x{w} depth {depth}");
+        assert_eq!(stats.fused_chains, 1, "case {case}");
+        assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
+    }
+}
+
+#[test]
+fn rewrites_never_change_results_on_curated_chains() {
+    let mut rng = Rng::new(0xCADE);
+    let x3 = NdArray::random(Shape::new(&[6, 8, 10]), &mut rng);
+    let o = Order::new(&[2, 0, 1]).unwrap();
+    let chains: Vec<Vec<Op>> = vec![
+        // Inverse permute pair + copy: rewrites to the identity.
+        vec![
+            Op::Reorder { order: o.clone() },
+            Op::Copy,
+            Op::Reorder { order: o.inverse() },
+        ],
+        // Subarray pushdown through a permute (permuted dims [8, 10, 6]).
+        vec![
+            Op::Reorder { order: o.clone() },
+            Op::Subarray { base: vec![1, 2, 3], shape: vec![4, 3, 2] },
+        ],
+        // Permute composition chain.
+        vec![
+            Op::Reorder { order: Order::new(&[1, 0, 2]).unwrap() },
+            Op::Reorder { order: Order::new(&[2, 1, 0]).unwrap() },
+            Op::Reorder { order: Order::new(&[0, 2, 1]).unwrap() },
+        ],
+    ];
+    for stages in chains {
+        let want = naive_chain(&stages, &[&x3]);
+        let pipe = Pipeline::new(stages.clone()).unwrap();
+        let got = pipe.execute(&[&x3]).unwrap();
+        assert_eq!(got, want, "stages {stages:?}");
+    }
+
+    // Deinterlace/interlace cancellation on a flat input.
+    let flat = NdArray::random(Shape::new(&[3 * 1000]), &mut rng);
+    let stages = vec![Op::Deinterlace { n: 3 }, Op::Interlace { n: 3 }];
+    let want = naive_chain(&stages, &[&flat]);
+    let pipe = Pipeline::new(stages).unwrap();
+    assert_eq!(pipe.execute(&[&flat]).unwrap(), want);
+}
