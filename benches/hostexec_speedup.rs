@@ -4,30 +4,34 @@
 //! `BENCH_hostexec.json` so the perf trajectory is tracked across PRs.
 //!
 //! Bandwidth accounting matches the paper: useful bytes = read + write
-//! of the payload, GB/s at the p50 wall clock.
+//! of the payload, GB/s at the p50 wall clock. The dtype column is the
+//! paper's width-independence claim made measurable: the same permute
+//! at element widths 2 (bf16), 4 (f32) and 8 (f64) bytes should land
+//! at comparable GB/s, because the erased core moves lanes, not types.
 
 use gdrk::hostexec::pool;
 use gdrk::ops::{Op, StencilSpec};
 use gdrk::report::{gbs, BenchRecord, Table};
-use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::tensor::{DType, Order, Shape, TensorBuf};
 use gdrk::util::rng::Rng;
 use gdrk::util::timing::bench;
 
 struct Case {
     record: BenchRecord,
     op: Op,
-    inputs: Vec<NdArray<f32>>,
+    inputs: Vec<TensorBuf>,
     bytes: usize,
 }
 
-fn permute_case(shape: &[usize], order: &[usize], rng: &mut Rng) -> Case {
-    let x = NdArray::random(Shape::new(shape), rng);
-    let bytes = 2 * 4 * x.len();
+fn permute_case(shape: &[usize], order: &[usize], dtype: DType, rng: &mut Rng) -> Case {
+    let x = TensorBuf::random(dtype, Shape::new(shape), rng);
+    let bytes = 2 * dtype.size_bytes() * x.len();
     Case {
         record: BenchRecord {
             op: "permute3d".into(),
             shape: format!("{}", x.shape()),
             order: Order::new(order).unwrap().to_string(),
+            dtype: dtype.name().into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
         },
@@ -44,18 +48,27 @@ fn main() {
     let mut cases: Vec<Case> = Vec::new();
 
     // The paper's Table-1 shape on this host (row-major [64, 256, 512],
-    // the hotpath bench's permute3d workload).
+    // the hotpath bench's permute3d workload). f32 first — the
+    // perf-shape anchor reads this record.
     for order in [[0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]] {
-        cases.push(permute_case(&[64, 256, 512], &order, &mut rng));
+        cases.push(permute_case(&[64, 256, 512], &order, DType::F32, &mut rng));
+    }
+
+    // Width-independence sweep: the same two movement classes (staged
+    // transpose [1 0 2], run moves [0 2 1]) at element widths 2 and 8.
+    for dtype in [DType::Bf16, DType::F64] {
+        cases.push(permute_case(&[64, 256, 512], &[1, 0, 2], dtype, &mut rng));
+        cases.push(permute_case(&[64, 256, 512], &[0, 2, 1], dtype, &mut rng));
     }
 
     // Streaming copy.
-    let x = NdArray::random(Shape::new(&[1 << 22]), &mut rng);
+    let x = TensorBuf::random(DType::F32, Shape::new(&[1 << 22]), &mut rng);
     cases.push(Case {
         record: BenchRecord {
             op: "copy".into(),
             shape: format!("{}", x.shape()),
             order: "-".into(),
+            dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
         },
@@ -65,14 +78,15 @@ fn main() {
     });
 
     // Interlace / deinterlace, Table-3's n = 4.
-    let lanes: Vec<NdArray<f32>> = (0..4)
-        .map(|_| NdArray::random(Shape::new(&[1 << 18]), &mut rng))
+    let lanes: Vec<TensorBuf> = (0..4)
+        .map(|_| TensorBuf::random(DType::F32, Shape::new(&[1 << 18]), &mut rng))
         .collect();
     cases.push(Case {
         record: BenchRecord {
             op: "interlace".into(),
             shape: format!("4 x {}", lanes[0].shape()),
             order: "n=4".into(),
+            dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
         },
@@ -80,12 +94,13 @@ fn main() {
         bytes: 2 * 4 * 4 * (1 << 18),
         inputs: lanes,
     });
-    let packed = NdArray::random(Shape::new(&[1 << 20]), &mut rng);
+    let packed = TensorBuf::random(DType::F32, Shape::new(&[1 << 20]), &mut rng);
     cases.push(Case {
         record: BenchRecord {
             op: "deinterlace".into(),
             shape: format!("{}", packed.shape()),
             order: "n=4".into(),
+            dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
         },
@@ -95,12 +110,13 @@ fn main() {
     });
 
     // Generic N->M reorder (Table 2's collapse) and subarray.
-    let x = NdArray::random(Shape::new(&[16, 128, 16, 128]), &mut rng);
+    let x = TensorBuf::random(DType::F32, Shape::new(&[16, 128, 16, 128]), &mut rng);
     cases.push(Case {
         record: BenchRecord {
             op: "reorder_collapse".into(),
             shape: format!("{}", x.shape()),
             order: "[3 0 2 1] -> rank 2".into(),
+            dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
         },
@@ -111,12 +127,13 @@ fn main() {
         bytes: 2 * 4 * x.len(),
         inputs: vec![x],
     });
-    let x = NdArray::random(Shape::new(&[2048, 2048]), &mut rng);
+    let x = TensorBuf::random(DType::F32, Shape::new(&[2048, 2048]), &mut rng);
     cases.push(Case {
         record: BenchRecord {
             op: "subarray".into(),
             shape: format!("{}", x.shape()),
             order: "1024^2 @ (256, 512)".into(),
+            dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
         },
@@ -129,12 +146,13 @@ fn main() {
     });
 
     // Generic 2D stencil (Fig. 2's FD Laplacian).
-    let img = NdArray::random(Shape::new(&[2048, 2048]), &mut rng);
+    let img = TensorBuf::random(DType::F32, Shape::new(&[2048, 2048]), &mut rng);
     cases.push(Case {
         record: BenchRecord {
             op: "stencil_fd1".into(),
             shape: format!("{}", img.shape()),
             order: "order 1".into(),
+            dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
         },
@@ -152,22 +170,22 @@ fn main() {
     );
     let mut t = Table::new(
         "naive vs hostexec host throughput (GB/s useful, p50)",
-        &["op", "shape", "order", "naive", "hostexec", "speedup"],
+        &["op", "shape", "order", "dtype", "naive", "hostexec", "speedup"],
     );
     let mut records: Vec<BenchRecord> = Vec::new();
     for case in &mut cases {
-        let inputs: Vec<&NdArray<f32>> = case.inputs.iter().collect();
+        let inputs: Vec<&TensorBuf> = case.inputs.iter().collect();
         // Correctness gate before timing: bit-identical or the numbers
         // are meaningless.
-        let want = case.op.reference(&inputs).expect("reference");
-        let got = case.op.execute_fast(&inputs).expect("hostexec");
+        let want = case.op.reference_buf(&inputs).expect("reference");
+        let got = case.op.execute_fast_buf(&inputs).expect("hostexec");
         assert_eq!(got, want, "{:?} diverged from the golden model", case.op);
 
         let naive = bench(1, 5, || {
-            case.op.reference(&inputs).expect("reference");
+            case.op.reference_buf(&inputs).expect("reference");
         });
         let fast = bench(1, 5, || {
-            case.op.execute_fast(&inputs).expect("hostexec");
+            case.op.execute_fast_buf(&inputs).expect("hostexec");
         });
         case.record.naive_gbs = naive.bandwidth_gbs(case.bytes);
         case.record.hostexec_gbs = fast.bandwidth_gbs(case.bytes);
@@ -175,6 +193,7 @@ fn main() {
             case.record.op.clone(),
             case.record.shape.clone(),
             case.record.order.clone(),
+            case.record.dtype.clone(),
             gbs(case.record.naive_gbs),
             gbs(case.record.hostexec_gbs),
             format!("{:.2}x", case.record.speedup()),
@@ -190,8 +209,8 @@ fn main() {
     // The acceptance thresholds this backend was built against.
     let p102 = records
         .iter()
-        .find(|r| r.op == "permute3d" && r.order == "[1 0 2]")
-        .expect("permute [1 0 2] record");
+        .find(|r| r.op == "permute3d" && r.order == "[1 0 2]" && r.dtype == "f32")
+        .expect("permute [1 0 2] f32 record");
     let inter = records
         .iter()
         .find(|r| r.op == "interlace")
@@ -201,4 +220,28 @@ fn main() {
         p102.speedup(),
         inter.speedup()
     );
+
+    // Width-independence check: hostexec GB/s at widths 2/4/8 for the
+    // staged transpose should be the same order of magnitude (the
+    // erased core must not fall off a cliff on any width).
+    let widths: Vec<&BenchRecord> = records
+        .iter()
+        .filter(|r| r.op == "permute3d" && r.order == "[1 0 2]")
+        .collect();
+    if widths.len() == 3 {
+        let max = widths.iter().map(|r| r.hostexec_gbs).fold(0.0, f64::max);
+        let min = widths
+            .iter()
+            .map(|r| r.hostexec_gbs)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "width independence (permute [1 0 2], hostexec GB/s): \
+             min {min:.2} / max {max:.2} across dtypes {}",
+            widths
+                .iter()
+                .map(|r| r.dtype.as_str())
+                .collect::<Vec<_>>()
+                .join("/")
+        );
+    }
 }

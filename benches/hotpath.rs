@@ -72,6 +72,7 @@ fn hostexec_section(rng: &mut Rng) {
             op: (*name).into(),
             shape: format!("{}", inputs[0].shape()),
             order: (*order).into(),
+            dtype: "f32".into(),
             naive_gbs: naive.bandwidth_gbs(*bytes),
             hostexec_gbs: fast.bandwidth_gbs(*bytes),
         };

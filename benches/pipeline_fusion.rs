@@ -106,7 +106,7 @@ fn main() {
         println!(
             "stencil chain traffic: fused {} B vs unfused {} B ({} hot rows/worker)",
             stats.fused_traffic_bytes(),
-            unfused_chain_traffic_bytes(2048, 2048, chain.len()),
+            unfused_chain_traffic_bytes(2048, 2048, chain.len(), 4),
             stats.hot_rows_per_worker
         );
     }
@@ -136,7 +136,7 @@ fn main() {
         fused: bytes_per_step / t_fused.p50 / 1e9,
     });
 
-    let chain_bytes = unfused_chain_traffic_bytes(2048, 2048, chain.len()) as f64;
+    let chain_bytes = unfused_chain_traffic_bytes(2048, 2048, chain.len(), 4) as f64;
     let op_chain: Vec<Op> = chain
         .iter()
         .map(|s| Op::Stencil { spec: s.clone() })

@@ -1,12 +1,15 @@
-//! Shape-keyed batcher: groups queued requests by artifact so the device
-//! worker executes one compiled executable repeatedly (warm instruction
-//! and data caches, single cache lookup) before switching. Composite
-//! `pipe:<a>+<b>+...` requests key on the full composite string — the
-//! pipeline's signature — so identical chains batch together and reuse
-//! the same rewritten plan and cached `planner::Plan`s back to back.
+//! Shape-keyed batcher: groups queued requests by
+//! [`Request::batch_key`] — artifact **plus input dtypes** — so the
+//! device worker executes one compiled executable (one dtype
+//! specialization) repeatedly before switching: warm instruction and
+//! data caches, single cache lookup, and no dtype re-dispatch inside a
+//! batch. Composite `pipe:<a>+<b>+...` requests key on the full
+//! composite string — the pipeline's signature — so identical chains
+//! batch together and reuse the same rewritten plan and cached
+//! `planner::Plan`s back to back.
 //!
-//! Policy: FIFO *across* artifact groups by the arrival time of each
-//! group's oldest request (no starvation), FIFO *within* a group, at most
+//! Policy: FIFO *across* key groups by the arrival time of each group's
+//! oldest request (no starvation), FIFO *within* a group, at most
 //! `max_batch` requests per dispatched batch.
 
 use super::request::Request;
@@ -32,7 +35,7 @@ impl Batcher {
     pub fn push(&mut self, req: Request) {
         self.len += 1;
         self.queues
-            .entry(req.artifact.clone())
+            .entry(req.batch_key())
             .or_default()
             .push_back(req);
     }
@@ -45,8 +48,10 @@ impl Batcher {
         self.len == 0
     }
 
-    /// Pop the next batch: the artifact group whose head request is
-    /// oldest, up to `max_batch` requests.
+    /// Pop the next batch: the key group whose head request is oldest,
+    /// up to `max_batch` requests. The returned string is the batch
+    /// *key* ([`Request::batch_key`]); each request still carries its
+    /// artifact name for execution.
     pub fn next_batch(&mut self) -> Option<(String, Vec<Request>)> {
         let key = self
             .queues
@@ -99,6 +104,36 @@ mod tests {
         assert_eq!(batch1.len(), 2);
         let (k2, _) = b.next_batch().unwrap();
         assert_eq!(k2, "b");
+    }
+
+    #[test]
+    fn dtype_splits_batches_for_one_artifact() {
+        use crate::runtime::Tensor;
+        use crate::tensor::{NdArray, Shape};
+        let mut b = Batcher::new(10);
+        b.push(Request::new(
+            1,
+            "copy_4k",
+            vec![Tensor::F32(NdArray::iota(Shape::new(&[4])))],
+        ));
+        b.push(Request::new(
+            2,
+            "copy_4k",
+            vec![Tensor::I32(NdArray::from_vec(Shape::new(&[4]), vec![0, 1, 2, 3]))],
+        ));
+        b.push(Request::new(
+            3,
+            "copy_4k",
+            vec![Tensor::F32(NdArray::iota(Shape::new(&[4])))],
+        ));
+        // f32 requests batch together; the i32 one is its own group.
+        let (k1, batch1) = b.next_batch().unwrap();
+        assert_eq!(k1, "copy_4k@f32");
+        assert_eq!(batch1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        let (k2, batch2) = b.next_batch().unwrap();
+        assert_eq!(k2, "copy_4k@i32");
+        assert_eq!(batch2[0].id, 2);
+        assert!(b.is_empty());
     }
 
     #[test]

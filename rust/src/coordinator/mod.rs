@@ -2,11 +2,13 @@
 //!
 //! Topology (vLLM-router style, scaled to one device): callers submit
 //! [`request::Request`]s over an mpsc channel; a *batcher* groups queued
-//! requests by artifact (same compiled executable / resolved op) so the
-//! device worker runs them back-to-back; a single **device-worker
-//! thread** owns the executor (the PJRT client is not `Send`) and
-//! executes batches; responses come back on per-request channels.
-//! Metrics count everything.
+//! requests by artifact **and input dtypes** (same compiled executable /
+//! resolved op / monomorphized dtype path) so the device worker runs
+//! them back-to-back; a single **device-worker thread** owns the
+//! executor (the PJRT client is not `Send`) and executes batches;
+//! responses come back on per-request channels. Metrics count
+//! everything. Dtype is resolved from the request tensors and — when an
+//! artifact manifest is present — validated against it, never assumed.
 //!
 //! The executor behind the worker is selected by
 //! [`service::Backend`]: native PJRT over the AOT artifacts, the tiled

@@ -25,6 +25,26 @@ impl Request {
             enqueued: Instant::now(),
         }
     }
+
+    /// The batcher's grouping key: artifact **plus input dtypes**, so an
+    /// f32 and an i32 request for the same artifact never share a batch
+    /// (each batch stays one executable specialization / one
+    /// monomorphized host path, keeping caches warm per dtype).
+    pub fn batch_key(&self) -> String {
+        if self.inputs.is_empty() {
+            return self.artifact.clone();
+        }
+        let mut key = String::with_capacity(self.artifact.len() + 6 * self.inputs.len());
+        key.push_str(&self.artifact);
+        key.push('@');
+        for (i, t) in self.inputs.iter().enumerate() {
+            if i > 0 {
+                key.push(',');
+            }
+            key.push_str(t.dtype().name());
+        }
+        key
+    }
 }
 
 /// The worker's answer.
@@ -56,6 +76,30 @@ mod tests {
         assert_eq!(r.id, 7);
         assert_eq!(r.artifact, "copy_4m");
         assert_eq!(r.inputs.len(), 1);
+    }
+
+    #[test]
+    fn batch_key_includes_dtypes() {
+        let f = Request::new(1, "copy_4m", vec![Tensor::F32(NdArray::iota(Shape::new(&[4])))]);
+        assert_eq!(f.batch_key(), "copy_4m@f32");
+        let i = Request::new(
+            2,
+            "copy_4m",
+            vec![Tensor::I32(NdArray::from_vec(Shape::new(&[2]), vec![1, 2]))],
+        );
+        assert_eq!(i.batch_key(), "copy_4m@i32");
+        assert_ne!(f.batch_key(), i.batch_key());
+        let multi = Request::new(
+            3,
+            "interlace_n2",
+            vec![
+                Tensor::F32(NdArray::iota(Shape::new(&[4]))),
+                Tensor::F32(NdArray::iota(Shape::new(&[4]))),
+            ],
+        );
+        assert_eq!(multi.batch_key(), "interlace_n2@f32,f32");
+        let none = Request::new(4, "copy_4m", vec![]);
+        assert_eq!(none.batch_key(), "copy_4m");
     }
 
     #[test]

@@ -20,8 +20,9 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
 use crate::ops::ExecBackend;
+use crate::runtime::artifact::{Manifest, ManifestError};
 use crate::runtime::{Runtime, Tensor};
-use crate::tensor::NdArray;
+use crate::tensor::TensorBuf;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -165,15 +166,41 @@ impl Drop for Service {
 /// [`Backend`]; `Failed` answers every request with the init error).
 enum Executor {
     Pjrt(Runtime),
-    Host(ExecBackend),
+    Host {
+        mode: ExecBackend,
+        /// When the artifacts directory carries a manifest, host-served
+        /// requests validate against it (shape **and dtype**) exactly
+        /// like the PJRT path — dtype resolves from the manifest
+        /// instead of being discarded.
+        manifest: Option<Manifest>,
+    },
     Failed(String),
 }
 
 impl Executor {
+    fn host(mode: ExecBackend, artifacts_dir: &std::path::Path) -> Executor {
+        let manifest = match Manifest::load(artifacts_dir) {
+            Ok(m) => Some(m),
+            // No manifest at all is the normal bare-checkout case.
+            Err(ManifestError::Io { ref source, .. })
+                if source.kind() == std::io::ErrorKind::NotFound =>
+            {
+                None
+            }
+            // A present-but-unusable manifest (unreadable, unknown
+            // dtype, bad format) is surfaced, not silently ignored.
+            Err(e) => {
+                eprintln!("gdrk: artifact manifest unusable ({e}); serving without validation");
+                None
+            }
+        };
+        Executor::Host { mode, manifest }
+    }
+
     fn resolve(config: &ServiceConfig) -> Executor {
         match config.backend {
-            Backend::Naive => Executor::Host(ExecBackend::Naive),
-            Backend::HostExec => Executor::Host(ExecBackend::Host),
+            Backend::Naive => Executor::host(ExecBackend::Naive, &config.artifacts_dir),
+            Backend::HostExec => Executor::host(ExecBackend::Host, &config.artifacts_dir),
             Backend::Pjrt => {
                 if !Runtime::pjrt_available() {
                     return Executor::Failed(
@@ -195,7 +222,7 @@ impl Executor {
                     "gdrk: PJRT unavailable (feature or artifacts missing); \
                      serving on the hostexec backend"
                 );
-                Executor::Host(ExecBackend::Host)
+                Executor::host(ExecBackend::Host, &config.artifacts_dir)
             }
         }
     }
@@ -209,7 +236,7 @@ impl Executor {
                     }
                 }
             }
-            Executor::Host(_) => {
+            Executor::Host { .. } => {
                 for name in names {
                     let known = if name.starts_with("pipe:") {
                         crate::hostexec::pipeline_for_artifact(name).is_some()
@@ -233,54 +260,51 @@ impl Executor {
                     // until device-side fusion lands (ROADMAP follow-up),
                     // so the same composite request works regardless of
                     // which executor Auto resolved to.
-                    return host_execute(ExecBackend::Host, artifact, inputs);
+                    return host_execute(ExecBackend::Host, artifact, inputs, None);
                 }
                 rt.execute(artifact, inputs).map_err(|e| e.to_string())
             }
-            Executor::Host(mode) => host_execute(*mode, artifact, inputs),
+            Executor::Host { mode, manifest } => {
+                host_execute(*mode, artifact, inputs, manifest.as_ref())
+            }
             Executor::Failed(msg) => Err(msg.clone()),
         }
     }
 }
 
-/// Resolve an artifact name to op IR and run it on the host backend.
-/// Composite `pipe:<a>+<b>+...` names resolve to a whole [`Pipeline`]
-/// (rewritten + fused on the `HostExec` backend) — one request, one
-/// response, no full-size intermediates between the chained stages.
+/// Resolve an artifact name to op IR and run it on the host backend at
+/// the dtype the request carries. Composite `pipe:<a>+<b>+...` names
+/// resolve to a whole [`Pipeline`] (rewritten + fused on the `HostExec`
+/// backend) — one request, one response, no full-size intermediates
+/// between the chained stages; mixed-dtype chains are rejected with the
+/// pipeline's typed `MixedDtype` error. When a manifest is present the
+/// inputs are validated against its shape/dtype specs first, so the
+/// host path honours the same contract the PJRT path enforces.
 ///
 /// [`Pipeline`]: crate::pipeline::Pipeline
 fn host_execute(
     mode: ExecBackend,
     artifact: &str,
     inputs: &[Tensor],
+    manifest: Option<&Manifest>,
 ) -> Result<Vec<Tensor>, String> {
+    if let Some(m) = manifest {
+        if let Some(entry) = m.get(artifact) {
+            crate::runtime::validate_inputs_against(entry, artifact, inputs)
+                .map_err(|e| e.to_string())?;
+        }
+    }
+    let bufs: Vec<&TensorBuf> = inputs.iter().collect();
     if artifact.starts_with("pipe:") {
         let pipe = crate::hostexec::pipeline_for_artifact(artifact).ok_or_else(|| {
             format!("unknown pipeline '{artifact}' (expected pipe:<artifact>+<artifact>+...)")
         })?;
-        let arrays: Vec<&NdArray<f32>> = collect_f32(inputs)?;
-        return pipe
-            .dispatch(&arrays, mode)
-            .map(|outs| outs.into_iter().map(Tensor::F32).collect())
-            .map_err(|e| e.to_string());
+        return pipe.dispatch_buf(&bufs, mode).map_err(|e| e.to_string());
     }
     let op = crate::hostexec::op_for_artifact(artifact).ok_or_else(|| {
         format!("unknown artifact '{artifact}' (no host-backend op for this name)")
     })?;
-    let arrays: Vec<&NdArray<f32>> = collect_f32(inputs)?;
-    op.dispatch(&arrays, mode)
-        .map(|outs| outs.into_iter().map(Tensor::F32).collect())
-        .map_err(|e| e.to_string())
-}
-
-fn collect_f32(inputs: &[Tensor]) -> Result<Vec<&NdArray<f32>>, String> {
-    inputs
-        .iter()
-        .map(|t| {
-            t.as_f32()
-                .ok_or_else(|| "host backend supports f32 inputs only".to_string())
-        })
-        .collect()
+    op.dispatch_buf(&bufs, mode).map_err(|e| e.to_string())
 }
 
 fn worker_loop(
@@ -329,13 +353,15 @@ fn drain(
     replies: &mut std::collections::HashMap<RequestId, Sender<Response>>,
     metrics: &Metrics,
 ) {
-    while let Some((artifact, batch)) = batcher.next_batch() {
+    // Batches group by (artifact, dtypes); each request still names its
+    // artifact — the key exists for grouping, not execution.
+    while let Some((_key, batch)) = batcher.next_batch() {
         Metrics::inc(&metrics.batches);
         for req in batch {
             let queue_seconds = req.enqueued.elapsed().as_secs_f64();
             metrics.queue_latency.record_seconds(queue_seconds);
             let t0 = std::time::Instant::now();
-            let result = exec.execute(&artifact, &req.inputs);
+            let result = exec.execute(&req.artifact, &req.inputs);
             let exec_seconds = t0.elapsed().as_secs_f64();
             metrics.exec_latency.record_seconds(exec_seconds);
             match &result {
@@ -345,7 +371,7 @@ fn drain(
             if let Some(reply) = replies.remove(&req.id) {
                 let _ = reply.send(Response {
                     id: req.id,
-                    artifact: artifact.clone(),
+                    artifact: req.artifact.clone(),
                     result,
                     queue_seconds,
                     exec_seconds,

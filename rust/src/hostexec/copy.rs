@@ -1,52 +1,62 @@
-//! §III.A copies and §III.B subarray extraction, host-parallelized.
+//! §III.A copies and §III.B subarray extraction — the dtype-erased
+//! movement core, host-parallelized.
 //!
-//! Straight-line ops where the only wins are contiguous-run collapsing
-//! and splitting the output across workers — every path here partitions
-//! the destination into disjoint `chunks_mut` slices, so no unsafe.
+//! Nothing here interprets element values: every path moves raw bytes
+//! in `elem_size`-wide lanes, so one implementation serves f32, f64,
+//! i32 and bf16 (the paper's template-over-payload trick, with the
+//! element width as the template parameter). Straight-line ops where
+//! the only wins are contiguous-run collapsing and splitting the output
+//! across workers — every parallel path partitions the destination into
+//! disjoint `chunks_mut` slices, so no unsafe.
 
 use super::pool;
 use crate::ops::OpError;
-use crate::tensor::{NdArray, Shape, StridedWalk};
+use crate::tensor::{bytes_of, bytes_of_mut, Element, NdArray, Shape, StridedWalk};
 
-/// Copy one contiguous run, dispatching lengths 2..16 to const-width
+#[inline(always)]
+fn fixed<const N: usize>(dst: &mut [u8], src: &[u8]) {
+    let d: &mut [u8; N] = (&mut dst[..N]).try_into().expect("run length checked");
+    let s: &[u8; N] = (&src[..N]).try_into().expect("run length checked");
+    *d = *s;
+}
+
+/// Copy one contiguous byte run, dispatching the short lengths the
+/// element widths 2/4/8 × small run counts produce to const-width
 /// array moves. For such short runs the `memcpy` call behind
 /// `copy_from_slice` costs more than the move itself; a fixed-size
-/// `[f32; N]` assignment compiles to plain u64/u128/vector register
-/// moves instead (the ROADMAP's SIMD-width-aware run-copy follow-up).
+/// `[u8; N]` assignment compiles to plain u16/u32/u64/vector register
+/// moves instead — the byte-erased generalization of the old f32-only
+/// `copy_run` (the ROADMAP's SIMD-width-aware run-copy follow-up).
 #[inline(always)]
-pub fn copy_run(dst: &mut [f32], src: &[f32]) {
-    #[inline(always)]
-    fn fixed<const N: usize>(dst: &mut [f32], src: &[f32]) {
-        let d: &mut [f32; N] = (&mut dst[..N]).try_into().expect("run length checked");
-        let s: &[f32; N] = (&src[..N]).try_into().expect("run length checked");
-        *d = *s;
-    }
+pub fn copy_run(dst: &mut [u8], src: &[u8]) {
     debug_assert_eq!(dst.len(), src.len());
     match dst.len() {
         0 => {}
         1 => dst[0] = src[0],
         2 => fixed::<2>(dst, src),
-        3 => fixed::<3>(dst, src),
         4 => fixed::<4>(dst, src),
-        5 => fixed::<5>(dst, src),
         6 => fixed::<6>(dst, src),
-        7 => fixed::<7>(dst, src),
         8 => fixed::<8>(dst, src),
-        9 => fixed::<9>(dst, src),
         10 => fixed::<10>(dst, src),
-        11 => fixed::<11>(dst, src),
         12 => fixed::<12>(dst, src),
-        13 => fixed::<13>(dst, src),
         14 => fixed::<14>(dst, src),
-        15 => fixed::<15>(dst, src),
+        16 => fixed::<16>(dst, src),
+        20 => fixed::<20>(dst, src),
+        24 => fixed::<24>(dst, src),
+        28 => fixed::<28>(dst, src),
+        32 => fixed::<32>(dst, src),
+        40 => fixed::<40>(dst, src),
+        48 => fixed::<48>(dst, src),
+        56 => fixed::<56>(dst, src),
+        64 => fixed::<64>(dst, src),
         _ => dst.copy_from_slice(src),
     }
 }
 
-/// Parallel memcpy: split `dst` into per-worker chunks.
-pub fn par_copy(src: &[f32], dst: &mut [f32], threads: usize) {
+/// Parallel memcpy over raw bytes: split `dst` into per-worker chunks.
+pub fn par_copy(src: &[u8], dst: &mut [u8], threads: usize) {
     assert_eq!(src.len(), dst.len());
-    let t = pool::effective_threads(threads, dst.len(), threads.max(1));
+    let t = pool::effective_threads_bytes(threads, dst.len(), threads.max(1));
     if t <= 1 {
         dst.copy_from_slice(src);
         return;
@@ -61,19 +71,19 @@ pub fn par_copy(src: &[f32], dst: &mut [f32], threads: usize) {
 }
 
 /// Identity copy (the §III.A streaming kernel).
-pub fn copy(x: &NdArray<f32>, threads: usize) -> NdArray<f32> {
-    let mut out = vec![0.0f32; x.len()];
-    par_copy(x.data(), &mut out, threads);
+pub fn copy<T: Element>(x: &NdArray<T>, threads: usize) -> NdArray<T> {
+    let mut out = vec![T::default(); x.len()];
+    par_copy(bytes_of(x.data()), bytes_of_mut(&mut out), threads);
     NdArray::from_vec(x.shape().clone(), out)
 }
 
 /// Contiguous range read — bit-identical to [`crate::ops::copy::read_range`].
-pub fn read_range(
-    x: &NdArray<f32>,
+pub fn read_range<T: Element>(
+    x: &NdArray<T>,
     base: usize,
     count: usize,
     threads: usize,
-) -> Result<NdArray<f32>, OpError> {
+) -> Result<NdArray<T>, OpError> {
     if x.rank() != 1 {
         return Err(OpError::Invalid("read_range expects a flat array".into()));
     }
@@ -84,19 +94,27 @@ pub fn read_range(
             x.len()
         )));
     }
-    let mut out = vec![0.0f32; count];
-    par_copy(&x.data()[base..base + count], &mut out, threads);
+    let es = std::mem::size_of::<T>();
+    let mut out = vec![T::default(); count];
+    par_copy(
+        &bytes_of(x.data())[base * es..(base + count) * es],
+        bytes_of_mut(&mut out),
+        threads,
+    );
     Ok(NdArray::from_vec(Shape::new(&[count]), out))
 }
 
 /// Strided read — bit-identical to [`crate::ops::copy::read_strided`].
-pub fn read_strided(
-    x: &NdArray<f32>,
+/// The gather loop is monomorphized per element type: a strided walk of
+/// typed loads/stores, the host analogue of the kernel template's
+/// per-width instantiation.
+pub fn read_strided<T: Element>(
+    x: &NdArray<T>,
     base: usize,
     stride: usize,
     count: usize,
     threads: usize,
-) -> Result<NdArray<f32>, OpError> {
+) -> Result<NdArray<T>, OpError> {
     if x.rank() != 1 {
         return Err(OpError::Invalid("read_strided expects a flat array".into()));
     }
@@ -106,7 +124,7 @@ pub fn read_strided(
     if count > 0 && base + (count - 1) * stride >= x.len() {
         return Err(OpError::Invalid("strided window out of bounds".into()));
     }
-    let mut out = vec![0.0f32; count];
+    let mut out = vec![T::default(); count];
     let t = pool::effective_threads(threads, count, threads.max(1));
     let xd = x.data();
     if t <= 1 {
@@ -131,13 +149,14 @@ pub fn read_strided(
 
 /// Dense sub-block extraction — bit-identical to
 /// [`crate::ops::reorder::subarray`]. Trailing axes the window covers
-/// fully collapse into one contiguous run per copy.
-pub fn subarray(
-    x: &NdArray<f32>,
+/// fully collapse into one contiguous run per copy; runs move as raw
+/// bytes through [`copy_run`], so the path is element-width-neutral.
+pub fn subarray<T: Element>(
+    x: &NdArray<T>,
     base: &[usize],
     shape: &[usize],
     threads: usize,
-) -> Result<NdArray<f32>, OpError> {
+) -> Result<NdArray<T>, OpError> {
     let n = x.rank();
     if base.len() != n || shape.len() != n {
         return Err(OpError::Invalid("base/shape rank mismatch".into()));
@@ -152,9 +171,9 @@ pub fn subarray(
     }
     let out_shape = Shape::new(shape);
     let total = out_shape.num_elements();
-    let mut out = vec![0.0f32; total];
+    let mut out_t = vec![T::default(); total];
     if total == 0 {
-        return Ok(NdArray::from_vec(out_shape, out));
+        return Ok(NdArray::from_vec(out_shape, out_t));
     }
 
     // Collapse the trailing fully-covered axes (plus the first partial
@@ -167,38 +186,41 @@ pub fn subarray(
     // t_axis now points at the last axis that is *not* required to be
     // fully covered; the run spans axes t_axis..n.
     let run: usize = shape[t_axis..].iter().product();
+    let es = std::mem::size_of::<T>();
+    let run_bytes = run * es;
     let in_strides = x.shape().strides();
     let base_off = x.shape().linearize(base);
     let outer_dims = &shape[..t_axis];
     let outer_walk = &in_strides[..t_axis];
 
-    let xd = x.data();
+    let xb = bytes_of(x.data());
     let t = pool::effective_threads(threads, total, total / run.max(1));
+    let out = bytes_of_mut(&mut out_t);
     if t <= 1 {
         for (chunk, ioff) in out
-            .chunks_mut(run)
+            .chunks_mut(run_bytes)
             .zip(StridedWalk::with_base(outer_dims, outer_walk, base_off))
         {
-            copy_run(chunk, &xd[ioff..ioff + run]);
+            copy_run(chunk, &xb[ioff * es..ioff * es + run_bytes]);
         }
-        return Ok(NdArray::from_vec(out_shape, out));
+        return Ok(NdArray::from_vec(out_shape, out_t));
     }
     // Parallel: give each worker a contiguous band of output rows.
     let rows = total / run;
     let rows_per = (rows + t - 1) / t;
     std::thread::scope(|scope| {
-        for (wi, band) in out.chunks_mut(rows_per * run).enumerate() {
+        for (wi, band) in out.chunks_mut(rows_per * run_bytes).enumerate() {
             let mut walkr = StridedWalk::with_base(outer_dims, outer_walk, base_off);
             // Advance the walker to this band's first row.
             let skip = wi * rows_per;
             scope.spawn(move || {
-                for (chunk, ioff) in band.chunks_mut(run).zip(walkr.by_ref().skip(skip)) {
-                    copy_run(chunk, &xd[ioff..ioff + run]);
+                for (chunk, ioff) in band.chunks_mut(run_bytes).zip(walkr.by_ref().skip(skip)) {
+                    copy_run(chunk, &xb[ioff * es..ioff * es + run_bytes]);
                 }
             });
         }
     });
-    Ok(NdArray::from_vec(out_shape, out))
+    Ok(NdArray::from_vec(out_shape, out_t))
 }
 
 #[cfg(test)]
@@ -210,9 +232,9 @@ mod tests {
     #[test]
     fn copy_run_every_small_width() {
         let mut rng = Rng::new(0x5C0);
-        let src = rng.f32_vec(64);
-        for len in 0..=64usize {
-            let mut dst = vec![0.0f32; len];
+        let src: Vec<u8> = (0..256).map(|_| rng.next_u64() as u8).collect();
+        for len in 0..=256usize {
+            let mut dst = vec![0u8; len];
             copy_run(&mut dst, &src[..len]);
             assert_eq!(dst, &src[..len], "len {len}");
         }
@@ -221,9 +243,9 @@ mod tests {
     #[test]
     fn par_copy_matches() {
         let mut rng = Rng::new(1);
-        let src = rng.f32_vec(100_000);
+        let src: Vec<u8> = (0..400_000).map(|_| rng.next_u64() as u8).collect();
         for threads in [1, 3, 8] {
-            let mut dst = vec![0.0f32; src.len()];
+            let mut dst = vec![0u8; src.len()];
             par_copy(&src, &mut dst, threads);
             assert_eq!(dst, src, "threads {threads}");
         }
@@ -242,6 +264,21 @@ mod tests {
     }
 
     #[test]
+    fn range_and_strided_on_narrow_and_wide_elements() {
+        // bf16 (2 bytes) and f64 (8 bytes) through the same erased core.
+        let h: NdArray<u16> = NdArray::iota_el(Shape::new(&[4096]));
+        let want = golden_copy::read_range(&h, 17, 999).unwrap();
+        assert_eq!(read_range(&h, 17, 999, 4).unwrap(), want);
+        let want = golden_copy::read_strided(&h, 5, 3, 1000).unwrap();
+        assert_eq!(read_strided(&h, 5, 3, 1000, 4).unwrap(), want);
+
+        let d: NdArray<f64> = NdArray::iota_el(Shape::new(&[4096]));
+        let want = golden_copy::read_range(&d, 17, 999).unwrap();
+        assert_eq!(read_range(&d, 17, 999, 4).unwrap(), want);
+        assert_eq!(copy(&d, 4), d);
+    }
+
+    #[test]
     fn subarray_matches_golden_random_windows() {
         let mut rng = Rng::new(0x5AB);
         let x = NdArray::random(Shape::new(&[17, 23, 9]), &mut rng);
@@ -257,6 +294,25 @@ mod tests {
                 let got = subarray(&x, &base, &shape, threads).unwrap();
                 assert_eq!(got, want, "base {base:?} shape {shape:?}");
             }
+        }
+    }
+
+    #[test]
+    fn subarray_erased_matches_golden_on_every_width() {
+        let mut rng = Rng::new(0x5AC);
+        let h: NdArray<u16> = NdArray::random_el(Shape::new(&[13, 11, 7]), &mut rng);
+        let d: NdArray<f64> = NdArray::random_el(Shape::new(&[13, 11, 7]), &mut rng);
+        for _ in 0..20 {
+            let base = [rng.gen_range(13), rng.gen_range(11), rng.gen_range(7)];
+            let shape = [
+                rng.gen_range(13 - base[0]) + 1,
+                rng.gen_range(11 - base[1]) + 1,
+                rng.gen_range(7 - base[2]) + 1,
+            ];
+            let want = golden_reorder::subarray(&h, &base, &shape).unwrap();
+            assert_eq!(subarray(&h, &base, &shape, 4).unwrap(), want);
+            let want = golden_reorder::subarray(&d, &base, &shape).unwrap();
+            assert_eq!(subarray(&d, &base, &shape, 4).unwrap(), want);
         }
     }
 

@@ -6,16 +6,21 @@
 //! analogue of the paper's coalesced n-way merge. De-interlace splits
 //! every output plane into the same bands, so reads of the packed input
 //! stay within one cache-resident window per band.
+//!
+//! Both are generic over [`Element`]: the lane loops are pure moves,
+//! monomorphized per element type (one compiled body per width — the
+//! paper's template instantiation), so every dtype is served at the
+//! same bandwidth.
 
 use super::pool;
 use crate::ops::OpError;
-use crate::tensor::{NdArray, Shape};
+use crate::tensor::{Element, NdArray, Shape};
 
 /// Merge n flat arrays — bit-identical to [`crate::ops::interlace::interlace`].
-pub fn interlace(
-    arrays: &[&NdArray<f32>],
+pub fn interlace<T: Element>(
+    arrays: &[&NdArray<T>],
     threads: usize,
-) -> Result<NdArray<f32>, OpError> {
+) -> Result<NdArray<T>, OpError> {
     let n = arrays.len();
     if n < 2 {
         return Err(OpError::Invalid("interlace needs >= 2 arrays".into()));
@@ -28,11 +33,11 @@ pub fn interlace(
             ));
         }
     }
-    let data: Vec<&[f32]> = arrays.iter().map(|a| a.data()).collect();
-    let mut out = vec![0.0f32; n * len];
+    let data: Vec<&[T]> = arrays.iter().map(|a| a.data()).collect();
+    let mut out = vec![T::default(); n * len];
     let t = pool::effective_threads(threads, n * len, threads.max(1));
     let per_i = ((len + t - 1) / t).max(1);
-    let fill = |band: &mut [f32], i0: usize| {
+    let fill = |band: &mut [T], i0: usize| {
         for (k, px) in band.chunks_mut(n).enumerate() {
             let i = i0 + k;
             for (o, d) in px.iter_mut().zip(&data) {
@@ -55,11 +60,11 @@ pub fn interlace(
 
 /// Split one flat array into n — bit-identical to
 /// [`crate::ops::interlace::deinterlace`].
-pub fn deinterlace(
-    x: &NdArray<f32>,
+pub fn deinterlace<T: Element>(
+    x: &NdArray<T>,
     n: usize,
     threads: usize,
-) -> Result<Vec<NdArray<f32>>, OpError> {
+) -> Result<Vec<NdArray<T>>, OpError> {
     if n < 2 {
         return Err(OpError::Invalid("deinterlace needs n >= 2".into()));
     }
@@ -71,7 +76,7 @@ pub fn deinterlace(
     }
     let len = x.len() / n;
     let xd = x.data();
-    let mut outs: Vec<Vec<f32>> = vec![vec![0.0f32; len]; n];
+    let mut outs: Vec<Vec<T>> = vec![vec![T::default(); len]; n];
     let t = pool::effective_threads(threads, x.len(), threads.max(1));
     if t <= 1 {
         for (j, o) in outs.iter_mut().enumerate() {
@@ -83,7 +88,7 @@ pub fn deinterlace(
         // Band the i-range; worker w owns band w of every plane, so all
         // slices handed to one worker are disjoint by construction.
         let per_i = ((len + t - 1) / t).max(1);
-        let mut per_worker: Vec<Vec<(usize, usize, &mut [f32])>> =
+        let mut per_worker: Vec<Vec<(usize, usize, &mut [T])>> =
             (0..t).map(|_| Vec::with_capacity(n)).collect();
         for (j, o) in outs.iter_mut().enumerate() {
             for (wi, band) in o.chunks_mut(per_i).enumerate() {
@@ -131,6 +136,27 @@ mod tests {
                 assert_eq!(deinterlace(&want, n, threads).unwrap(), want_planes, "n={n}");
             }
         }
+    }
+
+    #[test]
+    fn roundtrip_on_every_dtype() {
+        let mut rng = Rng::new(0x1418);
+        let h: Vec<NdArray<u16>> = (0..3)
+            .map(|_| NdArray::random_el(Shape::new(&[701]), &mut rng))
+            .collect();
+        let refs: Vec<&NdArray<u16>> = h.iter().collect();
+        let want = golden::interlace(&refs).unwrap();
+        let got = interlace(&refs, 4).unwrap();
+        assert_eq!(got, want);
+        assert_eq!(deinterlace(&got, 3, 4).unwrap(), h);
+
+        let d: Vec<NdArray<f64>> = (0..2)
+            .map(|_| NdArray::random_el(Shape::new(&[512]), &mut rng))
+            .collect();
+        let refs: Vec<&NdArray<f64>> = d.iter().collect();
+        let got = interlace(&refs, 4).unwrap();
+        assert_eq!(got, golden::interlace(&refs).unwrap());
+        assert_eq!(deinterlace(&got, 2, 4).unwrap(), d);
     }
 
     #[test]

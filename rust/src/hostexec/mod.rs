@@ -25,13 +25,25 @@
 //! [`crate::tensor::collapse`]; the odometer the naive references walk
 //! is [`crate::tensor::StridedWalk`].
 //!
+//! ## Dtype genericity
+//!
+//! Element type is a **runtime property**, not a compile-time constant:
+//! the movement paths (Copy/ReadRange/ReadStrided/Reorder/Subarray/
+//! Interlace/Deinterlace) route through a dtype-erased core that moves
+//! raw bytes in `elem_size`-wide lanes — the paper's template trick,
+//! with the inner tile/run loops monomorphized per element width
+//! (2/4/8 bytes; see `permute::tiled_runs` and `copy::copy_run`).
+//! Stencils are generic over the small numeric trait
+//! [`crate::tensor::Numeric`] (f32/f64/i32); bf16 stays movement-only
+//! and surfaces [`OpError::UnsupportedDtype`] on arithmetic paths.
+//!
 //! ## Correctness contract
 //!
 //! Every entry point is **bit-identical** to its golden reference in
-//! `ops` (enforced by `rust/tests/hostexec_property.rs`): pure data
-//! movement trivially so, the stencil by accumulating in f64 in the
-//! same tap order. `Op::execute_fast` routes here; `Op::reference`
-//! remains the golden model.
+//! `ops` (enforced by `rust/tests/hostexec_property.rs`, per dtype):
+//! pure data movement trivially so, the stencil by accumulating in f64
+//! in the same tap order. `Op::execute_fast` routes here;
+//! `Op::reference` remains the golden model.
 //!
 //! Thread count: `GDRK_THREADS` env override, else available
 //! parallelism; tensors under [`pool::PARALLEL_THRESHOLD`] run inline.
@@ -47,17 +59,29 @@ pub use permute::{permute as permute_fast, transpose as transpose_fast, transpos
 pub use registry::{op_for_artifact, pipeline_for_artifact};
 
 use crate::ops::{reorder, Op, OpError};
-use crate::tensor::{NdArray, Shape};
+use crate::tensor::{Element, NdArray, Numeric, Shape};
 
 /// Execute an op on the host backend. Same signature, semantics and
-/// validation behaviour as [`Op::reference`], different speed.
-pub fn execute(op: &Op, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, OpError> {
-    if inputs.len() != op.arity() {
-        return Err(OpError::Arity {
-            expected: op.arity(),
-            got: inputs.len(),
-        });
+/// validation behaviour as [`Op::reference`], different speed. Generic
+/// over [`Numeric`]; the movement-only dtypes (bf16) route through
+/// [`execute_movement`] or the dtype-dynamic [`Op::execute_fast_buf`].
+pub fn execute<T: Numeric>(op: &Op, inputs: &[&NdArray<T>]) -> Result<Vec<NdArray<T>>, OpError> {
+    if let Op::Stencil { spec } = op {
+        op.check_arity(inputs.len())?;
+        return stencil::apply(inputs[0], spec, pool::num_threads()).map(|a| vec![a]);
     }
+    execute_movement(op, inputs)
+}
+
+/// The pure-movement subset of [`execute`], generic over any
+/// [`Element`]: these paths route through the erased-bytes core (runs,
+/// tiles and interlace lanes of `size_of::<T>()`-wide elements), so
+/// every dtype executes at full bandwidth through one implementation.
+pub fn execute_movement<T: Element>(
+    op: &Op,
+    inputs: &[&NdArray<T>],
+) -> Result<Vec<NdArray<T>>, OpError> {
+    op.check_arity(inputs.len())?;
     let threads = pool::num_threads();
     match op {
         Op::Copy => Ok(vec![copy::copy(inputs[0], threads)]),
@@ -84,7 +108,12 @@ pub fn execute(op: &Op, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, O
         }
         Op::Interlace { .. } => interlace::interlace(inputs, threads).map(|a| vec![a]),
         Op::Deinterlace { n } => interlace::deinterlace(inputs[0], *n, threads),
-        Op::Stencil { spec } => stencil::apply(inputs[0], spec, threads).map(|a| vec![a]),
+        Op::Stencil { .. } => Err(OpError::UnsupportedDtype {
+            dtype: T::DTYPE,
+            what: "stencil on the movement-only path (numeric dtypes \
+                   route via hostexec::execute)"
+                .into(),
+        }),
     }
 }
 
@@ -145,5 +174,24 @@ mod tests {
         let a = NdArray::iota(Shape::new(&[4]));
         let r = execute(&Op::Interlace { n: 2 }, &[&a]);
         assert!(matches!(r, Err(OpError::Arity { expected: 2, got: 1 })));
+    }
+
+    #[test]
+    fn movement_serves_every_dtype_and_stencil_is_gated() {
+        let mut rng = Rng::new(0xD17);
+        let x: NdArray<u16> = NdArray::random_el(Shape::new(&[6, 8, 10]), &mut rng);
+        let op = Op::Reorder { order: Order::new(&[2, 0, 1]).unwrap() };
+        let want = op.reference_movement(&[&x]).unwrap();
+        let got = execute_movement(&op, &[&x]).unwrap();
+        assert_eq!(got, want);
+
+        let img: NdArray<u16> = NdArray::random_el(Shape::new(&[12, 12]), &mut rng);
+        let op = Op::Stencil {
+            spec: crate::ops::StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
+        };
+        assert!(matches!(
+            execute_movement(&op, &[&img]),
+            Err(OpError::UnsupportedDtype { .. })
+        ));
     }
 }

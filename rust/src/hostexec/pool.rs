@@ -9,6 +9,11 @@
 /// Elements below which a rearrangement runs single-threaded.
 pub const PARALLEL_THRESHOLD: usize = 1 << 15;
 
+/// Byte analogue of [`PARALLEL_THRESHOLD`] for the erased movement core
+/// (same cutover as 2^15 f32 elements, the tuning the threshold was
+/// picked at).
+pub const PARALLEL_THRESHOLD_BYTES: usize = PARALLEL_THRESHOLD * 4;
+
 /// Worker count: `GDRK_THREADS` override, else the host's available
 /// parallelism, else 1. Resolved once per process (this sits on the
 /// per-request hot path of the coordinator's host backend).
@@ -31,6 +36,15 @@ pub fn num_threads() -> usize {
 /// threshold, never more workers than items.
 pub fn effective_threads(threads: usize, total_elems: usize, items: usize) -> usize {
     if total_elems < PARALLEL_THRESHOLD {
+        1
+    } else {
+        threads.max(1).min(items.max(1))
+    }
+}
+
+/// [`effective_threads`] for byte-counted (dtype-erased) work.
+pub fn effective_threads_bytes(threads: usize, total_bytes: usize, items: usize) -> usize {
+    if total_bytes < PARALLEL_THRESHOLD_BYTES {
         1
     } else {
         threads.max(1).min(items.max(1))
@@ -61,17 +75,19 @@ pub fn run_indexed<F: Fn(usize) + Sync>(threads: usize, items: usize, f: F) {
     });
 }
 
-/// A mutable f32 output buffer shared by workers that write **disjoint**
-/// element ranges. The wrapper exists because the tile decomposition's
-/// per-item output regions are disjoint but interleaved, so they cannot
-/// be expressed as `chunks_mut` slices.
+/// A mutable **byte** output buffer shared by workers that write
+/// disjoint ranges — the dtype-erased sink of the movement core. The
+/// wrapper exists because the tile decomposition's per-item output
+/// regions are disjoint but interleaved, so they cannot be expressed as
+/// `chunks_mut` slices. Offsets are in bytes; callers monomorphize the
+/// element width (see `hostexec::permute::tiled_runs`).
 ///
-/// Safety contract: every concurrent writer must target element ranges
-/// no other writer touches; the tile decompositions in this module
+/// Safety contract: every concurrent writer must target byte ranges no
+/// other writer touches; the tile decompositions in this module
 /// guarantee it because each work item owns a distinct set of output
 /// rows (a row's (batch, tile-row) coordinates determine its item).
 pub struct OutPtr {
-    ptr: *mut f32,
+    ptr: *mut u8,
     len: usize,
 }
 
@@ -79,31 +95,35 @@ unsafe impl Send for OutPtr {}
 unsafe impl Sync for OutPtr {}
 
 impl OutPtr {
-    pub fn new(buf: &mut [f32]) -> OutPtr {
+    pub fn new(buf: &mut [u8]) -> OutPtr {
         OutPtr {
             ptr: buf.as_mut_ptr(),
             len: buf.len(),
         }
     }
 
-    /// Write one element.
+    /// Write one element of const width `N` bytes (the erased analogue
+    /// of a single typed store; `N` is the monomorphized element width,
+    /// so this compiles to one register move).
     ///
     /// # Safety
-    /// `off` is in-bounds and no other thread writes it concurrently.
+    /// `[off, off + N)` is in-bounds and no other thread writes any of
+    /// it concurrently; `src.len() == N`.
     #[inline]
-    pub unsafe fn write(&self, off: usize, v: f32) {
-        debug_assert!(off < self.len);
-        *self.ptr.add(off) = v;
+    pub unsafe fn write_fixed<const N: usize>(&self, off: usize, src: &[u8]) {
+        debug_assert!(off + N <= self.len);
+        debug_assert_eq!(src.len(), N);
+        std::ptr::copy_nonoverlapping(src.as_ptr(), self.ptr.add(off), N);
     }
 
-    /// Copy a contiguous run (short runs go through the const-width
-    /// dispatch in [`super::copy::copy_run`]).
+    /// Copy a contiguous byte run (short runs go through the
+    /// const-width dispatch in [`super::copy::copy_run`]).
     ///
     /// # Safety
     /// `[off, off + src.len())` is in-bounds and no other thread writes
     /// any of it concurrently.
     #[inline]
-    pub unsafe fn write_run(&self, off: usize, src: &[f32]) {
+    pub unsafe fn write_run(&self, off: usize, src: &[u8]) {
         debug_assert!(off + src.len() <= self.len);
         let dst = std::slice::from_raw_parts_mut(self.ptr.add(off), src.len());
         super::copy::copy_run(dst, src);
@@ -137,14 +157,22 @@ mod tests {
         assert_eq!(effective_threads(8, PARALLEL_THRESHOLD, 50), 8);
         assert_eq!(effective_threads(8, PARALLEL_THRESHOLD, 3), 3);
         assert_eq!(effective_threads(0, PARALLEL_THRESHOLD, 3), 1);
+        assert_eq!(effective_threads_bytes(8, 100, 50), 1);
+        assert_eq!(effective_threads_bytes(8, PARALLEL_THRESHOLD_BYTES, 50), 8);
     }
 
     #[test]
     fn outptr_disjoint_writes() {
-        let mut buf = vec![0.0f32; 64];
+        // Four-byte "elements" written as const-width byte moves.
+        let mut buf = vec![0u8; 64 * 4];
         let p = OutPtr::new(&mut buf);
-        run_indexed(4, 64, |i| unsafe { p.write(i, i as f32) });
-        assert!(buf.iter().enumerate().all(|(i, &v)| v == i as f32));
+        run_indexed(4, 64, |i| {
+            let v = (i as u32).to_le_bytes();
+            unsafe { p.write_fixed::<4>(i * 4, &v) };
+        });
+        for (i, chunk) in buf.chunks(4).enumerate() {
+            assert_eq!(u32::from_le_bytes(chunk.try_into().unwrap()), i as u32);
+        }
     }
 
     #[test]

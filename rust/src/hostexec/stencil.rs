@@ -1,12 +1,13 @@
 //! §III.D generic 2D stencil, host-parallelized — single pass and the
-//! fused rolling-window **chain** executor.
+//! fused rolling-window **chain** executor, generic over [`Numeric`].
 //!
 //! Single pass: row-banded over the worker pool with an interior fast
 //! path: inside the halo the taps reduce to constant flat offsets (no
 //! per-tap bounds tests), which is the host analogue of the kernel's
 //! staged tile whose interior threads skip ghost handling. Accumulation
 //! order and types (f64 accumulate, tap order from `StencilSpec::taps`)
-//! are exactly the golden reference's, so results are bit-identical.
+//! are exactly the golden reference's — for every [`Numeric`] element
+//! type — so results are bit-identical per dtype.
 //!
 //! Chain ([`apply_chain`]): a run of stacked stencils executes as one
 //! banded pass per worker in which stage `k` keeps only the last
@@ -16,26 +17,34 @@
 //! and writes the output once instead of `depth` round trips; workers
 //! recompute the band-boundary halo rows so results stay bit-identical
 //! to `depth` sequential [`apply`] passes.
+//!
+//! The band scheduler itself — descend to the deepest stage whose
+//! source rows are ready, produce one row, repeat — is shared state
+//! machinery, not stencil arithmetic. [`cascade_band`] owns it (the
+//! ring-capacity invariant lives in exactly one place); this module's
+//! chain executor and the CFD Jacobi band in
+//! [`crate::pipeline::fuse`] both drive it with their own row
+//! producers.
 
 use super::pool;
 use crate::ops::stencil::StencilSpec;
 use crate::ops::OpError;
-use crate::tensor::{NdArray, Shape};
+use crate::tensor::{Element, NdArray, Numeric, Shape};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Apply `spec` with zero ghost cells — bit-identical to
 /// [`crate::ops::stencil::apply`].
-pub fn apply(
-    x: &NdArray<f32>,
+pub fn apply<T: Numeric>(
+    x: &NdArray<T>,
     spec: &StencilSpec,
     threads: usize,
-) -> Result<NdArray<f32>, OpError> {
+) -> Result<NdArray<T>, OpError> {
     if x.rank() != 2 {
         return Err(OpError::Invalid("stencil expects a 2D array".into()));
     }
     let taps = spec.taps()?;
     let (h, w) = (x.shape().dims()[0], x.shape().dims()[1]);
-    let mut out = vec![0.0f32; h * w];
+    let mut out = vec![T::default(); h * w];
     if h * w == 0 {
         return Ok(NdArray::from_vec(Shape::new(&[h, w]), out));
     }
@@ -47,19 +56,19 @@ pub fn apply(
         .map(|&(dy, dx, c)| (dy as isize * w as isize + dx as isize, c))
         .collect();
 
-    let checked = |i: usize, j: usize| -> f32 {
+    let checked = |i: usize, j: usize| -> T {
         let (hi, wi) = (h as i64, w as i64);
         let mut acc = 0.0f64;
         for &(dy, dx, c) in &taps {
             let (y, xx) = (i as i64 + dy, j as i64 + dx);
             if y >= 0 && y < hi && xx >= 0 && xx < wi {
-                acc += c * xd[y as usize * w + xx as usize] as f64;
+                acc += c * xd[y as usize * w + xx as usize].to_acc();
             }
         }
-        acc as f32
+        T::from_acc(acc)
     };
 
-    let do_rows = |band: &mut [f32], i0: usize| {
+    let do_rows = |band: &mut [T], i0: usize| {
         for (k, row) in band.chunks_mut(w).enumerate() {
             let i = i0 + k;
             let interior_row = i >= radius && i + radius < h;
@@ -82,9 +91,9 @@ pub fn apply(
                 let base = (base_row + j) as isize;
                 let mut acc = 0.0f64;
                 for &(off, c) in &flat {
-                    acc += c * xd[(base + off) as usize] as f64;
+                    acc += c * xd[(base + off) as usize].to_acc();
                 }
-                *o = acc as f32;
+                *o = T::from_acc(acc);
             }
             for (j, o) in row.iter_mut().enumerate().skip(w - radius) {
                 *o = checked(i, j);
@@ -109,75 +118,153 @@ pub fn apply(
 
 /// Rolling window over the last `height` produced rows of one stage.
 /// Row `y` lives at slot `y % height`; the production schedule in
-/// [`apply_chain`] guarantees every row still needed is within the
+/// [`cascade_band`] guarantees every row still needed is within the
 /// newest `height` rows, so slots never collide while live.
-pub(crate) struct Ring {
-    rows: Vec<f32>,
+pub(crate) struct Ring<T> {
+    rows: Vec<T>,
     height: usize,
     w: usize,
 }
 
-impl Ring {
-    pub(crate) fn new(height: usize, w: usize) -> Ring {
+impl<T: Element> Ring<T> {
+    pub(crate) fn new(height: usize, w: usize) -> Ring<T> {
         Ring {
-            rows: vec![0.0f32; height * w],
+            rows: vec![T::default(); height * w],
             height,
             w,
         }
     }
 
-    pub(crate) fn row_mut(&mut self, y: usize) -> &mut [f32] {
+    pub(crate) fn row_mut(&mut self, y: usize) -> &mut [T] {
         let s = (y % self.height) * self.w;
         &mut self.rows[s..s + self.w]
     }
 }
 
 /// Row lookup shared by the chain executors' stage inputs.
-pub(crate) trait RowSource {
-    fn row(&self, y: usize) -> &[f32];
+pub(crate) trait RowSource<T> {
+    fn row(&self, y: usize) -> &[T];
 }
 
-impl RowSource for Ring {
-    fn row(&self, y: usize) -> &[f32] {
+impl<T: Element> RowSource<T> for Ring<T> {
+    fn row(&self, y: usize) -> &[T] {
         let s = (y % self.height) * self.w;
         &self.rows[s..s + self.w]
     }
 }
 
 /// Rows of a full row-major 2D buffer.
-pub(crate) struct SliceRows<'a> {
-    pub(crate) data: &'a [f32],
+pub(crate) struct SliceRows<'a, T> {
+    pub(crate) data: &'a [T],
     pub(crate) w: usize,
 }
 
-impl RowSource for SliceRows<'_> {
-    fn row(&self, y: usize) -> &[f32] {
+impl<T> RowSource<T> for SliceRows<'_, T> {
+    fn row(&self, y: usize) -> &[T] {
         &self.data[y * self.w..][..self.w]
+    }
+}
+
+/// Per-stage "rows past the band" requirements: `suffix[k]` is the sum
+/// of the radii of every stage after `k` — how far stage `k` must run
+/// ahead of the band so the final stage can finish its rows.
+pub(crate) fn radius_suffix(radii: &[usize]) -> Vec<usize> {
+    let d = radii.len();
+    let mut suffix = vec![0usize; d];
+    for k in (0..d.saturating_sub(1)).rev() {
+        suffix[k] = suffix[k + 1] + radii[k + 1];
+    }
+    suffix
+}
+
+/// One worker's band of a fused rolling-window cascade — the scheduler
+/// shared by the stencil chain executor below and the CFD Jacobi band
+/// ([`crate::pipeline::fuse`]).
+///
+/// Lazily cascades row production from the first stage up, so no stage
+/// ever runs more than its consumer's radius ahead (the ring-capacity
+/// invariant: stage `k` keeps `2*radii[k+1] + 1` rows hot, and a row is
+/// only overwritten once every consumer of it has been produced).
+/// `produce(k, y, src, dst)` computes row `y` of stage `k` from the
+/// previous stage's rows; `input` feeds stage 0. Rows of the final
+/// stage land directly in `band` (rows `b0 ..= b0 + band.len()/w`).
+pub(crate) fn cascade_band<T: Element, F>(
+    input: &dyn RowSource<T>,
+    h: usize,
+    w: usize,
+    radii: &[usize],
+    b0: usize,
+    band: &mut [T],
+    mut produce: F,
+) where
+    F: FnMut(usize, usize, &dyn RowSource<T>, &mut [T]),
+{
+    let d = radii.len();
+    let suffix = radius_suffix(radii);
+    let b1 = b0 + band.len() / w;
+    let lo = |k: usize| b0.saturating_sub(suffix[k]);
+    let hi = |k: usize| (b1 + suffix[k]).min(h);
+    let mut rings: Vec<Ring<T>> = (0..d - 1)
+        .map(|k| Ring::new(2 * radii[k + 1] + 1, w))
+        .collect();
+    let mut produced: Vec<i64> = (0..d).map(|k| lo(k) as i64 - 1).collect();
+    for i in b0..b1 {
+        while produced[d - 1] < i as i64 {
+            // Descend to the deepest stage whose source is not ready.
+            let mut k = d - 1;
+            while k > 0 {
+                let y = produced[k] + 1;
+                let need = (y + radii[k] as i64).min(hi(k - 1) as i64 - 1);
+                if produced[k - 1] >= need {
+                    break;
+                }
+                k -= 1;
+            }
+            let y = (produced[k] + 1) as usize;
+            if k == 0 {
+                if d == 1 {
+                    let dst = &mut band[(y - b0) * w..][..w];
+                    produce(0, y, input, dst);
+                } else {
+                    produce(0, y, input, rings[0].row_mut(y));
+                }
+            } else {
+                let (left, right) = rings.split_at_mut(k);
+                let src: &dyn RowSource<T> = &left[k - 1];
+                if k == d - 1 {
+                    let dst = &mut band[(y - b0) * w..][..w];
+                    produce(k, y, src, dst);
+                } else {
+                    produce(k, y, src, right[0].row_mut(y));
+                }
+            }
+            produced[k] += 1;
+        }
     }
 }
 
 /// Compute one output row of a stencil stage from a [`RowSource`] —
 /// bit-identical to the golden per-element walk (f64 accumulate, taps
 /// in spec order, zero ghosts outside the `h`×`w` domain).
-fn stencil_row<S: RowSource>(
-    src: &S,
+fn stencil_row<T: Numeric>(
+    src: &dyn RowSource<T>,
     h: usize,
     w: usize,
     taps: &[(i64, i64, f64)],
     radius: usize,
     i: usize,
-    dst: &mut [f32],
+    dst: &mut [T],
 ) {
     let (hi, wi) = (h as i64, w as i64);
-    let checked = |j: usize| -> f32 {
+    let checked = |j: usize| -> T {
         let mut acc = 0.0f64;
         for &(dy, dx, c) in taps {
             let (y, x) = (i as i64 + dy, j as i64 + dx);
             if y >= 0 && y < hi && x >= 0 && x < wi {
-                acc += c * src.row(y as usize)[x as usize] as f64;
+                acc += c * src.row(y as usize)[x as usize].to_acc();
             }
         }
-        acc as f32
+        T::from_acc(acc)
     };
     if w <= 2 * radius {
         for (j, o) in dst.iter_mut().enumerate() {
@@ -191,7 +278,7 @@ fn stencil_row<S: RowSource>(
     // Interior columns: only the row-bounds test remains; resolve each
     // live tap to its source row once, keeping spec order (skipping a
     // ghost row is exactly what the golden walk does).
-    let live: Vec<(&[f32], i64, f64)> = taps
+    let live: Vec<(&[T], i64, f64)> = taps
         .iter()
         .filter(|&&(dy, _, _)| {
             let y = i as i64 + dy;
@@ -202,9 +289,9 @@ fn stencil_row<S: RowSource>(
     for (j, o) in dst.iter_mut().enumerate().take(w - radius).skip(radius) {
         let mut acc = 0.0f64;
         for &(row, dx, c) in &live {
-            acc += c * row[(j as i64 + dx) as usize] as f64;
+            acc += c * row[(j as i64 + dx) as usize].to_acc();
         }
-        *o = acc as f32;
+        *o = T::from_acc(acc);
     }
     for (j, o) in dst.iter_mut().enumerate().skip(w - radius) {
         *o = checked(j);
@@ -233,18 +320,18 @@ impl ChainStats {
 }
 
 /// Bytes `depth` sequential full-array passes move (one read and one
-/// write of the whole field per stage).
-pub fn unfused_chain_traffic_bytes(h: usize, w: usize, depth: usize) -> u64 {
-    2 * depth as u64 * (h * w * 4) as u64
+/// write of the whole `elem_bytes`-wide field per stage).
+pub fn unfused_chain_traffic_bytes(h: usize, w: usize, depth: usize, elem_bytes: usize) -> u64 {
+    2 * depth as u64 * (h * w * elem_bytes) as u64
 }
 
 /// Apply a chain of stencils as one fused rolling-window pass —
 /// bit-identical to applying each spec in sequence with [`apply`].
-pub fn apply_chain(
-    x: &NdArray<f32>,
+pub fn apply_chain<T: Numeric>(
+    x: &NdArray<T>,
     specs: &[StencilSpec],
     threads: usize,
-) -> Result<(NdArray<f32>, ChainStats), OpError> {
+) -> Result<(NdArray<T>, ChainStats), OpError> {
     if x.rank() != 2 {
         return Err(OpError::Invalid("stencil chain expects a 2D array".into()));
     }
@@ -255,14 +342,10 @@ pub fn apply_chain(
         specs.iter().map(|s| s.taps()).collect::<Result<_, _>>()?;
     let radii: Vec<usize> = specs.iter().map(|s| s.radius()).collect();
     let d = specs.len();
-    // suffix[k]: how many rows past the final band stage k must produce
-    // (the summed radii of every later stage).
-    let mut suffix = vec![0usize; d];
-    for k in (0..d.saturating_sub(1)).rev() {
-        suffix[k] = suffix[k + 1] + radii[k + 1];
-    }
+    let suffix = radius_suffix(&radii);
+    let es = std::mem::size_of::<T>();
     let (h, w) = (x.shape().dims()[0], x.shape().dims()[1]);
-    let mut out = vec![0.0f32; h * w];
+    let mut out = vec![T::default(); h * w];
     let hot: usize = radii[1..].iter().map(|r| 2 * r + 1).sum();
     if h * w == 0 {
         let stats = ChainStats { depth: d, hot_rows_per_worker: hot, ..Default::default() };
@@ -271,10 +354,21 @@ pub fn apply_chain(
     let xd = x.data();
     let in_rows = AtomicU64::new(0);
     let ring_rows = AtomicU64::new(0);
-    let do_band = |band: &mut [f32], b0: usize| {
-        let (a, b) = chain_band(xd, h, w, &taps, &radii, &suffix, b0, band);
-        in_rows.fetch_add(a, Ordering::Relaxed);
-        ring_rows.fetch_add(b, Ordering::Relaxed);
+    let do_band = |band: &mut [T], b0: usize| {
+        let input = SliceRows { data: xd, w };
+        cascade_band(&input, h, w, &radii, b0, band, |k, y, src, dst| {
+            stencil_row(src, h, w, &taps[k], radii[k], y, dst);
+        });
+        // Traffic accounting: rows this band fetched from the input
+        // (stage-0 window + its own radius) and rows staged in rings.
+        let b1 = b0 + band.len() / w;
+        let lo = |k: usize| b0.saturating_sub(suffix[k]);
+        let hi = |k: usize| (b1 + suffix[k]).min(h);
+        let in_lo = lo(0).saturating_sub(radii[0]);
+        let in_hi = (hi(0) + radii[0]).min(h);
+        in_rows.fetch_add(in_hi.saturating_sub(in_lo) as u64, Ordering::Relaxed);
+        let band_ring: u64 = (0..d.saturating_sub(1)).map(|k| (hi(k) - lo(k)) as u64).sum();
+        ring_rows.fetch_add(band_ring, Ordering::Relaxed);
     };
     let t = pool::effective_threads(threads, h * w, h);
     if t <= 1 {
@@ -289,75 +383,13 @@ pub fn apply_chain(
         });
     }
     let stats = ChainStats {
-        input_bytes_read: in_rows.into_inner() * (w * 4) as u64,
-        output_bytes_written: (h * w * 4) as u64,
-        ring_bytes: ring_rows.into_inner() * (w * 4) as u64,
+        input_bytes_read: in_rows.into_inner() * (w * es) as u64,
+        output_bytes_written: (h * w * es) as u64,
+        ring_bytes: ring_rows.into_inner() * (w * es) as u64,
         hot_rows_per_worker: hot,
         depth: d,
     };
     Ok((NdArray::from_vec(Shape::new(&[h, w]), out), stats))
-}
-
-/// One worker's band of the fused chain: lazily cascade row production
-/// from the first stage up, so no stage ever runs more than its
-/// consumer's radius ahead (the ring-capacity invariant). Returns
-/// (input rows fetched, ring rows produced).
-#[allow(clippy::too_many_arguments)]
-fn chain_band(
-    xd: &[f32],
-    h: usize,
-    w: usize,
-    taps: &[Vec<(i64, i64, f64)>],
-    radii: &[usize],
-    suffix: &[usize],
-    b0: usize,
-    band: &mut [f32],
-) -> (u64, u64) {
-    let d = taps.len();
-    let b1 = b0 + band.len() / w;
-    let lo = |k: usize| b0.saturating_sub(suffix[k]);
-    let hi = |k: usize| (b1 + suffix[k]).min(h);
-    let mut rings: Vec<Ring> = (0..d - 1).map(|k| Ring::new(2 * radii[k + 1] + 1, w)).collect();
-    let mut produced: Vec<i64> = (0..d).map(|k| lo(k) as i64 - 1).collect();
-    let input = SliceRows { data: xd, w };
-    for i in b0..b1 {
-        while produced[d - 1] < i as i64 {
-            // Descend to the deepest stage whose source is not ready.
-            let mut k = d - 1;
-            while k > 0 {
-                let y = produced[k] + 1;
-                let need = (y + radii[k] as i64).min(hi(k - 1) as i64 - 1);
-                if produced[k - 1] >= need {
-                    break;
-                }
-                k -= 1;
-            }
-            let y = (produced[k] + 1) as usize;
-            if k == 0 {
-                if d == 1 {
-                    let dst = &mut band[(y - b0) * w..][..w];
-                    stencil_row(&input, h, w, &taps[0], radii[0], y, dst);
-                } else {
-                    stencil_row(&input, h, w, &taps[0], radii[0], y, rings[0].row_mut(y));
-                }
-            } else {
-                let (left, right) = rings.split_at_mut(k);
-                let src = &left[k - 1];
-                if k == d - 1 {
-                    let dst = &mut band[(y - b0) * w..][..w];
-                    stencil_row(src, h, w, &taps[k], radii[k], y, dst);
-                } else {
-                    stencil_row(src, h, w, &taps[k], radii[k], y, right[0].row_mut(y));
-                }
-            }
-            produced[k] += 1;
-        }
-    }
-    let in_lo = lo(0).saturating_sub(radii[0]);
-    let in_hi = (hi(0) + radii[0]).min(h);
-    let input_rows = in_hi.saturating_sub(in_lo) as u64;
-    let ring_rows: u64 = (0..d.saturating_sub(1)).map(|k| (hi(k) - lo(k)) as u64).sum();
-    (input_rows, ring_rows)
 }
 
 #[cfg(test)]
@@ -392,6 +424,27 @@ mod tests {
                     let got = apply(&x, &spec, threads).unwrap();
                     assert_eq!(got, want, "{hh}x{ww} {spec:?} threads={threads}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_golden_on_numeric_dtypes() {
+        // The generic executor serves i32 and f64 with the identical
+        // f64 accumulator, so per-dtype bit-identity holds everywhere.
+        let mut rng = Rng::new(0x57F);
+        let q: NdArray<i32> = NdArray::from_fn(Shape::new(&[40, 24]), |idx| {
+            (idx[0] as i32 * 7 - idx[1] as i32 * 3) % 100
+        });
+        let d: NdArray<f64> = NdArray::random_el(Shape::new(&[40, 24]), &mut rng);
+        for spec in specs() {
+            let want = golden::apply(&q, &spec).unwrap();
+            for threads in [1, 4] {
+                assert_eq!(apply(&q, &spec, threads).unwrap(), want, "i32 {spec:?}");
+            }
+            let want = golden::apply(&d, &spec).unwrap();
+            for threads in [1, 4] {
+                assert_eq!(apply(&d, &spec, threads).unwrap(), want, "f64 {spec:?}");
             }
         }
     }
@@ -438,6 +491,26 @@ mod tests {
     }
 
     #[test]
+    fn chain_generic_matches_sequential_on_i32() {
+        let q: NdArray<i32> = NdArray::from_fn(Shape::new(&[180, 64]), |idx| {
+            (idx[0] as i32 * 13 + idx[1] as i32 * 5) % 311 - 150
+        });
+        let chain = vec![
+            StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
+            StencilSpec::Conv { radius: 1, mask: vec![1.0; 9] },
+            StencilSpec::FdLaplacian { order: 2, scale: 0.5 },
+        ];
+        let mut want = q.clone();
+        for spec in &chain {
+            want = golden::apply(&want, spec).unwrap();
+        }
+        for threads in [1, 4] {
+            let (got, _) = apply_chain(&q, &chain, threads).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
     fn chain_traffic_at_most_half_of_unfused() {
         let mut rng = Rng::new(0xC4A2);
         let x = NdArray::random(Shape::new(&[48, 40]), &mut rng);
@@ -449,10 +522,10 @@ mod tests {
             assert_eq!(stats.input_bytes_read, 48 * 40 * 4);
             assert_eq!(stats.output_bytes_written, 48 * 40 * 4);
             assert!(
-                2 * stats.fused_traffic_bytes() <= unfused_chain_traffic_bytes(48, 40, depth),
+                2 * stats.fused_traffic_bytes() <= unfused_chain_traffic_bytes(48, 40, depth, 4),
                 "depth {depth}: fused {} vs unfused {}",
                 stats.fused_traffic_bytes(),
-                unfused_chain_traffic_bytes(48, 40, depth)
+                unfused_chain_traffic_bytes(48, 40, depth, 4)
             );
             assert!(stats.hot_rows_per_worker <= 3 * depth);
         }
@@ -473,5 +546,13 @@ mod tests {
         let (y, stats) = apply_chain(&empty, &[spec.clone(), spec], 4).unwrap();
         assert_eq!(y.len(), 0);
         assert_eq!(stats.fused_traffic_bytes(), 0);
+    }
+
+    #[test]
+    fn radius_suffix_invariant() {
+        assert_eq!(radius_suffix(&[1, 1, 1, 1]), vec![3, 2, 1, 0]);
+        assert_eq!(radius_suffix(&[2, 1, 3]), vec![4, 3, 0]);
+        assert_eq!(radius_suffix(&[5]), vec![0]);
+        assert!(radius_suffix(&[]).is_empty());
     }
 }

@@ -106,20 +106,21 @@ fn cmd_list(args: &cli::Args) -> i32 {
 
 fn random_inputs(rt: &Runtime, name: &str, rng: &mut Rng) -> Result<Vec<Tensor>, String> {
     let entry = rt.entry(name).map_err(|e| e.to_string())?;
-    entry
+    Ok(entry
         .inputs
         .iter()
         .map(|spec| match spec.dtype {
-            gdrk::tensor::DType::F32 => Ok(Tensor::F32(NdArray::random(spec.shape.clone(), rng))),
+            // i32 inputs are gather/index payloads: keep them in-bounds
+            // for the array they index into.
             gdrk::tensor::DType::I32 => {
                 let n = spec.shape.num_elements();
                 let hi = n.max(2);
                 let data: Vec<i32> = (0..n).map(|_| rng.gen_range(hi) as i32).collect();
-                Ok(Tensor::I32(NdArray::from_vec(spec.shape.clone(), data)))
+                Tensor::I32(NdArray::from_vec(spec.shape.clone(), data))
             }
-            d => Err(format!("cannot generate inputs of dtype {d}")),
+            d => Tensor::random(d, spec.shape.clone(), rng),
         })
-        .collect()
+        .collect())
 }
 
 fn cmd_run(args: &cli::Args) -> i32 {

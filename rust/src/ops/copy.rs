@@ -1,10 +1,17 @@
 //! §III.A basic read/write reference implementations (flat arrays).
+//!
+//! Generic over [`Element`]: copies never interpret element values, so
+//! one scalar walk defines the semantics for every dtype.
 
 use super::OpError;
-use crate::tensor::{NdArray, Shape};
+use crate::tensor::{Element, NdArray, Shape};
 
 /// Contiguous `[base, base+count)` read of a flat array.
-pub fn read_range(x: &NdArray<f32>, base: usize, count: usize) -> Result<NdArray<f32>, OpError> {
+pub fn read_range<T: Element>(
+    x: &NdArray<T>,
+    base: usize,
+    count: usize,
+) -> Result<NdArray<T>, OpError> {
     if x.rank() != 1 {
         return Err(OpError::Invalid("read_range expects a flat array".into()));
     }
@@ -22,12 +29,12 @@ pub fn read_range(x: &NdArray<f32>, base: usize, count: usize) -> Result<NdArray
 }
 
 /// Strided read: `out[k] = x[base + k*stride]`.
-pub fn read_strided(
-    x: &NdArray<f32>,
+pub fn read_strided<T: Element>(
+    x: &NdArray<T>,
     base: usize,
     stride: usize,
     count: usize,
-) -> Result<NdArray<f32>, OpError> {
+) -> Result<NdArray<T>, OpError> {
     if x.rank() != 1 {
         return Err(OpError::Invalid("read_strided expects a flat array".into()));
     }
@@ -42,7 +49,7 @@ pub fn read_strided(
 }
 
 /// Indexed gather: `out[k] = x[idx[k]]`.
-pub fn gather(x: &NdArray<f32>, idx: &[usize]) -> Result<NdArray<f32>, OpError> {
+pub fn gather<T: Element>(x: &NdArray<T>, idx: &[usize]) -> Result<NdArray<T>, OpError> {
     if x.rank() != 1 {
         return Err(OpError::Invalid("gather expects a flat array".into()));
     }

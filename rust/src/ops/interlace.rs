@@ -1,10 +1,10 @@
 //! §III.C interlace / de-interlace reference implementations.
 
 use super::OpError;
-use crate::tensor::{NdArray, Shape};
+use crate::tensor::{Element, NdArray, Shape};
 
 /// Merge n flat arrays: `out[i*n + j] = arrays[j][i]`.
-pub fn interlace(arrays: &[&NdArray<f32>]) -> Result<NdArray<f32>, OpError> {
+pub fn interlace<T: Element>(arrays: &[&NdArray<T>]) -> Result<NdArray<T>, OpError> {
     let n = arrays.len();
     if n < 2 {
         return Err(OpError::Invalid("interlace needs >= 2 arrays".into()));
@@ -27,7 +27,7 @@ pub fn interlace(arrays: &[&NdArray<f32>]) -> Result<NdArray<f32>, OpError> {
 }
 
 /// Split one flat array into n: `out[j][i] = x[i*n + j]`.
-pub fn deinterlace(x: &NdArray<f32>, n: usize) -> Result<Vec<NdArray<f32>>, OpError> {
+pub fn deinterlace<T: Element>(x: &NdArray<T>, n: usize) -> Result<Vec<NdArray<T>>, OpError> {
     if n < 2 {
         return Err(OpError::Invalid("deinterlace needs n >= 2".into()));
     }

@@ -18,7 +18,8 @@ pub mod permute;
 pub mod reorder;
 pub mod stencil;
 
-use crate::tensor::{NdArray, Order};
+use crate::tensor::buf::erase_all;
+use crate::tensor::{DType, Element, NdArray, Numeric, Order, TensorBuf};
 use thiserror::Error;
 
 pub use stencil::StencilSpec;
@@ -62,6 +63,10 @@ pub enum OpError {
     Arity { expected: usize, got: usize },
     #[error("invalid argument: {0}")]
     Invalid(String),
+    #[error("unsupported dtype {dtype} for {what}")]
+    UnsupportedDtype { dtype: DType, what: String },
+    #[error("inputs mix dtypes {0:?}; op inputs must share one dtype")]
+    MixedDtype(Vec<DType>),
 }
 
 impl Op {
@@ -81,14 +86,41 @@ impl Op {
         }
     }
 
-    /// Execute the golden CPU reference.
-    pub fn reference(&self, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, OpError> {
-        if inputs.len() != self.arity() {
+    /// Arity validation shared by every execution entry point.
+    pub(crate) fn check_arity(&self, got: usize) -> Result<(), OpError> {
+        if got != self.arity() {
             return Err(OpError::Arity {
                 expected: self.arity(),
-                got: inputs.len(),
+                got,
             });
         }
+        Ok(())
+    }
+
+    /// Execute the golden CPU reference. Generic over [`Numeric`] so the
+    /// same scalar walks define the semantics for f32, f64 and i32; the
+    /// movement-only dtypes (bf16) go through [`Op::reference_movement`]
+    /// or the dtype-dynamic [`Op::reference_buf`].
+    pub fn reference<T: Numeric>(
+        &self,
+        inputs: &[&NdArray<T>],
+    ) -> Result<Vec<NdArray<T>>, OpError> {
+        if let Op::Stencil { spec } = self {
+            self.check_arity(inputs.len())?;
+            return stencil::apply(inputs[0], spec).map(|a| vec![a]);
+        }
+        self.reference_movement(inputs)
+    }
+
+    /// The pure-movement subset of [`Op::reference`], generic over any
+    /// [`Element`] — movement never interprets element values, so every
+    /// dtype (bf16 included) is served. Stencils need arithmetic and
+    /// return [`OpError::UnsupportedDtype`] here.
+    pub fn reference_movement<T: Element>(
+        &self,
+        inputs: &[&NdArray<T>],
+    ) -> Result<Vec<NdArray<T>>, OpError> {
+        self.check_arity(inputs.len())?;
         match self {
             Op::Copy => Ok(vec![inputs[0].clone()]),
             Op::ReadRange { base, count } => copy::read_range(inputs[0], *base, *count)
@@ -105,26 +137,94 @@ impl Op {
             }
             Op::Interlace { .. } => interlace::interlace(inputs).map(|a| vec![a]),
             Op::Deinterlace { n } => interlace::deinterlace(inputs[0], *n),
-            Op::Stencil { spec } => stencil::apply(inputs[0], spec).map(|a| vec![a]),
+            Op::Stencil { .. } => Err(OpError::UnsupportedDtype {
+                dtype: T::DTYPE,
+                what: "stencil on the movement-only path (numeric dtypes \
+                       route via Op::reference/execute_fast)"
+                    .into(),
+            }),
         }
     }
 
     /// Execute on the fast host backend (bit-identical to
     /// [`Op::reference`]; see `crate::hostexec` for the technique).
-    pub fn execute_fast(&self, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, OpError> {
+    pub fn execute_fast<T: Numeric>(
+        &self,
+        inputs: &[&NdArray<T>],
+    ) -> Result<Vec<NdArray<T>>, OpError> {
         crate::hostexec::execute(self, inputs)
     }
 
     /// Execute on the selected host backend.
-    pub fn dispatch(
+    pub fn dispatch<T: Numeric>(
         &self,
-        inputs: &[&NdArray<f32>],
+        inputs: &[&NdArray<T>],
         backend: ExecBackend,
-    ) -> Result<Vec<NdArray<f32>>, OpError> {
+    ) -> Result<Vec<NdArray<T>>, OpError> {
         match backend {
             ExecBackend::Naive => self.reference(inputs),
             ExecBackend::Host => self.execute_fast(inputs),
         }
+    }
+
+    /// Movement-only dispatch for any [`Element`] dtype (the bf16 path).
+    pub fn dispatch_movement<T: Element>(
+        &self,
+        inputs: &[&NdArray<T>],
+        backend: ExecBackend,
+    ) -> Result<Vec<NdArray<T>>, OpError> {
+        match backend {
+            ExecBackend::Naive => self.reference_movement(inputs),
+            ExecBackend::Host => crate::hostexec::execute_movement(self, inputs),
+        }
+    }
+
+    /// Dtype-dynamic execution over erased buffers: validates that the
+    /// inputs share one dtype, then routes to the monomorphized typed
+    /// path for that dtype. This is the entry the coordinator serves
+    /// requests through — dtype resolves from the data (and, upstream,
+    /// the artifact manifest) instead of being assumed.
+    pub fn dispatch_buf(
+        &self,
+        inputs: &[&TensorBuf],
+        backend: ExecBackend,
+    ) -> Result<Vec<TensorBuf>, OpError> {
+        let Some(first) = inputs.first() else {
+            return Err(OpError::Arity {
+                expected: self.arity(),
+                got: 0,
+            });
+        };
+        let dt = first.dtype();
+        if inputs.iter().any(|b| b.dtype() != dt) {
+            return Err(OpError::MixedDtype(
+                inputs.iter().map(|b| b.dtype()).collect(),
+            ));
+        }
+        match dt {
+            DType::F32 => self.dispatch(&views::<f32>(inputs), backend).map(erase_all),
+            DType::F64 => self.dispatch(&views::<f64>(inputs), backend).map(erase_all),
+            DType::I32 => self.dispatch(&views::<i32>(inputs), backend).map(erase_all),
+            DType::Bf16 => self
+                .dispatch_movement(&views::<u16>(inputs), backend)
+                .map(erase_all),
+        }
+    }
+
+    /// [`Op::dispatch_buf`] on the golden references.
+    pub fn reference_buf(&self, inputs: &[&TensorBuf]) -> Result<Vec<TensorBuf>, OpError> {
+        self.dispatch_buf(inputs, ExecBackend::Naive)
+    }
+
+    /// [`Op::dispatch_buf`] on the hostexec backend.
+    pub fn execute_fast_buf(&self, inputs: &[&TensorBuf]) -> Result<Vec<TensorBuf>, OpError> {
+        self.dispatch_buf(inputs, ExecBackend::Host)
+    }
+
+    /// True when the op moves data without arithmetic — i.e. it serves
+    /// every [`Element`] dtype, not just the [`Numeric`] ones.
+    pub fn is_movement(&self) -> bool {
+        !matches!(self, Op::Stencil { .. })
     }
 
     /// True when the op returns its input unchanged (bits and shape) —
@@ -165,6 +265,12 @@ impl Op {
             _ => None,
         }
     }
+}
+
+/// [`crate::tensor::buf::typed_views`] after `dispatch_buf` has already
+/// validated the uniform dtype tag.
+fn views<'a, T: Element>(inputs: &[&'a TensorBuf]) -> Vec<&'a NdArray<T>> {
+    crate::tensor::buf::typed_views(inputs).expect("uniform dtype validated by dispatch_buf")
 }
 
 #[cfg(test)]
@@ -213,6 +319,39 @@ mod tests {
             Op::Deinterlace { n: 3 }
         );
         assert!(Op::Subarray { base: vec![0], shape: vec![1] }.inverse().is_none());
+    }
+
+    #[test]
+    fn dynamic_dispatch_carries_dtype() {
+        for dt in DType::ALL {
+            let x = TensorBuf::iota(dt, Shape::new(&[3, 5]));
+            let out = Op::Copy.reference_buf(&[&x]).unwrap();
+            assert_eq!(out[0].dtype(), dt);
+            assert_eq!(out[0], x, "{dt}");
+        }
+    }
+
+    #[test]
+    fn mixed_dtype_inputs_rejected() {
+        let a = TensorBuf::iota(DType::F32, Shape::new(&[4]));
+        let b = TensorBuf::iota(DType::I32, Shape::new(&[4]));
+        let r = Op::Interlace { n: 2 }.reference_buf(&[&a, &b]);
+        assert!(matches!(r, Err(OpError::MixedDtype(_))), "{r:?}");
+    }
+
+    #[test]
+    fn stencil_rejects_bf16_with_typed_error() {
+        let x = TensorBuf::iota(DType::Bf16, Shape::new(&[8, 8]));
+        let op = Op::Stencil {
+            spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
+        };
+        let r = op.reference_buf(&[&x]);
+        assert!(
+            matches!(r, Err(OpError::UnsupportedDtype { dtype: DType::Bf16, .. })),
+            "{r:?}"
+        );
+        assert!(!op.is_movement());
+        assert!(Op::Copy.is_movement());
     }
 
     #[test]

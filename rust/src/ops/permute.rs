@@ -1,15 +1,16 @@
 //! §III.B reference permute/transpose (naive index-walk, the golden model).
 
 use super::OpError;
-use crate::tensor::{NdArray, Order, StridedWalk};
+use crate::tensor::{Element, NdArray, Order, StridedWalk};
 
 /// Transpose with row-major axes: `out[i0,..] = in[idx[axes[0]], ..]` —
 /// i.e. output axis `j` takes input axis `axes[j]`.
 ///
 /// This is the naive scalar walk (one element per step, no tiling, no
 /// threads): it defines the semantics and anchors the property tests;
-/// the fast path is [`crate::hostexec::permute`].
-pub fn transpose(x: &NdArray<f32>, axes: &[usize]) -> Result<NdArray<f32>, OpError> {
+/// the fast path is [`crate::hostexec::permute`]. Generic over
+/// [`Element`] — a permutation is an index map, independent of payload.
+pub fn transpose<T: Element>(x: &NdArray<T>, axes: &[usize]) -> Result<NdArray<T>, OpError> {
     let n = x.rank();
     if axes.len() != n || Order::new(axes).is_err() {
         return Err(OpError::Invalid(format!(
@@ -21,7 +22,7 @@ pub fn transpose(x: &NdArray<f32>, axes: &[usize]) -> Result<NdArray<f32>, OpErr
     // Stride of output axis j in the *input* linear space.
     let walk: Vec<usize> = axes.iter().map(|&a| in_strides[a]).collect();
 
-    let mut out = vec![0.0f32; x.len()];
+    let mut out = vec![T::default(); x.len()];
     let xd = x.data();
     for (o, ioff) in StridedWalk::new(out_shape.dims(), &walk).enumerate() {
         out[o] = xd[ioff];
@@ -30,7 +31,7 @@ pub fn transpose(x: &NdArray<f32>, axes: &[usize]) -> Result<NdArray<f32>, OpErr
 }
 
 /// Reorder into paper storage order (fastest-first convention).
-pub fn permute(x: &NdArray<f32>, order: &Order) -> Result<NdArray<f32>, OpError> {
+pub fn permute<T: Element>(x: &NdArray<T>, order: &Order) -> Result<NdArray<T>, OpError> {
     if order.rank() != x.rank() {
         return Err(OpError::Invalid(format!(
             "order rank {} != tensor rank {}",

@@ -2,7 +2,7 @@
 
 use super::permute;
 use super::OpError;
-use crate::tensor::{NdArray, Order, Shape, StridedWalk};
+use crate::tensor::{Element, NdArray, Order, Shape, StridedWalk};
 
 /// Merge the slowest axes of a permuted shape down to `out_rank` dims —
 /// the free row-major merge shared by the naive path below and the
@@ -19,11 +19,11 @@ pub fn collapse_dims(dims: &[usize], out_rank: usize) -> Vec<usize> {
 /// N→M reorder: permute into `order`, then merge the slowest axes so the
 /// result has `out_rank` dimensions (free row-major merge — the data
 /// movement is exactly the full permute; see DESIGN.md §5).
-pub fn reorder_collapse(
-    x: &NdArray<f32>,
+pub fn reorder_collapse<T: Element>(
+    x: &NdArray<T>,
     order: &Order,
     out_rank: usize,
-) -> Result<NdArray<f32>, OpError> {
+) -> Result<NdArray<T>, OpError> {
     let n = x.rank();
     if out_rank == 0 || out_rank > n {
         return Err(OpError::Invalid(format!(
@@ -36,11 +36,11 @@ pub fn reorder_collapse(
 }
 
 /// Dense sub-block extraction: `out = x[base .. base+shape]` per axis.
-pub fn subarray(
-    x: &NdArray<f32>,
+pub fn subarray<T: Element>(
+    x: &NdArray<T>,
     base: &[usize],
     shape: &[usize],
-) -> Result<NdArray<f32>, OpError> {
+) -> Result<NdArray<T>, OpError> {
     let n = x.rank();
     if base.len() != n || shape.len() != n {
         return Err(OpError::Invalid("base/shape rank mismatch".into()));
@@ -56,7 +56,7 @@ pub fn subarray(
     // Same odometer as the naive transpose: walk the window with the
     // input's strides from the window corner.
     let out_shape = Shape::new(shape);
-    let mut out = vec![0.0f32; out_shape.num_elements()];
+    let mut out = vec![T::default(); out_shape.num_elements()];
     let xd = x.data();
     let corner: usize = base
         .iter()

@@ -1,7 +1,7 @@
 //! §III.D generic 2D stencil reference (zero ghost cells outside domain).
 
 use super::OpError;
-use crate::tensor::{NdArray, Shape};
+use crate::tensor::{NdArray, Numeric, Shape};
 
 /// 2k-order accurate central-difference second-derivative coefficients
 /// (index 0 = center), mirroring `ref.FD_COEFFS` on the python side.
@@ -95,8 +95,11 @@ impl StencilSpec {
 }
 
 /// Apply the stencil with zero ghost cells outside the domain
-/// (matches `ref.stencil` in python).
-pub fn apply(x: &NdArray<f32>, spec: &StencilSpec) -> Result<NdArray<f32>, OpError> {
+/// (matches `ref.stencil` in python). Generic over [`Numeric`]: taps
+/// accumulate in f64 whatever the element type, so the narrow-back at
+/// the end is the only dtype-specific step (bit-identical to the
+/// hostexec executor, which uses the identical accumulator).
+pub fn apply<T: Numeric>(x: &NdArray<T>, spec: &StencilSpec) -> Result<NdArray<T>, OpError> {
     if x.rank() != 2 {
         return Err(OpError::Invalid("stencil expects a 2D array".into()));
     }
@@ -108,10 +111,10 @@ pub fn apply(x: &NdArray<f32>, spec: &StencilSpec) -> Result<NdArray<f32>, OpErr
         for &(dy, dx, c) in &taps {
             let (y, xx) = (i + dy, j + dx);
             if y >= 0 && y < h && xx >= 0 && xx < w {
-                acc += c * x.get(&[y as usize, xx as usize]) as f64;
+                acc += c * x.get(&[y as usize, xx as usize]).to_acc();
             }
         }
-        acc as f32
+        T::from_acc(acc)
     });
     Ok(out)
 }

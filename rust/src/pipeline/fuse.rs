@@ -13,8 +13,14 @@
 //! 3 rows per sweep hot instead of writing K full `psi` fields — and
 //! spawning one worker set instead of K. Bit-identical to the unfused
 //! sweeps: same f32 expression per element, same neighbour order.
+//!
+//! The descend/produce/ring scheduling is **not** duplicated here: the
+//! band drives [`cascade_band`] (hostexec's shared rolling-window
+//! scheduler, where the ring-capacity invariant lives) with a Jacobi
+//! row producer. The CFD solve stays f32 but compiles against the
+//! dtype-generic cascade machinery.
 
-use crate::hostexec::stencil::{Ring, RowSource, SliceRows};
+use crate::hostexec::stencil::{cascade_band, RowSource, SliceRows};
 use crate::ops::{Op, StencilSpec};
 
 /// One executable unit of a rewritten pipeline.
@@ -105,10 +111,11 @@ pub fn jacobi_chain(
     out
 }
 
-/// One worker's band: lazily cascade sweep-row production (radius 1 per
-/// sweep) so each sweep keeps only 3 rows of the previous sweep hot.
-/// Band-boundary halo rows are recomputed, keeping workers independent
-/// and results bit-identical to the barriered sweeps.
+/// One worker's band: the shared [`cascade_band`] scheduler with a
+/// Jacobi row producer — each sweep is a radius-1 stage, so each sweep
+/// keeps only 3 rows of the previous sweep hot. Band-boundary halo rows
+/// are recomputed, keeping workers independent and results
+/// bit-identical to the barriered sweeps.
 fn jacobi_band(
     psi0: &[f32],
     omega: &[f32],
@@ -118,53 +125,19 @@ fn jacobi_band(
     b0: usize,
     band: &mut [f32],
 ) {
-    let d = iters;
-    let b1 = b0 + band.len() / n;
-    let lo = |k: usize| b0.saturating_sub(d - 1 - k);
-    let hi = |k: usize| (b1 + (d - 1 - k)).min(n);
-    let mut rings: Vec<Ring> = (0..d - 1).map(|_| Ring::new(3, n)).collect();
-    let mut produced: Vec<i64> = (0..d).map(|k| lo(k) as i64 - 1).collect();
+    let radii = vec![1usize; iters];
     let input = SliceRows { data: psi0, w: n };
-    for i in b0..b1 {
-        while produced[d - 1] < i as i64 {
-            // Descend to the deepest sweep whose source is not ready.
-            let mut k = d - 1;
-            while k > 0 {
-                let need = (produced[k] + 2).min(hi(k - 1) as i64 - 1);
-                if produced[k - 1] >= need {
-                    break;
-                }
-                k -= 1;
-            }
-            let y = (produced[k] + 1) as usize;
-            let omega_row = &omega[y * n..][..n];
-            if k == 0 {
-                if d == 1 {
-                    let dst = &mut band[(y - b0) * n..][..n];
-                    jacobi_row(&input, n, omega_row, h2, y, dst);
-                } else {
-                    jacobi_row(&input, n, omega_row, h2, y, rings[0].row_mut(y));
-                }
-            } else {
-                let (left, right) = rings.split_at_mut(k);
-                let src = &left[k - 1];
-                if k == d - 1 {
-                    let dst = &mut band[(y - b0) * n..][..n];
-                    jacobi_row(src, n, omega_row, h2, y, dst);
-                } else {
-                    jacobi_row(src, n, omega_row, h2, y, right[0].row_mut(y));
-                }
-            }
-            produced[k] += 1;
-        }
-    }
+    cascade_band(&input, n, n, &radii, b0, band, |_, y, src, dst| {
+        let omega_row = &omega[y * n..][..n];
+        jacobi_row(src, n, omega_row, h2, y, dst);
+    });
 }
 
 /// One sweep row. Wall rows/columns are 0 (the psi Dirichlet BC); the
 /// interior expression and neighbour order mirror the unfused sweep
 /// exactly, so the f32 results are bitwise equal.
-fn jacobi_row<S: RowSource>(
-    src: &S,
+fn jacobi_row(
+    src: &dyn RowSource<f32>,
     n: usize,
     omega_row: &[f32],
     h2: f32,

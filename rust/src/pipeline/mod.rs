@@ -28,7 +28,15 @@
 //!   sweeps ([`fuse::jacobi_chain`]).
 //! * **Plan cache** ([`plan_cache`]) — resolved
 //!   [`planner::Plan`](crate::planner::Plan)s keyed by (shape, order,
-//!   diagonal) so repeated coordinator traffic skips re-planning.
+//!   diagonal) so repeated coordinator traffic skips re-planning
+//!   (plans are dtype-neutral: every element width shares an entry).
+//! * **Dtype** — stages are index maps, so the IR carries no element
+//!   type; execution does. The typed entry points are generic
+//!   ([`crate::tensor::Numeric`] for full chains, any
+//!   [`crate::tensor::Element`] for movement-only chains), and the
+//!   dynamic [`Pipeline::dispatch_buf`] resolves the dtype tag at run
+//!   time, rejecting mixed-dtype lane sets with
+//!   [`PipelineError::MixedDtype`].
 //!
 //! Everything is bit-identical to the unfused naive chain — enforced by
 //! `rust/tests/pipeline_property.rs` (random op chains, rank 1–5) and
@@ -44,7 +52,8 @@ pub use rewrite::rewrite;
 
 use crate::hostexec;
 use crate::ops::{ExecBackend, Op, OpError};
-use crate::tensor::NdArray;
+use crate::tensor::buf::erase_all;
+use crate::tensor::{DType, Element, NdArray, Numeric, TensorBuf};
 use thiserror::Error;
 
 #[derive(Debug, Error)]
@@ -53,6 +62,8 @@ pub enum PipelineError {
     Empty,
     #[error("stage {stage} cannot accept {width} input lane(s)")]
     WidthMismatch { stage: usize, width: usize },
+    #[error("pipeline inputs mix dtypes {found:?}; chains are dtype-uniform")]
+    MixedDtype { found: Vec<DType> },
     #[error("stage {stage}: {source}")]
     Stage {
         stage: usize,
@@ -96,8 +107,12 @@ impl Pipeline {
 
     /// Execute the chain stage by stage on the golden references — no
     /// rewrites, no fusion. The semantic anchor the fast path is tested
-    /// against.
-    pub fn reference(&self, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, PipelineError> {
+    /// against. Generic over [`Numeric`] (every stage kind is served);
+    /// movement-only dtypes run through [`Pipeline::dispatch_buf`].
+    pub fn reference<T: Numeric>(
+        &self,
+        inputs: &[&NdArray<T>],
+    ) -> Result<Vec<NdArray<T>>, PipelineError> {
         let segments: Vec<Segment> =
             self.stages.iter().cloned().map(Segment::Single).collect();
         run_segments(&segments, inputs, &mut |seg, ins| match seg {
@@ -107,15 +122,18 @@ impl Pipeline {
     }
 
     /// Rewrite, fuse and execute on the host backend.
-    pub fn execute(&self, inputs: &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, PipelineError> {
+    pub fn execute<T: Numeric>(
+        &self,
+        inputs: &[&NdArray<T>],
+    ) -> Result<Vec<NdArray<T>>, PipelineError> {
         self.execute_with_stats(inputs).map(|(outs, _)| outs)
     }
 
     /// [`Pipeline::execute`] returning the traffic/rewrite accounting.
-    pub fn execute_with_stats(
+    pub fn execute_with_stats<T: Numeric>(
         &self,
-        inputs: &[&NdArray<f32>],
-    ) -> Result<(Vec<NdArray<f32>>, PipeStats), PipelineError> {
+        inputs: &[&NdArray<T>],
+    ) -> Result<(Vec<NdArray<T>>, PipeStats), PipelineError> {
         let rewritten = rewrite::rewrite(&self.stages);
         let segments = fuse::segment(&rewritten);
         let mut stats = PipeStats {
@@ -124,6 +142,7 @@ impl Pipeline {
             ..Default::default()
         };
         let threads = hostexec::pool::num_threads();
+        let es = std::mem::size_of::<T>();
         let outs = run_segments(&segments, inputs, &mut |seg, ins| match seg {
             Segment::Single(op) => op.execute_fast(ins),
             Segment::StencilChain(specs) => {
@@ -131,8 +150,12 @@ impl Pipeline {
                 let dims = ins[0].shape().dims();
                 stats.fused_chains += 1;
                 stats.fused_traffic_bytes += s.fused_traffic_bytes();
-                stats.unfused_chain_traffic_bytes +=
-                    hostexec::stencil::unfused_chain_traffic_bytes(dims[0], dims[1], specs.len());
+                stats.unfused_chain_traffic_bytes += hostexec::stencil::unfused_chain_traffic_bytes(
+                    dims[0],
+                    dims[1],
+                    specs.len(),
+                    es,
+                );
                 Ok(vec![y])
             }
         })?;
@@ -140,33 +163,100 @@ impl Pipeline {
     }
 
     /// Execute on the selected backend (mirrors [`Op::dispatch`]).
-    pub fn dispatch(
+    pub fn dispatch<T: Numeric>(
         &self,
-        inputs: &[&NdArray<f32>],
+        inputs: &[&NdArray<T>],
         backend: ExecBackend,
-    ) -> Result<Vec<NdArray<f32>>, PipelineError> {
+    ) -> Result<Vec<NdArray<T>>, PipelineError> {
         match backend {
             ExecBackend::Naive => self.reference(inputs),
             ExecBackend::Host => self.execute(inputs),
         }
     }
+
+    /// Movement-only execution for any [`Element`] dtype (the bf16
+    /// path): identical rewrite + segmentation, but a chain that still
+    /// contains stencil stages after rewriting surfaces
+    /// [`OpError::UnsupportedDtype`] with the stage index.
+    fn dispatch_movement<T: Element>(
+        &self,
+        inputs: &[&NdArray<T>],
+        backend: ExecBackend,
+    ) -> Result<Vec<NdArray<T>>, PipelineError> {
+        let segments: Vec<Segment> = match backend {
+            ExecBackend::Naive => self.stages.iter().cloned().map(Segment::Single).collect(),
+            ExecBackend::Host => fuse::segment(&rewrite::rewrite(&self.stages)),
+        };
+        run_segments(&segments, inputs, &mut |seg, ins| match seg {
+            Segment::Single(op) => op.dispatch_movement(ins, backend),
+            Segment::StencilChain(_) => Err(OpError::UnsupportedDtype {
+                dtype: T::DTYPE,
+                what: "fused stencil chain (needs a numeric dtype: f32/f64/i32)".into(),
+            }),
+        })
+    }
+
+    /// Dtype-dynamic execution over erased buffers: validates that the
+    /// input lanes share one dtype (a mixed-dtype chain is a typed
+    /// error, not a coercion), then routes to the monomorphized typed
+    /// path. The rewrite pass is dtype-independent — rewrites only
+    /// reorder/cancel index maps — so the rewritten chain preserves the
+    /// element type across lane widening/narrowing by construction.
+    pub fn dispatch_buf(
+        &self,
+        inputs: &[&TensorBuf],
+        backend: ExecBackend,
+    ) -> Result<Vec<TensorBuf>, PipelineError> {
+        let found: Vec<DType> = inputs.iter().map(|b| b.dtype()).collect();
+        let Some(&dt) = found.first() else {
+            return Err(PipelineError::WidthMismatch { stage: 0, width: 0 });
+        };
+        if found.iter().any(|&d| d != dt) {
+            return Err(PipelineError::MixedDtype { found });
+        }
+        match dt {
+            DType::F32 => self.dispatch(&views::<f32>(inputs), backend).map(erase_all),
+            DType::F64 => self.dispatch(&views::<f64>(inputs), backend).map(erase_all),
+            DType::I32 => self.dispatch(&views::<i32>(inputs), backend).map(erase_all),
+            DType::Bf16 => self
+                .dispatch_movement(&views::<u16>(inputs), backend)
+                .map(erase_all),
+        }
+    }
+
+    /// [`Pipeline::dispatch_buf`] on the golden references.
+    pub fn reference_buf(&self, inputs: &[&TensorBuf]) -> Result<Vec<TensorBuf>, PipelineError> {
+        self.dispatch_buf(inputs, ExecBackend::Naive)
+    }
+
+    /// [`Pipeline::dispatch_buf`] on the hostexec backend.
+    pub fn execute_buf(&self, inputs: &[&TensorBuf]) -> Result<Vec<TensorBuf>, PipelineError> {
+        self.dispatch_buf(inputs, ExecBackend::Host)
+    }
+}
+
+/// [`crate::tensor::buf::typed_views`] after `dispatch_buf` has already
+/// validated the uniform dtype tag.
+fn views<'a, T: Element>(inputs: &[&'a TensorBuf]) -> Vec<&'a NdArray<T>> {
+    crate::tensor::buf::typed_views(inputs).expect("uniform dtype validated by dispatch_buf")
 }
 
 /// Drive a segment chain over the lane-width rules: a segment either
 /// consumes every current lane at once (arity == width) or, when unary
-/// with a single output, maps over the lanes independently.
-fn run_segments<F>(
+/// with a single output, maps over the lanes independently. Generic
+/// over the element type — the lane plumbing never touches values.
+fn run_segments<T: Element, F>(
     segments: &[Segment],
-    inputs: &[&NdArray<f32>],
+    inputs: &[&NdArray<T>],
     exec: &mut F,
-) -> Result<Vec<NdArray<f32>>, PipelineError>
+) -> Result<Vec<NdArray<T>>, PipelineError>
 where
-    F: FnMut(&Segment, &[&NdArray<f32>]) -> Result<Vec<NdArray<f32>>, OpError>,
+    F: FnMut(&Segment, &[&NdArray<T>]) -> Result<Vec<NdArray<T>>, OpError>,
 {
-    let mut cur: Vec<NdArray<f32>> = Vec::new();
+    let mut cur: Vec<NdArray<T>> = Vec::new();
     let mut first = true;
     for (si, seg) in segments.iter().enumerate() {
-        let refs: Vec<&NdArray<f32>> = if first {
+        let refs: Vec<&NdArray<T>> = if first {
             inputs.to_vec()
         } else {
             cur.iter().collect()
@@ -269,6 +359,45 @@ mod tests {
             Err(PipelineError::Stage { stage: 1, .. }) => {}
             other => panic!("expected stage-1 error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn dynamic_path_preserves_dtype_and_rejects_mixing() {
+        use crate::tensor::DType;
+        let mut rng = Rng::new(0xD7);
+        // A widening/narrowing diamond on bf16: movement-only, so the
+        // bf16 lane survives the whole rewritten chain.
+        let x = TensorBuf::random(DType::Bf16, Shape::new(&[3 * 600]), &mut rng);
+        let p = Pipeline::new(vec![
+            Op::Deinterlace { n: 3 },
+            Op::Copy,
+            Op::Interlace { n: 3 },
+        ])
+        .unwrap();
+        let out = p.execute_buf(&[&x]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dtype(), DType::Bf16);
+        assert_eq!(out[0], x);
+
+        // Mixed-dtype lanes are a typed error.
+        let a = TensorBuf::iota(DType::F32, Shape::new(&[8]));
+        let b = TensorBuf::iota(DType::I32, Shape::new(&[8]));
+        let p = Pipeline::new(vec![Op::Interlace { n: 2 }]).unwrap();
+        let err = p.execute_buf(&[&a, &b]).unwrap_err();
+        assert!(matches!(err, PipelineError::MixedDtype { .. }), "{err:?}");
+
+        // Stencil stages on bf16 carry the stage index in the error.
+        let img = TensorBuf::random(DType::Bf16, Shape::new(&[16, 16]), &mut rng);
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let p = Pipeline::new(vec![Op::Copy, Op::Stencil { spec }]).unwrap();
+        let err = p.reference_buf(&[&img]).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                PipelineError::Stage { stage: 1, source: OpError::UnsupportedDtype { .. } }
+            ),
+            "{err:?}"
+        );
     }
 
     #[test]

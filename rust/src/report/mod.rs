@@ -68,6 +68,9 @@ pub struct BenchRecord {
     pub shape: String,
     /// Paper order vector / parameter tag ("-" when not applicable).
     pub order: String,
+    /// Element dtype of the payload (the width-independence column:
+    /// GB/s at element widths 2/4/8 should track each other).
+    pub dtype: String,
     pub naive_gbs: f64,
     pub hostexec_gbs: f64,
 }
@@ -83,8 +86,8 @@ impl BenchRecord {
 }
 
 /// Serialize bench records to the `BENCH_hostexec.json` schema tracked
-/// across PRs: `{threads, results: [{op, shape, order, naive_gbs,
-/// hostexec_gbs, speedup}]}`.
+/// across PRs: `{threads, results: [{op, shape, order, dtype,
+/// naive_gbs, hostexec_gbs, speedup}]}`.
 pub fn bench_json(threads: usize, records: &[BenchRecord]) -> String {
     let mut out = String::from("{\n");
     let _ = writeln!(out, "  \"bench\": \"hostexec\",");
@@ -94,11 +97,12 @@ pub fn bench_json(threads: usize, records: &[BenchRecord]) -> String {
         let comma = if i + 1 < records.len() { "," } else { "" };
         let _ = writeln!(
             out,
-            "    {{\"op\": \"{}\", \"shape\": \"{}\", \"order\": \"{}\", \
+            "    {{\"op\": \"{}\", \"shape\": \"{}\", \"order\": \"{}\", \"dtype\": \"{}\", \
              \"naive_gbs\": {:.3}, \"hostexec_gbs\": {:.3}, \"speedup\": {:.3}}}{comma}",
             r.op,
             r.shape,
             r.order,
+            r.dtype,
             r.naive_gbs,
             r.hostexec_gbs,
             r.speedup()
@@ -171,6 +175,7 @@ mod tests {
                 op: "permute3d".into(),
                 shape: "[64, 256, 512]".into(),
                 order: "[1 0 2]".into(),
+                dtype: "f32".into(),
                 naive_gbs: 1.25,
                 hostexec_gbs: 5.0,
             },
@@ -178,6 +183,7 @@ mod tests {
                 op: "interlace".into(),
                 shape: "4 x [262144]".into(),
                 order: "n=4".into(),
+                dtype: "bf16".into(),
                 naive_gbs: 2.0,
                 hostexec_gbs: 4.0,
             },
@@ -187,6 +193,10 @@ mod tests {
         assert_eq!(v.get("threads").and_then(|t| t.as_usize()), Some(8));
         let results = v.get("results").and_then(|r| r.as_arr()).unwrap();
         assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[1].get("dtype").and_then(|s| s.as_str()),
+            Some("bf16")
+        );
         assert_eq!(
             results[0].get("speedup").and_then(|s| s.as_f64()),
             Some(4.0)

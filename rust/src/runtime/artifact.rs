@@ -55,6 +55,12 @@ pub enum ManifestError {
     Malformed(String),
     #[error("unsupported manifest format {0}")]
     Format(f64),
+    /// The manifest names a dtype this runtime cannot execute. A typed
+    /// error — nothing silently falls through to f32 — so callers (the
+    /// coordinator's host executor, `gdrk run`) surface exactly which
+    /// dtype string the AOT side emitted.
+    #[error("unsupported dtype '{dtype}' in manifest entry (supported: f32/f64/i32/bf16)")]
+    UnsupportedDtype { dtype: String },
 }
 
 fn tensor_spec(v: &Value) -> Result<TensorSpec, ManifestError> {
@@ -68,11 +74,13 @@ fn tensor_spec(v: &Value) -> Result<TensorSpec, ManifestError> {
                 .ok_or_else(|| ManifestError::Malformed("bad dim".into()))
         })
         .collect::<Result<Vec<_>, _>>()?;
-    let dtype = v
+    let dtype_str = v
         .get("dtype")
         .and_then(Value::as_str)
-        .and_then(DType::parse)
-        .ok_or_else(|| ManifestError::Malformed("bad dtype".into()))?;
+        .ok_or_else(|| ManifestError::Malformed("missing dtype".into()))?;
+    let dtype = DType::parse(dtype_str).ok_or_else(|| ManifestError::UnsupportedDtype {
+        dtype: dtype_str.to_string(),
+    })?;
     Ok(TensorSpec {
         shape: Shape(shape),
         dtype,
@@ -224,6 +232,19 @@ mod tests {
             Manifest::parse(&bad, PathBuf::from(".")),
             Err(ManifestError::Format(_))
         ));
+    }
+
+    #[test]
+    fn unknown_dtype_is_a_typed_error() {
+        let bad = SAMPLE.replace("\"dtype\": \"i32\"", "\"dtype\": \"c64\"");
+        match Manifest::parse(&bad, PathBuf::from(".")) {
+            Err(ManifestError::UnsupportedDtype { dtype }) => assert_eq!(dtype, "c64"),
+            other => panic!("expected UnsupportedDtype, got {other:?}"),
+        }
+        // f64 is a supported width (the erased core moves 8-byte lanes).
+        let wide = SAMPLE.replace("\"dtype\": \"i32\"", "\"dtype\": \"f64\"");
+        let m = Manifest::parse(&wide, PathBuf::from(".")).unwrap();
+        assert_eq!(m.get("gather").unwrap().inputs[1].dtype, DType::F64);
     }
 
     #[test]

@@ -26,61 +26,17 @@
 
 pub mod artifact;
 
-use crate::tensor::{DType, NdArray, Shape};
 use artifact::{ArtifactEntry, Manifest, ManifestError};
 use std::path::Path;
 use thiserror::Error;
 
 pub use artifact::TensorSpec;
 
-/// A host tensor crossing the runtime boundary.
-#[derive(Debug, Clone, PartialEq)]
-pub enum Tensor {
-    F32(NdArray<f32>),
-    I32(NdArray<i32>),
-}
-
-impl Tensor {
-    pub fn dtype(&self) -> DType {
-        match self {
-            Tensor::F32(_) => DType::F32,
-            Tensor::I32(_) => DType::I32,
-        }
-    }
-
-    pub fn shape(&self) -> &Shape {
-        match self {
-            Tensor::F32(a) => a.shape(),
-            Tensor::I32(a) => a.shape(),
-        }
-    }
-
-    pub fn as_f32(&self) -> Option<&NdArray<f32>> {
-        match self {
-            Tensor::F32(a) => Some(a),
-            _ => None,
-        }
-    }
-
-    pub fn into_f32(self) -> Option<NdArray<f32>> {
-        match self {
-            Tensor::F32(a) => Some(a),
-            _ => None,
-        }
-    }
-}
-
-impl From<NdArray<f32>> for Tensor {
-    fn from(a: NdArray<f32>) -> Tensor {
-        Tensor::F32(a)
-    }
-}
-
-impl From<NdArray<i32>> for Tensor {
-    fn from(a: NdArray<i32>) -> Tensor {
-        Tensor::I32(a)
-    }
-}
+/// A host tensor crossing the runtime boundary — the dtype-carrying
+/// [`TensorBuf`](crate::tensor::TensorBuf). Dtype travels with the data
+/// end to end (requests, batching, responses) instead of being assumed
+/// f32; see `tensor::buf` for the erased-bytes / typed-view split.
+pub use crate::tensor::TensorBuf as Tensor;
 
 #[derive(Debug, Error)]
 pub enum RuntimeError {
@@ -118,7 +74,11 @@ pub struct ExecStats {
     pub total_exec_seconds: f64,
 }
 
-fn validate_inputs_against(
+/// Validate request tensors against a manifest entry: arity, then
+/// per-input shape **and dtype** (the manifest is the dtype authority;
+/// nothing downstream falls back to f32). Shared by both runtime
+/// flavours and the coordinator's host backend.
+pub(crate) fn validate_inputs_against(
     entry: &ArtifactEntry,
     name: &str,
     inputs: &[Tensor],
@@ -146,6 +106,7 @@ fn validate_inputs_against(
 #[cfg(feature = "pjrt")]
 mod pjrt_impl {
     use super::*;
+    use crate::tensor::{NdArray, Shape};
     use std::cell::RefCell;
     use std::collections::HashMap;
 
@@ -169,6 +130,15 @@ mod pjrt_impl {
                     a.shape().dims(),
                     bytes_of(a.data()),
                 )?,
+                // The AOT artifacts are emitted for f32/i32 payloads;
+                // widening the literal bridge is the pjrt lane's share
+                // of the dtype-generic follow-up (ROADMAP).
+                other => {
+                    return Err(RuntimeError::UnsupportedDType(format!(
+                        "{} host->literal",
+                        other.dtype()
+                    )))
+                }
             };
             Ok(lit)
         }
@@ -369,6 +339,7 @@ pub use stub_impl::Runtime;
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::{DType, NdArray, Shape};
 
     #[test]
     fn tensor_dtype_shape() {

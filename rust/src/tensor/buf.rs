@@ -1,0 +1,223 @@
+//! `TensorBuf` — the dtype-erased tensor crossing every dynamic
+//! boundary (coordinator requests, the runtime, dynamic op dispatch).
+//!
+//! ## Erased bytes vs typed views
+//!
+//! The execution core splits cleanly along what the paper's kernels
+//! split along:
+//!
+//! * **Pure movement** (Copy/ReadRange/ReadStrided/Reorder/Subarray/
+//!   Interlace/Deinterlace) never interprets element values. Those paths
+//!   consume the **erased** face of a buffer — [`TensorBuf::as_bytes`]
+//!   plus [`TensorBuf::elem_size`] — and the hostexec core monomorphizes
+//!   its inner tile/run loops over the element *width* (2/4/8 bytes),
+//!   exactly the paper's template-over-payload trick. One implementation
+//!   serves every dtype at full bandwidth.
+//! * **Arithmetic** (the §III.D stencil family) needs real element
+//!   semantics. Those paths go through the **checked typed view**
+//!   ([`TensorBuf::view`] / [`Element::view`]) into an
+//!   `NdArray<T: Numeric>`; the dtype tag is validated before any
+//!   compute runs, so a bf16 buffer can never silently reach a stencil.
+//!
+//! Internally the container holds the typed array (so typed views are
+//! free and alignment is always correct); the byte face is a zero-copy
+//! reinterpretation of that storage. Dtype is data: it travels with the
+//! buffer through batching, pipelines and responses, and every layer
+//! validates rather than assumes.
+
+use super::dtype::DType;
+use super::element::{bytes_of, Element};
+use super::ndarray::NdArray;
+use super::shape::Shape;
+use crate::util::rng::Rng;
+
+/// A tensor whose element type is a runtime property.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorBuf {
+    F32(NdArray<f32>),
+    F64(NdArray<f64>),
+    I32(NdArray<i32>),
+    /// bf16 payloads carried as raw bit patterns (see `Element for u16`).
+    Bf16(NdArray<u16>),
+}
+
+impl TensorBuf {
+    /// The runtime dtype tag.
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorBuf::F32(_) => DType::F32,
+            TensorBuf::F64(_) => DType::F64,
+            TensorBuf::I32(_) => DType::I32,
+            TensorBuf::Bf16(_) => DType::Bf16,
+        }
+    }
+
+    pub fn shape(&self) -> &Shape {
+        match self {
+            TensorBuf::F32(a) => a.shape(),
+            TensorBuf::F64(a) => a.shape(),
+            TensorBuf::I32(a) => a.shape(),
+            TensorBuf::Bf16(a) => a.shape(),
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.shape().num_elements()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes per element — the only element property movement needs.
+    pub fn elem_size(&self) -> usize {
+        self.dtype().size_bytes()
+    }
+
+    /// The erased face: every element byte, in storage order.
+    pub fn as_bytes(&self) -> &[u8] {
+        match self {
+            TensorBuf::F32(a) => bytes_of(a.data()),
+            TensorBuf::F64(a) => bytes_of(a.data()),
+            TensorBuf::I32(a) => bytes_of(a.data()),
+            TensorBuf::Bf16(a) => bytes_of(a.data()),
+        }
+    }
+
+    /// Checked typed view (None when the dtype tag does not match `T`).
+    pub fn view<T: Element>(&self) -> Option<&NdArray<T>> {
+        T::view(self)
+    }
+
+    pub fn as_f32(&self) -> Option<&NdArray<f32>> {
+        self.view::<f32>()
+    }
+
+    pub fn into_f32(self) -> Option<NdArray<f32>> {
+        match self {
+            TensorBuf::F32(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Zero-filled buffer of the given dtype.
+    pub fn zeros(dtype: DType, shape: Shape) -> TensorBuf {
+        match dtype {
+            DType::F32 => TensorBuf::F32(NdArray::zeros(shape)),
+            DType::F64 => TensorBuf::F64(NdArray::zeros(shape)),
+            DType::I32 => TensorBuf::I32(NdArray::zeros(shape)),
+            DType::Bf16 => TensorBuf::Bf16(NdArray::zeros(shape)),
+        }
+    }
+
+    /// Deterministic random buffer (test/bench dtype sweeps).
+    pub fn random(dtype: DType, shape: Shape, rng: &mut Rng) -> TensorBuf {
+        match dtype {
+            DType::F32 => TensorBuf::F32(NdArray::random_el(shape, rng)),
+            DType::F64 => TensorBuf::F64(NdArray::random_el(shape, rng)),
+            DType::I32 => TensorBuf::I32(NdArray::random_el(shape, rng)),
+            DType::Bf16 => TensorBuf::Bf16(NdArray::random_el(shape, rng)),
+        }
+    }
+
+    /// Linear-index fill (positional movement checks across dtypes).
+    pub fn iota(dtype: DType, shape: Shape) -> TensorBuf {
+        match dtype {
+            DType::F32 => TensorBuf::F32(NdArray::iota_el(shape)),
+            DType::F64 => TensorBuf::F64(NdArray::iota_el(shape)),
+            DType::I32 => TensorBuf::I32(NdArray::iota_el(shape)),
+            DType::Bf16 => TensorBuf::Bf16(NdArray::iota_el(shape)),
+        }
+    }
+}
+
+/// Checked typed views of a buffer slice: `Some` iff **every** buffer
+/// carries `T`'s dtype. The one place the dtype-tag → monomorphization
+/// step lives; both `Op::dispatch_buf` and `Pipeline::dispatch_buf`
+/// route through it.
+pub fn typed_views<'a, T: Element>(inputs: &[&'a TensorBuf]) -> Option<Vec<&'a NdArray<T>>> {
+    inputs.iter().map(|b| T::view(b)).collect()
+}
+
+/// Re-erase a typed result set into dtype-carrying buffers.
+pub fn erase_all<T: Element>(v: Vec<NdArray<T>>) -> Vec<TensorBuf> {
+    v.into_iter().map(T::buf).collect()
+}
+
+impl From<NdArray<f32>> for TensorBuf {
+    fn from(a: NdArray<f32>) -> TensorBuf {
+        TensorBuf::F32(a)
+    }
+}
+
+impl From<NdArray<f64>> for TensorBuf {
+    fn from(a: NdArray<f64>) -> TensorBuf {
+        TensorBuf::F64(a)
+    }
+}
+
+impl From<NdArray<i32>> for TensorBuf {
+    fn from(a: NdArray<i32>) -> TensorBuf {
+        TensorBuf::I32(a)
+    }
+}
+
+impl From<NdArray<u16>> for TensorBuf {
+    fn from(a: NdArray<u16>) -> TensorBuf {
+        TensorBuf::Bf16(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_shape_and_bytes() {
+        let b = TensorBuf::iota(DType::Bf16, Shape::new(&[3, 4]));
+        assert_eq!(b.dtype(), DType::Bf16);
+        assert_eq!(b.elem_size(), 2);
+        assert_eq!(b.len(), 12);
+        assert_eq!(b.as_bytes().len(), 24);
+
+        let f = TensorBuf::zeros(DType::F64, Shape::new(&[5]));
+        assert_eq!(f.elem_size(), 8);
+        assert!(f.as_bytes().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn typed_views_are_checked() {
+        let b = TensorBuf::iota(DType::I32, Shape::new(&[4]));
+        assert!(b.view::<i32>().is_some());
+        assert!(b.view::<f32>().is_none());
+        assert!(b.as_f32().is_none());
+        assert!(b.clone().into_f32().is_none());
+
+        let f = TensorBuf::from(NdArray::iota(Shape::new(&[4])));
+        assert_eq!(f.as_f32().unwrap().data(), &[0.0, 1.0, 2.0, 3.0]);
+        assert!(f.into_f32().is_some());
+    }
+
+    #[test]
+    fn typed_views_require_uniform_dtype() {
+        let a = TensorBuf::iota(DType::I32, Shape::new(&[4]));
+        let b = TensorBuf::iota(DType::I32, Shape::new(&[4]));
+        let c = TensorBuf::iota(DType::F32, Shape::new(&[4]));
+        assert!(typed_views::<i32>(&[&a, &b]).is_some());
+        assert!(typed_views::<i32>(&[&a, &c]).is_none());
+        assert!(typed_views::<f32>(&[&a, &b]).is_none());
+        let erased = erase_all(vec![NdArray::<i32>::iota_el(Shape::new(&[2]))]);
+        assert_eq!(erased[0].dtype(), DType::I32);
+    }
+
+    #[test]
+    fn random_is_deterministic_per_dtype() {
+        for dt in DType::ALL {
+            let a = TensorBuf::random(dt, Shape::new(&[64]), &mut Rng::new(3));
+            let b = TensorBuf::random(dt, Shape::new(&[64]), &mut Rng::new(3));
+            assert_eq!(a, b, "{dt}");
+            assert_eq!(a.dtype(), dt);
+        }
+    }
+}

@@ -7,14 +7,17 @@ use std::fmt;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
     F32,
+    F64,
     I32,
     Bf16,
 }
 
 impl DType {
-    /// Size of one element in bytes (drives all bandwidth accounting).
+    /// Size of one element in bytes (drives all bandwidth accounting and
+    /// the erased movement core's run arithmetic).
     pub fn size_bytes(self) -> usize {
         match self {
+            DType::F64 => 8,
             DType::F32 | DType::I32 => 4,
             DType::Bf16 => 2,
         }
@@ -24,6 +27,7 @@ impl DType {
     pub fn parse(s: &str) -> Option<DType> {
         match s {
             "f32" => Some(DType::F32),
+            "f64" => Some(DType::F64),
             "i32" => Some(DType::I32),
             "bf16" => Some(DType::Bf16),
             _ => None,
@@ -33,9 +37,19 @@ impl DType {
     pub fn name(self) -> &'static str {
         match self {
             DType::F32 => "f32",
+            DType::F64 => "f64",
             DType::I32 => "i32",
             DType::Bf16 => "bf16",
         }
+    }
+
+    /// All dtypes the execution core serves (test/bench sweeps).
+    pub const ALL: [DType; 4] = [DType::F32, DType::F64, DType::I32, DType::Bf16];
+
+    /// True when the stencil family accepts this dtype (movement ops
+    /// accept every dtype; stencils need a numeric accumulator).
+    pub fn is_numeric(self) -> bool {
+        !matches!(self, DType::Bf16)
     }
 }
 
@@ -52,15 +66,25 @@ mod tests {
     #[test]
     fn sizes() {
         assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::F64.size_bytes(), 8);
         assert_eq!(DType::I32.size_bytes(), 4);
         assert_eq!(DType::Bf16.size_bytes(), 2);
     }
 
     #[test]
     fn parse_roundtrip() {
-        for d in [DType::F32, DType::I32, DType::Bf16] {
+        for d in DType::ALL {
             assert_eq!(DType::parse(d.name()), Some(d));
         }
-        assert_eq!(DType::parse("f64"), None);
+        assert_eq!(DType::parse("f16"), None);
+        assert_eq!(DType::parse("c64"), None);
+    }
+
+    #[test]
+    fn numeric_partition() {
+        assert!(DType::F32.is_numeric());
+        assert!(DType::F64.is_numeric());
+        assert!(DType::I32.is_numeric());
+        assert!(!DType::Bf16.is_numeric());
     }
 }

@@ -1,0 +1,248 @@
+//! The `Element` marker trait — element type as a *runtime* property.
+//!
+//! The paper's kernels are templates over the element type: one
+//! Permute/Reorder/Interlace implementation serves any payload because
+//! rearrangement never inspects element values, only moves
+//! `size_bytes()`-wide lanes. This module is the Rust-side contract for
+//! that genericity:
+//!
+//! * [`Element`] — any plain-old-data payload the movement ops accept
+//!   (f32, f64, i32, bf16-carried-as-`u16`). Every `Element` maps to a
+//!   [`DType`] tag, can fabricate deterministic test data, and knows how
+//!   to enter/leave the dtype-erased [`TensorBuf`] container.
+//! * [`Numeric`] — the small arithmetic subset the §III.D stencil family
+//!   needs (`Element + Add + Mul` plus the f64-accumulator hooks that
+//!   keep naive and hostexec bit-identical). Implemented for f32, f64
+//!   and i32; bf16 stays movement-only.
+//! * [`bytes_of`] / [`bytes_of_mut`] — the safe byte views the erased
+//!   movement core in `crate::hostexec` operates on. Sound because
+//!   `Element` is only implemented for types with no padding and no
+//!   invalid bit patterns.
+
+use super::buf::TensorBuf;
+use super::dtype::DType;
+use super::ndarray::NdArray;
+use crate::util::rng::Rng;
+
+/// A plain-old-data tensor element. Implementors must be inhabited by
+/// every bit pattern (so byte-level movement can never forge an invalid
+/// value) and free of padding (so [`bytes_of`] views every byte).
+pub trait Element:
+    Copy + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static
+{
+    /// The runtime tag this element type erases to.
+    const DTYPE: DType;
+
+    /// Deterministic pseudo-random value (tests/benches sweep dtypes).
+    fn random(rng: &mut Rng) -> Self;
+
+    /// Encode a linear index (iota fills; positional movement checks).
+    fn from_index(i: usize) -> Self;
+
+    /// Checked typed view of an erased buffer (None on dtype mismatch).
+    fn view(buf: &TensorBuf) -> Option<&NdArray<Self>>;
+
+    /// Erase a typed array into the dtype-carrying container.
+    fn buf(a: NdArray<Self>) -> TensorBuf;
+}
+
+/// The arithmetic subset the stencil family is generic over. The
+/// accumulator hooks route every tap sum through f64 in spec order —
+/// exactly the golden references' arithmetic, so the generic hostexec
+/// stencil stays bit-identical to the naive walk for every `Numeric`.
+pub trait Numeric:
+    Element + std::ops::Add<Output = Self> + std::ops::Mul<Output = Self>
+{
+    /// Widen into the f64 tap accumulator.
+    fn to_acc(self) -> f64;
+
+    /// Narrow the finished accumulator back to the element type.
+    fn from_acc(acc: f64) -> Self;
+}
+
+impl Element for f32 {
+    const DTYPE: DType = DType::F32;
+
+    fn random(rng: &mut Rng) -> f32 {
+        rng.gen_f32()
+    }
+
+    fn from_index(i: usize) -> f32 {
+        i as f32
+    }
+
+    fn view(buf: &TensorBuf) -> Option<&NdArray<f32>> {
+        match buf {
+            TensorBuf::F32(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    fn buf(a: NdArray<f32>) -> TensorBuf {
+        TensorBuf::F32(a)
+    }
+}
+
+impl Numeric for f32 {
+    fn to_acc(self) -> f64 {
+        self as f64
+    }
+
+    fn from_acc(acc: f64) -> f32 {
+        acc as f32
+    }
+}
+
+impl Element for f64 {
+    const DTYPE: DType = DType::F64;
+
+    fn random(rng: &mut Rng) -> f64 {
+        rng.gen_f64()
+    }
+
+    fn from_index(i: usize) -> f64 {
+        i as f64
+    }
+
+    fn view(buf: &TensorBuf) -> Option<&NdArray<f64>> {
+        match buf {
+            TensorBuf::F64(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    fn buf(a: NdArray<f64>) -> TensorBuf {
+        TensorBuf::F64(a)
+    }
+}
+
+impl Numeric for f64 {
+    fn to_acc(self) -> f64 {
+        self
+    }
+
+    fn from_acc(acc: f64) -> f64 {
+        acc
+    }
+}
+
+impl Element for i32 {
+    const DTYPE: DType = DType::I32;
+
+    fn random(rng: &mut Rng) -> i32 {
+        rng.next_u64() as i32
+    }
+
+    fn from_index(i: usize) -> i32 {
+        i as i32
+    }
+
+    fn view(buf: &TensorBuf) -> Option<&NdArray<i32>> {
+        match buf {
+            TensorBuf::I32(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    fn buf(a: NdArray<i32>) -> TensorBuf {
+        TensorBuf::I32(a)
+    }
+}
+
+impl Numeric for i32 {
+    fn to_acc(self) -> f64 {
+        self as f64
+    }
+
+    fn from_acc(acc: f64) -> i32 {
+        // `as` saturates on overflow/NaN — deterministic on both the
+        // naive and hostexec sides, which is all bit-identity needs.
+        acc as i32
+    }
+}
+
+/// bf16 carried as its raw bit pattern. Movement ops never interpret
+/// the bits; there is no bf16 arithmetic here, so no `Numeric` impl —
+/// stencils on bf16 inputs surface `OpError::UnsupportedDtype`.
+impl Element for u16 {
+    const DTYPE: DType = DType::Bf16;
+
+    fn random(rng: &mut Rng) -> u16 {
+        // The bf16 truncation of a uniform f32 in [0, 1): always a
+        // valid, non-NaN bf16 payload.
+        (rng.gen_f32().to_bits() >> 16) as u16
+    }
+
+    fn from_index(i: usize) -> u16 {
+        ((i as f32).to_bits() >> 16) as u16
+    }
+
+    fn view(buf: &TensorBuf) -> Option<&NdArray<u16>> {
+        match buf {
+            TensorBuf::Bf16(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    fn buf(a: NdArray<u16>) -> TensorBuf {
+        TensorBuf::Bf16(a)
+    }
+}
+
+/// Byte view of a typed slice — the boundary where typed tensors enter
+/// the erased movement core. Safe for `Element` types (no padding).
+pub fn bytes_of<T: Element>(s: &[T]) -> &[u8] {
+    // SAFETY: Element types are POD: no padding, all bit patterns valid,
+    // and u8 has the weakest alignment.
+    unsafe { std::slice::from_raw_parts(s.as_ptr().cast::<u8>(), std::mem::size_of_val(s)) }
+}
+
+/// Mutable byte view of a typed slice (the erased core's output side).
+pub fn bytes_of_mut<T: Element>(s: &mut [T]) -> &mut [u8] {
+    // SAFETY: as in [`bytes_of`]; writing any bytes yields valid T.
+    unsafe {
+        std::slice::from_raw_parts_mut(s.as_mut_ptr().cast::<u8>(), std::mem::size_of_val(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_tags_and_sizes_line_up() {
+        assert_eq!(<f32 as Element>::DTYPE, DType::F32);
+        assert_eq!(<f64 as Element>::DTYPE, DType::F64);
+        assert_eq!(<i32 as Element>::DTYPE, DType::I32);
+        assert_eq!(<u16 as Element>::DTYPE, DType::Bf16);
+        assert_eq!(std::mem::size_of::<u16>(), DType::Bf16.size_bytes());
+        assert_eq!(std::mem::size_of::<f64>(), DType::F64.size_bytes());
+    }
+
+    #[test]
+    fn byte_views_cover_every_byte() {
+        let v: Vec<f32> = vec![1.0, -2.5, 3.25];
+        assert_eq!(bytes_of(&v).len(), 12);
+        let mut w: Vec<u16> = vec![0; 5];
+        bytes_of_mut(&mut w).copy_from_slice(&[1, 0, 2, 0, 3, 0, 4, 0, 5, 0]);
+        assert_eq!(w, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn from_index_is_monotone_for_small_indices() {
+        for i in 1..100usize {
+            assert!(f32::from_index(i) > f32::from_index(i - 1));
+            assert!(f64::from_index(i) > f64::from_index(i - 1));
+            assert!(i32::from_index(i) > i32::from_index(i - 1));
+        }
+        // bf16 loses precision but stays the truncation of the f32.
+        assert_eq!(u16::from_index(7), ((7.0f32).to_bits() >> 16) as u16);
+    }
+
+    #[test]
+    fn numeric_roundtrip() {
+        assert_eq!(f32::from_acc(1.5f32.to_acc()), 1.5);
+        assert_eq!(i32::from_acc((-7i32).to_acc()), -7);
+        assert_eq!(f64::from_acc(2.25), 2.25);
+    }
+}

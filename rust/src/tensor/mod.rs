@@ -6,15 +6,19 @@
 //!   "dim 0" being the fastest dimension of the default layout. Paper dim
 //!   `k` of a rank-`n` array therefore lives on row-major axis `n-1-k`.
 
+pub mod buf;
 pub mod collapse;
 pub mod dtype;
+pub mod element;
 pub mod iter;
 pub mod ndarray;
 pub mod order;
 pub mod shape;
 
+pub use buf::TensorBuf;
 pub use collapse::{canonicalize_axes, trailing_identity};
 pub use dtype::DType;
+pub use element::{bytes_of, bytes_of_mut, Element, Numeric};
 pub use iter::StridedWalk;
 pub use ndarray::NdArray;
 pub use order::Order;

@@ -1,6 +1,7 @@
 //! Host n-dimensional array — the buffer type flowing through the
 //! coordinator, the PJRT runtime and the CPU reference implementations.
 
+use super::element::Element;
 use super::shape::Shape;
 use crate::util::rng::Rng;
 
@@ -85,6 +86,27 @@ impl<T: Copy + Default> NdArray<T> {
         NdArray {
             shape,
             data: self.data,
+        }
+    }
+}
+
+impl<T: Element> NdArray<T> {
+    /// Deterministic random array of any [`Element`] dtype — the
+    /// dtype-sweeping twin of [`NdArray::<f32>::random`].
+    pub fn random_el(shape: Shape, rng: &mut Rng) -> NdArray<T> {
+        let n = shape.num_elements();
+        NdArray {
+            shape,
+            data: (0..n).map(|_| T::random(rng)).collect(),
+        }
+    }
+
+    /// Linear-index fill of any [`Element`] dtype (cf. [`NdArray::<f32>::iota`]).
+    pub fn iota_el(shape: Shape) -> NdArray<T> {
+        let n = shape.num_elements();
+        NdArray {
+            shape,
+            data: (0..n).map(T::from_index).collect(),
         }
     }
 }

@@ -4,8 +4,8 @@
 //! everywhere. Runs on a bare checkout (no artifacts, no PJRT).
 
 use gdrk::hostexec;
-use gdrk::ops::{self, Op, StencilSpec};
-use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::ops::{self, Op, OpError, StencilSpec};
+use gdrk::tensor::{DType, NdArray, Order, Shape, TensorBuf};
 use gdrk::util::rng::Rng;
 
 /// Random shape of rank 1..=5 with dims 1..=33 — deliberately crossing
@@ -212,6 +212,123 @@ fn validation_errors_match_reference_behaviour() {
     let op = Op::Interlace { n: 3 };
     assert!(op.reference(&[&x]).is_err());
     assert!(op.execute_fast(&[&x]).is_err());
+}
+
+/// Movement ops across every dtype (f32, f64, i32, bf16): the hostexec
+/// backend must be bit-identical to the per-dtype golden reference —
+/// through both the Naive and HostExec backends of the dynamic
+/// dispatch — and must preserve the dtype tag end to end.
+#[test]
+fn movement_ops_bit_identical_across_dtypes() {
+    let mut rng = Rng::new(0xD7E3A);
+    for dt in DType::ALL {
+        // Permute, random shapes/orders.
+        for case in 0..40 {
+            let dims = random_shape(&mut rng);
+            let order = Order::new(&rng.permutation(dims.len())).unwrap();
+            let x = TensorBuf::random(dt, Shape::new(&dims), &mut rng);
+            let op = Op::Reorder { order };
+            let want = op.reference_buf(&[&x]).unwrap();
+            let got = op.execute_fast_buf(&[&x]).unwrap();
+            assert_eq!(got, want, "{dt} case {case}: dims {dims:?}");
+            assert_eq!(got[0].dtype(), dt);
+        }
+        // Subarray windows.
+        for _ in 0..20 {
+            let dims = random_shape(&mut rng);
+            let base: Vec<usize> = dims.iter().map(|&d| rng.gen_range(d)).collect();
+            let shape: Vec<usize> = dims
+                .iter()
+                .zip(&base)
+                .map(|(&d, &b)| rng.gen_range(d - b) + 1)
+                .collect();
+            let x = TensorBuf::random(dt, Shape::new(&dims), &mut rng);
+            let op = Op::Subarray { base, shape };
+            assert_eq!(
+                op.execute_fast_buf(&[&x]).unwrap(),
+                op.reference_buf(&[&x]).unwrap(),
+                "{dt} subarray dims {dims:?}"
+            );
+        }
+        // Interlace / deinterlace roundtrip.
+        for _ in 0..10 {
+            let n = rng.gen_between(2, 6);
+            let len = rng.gen_between(1, 3000);
+            let lanes: Vec<TensorBuf> = (0..n)
+                .map(|_| TensorBuf::random(dt, Shape::new(&[len]), &mut rng))
+                .collect();
+            let refs: Vec<&TensorBuf> = lanes.iter().collect();
+            let op = Op::Interlace { n };
+            let want = op.reference_buf(&refs).unwrap();
+            let got = op.execute_fast_buf(&refs).unwrap();
+            assert_eq!(got, want, "{dt} interlace n={n}");
+            let op = Op::Deinterlace { n };
+            let planes = op.execute_fast_buf(&[&got[0]]).unwrap();
+            assert_eq!(planes, op.reference_buf(&[&got[0]]).unwrap());
+            assert_eq!(planes, lanes, "{dt} roundtrip n={n}");
+        }
+        // Copy family.
+        let x = TensorBuf::random(dt, Shape::new(&[50_000]), &mut rng);
+        for op in [
+            Op::Copy,
+            Op::ReadRange { base: 17, count: 40_000 },
+            Op::ReadStrided { base: 3, stride: 5, count: 9_999 },
+        ] {
+            assert_eq!(
+                op.execute_fast_buf(&[&x]).unwrap(),
+                op.reference_buf(&[&x]).unwrap(),
+                "{dt} {op:?}"
+            );
+        }
+    }
+}
+
+/// Movement is positionally identical across dtypes: permuting an iota
+/// array of any dtype lands the value encoding index `i` wherever the
+/// f32 permute lands `i as f32` — the bytes move as one index map.
+#[test]
+fn movement_positions_agree_across_dtypes() {
+    let mut rng = Rng::new(0xD7E3B);
+    for _ in 0..20 {
+        // Small enough that every index is exact in f32 (the anchor).
+        let rank = rng.gen_between(1, 5);
+        let dims: Vec<usize> = (0..rank).map(|_| rng.gen_between(1, 18)).collect();
+        let order = Order::new(&rng.permutation(dims.len())).unwrap();
+        let op = Op::Reorder { order };
+        let f = TensorBuf::iota(DType::F32, Shape::new(&dims));
+        let anchor = op.execute_fast_buf(&[&f]).unwrap();
+        let anchor = anchor[0].as_f32().unwrap();
+        let q = TensorBuf::iota(DType::I32, Shape::new(&dims));
+        let got = op.execute_fast_buf(&[&q]).unwrap();
+        let got = got[0].view::<i32>().unwrap();
+        for (a, b) in anchor.data().iter().zip(got.data()) {
+            assert_eq!(*a as i32, *b, "dims {dims:?}");
+        }
+    }
+}
+
+/// Stencils: generic over the numeric dtypes (f32, i32), bit-identical
+/// per dtype; bf16 surfaces a typed UnsupportedDtype on both backends.
+#[test]
+fn stencil_dtypes_numeric_only() {
+    let mut rng = Rng::new(0xD7E3C);
+    let spec = StencilSpec::FdLaplacian { order: 2, scale: 0.7 };
+    for dt in [DType::F32, DType::I32] {
+        let x = TensorBuf::random(dt, Shape::new(&[37, 29]), &mut rng);
+        let op = Op::Stencil { spec: spec.clone() };
+        let want = op.reference_buf(&[&x]).unwrap();
+        let got = op.execute_fast_buf(&[&x]).unwrap();
+        assert_eq!(got, want, "{dt}");
+        assert_eq!(got[0].dtype(), dt);
+    }
+    let x = TensorBuf::random(DType::Bf16, Shape::new(&[37, 29]), &mut rng);
+    let op = Op::Stencil { spec };
+    for result in [op.reference_buf(&[&x]), op.execute_fast_buf(&[&x])] {
+        assert!(
+            matches!(result, Err(OpError::UnsupportedDtype { dtype: DType::Bf16, .. })),
+            "{result:?}"
+        );
+    }
 }
 
 #[test]

@@ -5,7 +5,7 @@ use gdrk::cfd::{CpuSolver, GpuModelDriver, Params};
 use gdrk::coordinator::{Backend, Metrics, Service, ServiceConfig};
 use gdrk::ops::{Op, StencilSpec};
 use gdrk::runtime::Tensor;
-use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::tensor::{DType, NdArray, Order, Shape, TensorBuf};
 use gdrk::util::rng::Rng;
 
 fn host_service(backend: Backend) -> Service {
@@ -40,6 +40,32 @@ fn hostexec_service_serves_rearrangement_ops() {
         assert_eq!(out[0].as_f32().unwrap(), &want[0], "{backend:?}");
         service.shutdown();
     }
+}
+
+#[test]
+fn hostexec_service_serves_every_dtype() {
+    // The service resolves dtype from the request tensors: the same
+    // artifact name serves i32 and bf16 payloads (batched separately by
+    // the dtype-aware key), and the response carries the dtype back.
+    let service = host_service(Backend::HostExec);
+    let mut rng = Rng::new(0xD7);
+    let op = Op::Reorder {
+        order: Order::new(&[2, 0, 1]).unwrap(),
+    };
+    for dt in [DType::I32, DType::Bf16, DType::F64] {
+        let x = TensorBuf::random(dt, Shape::new(&[12, 18, 24]), &mut rng);
+        let out = service
+            .call("permute3d_o201", vec![x.clone()])
+            .expect("dtype call ok");
+        let want = op.reference_buf(&[&x]).unwrap();
+        assert_eq!(out[0], want[0], "{dt}");
+        assert_eq!(out[0].dtype(), dt);
+    }
+    // A stencil artifact on bf16 fails with the typed dtype error.
+    let img = TensorBuf::random(DType::Bf16, Shape::new(&[32, 32]), &mut rng);
+    let err = service.call("fd2_32", vec![img]).expect_err("must fail");
+    assert!(err.contains("unsupported dtype"), "got: {err}");
+    service.shutdown();
 }
 
 #[test]
@@ -107,6 +133,16 @@ fn pipeline_requests_execute_whole_chains() {
             .call("pipe:copy_4k+nope", vec![Tensor::F32(random_f32(&[16], 1))])
             .expect_err("must fail");
         assert!(err.contains("unknown pipeline"), "got: {err}");
+
+        // Mixed-dtype composite requests are rejected with the typed
+        // pipeline error, whatever backend serves them.
+        let mut rng = Rng::new(0x31);
+        let f = TensorBuf::random(DType::F32, Shape::new(&[64]), &mut rng);
+        let i = TensorBuf::random(DType::I32, Shape::new(&[64]), &mut rng);
+        let err = service
+            .call("pipe:interlace_n2+deinterlace_n2", vec![f, i])
+            .expect_err("mixed dtypes must fail");
+        assert!(err.contains("mix dtypes"), "{backend:?}: got: {err}");
         service.shutdown();
     }
 }

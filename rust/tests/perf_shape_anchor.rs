@@ -63,8 +63,14 @@ fn hostexec_measured_ratio_matches_sim_shape() {
         .find(|r| {
             r.get("op").and_then(|o| o.as_str()) == Some("permute3d")
                 && r.get("order").and_then(|o| o.as_str()) == Some("[1 0 2]")
+                // The bench sweeps element widths; anchor on the f32
+                // record (older jsons carry no dtype field = f32-only).
+                && match r.get("dtype") {
+                    Some(d) => d.as_str() == Some("f32"),
+                    None => true,
+                }
         })
-        .expect("permute3d [1 0 2] record in bench json");
+        .expect("permute3d [1 0 2] f32 record in bench json");
     let host_ratio = rec
         .get("speedup")
         .and_then(|s| s.as_f64())

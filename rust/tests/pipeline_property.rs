@@ -4,9 +4,9 @@
 //! stencil chains must move at most half the full-size-buffer bytes of
 //! the unfused chain. Runs on a bare checkout (no artifacts, no PJRT).
 
-use gdrk::ops::{Op, StencilSpec};
-use gdrk::pipeline::Pipeline;
-use gdrk::tensor::{NdArray, Order, Shape};
+use gdrk::ops::{ExecBackend, Op, OpError, StencilSpec};
+use gdrk::pipeline::{Pipeline, PipelineError};
+use gdrk::tensor::{DType, NdArray, Order, Shape, TensorBuf};
 use gdrk::util::rng::Rng;
 
 /// The unfused naive chain, written independently of the pipeline
@@ -55,8 +55,15 @@ fn random_spec(rng: &mut Rng) -> StencilSpec {
 }
 
 /// Build a random chain that is valid for `dims0`, tracking the lane
-/// shape and width the way the pipeline's execution rules do.
-fn random_chain(rng: &mut Rng, dims0: &[usize], len: usize) -> Vec<Op> {
+/// shape and width the way the pipeline's execution rules do. With
+/// `allow_stencil == false` the chain stays movement-only, so it is
+/// valid for every dtype (bf16 included).
+fn random_chain_dtyped(
+    rng: &mut Rng,
+    dims0: &[usize],
+    len: usize,
+    allow_stencil: bool,
+) -> Vec<Op> {
     let mut ops = Vec::with_capacity(len);
     let mut dims = dims0.to_vec();
     let mut width = 1usize;
@@ -84,7 +91,7 @@ fn random_chain(rng: &mut Rng, dims0: &[usize], len: usize) -> Vec<Op> {
                     ops.push(Op::Subarray { base, shape });
                     break;
                 }
-                3 | 4 if dims.len() == 2 => {
+                3 | 4 if allow_stencil && dims.len() == 2 => {
                     // Bias toward stencils on rank-2 lanes so fusable
                     // runs of >= 2 appear often.
                     ops.push(Op::Stencil { spec: random_spec(rng) });
@@ -113,6 +120,10 @@ fn random_chain(rng: &mut Rng, dims0: &[usize], len: usize) -> Vec<Op> {
         }
     }
     ops
+}
+
+fn random_chain(rng: &mut Rng, dims0: &[usize], len: usize) -> Vec<Op> {
+    random_chain_dtyped(rng, dims0, len, true)
 }
 
 #[test]
@@ -163,6 +174,82 @@ fn rank2_stencil_heavy_chains_fuse_and_match() {
         assert_eq!(got, want, "case {case}: {h}x{w} depth {depth}");
         assert_eq!(stats.fused_chains, 1, "case {case}");
         assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
+    }
+}
+
+/// Dtype sweep over random chains: movement-only chains execute
+/// bit-identically (rewritten + fused vs naive) for every dtype and
+/// preserve the dtype through widening/narrowing; chains with stencils
+/// run on the numeric dtypes.
+#[test]
+fn random_chains_bit_identical_per_dtype() {
+    let mut rng = Rng::new(0xB1BE22E);
+    for dt in DType::ALL {
+        for case in 0..40 {
+            let rank = rng.gen_between(1, 6);
+            let dims: Vec<usize> = (0..rank).map(|_| rng.gen_between(1, 34)).collect();
+            let len = rng.gen_between(1, 7);
+            let allow_stencil = dt.is_numeric();
+            let stages = random_chain_dtyped(&mut rng, &dims, len, allow_stencil);
+            let x = TensorBuf::random(dt, Shape::new(&dims), &mut rng);
+            let pipe = Pipeline::new(stages.clone()).unwrap();
+            let want = pipe.reference_buf(&[&x]).unwrap();
+            let got = pipe.execute_buf(&[&x]).unwrap();
+            assert_eq!(
+                got, want,
+                "{dt} case {case}: dims {dims:?} stages {stages:?}"
+            );
+            for lane in &got {
+                assert_eq!(lane.dtype(), dt, "{dt} case {case}: dtype dropped");
+            }
+        }
+    }
+}
+
+/// Mixed-dtype chains are rejected with the pipeline's typed error on
+/// both backends — never coerced, never silently run as f32.
+#[test]
+fn mixed_dtype_chain_rejected() {
+    let mut rng = Rng::new(0xB1BE33E);
+    let a = TensorBuf::random(DType::F32, Shape::new(&[128]), &mut rng);
+    let b = TensorBuf::random(DType::I32, Shape::new(&[128]), &mut rng);
+    let c = TensorBuf::random(DType::Bf16, Shape::new(&[128]), &mut rng);
+    let pipe = Pipeline::new(vec![Op::Interlace { n: 2 }]).unwrap();
+    for backend in [ExecBackend::Naive, ExecBackend::Host] {
+        for pair in [[&a, &b], [&a, &c], [&b, &c]] {
+            let err = pipe.dispatch_buf(&pair, backend).unwrap_err();
+            match err {
+                PipelineError::MixedDtype { found } => assert_eq!(found.len(), 2),
+                other => panic!("expected MixedDtype, got {other:?}"),
+            }
+        }
+        // Uniform dtypes still pass through the same entry point.
+        let b2 = TensorBuf::random(DType::I32, Shape::new(&[128]), &mut rng);
+        assert!(pipe.dispatch_buf(&[&b, &b2], backend).is_ok());
+    }
+}
+
+/// bf16 chains that still contain a stencil stage after rewriting fail
+/// with a typed per-stage UnsupportedDtype, not a panic or silent skip.
+#[test]
+fn bf16_stencil_chain_rejected_with_stage_index() {
+    let mut rng = Rng::new(0xB1BE44E);
+    let img = TensorBuf::random(DType::Bf16, Shape::new(&[24, 24]), &mut rng);
+    let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+    let pipe = Pipeline::new(vec![
+        Op::Stencil { spec: spec.clone() },
+        Op::Stencil { spec },
+    ])
+    .unwrap();
+    for backend in [ExecBackend::Naive, ExecBackend::Host] {
+        let err = pipe.dispatch_buf(&[&img], backend).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                PipelineError::Stage { source: OpError::UnsupportedDtype { .. }, .. }
+            ),
+            "{backend:?}: {err:?}"
+        );
     }
 }
 
