@@ -15,10 +15,11 @@
 //! runtime) steps the identical omega-psi discretization with the
 //! row-parallel CPU solver, threads sized like the hostexec worker pool
 //! — same `CavityRun` surface, so callers and benches run unchanged on
-//! a bare checkout. Its K Jacobi sweeps execute as one fused
-//! rolling-window chain per step
-//! ([`crate::pipeline::fuse::jacobi_chain`], bit-identical to the
-//! unfused sweeps — the host analogue of the `cavity_runK` chunk
+//! a bare checkout. Each step executes **fully fused**: the K Jacobi
+//! sweeps, velocity derivation, Thom wall vorticity and transport run
+//! as one rolling-window pass
+//! ([`crate::pipeline::fuse::cavity_fused_step`], bit-identical to the
+//! loop-by-loop step — the host analogue of the `cavity_runK` chunk
 //! artifact's on-device fusion), measured in `benches/pipeline_fusion.rs`.
 
 use crate::cfd::cpu::{CpuSolver, Params};

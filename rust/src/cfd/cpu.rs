@@ -80,24 +80,49 @@ impl CpuSolver {
 
     /// One time step; returns the Linf residual of omega (as in python).
     pub fn step(&mut self) -> f32 {
-        self.step_impl(1, false)
+        self.step_impl(1)
     }
 
     /// One time step with row-parallel Jacobi/transport over `threads`.
     pub fn step_parallel(&mut self, threads: usize) -> f32 {
-        self.step_impl(threads.max(1), false)
+        self.step_impl(threads.max(1))
     }
 
-    /// One time step executing the K Jacobi sweeps as a single fused
-    /// rolling-window chain ([`crate::pipeline::fuse::jacobi_chain`]):
-    /// one worker spawn and one full psi read/write for the whole
-    /// Poisson solve instead of K. Bit-identical to
+    /// One time step executing the **whole** step — the K Jacobi
+    /// sweeps, the velocity derivation, the Thom wall vorticity and the
+    /// explicit-Euler transport — as a single fused rolling-window pass
+    /// ([`crate::pipeline::fuse::cavity_fused_step`]): one worker spawn
+    /// and one read/write of the full fields per step instead of one
+    /// per sweep plus three more full-field passes. Bit-identical to
     /// [`CpuSolver::step_parallel`].
     pub fn step_fused(&mut self, threads: usize) -> f32 {
-        self.step_impl(threads.max(1), true)
+        let p = self.params;
+        let n = p.n;
+        let h = p.h();
+        let coef = crate::pipeline::fuse::StepCoef {
+            iters: p.jacobi_iters,
+            h: h as f32,
+            h2: (h * h) as f32,
+            inv2h: (0.5 * (n as f64 - 1.0)) as f32,
+            invh2: ((n as f64 - 1.0) * (n as f64 - 1.0)) as f32,
+            nu: p.nu() as f32,
+            dt: p.dt as f32,
+            lid: p.lid_u as f32,
+        };
+        let out = crate::pipeline::fuse::cavity_fused_step(
+            self.psi.data(),
+            self.omega.data(),
+            n,
+            &coef,
+            threads.max(1),
+        );
+        let shape = Shape::new(&[n, n]);
+        self.psi = NdArray::from_vec(shape.clone(), out.psi);
+        self.omega = NdArray::from_vec(shape, out.omega);
+        out.residual
     }
 
-    fn step_impl(&mut self, threads: usize, fused_poisson: bool) -> f32 {
+    fn step_impl(&mut self, threads: usize) -> f32 {
         let p = self.params;
         let n = p.n;
         let h = p.h();
@@ -108,39 +133,27 @@ impl CpuSolver {
         let dt = p.dt as f32;
         let lid = p.lid_u as f32;
 
-        // 1. Poisson solve: K Jacobi sweeps, psi = 0 on walls. Fused
-        // path: all K sweeps in one rolling-window pass (bit-identical).
+        // 1. Poisson solve: K Jacobi sweeps, psi = 0 on walls.
         let mut psi = self.psi.data().to_vec();
         let omega = self.omega.data().to_vec();
-        if fused_poisson {
-            psi = crate::pipeline::fuse::jacobi_chain(
-                &psi,
-                &omega,
-                n,
-                h2,
-                p.jacobi_iters,
-                threads,
-            );
-        } else {
-            let mut psi_next = vec![0.0f32; n * n];
-            for _ in 0..p.jacobi_iters {
-                par_rows(threads, n, &mut psi_next, |i, row| {
-                    for j in 0..n {
-                        let s = nb(&psi, n, i as i64, j as i64 + 1)
-                            + nb(&psi, n, i as i64, j as i64 - 1)
-                            + nb(&psi, n, i as i64 + 1, j as i64)
-                            + nb(&psi, n, i as i64 - 1, j as i64);
-                        let v = 0.25 * (s + h2 * at(&omega, n, i, j));
-                        // interior mask
-                        row[j] = if i == 0 || j == 0 || i == n - 1 || j == n - 1 {
-                            0.0
-                        } else {
-                            v
-                        };
-                    }
-                });
-                std::mem::swap(&mut psi, &mut psi_next);
-            }
+        let mut psi_next = vec![0.0f32; n * n];
+        for _ in 0..p.jacobi_iters {
+            par_rows(threads, n, &mut psi_next, |i, row| {
+                for j in 0..n {
+                    let s = nb(&psi, n, i as i64, j as i64 + 1)
+                        + nb(&psi, n, i as i64, j as i64 - 1)
+                        + nb(&psi, n, i as i64 + 1, j as i64)
+                        + nb(&psi, n, i as i64 - 1, j as i64);
+                    let v = 0.25 * (s + h2 * at(&omega, n, i, j));
+                    // interior mask
+                    row[j] = if i == 0 || j == 0 || i == n - 1 || j == n - 1 {
+                        0.0
+                    } else {
+                        v
+                    };
+                }
+            });
+            std::mem::swap(&mut psi, &mut psi_next);
         }
 
         // 2. Velocities (masked central differences + lid BC).
@@ -315,8 +328,9 @@ mod tests {
 
     #[test]
     fn fused_matches_serial_bitwise() {
-        // The fused rolling-window Poisson chain must be bit-identical
-        // to the sweep loop, residuals included.
+        // The fully-fused step (sweeps + velocities + Thom walls +
+        // transport in one rolling-window pass) must be bit-identical
+        // to the loop-by-loop step, residuals included.
         for (n, iters) in [(40usize, 10usize), (48, 20), (33, 1), (24, 0)] {
             let p = Params::default_for(n, 800.0, iters);
             let mut a = CpuSolver::new(p);
@@ -329,6 +343,23 @@ mod tests {
             assert_eq!(a.omega.data(), b.omega.data());
             assert_eq!(a.psi.data(), b.psi.data());
         }
+    }
+
+    #[test]
+    fn fused_multiband_matches_parallel_bitwise() {
+        // n*n clears PARALLEL_THRESHOLD so the fused pass actually
+        // bands across workers (halo recompute + the race-free psi
+        // side-channel capture).
+        let p = Params::default_for(192, 900.0, 7);
+        let mut a = CpuSolver::new(p);
+        let mut b = CpuSolver::new(p);
+        for step in 0..8 {
+            let ra = a.step_parallel(4);
+            let rb = b.step_fused(4);
+            assert_eq!(ra, rb, "step {step}");
+        }
+        assert_eq!(a.omega.data(), b.omega.data());
+        assert_eq!(a.psi.data(), b.psi.data());
     }
 
     #[test]

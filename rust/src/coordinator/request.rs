@@ -1,5 +1,6 @@
 //! Request/response types crossing the coordinator boundary.
 
+use crate::pipeline::PipeStats;
 use crate::runtime::Tensor;
 use std::time::Instant;
 
@@ -57,6 +58,10 @@ pub struct Response {
     pub queue_seconds: f64,
     /// Seconds spent executing on the device.
     pub exec_seconds: f64,
+    /// Pipeline accounting for `pipe:` chain requests served on the
+    /// host path: rewrite counts plus fused vs unfused traffic bytes.
+    /// `None` for single-op requests and PJRT-served artifacts.
+    pub pipe_stats: Option<PipeStats>,
 }
 
 impl Response {
@@ -110,6 +115,7 @@ mod tests {
             result: Ok(vec![]),
             queue_seconds: 0.0,
             exec_seconds: 0.0,
+            pipe_stats: None,
         };
         assert!(ok.is_ok());
         let err = Response {
@@ -118,6 +124,7 @@ mod tests {
             result: Err("boom".into()),
             queue_seconds: 0.0,
             exec_seconds: 0.0,
+            pipe_stats: Some(PipeStats::default()),
         };
         assert!(!err.is_ok());
     }

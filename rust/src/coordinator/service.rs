@@ -20,6 +20,7 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response};
 use crate::ops::ExecBackend;
+use crate::pipeline::PipeStats;
 use crate::runtime::artifact::{Manifest, ManifestError};
 use crate::runtime::{Runtime, Tensor};
 use crate::tensor::TensorBuf;
@@ -137,9 +138,20 @@ impl Service {
         artifact: impl Into<String>,
         inputs: Vec<Tensor>,
     ) -> Result<Vec<Tensor>, String> {
+        self.call_with_stats(artifact, inputs).map(|(outs, _)| outs)
+    }
+
+    /// [`Service::call`] also returning the pipeline accounting the
+    /// worker reported (`Some` for host-served `pipe:` chain requests:
+    /// rewrite counts, fused vs unfused traffic bytes).
+    pub fn call_with_stats(
+        &self,
+        artifact: impl Into<String>,
+        inputs: Vec<Tensor>,
+    ) -> Result<(Vec<Tensor>, Option<PipeStats>), String> {
         let (_, rx) = self.submit(artifact, inputs);
         match rx.recv() {
-            Ok(resp) => resp.result,
+            Ok(resp) => resp.result.map(|outs| (outs, resp.pipe_stats)),
             Err(_) => Err("worker disconnected".to_string()),
         }
     }
@@ -252,7 +264,11 @@ impl Executor {
         }
     }
 
-    fn execute(&self, artifact: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>, String> {
+    fn execute(
+        &self,
+        artifact: &str,
+        inputs: &[Tensor],
+    ) -> Result<(Vec<Tensor>, Option<PipeStats>), String> {
         match self {
             Executor::Pjrt(rt) => {
                 if artifact.starts_with("pipe:") {
@@ -262,7 +278,9 @@ impl Executor {
                     // which executor Auto resolved to.
                     return host_execute(ExecBackend::Host, artifact, inputs, None);
                 }
-                rt.execute(artifact, inputs).map_err(|e| e.to_string())
+                rt.execute(artifact, inputs)
+                    .map(|outs| (outs, None))
+                    .map_err(|e| e.to_string())
             }
             Executor::Host { mode, manifest } => {
                 host_execute(*mode, artifact, inputs, manifest.as_ref())
@@ -276,10 +294,12 @@ impl Executor {
 /// the dtype the request carries. Composite `pipe:<a>+<b>+...` names
 /// resolve to a whole [`Pipeline`] (rewritten + fused on the `HostExec`
 /// backend) — one request, one response, no full-size intermediates
-/// between the chained stages; mixed-dtype chains are rejected with the
-/// pipeline's typed `MixedDtype` error. When a manifest is present the
-/// inputs are validated against its shape/dtype specs first, so the
-/// host path honours the same contract the PJRT path enforces.
+/// between the chained stages, and the response reports the run's
+/// [`PipeStats`] (rewrite counts, fused vs unfused traffic bytes);
+/// mixed-dtype chains are rejected with the pipeline's typed
+/// `MixedDtype` error. When a manifest is present the inputs are
+/// validated against its shape/dtype specs first, so the host path
+/// honours the same contract the PJRT path enforces.
 ///
 /// [`Pipeline`]: crate::pipeline::Pipeline
 fn host_execute(
@@ -287,7 +307,7 @@ fn host_execute(
     artifact: &str,
     inputs: &[Tensor],
     manifest: Option<&Manifest>,
-) -> Result<Vec<Tensor>, String> {
+) -> Result<(Vec<Tensor>, Option<PipeStats>), String> {
     if let Some(m) = manifest {
         if let Some(entry) = m.get(artifact) {
             crate::runtime::validate_inputs_against(entry, artifact, inputs)
@@ -299,12 +319,17 @@ fn host_execute(
         let pipe = crate::hostexec::pipeline_for_artifact(artifact).ok_or_else(|| {
             format!("unknown pipeline '{artifact}' (expected pipe:<artifact>+<artifact>+...)")
         })?;
-        return pipe.dispatch_buf(&bufs, mode).map_err(|e| e.to_string());
+        return pipe
+            .dispatch_buf_with_stats(&bufs, mode)
+            .map(|(outs, stats)| (outs, Some(stats)))
+            .map_err(|e| e.to_string());
     }
     let op = crate::hostexec::op_for_artifact(artifact).ok_or_else(|| {
         format!("unknown artifact '{artifact}' (no host-backend op for this name)")
     })?;
-    op.dispatch_buf(&bufs, mode).map_err(|e| e.to_string())
+    op.dispatch_buf(&bufs, mode)
+        .map(|outs| (outs, None))
+        .map_err(|e| e.to_string())
 }
 
 fn worker_loop(
@@ -361,9 +386,13 @@ fn drain(
             let queue_seconds = req.enqueued.elapsed().as_secs_f64();
             metrics.queue_latency.record_seconds(queue_seconds);
             let t0 = std::time::Instant::now();
-            let result = exec.execute(&req.artifact, &req.inputs);
+            let outcome = exec.execute(&req.artifact, &req.inputs);
             let exec_seconds = t0.elapsed().as_secs_f64();
             metrics.exec_latency.record_seconds(exec_seconds);
+            let (result, pipe_stats) = match outcome {
+                Ok((tensors, stats)) => (Ok(tensors), stats),
+                Err(e) => (Err(e), None),
+            };
             match &result {
                 Ok(_) => Metrics::inc(&metrics.completed),
                 Err(_) => Metrics::inc(&metrics.failed),
@@ -375,6 +404,7 @@ fn drain(
                     result,
                     queue_seconds,
                     exec_seconds,
+                    pipe_stats,
                 });
             }
         }

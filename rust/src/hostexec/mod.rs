@@ -66,11 +66,18 @@ use crate::tensor::{Element, NdArray, Numeric, Shape};
 /// over [`Numeric`]; the movement-only dtypes (bf16) route through
 /// [`execute_movement`] or the dtype-dynamic [`Op::execute_fast_buf`].
 pub fn execute<T: Numeric>(op: &Op, inputs: &[&NdArray<T>]) -> Result<Vec<NdArray<T>>, OpError> {
-    if let Op::Stencil { spec } = op {
-        op.check_arity(inputs.len())?;
-        return stencil::apply(inputs[0], spec, pool::num_threads()).map(|a| vec![a]);
+    let threads = pool::num_threads();
+    match op {
+        Op::Stencil { spec } => {
+            op.check_arity(inputs.len())?;
+            stencil::apply(inputs[0], spec, threads).map(|a| vec![a])
+        }
+        Op::Pointwise { spec } => {
+            op.check_arity(inputs.len())?;
+            Ok(vec![stencil::apply_pointwise(inputs[0], spec, threads)])
+        }
+        _ => execute_movement(op, inputs),
     }
-    execute_movement(op, inputs)
 }
 
 /// The pure-movement subset of [`execute`], generic over any
@@ -108,11 +115,13 @@ pub fn execute_movement<T: Element>(
         }
         Op::Interlace { .. } => interlace::interlace(inputs, threads).map(|a| vec![a]),
         Op::Deinterlace { n } => interlace::deinterlace(inputs[0], *n, threads),
-        Op::Stencil { .. } => Err(OpError::UnsupportedDtype {
+        Op::Stencil { .. } | Op::Pointwise { .. } => Err(OpError::UnsupportedDtype {
             dtype: T::DTYPE,
-            what: "stencil on the movement-only path (numeric dtypes \
-                   route via hostexec::execute)"
-                .into(),
+            what: format!(
+                "{} on the movement-only path (numeric dtypes route via \
+                 hostexec::execute)",
+                op.describe()
+            ),
         }),
     }
 }
@@ -160,6 +169,12 @@ mod tests {
                     spec: crate::ops::StencilSpec::FdLaplacian { order: 2, scale: 1.0 },
                 },
                 vec![&img],
+            ),
+            (
+                Op::Pointwise {
+                    spec: crate::ops::PointwiseSpec::axpb(1.5, -2.0),
+                },
+                vec![&cube],
             ),
         ];
         for (op, inputs) in cases {

@@ -8,16 +8,18 @@
 //!
 //! Covered families (the rearrangement ops of the paper):
 //! `copy*`, `permute3d_oXYZ`, `reorder_rDIGITS[_cK]`, `interlace_nN`,
-//! `deinterlace_nN`, `subarray_N`, `fdK_N`, `smooth3x3_N`. Compute-only
-//! artifacts (scale, model pipelines, cavity steps) have no op IR and
-//! resolve to `None`.
+//! `deinterlace_nN`, `subarray_N`, `fdK_N`, `smooth3x3_N`, plus the
+//! pointwise `scale*` family (the aot.py `scale_4m` entry multiplies by
+//! 1.5 — the host op mirrors it, and as a zero-radius stage it fuses
+//! into `pipe:` stencil chains). Compute-only artifacts with no op IR
+//! (model pipelines, cavity steps) resolve to `None`.
 //!
 //! Composite pipeline requests use `pipe:<a>+<b>+...` names
 //! ([`pipeline_for_artifact`]): every `+`-separated segment is an
 //! artifact name from the families above, and the whole string is the
 //! pipeline's batching signature.
 
-use crate::ops::{Op, StencilSpec};
+use crate::ops::{Op, PointwiseSpec, StencilSpec};
 use crate::pipeline::Pipeline;
 use crate::tensor::Order;
 
@@ -37,6 +39,21 @@ fn digits_order(s: &str) -> Option<Order> {
 pub fn op_for_artifact(name: &str) -> Option<Op> {
     if name.starts_with("copy") {
         return Some(Op::Copy);
+    }
+    if let Some(rest) = name.strip_prefix("scale_") {
+        // Mirrors the aot.py scale entry (`scale_write(x, 1.5)`), which
+        // names a size tag after the underscore (`scale_4m`). Only that
+        // shape resolves: a differently-factored future variant
+        // (`scale2x_4m`, `scale_half_1m`) must stay an unknown artifact
+        // rather than silently scaling by the wrong constant.
+        let size_tag = rest.chars().next().is_some_and(|c| c.is_ascii_digit())
+            && rest.chars().all(|c| c.is_ascii_alphanumeric());
+        if size_tag {
+            return Some(Op::Pointwise {
+                spec: PointwiseSpec::scale(1.5),
+            });
+        }
+        return None;
     }
     if let Some(tag) = name.strip_prefix("permute3d_o") {
         return Some(Op::Reorder {
@@ -170,8 +187,23 @@ mod tests {
     }
 
     #[test]
+    fn scale_resolves_to_pointwise() {
+        match op_for_artifact("scale_4m") {
+            Some(Op::Pointwise { spec }) => {
+                assert_eq!(spec, PointwiseSpec::scale(1.5));
+            }
+            other => panic!("expected pointwise, got {other:?}"),
+        }
+        // Variants that could carry a different factor stay unknown
+        // instead of silently resolving to the 1.5x op.
+        for name in ["scale2x_4m", "scale_half_1m", "scale_", "scale"] {
+            assert!(op_for_artifact(name).is_none(), "{name}");
+        }
+    }
+
+    #[test]
     fn unknown_names_resolve_to_none() {
-        for name in ["scale_4m", "bandwidth_chain_4m", "cavity_step_n128", "nope"] {
+        for name in ["bandwidth_chain_4m", "cavity_step_n128", "nope"] {
             assert!(op_for_artifact(name).is_none(), "{name}");
         }
     }
@@ -186,5 +218,10 @@ mod tests {
         assert!(pipeline_for_artifact("pipe:").is_none());
         assert!(pipeline_for_artifact("pipe:copy_4m+nope").is_none());
         assert!(pipeline_for_artifact("permute3d_o102").is_none());
+
+        // Mixed stencil/pointwise chains carry the new stage kinds.
+        let p = pipeline_for_artifact("pipe:fd1_128+scale_4m+smooth3x3_128").unwrap();
+        assert_eq!(p.stages().len(), 3);
+        assert!(matches!(p.stages()[1], Op::Pointwise { .. }));
     }
 }

@@ -1,120 +1,56 @@
-//! §III.D generic 2D stencil, host-parallelized — single pass and the
-//! fused rolling-window **chain** executor, generic over [`Numeric`].
+//! §III.D generic stencil, host-parallelized — rank-N, functor-generic
+//! single pass and the fused rolling-window **chain** executor
+//! (stencil and zero-radius pointwise stages), generic over [`Numeric`].
 //!
-//! Single pass: row-banded over the worker pool with an interior fast
-//! path: inside the halo the taps reduce to constant flat offsets (no
-//! per-tap bounds tests), which is the host analogue of the kernel's
-//! staged tile whose interior threads skip ghost handling. Accumulation
-//! order and types (f64 accumulate, tap order from `StencilSpec::taps`)
-//! are exactly the golden reference's — for every [`Numeric`] element
-//! type — so results are bit-identical per dtype.
+//! ## Rank-N banding
 //!
-//! Chain ([`apply_chain`]): a run of stacked stencils executes as one
-//! banded pass per worker in which stage `k` keeps only the last
-//! `2*radius[k+1] + 1` produced rows hot in a ring buffer — the host
-//! analogue of the software-systolic rolling window. Intermediates
-//! never touch a full-size buffer, so the chain reads the input once
-//! and writes the output once instead of `depth` round trips; workers
-//! recompute the band-boundary halo rows so results stay bit-identical
-//! to `depth` sequential [`apply`] passes.
+//! Execution bands along the **slowest axis** (axis 0): a "row" is the
+//! whole trailing slab (`dims[1..]`, flattened; rank-1 data is treated
+//! as `[n, 1]`). Workers own disjoint bands of axis-0 rows; inside a
+//! slab the taps split into an axis-0 offset (resolved through the
+//! rolling window) and trailing-axis offsets (resolved per cache-hot
+//! line with an interior fast path along the fastest axis, where only
+//! the fastest-axis bounds test survives). Accumulation order and types
+//! (f64 accumulate, tap order from [`StencilFunctor::taps`]) are
+//! exactly the golden reference's — for every [`Numeric`] element type
+//! — so results are bit-identical per dtype.
+//!
+//! ## Functor genericity
+//!
+//! [`apply`] is generic over any [`StencilFunctor`], not just the
+//! [`StencilSpec`] data family: a custom functor lowers to taps once
+//! and runs on the identical banded machinery (the paper's
+//! template-plus-functor story on the host side).
+//!
+//! ## Fused chains ([`apply_chain`])
+//!
+//! A run of stacked stages executes as one banded pass per worker in
+//! which stage `k` keeps only the last `2*radius[k+1] + 1` produced
+//! rows hot in a ring buffer — the host analogue of the
+//! software-systolic rolling window. Stages are [`ChainStage`]s:
+//! stencils of any radius, or **pointwise** stages (zero-radius
+//! elementwise functor chains, [`PointwiseSpec`]) which ride along for
+//! free — a pointwise consumer keeps exactly one row hot.
+//! Intermediates never touch a full-size buffer, so the chain reads the
+//! input once and writes the output once instead of `depth` round
+//! trips; workers recompute the band-boundary halo rows so results stay
+//! bit-identical to `depth` sequential passes.
 //!
 //! The band scheduler itself — descend to the deepest stage whose
 //! source rows are ready, produce one row, repeat — is shared state
 //! machinery, not stencil arithmetic. [`cascade_band`] owns it (the
 //! ring-capacity invariant lives in exactly one place); this module's
-//! chain executor and the CFD Jacobi band in
+//! chain executor and the fully-fused CFD cavity step in
 //! [`crate::pipeline::fuse`] both drive it with their own row
-//! producers.
+//! producers (the CFD pass uses the per-stage row widths to carry
+//! packed velocity/vorticity rows between stages).
 
 use super::pool;
-use crate::ops::stencil::StencilSpec;
-use crate::ops::OpError;
-use crate::tensor::{Element, NdArray, Numeric, Shape};
+use crate::ops::pointwise::PointwiseSpec;
+use crate::ops::stencil::StencilFunctor;
+use crate::ops::{OpError, StencilSpec};
+use crate::tensor::{Element, NdArray, Numeric};
 use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Apply `spec` with zero ghost cells — bit-identical to
-/// [`crate::ops::stencil::apply`].
-pub fn apply<T: Numeric>(
-    x: &NdArray<T>,
-    spec: &StencilSpec,
-    threads: usize,
-) -> Result<NdArray<T>, OpError> {
-    if x.rank() != 2 {
-        return Err(OpError::Invalid("stencil expects a 2D array".into()));
-    }
-    let taps = spec.taps()?;
-    let (h, w) = (x.shape().dims()[0], x.shape().dims()[1]);
-    let mut out = vec![T::default(); h * w];
-    if h * w == 0 {
-        return Ok(NdArray::from_vec(Shape::new(&[h, w]), out));
-    }
-    let radius = spec.radius();
-    let xd = x.data();
-    // Interior flat offsets: tap (dy, dx) -> dy*w + dx.
-    let flat: Vec<(isize, f64)> = taps
-        .iter()
-        .map(|&(dy, dx, c)| (dy as isize * w as isize + dx as isize, c))
-        .collect();
-
-    let checked = |i: usize, j: usize| -> T {
-        let (hi, wi) = (h as i64, w as i64);
-        let mut acc = 0.0f64;
-        for &(dy, dx, c) in &taps {
-            let (y, xx) = (i as i64 + dy, j as i64 + dx);
-            if y >= 0 && y < hi && xx >= 0 && xx < wi {
-                acc += c * xd[y as usize * w + xx as usize].to_acc();
-            }
-        }
-        T::from_acc(acc)
-    };
-
-    let do_rows = |band: &mut [T], i0: usize| {
-        for (k, row) in band.chunks_mut(w).enumerate() {
-            let i = i0 + k;
-            let interior_row = i >= radius && i + radius < h;
-            if !interior_row || w <= 2 * radius {
-                for (j, o) in row.iter_mut().enumerate() {
-                    *o = checked(i, j);
-                }
-                continue;
-            }
-            for (j, o) in row.iter_mut().enumerate().take(radius) {
-                *o = checked(i, j);
-            }
-            let base_row = i * w;
-            for (j, o) in row
-                .iter_mut()
-                .enumerate()
-                .take(w - radius)
-                .skip(radius)
-            {
-                let base = (base_row + j) as isize;
-                let mut acc = 0.0f64;
-                for &(off, c) in &flat {
-                    acc += c * xd[(base + off) as usize].to_acc();
-                }
-                *o = T::from_acc(acc);
-            }
-            for (j, o) in row.iter_mut().enumerate().skip(w - radius) {
-                *o = checked(i, j);
-            }
-        }
-    };
-
-    let t = pool::effective_threads(threads, h * w, h);
-    if t <= 1 {
-        do_rows(&mut out, 0);
-    } else {
-        let rows_per = (h + t - 1) / t;
-        std::thread::scope(|scope| {
-            for (wi, band) in out.chunks_mut(rows_per * w).enumerate() {
-                let do_rows = &do_rows;
-                scope.spawn(move || do_rows(band, wi * rows_per));
-            }
-        });
-    }
-    Ok(NdArray::from_vec(Shape::new(&[h, w]), out))
-}
 
 /// Rolling window over the last `height` produced rows of one stage.
 /// Row `y` lives at slot `y % height`; the production schedule in
@@ -178,20 +114,22 @@ pub(crate) fn radius_suffix(radii: &[usize]) -> Vec<usize> {
 }
 
 /// One worker's band of a fused rolling-window cascade — the scheduler
-/// shared by the stencil chain executor below and the CFD Jacobi band
-/// ([`crate::pipeline::fuse`]).
+/// shared by the chain executor below and the fully-fused CFD cavity
+/// step ([`crate::pipeline::fuse`]).
 ///
 /// Lazily cascades row production from the first stage up, so no stage
 /// ever runs more than its consumer's radius ahead (the ring-capacity
 /// invariant: stage `k` keeps `2*radii[k+1] + 1` rows hot, and a row is
 /// only overwritten once every consumer of it has been produced).
 /// `produce(k, y, src, dst)` computes row `y` of stage `k` from the
-/// previous stage's rows; `input` feeds stage 0. Rows of the final
-/// stage land directly in `band` (rows `b0 ..= b0 + band.len()/w`).
+/// previous stage's rows; `input` feeds stage 0. Stage `k` produces
+/// rows of `widths[k]` elements — stages may carry packed multi-field
+/// rows of different widths. Rows of the final stage land directly in
+/// `band` (rows `b0 ..= b0 + band.len()/widths[d-1]`).
 pub(crate) fn cascade_band<T: Element, F>(
     input: &dyn RowSource<T>,
     h: usize,
-    w: usize,
+    widths: &[usize],
     radii: &[usize],
     b0: usize,
     band: &mut [T],
@@ -200,12 +138,14 @@ pub(crate) fn cascade_band<T: Element, F>(
     F: FnMut(usize, usize, &dyn RowSource<T>, &mut [T]),
 {
     let d = radii.len();
+    debug_assert_eq!(widths.len(), d);
     let suffix = radius_suffix(radii);
-    let b1 = b0 + band.len() / w;
+    let w_out = widths[d - 1];
+    let b1 = b0 + band.len() / w_out;
     let lo = |k: usize| b0.saturating_sub(suffix[k]);
     let hi = |k: usize| (b1 + suffix[k]).min(h);
     let mut rings: Vec<Ring<T>> = (0..d - 1)
-        .map(|k| Ring::new(2 * radii[k + 1] + 1, w))
+        .map(|k| Ring::new(2 * radii[k + 1] + 1, widths[k]))
         .collect();
     let mut produced: Vec<i64> = (0..d).map(|k| lo(k) as i64 - 1).collect();
     for i in b0..b1 {
@@ -223,7 +163,7 @@ pub(crate) fn cascade_band<T: Element, F>(
             let y = (produced[k] + 1) as usize;
             if k == 0 {
                 if d == 1 {
-                    let dst = &mut band[(y - b0) * w..][..w];
+                    let dst = &mut band[(y - b0) * w_out..][..w_out];
                     produce(0, y, input, dst);
                 } else {
                     produce(0, y, input, rings[0].row_mut(y));
@@ -232,7 +172,7 @@ pub(crate) fn cascade_band<T: Element, F>(
                 let (left, right) = rings.split_at_mut(k);
                 let src: &dyn RowSource<T> = &left[k - 1];
                 if k == d - 1 {
-                    let dst = &mut band[(y - b0) * w..][..w];
+                    let dst = &mut band[(y - b0) * w_out..][..w_out];
                     produce(k, y, src, dst);
                 } else {
                     produce(k, y, src, right[0].row_mut(y));
@@ -243,58 +183,218 @@ pub(crate) fn cascade_band<T: Element, F>(
     }
 }
 
-/// Compute one output row of a stencil stage from a [`RowSource`] —
-/// bit-identical to the golden per-element walk (f64 accumulate, taps
-/// in spec order, zero ghosts outside the `h`×`w` domain).
-fn stencil_row<T: Numeric>(
-    src: &dyn RowSource<T>,
+/// One stage of a fused chain: a stencil of any radius, or a
+/// zero-radius pointwise stage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChainStage {
+    Stencil(StencilSpec),
+    Pointwise(PointwiseSpec),
+}
+
+impl ChainStage {
+    /// Axis-0 halo the stage needs (0 for pointwise).
+    pub fn radius(&self) -> usize {
+        match self {
+            ChainStage::Stencil(spec) => spec.radius(),
+            ChainStage::Pointwise(_) => 0,
+        }
+    }
+}
+
+/// Band/slab geometry of a rank-N array: axis 0 is the banding axis,
+/// the trailing axes flatten into one slab per row (rank-1 data pads a
+/// unit trailing axis).
+struct BandGeom {
     h: usize,
+    /// Trailing dims (always >= 1 axis).
+    rest: Vec<usize>,
+    /// Row-major strides within the slab, one per trailing axis.
+    strides: Vec<usize>,
+    /// Slab elements (= product of `rest`).
     w: usize,
-    taps: &[(i64, i64, f64)],
+}
+
+fn geom(dims: &[usize]) -> Result<BandGeom, OpError> {
+    if dims.is_empty() {
+        return Err(OpError::Invalid("stencil needs an array of rank >= 1".into()));
+    }
+    let rest: Vec<usize> = if dims.len() == 1 {
+        vec![1]
+    } else {
+        dims[1..].to_vec()
+    };
+    let mut strides = vec![1usize; rest.len()];
+    for i in (0..rest.len() - 1).rev() {
+        strides[i] = strides[i + 1] * rest[i + 1];
+    }
+    let w = rest.iter().product();
+    Ok(BandGeom {
+        h: dims[0],
+        rest,
+        strides,
+        w,
+    })
+}
+
+/// A stencil lowered for slab execution: taps split into the axis-0
+/// offset (resolved through the rolling window), the middle-axis
+/// offsets (resolved per line) and the fastest-axis offset (the inner
+/// loop).
+struct PreparedStencil {
     radius: usize,
-    i: usize,
+    taps: Vec<(i64, Vec<i64>, i64, f64)>,
+}
+
+fn prepare<S: StencilFunctor + ?Sized>(spec: &S, rank: usize) -> Result<PreparedStencil, OpError> {
+    let radius = spec.radius();
+    let taps = spec.taps(rank)?;
+    // Validate here as well as in the spec impls: the ring-capacity
+    // invariant is only sound when every axis-0 offset is within the
+    // declared radius, and custom functors are not pre-validated.
+    for (off, _) in &taps {
+        if off.len() != rank {
+            return Err(OpError::Invalid(format!(
+                "functor tap {off:?} has rank {}, data has rank {rank}",
+                off.len()
+            )));
+        }
+        if off.iter().any(|d| d.unsigned_abs() as usize > radius) {
+            return Err(OpError::Invalid(format!(
+                "functor tap {off:?} outside radius {radius}"
+            )));
+        }
+    }
+    let split = taps
+        .into_iter()
+        .map(|(off, c)| {
+            if rank == 1 {
+                (off[0], Vec::new(), 0, c)
+            } else {
+                (off[0], off[1..rank - 1].to_vec(), off[rank - 1], c)
+            }
+        })
+        .collect();
+    Ok(PreparedStencil {
+        radius,
+        taps: split,
+    })
+}
+
+/// One prepared stage of the internal executor.
+enum Lowered {
+    Stencil(PreparedStencil),
+    Pointwise(PointwiseSpec),
+}
+
+impl Lowered {
+    fn radius(&self) -> usize {
+        match self {
+            Lowered::Stencil(st) => st.radius,
+            Lowered::Pointwise(_) => 0,
+        }
+    }
+}
+
+/// Compute one slab (axis-0 row) of a stencil stage from a
+/// [`RowSource`] — bit-identical to the golden per-element walk (f64
+/// accumulate, taps in spec order, zero ghosts outside the domain).
+/// Taps dead for a whole line (axis-0 or middle-axis ghost) drop out up
+/// front, exactly as the golden walk skips them.
+fn stencil_slab<T: Numeric>(
+    src: &dyn RowSource<T>,
+    g: &BandGeom,
+    st: &PreparedStencil,
+    y: usize,
     dst: &mut [T],
 ) {
-    let (hi, wi) = (h as i64, w as i64);
+    let m = g.rest.len() - 1; // middle axes (between axis 0 and fastest)
+    let last = g.rest[m];
+    let hi = g.h as i64;
+    let mut mid = vec![0usize; m];
+    // Reused across lines: rank-3+ slabs walk many short lines, so the
+    // live-tap scratch must not allocate per line.
+    let mut live: Vec<(&[T], i64, f64)> = Vec::with_capacity(st.taps.len());
+    'lines: loop {
+        let line_base: usize = mid.iter().zip(&g.strides).map(|(i, s)| i * s).sum();
+        // Live taps for this line, spec order preserved.
+        live.clear();
+        'tap: for (d0, dm, dl, c) in &st.taps {
+            let yy = y as i64 + d0;
+            if yy < 0 || yy >= hi {
+                continue;
+            }
+            let mut src_base = 0usize;
+            for (a, &d) in dm.iter().enumerate() {
+                let t = mid[a] as i64 + d;
+                if t < 0 || t >= g.rest[a] as i64 {
+                    continue 'tap;
+                }
+                src_base += t as usize * g.strides[a];
+            }
+            live.push((&src.row(yy as usize)[src_base..src_base + last], *dl, *c));
+        }
+        stencil_line(&live, st.radius, &mut dst[line_base..line_base + last]);
+        // Advance the middle-axis odometer (fastest middle axis first).
+        let mut a = m;
+        while a > 0 {
+            a -= 1;
+            mid[a] += 1;
+            if mid[a] < g.rest[a] {
+                continue 'lines;
+            }
+            mid[a] = 0;
+        }
+        return;
+    }
+}
+
+/// The fastest-axis inner loop of one line: ends bounds-checked per
+/// tap, interior flat (only the fastest-axis test can still fail there,
+/// and it cannot by construction).
+fn stencil_line<T: Numeric>(live: &[(&[T], i64, f64)], radius: usize, out: &mut [T]) {
+    let last = out.len();
+    let li = last as i64;
     let checked = |j: usize| -> T {
         let mut acc = 0.0f64;
-        for &(dy, dx, c) in taps {
-            let (y, x) = (i as i64 + dy, j as i64 + dx);
-            if y >= 0 && y < hi && x >= 0 && x < wi {
-                acc += c * src.row(y as usize)[x as usize].to_acc();
+        for &(line, dl, c) in live {
+            let x = j as i64 + dl;
+            if x >= 0 && x < li {
+                acc += c * line[x as usize].to_acc();
             }
         }
         T::from_acc(acc)
     };
-    if w <= 2 * radius {
-        for (j, o) in dst.iter_mut().enumerate() {
+    if last <= 2 * radius {
+        for (j, o) in out.iter_mut().enumerate() {
             *o = checked(j);
         }
         return;
     }
-    for (j, o) in dst.iter_mut().enumerate().take(radius) {
+    for (j, o) in out.iter_mut().enumerate().take(radius) {
         *o = checked(j);
     }
-    // Interior columns: only the row-bounds test remains; resolve each
-    // live tap to its source row once, keeping spec order (skipping a
-    // ghost row is exactly what the golden walk does).
-    let live: Vec<(&[T], i64, f64)> = taps
-        .iter()
-        .filter(|&&(dy, _, _)| {
-            let y = i as i64 + dy;
-            y >= 0 && y < hi
-        })
-        .map(|&(dy, dx, c)| (src.row((i as i64 + dy) as usize), dx, c))
-        .collect();
-    for (j, o) in dst.iter_mut().enumerate().take(w - radius).skip(radius) {
+    for (j, o) in out.iter_mut().enumerate().take(last - radius).skip(radius) {
         let mut acc = 0.0f64;
-        for &(row, dx, c) in &live {
-            acc += c * row[(j as i64 + dx) as usize].to_acc();
+        for &(line, dl, c) in live {
+            acc += c * line[(j as i64 + dl) as usize].to_acc();
         }
         *o = T::from_acc(acc);
     }
-    for (j, o) in dst.iter_mut().enumerate().skip(w - radius) {
+    for (j, o) in out.iter_mut().enumerate().skip(last - radius) {
         *o = checked(j);
+    }
+}
+
+/// One slab of a pointwise stage: the elementwise functor chain over
+/// the source row (zero radius — no window, no ghosts).
+fn pointwise_slab<T: Numeric>(
+    src: &dyn RowSource<T>,
+    spec: &PointwiseSpec,
+    y: usize,
+    dst: &mut [T],
+) {
+    for (o, &v) in dst.iter_mut().zip(src.row(y)) {
+        *o = spec.apply_to(v);
     }
 }
 
@@ -319,45 +419,112 @@ impl ChainStats {
     }
 }
 
-/// Bytes `depth` sequential full-array passes move (one read and one
-/// write of the whole `elem_bytes`-wide field per stage).
-pub fn unfused_chain_traffic_bytes(h: usize, w: usize, depth: usize, elem_bytes: usize) -> u64 {
-    2 * depth as u64 * (h * w * elem_bytes) as u64
+/// Bytes `depth` sequential full-array passes over an `elems`-element
+/// field move (one read and one write of the whole field per stage).
+pub fn unfused_chain_traffic_bytes(elems: usize, depth: usize, elem_bytes: usize) -> u64 {
+    2 * depth as u64 * (elems * elem_bytes) as u64
 }
 
-/// Apply a chain of stencils as one fused rolling-window pass —
-/// bit-identical to applying each spec in sequence with [`apply`].
+/// Apply a functor with zero ghost cells, banded over the worker pool —
+/// bit-identical to [`crate::ops::stencil::apply`] for any rank >= 1
+/// and any [`StencilFunctor`].
+pub fn apply<T: Numeric, S: StencilFunctor + ?Sized>(
+    x: &NdArray<T>,
+    spec: &S,
+    threads: usize,
+) -> Result<NdArray<T>, OpError> {
+    let rank = x.rank();
+    if rank == 0 {
+        return Err(OpError::Invalid("stencil needs an array of rank >= 1".into()));
+    }
+    let st = prepare(spec, rank)?;
+    let stages = [Lowered::Stencil(st)];
+    run_lowered(x, &stages, threads).map(|(y, _)| y)
+}
+
+/// Apply a pointwise functor chain elementwise over the worker pool —
+/// bit-identical to [`crate::ops::pointwise::apply`] for any rank.
+pub fn apply_pointwise<T: Numeric>(
+    x: &NdArray<T>,
+    spec: &PointwiseSpec,
+    threads: usize,
+) -> NdArray<T> {
+    let n = x.len();
+    let mut out = vec![T::default(); n];
+    let t = pool::effective_threads(threads, n, n);
+    if t <= 1 {
+        for (o, &v) in out.iter_mut().zip(x.data()) {
+            *o = spec.apply_to(v);
+        }
+    } else {
+        let chunk = (n + t - 1) / t;
+        std::thread::scope(|scope| {
+            for (oc, ic) in out.chunks_mut(chunk).zip(x.data().chunks(chunk)) {
+                scope.spawn(move || {
+                    for (o, &v) in oc.iter_mut().zip(ic) {
+                        *o = spec.apply_to(v);
+                    }
+                });
+            }
+        });
+    }
+    NdArray::from_vec(x.shape().clone(), out)
+}
+
+/// Apply a chain of stencil/pointwise stages as one fused
+/// rolling-window pass — bit-identical to applying each stage in
+/// sequence, for data of any rank >= 1.
 pub fn apply_chain<T: Numeric>(
     x: &NdArray<T>,
-    specs: &[StencilSpec],
+    stages: &[ChainStage],
     threads: usize,
 ) -> Result<(NdArray<T>, ChainStats), OpError> {
-    if x.rank() != 2 {
-        return Err(OpError::Invalid("stencil chain expects a 2D array".into()));
+    if stages.is_empty() {
+        return Err(OpError::Invalid("fused chain needs >= 1 stage".into()));
     }
-    if specs.is_empty() {
-        return Err(OpError::Invalid("stencil chain needs >= 1 stage".into()));
+    let rank = x.rank();
+    if rank == 0 {
+        return Err(OpError::Invalid("stencil needs an array of rank >= 1".into()));
     }
-    let taps: Vec<Vec<(i64, i64, f64)>> =
-        specs.iter().map(|s| s.taps()).collect::<Result<_, _>>()?;
-    let radii: Vec<usize> = specs.iter().map(|s| s.radius()).collect();
-    let d = specs.len();
+    let lowered: Vec<Lowered> = stages
+        .iter()
+        .map(|s| match s {
+            ChainStage::Stencil(spec) => prepare(spec, rank).map(Lowered::Stencil),
+            ChainStage::Pointwise(spec) => Ok(Lowered::Pointwise(spec.clone())),
+        })
+        .collect::<Result<_, _>>()?;
+    run_lowered(x, &lowered, threads)
+}
+
+/// The shared banded executor behind [`apply`] and [`apply_chain`].
+fn run_lowered<T: Numeric>(
+    x: &NdArray<T>,
+    lowered: &[Lowered],
+    threads: usize,
+) -> Result<(NdArray<T>, ChainStats), OpError> {
+    let g = geom(x.shape().dims())?;
+    let d = lowered.len();
+    let radii: Vec<usize> = lowered.iter().map(Lowered::radius).collect();
     let suffix = radius_suffix(&radii);
     let es = std::mem::size_of::<T>();
-    let (h, w) = (x.shape().dims()[0], x.shape().dims()[1]);
+    let (h, w) = (g.h, g.w);
     let mut out = vec![T::default(); h * w];
     let hot: usize = radii[1..].iter().map(|r| 2 * r + 1).sum();
     if h * w == 0 {
         let stats = ChainStats { depth: d, hot_rows_per_worker: hot, ..Default::default() };
-        return Ok((NdArray::from_vec(Shape::new(&[h, w]), out), stats));
+        return Ok((NdArray::from_vec(x.shape().clone(), out), stats));
     }
     let xd = x.data();
+    let widths = vec![w; d];
     let in_rows = AtomicU64::new(0);
     let ring_rows = AtomicU64::new(0);
     let do_band = |band: &mut [T], b0: usize| {
         let input = SliceRows { data: xd, w };
-        cascade_band(&input, h, w, &radii, b0, band, |k, y, src, dst| {
-            stencil_row(src, h, w, &taps[k], radii[k], y, dst);
+        cascade_band(&input, h, &widths, &radii, b0, band, |k, y, src, dst| {
+            match &lowered[k] {
+                Lowered::Stencil(st) => stencil_slab(src, &g, st, y, dst),
+                Lowered::Pointwise(spec) => pointwise_slab(src, spec, y, dst),
+            }
         });
         // Traffic accounting: rows this band fetched from the input
         // (stage-0 window + its own radius) and rows staged in rings.
@@ -389,13 +556,15 @@ pub fn apply_chain<T: Numeric>(
         hot_rows_per_worker: hot,
         depth: d,
     };
-    Ok((NdArray::from_vec(Shape::new(&[h, w]), out), stats))
+    Ok((NdArray::from_vec(x.shape().clone(), out), stats))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::ops::stencil as golden;
+    use crate::ops::stencil::Tap;
+    use crate::tensor::Shape;
     use crate::util::rng::Rng;
 
     fn specs() -> Vec<StencilSpec> {
@@ -406,10 +575,10 @@ mod tests {
             radius: 1,
             mask: vec![1.0 / 9.0; 9],
         });
-        v.push(StencilSpec::Taps {
-            radius: 2,
-            taps: vec![(2, 1, 1.25), (-1, -2, -0.5), (0, 0, 3.0)],
-        });
+        v.push(StencilSpec::taps2d(
+            2,
+            &[(2, 1, 1.25), (-1, -2, -0.5), (0, 0, 3.0)],
+        ));
         v
     }
 
@@ -423,6 +592,51 @@ mod tests {
                 for threads in [1, 4] {
                     let got = apply(&x, &spec, threads).unwrap();
                     assert_eq!(got, want, "{hh}x{ww} {spec:?} threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_golden_across_ranks() {
+        // Rank 1-4 sweeps: the banded slab walk must equal the golden
+        // odometer walk, dims crossing the halo on every axis.
+        let mut rng = Rng::new(0x57E1);
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![1],
+            vec![7],
+            vec![40],
+            vec![9, 9],
+            vec![3, 5, 7],
+            vec![12, 4, 9],
+            vec![2, 3, 4, 5],
+            vec![6, 1, 5, 3],
+        ];
+        for dims in shapes {
+            let x = NdArray::random(Shape::new(&dims), &mut rng);
+            let rank = dims.len();
+            let side = 3usize.pow(rank as u32);
+            let specs: Vec<StencilSpec> = vec![
+                StencilSpec::FdLaplacian { order: 1, scale: 0.4 },
+                StencilSpec::FdLaplacian { order: 2, scale: 1.0 },
+                StencilSpec::Conv {
+                    radius: 1,
+                    mask: (0..side).map(|i| i as f64 * 0.1 - 0.5).collect(),
+                },
+                StencilSpec::Taps {
+                    radius: 2,
+                    taps: vec![
+                        ((0..rank).map(|a| (a % 3) as i64 - 1).collect::<Vec<i64>>(), 1.25),
+                        (vec![0; rank], -0.5),
+                        ((0..rank).map(|a| -((a % 2) as i64) * 2).collect::<Vec<i64>>(), 0.75),
+                    ],
+                },
+            ];
+            for spec in &specs {
+                let want = golden::apply(&x, spec).unwrap();
+                for threads in [1, 4] {
+                    let got = apply(&x, spec, threads).unwrap();
+                    assert_eq!(got, want, "dims {dims:?} {spec:?} threads={threads}");
                 }
             }
         }
@@ -450,13 +664,57 @@ mod tests {
     }
 
     #[test]
+    fn custom_functor_matches_golden() {
+        // Functor genericity end to end: a hand-written functor (not a
+        // StencilSpec) runs the banded executor and the golden walk.
+        struct Diag(f64);
+        impl StencilFunctor for Diag {
+            fn radius(&self) -> usize {
+                1
+            }
+            fn taps(&self, rank: usize) -> Result<Vec<Tap>, OpError> {
+                Ok(vec![
+                    (vec![1; rank], self.0),
+                    (vec![0; rank], 1.0),
+                    (vec![-1; rank], -self.0),
+                ])
+            }
+        }
+        let mut rng = Rng::new(0xF0C7);
+        for dims in [vec![24usize, 17], vec![6, 7, 8]] {
+            let x = NdArray::random(Shape::new(&dims), &mut rng);
+            let f = Diag(0.5);
+            let want = golden::apply(&x, &f).unwrap();
+            for threads in [1, 4] {
+                assert_eq!(apply(&x, &f, threads).unwrap(), want, "dims {dims:?}");
+            }
+        }
+    }
+
+    #[test]
     fn validation_parity() {
-        let x = NdArray::iota(Shape::new(&[8]));
+        let scalar = NdArray::from_vec(Shape::new(&[]), vec![1.0f32]);
         let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
-        assert!(apply(&x, &spec, 4).is_err());
+        assert!(apply(&scalar, &spec, 4).is_err());
         let x2 = NdArray::iota(Shape::new(&[8, 8]));
         let bad = StencilSpec::FdLaplacian { order: 9, scale: 1.0 };
         assert!(apply(&x2, &bad, 4).is_err());
+        // A lying functor (taps outside its declared radius) is a typed
+        // error here, not a silently wrong rolling window.
+        struct Liar;
+        impl StencilFunctor for Liar {
+            fn radius(&self) -> usize {
+                1
+            }
+            fn taps(&self, rank: usize) -> Result<Vec<Tap>, OpError> {
+                Ok(vec![(vec![2; rank], 1.0)])
+            }
+        }
+        assert!(apply(&x2, &Liar, 1).is_err());
+    }
+
+    fn st(spec: StencilSpec) -> ChainStage {
+        ChainStage::Stencil(spec)
     }
 
     #[test]
@@ -471,21 +729,60 @@ mod tests {
                     .map(|k| match k % 3 {
                         0 => StencilSpec::FdLaplacian { order: 1 + k % 2, scale: 0.2 },
                         1 => StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] },
-                        _ => StencilSpec::Taps {
-                            radius: 2,
-                            taps: vec![(2, 1, 1.25), (-1, -2, -0.5), (0, 0, 3.0)],
-                        },
+                        _ => StencilSpec::taps2d(
+                            2,
+                            &[(2, 1, 1.25), (-1, -2, -0.5), (0, 0, 3.0)],
+                        ),
                     })
                     .collect();
                 let mut want = x.clone();
                 for spec in &chain {
                     want = golden::apply(&want, spec).unwrap();
                 }
+                let stages: Vec<ChainStage> = chain.into_iter().map(st).collect();
                 for threads in [1, 4] {
-                    let (got, stats) = apply_chain(&x, &chain, threads).unwrap();
+                    let (got, stats) = apply_chain(&x, &stages, threads).unwrap();
                     assert_eq!(got, want, "{hh}x{ww} depth={depth} threads={threads}");
                     assert_eq!(stats.depth, depth);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn rankn_mixed_chains_match_sequential() {
+        // Stencil + pointwise chains on rank 1-4 data, fused vs the
+        // stage-by-stage golden composition.
+        let mut rng = Rng::new(0xC4A3);
+        let shapes: Vec<Vec<usize>> = vec![
+            vec![30],
+            vec![17, 11],
+            vec![9, 6, 10],
+            vec![4, 3, 5, 6],
+            vec![200, 170], // clears PARALLEL_THRESHOLD: real bands
+        ];
+        for dims in shapes {
+            let x = NdArray::random(Shape::new(&dims), &mut rng);
+            let stages = vec![
+                ChainStage::Pointwise(PointwiseSpec::axpb(1.1, -0.2)),
+                st(StencilSpec::FdLaplacian { order: 1, scale: 0.3 }),
+                ChainStage::Pointwise(PointwiseSpec::scale(0.9)),
+                st(StencilSpec::FdLaplacian { order: 2, scale: 0.1 }),
+                ChainStage::Pointwise(PointwiseSpec::add(0.5).then(&PointwiseSpec::scale(1.5))),
+            ];
+            let mut want = x.clone();
+            for stage in &stages {
+                want = match stage {
+                    ChainStage::Stencil(s) => golden::apply(&want, s).unwrap(),
+                    ChainStage::Pointwise(p) => crate::ops::pointwise::apply(&want, p).unwrap(),
+                };
+            }
+            for threads in [1, 4] {
+                let (got, stats) = apply_chain(&x, &stages, threads).unwrap();
+                assert_eq!(got, want, "dims {dims:?} threads={threads}");
+                assert_eq!(stats.depth, 5);
+                // Pointwise consumers keep one row hot, stencils 2r+1.
+                assert_eq!(stats.hot_rows_per_worker, 3 + 1 + 5 + 1);
             }
         }
     }
@@ -504,9 +801,21 @@ mod tests {
         for spec in &chain {
             want = golden::apply(&want, spec).unwrap();
         }
+        let stages: Vec<ChainStage> = chain.into_iter().map(st).collect();
         for threads in [1, 4] {
-            let (got, _) = apply_chain(&q, &chain, threads).unwrap();
+            let (got, _) = apply_chain(&q, &stages, threads).unwrap();
             assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pointwise_parallel_matches_golden() {
+        let mut rng = Rng::new(0xC4A4);
+        let x = NdArray::random(Shape::new(&[300, 200]), &mut rng);
+        let spec = PointwiseSpec::axpb(0.25, -1.0).then(&PointwiseSpec::scale(3.0));
+        let want = crate::ops::pointwise::apply(&x, &spec).unwrap();
+        for threads in [1, 4, 7] {
+            assert_eq!(apply_pointwise(&x, &spec, threads), want, "threads={threads}");
         }
     }
 
@@ -515,17 +824,17 @@ mod tests {
         let mut rng = Rng::new(0xC4A2);
         let x = NdArray::random(Shape::new(&[48, 40]), &mut rng);
         for depth in 2..=4usize {
-            let chain = vec![StencilSpec::FdLaplacian { order: 1, scale: 1.0 }; depth];
+            let stages = vec![st(StencilSpec::FdLaplacian { order: 1, scale: 1.0 }); depth];
             // One band (threads = 1): no halo recompute, so the fused
             // traffic is exactly one read + one write of the field.
-            let (_, stats) = apply_chain(&x, &chain, 1).unwrap();
+            let (_, stats) = apply_chain(&x, &stages, 1).unwrap();
             assert_eq!(stats.input_bytes_read, 48 * 40 * 4);
             assert_eq!(stats.output_bytes_written, 48 * 40 * 4);
+            let unfused = unfused_chain_traffic_bytes(48 * 40, depth, 4);
             assert!(
-                2 * stats.fused_traffic_bytes() <= unfused_chain_traffic_bytes(48, 40, depth, 4),
-                "depth {depth}: fused {} vs unfused {}",
-                stats.fused_traffic_bytes(),
-                unfused_chain_traffic_bytes(48, 40, depth, 4)
+                2 * stats.fused_traffic_bytes() <= unfused,
+                "depth {depth}: fused {} vs unfused {unfused}",
+                stats.fused_traffic_bytes()
             );
             assert!(stats.hot_rows_per_worker <= 3 * depth);
         }
@@ -533,17 +842,24 @@ mod tests {
 
     #[test]
     fn chain_validation() {
-        let flat = NdArray::iota(Shape::new(&[8]));
-        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
-        assert!(apply_chain(&flat, &[spec.clone()], 1).is_err());
         let img = NdArray::iota(Shape::new(&[8, 8]));
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
         assert!(apply_chain(&img, &[], 1).is_err());
         let bad = StencilSpec::FdLaplacian { order: 9, scale: 1.0 };
-        assert!(apply_chain(&img, &[spec, bad], 1).is_err());
+        assert!(apply_chain(&img, &[st(spec.clone()), st(bad)], 1).is_err());
+        // Rank-1 chains are valid now — banding axis is the only axis.
+        let flat = NdArray::iota(Shape::new(&[40]));
+        let mut want = flat.clone();
+        for _ in 0..2 {
+            want = golden::apply(&want, &spec).unwrap();
+        }
+        let stages = vec![st(spec.clone()); 2];
+        let (got, _) = apply_chain(&flat, &stages, 1).unwrap();
+        assert_eq!(got, want);
 
         let empty = NdArray::<f32>::zeros(Shape::new(&[0, 7]));
         let spec = StencilSpec::FdLaplacian { order: 2, scale: 1.0 };
-        let (y, stats) = apply_chain(&empty, &[spec.clone(), spec], 4).unwrap();
+        let (y, stats) = apply_chain(&empty, &[st(spec.clone()), st(spec)], 4).unwrap();
         assert_eq!(y.len(), 0);
         assert_eq!(stats.fused_traffic_bytes(), 0);
     }

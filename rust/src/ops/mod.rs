@@ -15,6 +15,7 @@
 pub mod copy;
 pub mod interlace;
 pub mod permute;
+pub mod pointwise;
 pub mod reorder;
 pub mod stencil;
 
@@ -22,7 +23,8 @@ use crate::tensor::buf::erase_all;
 use crate::tensor::{DType, Element, NdArray, Numeric, Order, TensorBuf};
 use thiserror::Error;
 
-pub use stencil::StencilSpec;
+pub use pointwise::{PointwiseSpec, PwFn};
+pub use stencil::{StencilFunctor, StencilSpec};
 
 /// The rearrangement operations of the paper, as data.
 #[derive(Debug, Clone, PartialEq)]
@@ -43,8 +45,11 @@ pub enum Op {
     Interlace { n: usize },
     /// §III.C split one array into n (outputs = n arrays).
     Deinterlace { n: usize },
-    /// §III.D generic 2D stencil.
+    /// §III.D generic rank-N stencil.
     Stencil { spec: StencilSpec },
+    /// Elementwise affine functor chain (a zero-radius stage; rides
+    /// along fused stencil chains — see [`crate::pipeline::fuse`]).
+    Pointwise { spec: PointwiseSpec },
 }
 
 /// Which host implementation executes an op.
@@ -105,11 +110,17 @@ impl Op {
         &self,
         inputs: &[&NdArray<T>],
     ) -> Result<Vec<NdArray<T>>, OpError> {
-        if let Op::Stencil { spec } = self {
-            self.check_arity(inputs.len())?;
-            return stencil::apply(inputs[0], spec).map(|a| vec![a]);
+        match self {
+            Op::Stencil { spec } => {
+                self.check_arity(inputs.len())?;
+                stencil::apply(inputs[0], spec).map(|a| vec![a])
+            }
+            Op::Pointwise { spec } => {
+                self.check_arity(inputs.len())?;
+                pointwise::apply(inputs[0], spec).map(|a| vec![a])
+            }
+            _ => self.reference_movement(inputs),
         }
-        self.reference_movement(inputs)
     }
 
     /// The pure-movement subset of [`Op::reference`], generic over any
@@ -137,11 +148,13 @@ impl Op {
             }
             Op::Interlace { .. } => interlace::interlace(inputs).map(|a| vec![a]),
             Op::Deinterlace { n } => interlace::deinterlace(inputs[0], *n),
-            Op::Stencil { .. } => Err(OpError::UnsupportedDtype {
+            Op::Stencil { .. } | Op::Pointwise { .. } => Err(OpError::UnsupportedDtype {
                 dtype: T::DTYPE,
-                what: "stencil on the movement-only path (numeric dtypes \
-                       route via Op::reference/execute_fast)"
-                    .into(),
+                what: format!(
+                    "{} on the movement-only path (numeric dtypes route via \
+                     Op::reference/execute_fast)",
+                    self.describe()
+                ),
             }),
         }
     }
@@ -224,7 +237,7 @@ impl Op {
     /// True when the op moves data without arithmetic — i.e. it serves
     /// every [`Element`] dtype, not just the [`Numeric`] ones.
     pub fn is_movement(&self) -> bool {
-        !matches!(self, Op::Stencil { .. })
+        !matches!(self, Op::Stencil { .. } | Op::Pointwise { .. })
     }
 
     /// True when the op returns its input unchanged (bits and shape) —
@@ -233,7 +246,27 @@ impl Op {
         match self {
             Op::Copy => true,
             Op::Reorder { order } => order.is_identity(),
+            Op::Pointwise { spec } => spec.is_identity(),
             _ => false,
+        }
+    }
+
+    /// Short human-readable tag for error messages and stats (stage
+    /// errors name the offending op, not just a dtype or index).
+    pub fn describe(&self) -> String {
+        match self {
+            Op::Copy => "copy".into(),
+            Op::ReadRange { .. } => "read_range".into(),
+            Op::ReadStrided { .. } => "read_strided".into(),
+            Op::Reorder { order } => format!("reorder {order}"),
+            Op::ReorderCollapse { order, out_rank } => {
+                format!("reorder_collapse {order} -> rank {out_rank}")
+            }
+            Op::Subarray { .. } => "subarray".into(),
+            Op::Interlace { n } => format!("interlace n={n}"),
+            Op::Deinterlace { n } => format!("deinterlace n={n}"),
+            Op::Stencil { spec } => format!("stencil r={}", spec.radius()),
+            Op::Pointwise { spec } => format!("pointwise depth={}", spec.depth()),
         }
     }
 
@@ -262,6 +295,12 @@ impl Op {
             }
             (Op::Deinterlace { n: a }, Op::Interlace { n: b }) if a == b => Some(Op::Copy),
             (Op::Interlace { n: a }, Op::Deinterlace { n: b }) if a == b => Some(Op::Copy),
+            // Pointwise composes by step-list concatenation, which is
+            // bit-identical to the two separate stages (each step
+            // narrows to the element type; see `ops::pointwise`).
+            (Op::Pointwise { spec: a }, Op::Pointwise { spec: b }) => {
+                Some(Op::Pointwise { spec: a.then(b) })
+            }
             _ => None,
         }
     }
@@ -352,6 +391,40 @@ mod tests {
         );
         assert!(!op.is_movement());
         assert!(Op::Copy.is_movement());
+    }
+
+    #[test]
+    fn pointwise_op_reference_and_composition() {
+        let x = NdArray::iota(Shape::new(&[4, 4]));
+        let p = Op::Pointwise { spec: PointwiseSpec::axpb(2.0, 1.0) };
+        let out = p.reference(&[&x]).unwrap();
+        assert_eq!(out[0].get(&[1, 2]), 2.0 * 6.0 + 1.0);
+        assert!(!p.is_movement());
+        assert!(Op::Pointwise { spec: PointwiseSpec::scale(1.0) }.is_identity());
+        // Composition concatenates and equals the two-stage run.
+        let q = Op::Pointwise { spec: PointwiseSpec::scale(0.5) };
+        let fused = p.compose_with(&q).unwrap();
+        let want = q.reference(&[&out[0]]).unwrap();
+        assert_eq!(fused.reference(&[&x]).unwrap(), want);
+        // The movement-only path rejects the arithmetic stage, naming it.
+        let b = TensorBuf::iota(DType::Bf16, Shape::new(&[8]));
+        let r = p.reference_buf(&[&b]);
+        assert!(
+            matches!(r, Err(OpError::UnsupportedDtype { dtype: DType::Bf16, .. })),
+            "{r:?}"
+        );
+    }
+
+    #[test]
+    fn describe_names_ops() {
+        assert_eq!(Op::Copy.describe(), "copy");
+        assert_eq!(Op::Interlace { n: 3 }.describe(), "interlace n=3");
+        let st = Op::Stencil {
+            spec: StencilSpec::FdLaplacian { order: 2, scale: 1.0 },
+        };
+        assert_eq!(st.describe(), "stencil r=2");
+        let pw = Op::Pointwise { spec: PointwiseSpec::scale(2.0) };
+        assert_eq!(pw.describe(), "pointwise depth=1");
     }
 
     #[test]

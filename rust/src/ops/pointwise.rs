@@ -1,0 +1,205 @@
+//! Elementwise (zero-radius) functor stages — the map-like ops that
+//! ride along fused stencil chains for free.
+//!
+//! A [`PointwiseSpec`] is a chain of elementary affine functors
+//! ([`PwFn`]): scale, constant offset, and the saxpy-style `a*x + b`.
+//! Each step evaluates in the f64 accumulator and narrows back to the
+//! element type before the next step runs —
+//! `y = from_acc(f(to_acc(x)))` per step — exactly the arithmetic the
+//! stencil family uses, so naive, hostexec and fused-chain execution
+//! are bit-identical per dtype.
+//!
+//! **Composition is concatenation.** `Pointwise(p)` followed by
+//! `Pointwise(q)` equals `Pointwise(p.then(&q))` *bitwise*, because the
+//! composed spec applies the same per-step narrowing the two separate
+//! stages would. (Composing the coefficients algebraically —
+//! `a2*(a1*x + b1) + b2` into one step — would skip the intermediate
+//! narrowing and change results; the rewrite pass therefore composes
+//! step lists, never coefficients.) This is what lets the pipeline
+//! rewrite collapse pointwise runs into one stage with zero semantic
+//! risk, and what makes a pointwise stage a legal zero-radius member of
+//! a fused rolling-window chain.
+
+use super::OpError;
+use crate::tensor::{NdArray, Numeric};
+
+/// One elementary pointwise functor, evaluated in f64.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PwFn {
+    /// `a * x`.
+    Scale { a: f64 },
+    /// `x + b`.
+    AddConst { b: f64 },
+    /// `a * x + b` (saxpy with a scalar x).
+    Axpb { a: f64, b: f64 },
+}
+
+impl PwFn {
+    /// Evaluate in the accumulator domain.
+    #[inline]
+    pub fn eval(&self, x: f64) -> f64 {
+        match self {
+            PwFn::Scale { a } => a * x,
+            PwFn::AddConst { b } => x + b,
+            PwFn::Axpb { a, b } => a * x + b,
+        }
+    }
+
+    /// True when the step is a *bitwise* identity map. Only `Scale{1.0}`
+    /// qualifies: `1.0 * x` preserves every value bit for bit (including
+    /// `-0.0`), while `x + 0.0` — and therefore `AddConst{0.0}` and
+    /// `Axpb{1.0, 0.0}` — flips `-0.0` to `+0.0`, so eliding those would
+    /// break the bit-identity contract between the rewritten and naive
+    /// paths. Conservative by design: `Scale{2.0}` then `Scale{0.5}` is
+    /// not recognized either.
+    pub fn is_identity(&self) -> bool {
+        matches!(self, PwFn::Scale { a } if *a == 1.0)
+    }
+}
+
+/// A pointwise stage: a sequence of [`PwFn`] steps applied in order,
+/// narrowing to the element type between steps (see the module docs for
+/// why composition concatenates instead of merging coefficients).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointwiseSpec {
+    steps: Vec<PwFn>,
+}
+
+impl PointwiseSpec {
+    pub fn new(steps: Vec<PwFn>) -> PointwiseSpec {
+        PointwiseSpec { steps }
+    }
+
+    /// `y = a * x`.
+    pub fn scale(a: f64) -> PointwiseSpec {
+        PointwiseSpec { steps: vec![PwFn::Scale { a }] }
+    }
+
+    /// `y = x + b`.
+    pub fn add(b: f64) -> PointwiseSpec {
+        PointwiseSpec { steps: vec![PwFn::AddConst { b }] }
+    }
+
+    /// `y = a * x + b`.
+    pub fn axpb(a: f64, b: f64) -> PointwiseSpec {
+        PointwiseSpec { steps: vec![PwFn::Axpb { a, b }] }
+    }
+
+    pub fn steps(&self) -> &[PwFn] {
+        &self.steps
+    }
+
+    /// Number of elementary steps (the stage's "depth").
+    pub fn depth(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Sequential composition: `self` then `next`, bit-identical to
+    /// running the two stages back to back.
+    pub fn then(&self, next: &PointwiseSpec) -> PointwiseSpec {
+        let mut steps = self.steps.clone();
+        steps.extend(next.steps.iter().cloned());
+        PointwiseSpec { steps }
+    }
+
+    /// True when every step is a bitwise identity (an empty chain
+    /// included) — the pipeline rewrite elides such stages without
+    /// changing a single output bit (see [`PwFn::is_identity`]).
+    pub fn is_identity(&self) -> bool {
+        self.steps.iter().all(PwFn::is_identity)
+    }
+
+    /// Apply the step chain to one element: each step widens into the
+    /// f64 accumulator, evaluates, and narrows back — the single source
+    /// of pointwise arithmetic every execution path shares.
+    #[inline]
+    pub fn apply_to<T: Numeric>(&self, v: T) -> T {
+        let mut v = v;
+        for f in &self.steps {
+            v = T::from_acc(f.eval(v.to_acc()));
+        }
+        v
+    }
+}
+
+/// Golden reference: apply the pointwise chain elementwise, any rank.
+pub fn apply<T: Numeric>(x: &NdArray<T>, spec: &PointwiseSpec) -> Result<NdArray<T>, OpError> {
+    let data = x.data().iter().map(|&v| spec.apply_to(v)).collect();
+    Ok(NdArray::from_vec(x.shape().clone(), data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn elementary_functors_evaluate() {
+        assert_eq!(PwFn::Scale { a: 2.5 }.eval(4.0), 10.0);
+        assert_eq!(PwFn::AddConst { b: -1.5 }.eval(4.0), 2.5);
+        assert_eq!(PwFn::Axpb { a: 2.0, b: 1.0 }.eval(3.0), 7.0);
+    }
+
+    #[test]
+    fn composition_is_concatenation_bitwise() {
+        let p = PointwiseSpec::scale(0.3);
+        let q = PointwiseSpec::axpb(1.7, -0.25);
+        let composed = p.then(&q);
+        assert_eq!(composed.depth(), 2);
+        for i in 0..100 {
+            let x = (i as f32) * 0.37 - 5.0;
+            let sequential = q.apply_to(p.apply_to(x));
+            assert_eq!(composed.apply_to(x), sequential, "x={x}");
+        }
+        // i32 narrows between steps, which concatenation preserves.
+        for x in [-7i32, 0, 3, 1000] {
+            let sequential = q.apply_to(p.apply_to(x));
+            assert_eq!(composed.apply_to(x), sequential, "x={x}");
+        }
+    }
+
+    #[test]
+    fn identity_detection_is_bitwise() {
+        assert!(PointwiseSpec::scale(1.0).is_identity());
+        assert!(PointwiseSpec::new(vec![]).is_identity());
+        assert!(!PointwiseSpec::scale(2.0).is_identity());
+        // `x + 0.0` flips -0.0 to +0.0, so these are numerically but
+        // NOT bitwise identities — eliding them would diverge from the
+        // naive path on negative zero.
+        assert!(!PointwiseSpec::add(0.0).is_identity());
+        assert!(!PointwiseSpec::axpb(1.0, 0.0).is_identity());
+        assert_ne!(
+            PwFn::AddConst { b: 0.0 }.eval(-0.0).to_bits(),
+            (-0.0f64).to_bits()
+        );
+        assert_eq!(
+            PwFn::Scale { a: 1.0 }.eval(-0.0).to_bits(),
+            (-0.0f64).to_bits()
+        );
+        // 2.0 then 0.5 is numerically identity but not syntactically.
+        let p = PointwiseSpec::scale(2.0).then(&PointwiseSpec::scale(0.5));
+        assert!(!p.is_identity());
+    }
+
+    #[test]
+    fn golden_apply_matches_scalar_walk() {
+        let x = NdArray::from_fn(Shape::new(&[3, 4, 5]), |idx| {
+            (idx[0] * 20 + idx[1] * 5 + idx[2]) as f32
+        });
+        let spec = PointwiseSpec::axpb(0.5, 3.0);
+        let y = apply(&x, &spec).unwrap();
+        for (a, b) in x.data().iter().zip(y.data()) {
+            assert_eq!(*b, spec.apply_to(*a));
+        }
+        assert_eq!(y.shape(), x.shape());
+    }
+
+    #[test]
+    fn i32_narrowing_saturates_per_step() {
+        // from_acc saturates on overflow; the per-step narrowing makes
+        // that observable mid-chain (and concatenation preserves it).
+        let p = PointwiseSpec::scale(1e12).then(&PointwiseSpec::scale(1e-6));
+        let y: i32 = p.apply_to(3);
+        assert_eq!(y, 2147); // 3e12 saturates to i32::MAX, then * 1e-6.
+    }
+}

@@ -1,7 +1,35 @@
-//! §III.D generic 2D stencil reference (zero ghost cells outside domain).
+//! §III.D generic stencil reference — rank-N, functor-generic, zero
+//! ghost cells outside the domain.
+//!
+//! ## The functor contract
+//!
+//! The Pallas kernel is a template over arbitrary stencil functors; the
+//! Rust analogue is [`StencilFunctor`]: anything that can state its
+//! neighborhood half-width ([`StencilFunctor::radius`]) and lower
+//! itself to an explicit N-dimensional tap list
+//! ([`StencilFunctor::taps`] — `(offset-per-axis, coefficient)` pairs)
+//! executes on every stencil path, golden and hostexec alike. The
+//! executors are generic over the functor and over [`Numeric`] element
+//! types: taps accumulate in f64 in tap order whatever the element
+//! type, so the narrow-back at the end is the only dtype-specific step
+//! and all execution paths stay bit-identical per dtype.
+//!
+//! [`StencilSpec`] is the IR-serializable functor family (`Op::Stencil`
+//! carries it as data): the N-dim FD Laplacian, dense convolution
+//! masks, and raw tap lists. Custom functors implement
+//! [`StencilFunctor`] directly and run through
+//! [`crate::hostexec::stencil::apply`] unchanged.
+//!
+//! ## Rank-N execution
+//!
+//! The reference below walks every element of an array of any rank
+//! >= 1. The fast path ([`crate::hostexec::stencil`]) bands along the
+//! **slowest axis** (axis 0) and treats the trailing axes as one slab
+//! per band row — the rolling-window chain executor generalizes the
+//! same way, which is what lets rank-3 chains fuse.
 
 use super::OpError;
-use crate::tensor::{NdArray, Numeric, Shape};
+use crate::tensor::{NdArray, Numeric};
 
 /// 2k-order accurate central-difference second-derivative coefficients
 /// (index 0 = center), mirroring `ref.FD_COEFFS` on the python side.
@@ -21,16 +49,34 @@ pub fn fd_coeffs(order: usize) -> Option<&'static [f64]> {
     }
 }
 
-/// Stencil kinds the reference executor understands. The Pallas kernel is
-/// generic over arbitrary functors; on the Rust side the same genericity
-/// is [`StencilSpec::Taps`] — an explicit (dy, dx, coeff) list.
+/// An N-dimensional tap: per-axis offset plus coefficient.
+pub type Tap = (Vec<i64>, f64);
+
+/// The functor contract every stencil executor is generic over: a
+/// neighborhood half-width and a lowering to explicit rank-`rank` taps.
+/// Implementations may support any subset of ranks — lowering returns a
+/// typed error for ranks the functor has no meaning at.
+pub trait StencilFunctor {
+    /// Neighborhood half-width along every axis (the banding halo).
+    fn radius(&self) -> usize;
+
+    /// Lower to an explicit tap list for data of rank `rank`. Tap
+    /// offsets must have length `rank` and magnitude <= `radius()`.
+    fn taps(&self, rank: usize) -> Result<Vec<Tap>, OpError>;
+}
+
+/// Stencil kinds the op IR carries as data (see the module docs for the
+/// trait they implement). All are rank-generic: lowering takes the data
+/// rank and produces N-dim taps.
 #[derive(Debug, Clone, PartialEq)]
 pub enum StencilSpec {
-    /// 2D FD Laplacian of the given order (radius = order), scaled.
+    /// N-dim FD Laplacian of the given order (radius = order), scaled:
+    /// the sum of the 2k-order second-derivative stencils per axis.
     FdLaplacian { order: usize, scale: f64 },
-    /// Arbitrary tap list (the functor-object analogue).
-    Taps { radius: usize, taps: Vec<(i64, i64, f64)> },
-    /// (2r+1)x(2r+1) convolution mask, row-major.
+    /// Arbitrary N-dim tap list (the functor-object analogue).
+    Taps { radius: usize, taps: Vec<Tap> },
+    /// Dense (2r+1)^rank convolution mask, row-major over the window
+    /// (axis 0 slowest, matching the array layout).
     Conv { radius: usize, mask: Vec<f64> },
 }
 
@@ -43,15 +89,36 @@ impl StencilSpec {
         }
     }
 
-    /// Lower to an explicit tap list.
-    pub fn taps(&self) -> Result<Vec<(i64, i64, f64)>, OpError> {
+    /// Rank-2 tap-list convenience: `(dy, dx, coeff)` triples.
+    pub fn taps2d(radius: usize, taps: &[(i64, i64, f64)]) -> StencilSpec {
+        StencilSpec::Taps {
+            radius,
+            taps: taps.iter().map(|&(dy, dx, c)| (vec![dy, dx], c)).collect(),
+        }
+    }
+}
+
+impl StencilFunctor for StencilSpec {
+    fn radius(&self) -> usize {
+        StencilSpec::radius(self)
+    }
+
+    fn taps(&self, rank: usize) -> Result<Vec<Tap>, OpError> {
+        if rank == 0 {
+            return Err(OpError::Invalid("stencil needs an array of rank >= 1".into()));
+        }
         match self {
             StencilSpec::Taps { radius, taps } => {
-                for &(dy, dx, _) in taps {
-                    if dy.unsigned_abs() as usize > *radius || dx.unsigned_abs() as usize > *radius
-                    {
+                for (off, _) in taps {
+                    if off.len() != rank {
                         return Err(OpError::Invalid(format!(
-                            "tap ({dy},{dx}) outside radius {radius}"
+                            "tap offset {off:?} has rank {}, data has rank {rank}",
+                            off.len()
+                        )));
+                    }
+                    if off.iter().any(|d| d.unsigned_abs() as usize > *radius) {
+                        return Err(OpError::Invalid(format!(
+                            "tap {off:?} outside radius {radius}"
                         )));
                     }
                 }
@@ -61,32 +128,46 @@ impl StencilSpec {
                 let c = fd_coeffs(*order).ok_or_else(|| {
                     OpError::Invalid(format!("FD order {order} not in 1..=4"))
                 })?;
-                let mut taps = vec![(0i64, 0i64, 2.0 * c[0] * scale)];
+                // Center tap: every axis contributes c[0]; then per
+                // distance k the per-axis +k/-k taps, fastest axis
+                // first (rank 2 reproduces the historical 2D order).
+                let mut taps = vec![(vec![0i64; rank], rank as f64 * c[0] * scale)];
                 for (k, &ck) in c.iter().enumerate().skip(1) {
                     let k = k as i64;
-                    for (dy, dx) in [(0, k), (0, -k), (k, 0), (-k, 0)] {
-                        taps.push((dy, dx, ck * scale));
+                    for axis in (0..rank).rev() {
+                        for d in [k, -k] {
+                            let mut off = vec![0i64; rank];
+                            off[axis] = d;
+                            taps.push((off, ck * scale));
+                        }
                     }
                 }
                 Ok(taps)
             }
             StencilSpec::Conv { radius, mask } => {
                 let side = 2 * radius + 1;
-                if mask.len() != side * side {
+                let expect = side.checked_pow(rank as u32).ok_or_else(|| {
+                    OpError::Invalid(format!("conv window {side}^{rank} overflows"))
+                })?;
+                if mask.len() != expect {
                     return Err(OpError::Invalid(format!(
-                        "mask length {} != {side}x{side}",
+                        "mask length {} != {side}^{rank} for rank-{rank} data",
                         mask.len()
                     )));
                 }
                 let r = *radius as i64;
                 let mut taps = Vec::new();
-                for dy in -r..=r {
-                    for dx in -r..=r {
-                        let c = mask[((dy + r) * (2 * r + 1) + (dx + r)) as usize];
-                        if c != 0.0 {
-                            taps.push((dy, dx, c));
-                        }
+                for (i, &c) in mask.iter().enumerate() {
+                    if c == 0.0 {
+                        continue;
                     }
+                    let mut off = vec![0i64; rank];
+                    let mut rem = i;
+                    for a in (0..rank).rev() {
+                        off[a] = (rem % side) as i64 - r;
+                        rem /= side;
+                    }
+                    taps.push((off, c));
                 }
                 Ok(taps)
             }
@@ -94,25 +175,34 @@ impl StencilSpec {
     }
 }
 
-/// Apply the stencil with zero ghost cells outside the domain
-/// (matches `ref.stencil` in python). Generic over [`Numeric`]: taps
-/// accumulate in f64 whatever the element type, so the narrow-back at
-/// the end is the only dtype-specific step (bit-identical to the
-/// hostexec executor, which uses the identical accumulator).
-pub fn apply<T: Numeric>(x: &NdArray<T>, spec: &StencilSpec) -> Result<NdArray<T>, OpError> {
-    if x.rank() != 2 {
-        return Err(OpError::Invalid("stencil expects a 2D array".into()));
+/// Apply the functor with zero ghost cells outside the domain (matches
+/// `ref.stencil` in python, generalized to any rank >= 1). Generic over
+/// [`Numeric`] and over the [`StencilFunctor`]: taps accumulate in f64
+/// in tap order whatever the element type, so the narrow-back at the
+/// end is the only dtype-specific step (bit-identical to the hostexec
+/// executor, which uses the identical accumulator and tap order).
+pub fn apply<T: Numeric, S: StencilFunctor + ?Sized>(
+    x: &NdArray<T>,
+    spec: &S,
+) -> Result<NdArray<T>, OpError> {
+    let rank = x.rank();
+    if rank == 0 {
+        return Err(OpError::Invalid("stencil needs an array of rank >= 1".into()));
     }
-    let taps = spec.taps()?;
-    let (h, w) = (x.shape().dims()[0] as i64, x.shape().dims()[1] as i64);
-    let out = NdArray::from_fn(Shape::new(&[h as usize, w as usize]), |idx| {
-        let (i, j) = (idx[0] as i64, idx[1] as i64);
+    let taps = spec.taps(rank)?;
+    let dims: Vec<i64> = x.shape().dims().iter().map(|&d| d as i64).collect();
+    let mut nidx = vec![0usize; rank];
+    let out = NdArray::from_fn(x.shape().clone(), |idx| {
         let mut acc = 0.0f64;
-        for &(dy, dx, c) in &taps {
-            let (y, xx) = (i + dy, j + dx);
-            if y >= 0 && y < h && xx >= 0 && xx < w {
-                acc += c * x.get(&[y as usize, xx as usize]).to_acc();
+        'tap: for (off, c) in &taps {
+            for a in 0..rank {
+                let t = idx[a] as i64 + off[a];
+                if t < 0 || t >= dims[a] {
+                    continue 'tap;
+                }
+                nidx[a] = t as usize;
             }
+            acc += c * x.get(&nidx).to_acc();
         }
         T::from_acc(acc)
     });
@@ -122,9 +212,10 @@ pub fn apply<T: Numeric>(x: &NdArray<T>, spec: &StencilSpec) -> Result<NdArray<T
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::Shape;
 
     #[test]
-    fn laplacian_of_quadratic_is_constant() {
+    fn laplacian_of_quadratic_is_constant_2d() {
         // f(i,j) = i^2 + j^2  =>  5-point laplacian = 4 exactly (interior).
         let n = 16;
         let x = NdArray::from_fn(Shape::new(&[n, n]), |idx| {
@@ -140,13 +231,34 @@ mod tests {
     }
 
     #[test]
-    fn fd_tap_counts() {
+    fn laplacian_of_quadratic_is_constant_3d() {
+        // f(i,j,k) = i^2 + j^2 + k^2  =>  7-point laplacian = 6.
+        let n = 10;
+        let x = NdArray::from_fn(Shape::new(&[n, n, n]), |idx| {
+            (idx[0] * idx[0] + idx[1] * idx[1] + idx[2] * idx[2]) as f32
+        });
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let lap = apply(&x, &spec).unwrap();
+        for i in 2..n - 2 {
+            for j in 2..n - 2 {
+                for k in 2..n - 2 {
+                    assert!((lap.get(&[i, j, k]) - 6.0).abs() < 1e-3, "({i},{j},{k})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fd_tap_counts_scale_with_rank() {
         for order in 1..=4usize {
             let spec = StencilSpec::FdLaplacian { order, scale: 1.0 };
-            assert_eq!(spec.taps().unwrap().len(), 1 + 4 * order);
+            for rank in 1..=4usize {
+                assert_eq!(spec.taps(rank).unwrap().len(), 1 + 2 * rank * order);
+            }
             assert_eq!(spec.radius(), order);
         }
-        assert!(StencilSpec::FdLaplacian { order: 5, scale: 1.0 }.taps().is_err());
+        let bad = StencilSpec::FdLaplacian { order: 5, scale: 1.0 };
+        assert!(bad.taps(2).is_err());
     }
 
     #[test]
@@ -160,26 +272,88 @@ mod tests {
     }
 
     #[test]
+    fn conv_rank1_and_rank3_windows() {
+        // Rank 1: a 3-tap box on a constant line.
+        let line = NdArray::from_fn(Shape::new(&[12]), |_| 3.0f32);
+        let spec = StencilSpec::Conv { radius: 1, mask: vec![1.0; 3] };
+        let out = apply(&line, &spec).unwrap();
+        assert_eq!(out.get(&[5]), 9.0);
+        assert_eq!(out.get(&[0]), 6.0); // one ghost tap
+        // Rank 3: the same mask length must be 27, not 3 or 9.
+        let cube = NdArray::from_fn(Shape::new(&[4, 4, 4]), |_| 1.0f32);
+        assert!(apply(&cube, &spec).is_err());
+        let spec3 = StencilSpec::Conv { radius: 1, mask: vec![1.0; 27] };
+        let out = apply(&cube, &spec3).unwrap();
+        assert_eq!(out.get(&[2, 2, 2]), 27.0);
+        assert_eq!(out.get(&[0, 0, 0]), 8.0); // corner: 2^3 live taps
+    }
+
+    #[test]
     fn taps_validation() {
-        let bad = StencilSpec::Taps { radius: 1, taps: vec![(2, 0, 1.0)] };
-        assert!(bad.taps().is_err());
+        let bad = StencilSpec::Taps { radius: 1, taps: vec![(vec![2, 0], 1.0)] };
+        assert!(bad.taps(2).is_err());
+        // Rank mismatch between tap offsets and the data rank.
+        let two_d = StencilSpec::taps2d(1, &[(1, 0, 1.0)]);
+        assert!(two_d.taps(3).is_err());
+        assert!(two_d.taps(2).is_ok());
         let bad_mask = StencilSpec::Conv { radius: 1, mask: vec![0.0; 8] };
-        assert!(bad_mask.taps().is_err());
+        assert!(bad_mask.taps(2).is_err());
+        assert!(two_d.taps(0).is_err());
     }
 
     #[test]
     fn shift_functor_equivalent() {
         // taps [(1,1,1), (-1,-1,-1)] = nb(1,1) - nb(-1,-1).
         let x = NdArray::iota(Shape::new(&[6, 6]));
-        let spec = StencilSpec::Taps { radius: 1, taps: vec![(1, 1, 1.0), (-1, -1, -1.0)] };
+        let spec = StencilSpec::taps2d(1, &[(1, 1, 1.0), (-1, -1, -1.0)]);
         let out = apply(&x, &spec).unwrap();
         assert_eq!(out.get(&[2, 2]), x.get(&[3, 3]) - x.get(&[1, 1]));
         assert_eq!(out.get(&[0, 0]), x.get(&[1, 1])); // nb(-1,-1) is ghost
     }
 
     #[test]
-    fn rejects_non_2d() {
-        let x = NdArray::iota(Shape::new(&[8]));
+    fn rank1_fd_matches_manual_walk() {
+        let x = NdArray::iota(Shape::new(&[9]));
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let out = apply(&x, &spec).unwrap();
+        // Interior of iota: x[i-1] - 2x[i] + x[i+1] = 0.
+        for i in 1..8 {
+            assert_eq!(out.get(&[i]), 0.0, "i={i}");
+        }
+        assert_eq!(out.get(&[0]), 1.0); // ghost left: -2*0 + 1
+    }
+
+    /// A custom functor (not a [`StencilSpec`]) runs through the same
+    /// generic reference — the paper's "developers build customized
+    /// kernels from templates and functors" claim, host-side.
+    #[test]
+    fn custom_functor_runs_through_apply() {
+        struct ForwardDiff;
+        impl StencilFunctor for ForwardDiff {
+            fn radius(&self) -> usize {
+                1
+            }
+            fn taps(&self, rank: usize) -> Result<Vec<Tap>, OpError> {
+                // d/dx along the fastest axis only.
+                let mut plus = vec![0i64; rank];
+                plus[rank - 1] = 1;
+                Ok(vec![(plus, 1.0), (vec![0; rank], -1.0)])
+            }
+        }
+        let x = NdArray::iota(Shape::new(&[4, 5]));
+        let out = apply(&x, &ForwardDiff).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(out.get(&[i, j]), 1.0, "({i},{j})");
+            }
+            // Last column: the +1 neighbour is a ghost.
+            assert_eq!(out.get(&[i, 4]), -x.get(&[i, 4]));
+        }
+    }
+
+    #[test]
+    fn rejects_rank_zero() {
+        let x = NdArray::from_vec(Shape::new(&[]), vec![1.0f32]);
         let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
         assert!(apply(&x, &spec).is_err());
     }

@@ -1,59 +1,100 @@
-//! Fusion decisions + the fused CFD Jacobi pass.
+//! Fusion decisions + the fully-fused CFD cavity step.
 //!
 //! [`segment`] lowers a rewritten stage list to execution segments:
-//! runs of ≥ 2 consecutive `Stencil` stages become one
-//! [`Segment::StencilChain`], executed by the rolling-window chain
-//! executor in [`crate::hostexec::stencil::apply_chain`]; everything
-//! else stays a [`Segment::Single`].
+//! runs of ≥ 2 consecutive `Stencil`/`Pointwise` stages become one
+//! [`Segment::FusedChain`], executed by the rolling-window chain
+//! executor in [`crate::hostexec::stencil::apply_chain`] (pointwise
+//! stages are zero-radius members of the cascade — they keep one row
+//! hot and cost no extra traffic); everything else stays a
+//! [`Segment::Single`].
 //!
-//! [`jacobi_chain`] is the same rolling-window technique specialized to
-//! the cavity solver's Poisson step: the K Jacobi sweeps of
-//! [`crate::cfd::CpuSolver`] execute as one banded pass per worker
-//! (radius-1 stages, an `omega` source term, Dirichlet walls), keeping
-//! 3 rows per sweep hot instead of writing K full `psi` fields — and
-//! spawning one worker set instead of K. Bit-identical to the unfused
-//! sweeps: same f32 expression per element, same neighbour order.
+//! [`cavity_fused_step`] is the same rolling-window technique applied
+//! to the cavity solver's **whole** time step: the K Jacobi sweeps,
+//! the velocity derivation (u, v from psi), the Thom wall vorticity and
+//! the explicit-Euler transport of [`crate::cfd::CpuSolver`] execute as
+//! one banded pass per worker — one spawn and one read/write of the
+//! full fields per *step* instead of per sweep. The velocity/vorticity
+//! stage packs its three derived rows (u, v, Thom-updated omega) into
+//! one `3n`-wide cascade row, which is what the per-stage row widths of
+//! [`cascade_band`] exist for. Band-boundary halo rows are recomputed,
+//! keeping workers independent and results bit-identical to the
+//! barriered loops: same f32 expression per element, same neighbour
+//! order, same residual.
 //!
-//! The descend/produce/ring scheduling is **not** duplicated here: the
-//! band drives [`cascade_band`] (hostexec's shared rolling-window
-//! scheduler, where the ring-capacity invariant lives) with a Jacobi
-//! row producer. The CFD solve stays f32 but compiles against the
-//! dtype-generic cascade machinery.
+//! [`jacobi_chain`] remains as a standalone public Poisson-only entry
+//! point (no internal callers since the cavity step went fully fused —
+//! its sweeps-only fusion is subsumed by [`cavity_fused_step`]); the
+//! descend/produce/ring scheduling is **not** duplicated in either:
+//! both drive [`cascade_band`] (hostexec's shared rolling-window
+//! scheduler, where the ring-capacity invariant lives) with their own
+//! row producers.
 
-use crate::hostexec::stencil::{cascade_band, RowSource, SliceRows};
-use crate::ops::{Op, StencilSpec};
+use crate::hostexec::pool::OutPtr;
+use crate::hostexec::stencil::{cascade_band, ChainStage, RowSource, SliceRows};
+use crate::ops::Op;
+use crate::tensor::{bytes_of, bytes_of_mut};
+use std::sync::atomic::{AtomicU32, Ordering};
 
 /// One executable unit of a rewritten pipeline.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Segment {
     Single(Op),
-    /// ≥ 2 stacked stencils fused into one rolling-window pass.
-    StencilChain(Vec<StencilSpec>),
+    /// ≥ 2 stacked stencil/pointwise stages fused into one
+    /// rolling-window pass.
+    FusedChain(Vec<ChainStage>),
 }
 
 impl Segment {
     pub fn arity(&self) -> usize {
         match self {
             Segment::Single(op) => op.arity(),
-            Segment::StencilChain(_) => 1,
+            Segment::FusedChain(_) => 1,
         }
     }
 
     pub fn num_outputs(&self) -> usize {
         match self {
             Segment::Single(op) => op.num_outputs(),
-            Segment::StencilChain(_) => 1,
+            Segment::FusedChain(_) => 1,
+        }
+    }
+
+    /// Stages of the rewritten chain this segment covers (errors name
+    /// the chain-relative index of the stage a segment starts at).
+    pub fn stage_count(&self) -> usize {
+        match self {
+            Segment::Single(_) => 1,
+            Segment::FusedChain(v) => v.len(),
+        }
+    }
+
+    /// Short tag for stage-error messages.
+    pub fn describe(&self) -> String {
+        match self {
+            Segment::Single(op) => op.describe(),
+            Segment::FusedChain(v) => {
+                let stencils = v
+                    .iter()
+                    .filter(|s| matches!(s, ChainStage::Stencil(_)))
+                    .count();
+                format!(
+                    "fused chain depth={} ({stencils} stencil, {} pointwise)",
+                    v.len(),
+                    v.len() - stencils
+                )
+            }
         }
     }
 }
 
-/// Group consecutive stencil stages into fused chains.
+/// Group consecutive stencil/pointwise stages into fused chains.
 pub fn segment(stages: &[Op]) -> Vec<Segment> {
     let mut out = Vec::new();
-    let mut run: Vec<StencilSpec> = Vec::new();
+    let mut run: Vec<ChainStage> = Vec::new();
     for op in stages {
         match op {
-            Op::Stencil { spec } => run.push(spec.clone()),
+            Op::Stencil { spec } => run.push(ChainStage::Stencil(spec.clone())),
+            Op::Pointwise { spec } => run.push(ChainStage::Pointwise(spec.clone())),
             other => {
                 flush(&mut out, &mut run);
                 out.push(Segment::Single(other.clone()));
@@ -64,13 +105,17 @@ pub fn segment(stages: &[Op]) -> Vec<Segment> {
     out
 }
 
-fn flush(out: &mut Vec<Segment>, run: &mut Vec<StencilSpec>) {
+fn flush(out: &mut Vec<Segment>, run: &mut Vec<ChainStage>) {
     match run.len() {
         0 => {}
-        1 => out.push(Segment::Single(Op::Stencil {
-            spec: run.pop().expect("run of one"),
-        })),
-        _ => out.push(Segment::StencilChain(std::mem::take(run))),
+        1 => {
+            let op = match run.pop().expect("run of one") {
+                ChainStage::Stencil(spec) => Op::Stencil { spec },
+                ChainStage::Pointwise(spec) => Op::Pointwise { spec },
+            };
+            out.push(Segment::Single(op));
+        }
+        _ => out.push(Segment::FusedChain(std::mem::take(run))),
     }
 }
 
@@ -126,8 +171,9 @@ fn jacobi_band(
     band: &mut [f32],
 ) {
     let radii = vec![1usize; iters];
+    let widths = vec![n; iters];
     let input = SliceRows { data: psi0, w: n };
-    cascade_band(&input, n, n, &radii, b0, band, |_, y, src, dst| {
+    cascade_band(&input, n, &widths, &radii, b0, band, |_, y, src, dst| {
         let omega_row = &omega[y * n..][..n];
         jacobi_row(src, n, omega_row, h2, y, dst);
     });
@@ -161,9 +207,205 @@ fn jacobi_row(
     }
 }
 
+/// Coefficients of one cavity step, precomputed exactly the way
+/// [`crate::cfd::CpuSolver`]'s unfused step computes them (f64 → f32
+/// narrowing included), so the fused pass is bit-identical.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCoef {
+    pub iters: usize,
+    /// Grid spacing as f32 (the Thom lid term divides by it).
+    pub h: f32,
+    pub h2: f32,
+    pub inv2h: f32,
+    pub invh2: f32,
+    pub nu: f32,
+    pub dt: f32,
+    pub lid: f32,
+}
+
+/// Outputs of one fully-fused cavity step.
+#[derive(Debug, Clone)]
+pub struct FusedStep {
+    pub psi: Vec<f32>,
+    pub omega: Vec<f32>,
+    pub residual: f32,
+}
+
+/// One **whole** cavity time step as a single fused rolling-window
+/// pass: stages `0..iters` are the Jacobi sweeps (width-`n` psi rows),
+/// stage `iters` derives velocities and the Thom-walled vorticity
+/// (one packed `3n`-wide row: `u | v | om`), and stage `iters+1` is
+/// the explicit-Euler transport (width-`n` new-omega rows, landing in
+/// the output band). The final psi rows are captured into a full-size
+/// field as the last sweep produces them (each worker copies only the
+/// rows of its own band, so the side channel is race-free), and the
+/// Linf residual folds per band and max-merges — bit-identical to the
+/// unfused [`crate::cfd::CpuSolver::step`] for finite fields.
+pub fn cavity_fused_step(
+    psi0: &[f32],
+    omega0: &[f32],
+    n: usize,
+    c: &StepCoef,
+    threads: usize,
+) -> FusedStep {
+    assert_eq!(psi0.len(), n * n, "psi field must be n x n");
+    assert_eq!(omega0.len(), n * n, "omega field must be n x n");
+    if n == 0 {
+        return FusedStep { psi: vec![], omega: vec![], residual: 0.0 };
+    }
+    let iters = c.iters;
+    let d = iters + 2;
+    // Every stage is radius 1: the sweeps read psi rows y-1..y+1, the
+    // velocity/vorticity stage reads psi the same way, and transport
+    // reads the packed rows y-1..y+1.
+    let radii = vec![1usize; d];
+    let mut widths = vec![n; iters];
+    widths.push(3 * n); // packed u | v | om
+    widths.push(n);
+
+    let mut new_om = vec![0.0f32; n * n];
+    let mut psi_out = if iters == 0 {
+        // No sweeps: the step transports against the incoming psi.
+        psi0.to_vec()
+    } else {
+        vec![0.0f32; n * n]
+    };
+    let psi_sink = OutPtr::new(bytes_of_mut(&mut psi_out));
+    let res_bits = AtomicU32::new(0); // 0.0f32
+    let elem = std::mem::size_of::<f32>();
+
+    let do_band = |band: &mut [f32], b0: usize| {
+        let b1 = b0 + band.len() / n;
+        let mut local_max = 0.0f32;
+        let input = SliceRows { data: psi0, w: n };
+        cascade_band(&input, n, &widths, &radii, b0, band, |k, y, src, dst| {
+            if k < iters {
+                let omega_row = &omega0[y * n..][..n];
+                jacobi_row(src, n, omega_row, c.h2, y, dst);
+                if k + 1 == iters && y >= b0 && y < b1 {
+                    // Capture the final psi row; rows in [b0, b1) are
+                    // owned by exactly this worker (halo rows outside
+                    // the band are recomputed by the neighbour and not
+                    // written here), so writers never overlap.
+                    unsafe { psi_sink.write_run(y * n * elem, bytes_of(dst)) };
+                }
+            } else if k == iters {
+                uvom_row(src, n, omega0, c, y, dst);
+            } else {
+                transport_row(src, n, c, y, dst);
+                let om_row = &src.row(y)[2 * n..];
+                for (a, b) in dst.iter().zip(om_row) {
+                    local_max = local_max.max((a - b).abs());
+                }
+            }
+        });
+        // Non-negative f32 bit patterns order like the floats, so an
+        // atomic u32 max merges band residuals without a lock.
+        res_bits.fetch_max(local_max.to_bits(), Ordering::Relaxed);
+    };
+
+    let t = crate::hostexec::pool::effective_threads(threads, n * n, n);
+    if t <= 1 {
+        do_band(&mut new_om, 0);
+    } else {
+        let rows_per = (n + t - 1) / t;
+        std::thread::scope(|scope| {
+            for (wi, band) in new_om.chunks_mut(rows_per * n).enumerate() {
+                let do_band = &do_band;
+                scope.spawn(move || do_band(band, wi * rows_per));
+            }
+        });
+    }
+    FusedStep {
+        psi: psi_out,
+        omega: new_om,
+        residual: f32::from_bits(res_bits.into_inner()),
+    }
+}
+
+/// The velocity/vorticity stage: from the final psi rows, derive one
+/// packed `u | v | om` row, where `om` is the input omega with the Thom
+/// wall conditions applied. Expressions and write order mirror the
+/// unfused solver exactly (interior masks, lid overwrite, wall rows
+/// then wall columns — the corners end up with the column expression).
+fn uvom_row(
+    src: &dyn RowSource<f32>,
+    n: usize,
+    omega0: &[f32],
+    c: &StepCoef,
+    y: usize,
+    dst: &mut [f32],
+) {
+    let (u, rest) = dst.split_at_mut(n);
+    let (v, om) = rest.split_at_mut(n);
+    for j in 0..n {
+        u[j] = 0.0;
+        v[j] = 0.0;
+    }
+    if y > 0 && y + 1 < n {
+        let up = src.row(y + 1);
+        let dn = src.row(y - 1);
+        let mid = src.row(y);
+        for j in 1..n - 1 {
+            u[j] = c.inv2h * (up[j] - dn[j]);
+            v[j] = -c.inv2h * (mid[j + 1] - mid[j - 1]);
+        }
+    }
+    if y + 1 == n {
+        for uj in u.iter_mut() {
+            *uj = c.lid;
+        }
+    }
+    om.copy_from_slice(&omega0[y * n..][..n]);
+    if n >= 2 {
+        if y == 0 {
+            let p1 = src.row(1);
+            for (o, &p) in om.iter_mut().zip(p1) {
+                *o = -2.0 * c.invh2 * p;
+            }
+        }
+        if y + 1 == n {
+            let pm = src.row(n - 2);
+            for (o, &p) in om.iter_mut().zip(pm) {
+                *o = -2.0 * c.invh2 * p - 2.0 * c.lid / c.h;
+            }
+        }
+        let mid = src.row(y);
+        om[0] = -2.0 * c.invh2 * mid[1];
+        om[n - 1] = -2.0 * c.invh2 * mid[n - 2];
+    }
+}
+
+/// The transport stage: explicit Euler on the interior from the packed
+/// `u | v | om` rows; border cells copy `om` (the unfused loop leaves
+/// them at the Thom-walled values).
+fn transport_row(src: &dyn RowSource<f32>, n: usize, c: &StepCoef, y: usize, dst: &mut [f32]) {
+    let cur = src.row(y);
+    let om_mid = &cur[2 * n..];
+    if y == 0 || y + 1 == n {
+        dst.copy_from_slice(om_mid);
+        return;
+    }
+    let u = &cur[..n];
+    let v = &cur[n..2 * n];
+    dst[0] = om_mid[0];
+    dst[n - 1] = om_mid[n - 1];
+    let om_up = &src.row(y + 1)[2 * n..];
+    let om_dn = &src.row(y - 1)[2 * n..];
+    for j in 1..n - 1 {
+        let wx = c.inv2h * (om_mid[j + 1] - om_mid[j - 1]);
+        let wy = c.inv2h * (om_up[j] - om_dn[j]);
+        let lap = c.invh2
+            * (om_mid[j + 1] + om_mid[j - 1] + om_up[j] + om_dn[j] - 4.0 * om_mid[j]);
+        let rhs = -u[j] * wx - v[j] * wy + c.nu * lap;
+        dst[j] = om_mid[j] + c.dt * rhs;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ops::{PointwiseSpec, StencilSpec};
     use crate::tensor::Order;
     use crate::util::rng::Rng;
 
@@ -175,14 +417,39 @@ mod tests {
 
         let segs = segment(&[st.clone(), st.clone(), r.clone(), st.clone()]);
         assert_eq!(segs.len(), 3);
-        assert!(matches!(&segs[0], Segment::StencilChain(c) if c.len() == 2));
+        assert!(matches!(&segs[0], Segment::FusedChain(c) if c.len() == 2));
         assert_eq!(segs[1], Segment::Single(r.clone()));
         assert_eq!(segs[2], Segment::Single(st.clone()));
 
         // A lone stencil stays single; triple fuses into one chain.
         assert_eq!(segment(&[st.clone()]), vec![Segment::Single(st.clone())]);
         let segs = segment(&[st.clone(), st.clone(), st]);
-        assert!(matches!(&segs[..], [Segment::StencilChain(c)] if c.len() == 3));
+        assert!(matches!(&segs[..], [Segment::FusedChain(c)] if c.len() == 3));
+    }
+
+    #[test]
+    fn pointwise_stages_join_fused_runs() {
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let st = Op::Stencil { spec };
+        let pw = Op::Pointwise { spec: PointwiseSpec::scale(2.0) };
+        let r = Op::Reorder { order: Order::new(&[1, 0]).unwrap() };
+
+        // stencil+pointwise runs fuse; a lone pointwise stays single.
+        let segs = segment(&[pw.clone(), st.clone(), pw.clone(), r.clone(), pw.clone()]);
+        assert_eq!(segs.len(), 3);
+        match &segs[0] {
+            Segment::FusedChain(c) => {
+                assert_eq!(c.len(), 3);
+                assert!(matches!(c[0], ChainStage::Pointwise(_)));
+                assert!(matches!(c[1], ChainStage::Stencil(_)));
+            }
+            other => panic!("expected fused chain, got {other:?}"),
+        }
+        assert_eq!(segs[1], Segment::Single(r));
+        assert_eq!(segs[2], Segment::Single(pw.clone()));
+        assert_eq!(segs[0].stage_count(), 3);
+        assert_eq!(segs[2].stage_count(), 1);
+        assert!(segs[0].describe().contains("1 pointwise"));
     }
 
     /// The unfused sweeps, verbatim from the solver's Poisson loop.
@@ -257,4 +524,8 @@ mod tests {
         let omega = vec![0.25f32; 16];
         assert_eq!(jacobi_chain(&psi, &omega, 4, 0.1, 0, 4), psi);
     }
+
+    // cavity_fused_step bit-identity is covered where the unfused
+    // baseline lives: `crate::cfd::cpu` tests compare whole solver
+    // trajectories (fields + residual logs) step by step.
 }

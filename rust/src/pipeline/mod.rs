@@ -19,13 +19,16 @@
 //!   permute pairs cancel, §III.C `Interlace∘Deinterlace` pairs cancel,
 //!   `Copy` elides, and `Subarray` pushes down through permutes so
 //!   §III.B cropping happens *before* data movement.
-//! * **Fusion** ([`fuse`]) — runs of ≥ 2 §III.D `Stencil` stages lower
-//!   to the rolling-window chain executor
+//! * **Fusion** ([`fuse`]) — runs of ≥ 2 §III.D `Stencil` and/or
+//!   `Pointwise` stages lower to the rank-N rolling-window chain
+//!   executor
 //!   ([`hostexec::stencil::apply_chain`](crate::hostexec::stencil::apply_chain)):
 //!   one read of the input and one write of the output instead of
 //!   `depth` round trips, with only `~2·radius·depth` intermediate rows
-//!   hot per worker. The same pass steps the CFD cavity's K Jacobi
-//!   sweeps ([`fuse::jacobi_chain`]).
+//!   hot per worker (pointwise stages are zero-radius members — one hot
+//!   row, no extra traffic). The same machinery runs the CFD cavity's
+//!   **whole** time step as one fused pass
+//!   ([`fuse::cavity_fused_step`]).
 //! * **Plan cache** ([`plan_cache`]) — resolved
 //!   [`planner::Plan`](crate::planner::Plan)s keyed by (shape, order,
 //!   diagonal) so repeated coordinator traffic skips re-planning
@@ -64,9 +67,12 @@ pub enum PipelineError {
     WidthMismatch { stage: usize, width: usize },
     #[error("pipeline inputs mix dtypes {found:?}; chains are dtype-uniform")]
     MixedDtype { found: Vec<DType> },
-    #[error("stage {stage}: {source}")]
+    #[error("stage {stage} ({op}): {source}")]
     Stage {
+        /// Index into the executed (rewritten) stage list.
         stage: usize,
+        /// Short description of the offending op or fused chain.
+        op: String,
         #[source]
         source: OpError,
     },
@@ -117,7 +123,7 @@ impl Pipeline {
             self.stages.iter().cloned().map(Segment::Single).collect();
         run_segments(&segments, inputs, &mut |seg, ins| match seg {
             Segment::Single(op) => op.reference(ins),
-            Segment::StencilChain(_) => unreachable!("reference path never fuses"),
+            Segment::FusedChain(_) => unreachable!("reference path never fuses"),
         })
     }
 
@@ -145,15 +151,13 @@ impl Pipeline {
         let es = std::mem::size_of::<T>();
         let outs = run_segments(&segments, inputs, &mut |seg, ins| match seg {
             Segment::Single(op) => op.execute_fast(ins),
-            Segment::StencilChain(specs) => {
-                let (y, s) = hostexec::stencil::apply_chain(ins[0], specs, threads)?;
-                let dims = ins[0].shape().dims();
+            Segment::FusedChain(chain) => {
+                let (y, s) = hostexec::stencil::apply_chain(ins[0], chain, threads)?;
                 stats.fused_chains += 1;
                 stats.fused_traffic_bytes += s.fused_traffic_bytes();
                 stats.unfused_chain_traffic_bytes += hostexec::stencil::unfused_chain_traffic_bytes(
-                    dims[0],
-                    dims[1],
-                    specs.len(),
+                    ins[0].len(),
+                    chain.len(),
                     es,
                 );
                 Ok(vec![y])
@@ -176,24 +180,59 @@ impl Pipeline {
 
     /// Movement-only execution for any [`Element`] dtype (the bf16
     /// path): identical rewrite + segmentation, but a chain that still
-    /// contains stencil stages after rewriting surfaces
-    /// [`OpError::UnsupportedDtype`] with the stage index.
+    /// contains stencil/pointwise stages after rewriting surfaces
+    /// [`OpError::UnsupportedDtype`] naming the stage index and op.
     fn dispatch_movement<T: Element>(
         &self,
         inputs: &[&NdArray<T>],
         backend: ExecBackend,
-    ) -> Result<Vec<NdArray<T>>, PipelineError> {
-        let segments: Vec<Segment> = match backend {
-            ExecBackend::Naive => self.stages.iter().cloned().map(Segment::Single).collect(),
-            ExecBackend::Host => fuse::segment(&rewrite::rewrite(&self.stages)),
+    ) -> Result<(Vec<NdArray<T>>, PipeStats), PipelineError> {
+        let (segments, stages_rewritten): (Vec<Segment>, usize) = match backend {
+            ExecBackend::Naive => (
+                self.stages.iter().cloned().map(Segment::Single).collect(),
+                self.stages.len(),
+            ),
+            ExecBackend::Host => {
+                let rewritten = rewrite::rewrite(&self.stages);
+                let len = rewritten.len();
+                (fuse::segment(&rewritten), len)
+            }
         };
-        run_segments(&segments, inputs, &mut |seg, ins| match seg {
+        let outs = run_segments(&segments, inputs, &mut |seg, ins| match seg {
             Segment::Single(op) => op.dispatch_movement(ins, backend),
-            Segment::StencilChain(_) => Err(OpError::UnsupportedDtype {
+            Segment::FusedChain(_) => Err(OpError::UnsupportedDtype {
                 dtype: T::DTYPE,
-                what: "fused stencil chain (needs a numeric dtype: f32/f64/i32)".into(),
+                what: format!("{} (needs a numeric dtype: f32/f64/i32)", seg.describe()),
             }),
-        })
+        })?;
+        let stats = PipeStats {
+            stages_in: self.stages.len(),
+            stages_rewritten,
+            ..Default::default()
+        };
+        Ok((outs, stats))
+    }
+
+    /// [`Pipeline::dispatch`] with the traffic/rewrite accounting the
+    /// coordinator reports back in `pipe:` responses. The reference
+    /// backend never rewrites or fuses, so its stats carry the stage
+    /// counts only.
+    pub fn dispatch_with_stats<T: Numeric>(
+        &self,
+        inputs: &[&NdArray<T>],
+        backend: ExecBackend,
+    ) -> Result<(Vec<NdArray<T>>, PipeStats), PipelineError> {
+        match backend {
+            ExecBackend::Naive => self.reference(inputs).map(|outs| {
+                let stats = PipeStats {
+                    stages_in: self.stages.len(),
+                    stages_rewritten: self.stages.len(),
+                    ..Default::default()
+                };
+                (outs, stats)
+            }),
+            ExecBackend::Host => self.execute_with_stats(inputs),
+        }
     }
 
     /// Dtype-dynamic execution over erased buffers: validates that the
@@ -207,6 +246,16 @@ impl Pipeline {
         inputs: &[&TensorBuf],
         backend: ExecBackend,
     ) -> Result<Vec<TensorBuf>, PipelineError> {
+        self.dispatch_buf_with_stats(inputs, backend).map(|(outs, _)| outs)
+    }
+
+    /// [`Pipeline::dispatch_buf`] returning the [`PipeStats`] the run
+    /// produced (fused vs unfused traffic bytes, rewrite counts).
+    pub fn dispatch_buf_with_stats(
+        &self,
+        inputs: &[&TensorBuf],
+        backend: ExecBackend,
+    ) -> Result<(Vec<TensorBuf>, PipeStats), PipelineError> {
         let found: Vec<DType> = inputs.iter().map(|b| b.dtype()).collect();
         let Some(&dt) = found.first() else {
             return Err(PipelineError::WidthMismatch { stage: 0, width: 0 });
@@ -215,12 +264,18 @@ impl Pipeline {
             return Err(PipelineError::MixedDtype { found });
         }
         match dt {
-            DType::F32 => self.dispatch(&views::<f32>(inputs), backend).map(erase_all),
-            DType::F64 => self.dispatch(&views::<f64>(inputs), backend).map(erase_all),
-            DType::I32 => self.dispatch(&views::<i32>(inputs), backend).map(erase_all),
+            DType::F32 => self
+                .dispatch_with_stats(&views::<f32>(inputs), backend)
+                .map(|(o, s)| (erase_all(o), s)),
+            DType::F64 => self
+                .dispatch_with_stats(&views::<f64>(inputs), backend)
+                .map(|(o, s)| (erase_all(o), s)),
+            DType::I32 => self
+                .dispatch_with_stats(&views::<i32>(inputs), backend)
+                .map(|(o, s)| (erase_all(o), s)),
             DType::Bf16 => self
                 .dispatch_movement(&views::<u16>(inputs), backend)
-                .map(erase_all),
+                .map(|(o, s)| (erase_all(o), s)),
         }
     }
 
@@ -245,6 +300,9 @@ fn views<'a, T: Element>(inputs: &[&'a TensorBuf]) -> Vec<&'a NdArray<T>> {
 /// consumes every current lane at once (arity == width) or, when unary
 /// with a single output, maps over the lanes independently. Generic
 /// over the element type — the lane plumbing never touches values.
+/// Errors carry the index of the stage a segment starts at (in the
+/// executed chain) plus the op description, so a dtype failure inside a
+/// fused chain names the offending stage, not just a dtype.
 fn run_segments<T: Element, F>(
     segments: &[Segment],
     inputs: &[&NdArray<T>],
@@ -255,7 +313,8 @@ where
 {
     let mut cur: Vec<NdArray<T>> = Vec::new();
     let mut first = true;
-    for (si, seg) in segments.iter().enumerate() {
+    let mut stage0 = 0usize;
+    for seg in segments {
         let refs: Vec<&NdArray<T>> = if first {
             inputs.to_vec()
         } else {
@@ -263,20 +322,28 @@ where
         };
         let width = refs.len();
         let next = if seg.arity() == width {
-            exec(seg, &refs).map_err(|e| PipelineError::Stage { stage: si, source: e })?
+            exec(seg, &refs).map_err(|e| PipelineError::Stage {
+                stage: stage0,
+                op: seg.describe(),
+                source: e,
+            })?
         } else if seg.arity() == 1 && seg.num_outputs() == 1 {
             let mut lanes = Vec::with_capacity(width);
             for lane in &refs {
-                let mut outs = exec(seg, &[*lane])
-                    .map_err(|e| PipelineError::Stage { stage: si, source: e })?;
+                let mut outs = exec(seg, &[*lane]).map_err(|e| PipelineError::Stage {
+                    stage: stage0,
+                    op: seg.describe(),
+                    source: e,
+                })?;
                 lanes.push(outs.pop().expect("single-output segment"));
             }
             lanes
         } else {
-            return Err(PipelineError::WidthMismatch { stage: si, width });
+            return Err(PipelineError::WidthMismatch { stage: stage0, width });
         };
         cur = next;
         first = false;
+        stage0 += seg.stage_count();
     }
     if first {
         return Ok(inputs.iter().map(|x| (*x).clone()).collect());
@@ -394,10 +461,14 @@ mod tests {
         assert!(
             matches!(
                 err,
-                PipelineError::Stage { stage: 1, source: OpError::UnsupportedDtype { .. } }
+                PipelineError::Stage { stage: 1, source: OpError::UnsupportedDtype { .. }, .. }
             ),
             "{err:?}"
         );
+        // The rendered error names the stage index and the op.
+        let msg = err.to_string();
+        assert!(msg.contains("stage 1"), "{msg}");
+        assert!(msg.contains("stencil"), "{msg}");
     }
 
     #[test]
@@ -416,5 +487,67 @@ mod tests {
         assert_eq!(got, want);
         assert_eq!(stats.fused_chains, 1);
         assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
+    }
+
+    #[test]
+    fn mixed_stencil_pointwise_chain_fuses_on_rank3() {
+        use crate::ops::PointwiseSpec;
+        let mut rng = Rng::new(0x57EA);
+        let x = NdArray::random(Shape::new(&[12, 10, 14]), &mut rng);
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 0.25 };
+        let p = Pipeline::new(vec![
+            Op::Stencil { spec: spec.clone() },
+            Op::Pointwise { spec: PointwiseSpec::axpb(0.9, 0.01) },
+            Op::Stencil { spec },
+            Op::Pointwise { spec: PointwiseSpec::scale(2.0) },
+        ])
+        .unwrap();
+        let want = p.reference(&[&x]).unwrap();
+        let (got, stats) = p.execute_with_stats(&[&x]).unwrap();
+        assert_eq!(got, want);
+        // One fused chain covering all four stages, halving traffic.
+        assert_eq!(stats.fused_chains, 1);
+        assert_eq!(stats.stages_rewritten, 4);
+        assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
+    }
+
+    #[test]
+    fn adjacent_pointwise_stages_compose_in_rewrite() {
+        use crate::ops::PointwiseSpec;
+        let mut rng = Rng::new(0x57EB);
+        let x = NdArray::random(Shape::new(&[9, 9]), &mut rng);
+        let p = Pipeline::new(vec![
+            Op::Pointwise { spec: PointwiseSpec::scale(1.3) },
+            Op::Pointwise { spec: PointwiseSpec::add(-2.0) },
+            Op::Pointwise { spec: PointwiseSpec::axpb(0.5, 1.0) },
+        ])
+        .unwrap();
+        let want = p.reference(&[&x]).unwrap();
+        let (got, stats) = p.execute_with_stats(&[&x]).unwrap();
+        assert_eq!(got, want, "composition must stay bit-identical");
+        assert_eq!(stats.stages_in, 3);
+        assert_eq!(stats.stages_rewritten, 1);
+        assert_eq!(stats.fused_chains, 0);
+    }
+
+    #[test]
+    fn stats_flow_through_the_dynamic_path() {
+        let mut rng = Rng::new(0x57EC);
+        let x = TensorBuf::random(DType::F32, Shape::new(&[32, 32]), &mut rng);
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let p = Pipeline::new(vec![
+            Op::Stencil { spec: spec.clone() },
+            Op::Stencil { spec },
+        ])
+        .unwrap();
+        let (outs, stats) = p.dispatch_buf_with_stats(&[&x], ExecBackend::Host).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(stats.fused_chains, 1);
+        assert!(stats.fused_traffic_bytes > 0);
+        assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
+        // The reference backend reports stage counts, no fusion.
+        let (_, stats) = p.dispatch_buf_with_stats(&[&x], ExecBackend::Naive).unwrap();
+        assert_eq!(stats.stages_in, 2);
+        assert_eq!(stats.fused_chains, 0);
     }
 }

@@ -9,7 +9,9 @@
 //!    [`Op::compose_with`]: `Reorder∘Reorder` composes into one order
 //!    (inverse pairs thereby cancel via rule 1),
 //!    `Deinterlace∘Interlace` / `Interlace∘Deinterlace` pairs cancel,
-//!    `Copy` is neutral.
+//!    `Copy` is neutral, and `Pointwise∘Pointwise` concatenates its
+//!    step lists (bit-identical by construction — each step narrows to
+//!    the element type exactly like the separate stages would).
 //! 3. **Subarray pushdown** — `[Reorder, Subarray]` becomes
 //!    `[Subarray', Reorder]` with the window mapped through the
 //!    permutation, so cropping happens before data movement (strictly
@@ -162,6 +164,32 @@ mod tests {
             Op::Stencil { spec: spec.clone() },
             Op::Stencil { spec },
             Op::ReadRange { base: 0, count: 4 },
+        ];
+        assert_eq!(rewrite(&stages), stages);
+    }
+
+    #[test]
+    fn pointwise_runs_compose_and_identities_elide() {
+        use crate::ops::PointwiseSpec;
+        // Three adjacent pointwise stages concatenate into one.
+        let out = rewrite(&[
+            Op::Pointwise { spec: PointwiseSpec::scale(2.0) },
+            Op::Pointwise { spec: PointwiseSpec::add(1.0) },
+            Op::Pointwise { spec: PointwiseSpec::axpb(0.5, 0.0) },
+        ]);
+        match &out[..] {
+            [Op::Pointwise { spec }] => assert_eq!(spec.depth(), 3),
+            other => panic!("expected one composed pointwise, got {other:?}"),
+        }
+        // Identity pointwise stages drop entirely.
+        assert!(rewrite(&[Op::Pointwise { spec: PointwiseSpec::scale(1.0) }]).is_empty());
+        // A stencil between pointwise stages blocks composition (the
+        // run still fuses later, in segmentation, not here).
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let stages = vec![
+            Op::Pointwise { spec: PointwiseSpec::scale(2.0) },
+            Op::Stencil { spec },
+            Op::Pointwise { spec: PointwiseSpec::scale(3.0) },
         ];
         assert_eq!(rewrite(&stages), stages);
     }

@@ -100,6 +100,36 @@ fn interlace_deinterlace_random_bit_identical() {
     }
 }
 
+fn random_stencil(rng: &mut Rng, rank: usize) -> StencilSpec {
+    match rng.gen_range(3) {
+        0 => StencilSpec::FdLaplacian {
+            order: rng.gen_between(1, 5),
+            scale: rng.gen_f64(),
+        },
+        1 => StencilSpec::Conv {
+            radius: 1,
+            mask: (0..3usize.pow(rank as u32))
+                .map(|_| rng.gen_f64() - 0.5)
+                .collect(),
+        },
+        _ => {
+            let radius = rng.gen_between(1, 4);
+            let r = radius as i64;
+            let taps: Vec<(Vec<i64>, f64)> = (0..rng.gen_between(1, 6))
+                .map(|_| {
+                    (
+                        (0..rank)
+                            .map(|_| rng.gen_range(2 * radius + 1) as i64 - r)
+                            .collect(),
+                        rng.gen_f64() * 2.0 - 1.0,
+                    )
+                })
+                .collect();
+            StencilSpec::Taps { radius, taps }
+        }
+    }
+}
+
 #[test]
 fn stencil_random_specs_bit_identical() {
     let mut rng = Rng::new(0x57E4);
@@ -107,34 +137,53 @@ fn stencil_random_specs_bit_identical() {
         let h = rng.gen_between(1, 70);
         let w = rng.gen_between(1, 70);
         let x = NdArray::random(Shape::new(&[h, w]), &mut rng);
-        let spec = match rng.gen_range(3) {
-            0 => StencilSpec::FdLaplacian {
-                order: rng.gen_between(1, 5),
-                scale: rng.gen_f64(),
-            },
-            1 => StencilSpec::Conv {
-                radius: 1,
-                mask: (0..9).map(|_| rng.gen_f64() - 0.5).collect(),
-            },
-            _ => {
-                let radius = rng.gen_between(1, 4);
-                let r = radius as i64;
-                let taps: Vec<(i64, i64, f64)> = (0..rng.gen_between(1, 6))
-                    .map(|_| {
-                        (
-                            rng.gen_range(2 * radius + 1) as i64 - r,
-                            rng.gen_range(2 * radius + 1) as i64 - r,
-                            rng.gen_f64() * 2.0 - 1.0,
-                        )
-                    })
-                    .collect();
-                StencilSpec::Taps { radius, taps }
-            }
-        };
+        let spec = random_stencil(&mut rng, 2);
         let op = Op::Stencil { spec: spec.clone() };
         let want = op.reference(&[&x]).unwrap();
         let got = op.execute_fast(&[&x]).unwrap();
         assert_eq!(got, want, "{h}x{w} {spec:?}");
+    }
+}
+
+#[test]
+fn stencil_rankn_random_specs_bit_identical() {
+    // Rank 1-4 sweeps through the op layer: the banded slab executor
+    // must equal the golden odometer walk on every shape.
+    let mut rng = Rng::new(0x57E5);
+    for _ in 0..40 {
+        let rank = rng.gen_between(1, 5);
+        let hi = match rank {
+            1 => 70,
+            2 => 34,
+            3 => 14,
+            _ => 8,
+        };
+        let dims: Vec<usize> = (0..rank).map(|_| rng.gen_between(1, hi)).collect();
+        let x = NdArray::random(Shape::new(&dims), &mut rng);
+        let spec = random_stencil(&mut rng, rank);
+        let op = Op::Stencil { spec: spec.clone() };
+        let want = op.reference(&[&x]).unwrap();
+        let got = op.execute_fast(&[&x]).unwrap();
+        assert_eq!(got, want, "dims {dims:?} {spec:?}");
+    }
+}
+
+#[test]
+fn pointwise_random_chains_bit_identical() {
+    use gdrk::ops::PointwiseSpec;
+    let mut rng = Rng::new(0x57E6);
+    for _ in 0..30 {
+        let rank = rng.gen_between(1, 5);
+        let dims: Vec<usize> = (0..rank).map(|_| rng.gen_between(1, 18)).collect();
+        let x = NdArray::random(Shape::new(&dims), &mut rng);
+        let mut spec = PointwiseSpec::axpb(rng.gen_f64() * 2.0 - 1.0, rng.gen_f64());
+        if rng.gen_bool() {
+            spec = spec.then(&PointwiseSpec::scale(rng.gen_f64() * 2.0 - 1.0));
+        }
+        let op = Op::Pointwise { spec };
+        let want = op.reference(&[&x]).unwrap();
+        let got = op.execute_fast(&[&x]).unwrap();
+        assert_eq!(got, want, "dims {dims:?} {op:?}");
     }
 }
 

@@ -147,6 +147,53 @@ fn pipeline_requests_execute_whole_chains() {
     }
 }
 
+/// `pipe:` chain responses report the run's PipeStats (rewrite counts,
+/// fused vs unfused traffic bytes); single-op responses carry none —
+/// the first slice of the protocol's stats extension.
+#[test]
+fn pipeline_responses_report_traffic_stats() {
+    use gdrk::ops::PointwiseSpec;
+    let service = host_service(Backend::HostExec);
+
+    // A fused stencil chain request halves full-size traffic.
+    let img = random_f32(&[96, 96], 0x5151);
+    let (out, stats) = service
+        .call_with_stats(
+            "pipe:smooth3x3_96+smooth3x3_96",
+            vec![Tensor::F32(img.clone())],
+        )
+        .expect("pipe ok");
+    let stats = stats.expect("pipe requests carry stats");
+    assert_eq!(out.len(), 1);
+    assert_eq!(stats.stages_in, 2);
+    assert_eq!(stats.fused_chains, 1);
+    assert!(stats.fused_traffic_bytes > 0);
+    assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
+
+    // Mixed stencil/pointwise chains: the scale stage rides the fused
+    // pass and the result matches the sequential reference.
+    let (out2, stats2) = service
+        .call_with_stats("pipe:fd1_96+scale_4m", vec![Tensor::F32(img.clone())])
+        .expect("mixed pipe ok");
+    let fd = Op::Stencil {
+        spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
+    };
+    let scale = Op::Pointwise { spec: PointwiseSpec::scale(1.5) };
+    let mut want = fd.reference(&[&img]).unwrap();
+    want = scale.reference(&[&want[0]]).unwrap();
+    assert_eq!(out2[0].as_f32().unwrap(), &want[0]);
+    let stats2 = stats2.expect("mixed pipe stats");
+    assert_eq!(stats2.fused_chains, 1);
+    assert!(2 * stats2.fused_traffic_bytes <= stats2.unfused_chain_traffic_bytes);
+
+    // Single-op requests carry no pipe stats.
+    let (_, none) = service
+        .call_with_stats("fd1_96", vec![Tensor::F32(img)])
+        .expect("single ok");
+    assert!(none.is_none());
+    service.shutdown();
+}
+
 #[test]
 fn unknown_artifact_fails_cleanly_and_service_survives() {
     let service = host_service(Backend::HostExec);
