@@ -15,14 +15,19 @@
 //! * **rank-3 mixed chain** — stencil + pointwise + stencil on a
 //!   96x128x128 field, fused through the same rank-N executor; its
 //!   deterministic `traffic_bytes` row (fused <= 1/2 unfused) is what
-//!   `rust/tests/pipeline_traffic_anchor.rs` pins.
+//!   `rust/tests/pipeline_traffic_anchor.rs` pins. The matching
+//!   `est_traffic_bytes` row records the cost model's prediction for
+//!   the same run, and the anchor pins estimate to measurement too.
 //!
 //! Outputs are gated on bit-identity before anything is timed.
 
 use gdrk::cfd::{CpuSolver, Params};
 use gdrk::hostexec::pool;
-use gdrk::hostexec::stencil::{apply_chain, unfused_chain_traffic_bytes, ChainStage};
+use gdrk::hostexec::stencil::{
+    apply_chain, chain_traffic_estimate, unfused_chain_traffic_bytes, ChainStage,
+};
 use gdrk::ops::{Op, PointwiseSpec, StencilSpec};
+use gdrk::pipeline::Pipeline;
 use gdrk::report::Table;
 use gdrk::tensor::{NdArray, Shape};
 use gdrk::util::rng::Rng;
@@ -142,7 +147,7 @@ fn main() {
         }),
     ];
     let chain3d_ops = ops_of(&chain3d);
-    let traffic3d = {
+    let (traffic3d, est3d) = {
         let want = run_unfused(&vol, &chain3d_ops);
         // Cap the band count for the traffic row: halo rows grow with
         // the number of bands, and this row anchors a deterministic
@@ -156,7 +161,20 @@ fn main() {
             stats.fused_traffic_bytes(),
             unfused
         );
-        (stats.fused_traffic_bytes() as f64, unfused as f64)
+        // The cost model's prediction for the same run (same band
+        // layout), recorded next to the measurement: the traffic anchor
+        // pins estimate and measurement to each other.
+        let radii: Vec<usize> = chain3d.iter().map(ChainStage::radius).collect();
+        let est = chain_traffic_estimate(vol.shape().dims(), &radii, 4, threads.min(8));
+        println!(
+            "rank-3 chain traffic: measured fused {} B vs modeled {} B",
+            stats.fused_traffic_bytes(),
+            est.fused_bytes
+        );
+        (
+            (stats.fused_traffic_bytes() as f64, unfused as f64),
+            (est.fused_bytes as f64, unfused as f64),
+        )
     };
 
     // ---- timing ----
@@ -220,6 +238,26 @@ fn main() {
         unfused: traffic3d.1,
         fused: traffic3d.0,
     });
+    rows.push(Row {
+        workload: "stencil_chain3d_96x128x128_d3".into(),
+        metric: "est_traffic_bytes".into(),
+        // The cost model's prediction for the row above (same band
+        // layout): the anchor test pins estimate to measurement.
+        unfused: est3d.1,
+        fused: est3d.0,
+    });
+
+    // Model-vs-actual through the whole pipeline path, as the
+    // coordinator reports it for `pipe:` requests.
+    {
+        let pipe = Pipeline::new(chain3d_ops.clone()).expect("valid chain");
+        let (_, stats) = pipe.execute_with_stats(&[&vol]).expect("pipeline run");
+        println!(
+            "pipeline stats (rank-3 chain): estimated {} B, measured fused {} B, \
+             unfused {} B\n",
+            stats.estimated_bytes, stats.fused_traffic_bytes, stats.unfused_chain_traffic_bytes
+        );
+    }
 
     let mut t = Table::new(
         "fused vs unfused op chains",

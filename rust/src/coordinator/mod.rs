@@ -15,6 +15,13 @@
 //! multi-threaded host backend (`crate::hostexec`), or the naive golden
 //! references — `Auto` picks PJRT when available and falls back to
 //! hostexec, so the service answers with or without built artifacts.
+//!
+//! Composite `pipe:<a>+<b>+...` requests resolve to a whole
+//! [`crate::pipeline::Pipeline`] and report its
+//! [`PipeStats`](crate::pipeline::PipeStats) in the response —
+//! rewrite counts, measured fused-vs-unfused traffic, and the cost
+//! model's `estimated_bytes` prediction side by side, so serving logs
+//! carry model vs actual per request.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,0 +1,129 @@
+//! Calibration hook for the host cost model: op-class traffic weights
+//! scaled by the simulator's measured bandwidth ratios.
+//!
+//! The cost model ([`crate::ops::cost`]) compares chains by weighted
+//! bytes; the weights say how much slower than a straight memcpy each
+//! op class moves its bytes. Rather than hard-coding those ratios, this
+//! module *measures* them on the same first-principles memory-system
+//! simulator the benches anchor against: a memcpy stream, the tiled and
+//! naive permutes (the Table-1 mechanism the perf-shape anchor pins),
+//! and a strided gather all run through [`simulate`], and the weights
+//! are the memcpy-to-kernel bandwidth ratios. One calibration serves
+//! the whole process ([`host_weights`] caches it) — the simulator is
+//! deterministic, so the weights are too.
+
+use super::{simulate, Device};
+use crate::kernels::{MemcpyKernel, NaivePermuteKernel, ReadWriteKernel, TiledPermuteKernel};
+use crate::ops::cost::CostWeights;
+use crate::planner::plan_reorder;
+use crate::tensor::{Order, Shape};
+use std::sync::OnceLock;
+
+/// Measured bandwidths (GB/s on the simulated Tesla C1060) of the
+/// calibration workloads.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    pub memcpy_gbs: f64,
+    pub tiled_permute_gbs: f64,
+    pub naive_permute_gbs: f64,
+    pub strided_read_gbs: f64,
+}
+
+impl Calibration {
+    /// Run the calibration workloads through the simulator. The permute
+    /// workload is a scaled-down cousin of the perf-shape anchor's
+    /// (`[32, 128, 256]`, order `[1 0 2]`) so the ratio reflects the
+    /// same mechanism the anchor pins.
+    pub fn measure() -> Calibration {
+        let dev = Device::tesla_c1060();
+        let shape = Shape::new(&[32, 128, 256]);
+        let order = Order::new(&[1, 0, 2]).expect("valid order");
+        let elems = shape.num_elements();
+        let memcpy = simulate(&MemcpyKernel::f32(elems), &dev);
+        let tiled = simulate(
+            &TiledPermuteKernel::new(
+                plan_reorder(&shape, &order, true).expect("plannable permute"),
+            ),
+            &dev,
+        );
+        let naive = simulate(
+            &NaivePermuteKernel::new(
+                plan_reorder(&shape, &order, false).expect("plannable permute"),
+            ),
+            &dev,
+        );
+        let strided = simulate(&ReadWriteKernel::strided_f32(elems / 8, 8), &dev);
+        Calibration {
+            memcpy_gbs: memcpy.bandwidth_gbs,
+            tiled_permute_gbs: tiled.bandwidth_gbs,
+            naive_permute_gbs: naive.bandwidth_gbs,
+            strided_read_gbs: strided.bandwidth_gbs,
+        }
+    }
+
+    /// The tiled-vs-naive permute ratio (the paper's Table-1 headline;
+    /// the perf-shape anchor asserts it stays a healthy multiple).
+    pub fn tiled_vs_naive(&self) -> f64 {
+        if self.naive_permute_gbs > 0.0 {
+            self.tiled_permute_gbs / self.naive_permute_gbs
+        } else {
+            1.0
+        }
+    }
+
+    /// Lower the measured bandwidths to cost-model weights: each class
+    /// weight is memcpy bandwidth over the class's bandwidth, floored
+    /// at 1.0 (a weight says how much *more* each byte costs than a
+    /// streamed byte, never less). Stencil and pointwise passes stream
+    /// their reads/writes, so they stay at 1.0.
+    pub fn weights(&self) -> CostWeights {
+        let rel = |gbs: f64| {
+            if gbs > 0.0 {
+                (self.memcpy_gbs / gbs).max(1.0)
+            } else {
+                1.0
+            }
+        };
+        CostWeights {
+            streaming: 1.0,
+            strided: rel(self.strided_read_gbs),
+            permute: rel(self.tiled_permute_gbs),
+            stencil: 1.0,
+            pointwise: 1.0,
+        }
+    }
+}
+
+/// The process-wide calibrated weights the pipeline's cost-guided
+/// rewrite pass runs against (measured once, cached).
+pub fn host_weights() -> CostWeights {
+    static WEIGHTS: OnceLock<CostWeights> = OnceLock::new();
+    *WEIGHTS.get_or_init(|| Calibration::measure().weights())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_ratios_are_sane() {
+        let c = Calibration::measure();
+        assert!(c.memcpy_gbs > 0.0, "{c:?}");
+        // The tiled permute loses to memcpy but beats naive by the
+        // paper's margin; strided reads waste most of each burst.
+        assert!(c.tiled_permute_gbs <= c.memcpy_gbs, "{c:?}");
+        assert!(c.tiled_vs_naive() > 2.0 && c.tiled_vs_naive() < 100.0, "{c:?}");
+        assert!(c.strided_read_gbs < c.memcpy_gbs, "{c:?}");
+    }
+
+    #[test]
+    fn weights_reflect_the_measured_ordering() {
+        let w = host_weights();
+        assert_eq!(w.streaming, 1.0);
+        assert!(w.permute >= 1.0 && w.permute < 100.0, "{w:?}");
+        assert!(w.strided >= w.permute, "strided gathers cost most: {w:?}");
+        assert_eq!(w.stencil, 1.0);
+        // Cached: a second call returns the identical weights.
+        assert_eq!(host_weights(), w);
+    }
+}

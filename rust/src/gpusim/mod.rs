@@ -23,8 +23,14 @@
 //! (77.8 of 102.4 GB/s — [`device::Device::dram_efficiency`]); everything
 //! else is architecture, so table *shapes* (who wins, by what factor)
 //! emerge rather than being fit per-experiment.
+//!
+//! The simulator also feeds the host-side cost model: [`calib`] runs
+//! memcpy/permute/strided workloads through [`simulate`] and lowers the
+//! measured bandwidth ratios to the per-op-class weights the pipeline's
+//! cost-guided rewrite pass compares chains with.
 
 pub mod access;
+pub mod calib;
 pub mod coalesce;
 pub mod device;
 pub mod engine;
@@ -32,5 +38,6 @@ pub mod sharedmem;
 pub mod texture;
 
 pub use access::{AccessKind, GpuKernel, HalfWarpAccess, LaunchConfig};
+pub use calib::Calibration;
 pub use device::Device;
 pub use engine::{simulate, SimReport};

@@ -38,7 +38,7 @@
 //!
 //! The band scheduler itself — descend to the deepest stage whose
 //! source rows are ready, produce one row, repeat — is shared state
-//! machinery, not stencil arithmetic. [`cascade_band`] owns it (the
+//! machinery, not stencil arithmetic. `cascade_band` owns it (the
 //! ring-capacity invariant lives in exactly one place); this module's
 //! chain executor and the fully-fused CFD cavity step in
 //! [`crate::pipeline::fuse`] both drive it with their own row
@@ -423,6 +423,67 @@ impl ChainStats {
 /// field move (one read and one write of the whole field per stage).
 pub fn unfused_chain_traffic_bytes(elems: usize, depth: usize, elem_bytes: usize) -> u64 {
     2 * depth as u64 * (elems * elem_bytes) as u64
+}
+
+/// Model of the traffic a fused run of the given per-stage radii moves
+/// over data of `dims` — the cost-model twin of the measured
+/// [`ChainStats`]: `fused_bytes` mirrors
+/// [`ChainStats::fused_traffic_bytes`] (per-band input window incl.
+/// stage-0 halo, plus one full write of the output), `ring_bytes` the
+/// cache-resident intermediate rows. Computed with the same band
+/// layout and halo clipping the executor uses, so for a matching
+/// thread count the estimate equals the measured counters exactly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ChainTrafficEst {
+    /// Modeled full-size-buffer bytes (input reads + output writes).
+    pub fused_bytes: u64,
+    /// Modeled ring-buffer bytes (intermediate rows, cache-resident).
+    pub ring_bytes: u64,
+}
+
+/// Estimate a fused run's traffic without executing it (see
+/// [`ChainTrafficEst`]). `radii` is the per-stage axis-0 halo list
+/// (pointwise stages contribute 0); `threads` is the worker budget the
+/// run would be given — band count resolves through the same
+/// [`pool::effective_threads`] clamp the executor applies.
+pub fn chain_traffic_estimate(
+    dims: &[usize],
+    radii: &[usize],
+    elem_bytes: usize,
+    threads: usize,
+) -> ChainTrafficEst {
+    if dims.is_empty() || radii.is_empty() {
+        return ChainTrafficEst::default();
+    }
+    let h = dims[0];
+    let w: usize = if dims.len() == 1 { 1 } else { dims[1..].iter().product() };
+    if h * w == 0 {
+        return ChainTrafficEst::default();
+    }
+    let d = radii.len();
+    let suffix = radius_suffix(radii);
+    let t = pool::effective_threads(threads, h * w, h);
+    let rows_per = (h + t - 1) / t;
+    let mut in_rows: u64 = 0;
+    let mut ring_rows: u64 = 0;
+    let mut b0 = 0usize;
+    while b0 < h {
+        let b1 = (b0 + rows_per).min(h);
+        let in_lo = b0.saturating_sub(suffix[0]).saturating_sub(radii[0]);
+        let in_hi = (b1 + suffix[0] + radii[0]).min(h);
+        in_rows += (in_hi - in_lo) as u64;
+        for k in 0..d - 1 {
+            let lo = b0.saturating_sub(suffix[k]);
+            let hi = (b1 + suffix[k]).min(h);
+            ring_rows += (hi - lo) as u64;
+        }
+        b0 = b1;
+    }
+    let row_bytes = (w * elem_bytes) as u64;
+    ChainTrafficEst {
+        fused_bytes: in_rows * row_bytes + (h * w * elem_bytes) as u64,
+        ring_bytes: ring_rows * row_bytes,
+    }
 }
 
 /// Apply a functor with zero ghost cells, banded over the worker pool —
@@ -870,5 +931,48 @@ mod tests {
         assert_eq!(radius_suffix(&[2, 1, 3]), vec![4, 3, 0]);
         assert_eq!(radius_suffix(&[5]), vec![0]);
         assert!(radius_suffix(&[]).is_empty());
+    }
+
+    #[test]
+    fn traffic_estimate_matches_measured_stats_exactly() {
+        // The cost model's estimate replicates the executor's band
+        // layout, so for matching thread counts the two agree bit for
+        // bit — across band counts, radii mixes and ranks.
+        let mut rng = Rng::new(0xC4A5);
+        let cases: Vec<(Vec<usize>, Vec<StencilSpec>)> = vec![
+            (vec![48, 40], vec![StencilSpec::FdLaplacian { order: 1, scale: 1.0 }; 3]),
+            (
+                vec![256, 140], // clears PARALLEL_THRESHOLD: real bands
+                vec![
+                    StencilSpec::FdLaplacian { order: 2, scale: 0.2 },
+                    StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] },
+                ],
+            ),
+            (
+                vec![40, 30, 36], // rank 3, also above the threshold
+                vec![
+                    StencilSpec::FdLaplacian { order: 1, scale: 0.4 },
+                    StencilSpec::FdLaplacian { order: 1, scale: 0.1 },
+                ],
+            ),
+        ];
+        for (dims, chain) in cases {
+            let x = NdArray::random(Shape::new(&dims), &mut rng);
+            let stages: Vec<ChainStage> = chain.iter().cloned().map(st).collect();
+            let radii: Vec<usize> = stages.iter().map(ChainStage::radius).collect();
+            for threads in [1usize, 3, 8] {
+                let (_, stats) = apply_chain(&x, &stages, threads).unwrap();
+                let est = chain_traffic_estimate(&dims, &radii, 4, threads);
+                assert_eq!(
+                    est.fused_bytes,
+                    stats.fused_traffic_bytes(),
+                    "dims {dims:?} threads={threads}"
+                );
+                assert_eq!(est.ring_bytes, stats.ring_bytes, "dims {dims:?} threads={threads}");
+            }
+        }
+        // Degenerate inputs estimate to zero, like the executor reports.
+        assert_eq!(chain_traffic_estimate(&[0, 7], &[1, 1], 4, 4).fused_bytes, 0);
+        assert_eq!(chain_traffic_estimate(&[8, 8], &[], 4, 4).fused_bytes, 0);
     }
 }

@@ -10,10 +10,14 @@
 //! * **L3** — this crate: the coordinator, planner, Tesla-C1060 memory-system
 //!   simulator, PJRT runtime (feature `pjrt`), the tiled multi-threaded
 //!   host execution backend (`hostexec`), the op-graph fusion subsystem
-//!   (`pipeline`), and CPU reference implementations. Element type is a
+//!   (`pipeline`, cost-guided rewrites calibrated by the simulator),
+//!   and CPU reference implementations. Element type is a
 //!   runtime property throughout: movement ops run on a dtype-erased
 //!   byte core, stencils are generic over `tensor::Numeric`, and the
 //!   dynamic `TensorBuf` carries the dtype tag end to end.
+//!
+//! `docs/ARCHITECTURE.md` is the layer-by-layer map (with the data
+//! flow of a served `pipe:` request); `README.md` has the quickstart.
 
 pub mod tensor;
 pub mod ops;

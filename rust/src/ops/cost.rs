@@ -1,0 +1,407 @@
+//! Traffic cost model: per-op byte/pass estimates that drive the
+//! cost-guided pipeline rewrites.
+//!
+//! The paper's bandwidth argument is quantitative — every rearrangement
+//! op has a knowable traffic footprint (the bytes a pass must move
+//! through full-size buffers). [`Op::traffic_estimate`] states that
+//! footprint for one op on one input shape; [`Op::out_shape`] is the
+//! shape-transfer function that lets a chain walk propagate shapes
+//! stage to stage. [`CostWeights`] scale the raw bytes by op-class
+//! *efficiency*, so chains of unlike ops compare fairly — a permute
+//! pass sustains a fraction of memcpy bandwidth, and the simulator
+//! measures that ratio ([`crate::gpusim::calib`]). Chain-level
+//! integration (lane tracking, fused-segment estimates) lives in
+//! [`crate::pipeline::cost`]; the rewrite pass consumes both.
+//!
+//! Estimates model *useful full-size traffic*, the paper's numerator:
+//! reads count the bytes a pass must fetch from a full-size buffer,
+//! writes the bytes it must store. Cache-resident re-reads (stencil
+//! taps) are not charged — the model ranks chain shapes against each
+//! other, it does not predict wall-clock.
+
+use super::reorder::collapse_dims;
+use super::{Op, OpError};
+use crate::tensor::{DType, Shape};
+
+/// Modeled memory traffic of one op execution (one pass over full-size
+/// buffers unless stated otherwise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TrafficEst {
+    /// Bytes the pass reads from full-size (DRAM-resident) buffers.
+    pub bytes_read: u64,
+    /// Bytes the pass writes to full-size buffers.
+    pub bytes_written: u64,
+    /// Full passes over the data (launches / spawn rounds).
+    pub passes: u32,
+}
+
+impl TrafficEst {
+    /// Total full-size bytes moved (read + written).
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_read + self.bytes_written
+    }
+
+    /// Fold another estimate into this one (chain integration).
+    pub fn accumulate(&mut self, other: TrafficEst) {
+        self.bytes_read += other.bytes_read;
+        self.bytes_written += other.bytes_written;
+        self.passes += other.passes;
+    }
+
+    /// The same op applied independently to `lanes` equal lanes.
+    pub fn scaled(self, lanes: u64) -> TrafficEst {
+        TrafficEst {
+            bytes_read: self.bytes_read * lanes,
+            bytes_written: self.bytes_written * lanes,
+            passes: self.passes * lanes as u32,
+        }
+    }
+}
+
+/// Relative per-op-class traffic weights: 1.0 means the op streams at
+/// memcpy efficiency, larger means each byte effectively costs more
+/// (the pass sustains a fraction of streaming bandwidth). The default
+/// is byte-counting (all 1.0); [`crate::gpusim::calib::host_weights`]
+/// returns weights scaled by the simulator's measured ratios.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostWeights {
+    /// Sequential-run movement: copy, range reads, subarray plane
+    /// walks, interlace/deinterlace lane merges.
+    pub streaming: f64,
+    /// Strided gathers (`ReadStrided`).
+    pub strided: f64,
+    /// Tiled permutes (`Reorder` / `ReorderCollapse`).
+    pub permute: f64,
+    /// Stencil passes (reads served once per element, taps from cache).
+    pub stencil: f64,
+    /// Elementwise functor chains.
+    pub pointwise: f64,
+}
+
+impl Default for CostWeights {
+    fn default() -> CostWeights {
+        CostWeights {
+            streaming: 1.0,
+            strided: 1.0,
+            permute: 1.0,
+            stencil: 1.0,
+            pointwise: 1.0,
+        }
+    }
+}
+
+fn invalid(msg: String) -> OpError {
+    OpError::Invalid(msg)
+}
+
+impl Op {
+    /// Shape-transfer function: the output shape this op produces from
+    /// one input of `in_shape` (for [`Op::Interlace`], the per-lane
+    /// input shape; for [`Op::Deinterlace`], the per-lane *output*
+    /// shape). Validates the same structural constraints the reference
+    /// implementations enforce, so a chain walk fails exactly where
+    /// execution would.
+    pub fn out_shape(&self, in_shape: &[usize]) -> Result<Vec<usize>, OpError> {
+        let rank = in_shape.len();
+        let len = in_shape.iter().product::<usize>();
+        let need_flat = |what: &str| -> Result<(), OpError> {
+            if rank != 1 {
+                return Err(invalid(format!("{what} expects a flat array, got rank {rank}")));
+            }
+            Ok(())
+        };
+        match self {
+            Op::Copy | Op::Stencil { .. } | Op::Pointwise { .. } => Ok(in_shape.to_vec()),
+            Op::ReadRange { base, count } => {
+                need_flat("read_range")?;
+                if base + count > len {
+                    return Err(invalid(format!(
+                        "range [{base}, {}) out of bounds for {len}",
+                        base + count
+                    )));
+                }
+                Ok(vec![*count])
+            }
+            Op::ReadStrided { base, stride, count } => {
+                need_flat("read_strided")?;
+                if *stride == 0 {
+                    return Err(invalid("stride must be >= 1".into()));
+                }
+                if *count > 0 && base + (count - 1) * stride >= len {
+                    return Err(invalid("strided window out of bounds".into()));
+                }
+                Ok(vec![*count])
+            }
+            Op::Reorder { order } => {
+                if order.rank() != rank {
+                    return Err(invalid(format!(
+                        "order {order} does not match rank {rank}"
+                    )));
+                }
+                Ok(Shape::new(in_shape).permuted(&order.to_axes()).dims().to_vec())
+            }
+            Op::ReorderCollapse { order, out_rank } => {
+                if order.rank() != rank {
+                    return Err(invalid(format!(
+                        "order {order} does not match rank {rank}"
+                    )));
+                }
+                if *out_rank == 0 || *out_rank > rank {
+                    return Err(invalid(format!(
+                        "out_rank {out_rank} out of range for rank {rank}"
+                    )));
+                }
+                let permuted = Shape::new(in_shape).permuted(&order.to_axes());
+                Ok(collapse_dims(permuted.dims(), *out_rank))
+            }
+            Op::Subarray { base, shape } => {
+                if base.len() != rank || shape.len() != rank {
+                    return Err(invalid("base/shape rank mismatch".into()));
+                }
+                for ((&b, &s), &d) in base.iter().zip(shape).zip(in_shape) {
+                    if b + s > d {
+                        return Err(invalid(format!(
+                            "subarray window out of bounds: base {base:?} + shape {shape:?} \
+                             vs {in_shape:?}"
+                        )));
+                    }
+                }
+                Ok(shape.clone())
+            }
+            Op::Interlace { n } => {
+                need_flat("interlace")?;
+                if *n < 2 {
+                    return Err(invalid("interlace needs >= 2 arrays".into()));
+                }
+                Ok(vec![n * len])
+            }
+            Op::Deinterlace { n } => {
+                need_flat("deinterlace")?;
+                if *n < 2 {
+                    return Err(invalid("deinterlace needs n >= 2".into()));
+                }
+                if len % n != 0 {
+                    return Err(invalid(format!("length {len} not divisible by n={n}")));
+                }
+                Ok(vec![len / n])
+            }
+        }
+    }
+
+    /// Modeled full-size traffic of executing this op once on an input
+    /// of `in_shape` (per-lane shape for the multi-lane ops — the
+    /// estimate covers **all** lanes the op consumes or produces).
+    ///
+    /// ```
+    /// use gdrk::ops::Op;
+    /// use gdrk::tensor::DType;
+    ///
+    /// // Cropping an 8x8 window out of 16x16 f32: the §III.B plane
+    /// // walk touches only the window, not the full input.
+    /// let crop = Op::Subarray { base: vec![0, 0], shape: vec![8, 8] };
+    /// let est = crop.traffic_estimate(&[16, 16], DType::F32).unwrap();
+    /// assert_eq!(est.bytes_read, 8 * 8 * 4);
+    /// assert_eq!(est.bytes_written, 8 * 8 * 4);
+    /// assert_eq!(est.passes, 1);
+    /// ```
+    pub fn traffic_estimate(
+        &self,
+        in_shape: &[usize],
+        dtype: DType,
+    ) -> Result<TrafficEst, OpError> {
+        let es = dtype.size_bytes() as u64;
+        let out = self.out_shape(in_shape)?;
+        let in_bytes = in_shape.iter().product::<usize>() as u64 * es;
+        let out_bytes = out.iter().product::<usize>() as u64 * es;
+        let (bytes_read, bytes_written) = match self {
+            // Full-pass ops: read the input once, write the output once.
+            Op::Copy
+            | Op::Reorder { .. }
+            | Op::ReorderCollapse { .. }
+            | Op::Stencil { .. }
+            | Op::Pointwise { .. } => (in_bytes, out_bytes),
+            // Window ops touch only the window on both sides.
+            Op::ReadRange { .. } | Op::ReadStrided { .. } | Op::Subarray { .. } => {
+                (out_bytes, out_bytes)
+            }
+            // Interlace consumes n lanes of `in_shape` each; total in =
+            // total out. Deinterlace reads the merged input once and
+            // writes the same bytes across its n lanes.
+            Op::Interlace { .. } => (out_bytes, out_bytes),
+            Op::Deinterlace { .. } => (in_bytes, in_bytes),
+        };
+        Ok(TrafficEst { bytes_read, bytes_written, passes: 1 })
+    }
+
+    /// The op-class weight the cost model multiplies this op's bytes
+    /// by. Identity reorders stream (no transpose plane), everything
+    /// else maps to its [`CostWeights`] class.
+    pub fn cost_weight(&self, w: &CostWeights) -> f64 {
+        match self {
+            Op::Copy
+            | Op::ReadRange { .. }
+            | Op::Subarray { .. }
+            | Op::Interlace { .. }
+            | Op::Deinterlace { .. } => w.streaming,
+            Op::ReadStrided { .. } => w.strided,
+            Op::Reorder { order } => {
+                if order.is_identity() {
+                    w.streaming
+                } else {
+                    w.permute
+                }
+            }
+            Op::ReorderCollapse { order, .. } => {
+                if order.is_identity() {
+                    w.streaming
+                } else {
+                    w.permute
+                }
+            }
+            Op::Stencil { .. } => w.stencil,
+            Op::Pointwise { .. } => w.pointwise,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{PointwiseSpec, StencilSpec};
+    use crate::tensor::Order;
+
+    #[test]
+    fn shape_transfer_per_op() {
+        assert_eq!(Op::Copy.out_shape(&[3, 5]).unwrap(), vec![3, 5]);
+        assert_eq!(
+            Op::ReadRange { base: 2, count: 9 }.out_shape(&[16]).unwrap(),
+            vec![9]
+        );
+        assert_eq!(
+            Op::ReadStrided { base: 1, stride: 3, count: 5 }
+                .out_shape(&[16])
+                .unwrap(),
+            vec![5]
+        );
+        let order = Order::new(&[1, 0, 2]).unwrap();
+        // permuted([6, 10, 14]) under order [1 0 2].
+        let got = Op::Reorder { order: order.clone() }.out_shape(&[6, 10, 14]).unwrap();
+        assert_eq!(
+            got,
+            Shape::new(&[6, 10, 14]).permuted(&order.to_axes()).dims().to_vec()
+        );
+        let collapsed = Op::ReorderCollapse { order, out_rank: 2 }
+            .out_shape(&[6, 10, 14])
+            .unwrap();
+        assert_eq!(collapsed.len(), 2);
+        assert_eq!(collapsed.iter().product::<usize>(), 6 * 10 * 14);
+        assert_eq!(
+            Op::Subarray { base: vec![1, 2], shape: vec![2, 3] }
+                .out_shape(&[4, 5])
+                .unwrap(),
+            vec![2, 3]
+        );
+        assert_eq!(Op::Interlace { n: 3 }.out_shape(&[500]).unwrap(), vec![1500]);
+        assert_eq!(Op::Deinterlace { n: 4 }.out_shape(&[1000]).unwrap(), vec![250]);
+    }
+
+    #[test]
+    fn shape_transfer_validates_like_execution() {
+        assert!(Op::ReadRange { base: 8, count: 9 }.out_shape(&[16]).is_err());
+        assert!(Op::ReadRange { base: 0, count: 4 }.out_shape(&[4, 4]).is_err());
+        assert!(Op::ReadStrided { base: 0, stride: 0, count: 2 }
+            .out_shape(&[8])
+            .is_err());
+        assert!(Op::ReadStrided { base: 0, stride: 5, count: 3 }
+            .out_shape(&[8])
+            .is_err());
+        let order = Order::new(&[1, 0]).unwrap();
+        assert!(Op::Reorder { order: order.clone() }.out_shape(&[2, 3, 4]).is_err());
+        assert!(Op::ReorderCollapse { order, out_rank: 3 }.out_shape(&[2, 3]).is_err());
+        assert!(Op::Subarray { base: vec![2, 2], shape: vec![9, 9] }
+            .out_shape(&[4, 4])
+            .is_err());
+        assert!(Op::Interlace { n: 2 }.out_shape(&[3, 3]).is_err());
+        assert!(Op::Deinterlace { n: 3 }.out_shape(&[10]).is_err());
+        assert!(Op::Deinterlace { n: 1 }.out_shape(&[10]).is_err());
+    }
+
+    #[test]
+    fn estimates_scale_with_dtype_width() {
+        let op = Op::Copy;
+        let f32e = op.traffic_estimate(&[64, 64], DType::F32).unwrap();
+        let f64e = op.traffic_estimate(&[64, 64], DType::F64).unwrap();
+        let b16e = op.traffic_estimate(&[64, 64], DType::Bf16).unwrap();
+        assert_eq!(f32e.total_bytes(), 2 * 64 * 64 * 4);
+        assert_eq!(f64e.total_bytes(), 2 * f32e.total_bytes());
+        assert_eq!(2 * b16e.total_bytes(), f32e.total_bytes());
+    }
+
+    #[test]
+    fn window_ops_charge_the_window_only() {
+        let crop = Op::Subarray { base: vec![4, 4], shape: vec![8, 8] };
+        let est = crop.traffic_estimate(&[64, 64], DType::F32).unwrap();
+        assert_eq!(est.bytes_read, 8 * 8 * 4);
+        assert_eq!(est.bytes_written, 8 * 8 * 4);
+        let rr = Op::ReadRange { base: 0, count: 100 };
+        let est = rr.traffic_estimate(&[4096], DType::I32).unwrap();
+        assert_eq!(est.total_bytes(), 2 * 100 * 4);
+    }
+
+    #[test]
+    fn lane_ops_count_all_lanes() {
+        // interlace n=3 on 500-element lanes: 1500 in, 1500 out.
+        let est = Op::Interlace { n: 3 }
+            .traffic_estimate(&[500], DType::F32)
+            .unwrap();
+        assert_eq!(est.bytes_read, 1500 * 4);
+        assert_eq!(est.bytes_written, 1500 * 4);
+        let est = Op::Deinterlace { n: 3 }
+            .traffic_estimate(&[1500], DType::F32)
+            .unwrap();
+        assert_eq!(est.total_bytes(), 2 * 1500 * 4);
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let mut a = TrafficEst { bytes_read: 10, bytes_written: 20, passes: 1 };
+        a.accumulate(TrafficEst { bytes_read: 5, bytes_written: 5, passes: 2 });
+        assert_eq!(a.total_bytes(), 40);
+        assert_eq!(a.passes, 3);
+        let s = a.scaled(3);
+        assert_eq!(s.total_bytes(), 120);
+        assert_eq!(s.passes, 9);
+    }
+
+    #[test]
+    fn weights_partition_op_classes() {
+        let w = CostWeights {
+            streaming: 1.0,
+            strided: 4.0,
+            permute: 2.0,
+            stencil: 1.5,
+            pointwise: 1.0,
+        };
+        assert_eq!(Op::Copy.cost_weight(&w), 1.0);
+        assert_eq!(
+            Op::ReadStrided { base: 0, stride: 2, count: 4 }.cost_weight(&w),
+            4.0
+        );
+        assert_eq!(
+            Op::Reorder { order: Order::new(&[1, 0]).unwrap() }.cost_weight(&w),
+            2.0
+        );
+        // Identity reorders stream — no transpose plane to tile.
+        assert_eq!(
+            Op::Reorder { order: Order::identity(3) }.cost_weight(&w),
+            1.0
+        );
+        let st = Op::Stencil {
+            spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
+        };
+        assert_eq!(st.cost_weight(&w), 1.5);
+        let pw = Op::Pointwise { spec: PointwiseSpec::scale(2.0) };
+        assert_eq!(pw.cost_weight(&w), 1.0);
+        assert_eq!(CostWeights::default().permute, 1.0);
+    }
+}

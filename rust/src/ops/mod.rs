@@ -11,8 +11,13 @@
 //! tiled multi-threaded host backend in [`crate::hostexec`] — same
 //! results bit for bit, measured side by side in
 //! `benches/hostexec_speedup.rs`. [`Op::dispatch`] selects between them.
+//!
+//! Every op also states its traffic footprint ([`Op::traffic_estimate`]
+//! in [`cost`]) — the quantitative side of the paper's bandwidth
+//! argument, consumed by the pipeline's cost-guided rewrite pass.
 
 pub mod copy;
+pub mod cost;
 pub mod interlace;
 pub mod permute;
 pub mod pointwise;
@@ -23,6 +28,7 @@ use crate::tensor::buf::erase_all;
 use crate::tensor::{DType, Element, NdArray, Numeric, Order, TensorBuf};
 use thiserror::Error;
 
+pub use cost::{CostWeights, TrafficEst};
 pub use pointwise::{PointwiseSpec, PwFn};
 pub use stencil::{StencilFunctor, StencilSpec};
 

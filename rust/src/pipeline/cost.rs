@@ -1,0 +1,319 @@
+//! Chain-level traffic estimation: lane-aware shape propagation over a
+//! stage list, integrated per-op estimates, and the fused-run model the
+//! segmentation cut-point decision runs on.
+//!
+//! The per-op footprints live on the IR
+//! ([`Op::traffic_estimate`](crate::ops::Op::traffic_estimate)); this
+//! module walks a whole chain the way the pipeline executor walks it —
+//! a stage either consumes every current lane at once or maps
+//! lane-wise — so the modeled totals line up with what
+//! [`Pipeline::execute_with_stats`](crate::pipeline::Pipeline::execute_with_stats)
+//! actually runs. Three consumers:
+//!
+//! * the **cost-guided rewrite** compares whole-chain weighted costs
+//!   before and after a candidate rule application ([`chain_estimate`]);
+//! * **segmentation** cuts fusable stencil/pointwise runs into groups
+//!   by modeled traffic ([`plan_run_groups`] — fused full-size bytes
+//!   plus a cache-discounted charge for the ring rows the fusion
+//!   recomputes at band boundaries);
+//! * the executor reports the plan's predicted bytes next to the
+//!   measured counters ([`segments_estimate`] →
+//!   `PipeStats::estimated_bytes`), so every served `pipe:` request
+//!   carries model vs actual.
+
+use crate::hostexec::pool;
+use crate::hostexec::stencil::{chain_traffic_estimate, ChainStage};
+use crate::ops::cost::{CostWeights, TrafficEst};
+use crate::ops::Op;
+use crate::pipeline::fuse::Segment;
+use crate::tensor::{DType, Element, NdArray};
+
+/// Ring (cache-resident) bytes are charged at this fraction of a
+/// full-size byte when deciding fusion cut points: the rolling windows
+/// stay L1/L2-hot by construction, but band-boundary recompute is not
+/// free — a quarter-rate charge keeps pathological fusions (fat halos
+/// over shallow bands) from looking free without double-counting the
+/// common case.
+pub const RING_BYTE_DISCOUNT: f64 = 0.25;
+
+/// Shape/dtype context a cost-guided decision evaluates against: the
+/// pipeline's input lane geometry plus the calibrated op-class weights.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChainCtx {
+    /// Per-lane input shape (lane 0's shape when lanes differ).
+    pub dims: Vec<usize>,
+    /// Input lane count.
+    pub width: usize,
+    pub dtype: DType,
+    pub weights: CostWeights,
+    /// Worker budget fused runs would execute with.
+    pub threads: usize,
+}
+
+impl ChainCtx {
+    /// Context with the simulator-calibrated weights
+    /// ([`crate::gpusim::calib::host_weights`]) and the process worker
+    /// count — what the execution path uses.
+    pub fn new(dims: Vec<usize>, width: usize, dtype: DType) -> ChainCtx {
+        ChainCtx {
+            dims,
+            width,
+            dtype,
+            weights: crate::gpusim::calib::host_weights(),
+            threads: pool::num_threads(),
+        }
+    }
+
+    /// Context for a concrete input lane set (`None` when empty).
+    pub fn for_inputs<T: Element>(inputs: &[&NdArray<T>]) -> Option<ChainCtx> {
+        let first = inputs.first()?;
+        Some(ChainCtx::new(
+            first.shape().dims().to_vec(),
+            inputs.len(),
+            T::DTYPE,
+        ))
+    }
+
+    /// Replace the weights (tests pin deterministic ones).
+    pub fn with_weights(mut self, weights: CostWeights) -> ChainCtx {
+        self.weights = weights;
+        self
+    }
+
+    /// Replace the worker budget (tests pin band layouts).
+    pub fn with_threads(mut self, threads: usize) -> ChainCtx {
+        self.threads = threads;
+        self
+    }
+}
+
+/// Lane state while walking a chain: `width` parallel lanes of `dims`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneState {
+    pub width: usize,
+    pub dims: Vec<usize>,
+}
+
+/// Advance one stage: returns the op's total traffic (all lanes) and
+/// the resulting lane state, or `None` when the stage cannot accept the
+/// state (the executor would fail there too).
+pub fn step(op: &Op, st: &LaneState, dtype: DType) -> Option<(TrafficEst, LaneState)> {
+    if op.arity() == st.width {
+        // Consume-all: Interlace over the full lane set, or any unary
+        // op at width 1 (incl. Deinterlace, which widens the chain).
+        let est = op.traffic_estimate(&st.dims, dtype).ok()?;
+        let dims = op.out_shape(&st.dims).ok()?;
+        Some((est, LaneState { width: op.num_outputs(), dims }))
+    } else if op.arity() == 1 && op.num_outputs() == 1 {
+        // Lane-wise map over `width` equal lanes.
+        let est = op.traffic_estimate(&st.dims, dtype).ok()?;
+        let dims = op.out_shape(&st.dims).ok()?;
+        Some((est.scaled(st.width as u64), LaneState { width: st.width, dims }))
+    } else {
+        None
+    }
+}
+
+/// Lane states *before* each stage (`states[i]` feeds `stages[i]`;
+/// `states[len]` is the final state). `None` when the chain is invalid
+/// for the context's input geometry.
+pub fn lane_states(stages: &[Op], ctx: &ChainCtx) -> Option<Vec<LaneState>> {
+    let mut states = Vec::with_capacity(stages.len() + 1);
+    let mut st = LaneState { width: ctx.width, dims: ctx.dims.clone() };
+    for op in stages {
+        states.push(st.clone());
+        let (_, next) = step(op, &st, ctx.dtype)?;
+        st = next;
+    }
+    states.push(st);
+    Some(states)
+}
+
+/// Modeled traffic of executing `stages` one pass per stage.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ChainEstimate {
+    /// Raw integrated footprint.
+    pub est: TrafficEst,
+    /// Op-class-weighted bytes — the rewrite pass's comparison metric.
+    pub cost: f64,
+}
+
+/// Integrate the per-op estimates over a chain (unfused, stage by
+/// stage). `None` when the chain is invalid for the context.
+pub fn chain_estimate(stages: &[Op], ctx: &ChainCtx) -> Option<ChainEstimate> {
+    let mut total = ChainEstimate::default();
+    let mut st = LaneState { width: ctx.width, dims: ctx.dims.clone() };
+    for op in stages {
+        let (est, next) = step(op, &st, ctx.dtype)?;
+        total.est.accumulate(est);
+        total.cost += est.total_bytes() as f64 * op.cost_weight(&ctx.weights);
+        st = next;
+    }
+    Some(total)
+}
+
+/// Decision cost of executing `radii` (a fusable run slice) as **one**
+/// group on a lane of `dims`: modeled full-size bytes plus the
+/// cache-discounted ring recompute.
+fn group_cost(dims: &[usize], radii: &[usize], es: usize, threads: usize) -> f64 {
+    let t = chain_traffic_estimate(dims, radii, es, threads);
+    t.fused_bytes as f64 + RING_BYTE_DISCOUNT * t.ring_bytes as f64
+}
+
+/// Cut a fusable run (per-stage radii) into execution groups by modeled
+/// traffic: an exact partition DP over the run (runs are short), where
+/// a group of one executes as a single pass and a group of two or more
+/// as a fused rolling-window chain. Returns the group sizes in order;
+/// their sum is `radii.len()`.
+pub fn plan_run_groups(
+    radii: &[usize],
+    dims: &[usize],
+    dtype: DType,
+    threads: usize,
+) -> Vec<usize> {
+    let d = radii.len();
+    if d <= 1 {
+        return vec![1; d];
+    }
+    let es = dtype.size_bytes();
+    let mut dp = vec![f64::INFINITY; d + 1];
+    let mut prev = vec![0usize; d + 1];
+    dp[0] = 0.0;
+    for i in 1..=d {
+        for j in 0..i {
+            let c = dp[j] + group_cost(dims, &radii[j..i], es, threads);
+            // Strict `<` with ascending j prefers the longest group on
+            // ties — fuse when the model is indifferent.
+            if c < dp[i] {
+                dp[i] = c;
+                prev[i] = j;
+            }
+        }
+    }
+    let mut sizes = Vec::new();
+    let mut i = d;
+    while i > 0 {
+        sizes.push(i - prev[i]);
+        i = prev[i];
+    }
+    sizes.reverse();
+    sizes
+}
+
+/// Modeled full-size bytes of an executed segment plan — the number
+/// reported as `PipeStats::estimated_bytes` next to the measured
+/// counters. Fused segments use the band-exact fused-run model, single
+/// segments the per-op estimates. `None` when the walk fails (the
+/// execution itself will surface the error).
+pub fn segments_estimate(segments: &[Segment], ctx: &ChainCtx) -> Option<u64> {
+    let mut total: u64 = 0;
+    let mut st = LaneState { width: ctx.width, dims: ctx.dims.clone() };
+    for seg in segments {
+        match seg {
+            Segment::Single(op) => {
+                let (est, next) = step(op, &st, ctx.dtype)?;
+                total += est.total_bytes();
+                st = next;
+            }
+            Segment::FusedChain(chain) => {
+                let radii: Vec<usize> = chain.iter().map(ChainStage::radius).collect();
+                let es = ctx.dtype.size_bytes();
+                let t = chain_traffic_estimate(&st.dims, &radii, es, ctx.threads);
+                // Fused chains map lane-wise; dims are unchanged.
+                total += t.fused_bytes * st.width as u64;
+            }
+        }
+    }
+    Some(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::{PointwiseSpec, StencilSpec};
+    use crate::tensor::Order;
+
+    fn ctx(dims: &[usize], width: usize) -> ChainCtx {
+        ChainCtx::new(dims.to_vec(), width, DType::F32)
+            .with_weights(CostWeights::default())
+            .with_threads(1)
+    }
+
+    #[test]
+    fn chain_walk_tracks_lanes_like_the_executor() {
+        // deinterlace -> lane-wise copy -> interlace on a flat input.
+        let stages = vec![Op::Deinterlace { n: 3 }, Op::Copy, Op::Interlace { n: 3 }];
+        let c = ctx(&[1500], 1);
+        let states = lane_states(&stages, &c).unwrap();
+        assert_eq!(states[0], LaneState { width: 1, dims: vec![1500] });
+        assert_eq!(states[1], LaneState { width: 3, dims: vec![500] });
+        assert_eq!(states[2], LaneState { width: 3, dims: vec![500] });
+        assert_eq!(states[3], LaneState { width: 1, dims: vec![1500] });
+        let est = chain_estimate(&stages, &c).unwrap();
+        // Each stage moves the full 1500 f32 in and out.
+        assert_eq!(est.est.total_bytes(), 3 * 2 * 1500 * 4);
+        // Interlace{3} at width 2 is a width mismatch, like execution.
+        let c2 = ctx(&[1500], 2);
+        assert!(chain_estimate(&stages, &c2).is_none());
+    }
+
+    #[test]
+    fn weighted_cost_ranks_permutes_above_copies() {
+        let w = CostWeights { permute: 2.0, ..Default::default() };
+        let c = ChainCtx::new(vec![16, 16], 1, DType::F32)
+            .with_weights(w)
+            .with_threads(1);
+        let copy_cost = chain_estimate(&[Op::Copy], &c).unwrap().cost;
+        let perm = Op::Reorder { order: Order::new(&[1, 0]).unwrap() };
+        let perm_cost = chain_estimate(&[perm], &c).unwrap().cost;
+        assert_eq!(perm_cost, 2.0 * copy_cost);
+    }
+
+    #[test]
+    fn single_band_runs_always_fuse() {
+        // Below PARALLEL_THRESHOLD one band executes: fusing a run is
+        // strictly cheaper than any split, whatever the radii.
+        for radii in [vec![1usize, 1], vec![2, 4, 1], vec![3; 5]] {
+            let groups = plan_run_groups(&radii, &[40, 40], DType::F32, 8);
+            assert_eq!(groups, vec![radii.len()], "radii {radii:?}");
+        }
+        assert_eq!(plan_run_groups(&[1], &[40, 40], DType::F32, 8), vec![1]);
+        assert!(plan_run_groups(&[], &[40, 40], DType::F32, 8).is_empty());
+    }
+
+    #[test]
+    fn fat_halos_over_shallow_bands_refuse_to_fuse() {
+        // 64 rows split over 16 bands (4 rows each) with a radius-24
+        // second stage: the fused halo + ring recompute outweighs the
+        // saved pass, so the model cuts the run into singles. The same
+        // radii on one band fuse.
+        let dims = vec![64usize, 512]; // 32768 elems: at the threshold
+        let radii = vec![1usize, 24];
+        let split = plan_run_groups(&radii, &dims, DType::F32, 16);
+        assert_eq!(split, vec![1, 1], "expected the model to cut the run");
+        let fused = plan_run_groups(&radii, &dims, DType::F32, 1);
+        assert_eq!(fused, vec![2]);
+        // Sanity: the DP's decision matches the raw group costs.
+        let merged = group_cost(&dims, &radii, 4, 16);
+        let singles =
+            group_cost(&dims, &radii[..1], 4, 16) + group_cost(&dims, &radii[1..], 4, 16);
+        assert!(merged > singles, "merged {merged} vs singles {singles}");
+    }
+
+    #[test]
+    fn segment_plan_estimate_covers_all_segments() {
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let segments = vec![
+            Segment::Single(Op::Reorder { order: Order::new(&[1, 0]).unwrap() }),
+            Segment::FusedChain(vec![
+                ChainStage::Stencil(spec.clone()),
+                ChainStage::Pointwise(PointwiseSpec::scale(2.0)),
+                ChainStage::Stencil(spec),
+            ]),
+        ];
+        let c = ctx(&[32, 32], 1);
+        let v = (32 * 32 * 4) as u64;
+        // Reorder: 2V. Fused chain on one band: 2V (one read, one write).
+        assert_eq!(segments_estimate(&segments, &c).unwrap(), 4 * v);
+    }
+}

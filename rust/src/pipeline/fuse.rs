@@ -6,7 +6,12 @@
 //! executor in [`crate::hostexec::stencil::apply_chain`] (pointwise
 //! stages are zero-radius members of the cascade — they keep one row
 //! hot and cost no extra traffic); everything else stays a
-//! [`Segment::Single`].
+//! [`Segment::Single`]. [`segment_costed`] is the cost-guided variant
+//! the default execution path uses: the same contiguity rule, but each
+//! fusable run's cut points come from the traffic model
+//! ([`crate::pipeline::cost::plan_run_groups`]), so a run whose fused
+//! halo + ring recompute would outweigh the saved passes stays
+//! unfused.
 //!
 //! [`cavity_fused_step`] is the same rolling-window technique applied
 //! to the cavity solver's **whole** time step: the K Jacobi sweeps,
@@ -16,7 +21,7 @@
 //! full fields per *step* instead of per sweep. The velocity/vorticity
 //! stage packs its three derived rows (u, v, Thom-updated omega) into
 //! one `3n`-wide cascade row, which is what the per-stage row widths of
-//! [`cascade_band`] exist for. Band-boundary halo rows are recomputed,
+//! `cascade_band` exist for. Band-boundary halo rows are recomputed,
 //! keeping workers independent and results bit-identical to the
 //! barriered loops: same f32 expression per element, same neighbour
 //! order, same residual.
@@ -25,7 +30,7 @@
 //! point (no internal callers since the cavity step went fully fused —
 //! its sweeps-only fusion is subsumed by [`cavity_fused_step`]); the
 //! descend/produce/ring scheduling is **not** duplicated in either:
-//! both drive [`cascade_band`] (hostexec's shared rolling-window
+//! both drive `cascade_band` (hostexec's shared rolling-window
 //! scheduler, where the ring-capacity invariant lives) with their own
 //! row producers.
 
@@ -34,6 +39,8 @@ use crate::hostexec::stencil::{cascade_band, ChainStage, RowSource, SliceRows};
 use crate::ops::Op;
 use crate::tensor::{bytes_of, bytes_of_mut};
 use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::cost;
 
 /// One executable unit of a rewritten pipeline.
 #[derive(Debug, Clone, PartialEq)]
@@ -109,14 +116,68 @@ fn flush(out: &mut Vec<Segment>, run: &mut Vec<ChainStage>) {
     match run.len() {
         0 => {}
         1 => {
-            let op = match run.pop().expect("run of one") {
-                ChainStage::Stencil(spec) => Op::Stencil { spec },
-                ChainStage::Pointwise(spec) => Op::Pointwise { spec },
-            };
-            out.push(Segment::Single(op));
+            out.push(single(run.pop().expect("run of one")));
         }
         _ => out.push(Segment::FusedChain(std::mem::take(run))),
     }
+}
+
+fn single(stage: ChainStage) -> Segment {
+    Segment::Single(match stage {
+        ChainStage::Stencil(spec) => Op::Stencil { spec },
+        ChainStage::Pointwise(spec) => Op::Pointwise { spec },
+    })
+}
+
+/// Cost-guided segmentation: same run detection as [`segment`], but the
+/// traffic model decides each run's cut points. Lane shapes are tracked
+/// through the movement stages so every run is costed at its actual
+/// geometry; if tracking fails mid-chain (a structurally invalid chain
+/// — execution will surface the error), the remaining runs fall back to
+/// the unconditional grouping.
+pub fn segment_costed(stages: &[Op], ctx: &cost::ChainCtx) -> Vec<Segment> {
+    let mut out = Vec::new();
+    let mut run: Vec<ChainStage> = Vec::new();
+    let mut state = Some(cost::LaneState {
+        width: ctx.width,
+        dims: ctx.dims.clone(),
+    });
+    let flush_costed = |out: &mut Vec<Segment>,
+                        run: &mut Vec<ChainStage>,
+                        state: &Option<cost::LaneState>| {
+        match (state, run.len()) {
+            (_, 0) => {}
+            (Some(st), len) if len >= 2 => {
+                let radii: Vec<usize> = run.iter().map(ChainStage::radius).collect();
+                let groups = cost::plan_run_groups(&radii, &st.dims, ctx.dtype, ctx.threads);
+                let mut items = std::mem::take(run).into_iter();
+                for g in groups {
+                    let group: Vec<ChainStage> = items.by_ref().take(g).collect();
+                    if g >= 2 {
+                        out.push(Segment::FusedChain(group));
+                    } else {
+                        out.push(single(group.into_iter().next().expect("group of one")));
+                    }
+                }
+            }
+            _ => flush(out, run),
+        }
+    };
+    for op in stages {
+        match op {
+            Op::Stencil { spec } => run.push(ChainStage::Stencil(spec.clone())),
+            Op::Pointwise { spec } => run.push(ChainStage::Pointwise(spec.clone())),
+            other => {
+                flush_costed(&mut out, &mut run, &state);
+                out.push(Segment::Single(other.clone()));
+                state = state
+                    .as_ref()
+                    .and_then(|st| cost::step(other, st, ctx.dtype).map(|(_, next)| next));
+            }
+        }
+    }
+    flush_costed(&mut out, &mut run, &state);
+    out
 }
 
 /// `iters` Jacobi sweeps of the cavity Poisson solve, fused into one
@@ -450,6 +511,45 @@ mod tests {
         assert_eq!(segs[0].stage_count(), 3);
         assert_eq!(segs[2].stage_count(), 1);
         assert!(segs[0].describe().contains("1 pointwise"));
+    }
+
+    #[test]
+    fn cost_guided_segmentation_fuses_single_band_runs() {
+        use crate::pipeline::cost::ChainCtx;
+        use crate::tensor::DType;
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let st = Op::Stencil { spec };
+        let r = Op::Reorder { order: Order::new(&[1, 0]).unwrap() };
+        // 40x40 runs single-band: fusing is strictly cheaper, so the
+        // costed segmentation matches the unconditional one.
+        let ctx = ChainCtx::new(vec![40, 40], 1, DType::F32).with_threads(8);
+        let stages = [st.clone(), st.clone(), r.clone(), st.clone()];
+        let segs = segment_costed(&stages, &ctx);
+        assert_eq!(segs, segment(&stages));
+        assert!(matches!(&segs[0], Segment::FusedChain(c) if c.len() == 2));
+        assert_eq!(segs[1], Segment::Single(r));
+    }
+
+    #[test]
+    fn cost_guided_segmentation_cuts_fat_halo_runs() {
+        use crate::pipeline::cost::ChainCtx;
+        use crate::tensor::DType;
+        // Radius [1, 24] over 16 four-row bands: the fused halo + ring
+        // recompute outweighs the saved pass (see the run-planner tests
+        // in `pipeline::cost`), so the run stays unfused — while one
+        // band fuses it.
+        let s1 = Op::Stencil {
+            spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
+        };
+        let s24 = Op::Stencil {
+            spec: StencilSpec::Taps { radius: 24, taps: vec![(vec![0, 0], 1.0)] },
+        };
+        let many = ChainCtx::new(vec![64, 512], 1, DType::F32).with_threads(16);
+        let segs = segment_costed(&[s1.clone(), s24.clone()], &many);
+        assert_eq!(segs, vec![Segment::Single(s1.clone()), Segment::Single(s24.clone())]);
+        let one = ChainCtx::new(vec![64, 512], 1, DType::F32).with_threads(1);
+        let segs = segment_costed(&[s1, s24], &one);
+        assert!(matches!(&segs[..], [Segment::FusedChain(c)] if c.len() == 2));
     }
 
     /// The unfused sweeps, verbatim from the solver's Poisson loop.

@@ -18,7 +18,18 @@
 //!   ([`Order::compose`](crate::tensor::Order::compose)), inverse
 //!   permute pairs cancel, §III.C `Interlace∘Deinterlace` pairs cancel,
 //!   `Copy` elides, and `Subarray` pushes down through permutes so
-//!   §III.B cropping happens *before* data movement.
+//!   §III.B cropping happens *before* data movement. Rule application
+//!   is **cost-guided by default** ([`RewritePolicy`]): each candidate
+//!   is scored by the traffic model and applied only when the modeled
+//!   total traffic of the chain drops.
+//! * **Cost model** ([`cost`]) — lane-aware chain traffic estimation
+//!   over the per-op footprints
+//!   ([`Op::traffic_estimate`](crate::ops::Op::traffic_estimate)),
+//!   with op-class weights calibrated against the memory-system
+//!   simulator ([`crate::gpusim::calib`]). Drives the rewrite search
+//!   and the fusion cut points, and reports its prediction next to the
+//!   measured counters ([`PipeStats::estimated_bytes`]) so every served
+//!   `pipe:` request carries model vs actual.
 //! * **Fusion** ([`fuse`]) — runs of ≥ 2 §III.D `Stencil` and/or
 //!   `Pointwise` stages lower to the rank-N rolling-window chain
 //!   executor
@@ -45,13 +56,15 @@
 //! `rust/tests/pipeline_property.rs` (random op chains, rank 1–5) and
 //! the chain tests in `hostexec::stencil`.
 
+pub mod cost;
 pub mod fuse;
 pub mod plan_cache;
 pub mod rewrite;
 
-pub use fuse::{segment, Segment};
+pub use cost::ChainCtx;
+pub use fuse::{segment, segment_costed, Segment};
 pub use plan_cache::PlanCache;
-pub use rewrite::rewrite;
+pub use rewrite::{rewrite, rewrite_with, RewritePolicy};
 
 use crate::hostexec;
 use crate::ops::{ExecBackend, Op, OpError};
@@ -91,12 +104,45 @@ pub struct PipeStats {
     /// Bytes the same chains would move unfused (one read + one write
     /// of the field per stage).
     pub unfused_chain_traffic_bytes: u64,
+    /// The cost model's predicted full-size bytes for the executed
+    /// segment plan ([`cost::segments_estimate`]) — reported next to
+    /// the measured counters above so callers see model vs actual. 0
+    /// when no shape context was available.
+    pub estimated_bytes: u64,
 }
 
 /// A validated chain of rearrangement ops (see the module docs).
+///
+/// Execution rewrites the chain (cost-guided by default — see
+/// [`RewritePolicy`]), fuses stencil/pointwise runs, and reports
+/// model-vs-measured traffic in [`PipeStats`]:
+///
+/// ```
+/// use gdrk::ops::{Op, StencilSpec};
+/// use gdrk::pipeline::Pipeline;
+/// use gdrk::tensor::{NdArray, Shape};
+///
+/// let spec = StencilSpec::FdLaplacian { order: 1, scale: 0.25 };
+/// let p = Pipeline::new(vec![
+///     Op::Copy,
+///     Op::Stencil { spec: spec.clone() },
+///     Op::Stencil { spec },
+/// ])?;
+/// let x = NdArray::iota(Shape::new(&[32, 32]));
+/// let (outs, stats) = p.execute_with_stats(&[&x])?;
+/// // The copy elided and the stencil pair fused into one pass.
+/// assert_eq!(stats.stages_rewritten, 2);
+/// assert_eq!(stats.fused_chains, 1);
+/// // The cost model's prediction rides along the measured counters.
+/// assert!(stats.estimated_bytes > 0);
+/// // Bit-identical to the unfused golden chain.
+/// assert_eq!(outs, p.reference(&[&x])?);
+/// # Ok::<(), gdrk::pipeline::PipelineError>(())
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct Pipeline {
     stages: Vec<Op>,
+    policy: RewritePolicy,
 }
 
 impl Pipeline {
@@ -104,11 +150,23 @@ impl Pipeline {
         if stages.is_empty() {
             return Err(PipelineError::Empty);
         }
-        Ok(Pipeline { stages })
+        Ok(Pipeline { stages, policy: RewritePolicy::default() })
     }
 
     pub fn stages(&self) -> &[Op] {
         &self.stages
+    }
+
+    /// Replace the rewrite policy (the default is
+    /// [`RewritePolicy::CostGuided`]; tests pin
+    /// [`RewritePolicy::Always`] for the unconditional behavior).
+    pub fn with_policy(mut self, policy: RewritePolicy) -> Pipeline {
+        self.policy = policy;
+        self
+    }
+
+    pub fn policy(&self) -> RewritePolicy {
+        self.policy
     }
 
     /// Execute the chain stage by stage on the golden references — no
@@ -140,11 +198,19 @@ impl Pipeline {
         &self,
         inputs: &[&NdArray<T>],
     ) -> Result<(Vec<NdArray<T>>, PipeStats), PipelineError> {
-        let rewritten = rewrite::rewrite(&self.stages);
-        let segments = fuse::segment(&rewritten);
+        let ctx = cost::ChainCtx::for_inputs(inputs);
+        let rewritten = rewrite::rewrite_with(&self.stages, self.policy, ctx.as_ref());
+        let segments = match (self.policy, &ctx) {
+            (RewritePolicy::CostGuided, Some(c)) => fuse::segment_costed(&rewritten, c),
+            _ => fuse::segment(&rewritten),
+        };
         let mut stats = PipeStats {
             stages_in: self.stages.len(),
             stages_rewritten: rewritten.len(),
+            estimated_bytes: ctx
+                .as_ref()
+                .and_then(|c| cost::segments_estimate(&segments, c))
+                .unwrap_or(0),
             ..Default::default()
         };
         let threads = hostexec::pool::num_threads();
@@ -187,13 +253,14 @@ impl Pipeline {
         inputs: &[&NdArray<T>],
         backend: ExecBackend,
     ) -> Result<(Vec<NdArray<T>>, PipeStats), PipelineError> {
+        let ctx = cost::ChainCtx::for_inputs(inputs);
         let (segments, stages_rewritten): (Vec<Segment>, usize) = match backend {
             ExecBackend::Naive => (
                 self.stages.iter().cloned().map(Segment::Single).collect(),
                 self.stages.len(),
             ),
             ExecBackend::Host => {
-                let rewritten = rewrite::rewrite(&self.stages);
+                let rewritten = rewrite::rewrite_with(&self.stages, self.policy, ctx.as_ref());
                 let len = rewritten.len();
                 (fuse::segment(&rewritten), len)
             }
@@ -208,6 +275,10 @@ impl Pipeline {
         let stats = PipeStats {
             stages_in: self.stages.len(),
             stages_rewritten,
+            estimated_bytes: ctx
+                .as_ref()
+                .and_then(|c| cost::segments_estimate(&segments, c))
+                .unwrap_or(0),
             ..Default::default()
         };
         Ok((outs, stats))
@@ -227,6 +298,9 @@ impl Pipeline {
                 let stats = PipeStats {
                     stages_in: self.stages.len(),
                     stages_rewritten: self.stages.len(),
+                    estimated_bytes: cost::ChainCtx::for_inputs(inputs)
+                        .and_then(|c| cost::chain_estimate(&self.stages, &c))
+                        .map_or(0, |e| e.est.total_bytes()),
                     ..Default::default()
                 };
                 (outs, stats)

@@ -1,10 +1,13 @@
-//! Algebraic rewrites over a pipeline's stage list.
+//! Algebraic rewrites over a pipeline's stage list — cost-guided by
+//! default, unconditional on request.
 //!
-//! Three rule families run to a fixpoint (each assumes the chain is
-//! well-formed — the rewritten chain is bit-identical on every input
-//! the original accepts):
+//! Three rule families (each assumes the chain is well-formed — the
+//! rewritten chain is bit-identical on every input the original
+//! accepts):
 //!
-//! 1. **Identity elision** — `Copy` and identity `Reorder` stages drop.
+//! 1. **Identity elision** — `Copy` and identity `Reorder`/`Pointwise`
+//!    stages drop; with shape context, a full-window `Subarray` (base
+//!    0, window = lane shape) is recognized as an identity too.
 //! 2. **Pair fusion** — adjacent stages fuse through
 //!    [`Op::compose_with`]: `Reorder∘Reorder` composes into one order
 //!    (inverse pairs thereby cancel via rule 1),
@@ -14,16 +17,85 @@
 //!    the element type exactly like the separate stages would).
 //! 3. **Subarray pushdown** — `[Reorder, Subarray]` becomes
 //!    `[Subarray', Reorder]` with the window mapped through the
-//!    permutation, so cropping happens before data movement (strictly
-//!    less traffic; the §III.B plane walk then moves only the window).
+//!    permutation, so cropping happens before data movement.
 //!
-//! Termination: rules 1–2 strictly shrink the stage list; rule 3
-//! strictly moves a `Subarray` left past a `Reorder` and nothing moves
-//! one right, so the fixpoint loop is finite.
+//! ## Policies
+//!
+//! Rules 1–2 only ever remove passes, but rule 3 pays off **only when
+//! the crop shrinks the move** — the quantitative side of the paper's
+//! bandwidth argument. [`RewritePolicy`] picks the strategy:
+//!
+//! * [`RewritePolicy::CostGuided`] (the default) runs a greedy cost
+//!   descent: every candidate rule application is scored by the traffic
+//!   model ([`crate::pipeline::cost`], weights calibrated against the
+//!   simulator via [`crate::gpusim::calib`]), the best strictly
+//!   improving candidate is applied, and the loop stops at a local
+//!   minimum. The result never models more traffic than the input
+//!   chain (`rust/tests/cost_model.rs` pins this as a property).
+//! * [`RewritePolicy::Always`] fires every rule to a fixpoint — the
+//!   pre-cost-model behavior, kept as the shape-blind fallback and for
+//!   differential testing.
+//!
+//! Termination: `Always` — rules 1–2 strictly shrink the stage list
+//! and rule 3 strictly moves a `Subarray` left, so the fixpoint loop is
+//! finite. `CostGuided` — every applied candidate strictly decreases
+//! the modeled cost by a positive margin, and the candidate set is
+//! finite at each step.
 
+use super::cost::{self, ChainCtx, ChainEstimate};
 use crate::ops::Op;
 
-/// Rewrite `stages` to a shorter/cheaper equivalent chain. The result
+/// Strategy for applying the rewrite rules (see the module docs).
+///
+/// The difference is observable on a subarray pushdown that does not
+/// shrink the move — the cost model refuses it (and, seeing the shape,
+/// elides the no-op crop instead), while `Always` fires the rule:
+///
+/// ```
+/// use gdrk::ops::Op;
+/// use gdrk::pipeline::{rewrite_with, ChainCtx, RewritePolicy};
+/// use gdrk::tensor::{DType, Order};
+///
+/// let order = Order::new(&[1, 0]).unwrap();
+/// let chain = vec![
+///     Op::Reorder { order },
+///     // Full-window crop: moving it below the permute drops nothing.
+///     Op::Subarray { base: vec![0, 0], shape: vec![16, 16] },
+/// ];
+/// let ctx = ChainCtx::new(vec![16, 16], 1, DType::F32);
+/// let guided = rewrite_with(&chain, RewritePolicy::CostGuided, Some(&ctx));
+/// // Pushdown refused; the crop is a shape-identity and elides.
+/// assert_eq!(guided.len(), 1);
+/// assert!(matches!(guided[0], Op::Reorder { .. }));
+/// let always = rewrite_with(&chain, RewritePolicy::Always, None);
+/// // The unconditional pass pushes the full window down instead.
+/// assert_eq!(always.len(), 2);
+/// assert!(matches!(always[0], Op::Subarray { .. }));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RewritePolicy {
+    /// Fire every rule unconditionally, to a fixpoint.
+    Always,
+    /// Greedy cost descent over candidate rule applications: apply a
+    /// rule only when the modeled total traffic of the rewritten chain
+    /// drops.
+    #[default]
+    CostGuided,
+}
+
+/// Rewrite `stages` under `policy`. `CostGuided` needs the shape/dtype
+/// context to evaluate traffic; without one (`ctx == None`, the
+/// shape-blind call sites) it degrades to `Always`, which is safe —
+/// every rule is semantics-preserving regardless of policy.
+pub fn rewrite_with(stages: &[Op], policy: RewritePolicy, ctx: Option<&ChainCtx>) -> Vec<Op> {
+    match (policy, ctx) {
+        (RewritePolicy::CostGuided, Some(ctx)) => cost_descent(stages, ctx),
+        _ => rewrite(stages),
+    }
+}
+
+/// Rewrite `stages` to a shorter/cheaper equivalent chain with every
+/// rule applied unconditionally ([`RewritePolicy::Always`]). The result
 /// may be empty — an identity pipeline.
 pub fn rewrite(stages: &[Op]) -> Vec<Op> {
     let mut v: Vec<Op> = stages.to_vec();
@@ -51,25 +123,7 @@ pub fn rewrite(stages: &[Op]) -> Vec<Op> {
         // Rule 3: subarray pushdown through reorders.
         let mut i = 0;
         while i + 1 < v.len() {
-            let mut swapped = None;
-            if let (Op::Reorder { order }, Op::Subarray { base, shape }) = (&v[i], &v[i + 1]) {
-                if order.rank() == base.len() {
-                    // Output axis j of the permute takes input axis
-                    // axes[j]; map the crop window into input coords.
-                    let axes = order.to_axes();
-                    let mut b = vec![0usize; base.len()];
-                    let mut s = vec![0usize; shape.len()];
-                    for (j, &a) in axes.iter().enumerate() {
-                        b[a] = base[j];
-                        s[a] = shape[j];
-                    }
-                    swapped = Some((
-                        Op::Subarray { base: b, shape: s },
-                        Op::Reorder { order: order.clone() },
-                    ));
-                }
-            }
-            if let Some((first, second)) = swapped {
+            if let Some((first, second)) = pushdown(&v[i], &v[i + 1]) {
                 v[i] = first;
                 v[i + 1] = second;
                 changed = true;
@@ -83,15 +137,127 @@ pub fn rewrite(stages: &[Op]) -> Vec<Op> {
     }
 }
 
+/// The §III.B pushdown: `[Reorder, Subarray]` ⇒ `[Subarray', Reorder]`
+/// with the crop window mapped into input coordinates (output axis `j`
+/// of the permute takes input axis `axes[j]`). `None` when the pair
+/// does not match the pattern.
+fn pushdown(first: &Op, second: &Op) -> Option<(Op, Op)> {
+    let (Op::Reorder { order }, Op::Subarray { base, shape }) = (first, second) else {
+        return None;
+    };
+    if order.rank() != base.len() {
+        return None;
+    }
+    let axes = order.to_axes();
+    let mut b = vec![0usize; base.len()];
+    let mut s = vec![0usize; shape.len()];
+    for (j, &a) in axes.iter().enumerate() {
+        b[a] = base[j];
+        s[a] = shape[j];
+    }
+    Some((
+        Op::Subarray { base: b, shape: s },
+        Op::Reorder { order: order.clone() },
+    ))
+}
+
+/// Greedy cost descent: score every candidate single-rule application
+/// with the traffic model, apply the best strictly improving one,
+/// repeat until no candidate improves.
+fn cost_descent(stages: &[Op], ctx: &ChainCtx) -> Vec<Op> {
+    let Some(mut cur) = cost::chain_estimate(stages, ctx) else {
+        // Shape propagation failed — the chain is invalid for this
+        // input geometry. Rewrite unconditionally; execution surfaces
+        // the structural error either way.
+        return rewrite(stages);
+    };
+    let mut v = stages.to_vec();
+    loop {
+        let mut best: Option<(Vec<Op>, ChainEstimate)> = None;
+        for cand in candidates(&v, ctx) {
+            let Some(e) = cost::chain_estimate(&cand, ctx) else {
+                continue;
+            };
+            let beats_best = best.as_ref().is_none_or(|(_, b)| e.cost < b.cost);
+            if improves(e.cost, cur.cost) && beats_best {
+                best = Some((cand, e));
+            }
+        }
+        match best {
+            Some((nv, e)) => {
+                v = nv;
+                cur = e;
+            }
+            None => return v,
+        }
+    }
+}
+
+/// Strict improvement with a relative margin: candidates whose modeled
+/// cost is merely equal (e.g. pushing a non-shrinking subarray past a
+/// permute) are refused, and f64 summation-order noise cannot
+/// masquerade as a win. Real improvements remove at least one element's
+/// worth of traffic, far above the margin.
+fn improves(new: f64, old: f64) -> bool {
+    new < old - 1e-9 * old.max(1.0)
+}
+
+/// Every chain reachable from `v` by one rule application.
+fn candidates(v: &[Op], ctx: &ChainCtx) -> Vec<Vec<Op>> {
+    let mut out = Vec::new();
+    let states = cost::lane_states(v, ctx);
+    for i in 0..v.len() {
+        // Rule 1, shape-aware: a full-window subarray is an identity
+        // the syntactic check cannot see. Only at width 1 — the walk
+        // tracks lane 0's shape, and lane-wise stages may legally see
+        // lanes of other shapes the window would genuinely crop.
+        let full_window = match (&v[i], &states) {
+            (Op::Subarray { base, shape }, Some(st)) => {
+                st[i].width == 1
+                    && base.iter().all(|&b| b == 0)
+                    && shape[..] == st[i].dims[..]
+            }
+            _ => false,
+        };
+        if v[i].is_identity() || full_window {
+            let mut nv = v.to_vec();
+            nv.remove(i);
+            out.push(nv);
+        }
+        if i + 1 < v.len() {
+            // Rule 2.
+            if let Some(fused) = v[i].compose_with(&v[i + 1]) {
+                let mut nv = v.to_vec();
+                nv.splice(i..i + 2, std::iter::once(fused));
+                out.push(nv);
+            }
+            // Rule 3.
+            if let Some((first, second)) = pushdown(&v[i], &v[i + 1]) {
+                let mut nv = v.to_vec();
+                nv[i] = first;
+                nv[i + 1] = second;
+                out.push(nv);
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ops::StencilSpec;
-    use crate::tensor::{NdArray, Order, Shape};
+    use crate::ops::{CostWeights, StencilSpec};
+    use crate::tensor::{DType, NdArray, Order, Shape};
     use crate::util::rng::Rng;
 
     fn reorder(v: &[usize]) -> Op {
         Op::Reorder { order: Order::new(v).unwrap() }
+    }
+
+    fn ctx(dims: &[usize]) -> ChainCtx {
+        ChainCtx::new(dims.to_vec(), 1, DType::F32)
+            .with_weights(CostWeights::default())
+            .with_threads(1)
     }
 
     #[test]
@@ -192,5 +358,101 @@ mod tests {
             Op::Pointwise { spec: PointwiseSpec::scale(3.0) },
         ];
         assert_eq!(rewrite(&stages), stages);
+    }
+
+    #[test]
+    fn cost_guided_applies_shrinking_pushdown() {
+        // The crop shrinks the move, so the model pushes it down —
+        // same result the unconditional pass produces.
+        let order = Order::new(&[1, 0, 2]).unwrap();
+        let stages = vec![
+            Op::Reorder { order: order.clone() },
+            Op::Subarray { base: vec![1, 2, 3], shape: vec![4, 3, 2] },
+        ];
+        let c = ctx(&[6, 8, 10]);
+        let out = rewrite_with(&stages, RewritePolicy::CostGuided, Some(&c));
+        assert_eq!(out.len(), 2);
+        assert!(matches!(out[0], Op::Subarray { .. }));
+        assert_eq!(out[1], Op::Reorder { order });
+    }
+
+    #[test]
+    fn cost_guided_refuses_non_shrinking_pushdown_and_elides_instead() {
+        // A full-window subarray shrinks nothing: pushing it down is
+        // cost-neutral, so the model refuses the move — and recognizes
+        // the stage as a semantic identity instead, unlocking the
+        // permute composition the pushdown would have blocked.
+        let r1 = Order::new(&[1, 0, 2]).unwrap();
+        let r2 = Order::new(&[2, 0, 1]).unwrap();
+        // Window shape = permuted([6, 8, 10]) under r1.
+        let win = Shape::new(&[6, 8, 10]).permuted(&r1.to_axes()).dims().to_vec();
+        let stages = vec![
+            Op::Reorder { order: r1.clone() },
+            Op::Subarray { base: vec![0, 0, 0], shape: win },
+            Op::Reorder { order: r2.clone() },
+        ];
+        let c = ctx(&[6, 8, 10]);
+        let guided = rewrite_with(&stages, RewritePolicy::CostGuided, Some(&c));
+        assert_eq!(guided, vec![Op::Reorder { order: r1.compose(&r2) }]);
+        // The unconditional pass pushes the full window down instead,
+        // keeping two movement passes — strictly more modeled traffic.
+        let always = rewrite_with(&stages, RewritePolicy::Always, None);
+        assert_eq!(always.len(), 2);
+        let g = cost::chain_estimate(&guided, &c).unwrap();
+        let a = cost::chain_estimate(&always, &c).unwrap();
+        assert!(g.cost < a.cost, "guided {} vs always {}", g.cost, a.cost);
+    }
+
+    #[test]
+    fn cost_guided_never_increases_modeled_cost() {
+        let c = ctx(&[6, 8, 10]);
+        let o = Order::new(&[2, 0, 1]).unwrap();
+        let chains: Vec<Vec<Op>> = vec![
+            vec![Op::Reorder { order: o.clone() }, Op::Copy, Op::Reorder { order: o.inverse() }],
+            vec![
+                Op::Reorder { order: o.clone() },
+                Op::Subarray { base: vec![1, 2, 3], shape: vec![4, 3, 2] },
+            ],
+            vec![Op::Copy, Op::Copy, Op::Copy],
+            vec![Op::Stencil { spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 } }],
+        ];
+        for stages in chains {
+            let before = cost::chain_estimate(&stages, &c).unwrap();
+            let out = rewrite_with(&stages, RewritePolicy::CostGuided, Some(&c));
+            let after = cost::chain_estimate(&out, &c).unwrap();
+            assert!(
+                after.cost <= before.cost,
+                "{stages:?}: {} -> {}",
+                before.cost,
+                after.cost
+            );
+        }
+    }
+
+    #[test]
+    fn full_window_elision_gated_to_single_lane() {
+        // At width > 1 the walk only knows lane 0's shape; a stage maps
+        // lane-wise over lanes that may have other shapes the window
+        // would genuinely crop, so the shape-aware elision must not
+        // fire there.
+        let crop = Op::Subarray { base: vec![0, 0], shape: vec![16, 16] };
+        let c2 = ChainCtx::new(vec![16, 16], 2, DType::F32)
+            .with_weights(CostWeights::default())
+            .with_threads(1);
+        let out = rewrite_with(&[crop.clone()], RewritePolicy::CostGuided, Some(&c2));
+        assert_eq!(out, vec![crop.clone()]);
+        // At width 1 the same stage is a provable identity and elides.
+        let c1 = ctx(&[16, 16]);
+        let out = rewrite_with(&[crop], RewritePolicy::CostGuided, Some(&c1));
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn cost_guided_without_ctx_degrades_to_always() {
+        let stages = vec![Op::Copy, reorder(&[1, 0])];
+        assert_eq!(
+            rewrite_with(&stages, RewritePolicy::CostGuided, None),
+            rewrite(&stages)
+        );
     }
 }

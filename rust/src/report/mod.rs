@@ -1,4 +1,21 @@
-//! Bench report formatting: the tables/series the paper prints.
+//! Bench report formatting: the tables/series the paper prints and the
+//! machine-readable bench schemas tracked across PRs.
+//!
+//! Three output families:
+//!
+//! * [`Table`] — aligned text tables, the shape of the paper's Tables
+//!   1–4 (every bench prints one).
+//! * [`series`] — `(x, y)` series for the figure-style outputs.
+//! * [`BenchRecord`] / [`bench_json`] — the `BENCH_hostexec.json`
+//!   schema (`{threads, results: [{op, shape, order, dtype, naive_gbs,
+//!   hostexec_gbs, speedup}]}`). The pipeline bench writes the sibling
+//!   `BENCH_pipeline.json` (`{workload, metric, unfused, fused,
+//!   speedup}` rows, incl. the `traffic_bytes` / `est_traffic_bytes`
+//!   model-vs-measured pair). Anchor tests
+//!   (`rust/tests/perf_shape_anchor.rs`,
+//!   `rust/tests/pipeline_traffic_anchor.rs`) parse these files with
+//!   [`crate::util::json`] and pin the invariants; committed stubs SKIP
+//!   them until CI regenerates the real numbers.
 
 use std::fmt::Write as _;
 

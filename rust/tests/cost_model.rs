@@ -1,0 +1,199 @@
+//! Cost-model properties: the cost-guided rewrite never increases the
+//! modeled traffic of a chain, both rewrite policies stay bit-identical
+//! to the naive unfused composition on random chains, the simulator
+//! calibration produces sane weights, and `PipeStats.estimated_bytes`
+//! tracks the measured fused traffic in-process. Runs on a bare
+//! checkout (no artifacts, no PJRT).
+
+use gdrk::gpusim::Calibration;
+use gdrk::ops::{CostWeights, Op, PointwiseSpec, StencilSpec};
+use gdrk::pipeline::{rewrite_with, ChainCtx, Pipeline, RewritePolicy};
+use gdrk::tensor::{DType, NdArray, Order, Shape};
+use gdrk::util::rng::Rng;
+
+/// Random valid chain for `dims0`, tracking lane shape/width the way
+/// the pipeline's execution rules do (movement + stencil + pointwise).
+fn random_chain(rng: &mut Rng, dims0: &[usize], len: usize) -> Vec<Op> {
+    let mut ops = Vec::with_capacity(len);
+    let mut dims = dims0.to_vec();
+    let mut width = 1usize;
+    for _ in 0..len {
+        loop {
+            let stencil_ok = dims.len() <= 3 && dims.iter().product::<usize>() < (1 << 15);
+            match rng.gen_range(7) {
+                0 => {
+                    ops.push(Op::Copy);
+                    break;
+                }
+                1 => {
+                    let order = Order::new(&rng.permutation(dims.len())).unwrap();
+                    dims = Shape::new(&dims).permuted(&order.to_axes()).dims().to_vec();
+                    ops.push(Op::Reorder { order });
+                    break;
+                }
+                2 => {
+                    let base: Vec<usize> = dims.iter().map(|&d| rng.gen_range(d)).collect();
+                    let shape: Vec<usize> = dims
+                        .iter()
+                        .zip(&base)
+                        .map(|(&d, &b)| rng.gen_range(d - b) + 1)
+                        .collect();
+                    dims = shape.clone();
+                    ops.push(Op::Subarray { base, shape });
+                    break;
+                }
+                3 if stencil_ok => {
+                    ops.push(Op::Stencil {
+                        spec: StencilSpec::FdLaplacian {
+                            order: rng.gen_between(1, 3),
+                            scale: rng.gen_f64(),
+                        },
+                    });
+                    break;
+                }
+                4 if width == 1 && dims.len() == 1 => {
+                    match (2..=4usize).find(|n| dims[0] % n == 0 && dims[0] >= *n) {
+                        Some(n) => {
+                            dims = vec![dims[0] / n];
+                            width = n;
+                            ops.push(Op::Deinterlace { n });
+                            break;
+                        }
+                        None => continue,
+                    }
+                }
+                5 if width >= 2 => {
+                    ops.push(Op::Interlace { n: width });
+                    dims = vec![width * dims[0]];
+                    width = 1;
+                    break;
+                }
+                6 => {
+                    ops.push(Op::Pointwise {
+                        spec: PointwiseSpec::axpb(rng.gen_f64() * 2.0 - 1.0, rng.gen_f64()),
+                    });
+                    break;
+                }
+                _ => continue,
+            }
+        }
+    }
+    ops
+}
+
+/// The independent unfused baseline (lane rules as in the executor).
+fn naive_chain(stages: &[Op], inputs: &[&NdArray<f32>]) -> Vec<NdArray<f32>> {
+    let mut cur: Vec<NdArray<f32>> = inputs.iter().map(|x| (*x).clone()).collect();
+    for op in stages {
+        let refs: Vec<&NdArray<f32>> = cur.iter().collect();
+        cur = if op.arity() == refs.len() {
+            op.reference(&refs).unwrap()
+        } else {
+            refs.iter()
+                .map(|lane| op.reference(&[*lane]).unwrap().pop().unwrap())
+                .collect()
+        };
+    }
+    cur
+}
+
+/// Property: `RewritePolicy::CostGuided` never produces a chain whose
+/// modeled traffic exceeds the input chain's — under the default
+/// weights and under deliberately skewed ones.
+#[test]
+fn cost_guided_rewrite_never_increases_modeled_traffic() {
+    let mut rng = Rng::new(0xC057);
+    let skewed = CostWeights {
+        streaming: 1.0,
+        strided: 6.0,
+        permute: 3.0,
+        stencil: 1.5,
+        pointwise: 1.0,
+    };
+    for case in 0..120 {
+        let rank = rng.gen_between(1, 5);
+        let dims: Vec<usize> = (0..rank).map(|_| rng.gen_between(1, 20)).collect();
+        let len = rng.gen_between(1, 7);
+        let stages = random_chain(&mut rng, &dims, len);
+        for weights in [CostWeights::default(), skewed] {
+            let ctx = ChainCtx::new(dims.clone(), 1, DType::F32)
+                .with_weights(weights)
+                .with_threads(4);
+            let Some(before) = gdrk::pipeline::cost::chain_estimate(&stages, &ctx) else {
+                panic!("case {case}: generator produced an invalid chain {stages:?}");
+            };
+            let out = rewrite_with(&stages, RewritePolicy::CostGuided, Some(&ctx));
+            let after = gdrk::pipeline::cost::chain_estimate(&out, &ctx)
+                .expect("rewrites preserve chain validity");
+            assert!(
+                after.cost <= before.cost,
+                "case {case}: cost rose {} -> {} for {stages:?} => {out:?}",
+                before.cost,
+                after.cost
+            );
+        }
+    }
+}
+
+/// Both policies execute bit-identically to the naive unfused chain.
+#[test]
+fn both_policies_bit_identical_on_random_chains() {
+    let mut rng = Rng::new(0xC058);
+    for case in 0..80 {
+        let rank = rng.gen_between(1, 5);
+        let dims: Vec<usize> = (0..rank).map(|_| rng.gen_between(1, 20)).collect();
+        let len = rng.gen_between(1, 6);
+        let stages = random_chain(&mut rng, &dims, len);
+        let x = NdArray::random(Shape::new(&dims), &mut rng);
+        let want = naive_chain(&stages, &[&x]);
+        for policy in [RewritePolicy::Always, RewritePolicy::CostGuided] {
+            let pipe = Pipeline::new(stages.clone()).unwrap().with_policy(policy);
+            let (got, stats) = pipe.execute_with_stats(&[&x]).unwrap();
+            assert_eq!(got, want, "case {case} {policy:?}: {dims:?} {stages:?}");
+            assert!(
+                stats.stages_rewritten <= stats.stages_in,
+                "case {case} {policy:?}"
+            );
+        }
+    }
+}
+
+/// The reported estimate tracks the measured fused counters in-process:
+/// for a pure stencil chain both describe the same banded run, so they
+/// agree within a factor of 2 (exactly, when the band layouts match).
+#[test]
+fn estimated_bytes_track_measured_fused_traffic() {
+    let mut rng = Rng::new(0xC059);
+    let x = NdArray::random(Shape::new(&[64, 48]), &mut rng);
+    let spec = StencilSpec::FdLaplacian { order: 1, scale: 0.5 };
+    let pipe = Pipeline::new(vec![
+        Op::Stencil { spec: spec.clone() },
+        Op::Stencil { spec: spec.clone() },
+        Op::Stencil { spec },
+    ])
+    .unwrap();
+    let (_, stats) = pipe.execute_with_stats(&[&x]).unwrap();
+    assert_eq!(stats.fused_chains, 1);
+    assert!(stats.estimated_bytes > 0);
+    let (est, meas) = (stats.estimated_bytes as f64, stats.fused_traffic_bytes as f64);
+    let ratio = est.max(meas) / est.min(meas);
+    assert!(ratio <= 2.0, "estimate {est} vs measured {meas}: {ratio:.2}x off");
+    // The default policy is cost-guided.
+    assert_eq!(pipe.policy(), RewritePolicy::CostGuided);
+}
+
+/// The gpusim calibration hook produces ordered, finite weights: a
+/// permute byte costs more than a streamed byte, a strided byte more
+/// than a permuted one, and the tiled-vs-naive ratio stays in the
+/// paper's band.
+#[test]
+fn calibration_weights_are_ordered_and_finite() {
+    let c = Calibration::measure();
+    assert!(c.tiled_vs_naive() > 2.0 && c.tiled_vs_naive() < 100.0, "{c:?}");
+    let w = c.weights();
+    assert!(w.streaming == 1.0, "{w:?}");
+    assert!(w.permute >= 1.0 && w.permute.is_finite(), "{w:?}");
+    assert!(w.strided >= w.permute && w.strided.is_finite(), "{w:?}");
+    let hw = gdrk::gpusim::calib::host_weights();
+    assert_eq!(hw, w, "cached weights equal a fresh calibration");
+}

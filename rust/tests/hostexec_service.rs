@@ -169,6 +169,11 @@ fn pipeline_responses_report_traffic_stats() {
     assert_eq!(stats.fused_chains, 1);
     assert!(stats.fused_traffic_bytes > 0);
     assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
+    // Model vs actual: the cost model's prediction rides along and
+    // tracks the measured fused bytes (same banded run).
+    assert!(stats.estimated_bytes > 0);
+    let (est, meas) = (stats.estimated_bytes as f64, stats.fused_traffic_bytes as f64);
+    assert!(est.max(meas) / est.min(meas) <= 2.0, "est {est} vs measured {meas}");
 
     // Mixed stencil/pointwise chains: the scale stage rides the fused
     // pass and the result matches the sequential reference.
