@@ -170,6 +170,7 @@ fn main() {
         max_batch: 8,
         preload: vec!["permute3d_o102".into()],
         backend: Backend::Pjrt,
+        ..ServiceConfig::default()
     })
     .expect("service");
     let x = Tensor::F32(NdArray::iota(Shape::new(&[32, 48, 64])));

@@ -11,33 +11,59 @@
 //! Policy: FIFO *across* key groups by the arrival time of each group's
 //! oldest request (no starvation), FIFO *within* a group, at most
 //! `max_batch` requests per dispatched batch.
+//!
+//! Robustness: the queue is **bounded** ([`Batcher::with_capacity`]) —
+//! [`Batcher::push`] is fallible and hands the request back instead of
+//! growing without limit — and expired requests are swept out before
+//! execution ([`Batcher::take_expired`]) so a deadline never burns
+//! worker time.
 
 use super::request::Request;
 use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
 
 #[derive(Debug)]
 pub struct Batcher {
     queues: HashMap<String, VecDeque<Request>>,
     max_batch: usize,
+    capacity: usize,
     len: usize,
 }
 
 impl Batcher {
+    /// An unbounded batcher (capacity `usize::MAX`) — callers that
+    /// bound admission elsewhere. Serving paths use
+    /// [`Batcher::with_capacity`].
     pub fn new(max_batch: usize) -> Batcher {
+        Batcher::with_capacity(max_batch, usize::MAX)
+    }
+
+    /// A batcher holding at most `capacity` queued requests across all
+    /// key groups; further pushes are refused.
+    pub fn with_capacity(max_batch: usize, capacity: usize) -> Batcher {
         assert!(max_batch >= 1);
+        assert!(capacity >= 1);
         Batcher {
             queues: HashMap::new(),
             max_batch,
+            capacity,
             len: 0,
         }
     }
 
-    pub fn push(&mut self, req: Request) {
+    /// Enqueue a request, or hand it back when the batcher is at
+    /// capacity — the caller owns the shed decision (the coordinator
+    /// answers `Overloaded`), the batcher just refuses to grow.
+    pub fn push(&mut self, req: Request) -> Result<(), Request> {
+        if self.len >= self.capacity {
+            return Err(req);
+        }
         self.len += 1;
         self.queues
             .entry(req.batch_key())
             .or_default()
             .push_back(req);
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -46,6 +72,31 @@ impl Batcher {
 
     pub fn is_empty(&self) -> bool {
         self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Remove and return every queued request whose deadline has passed
+    /// at `now` (order unspecified). Emptied key groups are dropped so
+    /// they stop competing in the oldest-group scan.
+    pub fn take_expired(&mut self, now: Instant) -> Vec<Request> {
+        let mut expired = Vec::new();
+        self.queues.retain(|_, q| {
+            let mut kept = VecDeque::with_capacity(q.len());
+            for req in q.drain(..) {
+                if req.expired(now) {
+                    expired.push(req);
+                } else {
+                    kept.push_back(req);
+                }
+            }
+            *q = kept;
+            !q.is_empty()
+        });
+        self.len -= expired.len();
+        expired
     }
 
     /// Pop the next batch: the key group whose head request is oldest,
@@ -83,9 +134,9 @@ mod tests {
     #[test]
     fn fifo_within_group() {
         let mut b = Batcher::new(10);
-        b.push(req(1, "a"));
-        b.push(req(2, "a"));
-        b.push(req(3, "a"));
+        b.push(req(1, "a")).unwrap();
+        b.push(req(2, "a")).unwrap();
+        b.push(req(3, "a")).unwrap();
         let (k, batch) = b.next_batch().unwrap();
         assert_eq!(k, "a");
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 3]);
@@ -95,10 +146,10 @@ mod tests {
     #[test]
     fn oldest_group_first() {
         let mut b = Batcher::new(10);
-        b.push(req(1, "a"));
+        b.push(req(1, "a")).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(2));
-        b.push(req(2, "b"));
-        b.push(req(3, "a"));
+        b.push(req(2, "b")).unwrap();
+        b.push(req(3, "a")).unwrap();
         let (k1, batch1) = b.next_batch().unwrap();
         assert_eq!(k1, "a");
         assert_eq!(batch1.len(), 2);
@@ -115,17 +166,20 @@ mod tests {
             1,
             "copy_4k",
             vec![Tensor::F32(NdArray::iota(Shape::new(&[4])))],
-        ));
+        ))
+        .unwrap();
         b.push(Request::new(
             2,
             "copy_4k",
             vec![Tensor::I32(NdArray::from_vec(Shape::new(&[4]), vec![0, 1, 2, 3]))],
-        ));
+        ))
+        .unwrap();
         b.push(Request::new(
             3,
             "copy_4k",
             vec![Tensor::F32(NdArray::iota(Shape::new(&[4])))],
-        ));
+        ))
+        .unwrap();
         // f32 requests batch together; the i32 one is its own group.
         let (k1, batch1) = b.next_batch().unwrap();
         assert_eq!(k1, "copy_4k@f32");
@@ -140,7 +194,7 @@ mod tests {
     fn max_batch_respected() {
         let mut b = Batcher::new(2);
         for i in 0..5 {
-            b.push(req(i, "a"));
+            b.push(req(i, "a")).unwrap();
         }
         let sizes: Vec<usize> = std::iter::from_fn(|| b.next_batch().map(|(_, v)| v.len()))
             .collect();
@@ -151,9 +205,49 @@ mod tests {
     fn empty_returns_none() {
         let mut b = Batcher::new(4);
         assert!(b.next_batch().is_none());
-        b.push(req(1, "a"));
+        b.push(req(1, "a")).unwrap();
         b.next_batch().unwrap();
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn capacity_bounds_the_queue_and_hands_requests_back() {
+        let mut b = Batcher::with_capacity(4, 2);
+        assert_eq!(b.capacity(), 2);
+        b.push(req(1, "a")).unwrap();
+        b.push(req(2, "b")).unwrap();
+        // Full: the request comes back intact, nothing is dropped.
+        let refused = b.push(req(3, "a")).unwrap_err();
+        assert_eq!(refused.id, 3);
+        assert_eq!(refused.artifact, "a");
+        assert_eq!(b.len(), 2);
+        // Draining frees capacity again.
+        b.next_batch().unwrap();
+        b.push(req(3, "a")).unwrap();
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn take_expired_sweeps_only_past_deadlines() {
+        let now = Instant::now();
+        let later = now + std::time::Duration::from_secs(3600);
+        let mut b = Batcher::new(10);
+        b.push(req(1, "a")).unwrap(); // no deadline: never expires
+        b.push(req(2, "a").with_deadline(now)).unwrap();
+        b.push(req(3, "b").with_deadline(later)).unwrap();
+        b.push(req(4, "b").with_deadline(now)).unwrap();
+        let mut expired: Vec<u64> = b.take_expired(now).into_iter().map(|r| r.id).collect();
+        expired.sort_unstable();
+        assert_eq!(expired, vec![2, 4]);
+        assert_eq!(b.len(), 2);
+        // Survivors still pop in order.
+        let mut ids = Vec::new();
+        while let Some((_, batch)) = b.next_batch() {
+            ids.extend(batch.iter().map(|r| r.id));
+        }
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 3]);
+        assert!(b.take_expired(later).is_empty());
     }
 
     #[test]
@@ -170,7 +264,7 @@ mod tests {
                 if rng.gen_bool() || b.is_empty() {
                     let art = format!("k{}", rng.gen_range(4));
                     pushed.push((next_id, art.clone()));
-                    b.push(req(next_id, &art));
+                    b.push(req(next_id, &art)).unwrap();
                     next_id += 1;
                 } else if let Some((k, batch)) = b.next_batch() {
                     for r in batch {

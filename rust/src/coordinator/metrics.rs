@@ -45,6 +45,12 @@ impl Histogram {
         }
     }
 
+    /// Total recorded seconds (the admission controller's throughput
+    /// denominator: processed bytes / total execution seconds).
+    pub fn total_seconds(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
     /// Approximate quantile from bucket boundaries (upper bound).
     pub fn quantile_seconds(&self, q: f64) -> f64 {
         let n = self.count();
@@ -64,12 +70,38 @@ impl Histogram {
 }
 
 /// Service-wide metrics.
+///
+/// Besides the request counters and latency histograms, the fault-
+/// tolerant lifecycle reports its own counters: `panics_recovered`
+/// (requests whose execution panicked and was caught), `worker_restarts`
+/// (supervisor respawns of a dead worker thread), `shed` (requests
+/// refused by admission control), `expired` (requests dropped at their
+/// deadline), `degraded` (requests answered by a fallback rung of the
+/// degradation ladder), and `manifest_errors` (present-but-unusable
+/// artifact manifests downgraded at executor construction). Two gauges
+/// back the admission controller: `queued_bytes` / `queued_depth` track
+/// the modeled cost and count of requests currently in flight between
+/// `submit` and execution, and `processed_bytes` accumulates the
+/// modeled bytes of completed work (the throughput numerator for
+/// `Overloaded::estimated_wait_seconds`).
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub submitted: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub batches: AtomicU64,
+    pub panics_recovered: AtomicU64,
+    pub worker_restarts: AtomicU64,
+    pub shed: AtomicU64,
+    pub expired: AtomicU64,
+    pub degraded: AtomicU64,
+    pub manifest_errors: AtomicU64,
+    /// Gauge: modeled bytes admitted but not yet executed.
+    pub queued_bytes: AtomicU64,
+    /// Gauge: requests admitted but not yet executed.
+    pub queued_depth: AtomicU64,
+    /// Modeled bytes of successfully completed requests.
+    pub processed_bytes: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
 }
@@ -79,6 +111,24 @@ impl Metrics {
         counter.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Saturating decrement for the queue gauges (a restarted worker
+    /// may drop bookkeeping for requests the dead one absorbed; the
+    /// gauge must never wrap).
+    pub fn sub(counter: &AtomicU64, n: u64) {
+        let mut cur = counter.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match counter.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
     pub fn get(counter: &AtomicU64) -> u64 {
         counter.load(Ordering::Relaxed)
     }
@@ -86,11 +136,19 @@ impl Metrics {
     /// One-line human summary (printed by the CLI's `serve --stats`).
     pub fn summary(&self) -> String {
         format!(
-            "submitted={} completed={} failed={} batches={} queue_mean={:.1}us exec_mean={:.1}us exec_p95={:.1}us",
+            "submitted={} completed={} failed={} shed={} expired={} degraded={} \
+             panics_recovered={} worker_restarts={} batches={} queued_bytes={} \
+             queue_mean={:.1}us exec_mean={:.1}us exec_p95={:.1}us",
             Metrics::get(&self.submitted),
             Metrics::get(&self.completed),
             Metrics::get(&self.failed),
+            Metrics::get(&self.shed),
+            Metrics::get(&self.expired),
+            Metrics::get(&self.degraded),
+            Metrics::get(&self.panics_recovered),
+            Metrics::get(&self.worker_restarts),
             Metrics::get(&self.batches),
+            Metrics::get(&self.queued_bytes),
             self.queue_latency.mean_seconds() * 1e6,
             self.exec_latency.mean_seconds() * 1e6,
             self.exec_latency.quantile_seconds(0.95) * 1e6,
@@ -141,6 +199,30 @@ mod tests {
         assert_eq!(Metrics::get(&m.submitted), 2);
         assert_eq!(Metrics::get(&m.completed), 1);
         assert!(m.summary().contains("submitted=2"));
+        Metrics::inc(&m.panics_recovered);
+        Metrics::inc(&m.shed);
+        Metrics::inc(&m.degraded);
+        assert!(m.summary().contains("shed=1"));
+        assert!(m.summary().contains("panics_recovered=1"));
+    }
+
+    #[test]
+    fn gauges_add_and_saturate() {
+        let m = Metrics::default();
+        Metrics::add(&m.queued_bytes, 100);
+        Metrics::sub(&m.queued_bytes, 30);
+        assert_eq!(Metrics::get(&m.queued_bytes), 70);
+        // Over-subtraction saturates at zero instead of wrapping.
+        Metrics::sub(&m.queued_bytes, 1000);
+        assert_eq!(Metrics::get(&m.queued_bytes), 0);
+    }
+
+    #[test]
+    fn histogram_total_seconds_accumulates() {
+        let h = Histogram::default();
+        h.record_seconds(0.5);
+        h.record_seconds(1.5);
+        assert!((h.total_seconds() - 2.0).abs() < 1e-3);
     }
 
     #[test]

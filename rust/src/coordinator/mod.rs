@@ -22,6 +22,17 @@
 //! rewrite counts, measured fused-vs-unfused traffic, and the cost
 //! model's `estimated_bytes` prediction side by side, so serving logs
 //! carry model vs actual per request.
+//!
+//! The request lifecycle is fault-tolerant end to end: every way a
+//! request can fail maps to a typed [`request::ServiceError`] —
+//! admission control sheds with a cost-modeled `Overloaded` before the
+//! queue grows unboundedly, deadlines expire queued requests
+//! unexecuted, execution panics are caught per rung and re-dispatched
+//! down a degradation ladder (PJRT → host → unfused → naive), and a
+//! dead worker thread is respawned by a supervisor with bounded
+//! backoff. `docs/ARCHITECTURE.md` ("Request lifecycle & failure
+//! modes") walks the full path; [`crate::faultinject`] is the
+//! deterministic harness that exercises it.
 
 pub mod batcher;
 pub mod metrics;
@@ -30,5 +41,5 @@ pub mod service;
 
 pub use batcher::Batcher;
 pub use metrics::Metrics;
-pub use request::{Request, RequestId, Response};
-pub use service::{Backend, Service, ServiceConfig};
+pub use request::{Request, RequestId, Response, ServiceError};
+pub use service::{Backend, CallOutcome, Service, ServiceConfig};

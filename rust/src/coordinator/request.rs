@@ -3,9 +3,48 @@
 use crate::pipeline::PipeStats;
 use crate::runtime::Tensor;
 use std::time::Instant;
+use thiserror::Error;
 
 /// Monotonic request identifier.
 pub type RequestId = u64;
+
+/// Typed failure surface of the service: every way a request can fail
+/// short of a process abort. Callers match on the variant; the rendered
+/// message still carries the executor's detail for logs.
+#[derive(Debug, Clone, PartialEq, Error)]
+pub enum ServiceError {
+    /// The worker thread is gone (channel disconnected) and the
+    /// supervisor could not get a replacement accepting work in time.
+    /// Nothing about the request itself was wrong — retrying is sound.
+    #[error("worker gone: the device worker disconnected before answering")]
+    WorkerGone,
+    /// The request's deadline passed — either queued past it (the
+    /// batcher drops it unexecuted) or the caller stopped waiting.
+    #[error("deadline exceeded after {waited_seconds:.6}s")]
+    DeadlineExceeded { waited_seconds: f64 },
+    /// Admission control shed this request: the queue already holds
+    /// more modeled work than the configured capacity.
+    /// `estimated_wait_seconds` is the cost model's drain estimate for
+    /// the queue ahead — a retry-after hint, not a promise.
+    #[error(
+        "overloaded: queue holds ~{queued_bytes} modeled bytes; \
+         estimated wait {estimated_wait_seconds:.3}s"
+    )]
+    Overloaded {
+        queued_bytes: u64,
+        estimated_wait_seconds: f64,
+    },
+    /// Execution panicked and the worker recovered (`catch_unwind`);
+    /// the payload is the panic message. The worker thread survived —
+    /// this request alone failed.
+    #[error("execution panicked (recovered): {0}")]
+    Panicked(String),
+    /// The executor failed normally (unknown artifact, dtype mismatch,
+    /// backend init failure, ...). The message is the final rung's
+    /// error after the degradation ladder ran out.
+    #[error("{0}")]
+    Exec(String),
+}
 
 /// A rearrangement request: run `artifact` on `inputs`.
 #[derive(Debug)]
@@ -15,6 +54,13 @@ pub struct Request {
     pub artifact: String,
     pub inputs: Vec<Tensor>,
     pub enqueued: Instant,
+    /// Drop-dead time: the batcher discards the request unexecuted
+    /// once this passes, answering [`ServiceError::DeadlineExceeded`].
+    pub deadline: Option<Instant>,
+    /// The admission controller's modeled cost for this request
+    /// (weighted full-size bytes, see `Service::submit`); 0 when built
+    /// directly without pricing.
+    pub cost_bytes: u64,
 }
 
 impl Request {
@@ -24,7 +70,26 @@ impl Request {
             artifact: artifact.into(),
             inputs,
             enqueued: Instant::now(),
+            deadline: None,
+            cost_bytes: 0,
         }
+    }
+
+    /// Attach a drop-dead deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach the admission controller's modeled cost.
+    pub fn with_cost(mut self, cost_bytes: u64) -> Request {
+        self.cost_bytes = cost_bytes;
+        self
+    }
+
+    /// True once the deadline (if any) has passed.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
     }
 
     /// The batcher's grouping key: artifact **plus input dtypes**, so an
@@ -53,7 +118,7 @@ impl Request {
 pub struct Response {
     pub id: RequestId,
     pub artifact: String,
-    pub result: Result<Vec<Tensor>, String>,
+    pub result: Result<Vec<Tensor>, ServiceError>,
     /// Seconds spent queued before execution started.
     pub queue_seconds: f64,
     /// Seconds spent executing on the device.
@@ -62,11 +127,30 @@ pub struct Response {
     /// host path: rewrite counts plus fused vs unfused traffic bytes.
     /// `None` for single-op requests and PJRT-served artifacts.
     pub pipe_stats: Option<PipeStats>,
+    /// Degradation-ladder rungs that *answered after a failure*: empty
+    /// when the primary path served the request, else the names of the
+    /// fallback rungs tried in order (e.g. `["host_unfused", "naive"]`
+    /// for a fused chain that degraded twice before succeeding).
+    pub degraded: Vec<&'static str>,
 }
 
 impl Response {
     pub fn is_ok(&self) -> bool {
         self.result.is_ok()
+    }
+
+    /// A response the leader synthesizes without the worker (shed,
+    /// worker gone): zero timings, no stats.
+    pub(crate) fn rejection(id: RequestId, artifact: &str, err: ServiceError) -> Response {
+        Response {
+            id,
+            artifact: artifact.to_string(),
+            result: Err(err),
+            queue_seconds: 0.0,
+            exec_seconds: 0.0,
+            pipe_stats: None,
+            degraded: Vec::new(),
+        }
     }
 }
 
@@ -81,6 +165,22 @@ mod tests {
         assert_eq!(r.id, 7);
         assert_eq!(r.artifact, "copy_4m");
         assert_eq!(r.inputs.len(), 1);
+        assert_eq!(r.deadline, None);
+        assert_eq!(r.cost_bytes, 0);
+        assert!(!r.expired(Instant::now()));
+    }
+
+    #[test]
+    fn deadline_expiry_is_a_pure_time_check() {
+        let now = Instant::now();
+        let r = Request::new(1, "copy_4m", vec![])
+            .with_deadline(now + std::time::Duration::from_secs(3600))
+            .with_cost(64);
+        assert_eq!(r.cost_bytes, 64);
+        assert!(!r.expired(now));
+        assert!(r.expired(now + std::time::Duration::from_secs(3600)));
+        let past = Request::new(2, "copy_4m", vec![]).with_deadline(now);
+        assert!(past.expired(now));
     }
 
     #[test]
@@ -116,16 +216,44 @@ mod tests {
             queue_seconds: 0.0,
             exec_seconds: 0.0,
             pipe_stats: None,
+            degraded: Vec::new(),
         };
         assert!(ok.is_ok());
         let err = Response {
             id: 2,
             artifact: "x".into(),
-            result: Err("boom".into()),
+            result: Err(ServiceError::Exec("boom".into())),
             queue_seconds: 0.0,
             exec_seconds: 0.0,
             pipe_stats: Some(PipeStats::default()),
+            degraded: vec!["naive"],
         };
         assert!(!err.is_ok());
+    }
+
+    #[test]
+    fn service_errors_render_their_detail() {
+        // Exec passes the executor's message through verbatim so
+        // existing substring assertions (unknown artifact, dtype
+        // errors) keep working on the typed surface.
+        let e = ServiceError::Exec("unknown artifact 'nope'".into());
+        assert_eq!(e.to_string(), "unknown artifact 'nope'");
+        assert!(ServiceError::WorkerGone.to_string().contains("worker gone"));
+        let d = ServiceError::DeadlineExceeded { waited_seconds: 0.25 };
+        assert!(d.to_string().contains("deadline exceeded"), "{d}");
+        let o = ServiceError::Overloaded { queued_bytes: 1 << 20, estimated_wait_seconds: 0.5 };
+        assert!(o.to_string().contains("overloaded"), "{o}");
+        let p = ServiceError::Panicked("gdrk injected panic at rung:host".into());
+        assert!(p.to_string().contains("panicked (recovered)"), "{p}");
+    }
+
+    #[test]
+    fn rejection_synthesizes_a_leader_side_response() {
+        let r = Response::rejection(9, "copy_4m", ServiceError::WorkerGone);
+        assert_eq!(r.id, 9);
+        assert_eq!(r.artifact, "copy_4m");
+        assert!(!r.is_ok());
+        assert!(matches!(r.result, Err(ServiceError::WorkerGone)));
+        assert!(r.degraded.is_empty());
     }
 }

@@ -1,4 +1,5 @@
-//! The service: leader API + single device-worker thread.
+//! The service: leader API + single device-worker thread, wrapped in a
+//! fault-tolerant request lifecycle.
 //!
 //! `PjRtClient` is `Rc`-based (not `Send`), so the worker thread *builds*
 //! the execution backend itself and owns it for its lifetime; everything
@@ -15,20 +16,63 @@
 //! `Auto` (the default) serves PJRT when this build carries it *and*
 //! the artifacts are present, and otherwise falls back to `HostExec` —
 //! so a bare checkout serves every rearrangement op out of the box.
+//!
+//! # Fault tolerance
+//!
+//! Every failure mode short of a process abort maps to a typed
+//! [`ServiceError`] — callers never see a panic or a hang:
+//!
+//! * **Panic isolation** — each execution rung runs under
+//!   `catch_unwind`; a panicking op answers
+//!   [`ServiceError::Panicked`] and bumps `panics_recovered`, and the
+//!   worker thread survives.
+//! * **Supervision** — if the worker thread itself dies (a panic
+//!   outside the guarded region), the next submission detects the dead
+//!   channel and respawns the worker with bounded exponential backoff
+//!   (`worker_restarts`); requests the dead worker absorbed answer
+//!   [`ServiceError::WorkerGone`] through their dropped reply channels.
+//! * **Deadlines** — [`Service::submit_with_deadline`] /
+//!   [`Service::call_typed`] attach a drop-dead time; the batcher
+//!   sweeps expired requests before execution
+//!   ([`Batcher::take_expired`]) and the blocking caller gets a typed
+//!   [`ServiceError::DeadlineExceeded`] instead of waiting on a dead
+//!   channel.
+//! * **Cost-priced admission control** — `submit` prices each request
+//!   with the pipeline cost model
+//!   ([`Op::traffic_estimate`](crate::ops::Op::traffic_estimate) /
+//!   [`chain_estimate`](crate::pipeline::cost::chain_estimate)) and
+//!   sheds with [`ServiceError::Overloaded`] — carrying the model's
+//!   estimated drain time — once the queue holds more modeled bytes
+//!   than [`ServiceConfig::queue_capacity_bytes`] or more requests
+//!   than [`ServiceConfig::max_queue_depth`].
+//! * **Degradation ladder** — a failed or panicking rung re-dispatches
+//!   one level down: `Pjrt → HostExec → Naive`, and for `pipe:` chains
+//!   `fused → unfused → naive`. Every rung is property-tested
+//!   bit-identical to the golden references, so a degraded answer is
+//!   still the *correct* answer; the response records the fallback
+//!   rungs in [`Response::degraded`] and `Metrics::degraded` counts
+//!   requests served by a fallback.
+//! * **Fault injection** — [`ServiceConfig::faults`] arms the
+//!   deterministic harness ([`crate::faultinject`]) at named sites
+//!   along this path; off by default.
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
-use super::request::{Request, RequestId, Response};
+use super::request::{Request, RequestId, Response, ServiceError};
+use crate::faultinject::{site, FaultConfig, FaultInjector};
 use crate::ops::ExecBackend;
 use crate::pipeline::PipeStats;
-use crate::runtime::artifact::{Manifest, ManifestError};
+use crate::runtime::artifact::Manifest;
 use crate::runtime::{Runtime, Tensor};
 use crate::tensor::TensorBuf;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Which executor the device worker runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -68,6 +112,20 @@ pub struct ServiceConfig {
     pub preload: Vec<String>,
     /// Executor selection (see [`Backend`]).
     pub backend: Backend,
+    /// Admission control: shed once the queue holds this many modeled
+    /// bytes of work (cost-model priced; see [`Service::submit`]). A
+    /// request larger than the whole capacity is still admitted when
+    /// the queue is empty — capacity bounds queue *growth*, it is not a
+    /// per-request size limit.
+    pub queue_capacity_bytes: u64,
+    /// Admission control: shed once this many requests are in flight
+    /// between submission and execution. Also bounds the worker-side
+    /// batcher, so the queue cannot grow without limit even if the
+    /// leader-side gauges drift.
+    pub max_queue_depth: usize,
+    /// Deterministic fault injection (`None` = off, the production
+    /// default). See [`crate::faultinject`].
+    pub faults: Option<FaultConfig>,
 }
 
 impl Default for ServiceConfig {
@@ -77,6 +135,9 @@ impl Default for ServiceConfig {
             max_batch: 8,
             preload: vec![],
             backend: Backend::Auto,
+            queue_capacity_bytes: 256 << 20,
+            max_queue_depth: 1024,
+            faults: None,
         }
     }
 }
@@ -86,29 +147,60 @@ enum Message {
     Shutdown,
 }
 
-/// Handle to a running coordinator service.
-pub struct Service {
+/// What [`Service::call_typed`] yields on success: the output tensors,
+/// the optional pipeline accounting, and the degradation-ladder rungs
+/// that served the request (empty on the primary path).
+pub type CallOutcome = (Vec<Tensor>, Option<PipeStats>, Vec<&'static str>);
+
+/// Supervised worker state: the live channel plus restart bookkeeping.
+struct Inner {
     tx: Sender<Message>,
     worker: Option<JoinHandle<()>>,
+    /// Lifetime restart count — drives the exponential backoff.
+    restarts: u32,
+}
+
+/// Handle to a running coordinator service.
+pub struct Service {
+    inner: Mutex<Inner>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    config: ServiceConfig,
+    faults: Option<Arc<FaultInjector>>,
 }
+
+/// Respawn attempts one `send_supervised` call makes before giving up
+/// and answering `WorkerGone`.
+const MAX_RESTART_ATTEMPTS: u32 = 3;
+/// Base restart backoff; doubles per lifetime restart, capped at
+/// `BASE << MAX_BACKOFF_SHIFT` (64 ms) so a crash-looping worker never
+/// stalls submission for long.
+const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(1);
+const MAX_BACKOFF_SHIFT: u32 = 6;
+/// Throughput assumed for `Overloaded::estimated_wait_seconds` before
+/// any request has completed (2 GiB/s — conservative host streaming).
+const DEFAULT_THROUGHPUT_BPS: f64 = (2u64 << 30) as f64;
 
 impl Service {
     /// Start the device worker. Fails fast (via the returned Receiver's
     /// first response) if the selected backend cannot be constructed.
     pub fn start(config: ServiceConfig) -> std::io::Result<Service> {
-        let (tx, rx) = channel::<Message>();
         let metrics = Arc::new(Metrics::default());
-        let worker_metrics = metrics.clone();
-        let worker = std::thread::Builder::new()
-            .name("gdrk-device-worker".into())
-            .spawn(move || worker_loop(rx, config, worker_metrics))?;
+        let faults = config
+            .faults
+            .clone()
+            .map(|c| Arc::new(FaultInjector::new(c)));
+        let (tx, worker) = spawn_worker(&config, &metrics, &faults)?;
         Ok(Service {
-            tx,
-            worker: Some(worker),
+            inner: Mutex::new(Inner {
+                tx,
+                worker: Some(worker),
+                restarts: 0,
+            }),
             metrics,
             next_id: AtomicU64::new(1),
+            config,
+            faults,
         })
     }
 
@@ -116,23 +208,125 @@ impl Service {
         &self.metrics
     }
 
-    /// Submit a request; returns its id and the response channel.
+    /// Submit a request; returns its id and the response channel. A
+    /// shed ([`ServiceError::Overloaded`]) or dead-worker
+    /// ([`ServiceError::WorkerGone`]) rejection arrives as the first —
+    /// and only — response on the channel, so callers handle every
+    /// outcome through one code path.
     pub fn submit(
         &self,
         artifact: impl Into<String>,
         inputs: Vec<Tensor>,
     ) -> (RequestId, Receiver<Response>) {
+        self.submit_inner(artifact.into(), inputs, None)
+    }
+
+    /// [`Service::submit`] with a drop-dead deadline: the batcher
+    /// discards the request unexecuted once `deadline` passes and
+    /// answers [`ServiceError::DeadlineExceeded`].
+    pub fn submit_with_deadline(
+        &self,
+        artifact: impl Into<String>,
+        inputs: Vec<Tensor>,
+        deadline: Instant,
+    ) -> (RequestId, Receiver<Response>) {
+        self.submit_inner(artifact.into(), inputs, Some(deadline))
+    }
+
+    fn submit_inner(
+        &self,
+        artifact: String,
+        inputs: Vec<Tensor>,
+        deadline: Option<Instant>,
+    ) -> (RequestId, Receiver<Response>) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
         Metrics::inc(&self.metrics.submitted);
-        let req = Request::new(id, artifact, inputs);
-        // A send error means the worker died; the caller sees it as a
-        // disconnected receiver.
-        let _ = self.tx.send(Message::Work(req, rtx));
+
+        // Price the request and run admission control before enqueue.
+        let cost = estimate_request_bytes(&artifact, &inputs);
+        let depth = Metrics::get(&self.metrics.queued_depth);
+        let queued = Metrics::get(&self.metrics.queued_bytes);
+        if depth >= self.config.max_queue_depth as u64
+            || (queued > 0 && queued.saturating_add(cost) > self.config.queue_capacity_bytes)
+        {
+            Metrics::inc(&self.metrics.shed);
+            let _ = rtx.send(Response::rejection(
+                id,
+                &artifact,
+                ServiceError::Overloaded {
+                    queued_bytes: queued,
+                    estimated_wait_seconds: estimated_wait_seconds(&self.metrics, queued),
+                },
+            ));
+            return (id, rrx);
+        }
+
+        let mut req = Request::new(id, artifact, inputs).with_cost(cost);
+        if let Some(d) = deadline {
+            req = req.with_deadline(d);
+        }
+        Metrics::add(&self.metrics.queued_bytes, cost);
+        Metrics::inc(&self.metrics.queued_depth);
+        if let Err(Message::Work(req, rtx)) = self.send_supervised(Message::Work(req, rtx)) {
+            // No worker could be brought up: undo the queue accounting
+            // and answer typed instead of leaving the caller hanging.
+            Metrics::sub(&self.metrics.queued_bytes, req.cost_bytes);
+            Metrics::sub(&self.metrics.queued_depth, 1);
+            let _ = rtx.send(Response::rejection(req.id, &req.artifact, ServiceError::WorkerGone));
+        }
         (id, rrx)
     }
 
-    /// Submit and block for the response.
+    /// Send to the worker, restarting it when the channel is dead:
+    /// join the corpse, back off (exponential in the lifetime restart
+    /// count, bounded), respawn, retry. Hands the message back if no
+    /// worker accepts it within [`MAX_RESTART_ATTEMPTS`].
+    fn send_supervised(&self, msg: Message) -> Result<(), Message> {
+        let mut inner = self.inner.lock().expect("service lock");
+        let mut msg = match inner.tx.send(msg) {
+            Ok(()) => return Ok(()),
+            Err(e) => e.0,
+        };
+        for _ in 0..MAX_RESTART_ATTEMPTS {
+            if let Some(h) = inner.worker.take() {
+                let _ = h.join();
+            }
+            let backoff = RESTART_BACKOFF_BASE * (1 << inner.restarts.min(MAX_BACKOFF_SHIFT));
+            std::thread::sleep(backoff);
+            inner.restarts += 1;
+            Metrics::inc(&self.metrics.worker_restarts);
+            match spawn_worker(&self.config, &self.metrics, &self.faults) {
+                Ok((tx, worker)) => {
+                    inner.tx = tx;
+                    inner.worker = Some(worker);
+                    // The dead worker absorbed its queue; forget its
+                    // gauge contributions so lost bookkeeping cannot
+                    // wedge admission shut. (Concurrent submitters
+                    // parked on this lock re-add their own costs when
+                    // their sends land on the new channel — transient
+                    // undercounting self-heals as work completes.)
+                    let (cost, depth) = match &msg {
+                        Message::Work(req, _) => (req.cost_bytes, 1),
+                        Message::Shutdown => (0, 0),
+                    };
+                    self.metrics.queued_bytes.store(cost, Ordering::Relaxed);
+                    self.metrics.queued_depth.store(depth, Ordering::Relaxed);
+                    match inner.tx.send(msg) {
+                        Ok(()) => return Ok(()),
+                        Err(e) => msg = e.0, // died instantly; retry
+                    }
+                }
+                Err(e) => {
+                    eprintln!("gdrk: worker respawn failed: {e}");
+                }
+            }
+        }
+        Err(msg)
+    }
+
+    /// Submit and block for the response (message-rendered errors; the
+    /// typed surface is [`Service::call_typed`]).
     pub fn call(
         &self,
         artifact: impl Into<String>,
@@ -149,29 +343,133 @@ impl Service {
         artifact: impl Into<String>,
         inputs: Vec<Tensor>,
     ) -> Result<(Vec<Tensor>, Option<PipeStats>), String> {
-        let (_, rx) = self.submit(artifact, inputs);
-        match rx.recv() {
-            Ok(resp) => resp.result.map(|outs| (outs, resp.pipe_stats)),
-            Err(_) => Err("worker disconnected".to_string()),
-        }
+        self.call_typed(artifact, inputs, None)
+            .map(|(outs, stats, _)| (outs, stats))
+            .map_err(|e| e.to_string())
     }
 
-    /// Graceful shutdown: drain in-flight work, join the worker.
+    /// Typed blocking call: submit, wait (bounded by `deadline` when
+    /// given), and surface every failure as a [`ServiceError`] — a dead
+    /// worker is [`ServiceError::WorkerGone`], a missed deadline
+    /// [`ServiceError::DeadlineExceeded`], never a hang or a panic.
+    /// Returns the outputs, the optional [`PipeStats`], and the
+    /// degradation-ladder rungs that served the request (empty on the
+    /// primary path).
+    pub fn call_typed(
+        &self,
+        artifact: impl Into<String>,
+        inputs: Vec<Tensor>,
+        deadline: Option<Instant>,
+    ) -> Result<CallOutcome, ServiceError> {
+        let t0 = Instant::now();
+        let (_, rx) = self.submit_inner(artifact.into(), inputs, deadline);
+        let resp = match deadline {
+            None => rx.recv().map_err(|_| ServiceError::WorkerGone)?,
+            Some(d) => {
+                let timeout = d.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(timeout) {
+                    Ok(r) => r,
+                    Err(RecvTimeoutError::Timeout) => {
+                        return Err(ServiceError::DeadlineExceeded {
+                            waited_seconds: t0.elapsed().as_secs_f64(),
+                        })
+                    }
+                    Err(RecvTimeoutError::Disconnected) => return Err(ServiceError::WorkerGone),
+                }
+            }
+        };
+        let Response {
+            result,
+            pipe_stats,
+            degraded,
+            ..
+        } = resp;
+        result.map(|outs| (outs, pipe_stats, degraded))
+    }
+
+    /// Graceful shutdown: drain in-flight work, join the worker. Every
+    /// pending receiver resolves — drained requests get their response,
+    /// and if the worker is already dead the dropped reply senders fail
+    /// pending `recv`s immediately instead of hanging.
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Message::Shutdown);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if let Ok(mut inner) = self.inner.lock() {
+            let _ = inner.tx.send(Message::Shutdown);
+            if let Some(h) = inner.worker.take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
 impl Drop for Service {
     fn drop(&mut self) {
-        let _ = self.tx.send(Message::Shutdown);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        self.stop();
+    }
+}
+
+fn spawn_worker(
+    config: &ServiceConfig,
+    metrics: &Arc<Metrics>,
+    faults: &Option<Arc<FaultInjector>>,
+) -> std::io::Result<(Sender<Message>, JoinHandle<()>)> {
+    let (tx, rx) = channel::<Message>();
+    let config = config.clone();
+    let metrics = metrics.clone();
+    let faults = faults.clone();
+    let worker = std::thread::Builder::new()
+        .name("gdrk-device-worker".into())
+        .spawn(move || worker_loop(rx, config, metrics, faults))?;
+    Ok((tx, worker))
+}
+
+/// The cost model's drain estimate for `queued_bytes` of queued work:
+/// observed throughput (processed bytes over execution seconds) when
+/// there is history, else a conservative default.
+fn estimated_wait_seconds(metrics: &Metrics, queued_bytes: u64) -> f64 {
+    let processed = Metrics::get(&metrics.processed_bytes) as f64;
+    let secs = metrics.exec_latency.total_seconds();
+    let bps = if processed > 0.0 && secs > 1e-6 {
+        processed / secs
+    } else {
+        DEFAULT_THROUGHPUT_BPS
+    };
+    queued_bytes as f64 / bps.max(1.0)
+}
+
+/// Price a request for admission control: the cost model's modeled
+/// full-size bytes for the artifact's op (or whole `pipe:` chain) on
+/// the request's input geometry. Unknown artifacts and compute-only
+/// names fall back to twice the input payload (one read + one write);
+/// everything prices at least 1 byte so depth accounting stays sound.
+fn estimate_request_bytes(artifact: &str, inputs: &[Tensor]) -> u64 {
+    let payload: u64 = inputs.iter().map(|t| t.as_bytes().len() as u64).sum();
+    let fallback = payload.saturating_mul(2).max(1);
+    let Some(first) = inputs.first() else {
+        return 1;
+    };
+    let dims = first.shape().dims().to_vec();
+    let dtype = first.dtype();
+    if artifact.starts_with("pipe:") {
+        if let Some(pipe) = crate::hostexec::pipeline_for_artifact(artifact) {
+            let ctx = crate::pipeline::cost::ChainCtx::new(dims, inputs.len(), dtype);
+            if let Some(est) = crate::pipeline::cost::chain_estimate(pipe.stages(), &ctx) {
+                return est.est.total_bytes().max(1);
+            }
+        }
+        return fallback;
+    }
+    if let Some(op) = crate::hostexec::op_for_artifact(artifact) {
+        if op.arity() == inputs.len() {
+            if let Ok(est) = op.traffic_estimate(&dims, dtype) {
+                return est.total_bytes().max(1);
+            }
         }
     }
+    fallback
 }
 
 /// The executor the worker thread owns (resolved from the config's
@@ -190,18 +488,16 @@ enum Executor {
 }
 
 impl Executor {
-    fn host(mode: ExecBackend, artifacts_dir: &std::path::Path) -> Executor {
+    fn host(mode: ExecBackend, artifacts_dir: &std::path::Path, metrics: &Metrics) -> Executor {
         let manifest = match Manifest::load(artifacts_dir) {
             Ok(m) => Some(m),
             // No manifest at all is the normal bare-checkout case.
-            Err(ManifestError::Io { ref source, .. })
-                if source.kind() == std::io::ErrorKind::NotFound =>
-            {
-                None
-            }
-            // A present-but-unusable manifest (unreadable, unknown
-            // dtype, bad format) is surfaced, not silently ignored.
+            Err(e) if e.is_missing() => None,
+            // A present-but-unusable (corrupt, unreadable, unknown
+            // dtype) manifest is surfaced and counted, then degraded
+            // around: the service keeps answering, without validation.
             Err(e) => {
+                Metrics::inc(&metrics.manifest_errors);
                 eprintln!("gdrk: artifact manifest unusable ({e}); serving without validation");
                 None
             }
@@ -209,10 +505,10 @@ impl Executor {
         Executor::Host { mode, manifest }
     }
 
-    fn resolve(config: &ServiceConfig) -> Executor {
+    fn resolve(config: &ServiceConfig, metrics: &Metrics) -> Executor {
         match config.backend {
-            Backend::Naive => Executor::host(ExecBackend::Naive, &config.artifacts_dir),
-            Backend::HostExec => Executor::host(ExecBackend::Host, &config.artifacts_dir),
+            Backend::Naive => Executor::host(ExecBackend::Naive, &config.artifacts_dir, metrics),
+            Backend::HostExec => Executor::host(ExecBackend::Host, &config.artifacts_dir, metrics),
             Backend::Pjrt => {
                 if !Runtime::pjrt_available() {
                     return Executor::Failed(
@@ -234,7 +530,7 @@ impl Executor {
                     "gdrk: PJRT unavailable (feature or artifacts missing); \
                      serving on the hostexec backend"
                 );
-                Executor::host(ExecBackend::Host, &config.artifacts_dir)
+                Executor::host(ExecBackend::Host, &config.artifacts_dir, metrics)
             }
         }
     }
@@ -263,30 +559,145 @@ impl Executor {
             Executor::Failed(_) => {}
         }
     }
+}
 
-    fn execute(
-        &self,
-        artifact: &str,
-        inputs: &[Tensor],
-    ) -> Result<(Vec<Tensor>, Option<PipeStats>), String> {
-        match self {
-            Executor::Pjrt(rt) => {
-                if artifact.starts_with("pipe:") {
-                    // Pipelines lower to host execution on every backend
-                    // until device-side fusion lands (ROADMAP follow-up),
-                    // so the same composite request works regardless of
-                    // which executor Auto resolved to.
-                    return host_execute(ExecBackend::Host, artifact, inputs, None);
-                }
-                rt.execute(artifact, inputs)
-                    .map(|outs| (outs, None))
-                    .map_err(|e| e.to_string())
+type RungResult = Result<(Vec<Tensor>, Option<PipeStats>), String>;
+type LadderResult = Result<(Vec<Tensor>, Option<PipeStats>), ServiceError>;
+/// One rung of the degradation ladder: (name recorded in
+/// [`Response::degraded`], fault-injection site, the attempt).
+type Rung<'a> = (&'static str, &'static str, Box<dyn FnOnce() -> RungResult + 'a>);
+
+/// Build the degradation ladder for one request on this executor, top
+/// rung first. Every rung is bit-identical to the golden references by
+/// the property-test invariants, so falling down the ladder trades
+/// only speed, never correctness.
+fn rungs_for<'a>(
+    exec: &'a Executor,
+    artifact: &'a str,
+    inputs: &'a [Tensor],
+) -> Result<Vec<Rung<'a>>, String> {
+    let mut rungs: Vec<Rung<'a>> = Vec::new();
+    match exec {
+        Executor::Failed(msg) => return Err(msg.clone()),
+        Executor::Pjrt(rt) => {
+            // Pipelines lower to host execution on every backend until
+            // device-side fusion lands (ROADMAP follow-up), so `pipe:`
+            // requests start at the host rung directly.
+            if !artifact.starts_with("pipe:") {
+                rungs.push((
+                    "pjrt",
+                    site::RUNG_PJRT,
+                    Box::new(move || {
+                        rt.execute(artifact, inputs)
+                            .map(|outs| (outs, None))
+                            .map_err(|e| e.to_string())
+                    }),
+                ));
             }
-            Executor::Host { mode, manifest } => {
-                host_execute(*mode, artifact, inputs, manifest.as_ref())
-            }
-            Executor::Failed(msg) => Err(msg.clone()),
+            push_host_rungs(&mut rungs, artifact, inputs, None);
         }
+        Executor::Host { mode, manifest } => match mode {
+            ExecBackend::Host => push_host_rungs(&mut rungs, artifact, inputs, manifest.as_ref()),
+            ExecBackend::Naive => rungs.push((
+                "naive",
+                site::RUNG_NAIVE,
+                Box::new(move || {
+                    host_execute(ExecBackend::Naive, artifact, inputs, manifest.as_ref())
+                }),
+            )),
+        },
+    }
+    Ok(rungs)
+}
+
+fn push_host_rungs<'a>(
+    rungs: &mut Vec<Rung<'a>>,
+    artifact: &'a str,
+    inputs: &'a [Tensor],
+    manifest: Option<&'a Manifest>,
+) {
+    rungs.push((
+        "host",
+        site::RUNG_HOST,
+        Box::new(move || host_execute(ExecBackend::Host, artifact, inputs, manifest)),
+    ));
+    if artifact.starts_with("pipe:") {
+        // Fused chain failed? Re-dispatch the same rewritten pipeline
+        // with fusion disabled before giving up on the fast backend.
+        rungs.push((
+            "host_unfused",
+            site::RUNG_HOST_UNFUSED,
+            Box::new(move || host_execute_unfused(artifact, inputs, manifest)),
+        ));
+    }
+    rungs.push((
+        "naive",
+        site::RUNG_NAIVE,
+        Box::new(move || host_execute(ExecBackend::Naive, artifact, inputs, manifest)),
+    ));
+}
+
+/// Run the ladder under panic isolation: each rung executes inside
+/// `catch_unwind`, a panicking or failing rung falls through to the
+/// next, and the outcome is the first success or the last rung's typed
+/// error. Returns the result plus the fallback rungs attempted after
+/// the first failure (what [`Response::degraded`] reports).
+fn run_ladder(
+    exec: &Executor,
+    req: &Request,
+    faults: Option<&FaultInjector>,
+    metrics: &Metrics,
+) -> (LadderResult, Vec<&'static str>) {
+    let rungs = match rungs_for(exec, &req.artifact, &req.inputs) {
+        Ok(r) => r,
+        Err(msg) => return (Err(ServiceError::Exec(msg)), Vec::new()),
+    };
+    // Dispatch-site fault: a panic here fails the request as a whole
+    // (recovered + typed); the rung sites below degrade instead.
+    if let Some(fi) = faults {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| fi.fire(site::EXEC))) {
+            Metrics::inc(&metrics.panics_recovered);
+            return (Err(ServiceError::Panicked(panic_message(payload))), Vec::new());
+        }
+    }
+    let mut degraded: Vec<&'static str> = Vec::new();
+    let mut last_err: Option<ServiceError> = None;
+    for (name, site_name, attempt) in rungs {
+        if last_err.is_some() {
+            degraded.push(name);
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(fi) = faults {
+                fi.fire(site_name);
+            }
+            attempt()
+        }));
+        match outcome {
+            Ok(Ok(ok)) => {
+                if !degraded.is_empty() {
+                    Metrics::inc(&metrics.degraded);
+                }
+                return (Ok(ok), degraded);
+            }
+            Ok(Err(msg)) => last_err = Some(ServiceError::Exec(msg)),
+            Err(payload) => {
+                Metrics::inc(&metrics.panics_recovered);
+                last_err = Some(ServiceError::Panicked(panic_message(payload)));
+            }
+        }
+    }
+    let err = last_err.unwrap_or_else(|| ServiceError::Exec("no execution rung available".into()));
+    (Err(err), degraded)
+}
+
+/// Render a `catch_unwind` payload (panics carry `&str` or `String`).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -307,7 +718,7 @@ fn host_execute(
     artifact: &str,
     inputs: &[Tensor],
     manifest: Option<&Manifest>,
-) -> Result<(Vec<Tensor>, Option<PipeStats>), String> {
+) -> RungResult {
     if let Some(m) = manifest {
         if let Some(entry) = m.get(artifact) {
             crate::runtime::validate_inputs_against(entry, artifact, inputs)
@@ -316,9 +727,7 @@ fn host_execute(
     }
     let bufs: Vec<&TensorBuf> = inputs.iter().collect();
     if artifact.starts_with("pipe:") {
-        let pipe = crate::hostexec::pipeline_for_artifact(artifact).ok_or_else(|| {
-            format!("unknown pipeline '{artifact}' (expected pipe:<artifact>+<artifact>+...)")
-        })?;
+        let pipe = resolve_pipeline(artifact)?;
         return pipe
             .dispatch_buf_with_stats(&bufs, mode)
             .map(|(outs, stats)| (outs, Some(stats)))
@@ -332,71 +741,164 @@ fn host_execute(
         .map_err(|e| e.to_string())
 }
 
+/// The fusion-disabled host rung for `pipe:` chains: same manifest
+/// validation and rewrite pass, but every stage runs as its own pass
+/// ([`crate::pipeline::Pipeline::dispatch_buf_unfused_with_stats`]).
+fn host_execute_unfused(
+    artifact: &str,
+    inputs: &[Tensor],
+    manifest: Option<&Manifest>,
+) -> RungResult {
+    if let Some(m) = manifest {
+        if let Some(entry) = m.get(artifact) {
+            crate::runtime::validate_inputs_against(entry, artifact, inputs)
+                .map_err(|e| e.to_string())?;
+        }
+    }
+    let bufs: Vec<&TensorBuf> = inputs.iter().collect();
+    let pipe = resolve_pipeline(artifact)?;
+    pipe.dispatch_buf_unfused_with_stats(&bufs)
+        .map(|(outs, stats)| (outs, Some(stats)))
+        .map_err(|e| e.to_string())
+}
+
+fn resolve_pipeline(artifact: &str) -> Result<crate::pipeline::Pipeline, String> {
+    crate::hostexec::pipeline_for_artifact(artifact).ok_or_else(|| {
+        format!("unknown pipeline '{artifact}' (expected pipe:<artifact>+<artifact>+...)")
+    })
+}
+
 fn worker_loop(
-    rx: std::sync::mpsc::Receiver<Message>,
+    rx: Receiver<Message>,
     config: ServiceConfig,
     metrics: Arc<Metrics>,
+    faults: Option<Arc<FaultInjector>>,
 ) {
     // The worker owns the executor (the PJRT runtime is not Send).
-    let exec = Executor::resolve(&config);
+    let exec = Executor::resolve(&config, &metrics);
     exec.preload(&config.preload);
 
-    let mut batcher = Batcher::new(config.max_batch);
-    let mut replies: std::collections::HashMap<RequestId, Sender<Response>> =
-        std::collections::HashMap::new();
+    let mut batcher = Batcher::with_capacity(config.max_batch, config.max_queue_depth.max(1));
+    let mut replies: HashMap<RequestId, Sender<Response>> = HashMap::new();
     'main: loop {
         // Block for one message, then opportunistically drain the queue
         // so the batcher sees everything waiting.
         match rx.recv() {
             Ok(Message::Work(req, reply)) => {
-                replies.insert(req.id, reply);
-                batcher.push(req);
+                enqueue(req, reply, &mut batcher, &mut replies, &metrics)
             }
             Ok(Message::Shutdown) | Err(_) => break 'main,
         }
         loop {
             match rx.try_recv() {
                 Ok(Message::Work(req, reply)) => {
-                    replies.insert(req.id, reply);
-                    batcher.push(req);
+                    enqueue(req, reply, &mut batcher, &mut replies, &metrics)
                 }
                 Ok(Message::Shutdown) => {
-                    drain(&exec, &mut batcher, &mut replies, &metrics);
+                    drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref());
                     break 'main;
                 }
                 Err(_) => break,
             }
         }
-        drain(&exec, &mut batcher, &mut replies, &metrics);
+        // The worker-kill site fires *outside* any catch_unwind: a hit
+        // here is a real thread death, exercising the supervisor.
+        if let Some(fi) = &faults {
+            fi.fire(site::WORKER);
+        }
+        drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref());
     }
-    drain(&exec, &mut batcher, &mut replies, &metrics);
+    drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref());
+}
+
+/// Worker-side enqueue: the bounded batcher is the second line of
+/// defense behind leader-side admission — a refused push answers
+/// `Overloaded` instead of growing the queue.
+fn enqueue(
+    req: Request,
+    reply: Sender<Response>,
+    batcher: &mut Batcher,
+    replies: &mut HashMap<RequestId, Sender<Response>>,
+    metrics: &Metrics,
+) {
+    let id = req.id;
+    replies.insert(id, reply);
+    if let Err(req) = batcher.push(req) {
+        Metrics::inc(&metrics.shed);
+        Metrics::sub(&metrics.queued_bytes, req.cost_bytes);
+        Metrics::sub(&metrics.queued_depth, 1);
+        if let Some(reply) = replies.remove(&id) {
+            let _ = reply.send(Response::rejection(
+                id,
+                &req.artifact,
+                ServiceError::Overloaded {
+                    queued_bytes: Metrics::get(&metrics.queued_bytes),
+                    estimated_wait_seconds: estimated_wait_seconds(
+                        metrics,
+                        Metrics::get(&metrics.queued_bytes),
+                    ),
+                },
+            ));
+        }
+    }
+}
+
+fn expire(req: Request, replies: &mut HashMap<RequestId, Sender<Response>>, metrics: &Metrics) {
+    Metrics::inc(&metrics.expired);
+    if let Some(reply) = replies.remove(&req.id) {
+        let waited_seconds = req.enqueued.elapsed().as_secs_f64();
+        let _ = reply.send(Response::rejection(
+            req.id,
+            &req.artifact,
+            ServiceError::DeadlineExceeded { waited_seconds },
+        ));
+    }
 }
 
 fn drain(
     exec: &Executor,
     batcher: &mut Batcher,
-    replies: &mut std::collections::HashMap<RequestId, Sender<Response>>,
+    replies: &mut HashMap<RequestId, Sender<Response>>,
     metrics: &Metrics,
+    faults: Option<&FaultInjector>,
 ) {
+    // Deadline sweep: expired requests answer typed without burning a
+    // worker pass.
+    let now = Instant::now();
+    for req in batcher.take_expired(now) {
+        Metrics::sub(&metrics.queued_bytes, req.cost_bytes);
+        Metrics::sub(&metrics.queued_depth, 1);
+        expire(req, replies, metrics);
+    }
     // Batches group by (artifact, dtypes); each request still names its
     // artifact — the key exists for grouping, not execution.
     while let Some((_key, batch)) = batcher.next_batch() {
         Metrics::inc(&metrics.batches);
         for req in batch {
+            Metrics::sub(&metrics.queued_bytes, req.cost_bytes);
+            Metrics::sub(&metrics.queued_depth, 1);
+            // A deadline can pass between the sweep and this turn.
+            if req.expired(Instant::now()) {
+                expire(req, replies, metrics);
+                continue;
+            }
             let queue_seconds = req.enqueued.elapsed().as_secs_f64();
             metrics.queue_latency.record_seconds(queue_seconds);
-            let t0 = std::time::Instant::now();
-            let outcome = exec.execute(&req.artifact, &req.inputs);
+            let t0 = Instant::now();
+            let (outcome, degraded) = run_ladder(exec, &req, faults, metrics);
             let exec_seconds = t0.elapsed().as_secs_f64();
             metrics.exec_latency.record_seconds(exec_seconds);
             let (result, pipe_stats) = match outcome {
-                Ok((tensors, stats)) => (Ok(tensors), stats),
-                Err(e) => (Err(e), None),
+                Ok((tensors, stats)) => {
+                    Metrics::inc(&metrics.completed);
+                    Metrics::add(&metrics.processed_bytes, req.cost_bytes);
+                    (Ok(tensors), stats)
+                }
+                Err(e) => {
+                    Metrics::inc(&metrics.failed);
+                    (Err(e), None)
+                }
             };
-            match &result {
-                Ok(_) => Metrics::inc(&metrics.completed),
-                Err(_) => Metrics::inc(&metrics.failed),
-            }
             if let Some(reply) = replies.remove(&req.id) {
                 let _ = reply.send(Response {
                     id: req.id,
@@ -405,6 +907,7 @@ fn drain(
                     queue_seconds,
                     exec_seconds,
                     pipe_stats,
+                    degraded,
                 });
             }
         }
@@ -413,4 +916,6 @@ fn drain(
 
 // PJRT integration coverage lives in rust/tests/coordinator_integration.rs
 // (needs artifacts); artifact-free host-backend coverage in
-// rust/tests/hostexec_service.rs.
+// rust/tests/hostexec_service.rs; the fault-tolerant lifecycle (panic
+// isolation, supervision, deadlines, shedding, degradation) in
+// rust/tests/chaos_service.rs.

@@ -1,0 +1,346 @@
+//! Deterministic fault injection for the request lifecycle.
+//!
+//! Off by default: a [`FaultInjector`] only exists when
+//! [`ServiceConfig::faults`](crate::coordinator::ServiceConfig) carries
+//! a [`FaultConfig`], so production paths pay one `Option` check. When
+//! armed, the injector is consulted at **named sites** along the
+//! coordinator's execution path (see [`site`]) and rolls a seeded
+//! xorshift generator ([`crate::util::rng::Rng`]) to decide, per visit,
+//! whether to inject a panic, a delay, or nothing. The same seed and
+//! the same visit order reproduce the same fault sequence — the chaos
+//! property test (`rust/tests/chaos_service.rs`) relies on this to be
+//! a regression test rather than a flake generator.
+//!
+//! Three fault classes:
+//! * **panics** — `panic!` with a recognizable `"gdrk injected panic"`
+//!   payload, exercising the worker's `catch_unwind` isolation and the
+//!   degradation ladder;
+//! * **delays** — bounded sleeps, exercising deadline expiry and
+//!   queue-depth shedding under load;
+//! * **corruption** — [`write_corrupt_manifest`] writes a seeded,
+//!   syntactically broken `artifacts/manifest.json`, exercising the
+//!   executor's manifest-unusable downgrade path.
+//!
+//! The config parses from the `GDRK_FAULTS` environment spec
+//! ([`FaultConfig::from_env`]) so CI's chaos lane can arm a build
+//! without code changes: `seed=1337,panic=0.15,delay=0.10,delay_ms=2`.
+
+use crate::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Named injection sites along the request lifecycle. Site names are
+/// part of the harness contract: tests and the `GDRK_FAULTS` `sites=`
+/// filter refer to them by string.
+pub mod site {
+    /// Per-request dispatch, before the degradation ladder runs.
+    pub const EXEC: &str = "exec";
+    /// The PJRT rung of the ladder.
+    pub const RUNG_PJRT: &str = "rung:pjrt";
+    /// The fused host rung of the ladder.
+    pub const RUNG_HOST: &str = "rung:host";
+    /// The fusion-disabled host rung (`pipe:` requests only).
+    pub const RUNG_HOST_UNFUSED: &str = "rung:host_unfused";
+    /// The naive golden-reference rung (last resort).
+    pub const RUNG_NAIVE: &str = "rung:naive";
+    /// The worker loop itself, *outside* `catch_unwind` — a hit here
+    /// kills the worker thread and exercises the supervisor restart.
+    pub const WORKER: &str = "worker";
+}
+
+/// What the injector decided for one site visit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Proceed normally.
+    None,
+    /// Panic with the injected-fault payload.
+    Panic,
+    /// Sleep for the configured delay, then proceed.
+    Delay(Duration),
+}
+
+/// Seeded fault plan. All rates are probabilities in `[0, 1]` rolled
+/// independently per site visit (panic first, then delay).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Seed for the injector's deterministic generator.
+    pub seed: u64,
+    /// Probability a visited site panics.
+    pub panic_rate: f64,
+    /// Probability a visited site sleeps for `delay_ms`.
+    pub delay_rate: f64,
+    /// Injected delay length, milliseconds.
+    pub delay_ms: u64,
+    /// Restrict injection to these sites (`None` = every site except
+    /// [`site::WORKER`], which must always be opted into explicitly —
+    /// killing the worker is a different experiment than failing a
+    /// request).
+    pub sites: Option<Vec<String>>,
+    /// Kill the worker thread (panic outside `catch_unwind`) on every
+    /// Nth visit to [`site::WORKER`]. `None` = never.
+    pub kill_worker_every: Option<u64>,
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig {
+            seed: 0xFA117,
+            panic_rate: 0.0,
+            delay_rate: 0.0,
+            delay_ms: 1,
+            sites: None,
+            kill_worker_every: None,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Parse the `GDRK_FAULTS` spec: comma-separated `key=value` pairs
+    /// (`seed`, `panic`, `delay`, `delay_ms`, `kill_worker_every`, and
+    /// `sites` as a `;`-separated site list). Unknown keys are
+    /// rejected so a typo in a CI lane fails loudly instead of running
+    /// a no-fault chaos test.
+    pub fn parse(spec: &str) -> Result<FaultConfig, String> {
+        let mut cfg = FaultConfig::default();
+        for pair in spec.split(',').filter(|s| !s.is_empty()) {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec '{pair}' is not key=value"))?;
+            let bad = |what: &str| format!("fault spec {k}={v}: bad {what}");
+            match k {
+                "seed" => cfg.seed = v.parse().map_err(|_| bad("u64"))?,
+                "panic" => cfg.panic_rate = v.parse().map_err(|_| bad("rate"))?,
+                "delay" => cfg.delay_rate = v.parse().map_err(|_| bad("rate"))?,
+                "delay_ms" => cfg.delay_ms = v.parse().map_err(|_| bad("u64"))?,
+                "kill_worker_every" => {
+                    cfg.kill_worker_every = Some(v.parse().map_err(|_| bad("u64"))?)
+                }
+                "sites" => cfg.sites = Some(v.split(';').map(str::to_string).collect()),
+                _ => return Err(format!("unknown fault spec key '{k}'")),
+            }
+        }
+        if !(0.0..=1.0).contains(&cfg.panic_rate) || !(0.0..=1.0).contains(&cfg.delay_rate) {
+            return Err("fault rates must be in [0, 1]".into());
+        }
+        Ok(cfg)
+    }
+
+    /// [`FaultConfig::parse`] of `$GDRK_FAULTS`; `None` when unset. A
+    /// malformed spec is an `Err`, not a silent no-op.
+    pub fn from_env() -> Result<Option<FaultConfig>, String> {
+        match std::env::var("GDRK_FAULTS") {
+            Ok(spec) => FaultConfig::parse(&spec).map(Some),
+            Err(_) => Ok(None),
+        }
+    }
+}
+
+/// The armed injector: config + seeded generator + visit counters.
+/// `Sync` (the worker and the supervisor both hold it through an
+/// `Arc`); the mutex is uncontended in practice — one worker thread
+/// visits sites.
+#[derive(Debug)]
+pub struct FaultInjector {
+    cfg: FaultConfig,
+    state: Mutex<InjectorState>,
+}
+
+#[derive(Debug)]
+struct InjectorState {
+    rng: Rng,
+    worker_visits: u64,
+    injected_panics: u64,
+    injected_delays: u64,
+}
+
+/// The panic payload every injected panic carries; the chaos test
+/// asserts surviving error messages never leak a raw worker death.
+pub const INJECTED_PANIC_MSG: &str = "gdrk injected panic";
+
+impl FaultInjector {
+    pub fn new(cfg: FaultConfig) -> FaultInjector {
+        let rng = Rng::new(cfg.seed);
+        FaultInjector {
+            cfg,
+            state: Mutex::new(InjectorState {
+                rng,
+                worker_visits: 0,
+                injected_panics: 0,
+                injected_delays: 0,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &FaultConfig {
+        &self.cfg
+    }
+
+    fn site_armed(&self, site_name: &str) -> bool {
+        match &self.cfg.sites {
+            Some(list) => list.iter().any(|s| s == site_name),
+            // WORKER is opt-in only: it kills the thread, not a request.
+            None => site_name != site::WORKER,
+        }
+    }
+
+    /// Roll the dice for one visit of `site_name`. Does **not** apply
+    /// the action — callers that need to observe the decision (tests)
+    /// use this; execution paths use [`FaultInjector::fire`].
+    pub fn at(&self, site_name: &str) -> FaultAction {
+        if !self.site_armed(site_name) {
+            return FaultAction::None;
+        }
+        let mut st = self.state.lock().expect("injector lock");
+        if site_name == site::WORKER {
+            st.worker_visits += 1;
+            if let Some(n) = self.cfg.kill_worker_every {
+                if n > 0 && st.worker_visits % n == 0 {
+                    st.injected_panics += 1;
+                    return FaultAction::Panic;
+                }
+            }
+            return FaultAction::None;
+        }
+        // Panic roll first, then delay — one action per visit, fixed
+        // order so the sequence is a pure function of (seed, visits).
+        if self.cfg.panic_rate > 0.0 && st.rng.gen_f64() < self.cfg.panic_rate {
+            st.injected_panics += 1;
+            return FaultAction::Panic;
+        }
+        if self.cfg.delay_rate > 0.0 && st.rng.gen_f64() < self.cfg.delay_rate {
+            st.injected_delays += 1;
+            return FaultAction::Delay(Duration::from_millis(self.cfg.delay_ms));
+        }
+        FaultAction::None
+    }
+
+    /// Visit a site and apply the decision: sleep on `Delay`, `panic!`
+    /// on `Panic` (with [`INJECTED_PANIC_MSG`] naming the site).
+    pub fn fire(&self, site_name: &str) {
+        match self.at(site_name) {
+            FaultAction::None => {}
+            FaultAction::Delay(d) => std::thread::sleep(d),
+            FaultAction::Panic => panic!("{INJECTED_PANIC_MSG} at {site_name}"),
+        }
+    }
+
+    /// (injected panics, injected delays) so far — test observability.
+    pub fn injected(&self) -> (u64, u64) {
+        let st = self.state.lock().expect("injector lock");
+        (st.injected_panics, st.injected_delays)
+    }
+}
+
+/// Write a seeded, deliberately corrupt `manifest.json` under `dir`
+/// (creating the directory), returning the path. The corruption is
+/// structural — truncated JSON with a garbled byte run — so
+/// [`Manifest::load`](crate::runtime::artifact::Manifest::load) fails
+/// with a parse error, never an I/O `NotFound`: exactly the
+/// present-but-unusable case the executor must downgrade around.
+pub fn write_corrupt_manifest(dir: &Path, seed: u64) -> std::io::Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let mut rng = Rng::new(seed);
+    let mut text = String::from("{\"format\": 1, \"entries\": [{\"name\": \"copy_4m\", ");
+    for _ in 0..64 {
+        // Printable garbage, no closing braces: guaranteed parse error.
+        text.push((b'#' + (rng.gen_range(58)) as u8) as char);
+    }
+    let path = dir.join("manifest.json");
+    std::fs::write(&path, text)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_ci_spec() {
+        let cfg = FaultConfig::parse("seed=1337,panic=0.15,delay=0.10,delay_ms=2").unwrap();
+        assert_eq!(cfg.seed, 1337);
+        assert_eq!(cfg.panic_rate, 0.15);
+        assert_eq!(cfg.delay_rate, 0.10);
+        assert_eq!(cfg.delay_ms, 2);
+        assert_eq!(cfg.sites, None);
+        assert_eq!(cfg.kill_worker_every, None);
+    }
+
+    #[test]
+    fn parse_rejects_typos_and_bad_rates() {
+        assert!(FaultConfig::parse("panics=0.5").is_err());
+        assert!(FaultConfig::parse("panic=1.5").is_err());
+        assert!(FaultConfig::parse("panic").is_err());
+        assert!(FaultConfig::parse("seed=x").is_err());
+        // Empty spec is the default (armed, but injecting nothing).
+        assert_eq!(FaultConfig::parse("").unwrap(), FaultConfig::default());
+    }
+
+    #[test]
+    fn parse_site_filter_and_kill() {
+        let cfg = FaultConfig::parse("panic=1.0,sites=rung:host;exec,kill_worker_every=3").unwrap();
+        assert_eq!(
+            cfg.sites.as_deref(),
+            Some(&["rung:host".to_string(), "exec".to_string()][..])
+        );
+        assert_eq!(cfg.kill_worker_every, Some(3));
+        let inj = FaultInjector::new(cfg);
+        assert_eq!(inj.at(site::RUNG_NAIVE), FaultAction::None);
+        assert_eq!(inj.at(site::RUNG_HOST), FaultAction::Panic);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed() {
+        let cfg = FaultConfig {
+            panic_rate: 0.3,
+            delay_rate: 0.3,
+            ..Default::default()
+        };
+        let a = FaultInjector::new(cfg.clone());
+        let b = FaultInjector::new(cfg);
+        let seq_a: Vec<FaultAction> = (0..200).map(|_| a.at(site::EXEC)).collect();
+        let seq_b: Vec<FaultAction> = (0..200).map(|_| b.at(site::EXEC)).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(seq_a.iter().any(|x| *x == FaultAction::Panic));
+        assert!(seq_a.iter().any(|x| matches!(x, FaultAction::Delay(_))));
+        assert_eq!(a.injected(), b.injected());
+    }
+
+    #[test]
+    fn worker_site_is_opt_in_and_periodic() {
+        // Without a kill period, WORKER never fires even at panic=1.
+        let inj = FaultInjector::new(FaultConfig {
+            panic_rate: 1.0,
+            ..Default::default()
+        });
+        assert_eq!(inj.at(site::WORKER), FaultAction::None);
+        // With a period, exactly every Nth visit panics.
+        let inj = FaultInjector::new(FaultConfig {
+            kill_worker_every: Some(3),
+            ..Default::default()
+        });
+        let hits: Vec<bool> = (0..9)
+            .map(|_| inj.at(site::WORKER) == FaultAction::Panic)
+            .collect();
+        assert_eq!(
+            hits,
+            vec![false, false, true, false, false, true, false, false, true]
+        );
+    }
+
+    #[test]
+    fn corrupt_manifest_is_unusable_not_missing() {
+        let dir = std::env::temp_dir().join("gdrk-faultinject-test");
+        let path = write_corrupt_manifest(&dir, 7).expect("write");
+        assert!(path.exists());
+        let err = crate::runtime::artifact::Manifest::load(&dir)
+            .expect_err("corrupt manifest must not parse");
+        // Parse/malformed error, not NotFound: the executor's
+        // present-but-unusable downgrade path, not the bare-checkout one.
+        assert!(!matches!(
+            err,
+            crate::runtime::artifact::ManifestError::Io { .. }
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

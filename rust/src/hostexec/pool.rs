@@ -53,6 +53,15 @@ pub fn effective_threads_bytes(threads: usize, total_bytes: usize, items: usize)
 
 /// Run `f(item)` for every item in `0..items`, striding the index space
 /// over at most `threads` scoped workers. `threads <= 1` runs inline.
+///
+/// Panic behavior: `std::thread::scope` joins every worker before
+/// returning and re-raises a worker's panic on the calling thread. That
+/// containment is what the coordinator's fault tolerance builds on —
+/// the service wraps each execution rung in `catch_unwind`, so a panic
+/// anywhere inside a parallel region surfaces there as a recoverable
+/// typed error instead of a detached-thread death (see
+/// `coordinator::service` and the `worker_panic_propagates_to_caller`
+/// test below).
 pub fn run_indexed<F: Fn(usize) + Sync>(threads: usize, items: usize, f: F) {
     let t = threads.max(1).min(items.max(1));
     if t <= 1 {
@@ -149,6 +158,29 @@ mod tests {
     #[test]
     fn run_indexed_zero_items() {
         run_indexed(4, 0, |_| panic!("no items to run"));
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        // A panic on a scoped worker must re-raise on the caller, where
+        // the coordinator's per-rung `catch_unwind` can contain it.
+        let caught = std::panic::catch_unwind(|| {
+            run_indexed(4, 64, |i| {
+                if i == 13 {
+                    panic!("injected worker panic");
+                }
+            });
+        });
+        assert!(caught.is_err(), "worker panic must not be swallowed");
+        // Inline path (threads <= 1) panics on the caller directly.
+        let caught = std::panic::catch_unwind(|| {
+            run_indexed(1, 4, |i| {
+                if i == 2 {
+                    panic!("injected inline panic");
+                }
+            });
+        });
+        assert!(caught.is_err());
     }
 
     #[test]

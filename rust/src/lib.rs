@@ -21,6 +21,7 @@
 
 pub mod tensor;
 pub mod ops;
+pub mod faultinject;
 pub mod hostexec;
 pub mod pipeline;
 pub mod planner;

@@ -181,6 +181,7 @@ fn cmd_serve(args: &cli::Args) -> i32 {
         max_batch: 8,
         preload: vec!["permute3d_o102".into(), "interlace_n4".into()],
         backend,
+        ..ServiceConfig::default()
     }) {
         Ok(s) => s,
         Err(e) => {

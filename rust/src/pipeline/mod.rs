@@ -232,6 +232,66 @@ impl Pipeline {
         Ok((outs, stats))
     }
 
+    /// [`Pipeline::execute_with_stats`] with fusion disabled: the same
+    /// rewrite pass, but every rewritten stage runs as its own host
+    /// pass — no rolling-window chains. Bit-identical to the fused path
+    /// by the fusion invariant; the coordinator's degradation ladder
+    /// re-dispatches a failed fused chain through this rung before
+    /// falling all the way back to the naive references.
+    pub fn execute_unfused_with_stats<T: Numeric>(
+        &self,
+        inputs: &[&NdArray<T>],
+    ) -> Result<(Vec<NdArray<T>>, PipeStats), PipelineError> {
+        let ctx = cost::ChainCtx::for_inputs(inputs);
+        let rewritten = rewrite::rewrite_with(&self.stages, self.policy, ctx.as_ref());
+        let segments: Vec<Segment> =
+            rewritten.iter().cloned().map(Segment::Single).collect();
+        let stats = PipeStats {
+            stages_in: self.stages.len(),
+            stages_rewritten: rewritten.len(),
+            estimated_bytes: ctx
+                .as_ref()
+                .and_then(|c| cost::segments_estimate(&segments, c))
+                .unwrap_or(0),
+            ..Default::default()
+        };
+        let outs = run_segments(&segments, inputs, &mut |seg, ins| match seg {
+            Segment::Single(op) => op.execute_fast(ins),
+            Segment::FusedChain(_) => unreachable!("unfused path never fuses"),
+        })?;
+        Ok((outs, stats))
+    }
+
+    /// Dtype-erased twin of [`Pipeline::execute_unfused_with_stats`]
+    /// (same validation as [`Pipeline::dispatch_buf`]; bf16 routes
+    /// through the movement-only path, where nothing fuses anyway).
+    pub fn dispatch_buf_unfused_with_stats(
+        &self,
+        inputs: &[&TensorBuf],
+    ) -> Result<(Vec<TensorBuf>, PipeStats), PipelineError> {
+        let found: Vec<DType> = inputs.iter().map(|b| b.dtype()).collect();
+        let Some(&dt) = found.first() else {
+            return Err(PipelineError::WidthMismatch { stage: 0, width: 0 });
+        };
+        if found.iter().any(|&d| d != dt) {
+            return Err(PipelineError::MixedDtype { found });
+        }
+        match dt {
+            DType::F32 => self
+                .execute_unfused_with_stats(&views::<f32>(inputs))
+                .map(|(o, s)| (erase_all(o), s)),
+            DType::F64 => self
+                .execute_unfused_with_stats(&views::<f64>(inputs))
+                .map(|(o, s)| (erase_all(o), s)),
+            DType::I32 => self
+                .execute_unfused_with_stats(&views::<i32>(inputs))
+                .map(|(o, s)| (erase_all(o), s)),
+            DType::Bf16 => self
+                .dispatch_movement(&views::<u16>(inputs), ExecBackend::Host)
+                .map(|(o, s)| (erase_all(o), s)),
+        }
+    }
+
     /// Execute on the selected backend (mirrors [`Op::dispatch`]).
     pub fn dispatch<T: Numeric>(
         &self,
@@ -601,6 +661,36 @@ mod tests {
         assert_eq!(got, want, "composition must stay bit-identical");
         assert_eq!(stats.stages_in, 3);
         assert_eq!(stats.stages_rewritten, 1);
+        assert_eq!(stats.fused_chains, 0);
+    }
+
+    #[test]
+    fn unfused_dispatch_is_bit_identical_with_no_chains() {
+        let mut rng = Rng::new(0x57ED);
+        let x = NdArray::random(Shape::new(&[40, 40]), &mut rng);
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 0.5 };
+        let p = Pipeline::new(vec![
+            Op::Stencil { spec: spec.clone() },
+            Op::Stencil { spec: spec.clone() },
+            Op::Stencil { spec },
+        ])
+        .unwrap();
+        let want = p.reference(&[&x]).unwrap();
+        let (fused, fstats) = p.execute_with_stats(&[&x]).unwrap();
+        let (unfused, ustats) = p.execute_unfused_with_stats(&[&x]).unwrap();
+        assert_eq!(unfused, want, "unfused rung must stay bit-identical");
+        assert_eq!(unfused, fused);
+        assert_eq!(fstats.fused_chains, 1);
+        assert_eq!(ustats.fused_chains, 0);
+        assert_eq!(ustats.fused_traffic_bytes, 0);
+        assert_eq!(ustats.stages_rewritten, fstats.stages_rewritten);
+        // The model prices the unfused plan strictly above the fused one.
+        assert!(ustats.estimated_bytes > fstats.estimated_bytes);
+
+        // Erased twin: same result, dtype preserved.
+        let xb = TensorBuf::F32(x.clone());
+        let (outs, stats) = p.dispatch_buf_unfused_with_stats(&[&xb]).unwrap();
+        assert_eq!(outs[0].as_f32().unwrap(), &want[0]);
         assert_eq!(stats.fused_chains, 0);
     }
 

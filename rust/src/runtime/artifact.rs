@@ -63,6 +63,21 @@ pub enum ManifestError {
     UnsupportedDtype { dtype: String },
 }
 
+impl ManifestError {
+    /// True when the manifest simply isn't there (a bare checkout) as
+    /// opposed to present but unusable (corrupt JSON, unknown format,
+    /// unreadable file). The coordinator's executor branches on this:
+    /// *missing* is the normal artifact-free case and stays silent,
+    /// *unusable* is surfaced and counted (`Metrics::manifest_errors`)
+    /// before the service degrades to serving without validation.
+    pub fn is_missing(&self) -> bool {
+        matches!(
+            self,
+            ManifestError::Io { source, .. } if source.kind() == std::io::ErrorKind::NotFound
+        )
+    }
+}
+
 fn tensor_spec(v: &Value) -> Result<TensorSpec, ManifestError> {
     let shape = v
         .get("shape")
@@ -255,5 +270,24 @@ mod tests {
             PathBuf::from(".")
         )
         .is_err());
+    }
+
+    #[test]
+    fn is_missing_separates_absent_from_unusable() {
+        // No such directory: the bare-checkout case.
+        let absent = Manifest::load("definitely-not-a-manifest-dir").unwrap_err();
+        assert!(absent.is_missing());
+        // Present but unparseable / malformed / wrong format: unusable.
+        let corrupt = Manifest::parse("{\"format\": 1, \"entries\": [{", PathBuf::from("."))
+            .unwrap_err();
+        assert!(!corrupt.is_missing());
+        let malformed = Manifest::parse("{}", PathBuf::from(".")).unwrap_err();
+        assert!(!malformed.is_missing());
+        let format = Manifest::parse(
+            r#"{"format": 2, "entries": []}"#,
+            PathBuf::from("."),
+        )
+        .unwrap_err();
+        assert!(!format.is_missing());
     }
 }

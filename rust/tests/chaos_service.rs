@@ -1,0 +1,440 @@
+//! Chaos property tests for the fault-tolerant request lifecycle.
+//!
+//! Every test drives the real service through the deterministic fault
+//! injector (`gdrk::faultinject`) and asserts the lifecycle contract:
+//! **every request is answered** — with an output bit-identical to the
+//! naive golden reference, or with a typed `ServiceError` — no hangs,
+//! no silently lost requests, no visible worker deaths.
+//!
+//! The main sweep honours the `GDRK_FAULTS` env spec (CI's chaos lane
+//! sets `seed=1337,panic=0.15,delay=0.10,delay_ms=2`) and falls back to
+//! an equivalent seeded default, so the suite is a chaos test in CI and
+//! a deterministic regression test locally.
+
+use gdrk::coordinator::{Backend, Metrics, Service, ServiceConfig, ServiceError};
+use gdrk::faultinject::{write_corrupt_manifest, FaultConfig, INJECTED_PANIC_MSG};
+use gdrk::ops::ExecBackend;
+use gdrk::runtime::Tensor;
+use gdrk::tensor::{NdArray, Shape, TensorBuf};
+use gdrk::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// How long a single response may take before the test declares a hang.
+/// Generous: injected delays are single-digit milliseconds.
+const ANSWER_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Silence the panic-hook noise of *injected* panics (each would print
+/// a "thread panicked" line); real panics still report through the
+/// previous hook.
+fn quiet_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let payload = info.payload();
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if !msg.contains(INJECTED_PANIC_MSG) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// The chaos fault plan: `GDRK_FAULTS` when set (the CI lane), else a
+/// seeded default with the same shape (panic rate >= 0.10 + delays).
+fn chaos_config() -> FaultConfig {
+    match FaultConfig::from_env() {
+        Ok(Some(cfg)) => cfg,
+        Ok(None) => FaultConfig::parse("seed=1337,panic=0.15,delay=0.10,delay_ms=2")
+            .expect("default chaos spec parses"),
+        Err(e) => panic!("bad GDRK_FAULTS spec: {e}"),
+    }
+}
+
+/// A scratch artifacts dir unique to this test run.
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gdrk-chaos-{tag}-{}", std::process::id()))
+}
+
+fn random_f32(shape: &[usize], seed: u64) -> NdArray<f32> {
+    let mut rng = Rng::new(seed);
+    NdArray::random(Shape::new(shape), &mut rng)
+}
+
+/// The golden answer for an artifact request: the naive reference path,
+/// fault-free, straight through the library (no service involved).
+fn naive_reference(artifact: &str, inputs: &[Tensor]) -> Vec<Tensor> {
+    let bufs: Vec<&TensorBuf> = inputs.iter().collect();
+    if artifact.starts_with("pipe:") {
+        let pipe = gdrk::hostexec::pipeline_for_artifact(artifact).expect("known pipeline");
+        let (outs, _) = pipe
+            .dispatch_buf_with_stats(&bufs, ExecBackend::Naive)
+            .expect("reference pipeline runs");
+        outs
+    } else {
+        let op = gdrk::hostexec::op_for_artifact(artifact).expect("known artifact");
+        op.dispatch_buf(&bufs, ExecBackend::Naive)
+            .expect("reference op runs")
+    }
+}
+
+fn assert_bit_identical(artifact: &str, got: &[Tensor], want: &[Tensor]) {
+    assert_eq!(got.len(), want.len(), "{artifact}: output arity");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.dtype(), w.dtype(), "{artifact}: output dtype");
+        assert_eq!(g.shape(), w.shape(), "{artifact}: output shape");
+        assert_eq!(
+            g.as_bytes(),
+            w.as_bytes(),
+            "{artifact}: degraded/recovered output must be bit-identical to naive"
+        );
+    }
+}
+
+/// The main chaos sweep: seeded panics + delays at every request-path
+/// site, a corrupted manifest under the artifacts dir, hundreds of
+/// mixed single-op and `pipe:` requests. Contract: every response is
+/// either bit-identical to the naive reference or a typed error, the
+/// worker visibly survives (panics recovered, not worker deaths), and
+/// the degradation ladder actually served requests.
+#[test]
+fn chaos_every_request_answers_correct_or_typed() {
+    quiet_injected_panics();
+    let cfg = chaos_config();
+    let kills_armed = cfg.kill_worker_every.is_some();
+    let dir = scratch_dir("sweep");
+    write_corrupt_manifest(&dir, cfg.seed).expect("corrupt manifest written");
+
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: dir.clone(),
+        max_batch: 4,
+        backend: Backend::HostExec,
+        faults: Some(cfg),
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+
+    // Mixed workload: movement, stencil, and fused-chain requests.
+    let workload: Vec<(&str, Vec<Tensor>)> = vec![
+        (
+            "permute3d_o201",
+            vec![Tensor::F32(random_f32(&[8, 12, 16], 0xA1))],
+        ),
+        ("copy_4k", vec![Tensor::F32(random_f32(&[1024], 0xA2))]),
+        ("fd2_64", vec![Tensor::F32(random_f32(&[64, 64], 0xA3))]),
+        (
+            "pipe:smooth3x3_96+smooth3x3_96",
+            vec![Tensor::F32(random_f32(&[96, 96], 0xA4))],
+        ),
+        (
+            "pipe:interlace_n2+deinterlace_n2",
+            vec![
+                Tensor::F32(random_f32(&[256], 0xA5)),
+                Tensor::F32(random_f32(&[256], 0xA6)),
+            ],
+        ),
+    ];
+    let references: Vec<Vec<Tensor>> = workload
+        .iter()
+        .map(|(name, inputs)| naive_reference(name, inputs))
+        .collect();
+
+    const ROUNDS: usize = 120;
+    let mut pending = Vec::new();
+    for round in 0..ROUNDS {
+        let (name, inputs) = &workload[round % workload.len()];
+        let (_, rx) = service.submit(*name, inputs.clone());
+        pending.push((round % workload.len(), rx));
+    }
+
+    let (mut ok, mut typed_errors, mut degraded_served) = (0u64, 0u64, 0u64);
+    for (widx, rx) in pending {
+        let resp = rx
+            .recv_timeout(ANSWER_TIMEOUT)
+            .expect("every request must answer — no hangs, no lost replies");
+        if !resp.degraded.is_empty() && resp.is_ok() {
+            degraded_served += 1;
+        }
+        match resp.result {
+            Ok(outs) => {
+                ok += 1;
+                assert_bit_identical(&resp.artifact, &outs, &references[widx]);
+            }
+            Err(e) => {
+                typed_errors += 1;
+                // Typed and rendered — never a raw channel error.
+                assert!(!e.to_string().is_empty());
+                if let ServiceError::Panicked(msg) = &e {
+                    assert!(msg.contains(INJECTED_PANIC_MSG), "unexpected panic: {msg}");
+                }
+            }
+        }
+    }
+
+    let m = service.metrics();
+    assert_eq!(ok + typed_errors, ROUNDS as u64);
+    assert!(ok > 0, "some requests must succeed under chaos");
+    assert!(
+        Metrics::get(&m.panics_recovered) > 0,
+        "panic injection at >=10% must hit and be recovered"
+    );
+    assert!(
+        degraded_served > 0 && Metrics::get(&m.degraded) > 0,
+        "the ladder must serve some requests on a fallback rung"
+    );
+    assert!(
+        Metrics::get(&m.manifest_errors) > 0,
+        "the corrupted manifest must be counted as unusable"
+    );
+    if !kills_armed {
+        assert_eq!(
+            Metrics::get(&m.worker_restarts),
+            0,
+            "recovered panics must not look like worker deaths"
+        );
+    }
+    service.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Admission control: a slow worker (injected delays) plus a tiny depth
+/// cap forces deterministic shedding; shed requests answer typed
+/// `Overloaded` with a non-negative wait estimate, admitted ones still
+/// answer correctly.
+#[test]
+fn admission_control_sheds_with_typed_overloaded() {
+    quiet_injected_panics();
+    let faults = FaultConfig {
+        seed: 7,
+        delay_rate: 1.0,
+        delay_ms: 20,
+        sites: Some(vec!["exec".into()]),
+        ..FaultConfig::default()
+    };
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch_dir("shed"),
+        max_batch: 2,
+        backend: Backend::HostExec,
+        max_queue_depth: 2,
+        faults: Some(faults),
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+
+    let x = random_f32(&[1024], 0xB0);
+    let want = naive_reference("copy_4k", &[Tensor::F32(x.clone())]);
+    let pending: Vec<_> = (0..30)
+        .map(|_| service.submit("copy_4k", vec![Tensor::F32(x.clone())]).1)
+        .collect();
+
+    let (mut served, mut shed) = (0u64, 0u64);
+    for rx in pending {
+        let resp = rx.recv_timeout(ANSWER_TIMEOUT).expect("answered");
+        match resp.result {
+            Ok(outs) => {
+                served += 1;
+                assert_bit_identical("copy_4k", &outs, &want);
+            }
+            Err(ServiceError::Overloaded {
+                estimated_wait_seconds,
+                ..
+            }) => {
+                shed += 1;
+                assert!(estimated_wait_seconds >= 0.0);
+            }
+            Err(other) => panic!("unexpected error under pure load: {other}"),
+        }
+    }
+    assert!(served > 0, "admitted requests must still be served");
+    assert!(shed > 0, "a 30-deep burst into a depth-2 queue must shed");
+    assert_eq!(Metrics::get(&service.metrics().shed), shed);
+    service.shutdown();
+}
+
+/// Deadlines: an already-expired deadline answers typed
+/// `DeadlineExceeded` without executing; a generous one serves
+/// normally through the same typed call path.
+#[test]
+fn deadlines_expire_queued_requests_typed() {
+    quiet_injected_panics();
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch_dir("deadline"),
+        backend: Backend::HostExec,
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+
+    let x = random_f32(&[1024], 0xC0);
+    // Expired on arrival: the worker's sweep must drop it unexecuted.
+    let (_, rx) =
+        service.submit_with_deadline("copy_4k", vec![Tensor::F32(x.clone())], Instant::now());
+    let resp = rx.recv_timeout(ANSWER_TIMEOUT).expect("answered");
+    assert!(
+        matches!(&resp.result, Err(ServiceError::DeadlineExceeded { .. })),
+        "expired request must answer DeadlineExceeded, got {:?}",
+        resp.result.as_ref().map(|_| "ok")
+    );
+    assert!(Metrics::get(&service.metrics().expired) >= 1);
+
+    // The typed caller surface: past deadline errs typed...
+    let err = service
+        .call_typed("copy_4k", vec![Tensor::F32(x.clone())], Some(Instant::now()))
+        .expect_err("past deadline must fail");
+    assert!(matches!(err, ServiceError::DeadlineExceeded { .. }), "{err}");
+    // ...a generous deadline serves normally, with no degradation.
+    let want = naive_reference("copy_4k", &[Tensor::F32(x.clone())]);
+    let (outs, _, degraded) = service
+        .call_typed(
+            "copy_4k",
+            vec![Tensor::F32(x)],
+            Some(Instant::now() + Duration::from_secs(60)),
+        )
+        .expect("generous deadline serves");
+    assert_bit_identical("copy_4k", &outs, &want);
+    assert!(degraded.is_empty());
+    service.shutdown();
+}
+
+/// Supervision: a worker killed outside `catch_unwind` (the opt-in
+/// `worker` site) is respawned with backoff; absorbed requests answer
+/// typed `WorkerGone`, later requests are served by the replacement.
+#[test]
+fn supervisor_restarts_a_dead_worker() {
+    quiet_injected_panics();
+    let faults = FaultConfig {
+        seed: 11,
+        kill_worker_every: Some(2),
+        ..FaultConfig::default()
+    };
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch_dir("restart"),
+        backend: Backend::HostExec,
+        faults: Some(faults),
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+
+    let x = random_f32(&[1024], 0xD0);
+    let want = naive_reference("copy_4k", &[Tensor::F32(x.clone())]);
+    let (mut served, mut gone) = (0u64, 0u64);
+    for _ in 0..8 {
+        match service.call_typed("copy_4k", vec![Tensor::F32(x.clone())], None) {
+            Ok((outs, _, _)) => {
+                served += 1;
+                assert_bit_identical("copy_4k", &outs, &want);
+            }
+            Err(ServiceError::WorkerGone) => gone += 1,
+            Err(other) => panic!("unexpected error under worker kills: {other}"),
+        }
+    }
+    assert!(gone > 0, "periodic kills must cost some requests, typed");
+    assert!(served > 0, "respawned workers must serve again");
+    assert!(
+        Metrics::get(&service.metrics().worker_restarts) > 0,
+        "the supervisor must have respawned the worker"
+    );
+    service.shutdown();
+}
+
+/// Shutdown with requests still in flight: a *live* worker drains every
+/// pending request (each receiver resolves with its real response); a
+/// *dead* worker fails pending receivers immediately via dropped
+/// senders. Either way, deterministic — nothing hangs.
+#[test]
+fn shutdown_resolves_inflight_requests() {
+    quiet_injected_panics();
+    // Slow worker so the burst is genuinely in flight at shutdown.
+    let faults = FaultConfig {
+        seed: 13,
+        delay_rate: 1.0,
+        delay_ms: 10,
+        sites: Some(vec!["exec".into()]),
+        ..FaultConfig::default()
+    };
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch_dir("shutdown"),
+        backend: Backend::HostExec,
+        faults: Some(faults),
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+    let x = random_f32(&[1024], 0xE0);
+    let want = naive_reference("copy_4k", &[Tensor::F32(x.clone())]);
+    let pending: Vec<_> = (0..6)
+        .map(|_| service.submit("copy_4k", vec![Tensor::F32(x.clone())]).1)
+        .collect();
+    service.shutdown();
+    for rx in pending {
+        let resp = rx
+            .recv_timeout(ANSWER_TIMEOUT)
+            .expect("graceful shutdown drains in-flight requests");
+        let outs = resp.result.expect("drained request executes normally");
+        assert_bit_identical("copy_4k", &outs, &want);
+    }
+
+    // Dead-worker variant: the absorbed request's receiver must fail
+    // fast (dropped sender), and shutdown itself must not hang.
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch_dir("shutdown-dead"),
+        backend: Backend::HostExec,
+        faults: Some(FaultConfig {
+            seed: 17,
+            kill_worker_every: Some(1),
+            ..FaultConfig::default()
+        }),
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+    let (_, rx) = service.submit("copy_4k", vec![Tensor::F32(x.clone())]);
+    let deadline = Instant::now() + ANSWER_TIMEOUT;
+    loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            // Absorbed then killed: sender dropped, receiver fails fast.
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+            // Raced ahead of the kill and actually served — also fine.
+            Ok(_) => break,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                assert!(Instant::now() < deadline, "pending receiver hung");
+            }
+        }
+    }
+    service.shutdown();
+}
+
+/// Fault-free control: with injection disabled the lifecycle is clean —
+/// no sheds, no recovered panics, no degradation, and the typed call
+/// path matches the naive reference bit for bit.
+#[test]
+fn fault_free_lifecycle_is_clean() {
+    quiet_injected_panics();
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch_dir("clean"),
+        backend: Backend::HostExec,
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+    let x = random_f32(&[8, 12, 16], 0xF0);
+    let want = naive_reference("permute3d_o201", &[Tensor::F32(x.clone())]);
+    for _ in 0..10 {
+        let (outs, _, degraded) = service
+            .call_typed("permute3d_o201", vec![Tensor::F32(x.clone())], None)
+            .expect("clean call");
+        assert_bit_identical("permute3d_o201", &outs, &want);
+        assert!(degraded.is_empty());
+    }
+    let m = service.metrics();
+    assert_eq!(Metrics::get(&m.panics_recovered), 0);
+    assert_eq!(Metrics::get(&m.shed), 0);
+    assert_eq!(Metrics::get(&m.expired), 0);
+    assert_eq!(Metrics::get(&m.degraded), 0);
+    assert_eq!(Metrics::get(&m.worker_restarts), 0);
+    assert_eq!(Metrics::get(&m.completed), 10);
+    // The queue gauges return to zero once everything drained.
+    assert_eq!(Metrics::get(&m.queued_bytes), 0);
+    assert_eq!(Metrics::get(&m.queued_depth), 0);
+    service.shutdown();
+}

@@ -20,6 +20,7 @@ fn service_or_skip(test: &str) -> Option<Service> {
             max_batch: 4,
             preload: vec![],
             backend: Backend::Pjrt,
+            ..ServiceConfig::default()
         })
         .expect("service start"),
     )

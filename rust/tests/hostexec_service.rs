@@ -15,6 +15,7 @@ fn host_service(backend: Backend) -> Service {
         max_batch: 4,
         preload: vec!["permute3d_o102".into()],
         backend,
+        ..ServiceConfig::default()
     })
     .expect("service start")
 }
