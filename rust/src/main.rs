@@ -10,6 +10,11 @@
 //!   cavity [--n N --steps S]     run the lid-driven cavity demo
 //!                                (host solver when artifacts missing)
 //!   sim [--experiment table1]    print a simulated paper table
+//!   stats [--requests N]         serve a traced pipe-heavy workload,
+//!          [--trace OUT.json]    print the metrics summary + the full
+//!                                Prometheus exposition + one request's
+//!                                span tree, and validate the written
+//!                                Chrome trace JSON
 //!
 //! (Hand-rolled argument parsing: clap is unavailable offline.)
 
@@ -34,6 +39,7 @@ const OPTS: &[&str] = &[
     "artifacts-dir",
     "log-every",
     "backend",
+    "trace",
 ];
 
 fn main() {
@@ -51,10 +57,11 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("cavity") => cmd_cavity(&args),
         Some("sim") => cmd_sim(&args),
+        Some("stats") => cmd_stats(&args),
         _ => {
             eprintln!(
-                "usage: gdrk <info|list|run|serve|cavity|sim> [--artifact NAME] [--n N] \
-                 [--steps S] [--requests N] [--artifacts-dir DIR]"
+                "usage: gdrk <info|list|run|serve|cavity|sim|stats> [--artifact NAME] [--n N] \
+                 [--steps S] [--requests N] [--artifacts-dir DIR] [--trace OUT.json]"
             );
             2
         }
@@ -230,6 +237,105 @@ fn cmd_serve(args: &cli::Args) -> i32 {
     println!("{}", service.metrics().summary());
     service.shutdown();
     if failed > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+/// Serve a pipe-heavy workload with tracing forced on, then print the
+/// human metrics summary, the full Prometheus exposition, and one
+/// request's span tree; finally validate the Chrome trace the service
+/// wrote. Exit 1 if anything failed or the trace is malformed — the CI
+/// observability smoke test drives this subcommand end to end.
+fn cmd_stats(args: &cli::Args) -> i32 {
+    let requests = args.opt_usize("requests", 24);
+    let trace_path = args
+        .opt("trace")
+        .map(std::path::PathBuf::from)
+        .or_else(|| std::env::var("GDRK_TRACE").ok().map(std::path::PathBuf::from))
+        .unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("gdrk-trace-{}.json", std::process::id()))
+        });
+    let dir = args
+        .opt("artifacts-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(gdrk::runtime::artifact::default_dir);
+    let service = match Service::start(ServiceConfig {
+        artifacts_dir: dir,
+        max_batch: 4,
+        backend: Backend::HostExec,
+        trace: Some(trace_path.clone()),
+        ..ServiceConfig::default()
+    }) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("gdrk: {e}");
+            return 1;
+        }
+    };
+    // Pipe-heavy so traces show the full depth: fused stencil chains
+    // produce segment + band spans, movement ops cover the other
+    // bandwidth classes.
+    let mut rng = Rng::new(0xBEEF);
+    let workload: Vec<(&str, Vec<Tensor>)> = vec![
+        (
+            "pipe:fd1_128+scale_4m+smooth3x3_128",
+            vec![Tensor::F32(NdArray::random(Shape::new(&[128, 128]), &mut rng))],
+        ),
+        (
+            "pipe:smooth3x3_96+smooth3x3_96",
+            vec![Tensor::F32(NdArray::random(Shape::new(&[96, 96]), &mut rng))],
+        ),
+        (
+            "permute3d_o102",
+            vec![Tensor::F32(NdArray::random(Shape::new(&[32, 48, 64]), &mut rng))],
+        ),
+        ("copy_4k", vec![Tensor::F32(NdArray::random(Shape::new(&[1024]), &mut rng))]),
+    ];
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let (name, inputs) = &workload[i % workload.len()];
+        pending.push(service.submit(*name, inputs.clone()).1);
+    }
+    let mut failed = 0;
+    let mut sample: Option<String> = None;
+    for rx in pending {
+        match rx.recv() {
+            Ok(resp) if resp.is_ok() => {
+                if sample.is_none() {
+                    sample = resp.trace.as_ref().map(|t| t.render_text());
+                }
+            }
+            _ => failed += 1,
+        }
+    }
+    println!("{}", service.metrics().summary());
+    println!();
+    println!("{}", service.metrics().render_prometheus());
+    if let Some(text) = sample {
+        println!("sample request trace:");
+        print!("{text}");
+    }
+    service.shutdown();
+    match std::fs::read_to_string(&trace_path) {
+        Ok(s) => match gdrk::util::json::parse(&s) {
+            Ok(v) => {
+                let events = v.as_arr().map(|a| a.len()).unwrap_or(0);
+                println!("chrome trace: {events} events -> {}", trace_path.display());
+            }
+            Err(e) => {
+                eprintln!("gdrk stats: trace file is malformed JSON: {e}");
+                return 1;
+            }
+        },
+        Err(e) => {
+            eprintln!("gdrk stats: trace file missing: {e}");
+            return 1;
+        }
+    }
+    if failed > 0 {
+        eprintln!("gdrk stats: {failed} request(s) failed");
         1
     } else {
         0

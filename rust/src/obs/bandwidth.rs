@@ -1,0 +1,294 @@
+//! Bandwidth-utilization accounting against a measured memcpy roofline.
+//!
+//! The paper's headline claim is *bandwidth utilization* — kernels
+//! judged by how close they run to the memory system's streaming
+//! limit. This module brings that yardstick to serve time: a host
+//! `memcpy` roofline is measured **once per process** (the same
+//! measure-once-cache pattern as [`crate::gpusim::calib::host_weights`],
+//! but on the real host memory system instead of the simulator), and
+//! every host-executed segment records its achieved GB/s —
+//! measured bytes from [`crate::hostexec::stencil::ChainStats`] /
+//! per-op traffic estimates over wall time — into a per-op-class
+//! ledger. Two derived series ride the Prometheus surface:
+//!
+//! * **utilization** = achieved GB/s ÷ roofline GB/s, per op class;
+//! * **model drift** = cost-model estimated bytes ÷ measured bytes —
+//!   a rolling check that the PR 5 cost model still prices what the
+//!   executor actually moves. Outside [0.5, 2.0] means calibration is
+//!   stale (see [`drift_is_stale`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// The op classes the cost model prices ([`crate::ops::cost::CostWeights`]
+/// has one weight per class); the ledger aggregates by the same axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    Streaming,
+    Strided,
+    Permute,
+    Stencil,
+    Pointwise,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 5] = [
+        OpClass::Streaming,
+        OpClass::Strided,
+        OpClass::Permute,
+        OpClass::Stencil,
+        OpClass::Pointwise,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::Streaming => "streaming",
+            OpClass::Strided => "strided",
+            OpClass::Permute => "permute",
+            OpClass::Stencil => "stencil",
+            OpClass::Pointwise => "pointwise",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            OpClass::Streaming => 0,
+            OpClass::Strided => 1,
+            OpClass::Permute => 2,
+            OpClass::Stencil => 3,
+            OpClass::Pointwise => 4,
+        }
+    }
+}
+
+struct ClassCell {
+    measured_bytes: AtomicU64,
+    estimated_bytes: AtomicU64,
+    nanos: AtomicU64,
+    samples: AtomicU64,
+}
+
+impl ClassCell {
+    const fn new() -> ClassCell {
+        ClassCell {
+            measured_bytes: AtomicU64::new(0),
+            estimated_bytes: AtomicU64::new(0),
+            nanos: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+        }
+    }
+}
+
+static LEDGER: [ClassCell; 5] = [
+    ClassCell::new(),
+    ClassCell::new(),
+    ClassCell::new(),
+    ClassCell::new(),
+    ClassCell::new(),
+];
+
+/// Size of the roofline copy (16 MiB — far past L2, well inside RAM).
+const ROOFLINE_BYTES: usize = 16 << 20;
+
+/// Measure the host memcpy roofline: best-of-5 `copy_from_slice` over
+/// a 16 MiB buffer, counted as read+write bytes (the same convention
+/// `ChainStats::fused_traffic_bytes` uses, so utilization compares
+/// like with like).
+fn measure_roofline_gbs() -> f64 {
+    let src = vec![7u8; ROOFLINE_BYTES];
+    let mut dst = vec![0u8; ROOFLINE_BYTES];
+    let mut best = f64::MAX;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        dst.copy_from_slice(&src);
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(&dst);
+        if dt > 0.0 && dt < best {
+            best = dt;
+        }
+    }
+    if best == f64::MAX {
+        return 0.0;
+    }
+    (2.0 * ROOFLINE_BYTES as f64) / best / 1e9
+}
+
+/// The process-wide memcpy roofline in GB/s (measured once, cached).
+pub fn roofline_gbs() -> f64 {
+    static ROOFLINE: OnceLock<f64> = OnceLock::new();
+    *ROOFLINE.get_or_init(measure_roofline_gbs)
+}
+
+/// Record one executed segment: `measured_bytes` actually moved (read +
+/// write), `estimated_bytes` the cost model's prediction for the same
+/// segment, over `seconds` of wall time.
+pub fn record(class: OpClass, measured_bytes: u64, estimated_bytes: u64, seconds: f64) {
+    let cell = &LEDGER[class.index()];
+    cell.measured_bytes.fetch_add(measured_bytes, Ordering::Relaxed);
+    cell.estimated_bytes.fetch_add(estimated_bytes, Ordering::Relaxed);
+    cell.nanos.fetch_add((seconds * 1e9).max(0.0) as u64, Ordering::Relaxed);
+    cell.samples.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Aggregated view of one op class's ledger.
+#[derive(Debug, Clone, Copy)]
+pub struct ClassSnapshot {
+    pub class: OpClass,
+    pub samples: u64,
+    pub measured_bytes: u64,
+    pub estimated_bytes: u64,
+    pub seconds: f64,
+    /// Measured bytes / wall seconds, in GB/s.
+    pub achieved_gbs: f64,
+    /// Achieved GB/s over the memcpy roofline; 1.0 = running at the
+    /// memory system's streaming limit.
+    pub utilization: f64,
+    /// Cost-model estimated bytes over measured bytes; 1.0 = the model
+    /// prices exactly what the executor moves.
+    pub drift_ratio: f64,
+}
+
+/// Snapshot every op class (zero samples ⇒ zeroed derived fields).
+pub fn snapshot() -> Vec<ClassSnapshot> {
+    let roof = roofline_gbs();
+    OpClass::ALL
+        .iter()
+        .map(|&class| {
+            let cell = &LEDGER[class.index()];
+            let measured = cell.measured_bytes.load(Ordering::Relaxed);
+            let estimated = cell.estimated_bytes.load(Ordering::Relaxed);
+            let seconds = cell.nanos.load(Ordering::Relaxed) as f64 / 1e9;
+            let achieved = if seconds > 0.0 {
+                measured as f64 / seconds / 1e9
+            } else {
+                0.0
+            };
+            ClassSnapshot {
+                class,
+                samples: cell.samples.load(Ordering::Relaxed),
+                measured_bytes: measured,
+                estimated_bytes: estimated,
+                seconds,
+                achieved_gbs: achieved,
+                utilization: if roof > 0.0 { achieved / roof } else { 0.0 },
+                drift_ratio: if measured > 0 {
+                    estimated as f64 / measured as f64
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect()
+}
+
+/// A drift ratio outside [0.5, 2.0] means the calibration no longer
+/// describes this machine (estimates off by more than 2× either way).
+pub fn drift_is_stale(ratio: f64) -> bool {
+    !(0.5..=2.0).contains(&ratio)
+}
+
+/// Append the utilization/drift series (and the roofline gauge) in
+/// Prometheus text exposition format. Classes with no samples are
+/// skipped — an absent series is honest; a zero is a lie.
+pub fn render_prometheus(out: &mut String) {
+    out.push_str("# HELP gdrk_roofline_bandwidth_gbs Measured host memcpy roofline (GB/s).\n");
+    out.push_str("# TYPE gdrk_roofline_bandwidth_gbs gauge\n");
+    out.push_str(&format!("gdrk_roofline_bandwidth_gbs {:.6}\n", roofline_gbs()));
+    let snaps: Vec<ClassSnapshot> = snapshot().into_iter().filter(|s| s.samples > 0).collect();
+    out.push_str(
+        "# HELP gdrk_bandwidth_utilization Achieved GB/s over the memcpy roofline, per op class.\n",
+    );
+    out.push_str("# TYPE gdrk_bandwidth_utilization gauge\n");
+    for s in &snaps {
+        out.push_str(&format!(
+            "gdrk_bandwidth_utilization{{class=\"{}\"}} {:.6}\n",
+            s.class.name(),
+            s.utilization
+        ));
+    }
+    out.push_str(
+        "# HELP gdrk_model_drift_ratio Cost-model estimated bytes over measured bytes, \
+         per op class (stale outside [0.5, 2.0]).\n",
+    );
+    out.push_str("# TYPE gdrk_model_drift_ratio gauge\n");
+    for s in &snaps {
+        out.push_str(&format!(
+            "gdrk_model_drift_ratio{{class=\"{}\"}} {:.6}\n",
+            s.class.name(),
+            s.drift_ratio
+        ));
+    }
+    out.push_str(
+        "# HELP gdrk_achieved_bandwidth_gbs Measured bytes over wall seconds, per op class.\n",
+    );
+    out.push_str("# TYPE gdrk_achieved_bandwidth_gbs gauge\n");
+    for s in &snaps {
+        out.push_str(&format!(
+            "gdrk_achieved_bandwidth_gbs{{class=\"{}\"}} {:.6}\n",
+            s.class.name(),
+            s.achieved_gbs
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roofline_is_positive_and_cached() {
+        let r = roofline_gbs();
+        assert!(r > 0.0, "roofline {r}");
+        assert_eq!(roofline_gbs(), r);
+    }
+
+    #[test]
+    fn ledger_accumulates_and_derives() {
+        // The ledger is process-global and other tests execute
+        // pipelines concurrently, so assert on deltas, not totals.
+        let before = snapshot()[OpClass::Strided.index()];
+        record(OpClass::Strided, 1000, 1500, 1e-6);
+        record(OpClass::Strided, 1000, 500, 1e-6);
+        let after = snapshot()[OpClass::Strided.index()];
+        assert!(after.samples >= before.samples + 2);
+        assert!(after.measured_bytes >= before.measured_bytes + 2000);
+        assert!(after.estimated_bytes >= before.estimated_bytes + 2000);
+        assert!(after.seconds > before.seconds);
+        assert!(after.achieved_gbs > 0.0);
+        assert!(after.utilization > 0.0);
+        assert!(after.drift_ratio > 0.0);
+    }
+
+    #[test]
+    fn drift_staleness_window() {
+        assert!(!drift_is_stale(1.0));
+        assert!(!drift_is_stale(0.5));
+        assert!(!drift_is_stale(2.0));
+        assert!(drift_is_stale(0.49));
+        assert!(drift_is_stale(2.01));
+        assert!(drift_is_stale(0.0));
+    }
+
+    #[test]
+    fn prometheus_fragment_renders() {
+        record(OpClass::Permute, 4096, 4096, 1e-6);
+        let mut out = String::new();
+        render_prometheus(&mut out);
+        assert!(out.contains("gdrk_roofline_bandwidth_gbs "), "{out}");
+        assert!(
+            out.contains("gdrk_bandwidth_utilization{class=\"permute\"}"),
+            "{out}"
+        );
+        assert!(
+            out.contains("gdrk_model_drift_ratio{class=\"permute\"}"),
+            "{out}"
+        );
+        for line in out.lines() {
+            assert!(
+                line.starts_with('#') || line.contains(' '),
+                "malformed exposition line: {line}"
+            );
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! Observability: request tracing, bandwidth-utilization accounting,
+//! and the Prometheus exposition glue.
+//!
+//! Always compiled, near-zero overhead when disabled:
+//!
+//! * [`trace`] — per-request span trees (submit → queue → batch → rung
+//!   → segment → band) recorded on a thread-local stack behind one
+//!   atomic gate, exported as Chrome trace-event JSON
+//!   (`ServiceConfig::trace` / `GDRK_TRACE=out.json`) and as a compact
+//!   text rendering on `Response::trace`.
+//! * [`bandwidth`] — a once-per-process host memcpy roofline, a
+//!   per-op-class ledger of achieved GB/s vs the roofline
+//!   (utilization) and vs the PR 5 cost model (drift ratio).
+//!
+//! `coordinator::Metrics::render_prometheus` pulls both into one
+//! Prometheus text document; `docs/ARCHITECTURE.md` ("Observability")
+//! has the span taxonomy and the metric name table.
+
+pub mod bandwidth;
+pub mod trace;

@@ -262,6 +262,39 @@ impl Op {
             Op::Pointwise { .. } => w.pointwise,
         }
     }
+
+    /// The op class this op's traffic aggregates under in the
+    /// bandwidth-utilization ledger ([`crate::obs::bandwidth`]) — the
+    /// same partition [`Op::cost_weight`] prices, so utilization and
+    /// drift series line up with the cost model's axes. Identity
+    /// reorders stream, matching the weight mapping.
+    pub fn cost_class(&self) -> crate::obs::bandwidth::OpClass {
+        use crate::obs::bandwidth::OpClass;
+        match self {
+            Op::Copy
+            | Op::ReadRange { .. }
+            | Op::Subarray { .. }
+            | Op::Interlace { .. }
+            | Op::Deinterlace { .. } => OpClass::Streaming,
+            Op::ReadStrided { .. } => OpClass::Strided,
+            Op::Reorder { order } => {
+                if order.is_identity() {
+                    OpClass::Streaming
+                } else {
+                    OpClass::Permute
+                }
+            }
+            Op::ReorderCollapse { order, .. } => {
+                if order.is_identity() {
+                    OpClass::Streaming
+                } else {
+                    OpClass::Permute
+                }
+            }
+            Op::Stencil { .. } => OpClass::Stencil,
+            Op::Pointwise { .. } => OpClass::Pointwise,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -403,5 +436,27 @@ mod tests {
         let pw = Op::Pointwise { spec: PointwiseSpec::scale(2.0) };
         assert_eq!(pw.cost_weight(&w), 1.0);
         assert_eq!(CostWeights::default().permute, 1.0);
+    }
+
+    #[test]
+    fn cost_class_mirrors_cost_weight_partition() {
+        use crate::obs::bandwidth::OpClass;
+        assert_eq!(Op::Copy.cost_class(), OpClass::Streaming);
+        assert_eq!(
+            Op::ReadStrided { base: 0, stride: 2, count: 4 }.cost_class(),
+            OpClass::Strided
+        );
+        assert_eq!(
+            Op::Reorder { order: Order::new(&[1, 0]).unwrap() }.cost_class(),
+            OpClass::Permute
+        );
+        assert_eq!(Op::Reorder { order: Order::identity(2) }.cost_class(), OpClass::Streaming);
+        assert_eq!(Op::Interlace { n: 2 }.cost_class(), OpClass::Streaming);
+        let st = Op::Stencil {
+            spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
+        };
+        assert_eq!(st.cost_class(), OpClass::Stencil);
+        let pw = Op::Pointwise { spec: PointwiseSpec::scale(2.0) };
+        assert_eq!(pw.cost_class(), OpClass::Pointwise);
     }
 }

@@ -67,6 +67,7 @@ pub use plan_cache::PlanCache;
 pub use rewrite::{rewrite, rewrite_with, RewritePolicy};
 
 use crate::hostexec;
+use crate::obs::{bandwidth, trace};
 use crate::ops::{ExecBackend, Op, OpError};
 use crate::tensor::buf::erase_all;
 use crate::tensor::{DType, Element, NdArray, Numeric, TensorBuf};
@@ -215,19 +216,72 @@ impl Pipeline {
         };
         let threads = hostexec::pool::num_threads();
         let es = std::mem::size_of::<T>();
-        let outs = run_segments(&segments, inputs, &mut |seg, ins| match seg {
-            Segment::Single(op) => op.execute_fast(ins),
-            Segment::FusedChain(chain) => {
-                let (y, s) = hostexec::stencil::apply_chain(ins[0], chain, threads)?;
-                stats.fused_chains += 1;
-                stats.fused_traffic_bytes += s.fused_traffic_bytes();
-                stats.unfused_chain_traffic_bytes += hostexec::stencil::unfused_chain_traffic_bytes(
-                    ins[0].len(),
-                    chain.len(),
-                    es,
-                );
-                Ok(vec![y])
+        // Span names count exec-closure calls, not segment indices: a
+        // unary segment runs once per lane, and each run is its own
+        // timed span (and bandwidth sample).
+        let mut seg_idx = 0usize;
+        let outs = run_segments(&segments, inputs, &mut |seg, ins| {
+            let span = trace::open("segment", &seg_idx.to_string());
+            if let Some(s) = span {
+                trace::arg(s, "op", seg.describe());
+                trace::arg(s, "dtype", T::DTYPE.name());
             }
+            seg_idx += 1;
+            let t0 = std::time::Instant::now();
+            let out = match seg {
+                Segment::Single(op) => {
+                    let r = op.execute_fast(ins);
+                    if r.is_ok() {
+                        if let Ok(est) = op.traffic_estimate(ins[0].shape().dims(), T::DTYPE) {
+                            // Movement ops touch exactly their modeled
+                            // bytes, so measured == estimated here.
+                            let b = est.total_bytes();
+                            bandwidth::record(op.cost_class(), b, b, t0.elapsed().as_secs_f64());
+                            if let Some(s) = span {
+                                trace::arg(s, "bytes", b.to_string());
+                            }
+                        }
+                    }
+                    r
+                }
+                Segment::FusedChain(chain) => {
+                    match hostexec::stencil::apply_chain(ins[0], chain, threads) {
+                        Ok((y, st)) => {
+                            let meas = st.fused_traffic_bytes();
+                            stats.fused_chains += 1;
+                            stats.fused_traffic_bytes += meas;
+                            stats.unfused_chain_traffic_bytes +=
+                                hostexec::stencil::unfused_chain_traffic_bytes(
+                                    ins[0].len(),
+                                    chain.len(),
+                                    es,
+                                );
+                            let radii: Vec<usize> = chain.iter().map(|cs| cs.radius()).collect();
+                            let est = hostexec::stencil::chain_traffic_estimate(
+                                ins[0].shape().dims(),
+                                &radii,
+                                es,
+                                threads,
+                            );
+                            bandwidth::record(
+                                bandwidth::OpClass::Stencil,
+                                meas,
+                                est.fused_bytes,
+                                t0.elapsed().as_secs_f64(),
+                            );
+                            if let Some(s) = span {
+                                trace::arg(s, "bytes", meas.to_string());
+                            }
+                            Ok(vec![y])
+                        }
+                        Err(e) => Err(e),
+                    }
+                }
+            };
+            if let Some(s) = span {
+                trace::close(s);
+            }
+            out
         })?;
         Ok((outs, stats))
     }
@@ -255,9 +309,35 @@ impl Pipeline {
                 .unwrap_or(0),
             ..Default::default()
         };
-        let outs = run_segments(&segments, inputs, &mut |seg, ins| match seg {
-            Segment::Single(op) => op.execute_fast(ins),
-            Segment::FusedChain(_) => unreachable!("unfused path never fuses"),
+        let mut seg_idx = 0usize;
+        let outs = run_segments(&segments, inputs, &mut |seg, ins| {
+            let span = trace::open("segment", &seg_idx.to_string());
+            if let Some(s) = span {
+                trace::arg(s, "op", seg.describe());
+                trace::arg(s, "dtype", T::DTYPE.name());
+            }
+            seg_idx += 1;
+            let t0 = std::time::Instant::now();
+            let out = match seg {
+                Segment::Single(op) => {
+                    let r = op.execute_fast(ins);
+                    if r.is_ok() {
+                        if let Ok(est) = op.traffic_estimate(ins[0].shape().dims(), T::DTYPE) {
+                            let b = est.total_bytes();
+                            bandwidth::record(op.cost_class(), b, b, t0.elapsed().as_secs_f64());
+                            if let Some(s) = span {
+                                trace::arg(s, "bytes", b.to_string());
+                            }
+                        }
+                    }
+                    r
+                }
+                Segment::FusedChain(_) => unreachable!("unfused path never fuses"),
+            };
+            if let Some(s) = span {
+                trace::close(s);
+            }
+            out
         })?;
         Ok((outs, stats))
     }

@@ -405,6 +405,92 @@ fn shutdown_resolves_inflight_requests() {
     service.shutdown();
 }
 
+/// Traced degradation: with the host rung forced to panic, a degraded
+/// request's span tree shows the failed rung attempt — its outcome
+/// carrying the injected panic and the fault site — followed by the
+/// fallback rung that actually served it.
+#[test]
+fn degraded_request_trace_shows_failed_then_fallback_rung() {
+    quiet_injected_panics();
+    let trace_path =
+        std::env::temp_dir().join(format!("gdrk-chaos-trace-{}.json", std::process::id()));
+    let faults = FaultConfig {
+        seed: 23,
+        panic_rate: 1.0,
+        sites: Some(vec!["rung:host".into()]),
+        ..FaultConfig::default()
+    };
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch_dir("trace-degraded"),
+        backend: Backend::HostExec,
+        faults: Some(faults),
+        trace: Some(trace_path.clone()),
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+    let x = random_f32(&[1024], 0xF1);
+    let want = naive_reference("copy_4k", &[Tensor::F32(x.clone())]);
+    let (_, rx) = service.submit("copy_4k", vec![Tensor::F32(x)]);
+    let resp = rx.recv_timeout(ANSWER_TIMEOUT).expect("answered");
+    let t = resp.trace.expect("traced service returns span trees");
+    let outs = resp.result.expect("the fallback rung serves the request");
+    assert_bit_identical("copy_4k", &outs, &want);
+    assert_eq!(resp.degraded, vec!["naive"]);
+    let rungs = t.spans_in("rung");
+    assert_eq!(rungs.len(), 2, "one failed + one fallback attempt:\n{}", t.render_text());
+    assert_eq!(rungs[0].name, "host");
+    let outcome = |s: &gdrk::obs::trace::Span| {
+        s.args
+            .iter()
+            .find(|(k, _)| *k == "outcome")
+            .map(|(_, v)| v.clone())
+            .unwrap_or_default()
+    };
+    let failed = outcome(rungs[0]);
+    assert!(
+        failed.contains(INJECTED_PANIC_MSG) && failed.contains("rung:host"),
+        "failed rung must carry the injected fault site, got '{failed}'"
+    );
+    assert_eq!(rungs[1].name, "naive");
+    assert_eq!(outcome(rungs[1]), "ok");
+    service.shutdown();
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+/// Fault-free traced control: every request's span tree shows exactly
+/// one rung attempt — the primary host rung, outcome ok — so rung
+/// spans are a faithful count of ladder attempts, not of rungs probed.
+#[test]
+fn fault_free_trace_has_one_rung_per_request() {
+    quiet_injected_panics();
+    let trace_path =
+        std::env::temp_dir().join(format!("gdrk-chaos-trace-clean-{}.json", std::process::id()));
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch_dir("trace-clean"),
+        backend: Backend::HostExec,
+        trace: Some(trace_path.clone()),
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+    let x = random_f32(&[64, 64], 0xF2);
+    for _ in 0..6 {
+        let (_, rx) = service.submit("fd2_64", vec![Tensor::F32(x.clone())]);
+        let resp = rx.recv_timeout(ANSWER_TIMEOUT).expect("answered");
+        assert!(resp.is_ok());
+        let t = resp.trace.expect("traced service returns span trees");
+        let rungs = t.spans_in("rung");
+        assert_eq!(rungs.len(), 1, "{}", t.render_text());
+        assert_eq!(rungs[0].name, "host");
+        assert!(
+            rungs[0].args.iter().any(|(k, v)| *k == "outcome" && v == "ok"),
+            "{}",
+            t.render_text()
+        );
+    }
+    service.shutdown();
+    let _ = std::fs::remove_file(&trace_path);
+}
+
 /// Fault-free control: with injection disabled the lifecycle is clean —
 /// no sheds, no recovered panics, no degradation, and the typed call
 /// path matches the naive reference bit for bit.

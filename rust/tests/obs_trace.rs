@@ -1,0 +1,158 @@
+//! End-to-end observability test: a traced service answers `pipe:`
+//! requests with an in-memory span tree nesting submit → rung →
+//! segment → band, writes a Perfetto-loadable Chrome trace on
+//! shutdown, and the Prometheus exposition carries the
+//! bandwidth-utilization series the request traffic produced.
+
+use gdrk::coordinator::{Backend, Service, ServiceConfig};
+use gdrk::runtime::Tensor;
+use gdrk::tensor::{NdArray, Shape};
+use gdrk::util::json;
+use gdrk::util::rng::Rng;
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gdrk-obs-{tag}-{}", std::process::id()))
+}
+
+#[test]
+fn traced_pipe_requests_export_nested_chrome_spans() {
+    let trace_path = scratch("trace.json");
+    let _ = std::fs::remove_file(&trace_path);
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch("artifacts"),
+        backend: Backend::HostExec,
+        trace: Some(trace_path.clone()),
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+    assert_eq!(service.trace_path(), Some(trace_path.as_path()));
+
+    let mut rng = Rng::new(0x0B5);
+    let x = Tensor::F32(NdArray::random(Shape::new(&[96, 96]), &mut rng));
+    let mut traces = Vec::new();
+    for _ in 0..3 {
+        let (_, rx) = service.submit("pipe:fd1_96+scale_4m+smooth3x3_96", vec![x.clone()]);
+        let resp = rx.recv().expect("answered");
+        assert!(resp.is_ok(), "{:?}", resp.result.err());
+        traces.push(resp.trace.expect("traced service returns span trees"));
+    }
+
+    // In-memory span tree: one request root holding the whole lifecycle.
+    let t = &traces[0];
+    assert_eq!(t.artifact, "pipe:fd1_96+scale_4m+smooth3x3_96");
+    assert_eq!(t.spans[0].cat, "request");
+    assert_eq!(t.spans[0].depth, 0);
+    assert_eq!(t.spans.iter().filter(|s| s.cat == "request").count(), 1);
+    for cat in ["submit", "queue", "batch", "rung", "segment", "band"] {
+        assert!(!t.spans_in(cat).is_empty(), "missing {cat} spans:\n{}", t.render_text());
+    }
+    // Fault-free: exactly one rung attempt, the primary host rung.
+    let rungs = t.spans_in("rung");
+    assert_eq!(rungs.len(), 1, "{}", t.render_text());
+    assert_eq!(rungs[0].name, "host");
+    assert!(
+        rungs[0].args.iter().any(|(k, v)| *k == "outcome" && v == "ok"),
+        "{}",
+        t.render_text()
+    );
+    // Segments nest under the rung, bands under their segment.
+    let rung_depth = rungs[0].depth;
+    assert!(t.spans_in("segment").iter().all(|s| s.depth == rung_depth + 1));
+    assert!(t.spans_in("band").iter().all(|s| s.depth == rung_depth + 2));
+    // Every span's interval is contained in the root's.
+    let root = &t.spans[0];
+    for s in &t.spans {
+        assert!(
+            s.start_us >= root.start_us
+                && s.start_us + s.dur_us <= root.start_us + root.dur_us,
+            "span {} {} escapes the request interval:\n{}",
+            s.cat,
+            s.name,
+            t.render_text()
+        );
+    }
+
+    // The Prometheus surface reports the utilization/drift series for
+    // the stencil traffic these requests pushed through the ledger.
+    let prom = service.metrics().render_prometheus();
+    for needle in [
+        "gdrk_submitted_total 3",
+        "gdrk_exec_latency_seconds_bucket",
+        "gdrk_roofline_bandwidth_gbs",
+        "gdrk_bandwidth_utilization{class=\"stencil\"}",
+        "gdrk_model_drift_ratio{class=\"stencil\"}",
+    ] {
+        assert!(prom.contains(needle), "missing {needle} in:\n{prom}");
+    }
+
+    // Shutdown flushes the Chrome trace; it must be well-formed JSON
+    // with the metadata event first and one complete event per span.
+    service.shutdown();
+    let raw = std::fs::read_to_string(&trace_path).expect("trace file written");
+    let v = json::parse(&raw).expect("trace is well-formed JSON");
+    let events = v.as_arr().expect("chrome trace is a JSON array");
+    assert!(events.len() > 3);
+    assert_eq!(events[0].get("ph").and_then(|p| p.as_str()), Some("M"));
+    let xs: Vec<_> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .collect();
+    let total_spans: usize = traces.iter().map(|t| t.spans.len()).sum();
+    assert_eq!(xs.len(), total_spans, "one X event per recorded span");
+    for e in &xs {
+        assert!(e.get("name").and_then(|n| n.as_str()).is_some());
+        assert!(e.get("cat").and_then(|c| c.as_str()).is_some());
+        assert!(e.get("ts").and_then(|t| t.as_f64()).is_some());
+        assert!(e.get("dur").and_then(|d| d.as_f64()).unwrap_or(0.0) >= 1.0);
+        assert_eq!(e.get("pid").and_then(|p| p.as_usize()), Some(1));
+        assert!(e.get("tid").and_then(|t| t.as_usize()).is_some_and(|id| id >= 1));
+    }
+    // All three requests landed in the file, on distinct track ids.
+    let tids: std::collections::BTreeSet<usize> =
+        xs.iter().filter_map(|e| e.get("tid").and_then(|t| t.as_usize())).collect();
+    assert_eq!(tids.len(), 3, "one Perfetto track per request");
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+/// Single-op requests trace too: the rung wraps one `op` span carrying
+/// the modeled byte count, and an untraced service keeps `trace: None`.
+#[test]
+fn single_op_traces_carry_modeled_bytes() {
+    let trace_path = scratch("single.json");
+    let _ = std::fs::remove_file(&trace_path);
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch("artifacts-single"),
+        backend: Backend::HostExec,
+        trace: Some(trace_path.clone()),
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+    let mut rng = Rng::new(0x0B6);
+    let x = Tensor::F32(NdArray::random(Shape::new(&[8, 12, 16]), &mut rng));
+    let (_, rx) = service.submit("permute3d_o201", vec![x.clone()]);
+    let resp = rx.recv().expect("answered");
+    assert!(resp.is_ok());
+    let t = resp.trace.expect("traced");
+    let ops = t.spans_in("op");
+    assert_eq!(ops.len(), 1, "{}", t.render_text());
+    assert!(
+        ops[0].args.iter().any(|(k, v)| *k == "bytes" && v.parse::<u64>().is_ok()),
+        "{}",
+        t.render_text()
+    );
+    service.shutdown();
+    let _ = std::fs::remove_file(&trace_path);
+
+    // No trace config, no GDRK_TRACE: responses carry no span tree.
+    let untraced = Service::start(ServiceConfig {
+        artifacts_dir: scratch("artifacts-untraced"),
+        backend: Backend::HostExec,
+        ..ServiceConfig::default()
+    })
+    .expect("service start");
+    let (_, rx) = untraced.submit("permute3d_o201", vec![x]);
+    let resp = rx.recv().expect("answered");
+    assert!(resp.is_ok());
+    assert!(resp.trace.is_none(), "untraced service must not pay for spans");
+    untraced.shutdown();
+}
