@@ -8,6 +8,10 @@
 //! paper's width-independence claim made measurable: the same permute
 //! at element widths 2 (bf16), 4 (f32) and 8 (f64) bytes should land
 //! at comparable GB/s, because the erased core moves lanes, not types.
+//! The `gbs_vs_roofline` column divides each hostexec GB/s by the
+//! process-wide memcpy roofline
+//! ([`gdrk::obs::bandwidth::roofline_gbs`]) — the paper's utilization
+//! yardstick; multi-threaded rows may exceed 1.0.
 
 use gdrk::hostexec::pool;
 use gdrk::ops::{Op, StencilSpec};
@@ -34,6 +38,7 @@ fn permute_case(shape: &[usize], order: &[usize], dtype: DType, rng: &mut Rng) -
             dtype: dtype.name().into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
+            gbs_vs_roofline: 0.0,
         },
         op: Op::Reorder {
             order: Order::new(order).unwrap(),
@@ -71,6 +76,7 @@ fn main() {
             dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
+            gbs_vs_roofline: 0.0,
         },
         op: Op::Copy,
         bytes: 2 * 4 * x.len(),
@@ -89,6 +95,7 @@ fn main() {
             dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
+            gbs_vs_roofline: 0.0,
         },
         op: Op::Interlace { n: 4 },
         bytes: 2 * 4 * 4 * (1 << 18),
@@ -103,6 +110,7 @@ fn main() {
             dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
+            gbs_vs_roofline: 0.0,
         },
         op: Op::Deinterlace { n: 4 },
         bytes: 2 * 4 * packed.len(),
@@ -119,6 +127,7 @@ fn main() {
             dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
+            gbs_vs_roofline: 0.0,
         },
         op: Op::ReorderCollapse {
             order: Order::new(&[3, 0, 2, 1]).unwrap(),
@@ -136,6 +145,7 @@ fn main() {
             dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
+            gbs_vs_roofline: 0.0,
         },
         op: Op::Subarray {
             base: vec![256, 512],
@@ -155,6 +165,7 @@ fn main() {
             dtype: "f32".into(),
             naive_gbs: 0.0,
             hostexec_gbs: 0.0,
+            gbs_vs_roofline: 0.0,
         },
         op: Op::Stencil {
             spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
@@ -164,13 +175,15 @@ fn main() {
     });
 
     let threads = pool::num_threads();
+    let roof = gdrk::obs::bandwidth::roofline_gbs();
     println!(
         "hostexec speedup bench: {threads} worker thread(s), \
-         naive = Op::reference, hostexec = Op::execute_fast\n"
+         naive = Op::reference, hostexec = Op::execute_fast"
     );
+    println!("host memcpy roofline: {roof:.2} GB/s (read+write, single thread)\n");
     let mut t = Table::new(
         "naive vs hostexec host throughput (GB/s useful, p50)",
-        &["op", "shape", "order", "dtype", "naive", "hostexec", "speedup"],
+        &["op", "shape", "order", "dtype", "naive", "hostexec", "speedup", "vs roofline"],
     );
     let mut records: Vec<BenchRecord> = Vec::new();
     for case in &mut cases {
@@ -189,6 +202,11 @@ fn main() {
         });
         case.record.naive_gbs = naive.bandwidth_gbs(case.bytes);
         case.record.hostexec_gbs = fast.bandwidth_gbs(case.bytes);
+        case.record.gbs_vs_roofline = if roof > 0.0 {
+            case.record.hostexec_gbs / roof
+        } else {
+            0.0
+        };
         t.row(&[
             case.record.op.clone(),
             case.record.shape.clone(),
@@ -197,6 +215,7 @@ fn main() {
             gbs(case.record.naive_gbs),
             gbs(case.record.hostexec_gbs),
             format!("{:.2}x", case.record.speedup()),
+            format!("{:.2}", case.record.gbs_vs_roofline),
         ]);
         records.push(case.record.clone());
     }

@@ -21,6 +21,7 @@ use gdrk::util::timing::bench;
 /// record set must win.
 fn hostexec_section(rng: &mut Rng) {
     let threads = gdrk::hostexec::pool::num_threads();
+    let roof = gdrk::obs::bandwidth::roofline_gbs();
     let mut t = Table::new(
         "hot path: host backends, naive vs hostexec (GB/s useful, p50)",
         &["op", "naive", "hostexec", "speedup"],
@@ -68,14 +69,18 @@ fn hostexec_section(rng: &mut Rng) {
         let fast = bench(1, 4, || {
             op.execute_fast(inputs).expect("hostexec");
         });
-        let rec = BenchRecord {
+        let mut rec = BenchRecord {
             op: (*name).into(),
             shape: format!("{}", inputs[0].shape()),
             order: (*order).into(),
             dtype: "f32".into(),
             naive_gbs: naive.bandwidth_gbs(*bytes),
             hostexec_gbs: fast.bandwidth_gbs(*bytes),
+            gbs_vs_roofline: 0.0,
         };
+        if roof > 0.0 {
+            rec.gbs_vs_roofline = rec.hostexec_gbs / roof;
+        }
         t.row(&[
             (*name).into(),
             format!("{:.2}", rec.naive_gbs),

@@ -88,14 +88,21 @@ impl Calibration {
             streaming: 1.0,
             strided: rel(self.strided_read_gbs),
             permute: rel(self.tiled_permute_gbs),
+            // Run-preserving permutes collapse into coalesced
+            // contiguous copies on the device, so they price as
+            // streamed bytes (the host calibration measures its own
+            // ratio; see `crate::hostexec::calib`).
+            permute_run: 1.0,
             stencil: 1.0,
             pointwise: 1.0,
         }
     }
 }
 
-/// The process-wide calibrated weights the pipeline's cost-guided
-/// rewrite pass runs against (measured once, cached).
+/// The process-wide simulator-calibrated weights (measured once,
+/// cached) — the device-model reference. The pipeline's cost-guided
+/// decisions price against the host-measured sibling,
+/// [`crate::hostexec::calib::host_weights`].
 pub fn host_weights() -> CostWeights {
     static WEIGHTS: OnceLock<CostWeights> = OnceLock::new();
     *WEIGHTS.get_or_init(|| Calibration::measure().weights())

@@ -1,0 +1,248 @@
+//! Host-measured calibration for the cost model — the sibling of
+//! [`crate::gpusim::calib`], run on the real host memory system instead
+//! of the C1060 simulator.
+//!
+//! The simulator calibration prices op classes by *simulated* bandwidth
+//! ratios; since the executor that actually serves traffic is the host
+//! backend, the pipeline's cost-guided decisions should be priced by
+//! what **this machine** measures. One pass ([`HostCalibration::measure`],
+//! cached process-wide by [`host_calibration`]) times:
+//!
+//! * a `memcpy` stream (the scalar baseline every ratio is against);
+//! * the wide-move and streaming-store copies
+//!   ([`super::wide::copy_wide`] / [`super::wide::copy_stream`]) — the
+//!   wide-vs-scalar and streaming-vs-cached ratios;
+//! * an L2-resident copy — the cache-vs-DRAM bandwidth ratio that
+//!   calibrates the ring-byte discount in
+//!   [`crate::pipeline::cost::ring_byte_discount`];
+//! * a run-preserving permute (order `[0 2 1]`: fat contiguous runs,
+//!   wide-move eligible) and a tiled transpose (order `[1 0 2]`) —
+//!   the per-order permute weights;
+//! * a stride-8 gather — the strided weight.
+//!
+//! [`HostCalibration::weights`] lowers the ratios into [`CostWeights`]
+//! (memcpy GB/s over class GB/s, floored at 1.0 and ordered
+//! `permute_run <= permute <= strided` so timing noise can never invert
+//! the structural ordering). All workloads run single-threaded: the
+//! weights describe per-byte efficiency of the movement mechanism, not
+//! the pool's scaling.
+
+use crate::ops::cost::CostWeights;
+use crate::tensor::{NdArray, Order, Shape};
+use crate::util::timing::bench;
+use std::hint::black_box;
+use std::sync::OnceLock;
+
+/// Bytes of the DRAM-resident copy workloads (past any L2).
+const DRAM_BYTES: usize = 8 << 20;
+/// Bytes of the cache-resident copy workload (inside a typical L2).
+const L2_BYTES: usize = 256 << 10;
+/// Inner repeats of the L2 copy per timed iteration (the buffer is
+/// small; repeats make the wall time measurable).
+const L2_REPS: usize = 16;
+
+/// Measured host bandwidths (GB/s, useful read+write bytes over p50
+/// wall time — the same accounting as [`crate::obs::bandwidth`]).
+#[derive(Debug, Clone, Copy)]
+pub struct HostCalibration {
+    /// DRAM-resident `copy_from_slice` — the scalar/memcpy baseline.
+    pub memcpy_gbs: f64,
+    /// DRAM-resident [`super::wide::copy_wide`] (u128-pair lanes).
+    pub wide_gbs: f64,
+    /// DRAM-resident [`super::wide::copy_stream`] (non-temporal stores).
+    pub stream_gbs: f64,
+    /// L2-resident `copy_from_slice`.
+    pub l2_gbs: f64,
+    /// Run-preserving permute (order `[0 2 1]`, fat contiguous runs).
+    pub permute_run_gbs: f64,
+    /// Tiled transpose permute (order `[1 0 2]`).
+    pub permute_tile_gbs: f64,
+    /// Stride-8 gather into a contiguous output.
+    pub strided_gbs: f64,
+}
+
+impl HostCalibration {
+    /// Time the calibration workloads on this host (~100 ms once).
+    pub fn measure() -> HostCalibration {
+        let src = vec![7u8; DRAM_BYTES];
+        let mut dst = vec![0u8; DRAM_BYTES];
+        let dram_bytes = 2 * DRAM_BYTES;
+        let memcpy = bench(1, 3, || {
+            dst.copy_from_slice(&src);
+            black_box(&dst);
+        });
+        let wide = bench(1, 3, || {
+            super::wide::copy_wide(&mut dst, &src);
+            black_box(&dst);
+        });
+        let stream = bench(1, 3, || {
+            super::wide::copy_stream(&mut dst, &src);
+            black_box(&dst);
+        });
+
+        let lsrc = vec![7u8; L2_BYTES];
+        let mut ldst = vec![0u8; L2_BYTES];
+        let l2 = bench(1, 3, || {
+            for _ in 0..L2_REPS {
+                ldst.copy_from_slice(&lsrc);
+                black_box(&ldst);
+            }
+        });
+
+        // 4 MiB f32 cube: one movement class per paper order family.
+        let x: NdArray<f32> = NdArray::iota(Shape::new(&[64, 128, 128]));
+        let perm_bytes = 2 * 4 * x.len();
+        let run_order = Order::new(&[0, 2, 1]).expect("valid order");
+        let tile_order = Order::new(&[1, 0, 2]).expect("valid order");
+        let run = bench(1, 3, || {
+            let y = super::permute::permute_with_threads(&x, &run_order, 1)
+                .expect("calibration permute");
+            black_box(&y);
+        });
+        let tile = bench(1, 3, || {
+            let y = super::permute::permute_with_threads(&x, &tile_order, 1)
+                .expect("calibration permute");
+            black_box(&y);
+        });
+
+        let gsrc = vec![1.0f32; 2 << 20];
+        let mut gout = vec![0.0f32; (2 << 20) / 8];
+        let strided = bench(1, 3, || {
+            super::wide::gather_strided(&mut gout, &gsrc, 0, 8);
+            black_box(&gout);
+        });
+
+        HostCalibration {
+            memcpy_gbs: memcpy.bandwidth_gbs(dram_bytes),
+            wide_gbs: wide.bandwidth_gbs(dram_bytes),
+            stream_gbs: stream.bandwidth_gbs(dram_bytes),
+            l2_gbs: l2.bandwidth_gbs(L2_REPS * 2 * L2_BYTES),
+            permute_run_gbs: run.bandwidth_gbs(perm_bytes),
+            permute_tile_gbs: tile.bandwidth_gbs(perm_bytes),
+            strided_gbs: strided.bandwidth_gbs(2 * 4 * gout.len()),
+        }
+    }
+
+    /// Wide-move GB/s over the memcpy baseline (>= ~1 means the u128
+    /// lanes sustain the scalar path's bandwidth).
+    pub fn wide_vs_scalar(&self) -> f64 {
+        ratio(self.wide_gbs, self.memcpy_gbs)
+    }
+
+    /// Streaming-store GB/s over the cached memcpy baseline.
+    pub fn stream_vs_cached(&self) -> f64 {
+        ratio(self.stream_gbs, self.memcpy_gbs)
+    }
+
+    /// The measured ring-byte discount: what a cache-resident byte
+    /// costs relative to a DRAM byte (DRAM GB/s over L2 GB/s), clamped
+    /// to [0.05, 1.0]. Falls back to the documented default
+    /// ([`crate::pipeline::cost::RING_BYTE_DISCOUNT`]) when the L2
+    /// measurement is degenerate.
+    pub fn ring_byte_discount(&self) -> f64 {
+        if self.l2_gbs > 0.0 && self.memcpy_gbs > 0.0 {
+            (self.memcpy_gbs / self.l2_gbs).clamp(0.05, 1.0)
+        } else {
+            crate::pipeline::cost::RING_BYTE_DISCOUNT
+        }
+    }
+
+    /// Lower the measured bandwidths to cost-model weights: memcpy GB/s
+    /// over class GB/s, floored at 1.0 (a weight says how much *more* a
+    /// byte costs than a streamed byte, never less) and ordered
+    /// `permute_run <= permute <= strided` — fat contiguous runs are
+    /// never priced above tile transposes, and gathers never below
+    /// either — so one noisy sample cannot invert the model.
+    pub fn weights(&self) -> CostWeights {
+        let rel = |gbs: f64| {
+            if gbs > 0.0 && self.memcpy_gbs > 0.0 {
+                (self.memcpy_gbs / gbs).max(1.0)
+            } else {
+                1.0
+            }
+        };
+        let permute_run = rel(self.permute_run_gbs);
+        let permute = rel(self.permute_tile_gbs).max(permute_run);
+        let strided = rel(self.strided_gbs).max(permute);
+        CostWeights {
+            streaming: 1.0,
+            strided,
+            permute,
+            permute_run,
+            stencil: 1.0,
+            pointwise: 1.0,
+        }
+    }
+}
+
+fn ratio(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        1.0
+    }
+}
+
+/// The process-wide host calibration (measured once, cached).
+pub fn host_calibration() -> HostCalibration {
+    static CALIB: OnceLock<HostCalibration> = OnceLock::new();
+    *CALIB.get_or_init(HostCalibration::measure)
+}
+
+/// The host-measured cost weights the pipeline's cost-guided rewrite
+/// pass runs against (measured once, cached). The simulator-calibrated
+/// sibling ([`crate::gpusim::calib::host_weights`]) remains the
+/// device-model reference.
+pub fn host_weights() -> CostWeights {
+    static WEIGHTS: OnceLock<CostWeights> = OnceLock::new();
+    *WEIGHTS.get_or_init(|| host_calibration().weights())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_is_positive_finite_and_cached() {
+        let c = host_calibration();
+        for (name, gbs) in [
+            ("memcpy", c.memcpy_gbs),
+            ("wide", c.wide_gbs),
+            ("stream", c.stream_gbs),
+            ("l2", c.l2_gbs),
+            ("permute_run", c.permute_run_gbs),
+            ("permute_tile", c.permute_tile_gbs),
+            ("strided", c.strided_gbs),
+        ] {
+            assert!(gbs > 0.0 && gbs.is_finite(), "{name}: {gbs}");
+        }
+        assert!(c.wide_vs_scalar() > 0.0 && c.wide_vs_scalar().is_finite());
+        assert!(c.stream_vs_cached() > 0.0 && c.stream_vs_cached().is_finite());
+        // Cached: a second call sees the same measurement.
+        assert_eq!(host_calibration().memcpy_gbs, c.memcpy_gbs);
+    }
+
+    #[test]
+    fn weights_are_floored_and_ordered() {
+        let w = host_weights();
+        assert_eq!(w.streaming, 1.0);
+        assert!(w.permute_run >= 1.0 && w.permute_run.is_finite(), "{w:?}");
+        assert!(w.permute >= w.permute_run, "{w:?}");
+        assert!(w.strided >= w.permute, "{w:?}");
+        assert_eq!(w.stencil, 1.0);
+        assert_eq!(w.pointwise, 1.0);
+        assert_eq!(host_weights(), w);
+    }
+
+    #[test]
+    fn ring_discount_is_clamped() {
+        let d = host_calibration().ring_byte_discount();
+        assert!((0.05..=1.0).contains(&d), "discount {d}");
+        // A degenerate L2 measurement falls back to the default.
+        let broken = HostCalibration { l2_gbs: 0.0, ..host_calibration() };
+        assert_eq!(
+            broken.ring_byte_discount(),
+            crate::pipeline::cost::RING_BYTE_DISCOUNT
+        );
+    }
+}

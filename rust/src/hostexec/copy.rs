@@ -27,6 +27,8 @@ fn fixed<const N: usize>(dst: &mut [u8], src: &[u8]) {
 /// `[u8; N]` assignment compiles to plain u16/u32/u64/vector register
 /// moves instead — the byte-erased generalization of the old f32-only
 /// `copy_run` (the ROADMAP's SIMD-width-aware run-copy follow-up).
+/// Everything longer goes through the 32-byte-lane wide mover
+/// ([`super::wide::copy_wide`]).
 #[inline(always)]
 pub fn copy_run(dst: &mut [u8], src: &[u8]) {
     debug_assert_eq!(dst.len(), src.len());
@@ -49,23 +51,31 @@ pub fn copy_run(dst: &mut [u8], src: &[u8]) {
         48 => fixed::<48>(dst, src),
         56 => fixed::<56>(dst, src),
         64 => fixed::<64>(dst, src),
-        _ => dst.copy_from_slice(src),
+        _ => super::wide::copy_wide(dst, src),
     }
 }
 
-/// Parallel memcpy over raw bytes: split `dst` into per-worker chunks.
+/// Parallel copy over raw bytes: split `dst` into per-worker chunks,
+/// each moved in 32-byte wide lanes — with non-temporal streaming
+/// stores when the **whole** output is past the cache-pollution
+/// threshold (one [`super::wide::use_streaming`] decision per output,
+/// so the store policy never depends on the worker count).
 pub fn par_copy(src: &[u8], dst: &mut [u8], threads: usize) {
     assert_eq!(src.len(), dst.len());
     let t = pool::effective_threads_bytes(threads, dst.len(), threads.max(1));
+    let streaming = super::wide::use_streaming(dst.len());
     if t <= 1 {
-        dst.copy_from_slice(src);
+        super::wide::copy_best(dst, src, streaming);
         return;
     }
     let per = (dst.len() + t - 1) / t;
     std::thread::scope(|scope| {
         for (i, chunk) in dst.chunks_mut(per).enumerate() {
             let src = &src[i * per..i * per + chunk.len()];
-            scope.spawn(move || chunk.copy_from_slice(src));
+            scope.spawn(move || {
+                pool::maybe_pin(i);
+                super::wide::copy_best(chunk, src, streaming);
+            });
         }
     });
 }
@@ -105,9 +115,10 @@ pub fn read_range<T: Element>(
 }
 
 /// Strided read — bit-identical to [`crate::ops::copy::read_strided`].
-/// The gather loop is monomorphized per element type: a strided walk of
-/// typed loads/stores, the host analogue of the kernel template's
-/// per-width instantiation.
+/// The gather loop is monomorphized per element type and 4-way unrolled
+/// ([`super::wide::gather_strided`]): four strided loads land as one
+/// contiguous 4-element store group, the host analogue of the kernel
+/// template's per-width `float4` instantiation.
 pub fn read_strided<T: Element>(
     x: &NdArray<T>,
     base: usize,
@@ -128,18 +139,14 @@ pub fn read_strided<T: Element>(
     let t = pool::effective_threads(threads, count, threads.max(1));
     let xd = x.data();
     if t <= 1 {
-        for (k, o) in out.iter_mut().enumerate() {
-            *o = xd[base + k * stride];
-        }
+        super::wide::gather_strided(&mut out, xd, base, stride);
     } else {
         let per = (count + t - 1) / t;
         std::thread::scope(|scope| {
             for (ci, chunk) in out.chunks_mut(per).enumerate() {
                 scope.spawn(move || {
-                    let k0 = ci * per;
-                    for (k, o) in chunk.iter_mut().enumerate() {
-                        *o = xd[base + (k0 + k) * stride];
-                    }
+                    pool::maybe_pin(ci);
+                    super::wide::gather_strided(chunk, xd, base + ci * per * stride, stride);
                 });
             }
         });
@@ -214,6 +221,7 @@ pub fn subarray<T: Element>(
             // Advance the walker to this band's first row.
             let skip = wi * rows_per;
             scope.spawn(move || {
+                pool::maybe_pin(wi);
                 for (chunk, ioff) in band.chunks_mut(run_bytes).zip(walkr.by_ref().skip(skip)) {
                     copy_run(chunk, &xb[ioff * es..ioff * es + run_bytes]);
                 }

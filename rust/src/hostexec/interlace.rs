@@ -38,11 +38,28 @@ pub fn interlace<T: Element>(
     let t = pool::effective_threads(threads, n * len, threads.max(1));
     let per_i = ((len + t - 1) / t).max(1);
     let fill = |band: &mut [T], i0: usize| {
-        for (k, px) in band.chunks_mut(n).enumerate() {
-            let i = i0 + k;
-            for (o, d) in px.iter_mut().zip(&data) {
-                *o = d[i];
+        let pixels = band.len() / n;
+        let mut k = 0;
+        // Four pixels per step: each input stream contributes one
+        // contiguous 4-element wide load, scattered into a
+        // cache-resident 4n-element output window.
+        while k + 4 <= pixels {
+            let base = k * n;
+            for (j, d) in data.iter().enumerate() {
+                let s: [T; 4] = d[i0 + k..i0 + k + 4].try_into().expect("4-element lane");
+                band[base + j] = s[0];
+                band[base + n + j] = s[1];
+                band[base + 2 * n + j] = s[2];
+                band[base + 3 * n + j] = s[3];
             }
+            k += 4;
+        }
+        while k < pixels {
+            let base = k * n;
+            for (j, d) in data.iter().enumerate() {
+                band[base + j] = d[i0 + k];
+            }
+            k += 1;
         }
     };
     if t <= 1 {
@@ -51,7 +68,10 @@ pub fn interlace<T: Element>(
         std::thread::scope(|scope| {
             for (wi, band) in out.chunks_mut(per_i * n).enumerate() {
                 let fill = &fill;
-                scope.spawn(move || fill(band, wi * per_i));
+                scope.spawn(move || {
+                    pool::maybe_pin(wi);
+                    fill(band, wi * per_i);
+                });
             }
         });
     }
@@ -78,11 +98,26 @@ pub fn deinterlace<T: Element>(
     let xd = x.data();
     let mut outs: Vec<Vec<T>> = vec![vec![T::default(); len]; n];
     let t = pool::effective_threads(threads, x.len(), threads.max(1));
+    // One de-interlaced lane: `band[k] = xd[(i0 + k) * n + j]`, 4-way
+    // unrolled so each plane's writes land as contiguous 4-element
+    // stores (the wide-move quad).
+    let lane = |band: &mut [T], j: usize, i0: usize| {
+        let m = band.len();
+        let mut k = 0;
+        while k + 4 <= m {
+            let b = (i0 + k) * n + j;
+            let w = [xd[b], xd[b + n], xd[b + 2 * n], xd[b + 3 * n]];
+            band[k..k + 4].copy_from_slice(&w);
+            k += 4;
+        }
+        while k < m {
+            band[k] = xd[(i0 + k) * n + j];
+            k += 1;
+        }
+    };
     if t <= 1 {
         for (j, o) in outs.iter_mut().enumerate() {
-            for (i, v) in o.iter_mut().enumerate() {
-                *v = xd[i * n + j];
-            }
+            lane(o, j, 0);
         }
     } else {
         // Band the i-range; worker w owns band w of every plane, so all
@@ -96,12 +131,12 @@ pub fn deinterlace<T: Element>(
             }
         }
         std::thread::scope(|scope| {
-            for items in per_worker {
+            for (wi, items) in per_worker.into_iter().enumerate() {
+                let lane = &lane;
                 scope.spawn(move || {
+                    pool::maybe_pin(wi);
                     for (j, i0, band) in items {
-                        for (k, v) in band.iter_mut().enumerate() {
-                            *v = xd[(i0 + k) * n + j];
-                        }
+                        lane(band, j, i0);
                     }
                 });
             }

@@ -47,13 +47,26 @@
 //!
 //! Thread count: `GDRK_THREADS` env override, else available
 //! parallelism; tensors under [`pool::PARALLEL_THRESHOLD`] run inline.
+//!
+//! ## The wide-move core
+//!
+//! Contiguous runs move through [`wide`]: 32-byte `u128`-pair lanes
+//! behind an alignment prologue/epilogue, with x86-64 non-temporal
+//! streaming stores for outputs past the cache-pollution threshold —
+//! the host port of the kernels' `float4`/`double4` widened moves.
+//! Workers can pin to cores (`GDRK_PIN=1`, [`pool::maybe_pin`]) so
+//! first-touch output pages land on the worker that writes them, and
+//! [`calib`] measures what all of it buys on this machine, lowering
+//! the ratios into the cost model's [`crate::ops::cost::CostWeights`].
 
+pub mod calib;
 pub mod copy;
 pub mod interlace;
 pub mod permute;
 pub mod pool;
 pub mod registry;
 pub mod stencil;
+pub mod wide;
 
 pub use permute::{permute as permute_fast, transpose as transpose_fast, transpose_with_threads};
 pub use registry::{op_for_artifact, pipeline_for_artifact};

@@ -5,8 +5,11 @@
 //! instead asks the planner for the [`HostGeometry`] of the move:
 //!
 //! * the shared fastest prefix becomes a contiguous **run** moved whole
-//!   with `copy_from_slice` (the host version of the kernels' widened
-//!   per-thread copies);
+//!   through the wide-move core ([`super::copy::copy_run`] →
+//!   [`super::wide`], the host version of the kernels' widened
+//!   per-thread copies); single-element runs gather four strided
+//!   elements per step into one contiguous 8–32-byte store (a
+//!   `float4`-style quad);
 //! * the reduced permutation is executed as a 2D **tile** walk over the
 //!   movement plane (tile rows = the reduced input's fastest axis, tile
 //!   columns = the reduced output's fastest axis), `TILE`×`TILE` runs
@@ -163,13 +166,29 @@ fn tiled_runs_w<const W: usize>(
                 let obase = ob + i * out_strides[r];
                 let ibase = ib + i; // walk[r] == 1
                 if W > 0 && l == 1 {
-                    // Single-element runs: one const-width register
-                    // move per element (W is the monomorphized width).
-                    for j in j0..j1 {
+                    // Single-element runs: gather four strided source
+                    // elements per step into one contiguous 8–32-byte
+                    // store (W is the monomorphized width) — the host
+                    // analogue of a `float4` write per quad.
+                    let mut j = j0;
+                    while j + 4 <= j1 {
+                        let mut quad = [0u8; 32];
+                        for q in 0..4 {
+                            let src = &xd[(ibase + (j + q) * walk[c]) * W..][..W];
+                            quad[q * W..(q + 1) * W].copy_from_slice(src);
+                        }
+                        // SAFETY: (batch, i, j..j+4) names four unique
+                        // adjacent output runs; items partition
+                        // (batch, i).
+                        unsafe { sink.write_run((obase + j) * W, &quad[..4 * W]) };
+                        j += 4;
+                    }
+                    while j < j1 {
                         let src = &xd[(ibase + j * walk[c]) * W..][..W];
                         // SAFETY: each (batch, i, j) names a unique
                         // output run; items partition (batch, i).
                         unsafe { sink.write_fixed::<W>((obase + j) * W, src) };
+                        j += 1;
                     }
                 } else {
                     for j in j0..j1 {

@@ -5,6 +5,13 @@
 //! Spawning costs ~10 µs per worker, so callers gate parallelism on
 //! problem size via [`effective_threads`] — tiny property-test tensors
 //! run inline on the caller's thread.
+//!
+//! Workers can opt into core affinity ([`maybe_pin`], `GDRK_PIN=1`):
+//! each worker pins to a core chosen by its index, and because output
+//! buffers are allocated zeroed (`vec![T::default(); n]` lowers to
+//! `alloc_zeroed` → lazy, untouched pages), the first touch of each
+//! output band happens on the worker that writes it — so under pinning
+//! the pages land on that worker's NUMA node (first-touch placement).
 
 /// Elements below which a rearrangement runs single-threaded.
 pub const PARALLEL_THRESHOLD: usize = 1 << 15;
@@ -74,6 +81,7 @@ pub fn run_indexed<F: Fn(usize) + Sync>(threads: usize, items: usize, f: F) {
         for tid in 0..t {
             let f = &f;
             scope.spawn(move || {
+                maybe_pin(tid);
                 let mut i = tid;
                 while i < items {
                     f(i);
@@ -82,6 +90,63 @@ pub fn run_indexed<F: Fn(usize) + Sync>(threads: usize, items: usize, f: F) {
             });
         }
     });
+}
+
+/// Whether worker→core affinity pinning is on (`GDRK_PIN=1`/`true`).
+/// Off by default: pinning helps bandwidth-bound movement (stable
+/// first-touch NUMA placement, no cross-core migration mid-copy) but
+/// hurts when the pool shares the machine with other tenants. Resolved
+/// once per process.
+pub fn pinning_enabled() -> bool {
+    static PIN: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *PIN.get_or_init(|| {
+        matches!(std::env::var("GDRK_PIN").ok().as_deref(), Some("1") | Some("true"))
+    })
+}
+
+/// Pin the calling worker to a core chosen round-robin from its index.
+/// No-op unless [`pinning_enabled`], on non-Linux targets, or when the
+/// kernel refuses the mask — pinning is strictly an optimization and
+/// must never turn into an error path.
+pub fn maybe_pin(worker: usize) {
+    if !pinning_enabled() {
+        return;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let _ = affinity::pin_to(worker % cores);
+    }
+    #[cfg(not(target_os = "linux"))]
+    let _ = worker;
+}
+
+/// Raw `sched_setaffinity(2)` binding, hand-declared so the crate stays
+/// free of a libc dependency. Linux-only.
+#[cfg(target_os = "linux")]
+mod affinity {
+    /// 1024-bit CPU mask — the kernel's default `cpu_set_t` size.
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; 16],
+    }
+
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+
+    /// Pin the calling thread (pid 0) to `cpu`. Returns whether the
+    /// kernel accepted the mask (false for cores the machine lacks).
+    pub fn pin_to(cpu: usize) -> bool {
+        if cpu >= 16 * 64 {
+            return false;
+        }
+        let mut set = CpuSet { bits: [0u64; 16] };
+        set.bits[cpu / 64] = 1u64 << (cpu % 64);
+        unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
+    }
 }
 
 /// A mutable **byte** output buffer shared by workers that write
@@ -210,5 +275,29 @@ mod tests {
     #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn maybe_pin_is_safe_at_any_index() {
+        // With GDRK_PIN unset (the test environment) this is a no-op;
+        // with it set, out-of-range indices wrap round-robin. Either
+        // way it must never panic or error.
+        maybe_pin(0);
+        maybe_pin(7);
+        maybe_pin(usize::MAX - 3);
+        assert_eq!(pinning_enabled(), pinning_enabled());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn pin_to_accepts_a_real_core_and_rejects_fake_ones() {
+        // Pin a scratch thread — never the shared test-runner thread —
+        // so the affinity change cannot leak into other tests.
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                assert!((0..64).any(affinity::pin_to), "no core accepted a pin");
+                assert!(!affinity::pin_to(16 * 64), "out-of-mask cpu must fail");
+            });
+        });
     }
 }

@@ -522,8 +522,9 @@ pub fn apply_pointwise<T: Numeric>(
     } else {
         let chunk = (n + t - 1) / t;
         std::thread::scope(|scope| {
-            for (oc, ic) in out.chunks_mut(chunk).zip(x.data().chunks(chunk)) {
+            for (wi, (oc, ic)) in out.chunks_mut(chunk).zip(x.data().chunks(chunk)).enumerate() {
                 scope.spawn(move || {
+                    super::pool::maybe_pin(wi);
                     for (o, &v) in oc.iter_mut().zip(ic) {
                         *o = spec.apply_to(v);
                     }
@@ -619,7 +620,10 @@ fn run_lowered<T: Numeric>(
         std::thread::scope(|scope| {
             for (wi, band) in out.chunks_mut(rows_per * w).enumerate() {
                 let do_band = &do_band;
-                scope.spawn(move || do_band(band, wi * rows_per));
+                scope.spawn(move || {
+                    super::pool::maybe_pin(wi);
+                    do_band(band, wi * rows_per);
+                });
             }
         });
     }

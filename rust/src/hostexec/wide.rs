@@ -1,0 +1,272 @@
+//! Wide-move primitives: 16/32-byte lane copies and non-temporal
+//! streaming stores for the host movement core.
+//!
+//! The paper's kernels reach peak bandwidth by widening each thread's
+//! move to a `float4`/`double4` (16–32 bytes) so every memory
+//! transaction is a full burst. This module is that trick on the host
+//! memory system: [`copy_wide`] moves contiguous runs as `u128` pairs
+//! behind a safe alignment prologue/epilogue, and [`copy_stream`]
+//! replaces the stores with x86-64 non-temporal (`movntdq`) streaming
+//! stores so full-size outputs bypass the cache instead of evicting the
+//! working set ([`use_streaming`] gates on output size). Everything
+//! above — [`super::copy::copy_run`], [`super::copy::par_copy`], the
+//! permute tile engine and the interlace lane loops — routes its inner
+//! moves through here.
+//!
+//! ## The alignment prologue/epilogue contract
+//!
+//! For a run of `n >= 32` bytes:
+//!
+//! 1. **prologue** — one unaligned 32-byte move covers `[0, 32)`, then
+//!    the cursor advances to the first 32-byte-aligned *destination*
+//!    address (1..=32 bytes in);
+//! 2. **body** — aligned 32-byte stores (two `u128` lanes per step;
+//!    loads stay unaligned — stores are what write-combining buffers
+//!    care about) while at least 32 bytes remain;
+//! 3. **epilogue** — one unaligned 32-byte move ending exactly at `n`,
+//!    re-writing up to 31 bytes the body already wrote with identical
+//!    values (source and destination never alias, so the overlap is
+//!    benign).
+//!
+//! Runs under 32 bytes fall back to `copy_from_slice` (the const-width
+//! dispatch in [`super::copy::copy_run`] already covers the hot short
+//! lengths). Every path is bit-identical to `copy_from_slice` by
+//! construction and pinned by the offset × tail sweeps below and in
+//! `rust/tests/wide_move_anchor.rs`.
+
+use std::sync::OnceLock;
+
+/// One wide lane: a `u128` (16 bytes); moves step two lanes (32 B).
+const LANE_BYTES: usize = 16;
+/// Bytes per body step: two lanes, one aligned 32-byte store pair.
+const STEP: usize = 2 * LANE_BYTES;
+
+/// Default output size (bytes) at which streaming stores engage: below
+/// ~half an L2 the output plausibly gets re-read while still resident,
+/// above it the write allocation only evicts useful lines.
+pub const STREAM_BYTES_DEFAULT: usize = 4 << 20;
+
+/// The streaming-store threshold in bytes (`GDRK_STREAM_BYTES`
+/// override, else [`STREAM_BYTES_DEFAULT`]). Resolved once per process.
+pub fn stream_threshold_bytes() -> usize {
+    static THRESHOLD: OnceLock<usize> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| {
+        std::env::var("GDRK_STREAM_BYTES")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(STREAM_BYTES_DEFAULT)
+    })
+}
+
+/// Whether an output of `total_bytes` should be written with
+/// non-temporal stores. Callers decide once per *whole* output, not per
+/// worker chunk, so the policy is independent of the thread count.
+pub fn use_streaming(total_bytes: usize) -> bool {
+    total_bytes >= stream_threshold_bytes()
+}
+
+/// Copy a contiguous byte run in 32-byte wide moves (cached stores).
+/// Bit-identical to `dst.copy_from_slice(src)` at any length and any
+/// src/dst alignment.
+#[inline]
+pub fn copy_wide(dst: &mut [u8], src: &[u8]) {
+    debug_assert_eq!(dst.len(), src.len());
+    let n = dst.len();
+    if n < STEP {
+        dst.copy_from_slice(src);
+        return;
+    }
+    // SAFETY: lengths are equal and >= STEP; `dst` and `src` are
+    // distinct borrows, so the ranges cannot alias.
+    unsafe { copy_wide_raw(dst.as_mut_ptr(), src.as_ptr(), n) }
+}
+
+/// The prologue/body/epilogue loop. Caller guarantees `n >= STEP`,
+/// both ranges valid, non-aliasing.
+unsafe fn copy_wide_raw(dst: *mut u8, src: *const u8, n: usize) {
+    use std::ptr;
+    // Prologue: unaligned 32-byte move covering [0, 32).
+    let a = ptr::read_unaligned(src as *const u128);
+    let b = ptr::read_unaligned(src.add(LANE_BYTES) as *const u128);
+    ptr::write_unaligned(dst as *mut u128, a);
+    ptr::write_unaligned(dst.add(LANE_BYTES) as *mut u128, b);
+    // Advance to the first 32-byte-aligned destination address.
+    let mut off = STEP - (dst as usize & (STEP - 1)); // 1..=32
+    // Body: aligned 32-byte stores (dst+off is 32-aligned, so both
+    // 16-byte lanes are aligned stores).
+    while off + STEP <= n {
+        let a = ptr::read_unaligned(src.add(off) as *const u128);
+        let b = ptr::read_unaligned(src.add(off + LANE_BYTES) as *const u128);
+        ptr::write(dst.add(off) as *mut u128, a);
+        ptr::write(dst.add(off + LANE_BYTES) as *mut u128, b);
+        off += STEP;
+    }
+    // Epilogue: unaligned 32-byte move ending exactly at n. It may
+    // rewrite up to 31 bytes of the body with identical values.
+    if off < n {
+        let t = n - STEP;
+        let a = ptr::read_unaligned(src.add(t) as *const u128);
+        let b = ptr::read_unaligned(src.add(t + LANE_BYTES) as *const u128);
+        ptr::write_unaligned(dst.add(t) as *mut u128, a);
+        ptr::write_unaligned(dst.add(t + LANE_BYTES) as *mut u128, b);
+    }
+}
+
+/// Copy a contiguous byte run with non-temporal (cache-bypassing)
+/// stores where the architecture provides them (x86-64 `movntdq`),
+/// falling back to [`copy_wide`] elsewhere and for short runs.
+/// Bit-identical to `copy_from_slice` on every path.
+#[inline]
+pub fn copy_stream(dst: &mut [u8], src: &[u8]) {
+    debug_assert_eq!(dst.len(), src.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        let n = dst.len();
+        if n >= STEP {
+            // SAFETY: lengths equal, >= STEP, distinct borrows.
+            unsafe { copy_stream_x86(dst.as_mut_ptr(), src.as_ptr(), n) };
+            return;
+        }
+    }
+    copy_wide(dst, src);
+}
+
+/// SSE2 streaming-store body (SSE2 is baseline on x86-64, so no runtime
+/// feature detection). Same prologue/epilogue contract as
+/// [`copy_wide_raw`], with a 16-byte alignment quantum (`movntdq`
+/// requires 16-byte-aligned destinations) and an `sfence` making the
+/// weakly-ordered stores visible before the worker joins.
+#[cfg(target_arch = "x86_64")]
+unsafe fn copy_stream_x86(dst: *mut u8, src: *const u8, n: usize) {
+    use std::arch::x86_64::{
+        __m128i, _mm_loadu_si128, _mm_sfence, _mm_storeu_si128, _mm_stream_si128,
+    };
+    debug_assert!(n >= STEP);
+    // Prologue: two unaligned 16-byte moves cover [0, 32).
+    _mm_storeu_si128(dst as *mut __m128i, _mm_loadu_si128(src as *const __m128i));
+    _mm_storeu_si128(
+        dst.add(LANE_BYTES) as *mut __m128i,
+        _mm_loadu_si128(src.add(LANE_BYTES) as *const __m128i),
+    );
+    let mut off = LANE_BYTES - (dst as usize & (LANE_BYTES - 1)); // 1..=16
+    // Body: aligned non-temporal 16-byte stores.
+    while off + LANE_BYTES <= n {
+        let v = _mm_loadu_si128(src.add(off) as *const __m128i);
+        _mm_stream_si128(dst.add(off) as *mut __m128i, v);
+        off += LANE_BYTES;
+    }
+    // Epilogue: unaligned 16-byte move ending exactly at n.
+    if off < n {
+        let t = n - LANE_BYTES;
+        _mm_storeu_si128(
+            dst.add(t) as *mut __m128i,
+            _mm_loadu_si128(src.add(t) as *const __m128i),
+        );
+    }
+    // Drain the write-combining buffers: non-temporal stores are weakly
+    // ordered, and the scope join that follows a parallel region is the
+    // release point other threads read the output after.
+    _mm_sfence();
+}
+
+/// Route one contiguous run to the policy the caller chose once for the
+/// whole output: streaming stores or cached wide moves.
+#[inline]
+pub fn copy_best(dst: &mut [u8], src: &[u8], streaming: bool) {
+    if streaming {
+        copy_stream(dst, src);
+    } else {
+        copy_wide(dst, src);
+    }
+}
+
+/// Strided gather into a contiguous output, 4-way unrolled:
+/// `out[k] = src[base + k * stride]`. The four loads land in one
+/// contiguous 4-element store group (8–32 bytes at widths 2/4/8) —
+/// the host analogue of a `float4` write per gather quad.
+#[inline]
+pub fn gather_strided<T: Copy>(out: &mut [T], src: &[T], base: usize, stride: usize) {
+    let n = out.len();
+    let mut k = 0;
+    while k + 4 <= n {
+        let b = base + k * stride;
+        let quad = [src[b], src[b + stride], src[b + 2 * stride], src[b + 3 * stride]];
+        out[k..k + 4].copy_from_slice(&quad);
+        k += 4;
+    }
+    while k < n {
+        out[k] = src[base + k * stride];
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Bit-identity of both wide paths vs `copy_from_slice`, swept over
+    /// src offsets 0..16 × dst offsets 0..16 × tail lengths 0..64 plus
+    /// body-exercising lengths — every alignment class of the
+    /// prologue/epilogue contract.
+    #[test]
+    fn wide_and_stream_match_memcpy_across_offsets_and_tails() {
+        let mut rng = Rng::new(0x51DE);
+        let src_full: Vec<u8> = (0..4 << 10).map(|_| rng.next_u64() as u8).collect();
+        let lens: Vec<usize> = (0..64).chain([65, 96, 127, 255, 1000, 4000]).collect();
+        for so in 0..16usize {
+            for dof in 0..16usize {
+                for &len in &lens {
+                    let src = &src_full[so..so + len];
+                    let mut wide = vec![0xA5u8; dof + len];
+                    copy_wide(&mut wide[dof..], src);
+                    assert_eq!(&wide[dof..], src, "wide so={so} dof={dof} len={len}");
+                    let mut stream = vec![0x5Au8; dof + len];
+                    copy_stream(&mut stream[dof..], src);
+                    assert_eq!(&stream[dof..], src, "stream so={so} dof={dof} len={len}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn large_runs_match_memcpy() {
+        let mut rng = Rng::new(0x51DF);
+        let src: Vec<u8> = (0..(1 << 20) + 13).map(|_| rng.next_u64() as u8).collect();
+        let mut dst = vec![0u8; src.len()];
+        copy_wide(&mut dst, &src);
+        assert_eq!(dst, src);
+        let mut dst = vec![0u8; src.len()];
+        copy_stream(&mut dst, &src);
+        assert_eq!(dst, src);
+    }
+
+    #[test]
+    fn gather_strided_matches_scalar_walk() {
+        let src: Vec<u32> = (0..10_000).collect();
+        for stride in [1usize, 2, 3, 7, 16] {
+            for count in [0usize, 1, 2, 3, 4, 5, 7, 8, 63, 500] {
+                for base in [0usize, 1, 5] {
+                    if count > 0 && base + (count - 1) * stride >= src.len() {
+                        continue;
+                    }
+                    let mut out = vec![0u32; count];
+                    gather_strided(&mut out, &src, base, stride);
+                    let want: Vec<u32> = (0..count).map(|k| src[base + k * stride]).collect();
+                    assert_eq!(out, want, "base={base} stride={stride} count={count}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_gate_uses_threshold() {
+        let th = stream_threshold_bytes();
+        assert!(th > 0);
+        assert!(use_streaming(th));
+        assert!(use_streaming(th + 1));
+        assert!(!use_streaming(th - 1));
+        // Cached (same measure-once pattern as the roofline).
+        assert_eq!(stream_threshold_bytes(), th);
+    }
+}

@@ -30,15 +30,21 @@ pub enum OpClass {
     Permute,
     Stencil,
     Pointwise,
+    /// Run-preserving permutes (axis 0 stays fastest): fat contiguous
+    /// runs the wide-move core streams — tracked apart from tiled
+    /// transposes because the cost model prices them apart
+    /// (`CostWeights::permute_run`).
+    PermuteRun,
 }
 
 impl OpClass {
-    pub const ALL: [OpClass; 5] = [
+    pub const ALL: [OpClass; 6] = [
         OpClass::Streaming,
         OpClass::Strided,
         OpClass::Permute,
         OpClass::Stencil,
         OpClass::Pointwise,
+        OpClass::PermuteRun,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -48,6 +54,7 @@ impl OpClass {
             OpClass::Permute => "permute",
             OpClass::Stencil => "stencil",
             OpClass::Pointwise => "pointwise",
+            OpClass::PermuteRun => "permute_run",
         }
     }
 
@@ -58,6 +65,7 @@ impl OpClass {
             OpClass::Permute => 2,
             OpClass::Stencil => 3,
             OpClass::Pointwise => 4,
+            OpClass::PermuteRun => 5,
         }
     }
 }
@@ -80,7 +88,8 @@ impl ClassCell {
     }
 }
 
-static LEDGER: [ClassCell; 5] = [
+static LEDGER: [ClassCell; 6] = [
+    ClassCell::new(),
     ClassCell::new(),
     ClassCell::new(),
     ClassCell::new(),

@@ -70,8 +70,15 @@ pub struct CostWeights {
     pub streaming: f64,
     /// Strided gathers (`ReadStrided`).
     pub strided: f64,
-    /// Tiled permutes (`Reorder` / `ReorderCollapse`).
+    /// Tiled permutes (`Reorder` / `ReorderCollapse` whose order moves
+    /// the fastest axis — a transpose plane must be tiled).
     pub permute: f64,
+    /// Run-preserving permutes (non-identity orders that keep axis 0
+    /// fastest): the movement collapses into fat contiguous runs the
+    /// wide-move core streams, so they price closer to memcpy than
+    /// tiled transposes. Calibrated per order family by
+    /// [`crate::hostexec::calib`].
+    pub permute_run: f64,
     /// Stencil passes (reads served once per element, taps from cache).
     pub stencil: f64,
     /// Elementwise functor chains.
@@ -84,6 +91,7 @@ impl Default for CostWeights {
             streaming: 1.0,
             strided: 1.0,
             permute: 1.0,
+            permute_run: 1.0,
             stencil: 1.0,
             pointwise: 1.0,
         }
@@ -234,8 +242,10 @@ impl Op {
     }
 
     /// The op-class weight the cost model multiplies this op's bytes
-    /// by. Identity reorders stream (no transpose plane), everything
-    /// else maps to its [`CostWeights`] class.
+    /// by. Identity reorders stream (no transpose plane); non-identity
+    /// orders split per order vector — run-preserving (axis 0 stays
+    /// fastest, the movement is fat contiguous runs) vs tiled
+    /// transposes; everything else maps to its [`CostWeights`] class.
     pub fn cost_weight(&self, w: &CostWeights) -> f64 {
         match self {
             Op::Copy
@@ -244,16 +254,11 @@ impl Op {
             | Op::Interlace { .. }
             | Op::Deinterlace { .. } => w.streaming,
             Op::ReadStrided { .. } => w.strided,
-            Op::Reorder { order } => {
+            Op::Reorder { order } | Op::ReorderCollapse { order, .. } => {
                 if order.is_identity() {
                     w.streaming
-                } else {
-                    w.permute
-                }
-            }
-            Op::ReorderCollapse { order, .. } => {
-                if order.is_identity() {
-                    w.streaming
+                } else if order.fastest_dim() == 0 {
+                    w.permute_run
                 } else {
                     w.permute
                 }
@@ -267,7 +272,8 @@ impl Op {
     /// bandwidth-utilization ledger ([`crate::obs::bandwidth`]) — the
     /// same partition [`Op::cost_weight`] prices, so utilization and
     /// drift series line up with the cost model's axes. Identity
-    /// reorders stream, matching the weight mapping.
+    /// reorders stream, and run-preserving vs tiled permutes split,
+    /// matching the weight mapping.
     pub fn cost_class(&self) -> crate::obs::bandwidth::OpClass {
         use crate::obs::bandwidth::OpClass;
         match self {
@@ -277,16 +283,11 @@ impl Op {
             | Op::Interlace { .. }
             | Op::Deinterlace { .. } => OpClass::Streaming,
             Op::ReadStrided { .. } => OpClass::Strided,
-            Op::Reorder { order } => {
+            Op::Reorder { order } | Op::ReorderCollapse { order, .. } => {
                 if order.is_identity() {
                     OpClass::Streaming
-                } else {
-                    OpClass::Permute
-                }
-            }
-            Op::ReorderCollapse { order, .. } => {
-                if order.is_identity() {
-                    OpClass::Streaming
+                } else if order.fastest_dim() == 0 {
+                    OpClass::PermuteRun
                 } else {
                     OpClass::Permute
                 }
@@ -412,6 +413,7 @@ mod tests {
             streaming: 1.0,
             strided: 4.0,
             permute: 2.0,
+            permute_run: 1.25,
             stencil: 1.5,
             pointwise: 1.0,
         };
@@ -423,6 +425,17 @@ mod tests {
         assert_eq!(
             Op::Reorder { order: Order::new(&[1, 0]).unwrap() }.cost_weight(&w),
             2.0
+        );
+        // Run-preserving orders (axis 0 stays fastest) price as fat
+        // contiguous runs, not tiled transposes.
+        assert_eq!(
+            Op::Reorder { order: Order::new(&[0, 2, 1]).unwrap() }.cost_weight(&w),
+            1.25
+        );
+        assert_eq!(
+            Op::ReorderCollapse { order: Order::new(&[0, 2, 1]).unwrap(), out_rank: 2 }
+                .cost_weight(&w),
+            1.25
         );
         // Identity reorders stream — no transpose plane to tile.
         assert_eq!(
@@ -449,6 +462,10 @@ mod tests {
         assert_eq!(
             Op::Reorder { order: Order::new(&[1, 0]).unwrap() }.cost_class(),
             OpClass::Permute
+        );
+        assert_eq!(
+            Op::Reorder { order: Order::new(&[0, 2, 1]).unwrap() }.cost_class(),
+            OpClass::PermuteRun
         );
         assert_eq!(Op::Reorder { order: Order::identity(2) }.cost_class(), OpClass::Streaming);
         assert_eq!(Op::Interlace { n: 2 }.cost_class(), OpClass::Streaming);

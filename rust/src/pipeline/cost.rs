@@ -34,7 +34,22 @@ use crate::tensor::{DType, Element, NdArray};
 /// free — a quarter-rate charge keeps pathological fusions (fat halos
 /// over shallow bands) from looking free without double-counting the
 /// common case.
+///
+/// This constant is the **documented default and fallback**; the
+/// execution path uses the ratio *measured* on this host
+/// ([`ring_byte_discount`]), carried per decision in
+/// [`ChainCtx::ring_discount`]. Tests that pin band layouts pass the
+/// constant explicitly ([`ChainCtx::with_ring_discount`]).
 pub const RING_BYTE_DISCOUNT: f64 = 0.25;
+
+/// The ring-byte discount the execution path uses: what a
+/// cache-resident byte costs relative to a DRAM byte, measured from the
+/// host's L2-vs-DRAM bandwidth ratio ([`crate::hostexec::calib`]);
+/// falls back to [`RING_BYTE_DISCOUNT`] when the measurement is
+/// degenerate. Measured once per process.
+pub fn ring_byte_discount() -> f64 {
+    crate::hostexec::calib::host_calibration().ring_byte_discount()
+}
 
 /// Shape/dtype context a cost-guided decision evaluates against: the
 /// pipeline's input lane geometry plus the calibrated op-class weights.
@@ -48,19 +63,26 @@ pub struct ChainCtx {
     pub weights: CostWeights,
     /// Worker budget fused runs would execute with.
     pub threads: usize,
+    /// Fraction of a full-size byte a ring (cache-resident) byte is
+    /// charged at in fusion cut decisions (measured on the execution
+    /// path, pinned to [`RING_BYTE_DISCOUNT`] in layout tests).
+    pub ring_discount: f64,
 }
 
 impl ChainCtx {
-    /// Context with the simulator-calibrated weights
-    /// ([`crate::gpusim::calib::host_weights`]) and the process worker
-    /// count — what the execution path uses.
+    /// Context with the host-measured weights
+    /// ([`crate::hostexec::calib::host_weights`] — the executor that
+    /// serves traffic is the host backend, so decisions are priced by
+    /// what this machine measures), the measured ring-byte discount,
+    /// and the process worker count — what the execution path uses.
     pub fn new(dims: Vec<usize>, width: usize, dtype: DType) -> ChainCtx {
         ChainCtx {
             dims,
             width,
             dtype,
-            weights: crate::gpusim::calib::host_weights(),
+            weights: crate::hostexec::calib::host_weights(),
             threads: pool::num_threads(),
+            ring_discount: ring_byte_discount(),
         }
     }
 
@@ -83,6 +105,13 @@ impl ChainCtx {
     /// Replace the worker budget (tests pin band layouts).
     pub fn with_threads(mut self, threads: usize) -> ChainCtx {
         self.threads = threads;
+        self
+    }
+
+    /// Replace the ring-byte discount (tests pin the documented
+    /// [`RING_BYTE_DISCOUNT`] so cut decisions stay deterministic).
+    pub fn with_ring_discount(mut self, discount: f64) -> ChainCtx {
+        self.ring_discount = discount;
         self
     }
 }
@@ -154,10 +183,10 @@ pub fn chain_estimate(stages: &[Op], ctx: &ChainCtx) -> Option<ChainEstimate> {
 
 /// Decision cost of executing `radii` (a fusable run slice) as **one**
 /// group on a lane of `dims`: modeled full-size bytes plus the
-/// cache-discounted ring recompute.
-fn group_cost(dims: &[usize], radii: &[usize], es: usize, threads: usize) -> f64 {
+/// ring recompute charged at `discount` of a full-size byte.
+fn group_cost(dims: &[usize], radii: &[usize], es: usize, threads: usize, discount: f64) -> f64 {
     let t = chain_traffic_estimate(dims, radii, es, threads);
-    t.fused_bytes as f64 + RING_BYTE_DISCOUNT * t.ring_bytes as f64
+    t.fused_bytes as f64 + discount * t.ring_bytes as f64
 }
 
 /// Cut a fusable run (per-stage radii) into execution groups by modeled
@@ -170,6 +199,7 @@ pub fn plan_run_groups(
     dims: &[usize],
     dtype: DType,
     threads: usize,
+    discount: f64,
 ) -> Vec<usize> {
     let d = radii.len();
     if d <= 1 {
@@ -181,7 +211,7 @@ pub fn plan_run_groups(
     dp[0] = 0.0;
     for i in 1..=d {
         for j in 0..i {
-            let c = dp[j] + group_cost(dims, &radii[j..i], es, threads);
+            let c = dp[j] + group_cost(dims, &radii[j..i], es, threads, discount);
             // Strict `<` with ascending j prefers the longest group on
             // ties — fuse when the model is indifferent.
             if c < dp[i] {
@@ -237,6 +267,7 @@ mod tests {
         ChainCtx::new(dims.to_vec(), width, DType::F32)
             .with_weights(CostWeights::default())
             .with_threads(1)
+            .with_ring_discount(RING_BYTE_DISCOUNT)
     }
 
     #[test]
@@ -274,11 +305,14 @@ mod tests {
         // Below PARALLEL_THRESHOLD one band executes: fusing a run is
         // strictly cheaper than any split, whatever the radii.
         for radii in [vec![1usize, 1], vec![2, 4, 1], vec![3; 5]] {
-            let groups = plan_run_groups(&radii, &[40, 40], DType::F32, 8);
+            let groups = plan_run_groups(&radii, &[40, 40], DType::F32, 8, RING_BYTE_DISCOUNT);
             assert_eq!(groups, vec![radii.len()], "radii {radii:?}");
         }
-        assert_eq!(plan_run_groups(&[1], &[40, 40], DType::F32, 8), vec![1]);
-        assert!(plan_run_groups(&[], &[40, 40], DType::F32, 8).is_empty());
+        assert_eq!(
+            plan_run_groups(&[1], &[40, 40], DType::F32, 8, RING_BYTE_DISCOUNT),
+            vec![1]
+        );
+        assert!(plan_run_groups(&[], &[40, 40], DType::F32, 8, RING_BYTE_DISCOUNT).is_empty());
     }
 
     #[test]
@@ -289,15 +323,30 @@ mod tests {
         // radii on one band fuse.
         let dims = vec![64usize, 512]; // 32768 elems: at the threshold
         let radii = vec![1usize, 24];
-        let split = plan_run_groups(&radii, &dims, DType::F32, 16);
+        let d = RING_BYTE_DISCOUNT;
+        let split = plan_run_groups(&radii, &dims, DType::F32, 16, d);
         assert_eq!(split, vec![1, 1], "expected the model to cut the run");
-        let fused = plan_run_groups(&radii, &dims, DType::F32, 1);
+        let fused = plan_run_groups(&radii, &dims, DType::F32, 1, d);
         assert_eq!(fused, vec![2]);
         // Sanity: the DP's decision matches the raw group costs.
-        let merged = group_cost(&dims, &radii, 4, 16);
+        let merged = group_cost(&dims, &radii, 4, 16, d);
         let singles =
-            group_cost(&dims, &radii[..1], 4, 16) + group_cost(&dims, &radii[1..], 4, 16);
+            group_cost(&dims, &radii[..1], 4, 16, d) + group_cost(&dims, &radii[1..], 4, 16, d);
         assert!(merged > singles, "merged {merged} vs singles {singles}");
+    }
+
+    #[test]
+    fn ring_discount_default_pinned_and_measured_in_range() {
+        // The documented default stays the tuned constant; the measured
+        // value is a valid discount on any host.
+        assert_eq!(RING_BYTE_DISCOUNT, 0.25);
+        let measured = ring_byte_discount();
+        assert!((0.05..=1.0).contains(&measured), "measured {measured}");
+        // The execution-path context carries the measured value; tests
+        // pin the constant via the builder.
+        let c = ChainCtx::new(vec![8, 8], 1, DType::F32);
+        assert_eq!(c.ring_discount, measured);
+        assert_eq!(ctx(&[8, 8], 1).ring_discount, RING_BYTE_DISCOUNT);
     }
 
     #[test]

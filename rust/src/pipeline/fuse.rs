@@ -149,7 +149,13 @@ pub fn segment_costed(stages: &[Op], ctx: &cost::ChainCtx) -> Vec<Segment> {
             (_, 0) => {}
             (Some(st), len) if len >= 2 => {
                 let radii: Vec<usize> = run.iter().map(ChainStage::radius).collect();
-                let groups = cost::plan_run_groups(&radii, &st.dims, ctx.dtype, ctx.threads);
+                let groups = cost::plan_run_groups(
+                    &radii,
+                    &st.dims,
+                    ctx.dtype,
+                    ctx.threads,
+                    ctx.ring_discount,
+                );
                 let mut items = std::mem::take(run).into_iter();
                 for g in groups {
                     let group: Vec<ChainStage> = items.by_ref().take(g).collect();
@@ -522,7 +528,9 @@ mod tests {
         let r = Op::Reorder { order: Order::new(&[1, 0]).unwrap() };
         // 40x40 runs single-band: fusing is strictly cheaper, so the
         // costed segmentation matches the unconditional one.
-        let ctx = ChainCtx::new(vec![40, 40], 1, DType::F32).with_threads(8);
+        let ctx = ChainCtx::new(vec![40, 40], 1, DType::F32)
+            .with_threads(8)
+            .with_ring_discount(cost::RING_BYTE_DISCOUNT);
         let stages = [st.clone(), st.clone(), r.clone(), st.clone()];
         let segs = segment_costed(&stages, &ctx);
         assert_eq!(segs, segment(&stages));
@@ -544,10 +552,14 @@ mod tests {
         let s24 = Op::Stencil {
             spec: StencilSpec::Taps { radius: 24, taps: vec![(vec![0, 0], 1.0)] },
         };
-        let many = ChainCtx::new(vec![64, 512], 1, DType::F32).with_threads(16);
+        let many = ChainCtx::new(vec![64, 512], 1, DType::F32)
+            .with_threads(16)
+            .with_ring_discount(cost::RING_BYTE_DISCOUNT);
         let segs = segment_costed(&[s1.clone(), s24.clone()], &many);
         assert_eq!(segs, vec![Segment::Single(s1.clone()), Segment::Single(s24.clone())]);
-        let one = ChainCtx::new(vec![64, 512], 1, DType::F32).with_threads(1);
+        let one = ChainCtx::new(vec![64, 512], 1, DType::F32)
+            .with_threads(1)
+            .with_ring_discount(cost::RING_BYTE_DISCOUNT);
         let segs = segment_costed(&[s1, s24], &one);
         assert!(matches!(&segs[..], [Segment::FusedChain(c)] if c.len() == 2));
     }

@@ -8,7 +8,8 @@
 //! * [`series`] — `(x, y)` series for the figure-style outputs.
 //! * [`BenchRecord`] / [`bench_json`] — the `BENCH_hostexec.json`
 //!   schema (`{threads, results: [{op, shape, order, dtype, naive_gbs,
-//!   hostexec_gbs, speedup}]}`). The pipeline bench writes the sibling
+//!   hostexec_gbs, speedup, gbs_vs_roofline}]}`). The pipeline bench
+//!   writes the sibling
 //!   `BENCH_pipeline.json` (`{workload, metric, unfused, fused,
 //!   speedup}` rows, incl. the `traffic_bytes` / `est_traffic_bytes`
 //!   model-vs-measured pair). Anchor tests
@@ -90,6 +91,11 @@ pub struct BenchRecord {
     pub dtype: String,
     pub naive_gbs: f64,
     pub hostexec_gbs: f64,
+    /// Achieved hostexec GB/s over the measured host memcpy roofline
+    /// ([`crate::obs::bandwidth::roofline_gbs`]). The roofline is a
+    /// single-thread copy, so multi-threaded records may exceed 1.0;
+    /// 0.0 means the bench did not fill the column.
+    pub gbs_vs_roofline: f64,
 }
 
 impl BenchRecord {
@@ -104,7 +110,7 @@ impl BenchRecord {
 
 /// Serialize bench records to the `BENCH_hostexec.json` schema tracked
 /// across PRs: `{threads, results: [{op, shape, order, dtype,
-/// naive_gbs, hostexec_gbs, speedup}]}`.
+/// naive_gbs, hostexec_gbs, speedup, gbs_vs_roofline}]}`.
 pub fn bench_json(threads: usize, records: &[BenchRecord]) -> String {
     let mut out = String::from("{\n");
     let _ = writeln!(out, "  \"bench\": \"hostexec\",");
@@ -115,14 +121,16 @@ pub fn bench_json(threads: usize, records: &[BenchRecord]) -> String {
         let _ = writeln!(
             out,
             "    {{\"op\": \"{}\", \"shape\": \"{}\", \"order\": \"{}\", \"dtype\": \"{}\", \
-             \"naive_gbs\": {:.3}, \"hostexec_gbs\": {:.3}, \"speedup\": {:.3}}}{comma}",
+             \"naive_gbs\": {:.3}, \"hostexec_gbs\": {:.3}, \"speedup\": {:.3}, \
+             \"gbs_vs_roofline\": {:.3}}}{comma}",
             r.op,
             r.shape,
             r.order,
             r.dtype,
             r.naive_gbs,
             r.hostexec_gbs,
-            r.speedup()
+            r.speedup(),
+            r.gbs_vs_roofline
         );
     }
     let _ = writeln!(out, "  ]");
@@ -195,6 +203,7 @@ mod tests {
                 dtype: "f32".into(),
                 naive_gbs: 1.25,
                 hostexec_gbs: 5.0,
+                gbs_vs_roofline: 0.42,
             },
             BenchRecord {
                 op: "interlace".into(),
@@ -203,6 +212,7 @@ mod tests {
                 dtype: "bf16".into(),
                 naive_gbs: 2.0,
                 hostexec_gbs: 4.0,
+                gbs_vs_roofline: 0.0,
             },
         ];
         let text = bench_json(8, &recs);
@@ -221,6 +231,10 @@ mod tests {
         assert_eq!(
             results[1].get("op").and_then(|s| s.as_str()),
             Some("interlace")
+        );
+        assert_eq!(
+            results[0].get("gbs_vs_roofline").and_then(|s| s.as_f64()),
+            Some(0.42)
         );
     }
 }

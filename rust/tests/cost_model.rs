@@ -107,6 +107,7 @@ fn cost_guided_rewrite_never_increases_modeled_traffic() {
         streaming: 1.0,
         strided: 6.0,
         permute: 3.0,
+        permute_run: 1.5,
         stencil: 1.5,
         pointwise: 1.0,
     };
@@ -196,4 +197,20 @@ fn calibration_weights_are_ordered_and_finite() {
     assert!(w.strided >= w.permute && w.strided.is_finite(), "{w:?}");
     let hw = gdrk::gpusim::calib::host_weights();
     assert_eq!(hw, w, "cached weights equal a fresh calibration");
+}
+
+/// The host-measured calibration (the weights the execution path prices
+/// against since the wide-move core landed) obeys the same structural
+/// ordering: run-preserving permutes never cost more than tiled ones,
+/// gathers never less than either.
+#[test]
+fn host_calibration_weights_are_ordered_and_finite() {
+    let w = gdrk::hostexec::calib::host_weights();
+    assert_eq!(w.streaming, 1.0);
+    assert!(w.permute_run >= 1.0 && w.permute_run.is_finite(), "{w:?}");
+    assert!(w.permute >= w.permute_run && w.permute.is_finite(), "{w:?}");
+    assert!(w.strided >= w.permute && w.strided.is_finite(), "{w:?}");
+    let c = gdrk::hostexec::calib::host_calibration();
+    assert!(c.wide_vs_scalar() > 0.0 && c.wide_vs_scalar().is_finite());
+    assert!((0.05..=1.0).contains(&c.ring_byte_discount()));
 }

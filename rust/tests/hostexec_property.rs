@@ -332,6 +332,46 @@ fn movement_ops_bit_identical_across_dtypes() {
     }
 }
 
+/// Wide-move sweep: movement ops at awkward geometries — fastest-dim
+/// lengths whose byte counts land on every tail around the 32-byte
+/// wide step, odd window offsets, element widths 2/4/8 — must stay
+/// bit-identical through both backends. These shapes exercise the wide
+/// copy's unaligned prologue, aligned body, and overlapping epilogue on
+/// every alignment class, plus the quad-unrolled gather's scalar tail.
+#[test]
+fn wide_move_alignment_and_tail_sweep_bit_identical() {
+    let mut rng = Rng::new(0x71DE5);
+    for dt in [DType::Bf16, DType::F32, DType::F64] {
+        let es = dt.size_bytes();
+        // Element counts covering byte tails 0..64 around the wide
+        // step, plus two fat runs that engage the wide body proper.
+        let lens: Vec<usize> = (1..=64 / es + 2).chain([96, 1001]).collect();
+        for &len in &lens {
+            let x = TensorBuf::random(dt, Shape::new(&[5, len]), &mut rng);
+            let b = usize::from(len > 1);
+            let ops = [
+                Op::Copy,
+                Op::Reorder { order: Order::new(&[0, 1]).unwrap() },
+                Op::Reorder { order: Order::new(&[1, 0]).unwrap() },
+                Op::Subarray { base: vec![1, b], shape: vec![3, len - b] },
+            ];
+            for op in ops {
+                let want = op.reference_buf(&[&x]).unwrap();
+                let got = op.execute_fast_buf(&[&x]).unwrap();
+                assert_eq!(got, want, "{dt} len {len} {op:?}");
+            }
+        }
+        // Strided gathers at the same awkward counts.
+        let x = TensorBuf::random(dt, Shape::new(&[4096]), &mut rng);
+        for count in [1, 2, 3, 4, 5, 7, 63, 64, 65, 1019] {
+            let op = Op::ReadStrided { base: 1, stride: 4, count };
+            let want = op.reference_buf(&[&x]).unwrap();
+            let got = op.execute_fast_buf(&[&x]).unwrap();
+            assert_eq!(got, want, "{dt} strided count {count}");
+        }
+    }
+}
+
 /// Movement is positionally identical across dtypes: permuting an iota
 /// array of any dtype lands the value encoding index `i` wherever the
 /// f32 permute lands `i as f32` — the bytes move as one index map.

@@ -1,0 +1,91 @@
+//! Wide-move anchor: the SIMD movement core must never lose to the
+//! scalar `copy_from_slice` path it replaced, and the bench JSON must
+//! carry the roofline-utilization column. Two guards:
+//!
+//! 1. (always runs) the wide and streaming copy paths are bit-identical
+//!    to the golden reference on fat contiguous runs at every element
+//!    width the bench sweeps, including an output large enough to cross
+//!    the streaming-store threshold.
+//! 2. (when `BENCH_hostexec.json` exists, e.g. right after
+//!    `cargo bench --bench hostexec_speedup` — CI runs it in that
+//!    order) the `copy` record's hostexec-vs-naive ratio stays >= 0.9
+//!    (wide may tie memcpy, never lose to it) and every row fills
+//!    `gbs_vs_roofline` with a positive, plausible utilization. No
+//!    in-process timing asserts — wall-clock claims live only in the
+//!    bench-JSON gate, where the bench ran without test concurrency.
+
+use gdrk::ops::Op;
+use gdrk::tensor::{DType, Order, Shape, TensorBuf};
+use gdrk::util::rng::Rng;
+
+const BENCH_JSON: &str = "BENCH_hostexec.json";
+
+#[test]
+fn wide_paths_bit_identical_on_fat_runs() {
+    let mut rng = Rng::new(0x71DE);
+    // Odd fastest-dim length so every run ends on an unaligned tail.
+    for dtype in [DType::Bf16, DType::F32, DType::F64] {
+        let x = TensorBuf::random(dtype, Shape::new(&[8, 64, 513]), &mut rng);
+        for op in [
+            Op::Copy,
+            Op::Reorder { order: Order::new(&[0, 2, 1]).unwrap() },
+        ] {
+            let want = op.reference_buf(&[&x]).expect("reference");
+            let got = op.execute_fast_buf(&[&x]).expect("hostexec");
+            assert_eq!(got, want, "{:?} on {} diverged", op, dtype.name());
+        }
+    }
+    // Past the streaming-store threshold (8 MiB + tail of f32s): the
+    // non-temporal path must be byte-identical too.
+    let big = TensorBuf::random(DType::F32, Shape::new(&[(2 << 20) + 3]), &mut rng);
+    let want = Op::Copy.reference_buf(&[&big]).expect("reference");
+    let got = Op::Copy.execute_fast_buf(&[&big]).expect("hostexec");
+    assert_eq!(got, want, "streaming copy diverged from the golden model");
+}
+
+#[test]
+fn bench_json_pins_wide_at_least_scalar_with_roofline_column() {
+    let text = match std::fs::read_to_string(BENCH_JSON) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("SKIP: {BENCH_JSON} not present (run cargo bench --bench hostexec_speedup)");
+            return;
+        }
+    };
+    let v = gdrk::util::json::parse(&text).expect("bench json parses");
+    let results = v
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .expect("bench json has results");
+    let copy = results
+        .iter()
+        .find(|r| r.get("op").and_then(|o| o.as_str()) == Some("copy"))
+        .expect("copy record in bench json");
+    let speedup = copy
+        .get("speedup")
+        .and_then(|s| s.as_f64())
+        .expect("speedup field");
+    // The naive side of the copy record IS the scalar memcpy baseline,
+    // so this ratio is wide-vs-scalar. The floor is conservative: the
+    // wide core may only tie memcpy on some hosts, but a real loss
+    // (threshold misfire, broken prologue) lands well under 0.9.
+    assert!(
+        speedup >= 0.9,
+        "wide copy lost to the scalar memcpy baseline: {speedup:.2}x"
+    );
+    let util = copy
+        .get("gbs_vs_roofline")
+        .and_then(|s| s.as_f64())
+        .expect("gbs_vs_roofline column on the copy record");
+    assert!(
+        util > 0.05 && util < 64.0,
+        "copy roofline utilization {util:.2} implausible"
+    );
+    for r in results {
+        let u = r.get("gbs_vs_roofline").and_then(|s| s.as_f64());
+        assert!(
+            u.is_some_and(|u| u > 0.0),
+            "bench row missing a positive gbs_vs_roofline: {r:?}"
+        );
+    }
+}
