@@ -18,6 +18,12 @@
 //!   `rust/tests/pipeline_traffic_anchor.rs` pins. The matching
 //!   `est_traffic_bytes` row records the cost model's prediction for
 //!   the same run, and the anchor pins estimate to measurement too.
+//! * **time-tiled Jacobi** — K identical sweeps on a 512^2 field run
+//!   as the DP-chosen time tiles (`jacobi_time_tiles`) vs one pass per
+//!   sweep, at K in {4, 16, 64}: `steps_per_s` rows time the machine
+//!   plan, `traffic_bytes` rows price a fixed [`TRAFFIC_BANDS`]-band
+//!   layout so `rust/tests/temporal_anchor.rs` can pin tiled traffic
+//!   <= 3/4 of the T = 1 baseline at K = 16 on any runner.
 //!
 //! Outputs are gated on bit-identity before anything is timed.
 
@@ -27,12 +33,20 @@ use gdrk::hostexec::stencil::{
     apply_chain, chain_traffic_estimate, unfused_chain_traffic_bytes, ChainStage,
 };
 use gdrk::ops::{Op, PointwiseSpec, StencilSpec};
+use gdrk::pipeline::cost::RING_BYTE_DISCOUNT;
+use gdrk::pipeline::fuse::{jacobi_chain, jacobi_chain_tiled, jacobi_time_tiles};
 use gdrk::pipeline::Pipeline;
 use gdrk::report::Table;
 use gdrk::tensor::{NdArray, Shape};
 use gdrk::util::rng::Rng;
 use gdrk::util::timing::bench;
 use std::fmt::Write as _;
+
+/// Band count for the deterministic `traffic_bytes` rows. Halo traffic
+/// grows with the number of bands, so the rows that anchor invariants
+/// (not machine throughput) always price this fixed layout, whatever
+/// core count the runner has.
+const TRAFFIC_BANDS: usize = 8;
 
 struct Row {
     workload: String,
@@ -78,9 +92,17 @@ fn json(threads: usize, rows: &[Row]) -> String {
 fn ops_of(chain: &[ChainStage]) -> Vec<Op> {
     chain
         .iter()
-        .map(|s| match s {
-            ChainStage::Stencil(spec) => Op::Stencil { spec: spec.clone() },
-            ChainStage::Pointwise(spec) => Op::Pointwise { spec: spec.clone() },
+        .flat_map(|s| {
+            let (leaf, t) = match s {
+                ChainStage::Repeat { stage, t } => (&**stage, *t),
+                other => (other, 1),
+            };
+            let op = match leaf {
+                ChainStage::Stencil(spec) => Op::Stencil { spec: spec.clone() },
+                ChainStage::Pointwise(spec) => Op::Pointwise { spec: spec.clone() },
+                ChainStage::Repeat { .. } => unreachable!("repeat stages do not nest"),
+            };
+            std::iter::repeat(op).take(t)
         })
         .collect()
 }
@@ -149,10 +171,9 @@ fn main() {
     let chain3d_ops = ops_of(&chain3d);
     let (traffic3d, est3d) = {
         let want = run_unfused(&vol, &chain3d_ops);
-        // Cap the band count for the traffic row: halo rows grow with
-        // the number of bands, and this row anchors a deterministic
-        // invariant (fused <= 1/2 unfused), not machine throughput.
-        let (got, stats) = apply_chain(&vol, &chain3d, threads.min(8)).unwrap();
+        // This row anchors a deterministic invariant (fused <= 1/2
+        // unfused), not machine throughput — price the fixed layout.
+        let (got, stats) = apply_chain(&vol, &chain3d, TRAFFIC_BANDS).unwrap();
         assert_eq!(got, want, "fused rank-3 chain diverged");
         let unfused = unfused_chain_traffic_bytes(vol.len(), chain3d.len(), 4);
         assert!(
@@ -165,7 +186,7 @@ fn main() {
         // layout), recorded next to the measurement: the traffic anchor
         // pins estimate and measurement to each other.
         let radii: Vec<usize> = chain3d.iter().map(ChainStage::radius).collect();
-        let est = chain_traffic_estimate(vol.shape().dims(), &radii, 4, threads.min(8));
+        let est = chain_traffic_estimate(vol.shape().dims(), &radii, 4, TRAFFIC_BANDS);
         println!(
             "rank-3 chain traffic: measured fused {} B vs modeled {} B",
             stats.fused_traffic_bytes(),
@@ -246,6 +267,55 @@ fn main() {
         unfused: est3d.1,
         fused: est3d.0,
     });
+
+    // ---- temporal blocking: K identical Jacobi sweeps, DP-chosen
+    // time tiles vs one pass per sweep. ----
+    let n = 512usize;
+    let h2 = 1.0f32 / (((n - 1) * (n - 1)) as f32);
+    let psi0 = rng.f32_vec(n * n);
+    let omega0 = rng.f32_vec(n * n);
+    for k in [4usize, 16, 64] {
+        let baseline = vec![1usize; k];
+        // Bit-identity gate: the machine's DP plan must equal the
+        // one-pass-per-sweep baseline before anything is timed.
+        let want = jacobi_chain_tiled(&psi0, &omega0, n, h2, &baseline, threads);
+        let got = jacobi_chain(&psi0, &omega0, n, h2, k, threads);
+        assert_eq!(got, want, "time-tiled Jacobi diverged at K = {k}");
+
+        let t_base = bench(1, 5, || {
+            jacobi_chain_tiled(&psi0, &omega0, n, h2, &baseline, threads);
+        });
+        let t_tiled = bench(1, 5, || {
+            jacobi_chain(&psi0, &omega0, n, h2, k, threads);
+        });
+        rows.push(Row {
+            workload: format!("time_tiled_jacobi_n512_k{k}"),
+            metric: "steps_per_s".into(),
+            unfused: 1.0 / t_base.p50,
+            fused: 1.0 / t_tiled.p50,
+        });
+
+        // Deterministic traffic at the fixed band layout: the anchor
+        // test pins tiled <= 3/4 of the T = 1 baseline at K = 16.
+        let tiles = jacobi_time_tiles(n, k, TRAFFIC_BANDS, RING_BYTE_DISCOUNT);
+        assert_eq!(tiles.iter().sum::<usize>(), k, "plan must conserve sweeps");
+        let pass_bytes = |depth: usize| {
+            chain_traffic_estimate(&[n, n], &vec![1usize; depth], 4, TRAFFIC_BANDS)
+                .fused_bytes as f64
+        };
+        let traffic_base = k as f64 * pass_bytes(1);
+        let traffic_tiled: f64 = tiles.iter().map(|&g| pass_bytes(g)).sum();
+        println!(
+            "time-tiled jacobi K={k}: plan {tiles:?}, traffic {traffic_tiled:.0} B \
+             vs baseline {traffic_base:.0} B"
+        );
+        rows.push(Row {
+            workload: format!("time_tiled_jacobi_n512_k{k}"),
+            metric: "traffic_bytes".into(),
+            unfused: traffic_base,
+            fused: traffic_tiled,
+        });
+    }
 
     // Model-vs-actual through the whole pipeline path, as the
     // coordinator reports it for `pipe:` requests.

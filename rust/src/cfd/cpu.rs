@@ -90,11 +90,14 @@ impl CpuSolver {
 
     /// One time step executing the **whole** step — the K Jacobi
     /// sweeps, the velocity derivation, the Thom wall vorticity and the
-    /// explicit-Euler transport — as a single fused rolling-window pass
-    /// ([`crate::pipeline::fuse::cavity_fused_step`]): one worker spawn
-    /// and one read/write of the full fields per step instead of one
-    /// per sweep plus three more full-field passes. Bit-identical to
-    /// [`CpuSolver::step_parallel`].
+    /// explicit-Euler transport — as time-tiled rolling-window passes
+    /// ([`crate::pipeline::fuse::cavity_time_tiled_step`]): the
+    /// partition DP buckets the K+2 virtual stages into the passes
+    /// whose modeled traffic is lowest (often a single all-fused pass;
+    /// at high K and many bands, a few tiles of depth T each), instead
+    /// of one read/write of the full fields per sweep plus three more
+    /// full-field passes. Bit-identical to [`CpuSolver::step_parallel`]
+    /// for every tiling, because tiling only re-buckets sweeps.
     pub fn step_fused(&mut self, threads: usize) -> f32 {
         let p = self.params;
         let n = p.n;
@@ -109,7 +112,7 @@ impl CpuSolver {
             dt: p.dt as f32,
             lid: p.lid_u as f32,
         };
-        let out = crate::pipeline::fuse::cavity_fused_step(
+        let (out, _t) = crate::pipeline::fuse::cavity_time_tiled_step(
             self.psi.data(),
             self.omega.data(),
             n,

@@ -185,22 +185,112 @@ pub(crate) fn cascade_band<T: Element, F>(
     }
 }
 
-/// One stage of a fused chain: a stencil of any radius, or a
-/// zero-radius pointwise stage.
+/// One stage of a fused chain: a stencil of any radius, a zero-radius
+/// pointwise stage, or a stencil repeated `t` time-steps (temporal
+/// blocking).
 #[derive(Debug, Clone, PartialEq)]
 pub enum ChainStage {
     Stencil(StencilSpec),
     Pointwise(PointwiseSpec),
+    /// A stage iterated `t` times inside one rolling-window pass — the
+    /// software-systolic **time tile**. The executor expands it to a
+    /// virtual depth-`t` chain that shares one prepared functor (one
+    /// tap list, `t` per-time-level ring buffers), so a band sweep
+    /// advances the stage `t` time-steps while its rows are cache-hot:
+    /// `t - 1` full read+write passes are traded for `~2 * radius * t`
+    /// halo rows recomputed per band boundary.
+    ///
+    /// Cost-guided segmentation creates these automatically: a run of
+    /// identical stencil ops collapses into one `Repeat`, and the
+    /// partition DP ([`crate::pipeline::cost::plan_run_groups`]) picks
+    /// the time-tile depth with the calibrated weights — so
+    /// `RewritePolicy::CostGuided` selects `t > 1` exactly when the
+    /// modeled traffic strictly drops. A deep Jacobi-style chain over
+    /// shallow bands tiles at an interior depth, never all-or-nothing:
+    ///
+    /// ```
+    /// use gdrk::hostexec::stencil::ChainStage;
+    /// use gdrk::ops::cost::CostWeights;
+    /// use gdrk::ops::{Op, StencilSpec};
+    /// use gdrk::pipeline::cost::{ChainCtx, RING_BYTE_DISCOUNT};
+    /// use gdrk::pipeline::fuse::{segment_costed, Segment};
+    /// use gdrk::tensor::DType;
+    ///
+    /// // 16 identical radius-1 sweeps over 16 four-row bands: fusing
+    /// // everything pays quadratic halo recompute, one pass per sweep
+    /// // pays 16 full read+writes — the DP tiles time in between.
+    /// let sweep = Op::Stencil { spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 } };
+    /// let chain = vec![sweep; 16];
+    /// let ctx = ChainCtx::new(vec![64, 512], 1, DType::F32)
+    ///     .with_weights(CostWeights::default())
+    ///     .with_threads(16)
+    ///     .with_ring_discount(RING_BYTE_DISCOUNT);
+    /// let segs = segment_costed(&chain, &ctx);
+    /// let t = segs
+    ///     .iter()
+    ///     .filter_map(|s| match s {
+    ///         Segment::FusedChain(c) => c.iter().map(ChainStage::levels).max(),
+    ///         Segment::Single(_) => None,
+    ///     })
+    ///     .max()
+    ///     .unwrap();
+    /// assert!(t > 1 && t < 16, "expected an interior time tile, got {t}");
+    /// assert!(segs.len() > 1, "expected the run to be cut into tiles");
+    /// ```
+    Repeat {
+        stage: Box<ChainStage>,
+        t: usize,
+    },
 }
 
 impl ChainStage {
-    /// Axis-0 halo the stage needs (0 for pointwise).
+    /// Scalar halo the stage needs (0 for pointwise) — the widest axis
+    /// of the functor. Banding uses the axis-0-aware [`Self::radius0`].
     pub fn radius(&self) -> usize {
         match self {
             ChainStage::Stencil(spec) => spec.radius(),
             ChainStage::Pointwise(_) => 0,
+            ChainStage::Repeat { stage, .. } => stage.radius(),
         }
     }
+
+    /// Axis-0 halo for data of rank `rank` — what the rolling-window
+    /// executor bands with (anisotropic functors shrink here).
+    pub fn radius0(&self, rank: usize) -> usize {
+        match self {
+            ChainStage::Stencil(spec) => {
+                spec.radii(rank).first().copied().unwrap_or_else(|| spec.radius())
+            }
+            ChainStage::Pointwise(_) => 0,
+            ChainStage::Repeat { stage, .. } => stage.radius0(rank),
+        }
+    }
+
+    /// Virtual chain levels the stage expands to (`t` for a repeat,
+    /// 1 otherwise) — the time-axis depth.
+    pub fn levels(&self) -> usize {
+        match self {
+            ChainStage::Repeat { t, .. } => *t,
+            _ => 1,
+        }
+    }
+}
+
+/// Total virtual levels of a chain once repeats expand — the depth the
+/// executor actually runs (and [`ChainStats::depth`] reports).
+pub fn chain_levels(stages: &[ChainStage]) -> usize {
+    stages.iter().map(ChainStage::levels).sum()
+}
+
+/// Per-**level** axis-0 radii of a chain at the given data rank: each
+/// repeat contributes `t` copies of its stage's radius. This is the
+/// radii vector [`chain_traffic_estimate`] and the partition DP price
+/// time-tiled chains with.
+pub fn level_radii(stages: &[ChainStage], rank: usize) -> Vec<usize> {
+    stages
+        .iter()
+        .flat_map(|s| std::iter::repeat(s.radius0(rank)).take(s.levels()))
+        .collect()
 }
 
 /// Band/slab geometry of a rank-N array: axis 0 is the banding axis,
@@ -243,16 +333,26 @@ fn geom(dims: &[usize]) -> Result<BandGeom, OpError> {
 /// offsets (resolved per line) and the fastest-axis offset (the inner
 /// loop).
 struct PreparedStencil {
-    radius: usize,
+    /// Axis-0 halo — the banding radius (ring heights, halo clipping).
+    radius0: usize,
+    /// Fastest-axis halo — the interior/edge split of each line.
+    radius_last: usize,
     taps: Vec<(i64, Vec<i64>, i64, f64)>,
 }
 
 fn prepare<S: StencilFunctor + ?Sized>(spec: &S, rank: usize) -> Result<PreparedStencil, OpError> {
-    let radius = spec.radius();
+    let radii = spec.radii(rank);
+    if radii.len() != rank {
+        return Err(OpError::Invalid(format!(
+            "functor radii {radii:?} have rank {}, data has rank {rank}",
+            radii.len()
+        )));
+    }
     let taps = spec.taps(rank)?;
     // Validate here as well as in the spec impls: the ring-capacity
     // invariant is only sound when every axis-0 offset is within the
-    // declared radius, and custom functors are not pre-validated.
+    // declared per-axis radius, and custom functors are not
+    // pre-validated.
     for (off, _) in &taps {
         if off.len() != rank {
             return Err(OpError::Invalid(format!(
@@ -260,9 +360,9 @@ fn prepare<S: StencilFunctor + ?Sized>(spec: &S, rank: usize) -> Result<Prepared
                 off.len()
             )));
         }
-        if off.iter().any(|d| d.unsigned_abs() as usize > radius) {
+        if off.iter().zip(&radii).any(|(d, &r)| d.unsigned_abs() as usize > r) {
             return Err(OpError::Invalid(format!(
-                "functor tap {off:?} outside radius {radius}"
+                "functor tap {off:?} outside per-axis radii {radii:?}"
             )));
         }
     }
@@ -277,7 +377,8 @@ fn prepare<S: StencilFunctor + ?Sized>(spec: &S, rank: usize) -> Result<Prepared
         })
         .collect();
     Ok(PreparedStencil {
-        radius,
+        radius0: radii[0],
+        radius_last: if rank == 1 { 0 } else { radii[rank - 1] },
         taps: split,
     })
 }
@@ -289,9 +390,10 @@ enum Lowered {
 }
 
 impl Lowered {
-    fn radius(&self) -> usize {
+    /// Axis-0 halo — what the cascade bands with.
+    fn radius0(&self) -> usize {
         match self {
-            Lowered::Stencil(st) => st.radius,
+            Lowered::Stencil(st) => st.radius0,
             Lowered::Pointwise(_) => 0,
         }
     }
@@ -335,7 +437,7 @@ fn stencil_slab<T: Numeric>(
             }
             live.push((&src.row(yy as usize)[src_base..src_base + last], *dl, *c));
         }
-        stencil_line(&live, st.radius, &mut dst[line_base..line_base + last]);
+        stencil_line(&live, st.radius_last, &mut dst[line_base..line_base + last]);
         // Advance the middle-axis odometer (fastest middle axis first).
         let mut a = m;
         while a > 0 {
@@ -411,7 +513,12 @@ pub struct ChainStats {
     pub output_bytes_written: u64,
     pub ring_bytes: u64,
     pub hot_rows_per_worker: usize,
+    /// Virtual levels executed — repeats expand onto the time axis, so
+    /// a `Repeat { t }` stage contributes `t` here.
     pub depth: usize,
+    /// Declared chain stages (a repeat counts once); `depth > stages`
+    /// means the pass was time-tiled.
+    pub stages: usize,
 }
 
 impl ChainStats {
@@ -444,10 +551,12 @@ pub struct ChainTrafficEst {
 }
 
 /// Estimate a fused run's traffic without executing it (see
-/// [`ChainTrafficEst`]). `radii` is the per-stage axis-0 halo list
-/// (pointwise stages contribute 0); `threads` is the worker budget the
-/// run would be given — band count resolves through the same
-/// [`pool::effective_threads`] clamp the executor applies.
+/// [`ChainTrafficEst`]). `radii` is the per-**level** axis-0 halo list
+/// (pointwise stages contribute 0; a time-tiled [`ChainStage::Repeat`]
+/// contributes `t` entries — build it with [`level_radii`]); `threads`
+/// is the worker budget the run would be given — band count resolves
+/// through the same [`pool::effective_threads`] clamp the executor
+/// applies.
 pub fn chain_traffic_estimate(
     dims: &[usize],
     radii: &[usize],
@@ -502,7 +611,7 @@ pub fn apply<T: Numeric, S: StencilFunctor + ?Sized>(
     }
     let st = prepare(spec, rank)?;
     let stages = [Lowered::Stencil(st)];
-    run_lowered(x, &stages, threads).map(|(y, _)| y)
+    run_lowered(x, &stages, &[0], threads).map(|(y, _)| y)
 }
 
 /// Apply a pointwise functor chain elementwise over the worker pool —
@@ -537,7 +646,11 @@ pub fn apply_pointwise<T: Numeric>(
 
 /// Apply a chain of stencil/pointwise stages as one fused
 /// rolling-window pass — bit-identical to applying each stage in
-/// sequence, for data of any rank >= 1.
+/// sequence, for data of any rank >= 1. A [`ChainStage::Repeat`]
+/// expands onto the time axis: its stage is lowered **once** and run
+/// as `t` virtual levels of the cascade (one ring buffer per time
+/// level, halo recompute clipped per level), so the whole tile costs
+/// one read and one write of the field.
 pub fn apply_chain<T: Numeric>(
     x: &NdArray<T>,
     stages: &[ChainStage],
@@ -550,32 +663,60 @@ pub fn apply_chain<T: Numeric>(
     if rank == 0 {
         return Err(OpError::Invalid("stencil needs an array of rank >= 1".into()));
     }
-    let lowered: Vec<Lowered> = stages
-        .iter()
-        .map(|s| match s {
-            ChainStage::Stencil(spec) => prepare(spec, rank).map(Lowered::Stencil),
-            ChainStage::Pointwise(spec) => Ok(Lowered::Pointwise(spec.clone())),
-        })
-        .collect::<Result<_, _>>()?;
-    run_lowered(x, &lowered, threads)
+    // Lower each declared stage once; repeats share their single
+    // prepared functor across all `t` time levels via the level map.
+    let mut lowered: Vec<Lowered> = Vec::with_capacity(stages.len());
+    let mut seq: Vec<usize> = Vec::new();
+    for s in stages {
+        let (leaf, t) = match s {
+            ChainStage::Repeat { stage, t } => {
+                if *t == 0 {
+                    return Err(OpError::Invalid("repeat stage needs t >= 1".into()));
+                }
+                if matches!(**stage, ChainStage::Repeat { .. }) {
+                    return Err(OpError::Invalid("repeat stages do not nest".into()));
+                }
+                (&**stage, *t)
+            }
+            other => (other, 1),
+        };
+        let low = match leaf {
+            ChainStage::Stencil(spec) => Lowered::Stencil(prepare(spec, rank)?),
+            ChainStage::Pointwise(spec) => Lowered::Pointwise(spec.clone()),
+            ChainStage::Repeat { .. } => unreachable!("nesting rejected above"),
+        };
+        seq.extend(std::iter::repeat(lowered.len()).take(t));
+        lowered.push(low);
+    }
+    let (y, mut stats) = run_lowered(x, &lowered, &seq, threads)?;
+    stats.stages = stages.len();
+    Ok((y, stats))
 }
 
 /// The shared banded executor behind [`apply`] and [`apply_chain`].
+/// `seq` maps each virtual cascade level to its lowered stage — a
+/// time-tiled level sequence repeats one index `t` times.
 fn run_lowered<T: Numeric>(
     x: &NdArray<T>,
     lowered: &[Lowered],
+    seq: &[usize],
     threads: usize,
 ) -> Result<(NdArray<T>, ChainStats), OpError> {
     let g = geom(x.shape().dims())?;
-    let d = lowered.len();
-    let radii: Vec<usize> = lowered.iter().map(Lowered::radius).collect();
+    let d = seq.len();
+    let radii: Vec<usize> = seq.iter().map(|&i| lowered[i].radius0()).collect();
     let suffix = radius_suffix(&radii);
     let es = std::mem::size_of::<T>();
     let (h, w) = (g.h, g.w);
     let mut out = vec![T::default(); h * w];
     let hot: usize = radii[1..].iter().map(|r| 2 * r + 1).sum();
     if h * w == 0 {
-        let stats = ChainStats { depth: d, hot_rows_per_worker: hot, ..Default::default() };
+        let stats = ChainStats {
+            depth: d,
+            stages: lowered.len(),
+            hot_rows_per_worker: hot,
+            ..Default::default()
+        };
         return Ok((NdArray::from_vec(x.shape().clone(), out), stats));
     }
     let xd = x.data();
@@ -593,7 +734,7 @@ fn run_lowered<T: Numeric>(
         let t0 = if tracing { trace::now_us() } else { 0 };
         let input = SliceRows { data: xd, w };
         cascade_band(&input, h, &widths, &radii, b0, band, |k, y, src, dst| {
-            match &lowered[k] {
+            match &lowered[seq[k]] {
                 Lowered::Stencil(st) => stencil_slab(src, &g, st, y, dst),
                 Lowered::Pointwise(spec) => pointwise_slab(src, spec, y, dst),
             }
@@ -646,6 +787,7 @@ fn run_lowered<T: Numeric>(
         ring_bytes: ring_rows.into_inner() * (w * es) as u64,
         hot_rows_per_worker: hot,
         depth: d,
+        stages: lowered.len(),
     };
     Ok((NdArray::from_vec(x.shape().clone(), out), stats))
 }
@@ -669,6 +811,12 @@ mod tests {
         v.push(StencilSpec::taps2d(
             2,
             &[(2, 1, 1.25), (-1, -2, -0.5), (0, 0, 3.0)],
+        ));
+        // Anisotropic: axis-0 radius 1 despite the declared scalar 3,
+        // so banding runs with a narrow halo.
+        v.push(StencilSpec::taps2d(
+            3,
+            &[(1, 3, 0.5), (-1, -3, -0.25), (0, 0, 1.0)],
         ));
         v
     }
@@ -866,6 +1014,7 @@ mod tests {
                 want = match stage {
                     ChainStage::Stencil(s) => golden::apply(&want, s).unwrap(),
                     ChainStage::Pointwise(p) => crate::ops::pointwise::apply(&want, p).unwrap(),
+                    ChainStage::Repeat { .. } => unreachable!("no repeats in this chain"),
                 };
             }
             for threads in [1, 4] {
@@ -896,6 +1045,91 @@ mod tests {
         for threads in [1, 4] {
             let (got, _) = apply_chain(&q, &stages, threads).unwrap();
             assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn repeat_stage_matches_looped_sweeps() {
+        // A Repeat{t} stage is bit-identical to t sequential golden
+        // passes — the time tile changes scheduling, never bits.
+        // (256, 140) clears PARALLEL_THRESHOLD: real bands, per-level
+        // halo recompute.
+        let mut rng = Rng::new(0xC4A6);
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 0.2 };
+        for dims in [vec![40usize, 30], vec![256, 140], vec![20, 12, 14]] {
+            let x = NdArray::random(Shape::new(&dims), &mut rng);
+            for t in [1usize, 2, 5] {
+                let mut want = x.clone();
+                for _ in 0..t {
+                    want = golden::apply(&want, &spec).unwrap();
+                }
+                let stages = [ChainStage::Repeat {
+                    stage: Box::new(st(spec.clone())),
+                    t,
+                }];
+                for threads in [1, 4] {
+                    let (got, stats) = apply_chain(&x, &stages, threads).unwrap();
+                    assert_eq!(got, want, "dims {dims:?} t={t} threads={threads}");
+                    assert_eq!(stats.depth, t);
+                    assert_eq!(stats.stages, 1);
+                }
+            }
+        }
+        // Mixed chain: a time tile riding with ordinary stages.
+        let x = NdArray::random(Shape::new(&[200, 170]), &mut rng);
+        let conv = StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] };
+        let stages = vec![
+            st(conv.clone()),
+            ChainStage::Repeat { stage: Box::new(st(spec.clone())), t: 3 },
+            ChainStage::Pointwise(PointwiseSpec::scale(0.5)),
+        ];
+        let mut want = golden::apply(&x, &conv).unwrap();
+        for _ in 0..3 {
+            want = golden::apply(&want, &spec).unwrap();
+        }
+        let want = crate::ops::pointwise::apply(&want, &PointwiseSpec::scale(0.5)).unwrap();
+        for threads in [1, 4] {
+            let (got, stats) = apply_chain(&x, &stages, threads).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+            assert_eq!(stats.depth, 5);
+            assert_eq!(stats.stages, 3);
+        }
+        assert_eq!(chain_levels(&stages), 5);
+        assert_eq!(level_radii(&stages, 2), vec![1, 1, 1, 1, 0]);
+    }
+
+    #[test]
+    fn repeat_validation() {
+        let x = NdArray::iota(Shape::new(&[8, 8]));
+        let spec = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let zero = ChainStage::Repeat { stage: Box::new(st(spec.clone())), t: 0 };
+        assert!(apply_chain(&x, &[zero], 1).is_err());
+        let nested = ChainStage::Repeat {
+            stage: Box::new(ChainStage::Repeat { stage: Box::new(st(spec)), t: 2 }),
+            t: 2,
+        };
+        assert!(apply_chain(&x, &[nested], 1).is_err());
+    }
+
+    #[test]
+    fn anisotropic_chains_band_with_narrow_halo() {
+        // Axis-0 radius 1 vs declared scalar 3: the cascade rings shrink
+        // to 3 rows per consumer and results stay bit-identical.
+        let mut rng = Rng::new(0xC4A7);
+        let aniso = StencilSpec::taps2d(3, &[(1, 3, 0.5), (-1, -3, -0.25), (0, 0, 1.0)]);
+        assert_eq!(ChainStage::radius0(&st(aniso.clone()), 2), 1);
+        let fd = StencilSpec::FdLaplacian { order: 1, scale: 0.3 };
+        let x = NdArray::random(Shape::new(&[200, 170]), &mut rng);
+        let stages = vec![st(fd.clone()), st(aniso.clone()), st(fd.clone())];
+        let mut want = x.clone();
+        for s in [&fd, &aniso, &fd] {
+            want = golden::apply(&want, s).unwrap();
+        }
+        for threads in [1, 4] {
+            let (got, stats) = apply_chain(&x, &stages, threads).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+            // Hot rows price the *narrow* halo: 2*1+1 per consumer.
+            assert_eq!(stats.hot_rows_per_worker, 3 + 3);
         }
     }
 
@@ -967,31 +1201,48 @@ mod tests {
     fn traffic_estimate_matches_measured_stats_exactly() {
         // The cost model's estimate replicates the executor's band
         // layout, so for matching thread counts the two agree bit for
-        // bit — across band counts, radii mixes and ranks.
+        // bit — across band counts, radii mixes, ranks and the time
+        // axis (Repeat stages expand to per-level radii on both sides).
         let mut rng = Rng::new(0xC4A5);
-        let cases: Vec<(Vec<usize>, Vec<StencilSpec>)> = vec![
-            (vec![48, 40], vec![StencilSpec::FdLaplacian { order: 1, scale: 1.0 }; 3]),
+        let fd1 = StencilSpec::FdLaplacian { order: 1, scale: 1.0 };
+        let cases: Vec<(Vec<usize>, Vec<ChainStage>)> = vec![
+            (vec![48, 40], vec![st(fd1.clone()); 3]),
             (
                 vec![256, 140], // clears PARALLEL_THRESHOLD: real bands
                 vec![
-                    StencilSpec::FdLaplacian { order: 2, scale: 0.2 },
-                    StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] },
+                    st(StencilSpec::FdLaplacian { order: 2, scale: 0.2 }),
+                    st(StencilSpec::Conv { radius: 1, mask: vec![1.0 / 9.0; 9] }),
                 ],
             ),
             (
                 vec![40, 30, 36], // rank 3, also above the threshold
                 vec![
-                    StencilSpec::FdLaplacian { order: 1, scale: 0.4 },
-                    StencilSpec::FdLaplacian { order: 1, scale: 0.1 },
+                    st(StencilSpec::FdLaplacian { order: 1, scale: 0.4 }),
+                    st(StencilSpec::FdLaplacian { order: 1, scale: 0.1 }),
+                ],
+            ),
+            // Time-tiled: one Repeat over real bands.
+            (
+                vec![256, 140],
+                vec![ChainStage::Repeat { stage: Box::new(st(fd1.clone())), t: 4 }],
+            ),
+            // Time tile riding a mixed chain, with an anisotropic tail
+            // whose axis-0 radius (1) undercuts its scalar radius (3).
+            (
+                vec![256, 140],
+                vec![
+                    st(StencilSpec::FdLaplacian { order: 2, scale: 0.2 }),
+                    ChainStage::Repeat { stage: Box::new(st(fd1.clone())), t: 3 },
+                    st(StencilSpec::taps2d(3, &[(1, 3, 0.5), (0, 0, 1.0)])),
                 ],
             ),
         ];
-        for (dims, chain) in cases {
+        for (dims, stages) in cases {
             let x = NdArray::random(Shape::new(&dims), &mut rng);
-            let stages: Vec<ChainStage> = chain.iter().cloned().map(st).collect();
-            let radii: Vec<usize> = stages.iter().map(ChainStage::radius).collect();
+            let radii = level_radii(&stages, dims.len());
             for threads in [1usize, 3, 8] {
                 let (_, stats) = apply_chain(&x, &stages, threads).unwrap();
+                assert_eq!(stats.depth, radii.len(), "dims {dims:?}");
                 let est = chain_traffic_estimate(&dims, &radii, 4, threads);
                 assert_eq!(
                     est.fused_bytes,

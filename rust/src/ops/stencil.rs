@@ -60,6 +60,16 @@ pub trait StencilFunctor {
     /// Neighborhood half-width along every axis (the banding halo).
     fn radius(&self) -> usize;
 
+    /// Per-axis neighborhood half-widths for data of rank `rank`.
+    /// The default is the isotropic vector `[radius(); rank]`;
+    /// anisotropic functors override it so the banding executor stops
+    /// reserving oversized halos on axes the taps never reach. Every
+    /// entry must bound the tap offsets on that axis: executors
+    /// validate `|off[a]| <= radii(rank)[a]` when lowering.
+    fn radii(&self, rank: usize) -> Vec<usize> {
+        vec![self.radius(); rank]
+    }
+
     /// Lower to an explicit tap list for data of rank `rank`. Tap
     /// offsets must have length `rank` and magnitude <= `radius()`.
     fn taps(&self, rank: usize) -> Result<Vec<Tap>, OpError>;
@@ -101,6 +111,30 @@ impl StencilSpec {
 impl StencilFunctor for StencilSpec {
     fn radius(&self) -> usize {
         StencilSpec::radius(self)
+    }
+
+    fn radii(&self, rank: usize) -> Vec<usize> {
+        match self {
+            // A raw tap list is the one anisotropic variant: per axis,
+            // the halo is the widest offset actually reaching it (still
+            // clamped by the declared scalar, so a lying tap list keeps
+            // failing validation in `taps` rather than widening bands).
+            StencilSpec::Taps { radius, taps } => {
+                if taps.iter().any(|(off, _)| off.len() != rank) {
+                    return vec![*radius; rank];
+                }
+                (0..rank)
+                    .map(|a| {
+                        taps.iter()
+                            .map(|(off, _)| off[a].unsigned_abs() as usize)
+                            .max()
+                            .unwrap_or(0)
+                            .min(*radius)
+                    })
+                    .collect()
+            }
+            _ => vec![self.radius(); rank],
+        }
     }
 
     fn taps(&self, rank: usize) -> Result<Vec<Tap>, OpError> {
@@ -299,6 +333,34 @@ mod tests {
         let bad_mask = StencilSpec::Conv { radius: 1, mask: vec![0.0; 8] };
         assert!(bad_mask.taps(2).is_err());
         assert!(two_d.taps(0).is_err());
+    }
+
+    #[test]
+    fn per_axis_radii_track_tap_reach() {
+        // Isotropic specs stay isotropic.
+        let fd = StencilSpec::FdLaplacian { order: 2, scale: 1.0 };
+        assert_eq!(fd.radii(3), vec![2, 2, 2]);
+        let conv = StencilSpec::Conv { radius: 1, mask: vec![1.0; 9] };
+        assert_eq!(conv.radii(2), vec![1, 1]);
+        // Tap lists shrink to the offsets that exist per axis.
+        let aniso = StencilSpec::taps2d(3, &[(0, 3, 1.0), (0, -3, 1.0), (1, 0, 0.5)]);
+        assert_eq!(aniso.radii(2), vec![1, 3]);
+        // The declared radius clamps (a lying list never widens bands)
+        // and rank mismatch falls back to the declared scalar.
+        let lying = StencilSpec::Taps { radius: 1, taps: vec![(vec![4, 0], 1.0)] };
+        assert_eq!(lying.radii(2), vec![1, 0]);
+        assert_eq!(aniso.radii(3), vec![3, 3, 3]);
+        // Default-method path for custom functors.
+        struct Iso;
+        impl StencilFunctor for Iso {
+            fn radius(&self) -> usize {
+                2
+            }
+            fn taps(&self, rank: usize) -> Result<Vec<Tap>, OpError> {
+                Ok(vec![(vec![0; rank], 1.0)])
+            }
+        }
+        assert_eq!(Iso.radii(2), vec![2, 2]);
     }
 
     #[test]

@@ -22,7 +22,7 @@
 //!   carries model vs actual.
 
 use crate::hostexec::pool;
-use crate::hostexec::stencil::{chain_traffic_estimate, ChainStage};
+use crate::hostexec::stencil::{chain_traffic_estimate, level_radii};
 use crate::ops::cost::{CostWeights, TrafficEst};
 use crate::ops::Op;
 use crate::pipeline::fuse::Segment;
@@ -246,7 +246,10 @@ pub fn segments_estimate(segments: &[Segment], ctx: &ChainCtx) -> Option<u64> {
                 st = next;
             }
             Segment::FusedChain(chain) => {
-                let radii: Vec<usize> = chain.iter().map(ChainStage::radius).collect();
+                // Per-*level* radii: a `Repeat { t }` stage contributes
+                // `t` virtual levels, so time-tiled chains are priced
+                // exactly like the executor runs them.
+                let radii = level_radii(chain, st.dims.len());
                 let es = ctx.dtype.size_bytes();
                 let t = chain_traffic_estimate(&st.dims, &radii, es, ctx.threads);
                 // Fused chains map lane-wise; dims are unchanged.
@@ -260,6 +263,7 @@ pub fn segments_estimate(segments: &[Segment], ctx: &ChainCtx) -> Option<u64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hostexec::stencil::ChainStage;
     use crate::ops::{PointwiseSpec, StencilSpec};
     use crate::tensor::Order;
 

@@ -26,18 +26,26 @@
 //! barriered loops: same f32 expression per element, same neighbour
 //! order, same residual.
 //!
-//! [`jacobi_chain`] remains as a standalone public Poisson-only entry
-//! point (no internal callers since the cavity step went fully fused —
-//! its sweeps-only fusion is subsumed by [`cavity_fused_step`]); the
-//! descend/produce/ring scheduling is **not** duplicated in either:
-//! both drive `cascade_band` (hostexec's shared rolling-window
-//! scheduler, where the ring-capacity invariant lives) with their own
-//! row producers.
+//! Since PR 9 the solver paths are **time-tiled**: a run of identical
+//! stencil stages collapses into [`ChainStage::Repeat`] and the same
+//! partition DP that cuts fusable runs also picks the time-tile depth
+//! T — [`jacobi_chain`] executes its sweeps as DP-chosen tiles (one
+//! fused pass per tile) and [`cavity_time_tiled_step`] splits the
+//! whole cavity step into leading sweep passes plus a welded tail
+//! carrying the derived stages. Every tiling is bit-identical to the
+//! sweep loop: tiles compose exactly, so the plan moves traffic,
+//! never bits. [`jacobi_chain`] stays a standalone public Poisson-only
+//! entry point; the descend/produce/ring scheduling is **not**
+//! duplicated anywhere: all of these drive `cascade_band` (hostexec's
+//! shared rolling-window scheduler, where the ring-capacity invariant
+//! lives) with their own row producers.
 
 use crate::hostexec::pool::OutPtr;
-use crate::hostexec::stencil::{cascade_band, ChainStage, RowSource, SliceRows};
+use crate::hostexec::stencil::{
+    cascade_band, chain_levels, ChainStage, RowSource, SliceRows,
+};
 use crate::ops::Op;
-use crate::tensor::{bytes_of, bytes_of_mut};
+use crate::tensor::{bytes_of, bytes_of_mut, DType};
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use super::cost;
@@ -67,11 +75,13 @@ impl Segment {
     }
 
     /// Stages of the rewritten chain this segment covers (errors name
-    /// the chain-relative index of the stage a segment starts at).
+    /// the chain-relative index of the stage a segment starts at). A
+    /// time-tiled `Repeat { t }` covers `t` stages of the rewritten
+    /// chain, so this counts expanded levels.
     pub fn stage_count(&self) -> usize {
         match self {
             Segment::Single(_) => 1,
-            Segment::FusedChain(v) => v.len(),
+            Segment::FusedChain(v) => chain_levels(v),
         }
     }
 
@@ -80,28 +90,41 @@ impl Segment {
         match self {
             Segment::Single(op) => op.describe(),
             Segment::FusedChain(v) => {
-                let stencils = v
+                let depth = chain_levels(v);
+                let stencils: usize = v
                     .iter()
-                    .filter(|s| matches!(s, ChainStage::Stencil(_)))
-                    .count();
+                    .map(|s| match s {
+                        ChainStage::Stencil(_) => 1,
+                        ChainStage::Pointwise(_) => 0,
+                        ChainStage::Repeat { stage, t } => {
+                            if matches!(**stage, ChainStage::Stencil(_)) {
+                                *t
+                            } else {
+                                0
+                            }
+                        }
+                    })
+                    .sum();
                 format!(
-                    "fused chain depth={} ({stencils} stencil, {} pointwise)",
-                    v.len(),
-                    v.len() - stencils
+                    "fused chain depth={depth} ({stencils} stencil, {} pointwise)",
+                    depth - stencils
                 )
             }
         }
     }
 }
 
-/// Group consecutive stencil/pointwise stages into fused chains.
+/// Group consecutive stencil/pointwise stages into fused chains. Runs
+/// of **identical** stencil stages collapse into one
+/// [`ChainStage::Repeat`] — the executor then shares a single prepared
+/// functor across the time levels instead of re-lowering it per sweep.
 pub fn segment(stages: &[Op]) -> Vec<Segment> {
     let mut out = Vec::new();
     let mut run: Vec<ChainStage> = Vec::new();
     for op in stages {
         match op {
-            Op::Stencil { spec } => run.push(ChainStage::Stencil(spec.clone())),
-            Op::Pointwise { spec } => run.push(ChainStage::Pointwise(spec.clone())),
+            Op::Stencil { spec } => push_stage(&mut run, ChainStage::Stencil(spec.clone())),
+            Op::Pointwise { spec } => push_stage(&mut run, ChainStage::Pointwise(spec.clone())),
             other => {
                 flush(&mut out, &mut run);
                 out.push(Segment::Single(other.clone()));
@@ -112,12 +135,33 @@ pub fn segment(stages: &[Op]) -> Vec<Segment> {
     out
 }
 
-fn flush(out: &mut Vec<Segment>, run: &mut Vec<ChainStage>) {
-    match run.len() {
-        0 => {}
-        1 => {
-            out.push(single(run.pop().expect("run of one")));
+/// Append a stage to a fusable run, collapsing a stencil identical to
+/// the run's tail into a deeper [`ChainStage::Repeat`] time tile.
+fn push_stage(run: &mut Vec<ChainStage>, stage: ChainStage) {
+    if matches!(stage, ChainStage::Stencil(_)) {
+        let collapses = match run.last() {
+            Some(ChainStage::Repeat { stage: inner, .. }) => **inner == stage,
+            Some(last) => *last == stage,
+            None => false,
+        };
+        if collapses {
+            match run.pop().expect("matched a tail above") {
+                ChainStage::Repeat { stage: inner, t } => {
+                    run.push(ChainStage::Repeat { stage: inner, t: t + 1 });
+                }
+                prev => run.push(ChainStage::Repeat { stage: Box::new(prev), t: 2 }),
+            }
+            return;
         }
+    }
+    run.push(stage);
+}
+
+fn flush(out: &mut Vec<Segment>, run: &mut Vec<ChainStage>) {
+    // A single Repeat stage still fuses: its levels are a chain.
+    match (run.len(), chain_levels(run)) {
+        (0, _) => {}
+        (1, 1) => out.push(single(run.pop().expect("run of one"))),
         _ => out.push(Segment::FusedChain(std::mem::take(run))),
     }
 }
@@ -126,15 +170,21 @@ fn single(stage: ChainStage) -> Segment {
     Segment::Single(match stage {
         ChainStage::Stencil(spec) => Op::Stencil { spec },
         ChainStage::Pointwise(spec) => Op::Pointwise { spec },
+        ChainStage::Repeat { stage, .. } => return single(*stage),
     })
 }
 
 /// Cost-guided segmentation: same run detection as [`segment`], but the
-/// traffic model decides each run's cut points. Lane shapes are tracked
-/// through the movement stages so every run is costed at its actual
-/// geometry; if tracking fails mid-chain (a structurally invalid chain
-/// — execution will surface the error), the remaining runs fall back to
-/// the unconditional grouping.
+/// traffic model decides each run's cut points — including the **time
+/// tile depth**: a collapsed [`ChainStage::Repeat`] run is planned at
+/// its expanded per-level radii, so the partition DP trades the
+/// `~2 * radius * t` halo recompute of a depth-`t` tile against the
+/// `t - 1` full passes it avoids, and the chosen groups re-collapse
+/// into repeats of the DP's depths. Lane shapes are tracked through the
+/// movement stages so every run is costed at its actual geometry; if
+/// tracking fails mid-chain (a structurally invalid chain — execution
+/// will surface the error), the remaining runs fall back to the
+/// unconditional grouping.
 pub fn segment_costed(stages: &[Op], ctx: &cost::ChainCtx) -> Vec<Segment> {
     let mut out = Vec::new();
     let mut run: Vec<ChainStage> = Vec::new();
@@ -145,10 +195,21 @@ pub fn segment_costed(stages: &[Op], ctx: &cost::ChainCtx) -> Vec<Segment> {
     let flush_costed = |out: &mut Vec<Segment>,
                         run: &mut Vec<ChainStage>,
                         state: &Option<cost::LaneState>| {
-        match (state, run.len()) {
+        match (state, chain_levels(run)) {
             (_, 0) => {}
-            (Some(st), len) if len >= 2 => {
-                let radii: Vec<usize> = run.iter().map(ChainStage::radius).collect();
+            (Some(st), levels) if levels >= 2 => {
+                // Plan over the expanded per-level radii (repeats
+                // contribute one entry per time level, at their axis-0
+                // radius for this lane's rank).
+                let rank = st.dims.len();
+                let leaves: Vec<ChainStage> = std::mem::take(run)
+                    .into_iter()
+                    .flat_map(|s| match s {
+                        ChainStage::Repeat { stage, t } => vec![*stage; t],
+                        other => vec![other],
+                    })
+                    .collect();
+                let radii: Vec<usize> = leaves.iter().map(|s| s.radius0(rank)).collect();
                 let groups = cost::plan_run_groups(
                     &radii,
                     &st.dims,
@@ -156,9 +217,12 @@ pub fn segment_costed(stages: &[Op], ctx: &cost::ChainCtx) -> Vec<Segment> {
                     ctx.threads,
                     ctx.ring_discount,
                 );
-                let mut items = std::mem::take(run).into_iter();
+                let mut items = leaves.into_iter();
                 for g in groups {
-                    let group: Vec<ChainStage> = items.by_ref().take(g).collect();
+                    let mut group: Vec<ChainStage> = Vec::new();
+                    for leaf in items.by_ref().take(g) {
+                        push_stage(&mut group, leaf);
+                    }
                     if g >= 2 {
                         out.push(Segment::FusedChain(group));
                     } else {
@@ -171,8 +235,8 @@ pub fn segment_costed(stages: &[Op], ctx: &cost::ChainCtx) -> Vec<Segment> {
     };
     for op in stages {
         match op {
-            Op::Stencil { spec } => run.push(ChainStage::Stencil(spec.clone())),
-            Op::Pointwise { spec } => run.push(ChainStage::Pointwise(spec.clone())),
+            Op::Stencil { spec } => push_stage(&mut run, ChainStage::Stencil(spec.clone())),
+            Op::Pointwise { spec } => push_stage(&mut run, ChainStage::Pointwise(spec.clone())),
             other => {
                 flush_costed(&mut out, &mut run, &state);
                 out.push(Segment::Single(other.clone()));
@@ -186,11 +250,26 @@ pub fn segment_costed(stages: &[Op], ctx: &cost::ChainCtx) -> Vec<Segment> {
     out
 }
 
-/// `iters` Jacobi sweeps of the cavity Poisson solve, fused into one
-/// rolling-window pass: `psi_next[i][j] = 0.25 * (psi[i][j+1] +
-/// psi[i][j-1] + psi[i+1][j] + psi[i-1][j] + h2 * omega[i][j])` on the
-/// interior, 0 on the walls — bit-identical to `iters` sequential
-/// sweeps of [`crate::cfd::CpuSolver`]'s loop.
+/// The time-tile plan for `iters` Jacobi sweeps over an `n x n` field:
+/// the partition DP over a virtual radius-1 depth-`iters` chain
+/// ([`crate::pipeline::cost::plan_run_groups`]). Each returned entry is
+/// the number of sweeps one fused pass advances; their sum is `iters`.
+/// A tile of depth `t` trades `~2 t` halo rows recomputed per band
+/// boundary against `t - 1` avoided full read+write passes, so shallow
+/// bands tile at an interior depth while single-band runs fuse whole.
+pub fn jacobi_time_tiles(n: usize, iters: usize, threads: usize, discount: f64) -> Vec<usize> {
+    cost::plan_run_groups(&vec![1usize; iters], &[n, n], DType::F32, threads, discount)
+}
+
+/// `iters` Jacobi sweeps of the cavity Poisson solve, executed as
+/// DP-chosen **time tiles** — one fused rolling-window pass per tile,
+/// each advancing `psi_next[i][j] = 0.25 * (psi[i][j+1] + psi[i][j-1]
+/// + psi[i+1][j] + psi[i-1][j] + h2 * omega[i][j])` (interior; 0 on
+/// the walls) by the tile's depth. Bit-identical to `iters` sequential
+/// sweeps of [`crate::cfd::CpuSolver`]'s loop for **any** tiling, so
+/// the plan only moves traffic, never bits. Tiles come from
+/// [`jacobi_time_tiles`] with the host-measured ring discount; pass
+/// explicit tiles through [`jacobi_chain_tiled`] to pin a layout.
 pub fn jacobi_chain(
     psi: &[f32],
     omega: &[f32],
@@ -199,8 +278,40 @@ pub fn jacobi_chain(
     iters: usize,
     threads: usize,
 ) -> Vec<f32> {
+    let tiles = jacobi_time_tiles(n, iters, threads, cost::ring_byte_discount());
+    jacobi_chain_tiled(psi, omega, n, h2, &tiles, threads)
+}
+
+/// [`jacobi_chain`] with an explicit tile plan (entries = sweeps per
+/// fused pass). Benches pin deterministic plans through this.
+pub fn jacobi_chain_tiled(
+    psi: &[f32],
+    omega: &[f32],
+    n: usize,
+    h2: f32,
+    tiles: &[usize],
+    threads: usize,
+) -> Vec<f32> {
     assert_eq!(psi.len(), n * n, "psi field must be n x n");
     assert_eq!(omega.len(), n * n, "omega field must be n x n");
+    let mut cur: Option<Vec<f32>> = None;
+    for &t in tiles {
+        let src: &[f32] = cur.as_deref().unwrap_or(psi);
+        cur = Some(jacobi_pass(src, omega, n, h2, t, threads));
+    }
+    cur.unwrap_or_else(|| psi.to_vec())
+}
+
+/// One fused pass advancing `iters` sweeps (one cascade of `iters`
+/// radius-1 levels per band).
+fn jacobi_pass(
+    psi: &[f32],
+    omega: &[f32],
+    n: usize,
+    h2: f32,
+    iters: usize,
+    threads: usize,
+) -> Vec<f32> {
     if iters == 0 || n == 0 {
         return psi.to_vec();
     }
@@ -390,6 +501,56 @@ pub fn cavity_fused_step(
     }
 }
 
+/// [`cavity_fused_step`] with DP-chosen **time tiles**: the step's
+/// `iters + 2` virtual stages (K sweeps, velocity/vorticity, transport)
+/// are partitioned by [`crate::pipeline::cost::plan_run_groups`] — the
+/// leading groups run as pure-sweep fused passes
+/// (the [`jacobi_chain`] machinery), the tail group runs as one
+/// [`cavity_fused_step`] carrying the remaining sweeps plus the two
+/// derived stages (transport reads the packed `u | v | om` rows, so the
+/// tail is welded to depth >= 2). Bit-identical to the single all-fused
+/// pass — and to the unfused solver loops — for any partition, because
+/// sweep passes compose exactly and the tail sees the same advanced psi
+/// with the same `omega0`. Returns the step outputs and the chosen time
+/// tile T (the deepest pass, in cascade levels).
+pub fn cavity_time_tiled_step(
+    psi0: &[f32],
+    omega0: &[f32],
+    n: usize,
+    c: &StepCoef,
+    threads: usize,
+) -> (FusedStep, usize) {
+    assert_eq!(psi0.len(), n * n, "psi field must be n x n");
+    assert_eq!(omega0.len(), n * n, "omega field must be n x n");
+    if n == 0 {
+        return (FusedStep { psi: vec![], omega: vec![], residual: 0.0 }, 1);
+    }
+    let d = c.iters + 2;
+    let mut groups = cost::plan_run_groups(
+        &vec![1usize; d],
+        &[n, n],
+        DType::F32,
+        threads,
+        cost::ring_byte_discount(),
+    );
+    // Weld the tail: the transport stage must share a pass with the
+    // velocity/vorticity stage it reads packed rows from.
+    if groups.last() == Some(&1) {
+        let merged = groups.pop().expect("checked last") + groups.pop().expect("sum >= 2");
+        groups.push(merged);
+    }
+    let tail = groups.pop().expect("d >= 2 yields at least one group");
+    let chosen_t = groups.iter().copied().max().unwrap_or(0).max(tail);
+    let mut advanced: Option<Vec<f32>> = None;
+    for &g in &groups {
+        let src: &[f32] = advanced.as_deref().unwrap_or(psi0);
+        advanced = Some(jacobi_pass(src, omega0, n, c.h2, g, threads));
+    }
+    let src: &[f32] = advanced.as_deref().unwrap_or(psi0);
+    let tc = StepCoef { iters: tail - 2, ..*c };
+    (cavity_fused_step(src, omega0, n, &tc, threads), chosen_t)
+}
+
 /// The velocity/vorticity stage: from the final psi rows, derive one
 /// packed `u | v | om` row, where `om` is the input omega with the Thom
 /// wall conditions applied. Expressions and write order mirror the
@@ -484,13 +645,31 @@ mod tests {
 
         let segs = segment(&[st.clone(), st.clone(), r.clone(), st.clone()]);
         assert_eq!(segs.len(), 3);
-        assert!(matches!(&segs[0], Segment::FusedChain(c) if c.len() == 2));
+        // Identical stencils collapse into one Repeat time tile.
+        match &segs[0] {
+            Segment::FusedChain(c) => {
+                assert_eq!(c.len(), 1);
+                assert!(matches!(&c[0], ChainStage::Repeat { t: 2, .. }));
+                assert_eq!(segs[0].stage_count(), 2);
+            }
+            other => panic!("expected fused chain, got {other:?}"),
+        }
         assert_eq!(segs[1], Segment::Single(r.clone()));
         assert_eq!(segs[2], Segment::Single(st.clone()));
 
-        // A lone stencil stays single; triple fuses into one chain.
+        // A lone stencil stays single; a triple fuses into one depth-3
+        // time tile.
         assert_eq!(segment(&[st.clone()]), vec![Segment::Single(st.clone())]);
-        let segs = segment(&[st.clone(), st.clone(), st]);
+        let segs = segment(&[st.clone(), st.clone(), st.clone()]);
+        assert!(
+            matches!(&segs[..], [Segment::FusedChain(c)]
+                if matches!(&c[..], [ChainStage::Repeat { t: 3, .. }]))
+        );
+        assert_eq!(segs[0].describe(), "fused chain depth=3 (3 stencil, 0 pointwise)");
+
+        // Distinct stencils keep distinct stages (no collapse).
+        let other = Op::Stencil { spec: StencilSpec::FdLaplacian { order: 2, scale: 1.0 } };
+        let segs = segment(&[st.clone(), other, st]);
         assert!(matches!(&segs[..], [Segment::FusedChain(c)] if c.len() == 3));
     }
 
@@ -516,7 +695,8 @@ mod tests {
         assert_eq!(segs[2], Segment::Single(pw.clone()));
         assert_eq!(segs[0].stage_count(), 3);
         assert_eq!(segs[2].stage_count(), 1);
-        assert!(segs[0].describe().contains("1 pointwise"));
+        assert!(segs[0].describe().contains("1 stencil"));
+        assert!(segs[0].describe().contains("2 pointwise"));
     }
 
     #[test]
@@ -534,7 +714,10 @@ mod tests {
         let stages = [st.clone(), st.clone(), r.clone(), st.clone()];
         let segs = segment_costed(&stages, &ctx);
         assert_eq!(segs, segment(&stages));
-        assert!(matches!(&segs[0], Segment::FusedChain(c) if c.len() == 2));
+        assert!(
+            matches!(&segs[0], Segment::FusedChain(c)
+                if matches!(&c[..], [ChainStage::Repeat { t: 2, .. }]))
+        );
         assert_eq!(segs[1], Segment::Single(r));
     }
 
@@ -549,8 +732,10 @@ mod tests {
         let s1 = Op::Stencil {
             spec: StencilSpec::FdLaplacian { order: 1, scale: 1.0 },
         };
+        // The tap must actually reach axis 0: per-axis radii would
+        // shrink a center-only tap list to a zero banding halo.
         let s24 = Op::Stencil {
-            spec: StencilSpec::Taps { radius: 24, taps: vec![(vec![0, 0], 1.0)] },
+            spec: StencilSpec::Taps { radius: 24, taps: vec![(vec![24, 0], 1.0)] },
         };
         let many = ChainCtx::new(vec![64, 512], 1, DType::F32)
             .with_threads(16)
@@ -635,6 +820,61 @@ mod tests {
         let psi = vec![1.5f32; 16];
         let omega = vec![0.25f32; 16];
         assert_eq!(jacobi_chain(&psi, &omega, 4, 0.1, 0, 4), psi);
+    }
+
+    #[test]
+    fn jacobi_any_tile_plan_is_bit_identical() {
+        // Tiling only re-buckets sweeps into passes; every plan —
+        // balanced, degenerate, mixed — equals the sequential sweeps.
+        let mut rng = Rng::new(0x1AC0B3);
+        let n = 65usize;
+        let psi = rng.f32_vec(n * n);
+        let omega = rng.f32_vec(n * n);
+        let h2 = 1.0 / (((n - 1) * (n - 1)) as f32);
+        let want = jacobi_unfused(&psi, &omega, n, h2, 6);
+        for tiles in [vec![6usize], vec![3, 3], vec![1; 6], vec![3, 2, 1], vec![4, 2]] {
+            for threads in [1, 4] {
+                let got = jacobi_chain_tiled(&psi, &omega, n, h2, &tiles, threads);
+                assert_eq!(got, want, "tiles {tiles:?} threads={threads}");
+            }
+        }
+        assert_eq!(jacobi_chain_tiled(&psi, &omega, n, h2, &[], 4), psi);
+        // The DP plan conserves the sweep count.
+        for iters in [0usize, 1, 5, 64] {
+            for threads in [1, 8, 16] {
+                let tiles = jacobi_time_tiles(n, iters, threads, cost::RING_BYTE_DISCOUNT);
+                assert_eq!(tiles.iter().sum::<usize>(), iters, "iters={iters}");
+            }
+        }
+    }
+
+    #[test]
+    fn cavity_time_tiled_step_matches_all_fused() {
+        // The welded split (leading sweep passes + derived tail) must
+        // be bitwise the single all-fused pass, for every band count.
+        let mut rng = Rng::new(0x1AC0B4);
+        let n = 192usize;
+        let psi = rng.f32_vec(n * n);
+        let omega = rng.f32_vec(n * n);
+        let h = 1.0f64 / (n - 1) as f64;
+        let c = StepCoef {
+            iters: 20,
+            h: h as f32,
+            h2: (h * h) as f32,
+            inv2h: (0.5 / h) as f32,
+            invh2: (1.0 / (h * h)) as f32,
+            nu: 0.1,
+            dt: 0.0001,
+            lid: 1.0,
+        };
+        for threads in [1usize, 4, 16] {
+            let want = cavity_fused_step(&psi, &omega, n, &c, threads);
+            let (got, t) = cavity_time_tiled_step(&psi, &omega, n, &c, threads);
+            assert_eq!(got.psi, want.psi, "threads={threads}");
+            assert_eq!(got.omega, want.omega, "threads={threads}");
+            assert_eq!(got.residual, want.residual, "threads={threads}");
+            assert!(t >= 2, "tail always carries uvom + transport");
+        }
     }
 
     // cavity_fused_step bit-identity is covered where the unfused

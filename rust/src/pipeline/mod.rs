@@ -37,8 +37,14 @@
 //!   one read of the input and one write of the output instead of
 //!   `depth` round trips, with only `~2·radius·depth` intermediate rows
 //!   hot per worker (pointwise stages are zero-radius members — one hot
-//!   row, no extra traffic). The same machinery runs the CFD cavity's
-//!   **whole** time step as one fused pass
+//!   row, no extra traffic). Runs of the **same** stencil additionally
+//!   tile the *time* axis: segmentation collapses them into
+//!   [`ChainStage::Repeat`](crate::hostexec::stencil::ChainStage::Repeat)
+//!   and the partition DP ([`cost::plan_run_groups`]) picks the tile
+//!   depth T that minimizes modeled traffic, so K iterations cost
+//!   ⌈K/T⌉ passes instead of K. The same machinery runs the CFD
+//!   cavity's **whole** time step as one fused (and time-tiled —
+//!   [`fuse::cavity_time_tiled_step`]) pass
 //!   ([`fuse::cavity_fused_step`]).
 //! * **Plan cache** ([`plan_cache`]) — resolved
 //!   [`planner::Plan`](crate::planner::Plan)s keyed by (shape, order,
@@ -110,6 +116,11 @@ pub struct PipeStats {
     /// the measured counters above so callers see model vs actual. 0
     /// when no shape context was available.
     pub estimated_bytes: u64,
+    /// Deepest time tile executed: the largest
+    /// [`ChainStage::Repeat`](crate::hostexec::stencil::ChainStage::Repeat)
+    /// depth among the fused chains this run lowered (1 when chains
+    /// fused but nothing repeated, 0 when nothing fused at all).
+    pub time_tile: usize,
 }
 
 /// A validated chain of rearrangement ops (see the module docs).
@@ -248,15 +259,26 @@ impl Pipeline {
                     match hostexec::stencil::apply_chain(ins[0], chain, threads) {
                         Ok((y, st)) => {
                             let meas = st.fused_traffic_bytes();
+                            // The virtual depth (`Repeat { t }` counts t
+                            // levels), not the declared stage count —
+                            // the unfused baseline pays one full pass
+                            // per *level*.
+                            let levels = hostexec::stencil::chain_levels(chain);
+                            let tile =
+                                chain.iter().map(|cs| cs.levels()).max().unwrap_or(1);
                             stats.fused_chains += 1;
                             stats.fused_traffic_bytes += meas;
                             stats.unfused_chain_traffic_bytes +=
                                 hostexec::stencil::unfused_chain_traffic_bytes(
                                     ins[0].len(),
-                                    chain.len(),
+                                    levels,
                                     es,
                                 );
-                            let radii: Vec<usize> = chain.iter().map(|cs| cs.radius()).collect();
+                            stats.time_tile = stats.time_tile.max(tile);
+                            let radii = hostexec::stencil::level_radii(
+                                chain,
+                                ins[0].shape().dims().len(),
+                            );
                             let est = hostexec::stencil::chain_traffic_estimate(
                                 ins[0].shape().dims(),
                                 &radii,
@@ -271,6 +293,7 @@ impl Pipeline {
                             );
                             if let Some(s) = span {
                                 trace::arg(s, "bytes", meas.to_string());
+                                trace::arg(s, "time_tile", tile.to_string());
                             }
                             Ok(vec![y])
                         }
@@ -700,6 +723,8 @@ mod tests {
         let (got, stats) = p.execute_with_stats(&[&x]).unwrap();
         assert_eq!(got, want);
         assert_eq!(stats.fused_chains, 1);
+        // Three identical sweeps collapse into one Repeat{t: 3} stage.
+        assert_eq!(stats.time_tile, 3);
         assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
     }
 
@@ -787,6 +812,7 @@ mod tests {
         let (outs, stats) = p.dispatch_buf_with_stats(&[&x], ExecBackend::Host).unwrap();
         assert_eq!(outs.len(), 1);
         assert_eq!(stats.fused_chains, 1);
+        assert_eq!(stats.time_tile, 2);
         assert!(stats.fused_traffic_bytes > 0);
         assert!(2 * stats.fused_traffic_bytes <= stats.unfused_chain_traffic_bytes);
         // The reference backend reports stage counts, no fusion.
