@@ -1,0 +1,232 @@
+//! Closed-loop HTTP load generator for the serving front end.
+//!
+//! Drives N keep-alive connections against a `gdrk serve` instance —
+//! or, with no `--addr`, against an in-process [`Server`] on an
+//! ephemeral port — each connection looping request → response →
+//! request over a small mixed workload (a pure copy, a 3-D permute,
+//! and a fused stencil `pipe:` chain). Writes `BENCH_serve.json` with
+//! per-workload and aggregate rows: request count, errors, throughput,
+//! and p50/p99 latency. `rust/tests/serve_latency_anchor.rs` gates on
+//! the aggregate row; CI regenerates the json right before it runs.
+//!
+//! Usage: `cargo run --release --example loadgen -- [--addr HOST:PORT]
+//! [--connections N] [--seconds S] [--out FILE]`
+
+use gdrk::runtime::Tensor;
+use gdrk::serve::{client, ServeConfig, Server};
+use gdrk::tensor::{DType, Shape};
+use gdrk::util::rng::Rng;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+struct Workload {
+    name: &'static str,
+    inputs: Vec<Tensor>,
+}
+
+const WORKLOADS: [&str; 3] = ["copy_4k", "permute3d_o102", "pipe:smooth3x3_96+smooth3x3_96"];
+
+fn workloads(seed: u64) -> Vec<Workload> {
+    let mut rng = Rng::new(seed);
+    vec![
+        Workload {
+            name: WORKLOADS[0],
+            inputs: vec![Tensor::random(DType::F32, Shape::new(&[1024]), &mut rng)],
+        },
+        Workload {
+            name: WORKLOADS[1],
+            inputs: vec![Tensor::random(DType::F32, Shape::new(&[32, 48, 64]), &mut rng)],
+        },
+        Workload {
+            name: WORKLOADS[2],
+            inputs: vec![Tensor::random(DType::F32, Shape::new(&[96, 96]), &mut rng)],
+        },
+    ]
+}
+
+/// Nearest-rank percentile over an already-sorted sample, in place.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+struct Row {
+    workload: String,
+    requests: usize,
+    errors: usize,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn row(workload: &str, latencies_ms: &mut Vec<f64>, errors: usize, elapsed: f64) -> Row {
+    latencies_ms.sort_by(|a, b| a.total_cmp(b));
+    Row {
+        workload: workload.to_string(),
+        requests: latencies_ms.len(),
+        errors,
+        throughput_rps: latencies_ms.len() as f64 / elapsed.max(1e-9),
+        p50_ms: percentile(latencies_ms, 0.50),
+        p99_ms: percentile(latencies_ms, 0.99),
+    }
+}
+
+fn render_json(connections: usize, seconds: f64, rows: &[Row]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"bench\": \"serve\",\n");
+    out.push_str(&format!("  \"connections\": {connections},\n"));
+    out.push_str(&format!("  \"seconds\": {seconds},\n"));
+    out.push_str("  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"workload\": \"{}\", \"requests\": {}, \"errors\": {}, \
+             \"throughput_rps\": {:.2}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}}}{}\n",
+            r.workload,
+            r.requests,
+            r.errors,
+            r.throughput_rps,
+            r.p50_ms,
+            r.p99_ms,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+fn main() {
+    let mut addr: Option<String> = None;
+    let mut connections = 4usize;
+    let mut seconds = 3.0f64;
+    let mut out_path = "BENCH_serve.json".to_string();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--addr" => addr = args.next(),
+            "--connections" => {
+                connections = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(connections)
+            }
+            "--seconds" => {
+                seconds = args.next().and_then(|v| v.parse().ok()).unwrap_or(seconds)
+            }
+            "--out" => {
+                if let Some(v) = args.next() {
+                    out_path = v;
+                }
+            }
+            other => {
+                eprintln!(
+                    "loadgen: unknown arg '{other}' \
+                     (usage: --addr HOST:PORT --connections N --seconds S --out FILE)"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    let connections = connections.max(1);
+    let seconds = if seconds > 0.0 { seconds } else { 3.0 };
+
+    // No --addr: bench an in-process server on an ephemeral port, with
+    // enough dispatch threads that the closed loop is never queued on
+    // the serving side itself.
+    let server = match addr {
+        Some(_) => None,
+        None => Some(
+            Server::start(ServeConfig {
+                dispatch_threads: connections.max(4),
+                ..ServeConfig::default()
+            })
+            .expect("start in-process server"),
+        ),
+    };
+    let target = match (&addr, &server) {
+        (Some(a), _) => a.clone(),
+        (None, Some(s)) => s.local_addr().to_string(),
+        (None, None) => unreachable!(),
+    };
+    println!("loadgen: {connections} connection(s) -> {target} for {seconds:.1} s");
+
+    let deadline = Instant::now() + Duration::from_secs_f64(seconds);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..connections)
+        .map(|c| {
+            let target = target.clone();
+            std::thread::spawn(move || {
+                let work = workloads(0x5EED_0000 + c as u64);
+                let mut samples: Vec<(usize, f64, bool)> = Vec::new();
+                let Ok(mut stream) = TcpStream::connect(&target) else {
+                    return samples;
+                };
+                // Offset the start index so connections interleave
+                // workloads instead of hitting one in lockstep.
+                let mut i = c;
+                while Instant::now() < deadline {
+                    let w = i % work.len();
+                    i += 1;
+                    let t = Instant::now();
+                    match client::run_over(&mut stream, work[w].name, &work[w].inputs, None) {
+                        Ok(resp) => {
+                            samples.push((w, t.elapsed().as_secs_f64() * 1e3, resp.status == 200))
+                        }
+                        Err(_) => {
+                            samples.push((w, t.elapsed().as_secs_f64() * 1e3, false));
+                            match TcpStream::connect(&target) {
+                                Ok(s) => stream = s,
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                }
+                samples
+            })
+        })
+        .collect();
+    let mut samples: Vec<(usize, f64, bool)> = Vec::new();
+    for h in handles {
+        samples.extend(h.join().expect("loadgen worker panicked"));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut rows = Vec::new();
+    let mut all_lat = Vec::new();
+    let mut all_err = 0usize;
+    for (w, name) in WORKLOADS.iter().enumerate() {
+        let mut lat: Vec<f64> = samples
+            .iter()
+            .filter(|(sw, _, ok)| *sw == w && *ok)
+            .map(|(_, ms, _)| *ms)
+            .collect();
+        let errors = samples.iter().filter(|(sw, _, ok)| *sw == w && !*ok).count();
+        all_lat.extend_from_slice(&lat);
+        all_err += errors;
+        rows.push(row(name, &mut lat, errors, elapsed));
+    }
+    rows.push(row("all", &mut all_lat, all_err, elapsed));
+
+    for r in &rows {
+        println!(
+            "{:34} {:6} req  {:4} err  {:9.1} req/s  p50 {:8.3} ms  p99 {:8.3} ms",
+            r.workload, r.requests, r.errors, r.throughput_rps, r.p50_ms, r.p99_ms
+        );
+    }
+    std::fs::write(&out_path, render_json(connections, seconds, &rows))
+        .expect("write bench json");
+    println!("wrote {out_path} ({} rows)", rows.len());
+
+    if let Some(server) = server {
+        println!("{}", server.service().metrics().summary());
+        server.shutdown();
+    }
+    let all = rows.last().expect("aggregate row");
+    if all.requests == 0 {
+        eprintln!("loadgen: no request completed successfully");
+        std::process::exit(1);
+    }
+}

@@ -9,6 +9,10 @@
 //! responses come back on per-request channels. Metrics count
 //! everything. Dtype is resolved from the request tensors and — when an
 //! artifact manifest is present — validated against it, never assumed.
+//! [`service::Service`] is the thin leader layer (ids, admission, the
+//! blocking call surface); the worker thread, supervision, batching
+//! loop and degradation ladder are owned by the internal `sched`
+//! scheduler, which the network front end (`crate::serve`) shares.
 //!
 //! The executor behind the worker is selected by
 //! [`service::Backend`]: native PJRT over the AOT artifacts, the tiled
@@ -37,6 +41,7 @@
 pub mod batcher;
 pub mod metrics;
 pub mod request;
+pub(crate) mod sched;
 pub mod service;
 
 pub use batcher::Batcher;

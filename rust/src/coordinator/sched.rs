@@ -1,0 +1,748 @@
+//! The scheduler: owner of the device-worker thread pool behind
+//! [`Service`](super::Service).
+//!
+//! PR 10 split the coordinator in two. [`super::service::Service`] is
+//! the thin leader layer — request ids, cost-priced admission, the
+//! blocking call surface — and everything that *runs* work lives here:
+//! worker spawn/supervision, the batcher loop, the deadline sweep, the
+//! degradation ladder, and the trace-sink flush on shutdown. The split
+//! exists for the serving front end (`crate::serve`): connection I/O
+//! threads and host-execution workers are scheduled from one place, so
+//! they can be partitioned over cores instead of fighting for them
+//! (see [`crate::hostexec::pool::set_num_threads`] /
+//! [`crate::hostexec::pool::set_pin_base`], honoured under `GDRK_PIN`).
+//!
+//! Shutdown ordering contract (the serving layer depends on it): a
+//! [`Scheduler::shutdown`] first drains the worker — every queued
+//! request is executed or swept typed (`DeadlineExceeded`), every
+//! reply sender resolves — and only then writes the trace sink, so a
+//! traced request completing during shutdown still lands in the trace
+//! JSON. The call is idempotent: the first caller does the work,
+//! every later call (including `Service`'s `Drop`) is a no-op.
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::request::{Request, RequestId, Response, ServiceError};
+use super::service::{Backend, ServiceConfig};
+use crate::faultinject::{site, FaultInjector};
+use crate::obs::bandwidth;
+use crate::obs::trace::{self, TraceSink};
+use crate::ops::ExecBackend;
+use crate::pipeline::PipeStats;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::{Runtime, Tensor};
+use crate::tensor::TensorBuf;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+pub(crate) enum Message {
+    Work(Request, Sender<Response>),
+    Shutdown,
+}
+
+/// Supervised worker state: the live channel plus restart bookkeeping.
+struct Inner {
+    tx: Sender<Message>,
+    worker: Option<JoinHandle<()>>,
+    /// Lifetime restart count — drives the exponential backoff.
+    restarts: u32,
+}
+
+/// Respawn attempts one dispatch makes before giving up and handing
+/// the message back (the leader answers `WorkerGone`).
+const MAX_RESTART_ATTEMPTS: u32 = 3;
+/// Base restart backoff; doubles per lifetime restart, capped at
+/// `BASE << MAX_BACKOFF_SHIFT` (64 ms) so a crash-looping worker never
+/// stalls submission for long.
+const RESTART_BACKOFF_BASE: Duration = Duration::from_millis(1);
+const MAX_BACKOFF_SHIFT: u32 = 6;
+/// Throughput assumed for `Overloaded::estimated_wait_seconds` before
+/// any request has completed (2 GiB/s — conservative host streaming).
+const DEFAULT_THROUGHPUT_BPS: f64 = (2u64 << 30) as f64;
+
+/// Owner of the device-worker thread: spawn, supervise (respawn with
+/// bounded backoff), drain, and flush the trace sink exactly once.
+pub(crate) struct Scheduler {
+    inner: Mutex<Inner>,
+    config: ServiceConfig,
+    metrics: Arc<Metrics>,
+    faults: Option<Arc<FaultInjector>>,
+    trace_sink: Option<Arc<TraceSink>>,
+    stopped: AtomicBool,
+}
+
+impl Scheduler {
+    pub(crate) fn start(
+        config: ServiceConfig,
+        metrics: Arc<Metrics>,
+        faults: Option<Arc<FaultInjector>>,
+        trace_sink: Option<Arc<TraceSink>>,
+    ) -> std::io::Result<Scheduler> {
+        let (tx, worker) = spawn_worker(&config, &metrics, &faults, &trace_sink)?;
+        Ok(Scheduler {
+            inner: Mutex::new(Inner {
+                tx,
+                worker: Some(worker),
+                restarts: 0,
+            }),
+            config,
+            metrics,
+            faults,
+            trace_sink,
+            stopped: AtomicBool::new(false),
+        })
+    }
+
+    pub(crate) fn trace_sink(&self) -> Option<&Arc<TraceSink>> {
+        self.trace_sink.as_ref()
+    }
+
+    /// Hand one request to the worker, restarting it when the channel
+    /// is dead. Returns the request and its reply sender if no worker
+    /// accepted it within the restart budget.
+    pub(crate) fn dispatch(
+        &self,
+        req: Request,
+        reply: Sender<Response>,
+    ) -> Result<(), (Request, Sender<Response>)> {
+        match self.send_supervised(Message::Work(req, reply)) {
+            Ok(()) => Ok(()),
+            Err(Message::Work(req, reply)) => Err((req, reply)),
+            Err(Message::Shutdown) => Ok(()),
+        }
+    }
+
+    /// Whether the device worker thread is live (spawned and not yet
+    /// exited). `/healthz` reports this.
+    pub(crate) fn worker_alive(&self) -> bool {
+        if self.stopped.load(Ordering::SeqCst) {
+            return false;
+        }
+        self.inner
+            .lock()
+            .map(|i| i.worker.as_ref().is_some_and(|h| !h.is_finished()))
+            .unwrap_or(false)
+    }
+
+    /// Send to the worker, restarting it when the channel is dead:
+    /// join the corpse, back off (exponential in the lifetime restart
+    /// count, bounded), respawn, retry. Hands the message back if no
+    /// worker accepts it within [`MAX_RESTART_ATTEMPTS`].
+    fn send_supervised(&self, msg: Message) -> Result<(), Message> {
+        let mut inner = self.inner.lock().expect("scheduler lock");
+        let mut msg = match inner.tx.send(msg) {
+            Ok(()) => return Ok(()),
+            Err(e) => e.0,
+        };
+        for _ in 0..MAX_RESTART_ATTEMPTS {
+            if let Some(h) = inner.worker.take() {
+                let _ = h.join();
+            }
+            let backoff = RESTART_BACKOFF_BASE * (1 << inner.restarts.min(MAX_BACKOFF_SHIFT));
+            std::thread::sleep(backoff);
+            inner.restarts += 1;
+            Metrics::inc(&self.metrics.worker_restarts);
+            match spawn_worker(&self.config, &self.metrics, &self.faults, &self.trace_sink) {
+                Ok((tx, worker)) => {
+                    inner.tx = tx;
+                    inner.worker = Some(worker);
+                    // The dead worker absorbed its queue; forget its
+                    // gauge contributions so lost bookkeeping cannot
+                    // wedge admission shut. (Concurrent submitters
+                    // parked on this lock re-add their own costs when
+                    // their sends land on the new channel — transient
+                    // undercounting self-heals as work completes.)
+                    let (cost, depth) = match &msg {
+                        Message::Work(req, _) => (req.cost_bytes, 1),
+                        Message::Shutdown => (0, 0),
+                    };
+                    self.metrics.queued_bytes.store(cost, Ordering::Relaxed);
+                    self.metrics.queued_depth.store(depth, Ordering::Relaxed);
+                    match inner.tx.send(msg) {
+                        Ok(()) => return Ok(()),
+                        Err(e) => msg = e.0, // died instantly; retry
+                    }
+                }
+                Err(e) => {
+                    eprintln!("gdrk: worker respawn failed: {e}");
+                }
+            }
+        }
+        Err(msg)
+    }
+
+    /// Graceful shutdown, idempotent: the first call drains the worker
+    /// (queued requests execute or sweep typed, every reply resolves)
+    /// and *then* flushes the trace sink — so traces collected during
+    /// the drain are in the JSON — and every later call returns
+    /// immediately. The serving layer calls this after it has stopped
+    /// accepting connections but *before* it drops the ones it drained.
+    pub(crate) fn shutdown(&self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        if let Ok(mut inner) = self.inner.lock() {
+            let _ = inner.tx.send(Message::Shutdown);
+            if let Some(h) = inner.worker.take() {
+                let _ = h.join();
+            }
+        }
+        // The worker is joined: every collected trace is in the sink.
+        if let Some(sink) = &self.trace_sink {
+            if let Err(e) = sink.write() {
+                eprintln!("gdrk: writing trace to {} failed: {e}", sink.path().display());
+            }
+        }
+    }
+}
+
+fn spawn_worker(
+    config: &ServiceConfig,
+    metrics: &Arc<Metrics>,
+    faults: &Option<Arc<FaultInjector>>,
+    trace_sink: &Option<Arc<TraceSink>>,
+) -> std::io::Result<(Sender<Message>, JoinHandle<()>)> {
+    let (tx, rx) = channel::<Message>();
+    let config = config.clone();
+    let metrics = metrics.clone();
+    let faults = faults.clone();
+    let trace_sink = trace_sink.clone();
+    let worker = std::thread::Builder::new()
+        .name("gdrk-device-worker".into())
+        .spawn(move || worker_loop(rx, config, metrics, faults, trace_sink))?;
+    Ok((tx, worker))
+}
+
+/// The cost model's drain estimate for `queued_bytes` of queued work:
+/// observed throughput (processed bytes over execution seconds) when
+/// there is history, else a conservative default.
+pub(crate) fn estimated_wait_seconds(metrics: &Metrics, queued_bytes: u64) -> f64 {
+    let processed = Metrics::get(&metrics.processed_bytes) as f64;
+    let secs = metrics.exec_latency.total_seconds();
+    let bps = if processed > 0.0 && secs > 1e-6 {
+        processed / secs
+    } else {
+        DEFAULT_THROUGHPUT_BPS
+    };
+    queued_bytes as f64 / bps.max(1.0)
+}
+
+/// The executor the worker thread owns (resolved from the config's
+/// [`Backend`]; `Failed` answers every request with the init error).
+enum Executor {
+    Pjrt(Runtime),
+    Host {
+        mode: ExecBackend,
+        /// When the artifacts directory carries a manifest, host-served
+        /// requests validate against it (shape **and dtype**) exactly
+        /// like the PJRT path — dtype resolves from the manifest
+        /// instead of being discarded.
+        manifest: Option<Manifest>,
+    },
+    Failed(String),
+}
+
+impl Executor {
+    fn host(mode: ExecBackend, artifacts_dir: &std::path::Path, metrics: &Metrics) -> Executor {
+        let manifest = match Manifest::load(artifacts_dir) {
+            Ok(m) => Some(m),
+            // No manifest at all is the normal bare-checkout case.
+            Err(e) if e.is_missing() => None,
+            // A present-but-unusable (corrupt, unreadable, unknown
+            // dtype) manifest is surfaced and counted, then degraded
+            // around: the service keeps answering, without validation.
+            Err(e) => {
+                Metrics::inc(&metrics.manifest_errors);
+                eprintln!("gdrk: artifact manifest unusable ({e}); serving without validation");
+                None
+            }
+        };
+        Executor::Host { mode, manifest }
+    }
+
+    fn resolve(config: &ServiceConfig, metrics: &Metrics) -> Executor {
+        match config.backend {
+            Backend::Naive => Executor::host(ExecBackend::Naive, &config.artifacts_dir, metrics),
+            Backend::HostExec => Executor::host(ExecBackend::Host, &config.artifacts_dir, metrics),
+            Backend::Pjrt => {
+                if !Runtime::pjrt_available() {
+                    return Executor::Failed(
+                        "backend pjrt requested but this build lacks the pjrt feature".into(),
+                    );
+                }
+                match Runtime::new(&config.artifacts_dir) {
+                    Ok(rt) => Executor::Pjrt(rt),
+                    Err(e) => Executor::Failed(format!("runtime init failed: {e}")),
+                }
+            }
+            Backend::Auto => {
+                if Runtime::pjrt_available() {
+                    if let Ok(rt) = Runtime::new(&config.artifacts_dir) {
+                        return Executor::Pjrt(rt);
+                    }
+                }
+                eprintln!(
+                    "gdrk: PJRT unavailable (feature or artifacts missing); \
+                     serving on the hostexec backend"
+                );
+                Executor::host(ExecBackend::Host, &config.artifacts_dir, metrics)
+            }
+        }
+    }
+
+    fn preload(&self, names: &[String]) {
+        match self {
+            Executor::Pjrt(rt) => {
+                for name in names {
+                    if let Err(e) = rt.load(name) {
+                        eprintln!("gdrk: preload of '{name}' failed: {e}");
+                    }
+                }
+            }
+            Executor::Host { .. } => {
+                for name in names {
+                    let known = if name.starts_with("pipe:") {
+                        crate::hostexec::pipeline_for_artifact(name).is_some()
+                    } else {
+                        crate::hostexec::op_for_artifact(name).is_some()
+                    };
+                    if !known {
+                        eprintln!("gdrk: '{name}' has no host-backend op; preload skipped");
+                    }
+                }
+            }
+            Executor::Failed(_) => {}
+        }
+    }
+}
+
+type RungResult = Result<(Vec<Tensor>, Option<PipeStats>), String>;
+type LadderResult = Result<(Vec<Tensor>, Option<PipeStats>), ServiceError>;
+/// One rung of the degradation ladder: (name recorded in
+/// [`Response::degraded`], fault-injection site, the attempt).
+type Rung<'a> = (&'static str, &'static str, Box<dyn FnOnce() -> RungResult + 'a>);
+
+/// Build the degradation ladder for one request on this executor, top
+/// rung first. Every rung is bit-identical to the golden references by
+/// the property-test invariants, so falling down the ladder trades
+/// only speed, never correctness.
+fn rungs_for<'a>(
+    exec: &'a Executor,
+    artifact: &'a str,
+    inputs: &'a [Tensor],
+) -> Result<Vec<Rung<'a>>, String> {
+    let mut rungs: Vec<Rung<'a>> = Vec::new();
+    match exec {
+        Executor::Failed(msg) => return Err(msg.clone()),
+        Executor::Pjrt(rt) => {
+            // Pipelines lower to host execution on every backend until
+            // device-side fusion lands (ROADMAP follow-up), so `pipe:`
+            // requests start at the host rung directly.
+            if !artifact.starts_with("pipe:") {
+                rungs.push((
+                    "pjrt",
+                    site::RUNG_PJRT,
+                    Box::new(move || {
+                        rt.execute(artifact, inputs)
+                            .map(|outs| (outs, None))
+                            .map_err(|e| e.to_string())
+                    }),
+                ));
+            }
+            push_host_rungs(&mut rungs, artifact, inputs, None);
+        }
+        Executor::Host { mode, manifest } => match mode {
+            ExecBackend::Host => push_host_rungs(&mut rungs, artifact, inputs, manifest.as_ref()),
+            ExecBackend::Naive => rungs.push((
+                "naive",
+                site::RUNG_NAIVE,
+                Box::new(move || {
+                    host_execute(ExecBackend::Naive, artifact, inputs, manifest.as_ref())
+                }),
+            )),
+        },
+    }
+    Ok(rungs)
+}
+
+fn push_host_rungs<'a>(
+    rungs: &mut Vec<Rung<'a>>,
+    artifact: &'a str,
+    inputs: &'a [Tensor],
+    manifest: Option<&'a Manifest>,
+) {
+    rungs.push((
+        "host",
+        site::RUNG_HOST,
+        Box::new(move || host_execute(ExecBackend::Host, artifact, inputs, manifest)),
+    ));
+    if artifact.starts_with("pipe:") {
+        // Fused chain failed? Re-dispatch the same rewritten pipeline
+        // with fusion disabled before giving up on the fast backend.
+        rungs.push((
+            "host_unfused",
+            site::RUNG_HOST_UNFUSED,
+            Box::new(move || host_execute_unfused(artifact, inputs, manifest)),
+        ));
+    }
+    rungs.push((
+        "naive",
+        site::RUNG_NAIVE,
+        Box::new(move || host_execute(ExecBackend::Naive, artifact, inputs, manifest)),
+    ));
+}
+
+/// Run the ladder under panic isolation: each rung executes inside
+/// `catch_unwind`, a panicking or failing rung falls through to the
+/// next, and the outcome is the first success or the last rung's typed
+/// error. Returns the result plus the fallback rungs attempted after
+/// the first failure (what [`Response::degraded`] reports).
+fn run_ladder(
+    exec: &Executor,
+    req: &Request,
+    faults: Option<&FaultInjector>,
+    metrics: &Metrics,
+) -> (LadderResult, Vec<&'static str>) {
+    let rungs = match rungs_for(exec, &req.artifact, &req.inputs) {
+        Ok(r) => r,
+        Err(msg) => return (Err(ServiceError::Exec(msg)), Vec::new()),
+    };
+    // Dispatch-site fault: a panic here fails the request as a whole
+    // (recovered + typed); the rung sites below degrade instead.
+    if let Some(fi) = faults {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| fi.fire(site::EXEC))) {
+            Metrics::inc(&metrics.panics_recovered);
+            return (Err(ServiceError::Panicked(panic_message(payload))), Vec::new());
+        }
+    }
+    let mut degraded: Vec<&'static str> = Vec::new();
+    let mut last_err: Option<ServiceError> = None;
+    for (name, site_name, attempt) in rungs {
+        if last_err.is_some() {
+            degraded.push(name);
+        }
+        // Rung span: close-through after the catch_unwind, so spans a
+        // panicking rung left open are closed with it.
+        let span = trace::open("rung", name);
+        if let Some(s) = span {
+            trace::arg(s, "site", site_name);
+        }
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(fi) = faults {
+                fi.fire(site_name);
+            }
+            attempt()
+        }));
+        match outcome {
+            Ok(Ok(ok)) => {
+                if let Some(s) = span {
+                    trace::arg(s, "outcome", "ok");
+                    trace::close(s);
+                }
+                if !degraded.is_empty() {
+                    Metrics::inc(&metrics.degraded);
+                }
+                return (Ok(ok), degraded);
+            }
+            Ok(Err(msg)) => {
+                if let Some(s) = span {
+                    trace::arg(s, "outcome", format!("error: {msg}"));
+                    trace::close(s);
+                }
+                last_err = Some(ServiceError::Exec(msg));
+            }
+            Err(payload) => {
+                Metrics::inc(&metrics.panics_recovered);
+                let msg = panic_message(payload);
+                if let Some(s) = span {
+                    trace::arg(s, "outcome", format!("panicked: {msg}"));
+                    trace::close(s);
+                }
+                last_err = Some(ServiceError::Panicked(msg));
+            }
+        }
+    }
+    let err = last_err.unwrap_or_else(|| ServiceError::Exec("no execution rung available".into()));
+    (Err(err), degraded)
+}
+
+/// Render a `catch_unwind` payload (panics carry `&str` or `String`).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Resolve an artifact name to op IR and run it on the host backend at
+/// the dtype the request carries. Composite `pipe:<a>+<b>+...` names
+/// resolve to a whole [`Pipeline`] (rewritten + fused on the `HostExec`
+/// backend) — one request, one response, no full-size intermediates
+/// between the chained stages, and the response reports the run's
+/// [`PipeStats`] (rewrite counts, fused vs unfused traffic bytes);
+/// mixed-dtype chains are rejected with the pipeline's typed
+/// `MixedDtype` error. When a manifest is present the inputs are
+/// validated against its shape/dtype specs first, so the host path
+/// honours the same contract the PJRT path enforces.
+///
+/// [`Pipeline`]: crate::pipeline::Pipeline
+fn host_execute(
+    mode: ExecBackend,
+    artifact: &str,
+    inputs: &[Tensor],
+    manifest: Option<&Manifest>,
+) -> RungResult {
+    if let Some(m) = manifest {
+        if let Some(entry) = m.get(artifact) {
+            crate::runtime::validate_inputs_against(entry, artifact, inputs)
+                .map_err(|e| e.to_string())?;
+        }
+    }
+    let bufs: Vec<&TensorBuf> = inputs.iter().collect();
+    if artifact.starts_with("pipe:") {
+        let pipe = resolve_pipeline(artifact)?;
+        return pipe
+            .dispatch_buf_with_stats(&bufs, mode)
+            .map(|(outs, stats)| (outs, Some(stats)))
+            .map_err(|e| e.to_string());
+    }
+    let op = crate::hostexec::op_for_artifact(artifact).ok_or_else(|| {
+        format!("unknown artifact '{artifact}' (no host-backend op for this name)")
+    })?;
+    // Single-op bandwidth accounting: movement ops' traffic estimates
+    // are exact (the pass reads/writes exactly the modeled bytes), so
+    // measured == estimated here; fused chains report real ChainStats
+    // counters from the pipeline path instead.
+    let modeled = inputs.first().and_then(|t| {
+        op.traffic_estimate(t.shape().dims(), t.dtype())
+            .ok()
+            .map(|e| e.total_bytes())
+    });
+    let span = trace::open("op", artifact);
+    if let (Some(s), Some(b)) = (span, modeled) {
+        trace::arg(s, "bytes", b.to_string());
+    }
+    let t0 = Instant::now();
+    let result = op
+        .dispatch_buf(&bufs, mode)
+        .map(|outs| (outs, None))
+        .map_err(|e| e.to_string());
+    if matches!(mode, ExecBackend::Host) && result.is_ok() {
+        if let Some(bytes) = modeled {
+            bandwidth::record(op.cost_class(), bytes, bytes, t0.elapsed().as_secs_f64());
+        }
+    }
+    if let Some(s) = span {
+        trace::close(s);
+    }
+    result
+}
+
+/// The fusion-disabled host rung for `pipe:` chains: same manifest
+/// validation and rewrite pass, but every stage runs as its own pass
+/// ([`crate::pipeline::Pipeline::dispatch_buf_unfused_with_stats`]).
+fn host_execute_unfused(
+    artifact: &str,
+    inputs: &[Tensor],
+    manifest: Option<&Manifest>,
+) -> RungResult {
+    if let Some(m) = manifest {
+        if let Some(entry) = m.get(artifact) {
+            crate::runtime::validate_inputs_against(entry, artifact, inputs)
+                .map_err(|e| e.to_string())?;
+        }
+    }
+    let bufs: Vec<&TensorBuf> = inputs.iter().collect();
+    let pipe = resolve_pipeline(artifact)?;
+    pipe.dispatch_buf_unfused_with_stats(&bufs)
+        .map(|(outs, stats)| (outs, Some(stats)))
+        .map_err(|e| e.to_string())
+}
+
+fn resolve_pipeline(artifact: &str) -> Result<crate::pipeline::Pipeline, String> {
+    crate::hostexec::pipeline_for_artifact(artifact).ok_or_else(|| {
+        format!("unknown pipeline '{artifact}' (expected pipe:<artifact>+<artifact>+...)")
+    })
+}
+
+fn worker_loop(
+    rx: Receiver<Message>,
+    config: ServiceConfig,
+    metrics: Arc<Metrics>,
+    faults: Option<Arc<FaultInjector>>,
+    trace_sink: Option<Arc<TraceSink>>,
+) {
+    // The worker owns the executor (the PJRT runtime is not Send).
+    let exec = Executor::resolve(&config, &metrics);
+    exec.preload(&config.preload);
+
+    let sink = trace_sink.as_deref();
+    let mut batcher = Batcher::with_capacity(config.max_batch, config.max_queue_depth.max(1));
+    let mut replies: HashMap<RequestId, Sender<Response>> = HashMap::new();
+    'main: loop {
+        // Block for one message, then opportunistically drain the queue
+        // so the batcher sees everything waiting.
+        match rx.recv() {
+            Ok(Message::Work(req, reply)) => {
+                enqueue(req, reply, &mut batcher, &mut replies, &metrics)
+            }
+            Ok(Message::Shutdown) | Err(_) => break 'main,
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Message::Work(req, reply)) => {
+                    enqueue(req, reply, &mut batcher, &mut replies, &metrics)
+                }
+                Ok(Message::Shutdown) => {
+                    drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref(), sink);
+                    break 'main;
+                }
+                Err(_) => break,
+            }
+        }
+        // The worker-kill site fires *outside* any catch_unwind: a hit
+        // here is a real thread death, exercising the supervisor.
+        if let Some(fi) = &faults {
+            fi.fire(site::WORKER);
+        }
+        drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref(), sink);
+    }
+    drain(&exec, &mut batcher, &mut replies, &metrics, faults.as_deref(), sink);
+}
+
+/// Worker-side enqueue: the bounded batcher is the second line of
+/// defense behind leader-side admission — a refused push answers
+/// `Overloaded` instead of growing the queue.
+fn enqueue(
+    req: Request,
+    reply: Sender<Response>,
+    batcher: &mut Batcher,
+    replies: &mut HashMap<RequestId, Sender<Response>>,
+    metrics: &Metrics,
+) {
+    let id = req.id;
+    replies.insert(id, reply);
+    if let Err(req) = batcher.push(req) {
+        Metrics::inc(&metrics.shed);
+        Metrics::sub(&metrics.queued_bytes, req.cost_bytes);
+        Metrics::sub(&metrics.queued_depth, 1);
+        if let Some(reply) = replies.remove(&id) {
+            let _ = reply.send(Response::rejection(
+                id,
+                &req.artifact,
+                ServiceError::Overloaded {
+                    queued_bytes: Metrics::get(&metrics.queued_bytes),
+                    estimated_wait_seconds: estimated_wait_seconds(
+                        metrics,
+                        Metrics::get(&metrics.queued_bytes),
+                    ),
+                },
+            ));
+        }
+    }
+}
+
+fn expire(req: Request, replies: &mut HashMap<RequestId, Sender<Response>>, metrics: &Metrics) {
+    Metrics::inc(&metrics.expired);
+    if let Some(reply) = replies.remove(&req.id) {
+        let waited_seconds = req.enqueued.elapsed().as_secs_f64();
+        let _ = reply.send(Response::rejection(
+            req.id,
+            &req.artifact,
+            ServiceError::DeadlineExceeded { waited_seconds },
+        ));
+    }
+}
+
+fn drain(
+    exec: &Executor,
+    batcher: &mut Batcher,
+    replies: &mut HashMap<RequestId, Sender<Response>>,
+    metrics: &Metrics,
+    faults: Option<&FaultInjector>,
+    sink: Option<&TraceSink>,
+) {
+    // Deadline sweep: expired requests answer typed without burning a
+    // worker pass.
+    let now = Instant::now();
+    for req in batcher.take_expired(now) {
+        Metrics::sub(&metrics.queued_bytes, req.cost_bytes);
+        Metrics::sub(&metrics.queued_depth, 1);
+        expire(req, replies, metrics);
+    }
+    // Batches group by (artifact, dtypes); each request still names its
+    // artifact — the key exists for grouping, not execution.
+    while let Some((key, batch)) = batcher.next_batch() {
+        Metrics::inc(&metrics.batches);
+        let batch_size = batch.len();
+        for req in batch {
+            Metrics::sub(&metrics.queued_bytes, req.cost_bytes);
+            Metrics::sub(&metrics.queued_depth, 1);
+            // A deadline can pass between the sweep and this turn.
+            if req.expired(Instant::now()) {
+                expire(req, replies, metrics);
+                continue;
+            }
+            let queue_seconds = req.enqueued.elapsed().as_secs_f64();
+            metrics.queue_latency.record_seconds(queue_seconds);
+            // Reconstruct the leader-side lifecycle as spans: root
+            // request span backdated to submit, then submit (admission)
+            // and queue (admit → execution start) intervals.
+            let traced = sink.is_some() && req.trace_us.is_some();
+            if let Some((submit_us, admit_us)) = req.trace_us.filter(|_| traced) {
+                trace::begin(req.id, &req.artifact, submit_us);
+                trace::emit(
+                    "submit",
+                    &req.artifact,
+                    submit_us,
+                    admit_us,
+                    &[("cost_bytes", req.cost_bytes.to_string())],
+                );
+                trace::emit("queue", "wait", admit_us, trace::now_us(), &[]);
+                if let Some(s) = trace::open("batch", &key) {
+                    trace::arg(s, "size", batch_size.to_string());
+                }
+            }
+            let t0 = Instant::now();
+            let (outcome, degraded) = run_ladder(exec, &req, faults, metrics);
+            let exec_seconds = t0.elapsed().as_secs_f64();
+            metrics.exec_latency.record_seconds(exec_seconds);
+            // finish() closes the still-open batch + root spans.
+            let req_trace = if traced { trace::finish() } else { None };
+            if let (Some(sink), Some(t)) = (sink, &req_trace) {
+                sink.push(t.clone());
+            }
+            let (result, pipe_stats) = match outcome {
+                Ok((tensors, stats)) => {
+                    Metrics::inc(&metrics.completed);
+                    Metrics::add(&metrics.processed_bytes, req.cost_bytes);
+                    (Ok(tensors), stats)
+                }
+                Err(e) => {
+                    Metrics::inc(&metrics.failed);
+                    (Err(e), None)
+                }
+            };
+            if let Some(reply) = replies.remove(&req.id) {
+                let _ = reply.send(Response {
+                    id: req.id,
+                    artifact: req.artifact.clone(),
+                    result,
+                    queue_seconds,
+                    exec_seconds,
+                    pipe_stats,
+                    degraded,
+                    trace: req_trace,
+                });
+            }
+        }
+    }
+}

@@ -21,11 +21,15 @@ pub const PARALLEL_THRESHOLD: usize = 1 << 15;
 /// picked at).
 pub const PARALLEL_THRESHOLD_BYTES: usize = PARALLEL_THRESHOLD * 4;
 
-/// Worker count: `GDRK_THREADS` override, else the host's available
-/// parallelism, else 1. Resolved once per process (this sits on the
-/// per-request hot path of the coordinator's host backend).
+static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+static PIN_BASE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+
+/// Worker count: `GDRK_THREADS` override, else a width installed by
+/// [`set_num_threads`] (the serving front end's core partition), else
+/// the host's available parallelism, else 1. Resolved once per process
+/// (this sits on the per-request hot path of the coordinator's host
+/// backend).
 pub fn num_threads() -> usize {
-    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
     *THREADS.get_or_init(|| {
         match std::env::var("GDRK_THREADS")
             .ok()
@@ -37,6 +41,38 @@ pub fn num_threads() -> usize {
                 .unwrap_or(1),
         }
     })
+}
+
+/// Install the execution-pool width before first use — the serving
+/// front end calls this to keep host execution off the cores it
+/// reserves for connection I/O. An explicit `GDRK_THREADS` still wins
+/// (the operator's word beats the partition heuristic). Returns false
+/// — and changes nothing — once [`num_threads`] has already been
+/// resolved, or for a zero width.
+pub fn set_num_threads(width: usize) -> bool {
+    if width == 0 {
+        return false;
+    }
+    let n = match std::env::var("GDRK_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        Some(env_n) if env_n >= 1 => env_n,
+        _ => width,
+    };
+    THREADS.set(n).is_ok()
+}
+
+/// Install the core index execution workers pin *from* (under
+/// `GDRK_PIN`): worker `i` pins to `(base + i) % cores`, leaving cores
+/// `[0, base)` to the I/O threads that claimed them. Returns false once
+/// the base has already been set. No effect unless pinning is enabled.
+pub fn set_pin_base(base: usize) -> bool {
+    PIN_BASE.set(base).is_ok()
+}
+
+fn pin_base() -> usize {
+    PIN_BASE.get().copied().unwrap_or(0)
 }
 
 /// Clamp a requested worker count to the problem size: 1 below the
@@ -117,10 +153,34 @@ pub fn maybe_pin(worker: usize) {
         let cores = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1);
-        let _ = affinity::pin_to(worker % cores);
+        let _ = affinity::pin_to(pin_base().wrapping_add(worker) % cores);
     }
     #[cfg(not(target_os = "linux"))]
     let _ = worker;
+}
+
+/// Pin the calling thread to an absolute core index — the I/O-side
+/// analogue of [`maybe_pin`] (which offsets by the execution-pool
+/// base). The serving front end pins its reactor/dispatch threads to
+/// the reserved low cores with this. No-op (returns false) unless
+/// [`pinning_enabled`], on non-Linux targets, or when the kernel
+/// refuses the mask.
+pub fn pin_to_core(cpu: usize) -> bool {
+    if !pinning_enabled() {
+        return false;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        affinity::pin_to(cpu % cores)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+        false
+    }
 }
 
 /// Raw `sched_setaffinity(2)` binding, hand-declared so the crate stays
@@ -275,6 +335,25 @@ mod tests {
     #[test]
     fn num_threads_at_least_one() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn partition_knobs_resolve_once() {
+        // Resolving the width first makes a later install a refusal,
+        // deterministically, whatever order the test threads run in.
+        let resolved = num_threads();
+        assert!(resolved >= 1);
+        assert!(!set_num_threads(resolved + 1), "width is already resolved");
+        assert!(!set_num_threads(0), "zero width is never installable");
+        assert_eq!(num_threads(), resolved);
+        // The pin base installs at most once; either way maybe_pin
+        // stays safe at any index (GDRK_PIN unset here → no-op).
+        let first = set_pin_base(0);
+        assert!(!set_pin_base(3) || !first);
+        maybe_pin(0);
+        maybe_pin(usize::MAX);
+        // pin_to_core is gated on pinning being enabled.
+        assert!(!pin_to_core(0) || pinning_enabled());
     }
 
     #[test]

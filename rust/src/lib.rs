@@ -30,6 +30,7 @@ pub mod gpusim;
 pub mod kernels;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod cfd;
 pub mod report;
 pub mod util;

@@ -4,8 +4,11 @@
 //!   info                         platform + manifest summary
 //!   list                         artifacts in the manifest
 //!   run --artifact NAME          execute one artifact on random inputs
-//!   serve [--requests N]         start the coordinator and push a mixed
-//!                                synthetic workload through it
+//!   serve [--addr HOST:PORT]     start the HTTP serving front end
+//!          [--seconds S]         (0 = run until killed) over the
+//!          [--dispatch N]        coordinator: POST /v1/run/<artifact>,
+//!          [--io-cores N]        GET /metrics, GET /healthz; --io-cores
+//!          [--trace OUT.json]    reserves low cores for connection I/O
 //!          [--backend auto|naive|hostexec|pjrt]   executor selection
 //!   cavity [--n N --steps S]     run the lid-driven cavity demo
 //!                                (host solver when artifacts missing)
@@ -25,6 +28,7 @@ use gdrk::kernels::{MemcpyKernel, TiledPermuteKernel};
 use gdrk::planner::plan_reorder;
 use gdrk::report::{gbs, Table};
 use gdrk::runtime::{Runtime, Tensor};
+use gdrk::serve::{ServeConfig, Server};
 use gdrk::tensor::{NdArray, Order, Shape};
 use gdrk::util::cli;
 use gdrk::util::rng::Rng;
@@ -40,6 +44,10 @@ const OPTS: &[&str] = &[
     "log-every",
     "backend",
     "trace",
+    "addr",
+    "dispatch",
+    "io-cores",
+    "seconds",
 ];
 
 fn main() {
@@ -61,7 +69,8 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: gdrk <info|list|run|serve|cavity|sim|stats> [--artifact NAME] [--n N] \
-                 [--steps S] [--requests N] [--artifacts-dir DIR] [--trace OUT.json]"
+                 [--steps S] [--requests N] [--artifacts-dir DIR] [--trace OUT.json] \
+                 [--addr HOST:PORT] [--seconds S] [--dispatch N] [--io-cores N]"
             );
             2
         }
@@ -170,8 +179,11 @@ fn cmd_run(args: &cli::Args) -> i32 {
     }
 }
 
+/// Start the HTTP serving front end and run until `--seconds` elapse
+/// (`0`, the default, runs until the process is killed). The bound
+/// address is printed on startup so `--addr 127.0.0.1:0` (an ephemeral
+/// port) is scriptable.
 fn cmd_serve(args: &cli::Args) -> i32 {
-    let requests = args.opt_usize("requests", 64);
     let backend = match Backend::parse(args.opt("backend").unwrap_or("auto")) {
         Some(b) => b,
         None => {
@@ -183,64 +195,39 @@ fn cmd_serve(args: &cli::Args) -> i32 {
         .opt("artifacts-dir")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(gdrk::runtime::artifact::default_dir);
-    let service = match Service::start(ServiceConfig {
-        artifacts_dir: dir,
-        max_batch: 8,
-        preload: vec!["permute3d_o102".into(), "interlace_n4".into()],
-        backend,
-        ..ServiceConfig::default()
-    }) {
+    let seconds = args.opt_f64("seconds", 0.0);
+    let config = ServeConfig {
+        addr: args.opt("addr").unwrap_or("127.0.0.1:8377").to_string(),
+        service: ServiceConfig {
+            artifacts_dir: dir,
+            preload: vec!["permute3d_o102".into(), "interlace_n4".into()],
+            backend,
+            trace: args.opt("trace").map(std::path::PathBuf::from),
+            ..ServiceConfig::default()
+        },
+        dispatch_threads: args.opt_usize("dispatch", 4),
+        io_reserved_cores: args.opt_usize("io-cores", 0),
+        ..ServeConfig::default()
+    };
+    let server = match Server::start(config) {
         Ok(s) => s,
         Err(e) => {
-            eprintln!("gdrk: {e}");
+            eprintln!("gdrk serve: {e}");
             return 1;
         }
     };
-    let mut rng = Rng::new(1);
-    let workload = ["permute3d_o102", "permute3d_o021", "interlace_n4", "fd1_512"];
-    // Inputs per artifact kind, generated once (shapes are static).
-    let shapes: std::collections::HashMap<&str, Vec<Tensor>> = workload
-        .iter()
-        .map(|&w| {
-            let v: Vec<Tensor> = match w {
-                "permute3d_o102" | "permute3d_o021" => {
-                    vec![Tensor::F32(NdArray::random(Shape::new(&[32, 48, 64]), &mut rng))]
-                }
-                "interlace_n4" => (0..4)
-                    .map(|_| Tensor::F32(NdArray::random(Shape::new(&[1 << 18]), &mut rng)))
-                    .collect(),
-                _ => vec![Tensor::F32(NdArray::random(Shape::new(&[512, 512]), &mut rng))],
-            };
-            (w, v)
-        })
-        .collect();
-    let t0 = std::time::Instant::now();
-    let mut pending = Vec::new();
-    for i in 0..requests {
-        let w = workload[i % workload.len()];
-        let (_, rx) = service.submit(w, shapes[w].clone());
-        pending.push(rx);
-    }
-    let mut failed = 0;
-    for rx in pending {
-        match rx.recv() {
-            Ok(resp) if resp.is_ok() => {}
-            _ => failed += 1,
+    println!("gdrk serve: listening on http://{}", server.local_addr());
+    println!("  POST /v1/run/<artifact>  X-Gdrk-Inputs: dtype:AxBxC,...  body = raw LE bytes");
+    println!("  GET  /metrics | /healthz");
+    if seconds <= 0.0 {
+        loop {
+            std::thread::park();
         }
     }
-    let dt = t0.elapsed().as_secs_f64();
-    println!(
-        "served {requests} requests in {:.3} s ({:.1} req/s), {failed} failed",
-        dt,
-        requests as f64 / dt
-    );
-    println!("{}", service.metrics().summary());
-    service.shutdown();
-    if failed > 0 {
-        1
-    } else {
-        0
-    }
+    std::thread::sleep(std::time::Duration::from_secs_f64(seconds));
+    println!("{}", server.service().metrics().summary());
+    server.shutdown();
+    0
 }
 
 /// Serve a pipe-heavy workload with tracing forced on, then print the

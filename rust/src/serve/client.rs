@@ -1,0 +1,63 @@
+//! Blocking client for the serving protocol.
+//!
+//! Thin helpers over [`TcpStream`] used by the integration tests, the
+//! load generator, and anyone scripting against a `gdrk serve`
+//! instance: encode tensors with [`codec`], speak the header grammar,
+//! parse the response. One-shot helpers open a fresh connection per
+//! call; [`run_over`] reuses a caller-owned keep-alive connection.
+
+use super::codec;
+use super::http::{self, HttpResponse};
+use crate::runtime::Tensor;
+use std::io::Write;
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// One-shot `GET` (e.g. `/metrics`, `/healthz`) over a new connection.
+pub fn get(addr: impl ToSocketAddrs, path: &str) -> std::io::Result<HttpResponse> {
+    let mut stream = TcpStream::connect(addr)?;
+    let head = format!("GET {path} HTTP/1.1\r\nHost: gdrk\r\nConnection: close\r\n\r\n");
+    stream.write_all(head.as_bytes())?;
+    http::read_response(&mut stream)
+}
+
+/// One-shot run request over a new connection.
+pub fn post_run(
+    addr: impl ToSocketAddrs,
+    artifact: &str,
+    inputs: &[Tensor],
+    deadline_ms: Option<u64>,
+) -> std::io::Result<HttpResponse> {
+    let mut stream = TcpStream::connect(addr)?;
+    run_over(&mut stream, artifact, inputs, deadline_ms)
+}
+
+/// Run request over an existing keep-alive connection (the load
+/// generator's closed loop reuses one connection per worker).
+pub fn run_over(
+    stream: &mut TcpStream,
+    artifact: &str,
+    inputs: &[Tensor],
+    deadline_ms: Option<u64>,
+) -> std::io::Result<HttpResponse> {
+    let (specs, body) = codec::encode_tensors(inputs);
+    let mut head = format!(
+        "POST /v1/run/{artifact} HTTP/1.1\r\nHost: gdrk\r\nX-Gdrk-Inputs: {specs}\r\nContent-Length: {}\r\n",
+        body.len()
+    );
+    if let Some(ms) = deadline_ms {
+        head.push_str(&format!("X-Gdrk-Deadline-Ms: {ms}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&body)?;
+    http::read_response(stream)
+}
+
+/// Decode a `200` run response back into typed tensors.
+pub fn decode_outputs(resp: &HttpResponse) -> Result<Vec<Tensor>, String> {
+    let header = resp
+        .header("x-gdrk-outputs")
+        .ok_or_else(|| "missing X-Gdrk-Outputs header".to_string())?;
+    let specs = codec::parse_specs(header)?;
+    codec::decode_inputs(&specs, &resp.body)
+}

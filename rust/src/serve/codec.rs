@@ -1,0 +1,225 @@
+//! Wire codec for tensor payloads.
+//!
+//! The body of a run request (and of a 200 response) is the raw
+//! little-endian element bytes of each tensor, concatenated in order;
+//! the `X-Gdrk-Inputs` / `X-Gdrk-Outputs` header carries the shape and
+//! dtype metadata as a comma-separated list of `dtype:AxBxC` specs
+//! (e.g. `f32:8x12x16,i32:1024`). All supported targets are
+//! little-endian, so encoding is a straight byte copy of the native
+//! buffers; decoding still goes through `from_le_bytes` per element so
+//! the contract is explicit.
+//!
+//! Decoding validates everything *before* allocating: spec count and
+//! rank are bounded, element counts and byte sizes use checked
+//! arithmetic, and the total byte size must equal the body length
+//! exactly. A malformed header or a size mismatch is a `400`-class
+//! error string, never a partial tensor.
+
+use crate::tensor::{DType, NdArray, Shape, TensorBuf as Tensor};
+
+/// Upper bound on tensors per request.
+pub const MAX_INPUTS: usize = 64;
+/// Upper bound on dimensions per tensor spec.
+pub const MAX_RANK: usize = 8;
+
+/// Render the header spec list (`dtype:AxBxC,...`) for a tensor list.
+pub fn inputs_header(tensors: &[Tensor]) -> String {
+    tensors
+        .iter()
+        .map(|t| {
+            let dims = t
+                .shape()
+                .dims()
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("x");
+            format!("{}:{}", t.dtype().name(), dims)
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// Parse a header spec list into `(dtype, shape)` pairs.
+pub fn parse_specs(header: &str) -> Result<Vec<(DType, Shape)>, String> {
+    let mut specs = Vec::new();
+    for part in header.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            return Err(format!("empty tensor spec in '{header}'"));
+        }
+        if specs.len() >= MAX_INPUTS {
+            return Err(format!("more than {MAX_INPUTS} tensor specs"));
+        }
+        let Some((dtype_str, dims_str)) = part.split_once(':') else {
+            return Err(format!("tensor spec '{part}' is missing a ':' (want dtype:AxBxC)"));
+        };
+        let Some(dtype) = DType::parse(dtype_str.trim()) else {
+            return Err(format!("unknown dtype '{}' in spec '{part}'", dtype_str.trim()));
+        };
+        let mut dims = Vec::new();
+        for dim in dims_str.split('x') {
+            if dims.len() >= MAX_RANK {
+                return Err(format!("spec '{part}' exceeds rank {MAX_RANK}"));
+            }
+            match dim.trim().parse::<usize>() {
+                Ok(d) if d > 0 => dims.push(d),
+                _ => return Err(format!("bad dimension '{}' in spec '{part}'", dim.trim())),
+            }
+        }
+        specs.push((dtype, Shape::new(&dims)));
+    }
+    Ok(specs)
+}
+
+/// Total byte size implied by a spec list, with overflow checked.
+fn total_bytes(specs: &[(DType, Shape)]) -> Result<usize, String> {
+    let mut total = 0usize;
+    for (dtype, shape) in specs {
+        let mut elems = 1usize;
+        for &d in shape.dims() {
+            elems = elems
+                .checked_mul(d)
+                .ok_or_else(|| format!("element count overflows for shape {shape}"))?;
+        }
+        let bytes = elems
+            .checked_mul(dtype.size_bytes())
+            .and_then(|b| b.checked_add(total))
+            .ok_or_else(|| format!("byte size overflows for shape {shape}"))?;
+        total = bytes;
+    }
+    Ok(total)
+}
+
+/// Decode a request/response body into typed tensors per the spec list.
+pub fn decode_inputs(specs: &[(DType, Shape)], body: &[u8]) -> Result<Vec<Tensor>, String> {
+    let expect = total_bytes(specs)?;
+    if expect != body.len() {
+        return Err(format!(
+            "body is {} bytes but the specs describe {expect}",
+            body.len()
+        ));
+    }
+    let mut tensors = Vec::with_capacity(specs.len());
+    let mut offset = 0usize;
+    for (dtype, shape) in specs {
+        let bytes = shape.num_elements() * dtype.size_bytes();
+        let chunk = &body[offset..offset + bytes];
+        offset += bytes;
+        let tensor = match dtype {
+            DType::F32 => Tensor::from(NdArray::from_vec(
+                shape.clone(),
+                chunk
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+            )),
+            DType::F64 => Tensor::from(NdArray::from_vec(
+                shape.clone(),
+                chunk
+                    .chunks_exact(8)
+                    .map(|b| {
+                        f64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+                    })
+                    .collect(),
+            )),
+            DType::I32 => Tensor::from(NdArray::from_vec(
+                shape.clone(),
+                chunk
+                    .chunks_exact(4)
+                    .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect(),
+            )),
+            DType::Bf16 => Tensor::Bf16(NdArray::from_vec(
+                shape.clone(),
+                chunk
+                    .chunks_exact(2)
+                    .map(|b| u16::from_le_bytes([b[0], b[1]]))
+                    .collect(),
+            )),
+        };
+        tensors.push(tensor);
+    }
+    Ok(tensors)
+}
+
+/// Encode tensors for the wire: the header spec list plus the body.
+pub fn encode_tensors(tensors: &[Tensor]) -> (String, Vec<u8>) {
+    let header = inputs_header(tensors);
+    let total: usize = tensors.iter().map(|t| t.as_bytes().len()).sum();
+    let mut body = Vec::with_capacity(total);
+    for t in tensors {
+        // Native buffers are little-endian on every supported target.
+        body.extend_from_slice(t.as_bytes());
+    }
+    (header, body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(tensors: Vec<Tensor>) {
+        let (header, body) = encode_tensors(&tensors);
+        let specs = parse_specs(&header).expect("header parses back");
+        let decoded = decode_inputs(&specs, &body).expect("body decodes");
+        assert_eq!(decoded.len(), tensors.len());
+        for (a, b) in tensors.iter().zip(&decoded) {
+            assert_eq!(a.dtype(), b.dtype());
+            assert_eq!(a.shape().dims(), b.shape().dims());
+            assert_eq!(a.as_bytes(), b.as_bytes(), "bit-identical roundtrip");
+        }
+    }
+
+    #[test]
+    fn roundtrips_every_dtype() {
+        let mut rng = Rng::new(7);
+        for dtype in DType::ALL {
+            roundtrip(vec![Tensor::random(dtype, Shape::new(&[8, 12, 16]), &mut rng)]);
+        }
+    }
+
+    #[test]
+    fn roundtrips_a_multi_input_request() {
+        let mut rng = Rng::new(11);
+        let tensors = vec![
+            Tensor::random(DType::F32, Shape::new(&[4, 6]), &mut rng),
+            Tensor::iota(DType::I32, Shape::new(&[1024])),
+            Tensor::random(DType::F64, Shape::new(&[32]), &mut rng),
+        ];
+        let (header, _) = encode_tensors(&tensors);
+        assert_eq!(header, "f32:4x6,i32:1024,f64:32");
+        roundtrip(tensors);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "f32",
+            "f32:",
+            "f32:0",
+            "f32:4x",
+            "f99:8",
+            "f32:8,,f32:8",
+            "f32:1x2x3x4x5x6x7x8x9",
+        ] {
+            assert!(parse_specs(bad).is_err(), "'{bad}' should not parse");
+        }
+        let many = vec!["f32:1"; MAX_INPUTS + 1].join(",");
+        assert!(parse_specs(&many).is_err());
+        assert_eq!(parse_specs(&vec!["f32:1"; MAX_INPUTS].join(",")).unwrap().len(), MAX_INPUTS);
+    }
+
+    #[test]
+    fn rejects_size_mismatch_before_decoding() {
+        let specs = parse_specs("f32:8").unwrap();
+        assert!(decode_inputs(&specs, &[0u8; 31]).is_err());
+        assert!(decode_inputs(&specs, &[0u8; 33]).is_err());
+        assert!(decode_inputs(&specs, &[0u8; 32]).is_ok());
+        // Overflowing sizes are caught by checked arithmetic, not a panic.
+        let huge = parse_specs("f64:4000000000x4000000000x4000000000").unwrap();
+        assert!(decode_inputs(&huge, &[]).is_err());
+    }
+}

@@ -1,0 +1,326 @@
+//! Minimal HTTP/1.1 subset: exactly what the serving front end needs.
+//!
+//! Requests: a request line, CRLF-separated headers, and an optional
+//! `Content-Length` body — no chunked transfer, no trailers, no
+//! continuation lines. Responses are rendered with an explicit
+//! `Content-Length` (and `Connection: close` when the connection is
+//! done), so clients never need chunked decoding either. The parser is
+//! incremental: feed it the connection's receive buffer and it answers
+//! *complete* (plus how many bytes the request consumed — pipelined
+//! bytes after it stay in the buffer), *partial* (read more), or
+//! *invalid* (the HTTP status to answer before closing).
+
+/// Cap on the request head (request line + headers). Oversized heads
+/// answer 431 instead of growing the buffer without bound.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// A parsed request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    /// True for HTTP/1.1 (keep-alive by default); false for HTTP/1.0.
+    pub http11: bool,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (values come back trimmed).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client asked to drop the connection after this
+    /// exchange (`Connection: close`, or HTTP/1.0 without keep-alive).
+    pub fn wants_close(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => true,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => false,
+            _ => !self.http11,
+        }
+    }
+}
+
+/// Outcome of an incremental parse over a receive buffer.
+#[derive(Debug)]
+pub enum Parse {
+    /// A full request, plus the bytes it consumed from the buffer.
+    Complete(Box<HttpRequest>, usize),
+    /// The buffer holds a prefix of a request; read more.
+    Partial,
+    /// Not HTTP we serve: answer this status (with the detail as the
+    /// body) and close the connection.
+    Invalid(u16, String),
+}
+
+/// Parse one request from the front of `buf`.
+pub fn parse_request(buf: &[u8], max_body: usize) -> Parse {
+    let Some(head_len) = find_blank_line(buf) else {
+        if buf.len() > MAX_HEAD_BYTES {
+            return Parse::Invalid(431, "request head exceeds 16 KiB".into());
+        }
+        return Parse::Partial;
+    };
+    let Ok(head) = std::str::from_utf8(&buf[..head_len]) else {
+        return Parse::Invalid(400, "request head is not UTF-8".into());
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split_ascii_whitespace();
+    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Parse::Invalid(400, format!("malformed request line '{request_line}'"));
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => return Parse::Invalid(400, format!("unsupported version '{other}'")),
+    };
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Parse::Invalid(400, format!("malformed header line '{line}'"));
+        };
+        headers.push((name.trim().to_string(), value.trim().to_string()));
+    }
+    let content_length = match headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+    {
+        None => 0usize,
+        Some((_, v)) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return Parse::Invalid(400, format!("bad Content-Length '{v}'")),
+        },
+    };
+    if content_length > max_body {
+        return Parse::Invalid(
+            413,
+            format!("body of {content_length} bytes exceeds the {max_body}-byte limit"),
+        );
+    }
+    let total = head_len + 4 + content_length;
+    if buf.len() < total {
+        return Parse::Partial;
+    }
+    let req = HttpRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        http11,
+        headers,
+        body: buf[head_len + 4..total].to_vec(),
+    };
+    Parse::Complete(Box::new(req), total)
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn find_blank_line(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Render a full response: status line, supplied headers, an explicit
+/// `Content-Length`, `Connection: close` when `close`, then the body.
+pub fn render_response(
+    status: u16,
+    headers: &[(String, String)],
+    body: &[u8],
+    close: bool,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(128 + body.len());
+    out.extend_from_slice(format!("HTTP/1.1 {status} {}\r\n", reason(status)).as_bytes());
+    for (k, v) in headers {
+        out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+    }
+    out.extend_from_slice(format!("Content-Length: {}\r\n", body.len()).as_bytes());
+    if close {
+        out.extend_from_slice(b"Connection: close\r\n");
+    }
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(body);
+    out
+}
+
+/// A parsed response (the client side of the same subset).
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    /// Case-insensitive header lookup (values come back trimmed).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Blocking read of one response from a stream (status line + headers +
+/// `Content-Length` body). Used by the bundled client and the load
+/// generator; the server never calls this.
+pub fn read_response(stream: &mut impl std::io::Read) -> std::io::Result<HttpResponse> {
+    use std::io::{Error, ErrorKind, Read};
+    let bad = |msg: String| Error::new(ErrorKind::InvalidData, msg);
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    let head_len = loop {
+        if let Some(n) = find_blank_line(&buf) {
+            break n;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(bad("response head exceeds 16 KiB".into()));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(bad("connection closed mid-response-head".into()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_len])
+        .map_err(|_| bad("response head is not UTF-8".into()))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or_default();
+    let status = status_line
+        .split_ascii_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| bad(format!("malformed status line '{status_line}'")))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            headers.push((name.trim().to_string(), value.trim().to_string()));
+        }
+    }
+    let content_length = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    let mut body = buf.split_off(head_len + 4);
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(bad("connection closed mid-response-body".into()));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(HttpResponse {
+        status,
+        headers,
+        body,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn complete(buf: &[u8]) -> (HttpRequest, usize) {
+        match parse_request(buf, 1 << 20) {
+            Parse::Complete(req, used) => (*req, used),
+            other => panic!("expected a complete request, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_a_request_with_body_and_pipelined_leftover() {
+        let wire = b"POST /v1/run/copy_4k HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcdNEXT";
+        let (req, used) = complete(wire);
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/run/copy_4k");
+        assert!(req.http11);
+        assert_eq!(req.body, b"abcd");
+        assert_eq!(&wire[used..], b"NEXT");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn partial_until_head_and_body_arrive() {
+        let wire = b"GET /metrics HTTP/1.1\r\n\r\n";
+        for cut in 1..wire.len() {
+            assert!(matches!(parse_request(&wire[..cut], 64), Parse::Partial));
+        }
+        let (req, used) = complete(wire);
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+        assert_eq!(used, wire.len());
+        // Body still in flight: partial even with the head complete.
+        let wire = b"POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc";
+        assert!(matches!(parse_request(wire, 64), Parse::Partial));
+    }
+
+    #[test]
+    fn invalid_requests_answer_a_status() {
+        let cases: [(&[u8], u16); 4] = [
+            (b"NOT-HTTP\r\n\r\n", 400),
+            (b"GET /x HTTP/2.0\r\n\r\n", 400),
+            (b"GET /x HTTP/1.1\r\nContent-Length: zig\r\n\r\n", 400),
+            (b"POST /x HTTP/1.1\r\nContent-Length: 999\r\n\r\n", 413),
+        ];
+        for (wire, want) in cases {
+            match parse_request(wire, 64) {
+                Parse::Invalid(status, _) => assert_eq!(status, want),
+                other => panic!("expected Invalid({want}), got {other:?}"),
+            }
+        }
+        let oversized = vec![b'x'; MAX_HEAD_BYTES + 1];
+        assert!(matches!(parse_request(&oversized, 64), Parse::Invalid(431, _)));
+    }
+
+    #[test]
+    fn connection_semantics_follow_version_and_header() {
+        let (req, _) = complete(b"GET /healthz HTTP/1.0\r\n\r\n");
+        assert!(req.wants_close(), "HTTP/1.0 closes by default");
+        let (req, _) = complete(b"GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(!req.wants_close());
+        let (req, _) = complete(b"GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(req.wants_close());
+    }
+
+    #[test]
+    fn response_roundtrip_through_the_client_parser() {
+        let wire = render_response(
+            503,
+            &[("Retry-After".to_string(), "2".to_string())],
+            b"overloaded",
+            true,
+        );
+        let resp = read_response(&mut wire.as_slice()).expect("parses");
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.header("retry-after"), Some("2"));
+        assert_eq!(resp.body, b"overloaded");
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.contains("Content-Length: 10\r\n"));
+    }
+}

@@ -1,0 +1,345 @@
+//! L4 serving front end: the coordinator over TCP.
+//!
+//! A dependency-light HTTP/1.1 server ([`server::Server`]) that turns
+//! socket requests into [`crate::coordinator::Service`] calls. The wire
+//! protocol is deliberately small:
+//!
+//! * `POST /v1/run/<artifact>` — run an artifact (including
+//!   `pipe:a+b` composites). The `X-Gdrk-Inputs` header describes the
+//!   input tensors as `dtype:AxBxC,...` specs ([`codec`]); the body is
+//!   their raw little-endian bytes, concatenated. An optional
+//!   `X-Gdrk-Deadline-Ms` attaches a drop-dead deadline measured from
+//!   arrival. A `200` answers with `X-Gdrk-Outputs` in the same
+//!   grammar, `X-Gdrk-Degraded` when a fallback rung served the
+//!   request, and the output bytes as the body.
+//! * `GET /metrics` — the Prometheus exposition from
+//!   [`Metrics::render_prometheus`](crate::coordinator::Metrics::render_prometheus).
+//! * `GET /healthz` — `200 ok` while the device worker is live, `503`
+//!   once it is gone or the service has halted.
+//!
+//! Every typed [`ServiceError`] maps onto an HTTP status
+//! ([`status_for`]): `Overloaded` answers `503` with a `Retry-After`
+//! derived from the cost model's estimated wait, `DeadlineExceeded`
+//! answers `504`, manifest/dtype/artifact errors answer `400`, and a
+//! panic or dead worker that survived the whole degradation ladder
+//! answers `500`. Malformed HTTP answers `400`/`413`/`431` without
+//! touching the service.
+//!
+//! Threading: on Linux a single reactor thread multiplexes every
+//! connection over `poll(2)` and hands complete requests to a small
+//! dispatch pool, which blocks in [`Service::call_typed`] and posts the
+//! rendered response back to the reactor — connection I/O never blocks
+//! on execution, and execution threads never touch sockets. See
+//! [`server`] for the shutdown/drain ordering contract.
+
+pub mod client;
+pub mod codec;
+pub mod http;
+pub mod server;
+
+pub use http::{HttpRequest, HttpResponse};
+pub use server::Server;
+
+use crate::coordinator::{Service, ServiceConfig, ServiceError};
+use std::time::{Duration, Instant};
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address; port 0 picks an ephemeral port (the bound
+    /// address is reported by [`Server::local_addr`]).
+    pub addr: String,
+    /// The coordinator service the server fronts.
+    pub service: ServiceConfig,
+    /// Dispatch threads decoding requests and blocking in
+    /// [`Service::call_typed`]. Bounds the requests in flight between
+    /// parse and response.
+    pub dispatch_threads: usize,
+    /// Reserve the first N cores for I/O (the reactor and dispatch
+    /// threads pin there) and shift the host execution pool past them
+    /// via [`crate::hostexec::pool::set_pin_base`]. `0` (the default)
+    /// leaves the process-wide pool knobs untouched — the right call
+    /// for tests and short-lived tools; the `serve` CLI opts in.
+    pub io_reserved_cores: usize,
+    /// Reject request bodies larger than this with `413`.
+    pub max_body_bytes: usize,
+    /// How long [`Server::shutdown`] waits for in-flight requests to
+    /// answer before dropping their connections.
+    pub drain: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            service: ServiceConfig::default(),
+            dispatch_threads: 4,
+            io_reserved_cores: 0,
+            max_body_bytes: 256 << 20,
+            drain: Duration::from_secs(5),
+        }
+    }
+}
+
+/// The HTTP status a typed [`ServiceError`] answers with.
+pub fn status_for(err: &ServiceError) -> u16 {
+    match err {
+        ServiceError::Overloaded { .. } => 503,
+        ServiceError::DeadlineExceeded { .. } => 504,
+        ServiceError::Exec(_) => 400,
+        ServiceError::Panicked(_) | ServiceError::WorkerGone => 500,
+    }
+}
+
+/// `Retry-After` seconds for an `Overloaded` rejection: the cost
+/// model's estimated wait, rounded up, at least one second.
+pub fn retry_after_seconds(estimated_wait_seconds: f64) -> u64 {
+    (estimated_wait_seconds.ceil().max(1.0)) as u64
+}
+
+/// A response before rendering: status, extra headers, body.
+pub(crate) struct Reply {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Reply {
+    pub(crate) fn text(status: u16, msg: impl Into<String>) -> Reply {
+        let mut body = msg.into().into_bytes();
+        if body.last() != Some(&b'\n') {
+            body.push(b'\n');
+        }
+        Reply {
+            status,
+            headers: vec![("Content-Type".to_string(), "text/plain".to_string())],
+            body,
+        }
+    }
+}
+
+/// A run request, routed but not yet decoded or executed; dispatch
+/// threads carry it into [`execute_run`].
+pub(crate) struct RunJob {
+    pub artifact: String,
+    pub inputs_header: String,
+    pub deadline: Option<Instant>,
+    pub body: Vec<u8>,
+}
+
+/// What routing decided for one parsed request.
+pub(crate) enum Routed {
+    /// Answer now from the reactor (metrics, health, routing errors).
+    Immediate(Reply),
+    /// Hand to a dispatch thread for decode + execute + encode.
+    Run(Box<RunJob>),
+}
+
+/// Route a parsed request: answer cheap endpoints immediately, turn
+/// `POST /v1/run/*` into a [`RunJob`]. `received` anchors the optional
+/// deadline to the moment the request finished arriving.
+pub(crate) fn route_request(service: &Service, req: &HttpRequest, received: Instant) -> Routed {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => Routed::Immediate(Reply {
+            status: 200,
+            headers: vec![(
+                "Content-Type".to_string(),
+                "text/plain; version=0.0.4".to_string(),
+            )],
+            body: service.metrics().render_prometheus().into_bytes(),
+        }),
+        ("GET", "/healthz") => {
+            if service.worker_alive() {
+                Routed::Immediate(Reply::text(200, "ok"))
+            } else {
+                Routed::Immediate(Reply::text(503, "worker dead"))
+            }
+        }
+        (method, path) if path.starts_with("/v1/run/") => {
+            if method != "POST" {
+                return Routed::Immediate(Reply::text(
+                    405,
+                    format!("{method} not allowed on {path}; use POST"),
+                ));
+            }
+            let artifact = path["/v1/run/".len()..].to_string();
+            if artifact.is_empty() {
+                return Routed::Immediate(Reply::text(400, "missing artifact name in path"));
+            }
+            let Some(inputs_header) = req.header("x-gdrk-inputs") else {
+                return Routed::Immediate(Reply::text(400, "missing X-Gdrk-Inputs header"));
+            };
+            let deadline = match req.header("x-gdrk-deadline-ms") {
+                None => None,
+                Some(v) => match v.parse::<u64>() {
+                    Ok(ms) => Some(received + Duration::from_millis(ms)),
+                    Err(_) => {
+                        return Routed::Immediate(Reply::text(
+                            400,
+                            format!("bad X-Gdrk-Deadline-Ms '{v}'"),
+                        ))
+                    }
+                },
+            };
+            Routed::Run(Box::new(RunJob {
+                artifact,
+                inputs_header: inputs_header.to_string(),
+                deadline,
+                body: req.body.clone(),
+            }))
+        }
+        ("GET" | "POST", path) => Routed::Immediate(Reply::text(404, format!("no route for {path}"))),
+        (method, _) => Routed::Immediate(Reply::text(405, format!("method {method} not supported"))),
+    }
+}
+
+/// Decode, execute, and encode one run request. Runs on a dispatch
+/// thread; this is the only place the serving layer blocks on the
+/// coordinator.
+pub(crate) fn execute_run(service: &Service, job: RunJob) -> Reply {
+    let specs = match codec::parse_specs(&job.inputs_header) {
+        Ok(s) => s,
+        Err(msg) => return Reply::text(400, format!("bad X-Gdrk-Inputs: {msg}")),
+    };
+    let inputs = match codec::decode_inputs(&specs, &job.body) {
+        Ok(t) => t,
+        Err(msg) => return Reply::text(400, format!("bad request body: {msg}")),
+    };
+    match service.call_typed(&job.artifact, inputs, job.deadline) {
+        Ok((outputs, _stats, degraded)) => {
+            let (specs, body) = codec::encode_tensors(&outputs);
+            let mut headers = vec![
+                (
+                    "Content-Type".to_string(),
+                    "application/octet-stream".to_string(),
+                ),
+                ("X-Gdrk-Outputs".to_string(), specs),
+            ];
+            if !degraded.is_empty() {
+                headers.push(("X-Gdrk-Degraded".to_string(), degraded.join(",")));
+            }
+            Reply {
+                status: 200,
+                headers,
+                body,
+            }
+        }
+        Err(err) => {
+            let mut reply = Reply::text(status_for(&err), err.to_string());
+            if let ServiceError::Overloaded {
+                estimated_wait_seconds,
+                ..
+            } = err
+            {
+                reply.headers.push((
+                    "Retry-After".to_string(),
+                    retry_after_seconds(estimated_wait_seconds).to_string(),
+                ));
+            }
+            reply
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping_is_the_documented_table() {
+        assert_eq!(
+            status_for(&ServiceError::Overloaded {
+                queued_bytes: 1,
+                estimated_wait_seconds: 0.5
+            }),
+            503
+        );
+        assert_eq!(
+            status_for(&ServiceError::DeadlineExceeded { waited_seconds: 0.1 }),
+            504
+        );
+        assert_eq!(status_for(&ServiceError::Exec("no such artifact".into())), 400);
+        assert_eq!(status_for(&ServiceError::Panicked("boom".into())), 500);
+        assert_eq!(status_for(&ServiceError::WorkerGone), 500);
+    }
+
+    #[test]
+    fn retry_after_rounds_up_and_floors_at_one() {
+        assert_eq!(retry_after_seconds(0.0), 1);
+        assert_eq!(retry_after_seconds(0.2), 1);
+        assert_eq!(retry_after_seconds(1.0), 1);
+        assert_eq!(retry_after_seconds(1.01), 2);
+        assert_eq!(retry_after_seconds(7.5), 8);
+    }
+
+    #[test]
+    fn routing_answers_cheap_endpoints_and_errors_without_the_worker() {
+        let service = Service::start(ServiceConfig {
+            backend: crate::coordinator::Backend::Naive,
+            ..ServiceConfig::default()
+        })
+        .expect("service starts");
+        let now = Instant::now();
+        let parse = |wire: &[u8]| match http::parse_request(wire, 1 << 20) {
+            http::Parse::Complete(req, _) => *req,
+            other => panic!("expected a complete request, got {other:?}"),
+        };
+
+        let req = parse(b"GET /healthz HTTP/1.1\r\n\r\n");
+        match route_request(&service, &req, now) {
+            Routed::Immediate(r) => assert_eq!(r.status, 200),
+            Routed::Run(_) => panic!("healthz must not dispatch"),
+        }
+
+        let req = parse(b"GET /metrics HTTP/1.1\r\n\r\n");
+        match route_request(&service, &req, now) {
+            Routed::Immediate(r) => {
+                assert_eq!(r.status, 200);
+                let text = String::from_utf8(r.body).unwrap();
+                assert!(text.contains("gdrk_submitted_total"), "prometheus body");
+            }
+            Routed::Run(_) => panic!("metrics must not dispatch"),
+        }
+
+        for (wire, want) in [
+            (b"GET /nope HTTP/1.1\r\n\r\n".as_slice(), 404),
+            (b"GET /v1/run/copy_4k HTTP/1.1\r\n\r\n".as_slice(), 405),
+            (b"DELETE /metrics HTTP/1.1\r\n\r\n".as_slice(), 405),
+            (b"POST /v1/run/ HTTP/1.1\r\n\r\n".as_slice(), 400),
+            (b"POST /v1/run/copy_4k HTTP/1.1\r\n\r\n".as_slice(), 400),
+            (
+                b"POST /v1/run/copy_4k HTTP/1.1\r\nX-Gdrk-Inputs: f32:8\r\nX-Gdrk-Deadline-Ms: soon\r\n\r\n"
+                    .as_slice(),
+                400,
+            ),
+        ] {
+            let req = parse(wire);
+            match route_request(&service, &req, now) {
+                Routed::Immediate(r) => assert_eq!(r.status, want, "{}", req.path),
+                Routed::Run(_) => panic!("{} should not dispatch", req.path),
+            }
+        }
+
+        let req = parse(
+            b"POST /v1/run/copy_4k HTTP/1.1\r\nX-Gdrk-Inputs: f32:1024\r\nX-Gdrk-Deadline-Ms: 250\r\n\r\n",
+        );
+        match route_request(&service, &req, now) {
+            Routed::Run(job) => {
+                assert_eq!(job.artifact, "copy_4k");
+                assert_eq!(job.inputs_header, "f32:1024");
+                assert!(job.deadline.is_some());
+            }
+            Routed::Immediate(r) => panic!("run request answered {} immediately", r.status),
+        }
+
+        let req = parse(b"POST /v1/run/copy_4k HTTP/1.1\r\nX-Gdrk-Inputs: f32:8\r\n\r\n");
+        let Routed::Run(job) = route_request(&service, &req, now) else {
+            panic!("expected a run job");
+        };
+        // Spec/body mismatch surfaces as a 400 from the dispatch side.
+        let reply = execute_run(&service, *job);
+        assert_eq!(reply.status, 400);
+
+        service.shutdown();
+    }
+}

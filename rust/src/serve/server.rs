@@ -1,0 +1,701 @@
+//! The socket server: a `poll(2)` reactor on Linux, threads elsewhere.
+//!
+//! One reactor thread owns the listener, a self-pipe waker, and every
+//! connection (nonblocking, level-triggered `poll`). Complete requests
+//! route on the reactor ([`route_request`]): `/metrics` and `/healthz`
+//! answer inline; run requests go over a channel to a small dispatch
+//! pool whose threads decode the payload, block in
+//! [`Service::call_typed`], and post the finished [`Reply`] back
+//! through the waker. Connection I/O therefore never waits on
+//! execution, and execution never touches a socket. With
+//! [`ServeConfig::io_reserved_cores`] `> 0` the server additionally
+//! partitions cores: reactor + dispatch threads pin to the reserved low
+//! cores (under `GDRK_PIN`) and the host execution pool is sized and
+//! offset past them ([`pool::set_num_threads`] /
+//! [`pool::set_pin_base`]).
+//!
+//! # Shutdown ordering
+//!
+//! [`Server::shutdown`] is the drain contract the coordinator's
+//! [`Service::halt`] documents, in four steps:
+//!
+//! 1. **Drain** — stop accepting, close idle connections, and mark the
+//!    rest close-after-response; in-flight requests keep executing and
+//!    their responses are written out.
+//! 2. **Wait** — block until the reactor reports every connection
+//!    retired (bounded by [`ServeConfig::drain`]).
+//! 3. **Halt** — only now call [`Service::halt`], which drains the
+//!    worker and flushes the trace sink; a traced request that
+//!    completed during step 1–2 is in the trace JSON.
+//! 4. **Close** — tell the reactor to exit, dropping whatever
+//!    connections outlived the drain budget, and join every thread.
+//!
+//! On non-Linux targets a blocking thread-per-connection fallback
+//! serves the same protocol with the same shutdown ordering; the
+//! reactor is strictly a Linux specialization.
+
+use super::{Reply, RunJob, ServeConfig};
+use crate::coordinator::Service;
+use crate::hostexec::pool;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One run request in flight between the acceptor and a dispatch
+/// thread, plus what the connection wants done afterwards.
+struct Job {
+    conn: u64,
+    run: RunJob,
+    wants_close: bool,
+}
+
+/// A finished dispatch: the reply for a connection and whether to close
+/// it once written.
+struct Done {
+    conn: u64,
+    reply: Reply,
+    wants_close: bool,
+}
+
+/// A running server. Bind with [`Server::start`]; stop with
+/// [`Server::shutdown`] (the four-step drain above).
+pub struct Server {
+    local_addr: SocketAddr,
+    service: Arc<Service>,
+    drain: Duration,
+    inner: imp::Inner,
+}
+
+impl Server {
+    /// Bind `config.addr`, start the coordinator service, and serve.
+    pub fn start(config: ServeConfig) -> std::io::Result<Server> {
+        let service = Arc::new(Service::start(config.service.clone())?);
+        if config.io_reserved_cores > 0 {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            pool::set_num_threads(cores.saturating_sub(config.io_reserved_cores).max(1));
+            pool::set_pin_base(config.io_reserved_cores);
+        }
+        imp::start(config, service)
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The coordinator service behind the listener (metrics, traces).
+    pub fn service(&self) -> &Arc<Service> {
+        &self.service
+    }
+
+    /// Graceful shutdown: drain, wait, halt the service (flushing the
+    /// trace sink), then close and join — see the module docs.
+    pub fn shutdown(self) {
+        imp::shutdown(self)
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::{Done, Job, Server};
+    use crate::coordinator::Service;
+    use crate::hostexec::pool;
+    use crate::serve::http::{self, Parse};
+    use crate::serve::{execute_run, route_request, Reply, Routed, ServeConfig};
+    use std::collections::HashMap;
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::os::unix::net::UnixStream;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::mpsc::{channel, Receiver, Sender};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+    use std::time::Instant;
+
+    /// Raw `poll(2)`, hand-declared like `sched_setaffinity` in
+    /// [`pool`] so the crate stays libc-free.
+    mod sys {
+        use std::os::raw::{c_int, c_short, c_ulong};
+
+        #[repr(C)]
+        pub struct PollFd {
+            pub fd: c_int,
+            pub events: c_short,
+            pub revents: c_short,
+        }
+
+        pub const POLLIN: c_short = 0x001;
+        pub const POLLOUT: c_short = 0x004;
+        pub const POLLERR: c_short = 0x008;
+        pub const POLLHUP: c_short = 0x010;
+
+        extern "C" {
+            fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+        }
+
+        /// `poll` with EINTR retried; any other error is returned.
+        pub fn poll_retry(fds: &mut [PollFd], timeout_ms: c_int) -> std::io::Result<usize> {
+            loop {
+                let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
+                if rc >= 0 {
+                    return Ok(rc as usize);
+                }
+                let err = std::io::Error::last_os_error();
+                if err.kind() != std::io::ErrorKind::Interrupted {
+                    return Err(err);
+                }
+            }
+        }
+    }
+
+    /// Reactor-side shared state: shutdown flags, the waker's write
+    /// end, and the completion mailbox the dispatch pool fills.
+    struct Control {
+        draining: AtomicBool,
+        finish: AtomicBool,
+        waker: Mutex<UnixStream>,
+        done: Mutex<Vec<Done>>,
+    }
+
+    impl Control {
+        /// Nudge the reactor out of `poll` (errors ignored: a full pipe
+        /// already guarantees a wakeup, a closed one means the reactor
+        /// is gone).
+        fn wake(&self) {
+            if let Ok(mut w) = self.waker.lock() {
+                let _ = w.write(&[1u8]);
+            }
+        }
+    }
+
+    pub(super) struct Inner {
+        control: Arc<Control>,
+        drained_rx: Receiver<()>,
+        reactor: Option<JoinHandle<()>>,
+        dispatchers: Vec<JoinHandle<()>>,
+    }
+
+    pub(super) fn start(config: ServeConfig, service: Arc<Service>) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&config.addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let (wake_rx, wake_tx) = UnixStream::pair()?;
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+        let control = Arc::new(Control {
+            draining: AtomicBool::new(false),
+            finish: AtomicBool::new(false),
+            waker: Mutex::new(wake_tx),
+            done: Mutex::new(Vec::new()),
+        });
+
+        let (job_tx, job_rx) = channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let mut dispatchers = Vec::new();
+        for i in 0..config.dispatch_threads.max(1) {
+            let rx = job_rx.clone();
+            let service = service.clone();
+            let control = control.clone();
+            let io_cores = config.io_reserved_cores;
+            dispatchers.push(
+                std::thread::Builder::new()
+                    .name(format!("gdrk-dispatch-{i}"))
+                    .spawn(move || {
+                        if io_cores > 0 {
+                            // Core 0 is the reactor's; dispatchers share
+                            // the rest of the reserved band (or core 0
+                            // too when the band is a single core).
+                            let band = io_cores.saturating_sub(1).max(1);
+                            pool::pin_to_core(if io_cores > 1 { 1 + i % band } else { 0 });
+                        }
+                        loop {
+                            let job = match rx.lock() {
+                                Ok(rx) => rx.recv(),
+                                Err(_) => break,
+                            };
+                            let Ok(job) = job else { break };
+                            let reply = execute_run(&service, job.run);
+                            if let Ok(mut done) = control.done.lock() {
+                                done.push(Done {
+                                    conn: job.conn,
+                                    reply,
+                                    wants_close: job.wants_close,
+                                });
+                            }
+                            control.wake();
+                        }
+                    })?,
+            );
+        }
+
+        let (drained_tx, drained_rx) = channel();
+        let reactor = {
+            let control = control.clone();
+            let service = service.clone();
+            let max_body = config.max_body_bytes;
+            let io_cores = config.io_reserved_cores;
+            std::thread::Builder::new()
+                .name("gdrk-reactor".to_string())
+                .spawn(move || {
+                    if io_cores > 0 {
+                        pool::pin_to_core(0);
+                    }
+                    reactor(listener, wake_rx, control, job_tx, drained_tx, service, max_body);
+                })?
+        };
+
+        Ok(Server {
+            local_addr,
+            service,
+            drain: config.drain,
+            inner: Inner {
+                control,
+                drained_rx,
+                reactor: Some(reactor),
+                dispatchers,
+            },
+        })
+    }
+
+    pub(super) fn shutdown(server: Server) {
+        let Server {
+            service,
+            drain,
+            mut inner,
+            ..
+        } = server;
+        // 1. Drain: stop accepting, retire connections as they finish.
+        inner.control.draining.store(true, Ordering::SeqCst);
+        inner.control.wake();
+        // 2. Wait (bounded) for the reactor to report everything retired.
+        let _ = inner.drained_rx.recv_timeout(drain);
+        // 3. Halt the coordinator: drains the worker, flushes the trace
+        //    sink — after in-flight responses, before dropping sockets.
+        service.halt();
+        // 4. Close: reactor exits, dropping the job sender; dispatchers
+        //    see the closed channel and exit behind it.
+        inner.control.finish.store(true, Ordering::SeqCst);
+        inner.control.wake();
+        if let Some(h) = inner.reactor.take() {
+            let _ = h.join();
+        }
+        for h in inner.dispatchers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// One connection's state machine.
+    enum State {
+        /// Accumulating request bytes.
+        Reading,
+        /// A run request is on the dispatch pool; nothing to poll.
+        Dispatched,
+        /// Flushing `out`; next state depends on `close_after`.
+        Writing,
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        buf: Vec<u8>,
+        out: Vec<u8>,
+        written: usize,
+        state: State,
+        close_after: bool,
+    }
+
+    fn reactor(
+        listener: TcpListener,
+        mut waker: UnixStream,
+        control: Arc<Control>,
+        job_tx: Sender<Job>,
+        drained_tx: Sender<()>,
+        service: Arc<Service>,
+        max_body: usize,
+    ) {
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_id: u64 = 1;
+        let mut accepting = true;
+        let mut drained_sent = false;
+
+        loop {
+            if control.finish.load(Ordering::SeqCst) {
+                break;
+            }
+            let draining = control.draining.load(Ordering::SeqCst);
+            if draining && accepting {
+                accepting = false;
+                // Idle connections retire now; busy ones after their
+                // in-flight response.
+                conns.retain(|_, c| !matches!(c.state, State::Reading));
+                for c in conns.values_mut() {
+                    c.close_after = true;
+                }
+            }
+            if draining && !drained_sent && conns.is_empty() {
+                drained_sent = true;
+                let _ = drained_tx.send(());
+            }
+
+            // Poll set: waker, listener (while accepting), then every
+            // connection that is waiting on the socket.
+            let mut fds = vec![sys::PollFd {
+                fd: waker.as_raw_fd(),
+                events: sys::POLLIN,
+                revents: 0,
+            }];
+            let mut targets: Vec<Option<u64>> = vec![None];
+            if accepting {
+                fds.push(sys::PollFd {
+                    fd: listener.as_raw_fd(),
+                    events: sys::POLLIN,
+                    revents: 0,
+                });
+                targets.push(None);
+            }
+            for (&id, c) in conns.iter() {
+                let events = match c.state {
+                    State::Reading => sys::POLLIN,
+                    State::Writing => sys::POLLOUT,
+                    State::Dispatched => continue,
+                };
+                fds.push(sys::PollFd {
+                    fd: c.stream.as_raw_fd(),
+                    events,
+                    revents: 0,
+                });
+                targets.push(Some(id));
+            }
+            if sys::poll_retry(&mut fds, -1).is_err() {
+                break;
+            }
+
+            let mut ready: Vec<(u64, bool)> = Vec::new();
+            let mut accept_ready = false;
+            for (fd, target) in fds.iter().zip(&targets) {
+                if fd.revents == 0 {
+                    continue;
+                }
+                match target {
+                    None if fd.fd == waker.as_raw_fd() => drain_waker(&mut waker),
+                    None => accept_ready = true,
+                    Some(id) => ready.push((
+                        *id,
+                        (fd.revents & (sys::POLLIN | sys::POLLERR | sys::POLLHUP)) != 0,
+                    )),
+                }
+            }
+
+            if accept_ready && accepting {
+                accept_all(&listener, &mut conns, &mut next_id);
+            }
+
+            for (id, readable) in ready {
+                let Some(c) = conns.get_mut(&id) else { continue };
+                let mut alive = true;
+                if readable && matches!(c.state, State::Reading) {
+                    alive = fill(c);
+                }
+                if alive {
+                    alive = pump(id, c, &service, &job_tx, draining, max_body);
+                }
+                if !alive {
+                    conns.remove(&id);
+                }
+            }
+
+            // Completions from the dispatch pool: stage the response
+            // and flush as far as the socket allows.
+            let done: Vec<Done> = match control.done.lock() {
+                Ok(mut d) => d.drain(..).collect(),
+                Err(_) => break,
+            };
+            for d in done {
+                let Some(c) = conns.get_mut(&d.conn) else {
+                    continue; // client went away while we executed
+                };
+                let close = d.wants_close || c.close_after || draining;
+                c.out = http::render_response(d.reply.status, &d.reply.headers, &d.reply.body, close);
+                c.written = 0;
+                c.close_after = close;
+                c.state = State::Writing;
+                if !pump(d.conn, c, &service, &job_tx, draining, max_body) {
+                    conns.remove(&d.conn);
+                }
+            }
+        }
+        // Reactor exit drops the listener, every remaining connection,
+        // and `job_tx` — which is what stops the dispatch pool.
+    }
+
+    /// Swallow pending waker bytes (the wakeup already happened).
+    fn drain_waker(waker: &mut UnixStream) {
+        let mut sink = [0u8; 256];
+        loop {
+            match waker.read(&mut sink) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Accept everything the backlog holds.
+    fn accept_all(listener: &TcpListener, conns: &mut HashMap<u64, Conn>, next_id: &mut u64) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    conns.insert(
+                        *next_id,
+                        Conn {
+                            stream,
+                            buf: Vec::new(),
+                            out: Vec::new(),
+                            written: 0,
+                            state: State::Reading,
+                            close_after: false,
+                        },
+                    );
+                    *next_id += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Read everything available into the connection buffer. Returns
+    /// false when the connection is gone.
+    fn fill(c: &mut Conn) -> bool {
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            match c.stream.read(&mut chunk) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    c.buf.extend_from_slice(&chunk[..n]);
+                    if n < chunk.len() {
+                        return true;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// Advance a connection as far as it can go without blocking:
+    /// flush pending output, then parse / route / dispatch buffered
+    /// requests (keep-alive pipelining resumes here after each
+    /// response). Returns false when the connection should close.
+    fn pump(
+        id: u64,
+        c: &mut Conn,
+        service: &Service,
+        job_tx: &Sender<Job>,
+        draining: bool,
+        max_body: usize,
+    ) -> bool {
+        loop {
+            match c.state {
+                State::Dispatched => return true,
+                State::Writing => {
+                    while c.written < c.out.len() {
+                        match c.stream.write(&c.out[c.written..]) {
+                            Ok(0) => return false,
+                            Ok(n) => c.written += n,
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                            Err(_) => return false,
+                        }
+                    }
+                    if c.close_after {
+                        return false;
+                    }
+                    c.out.clear();
+                    c.written = 0;
+                    c.state = State::Reading;
+                    // Fall through: the buffer may hold the next request.
+                }
+                State::Reading => match http::parse_request(&c.buf, max_body) {
+                    Parse::Partial => return true,
+                    Parse::Invalid(status, msg) => {
+                        stage(c, Reply::text(status, msg), true);
+                    }
+                    Parse::Complete(req, used) => {
+                        c.buf.drain(..used);
+                        let wants_close = req.wants_close() || draining;
+                        match route_request(service, &req, Instant::now()) {
+                            Routed::Immediate(reply) => stage(c, reply, wants_close),
+                            Routed::Run(run) => match job_tx.send(Job {
+                                conn: id,
+                                run: *run,
+                                wants_close,
+                            }) {
+                                Ok(()) => c.state = State::Dispatched,
+                                Err(_) => {
+                                    stage(c, Reply::text(500, "dispatch pool is gone"), true)
+                                }
+                            },
+                        }
+                    }
+                },
+            }
+        }
+    }
+
+    /// Queue a rendered response on the connection.
+    fn stage(c: &mut Conn, reply: Reply, close: bool) {
+        c.out = http::render_response(reply.status, &reply.headers, &reply.body, close);
+        c.written = 0;
+        c.close_after = close;
+        c.state = State::Writing;
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod imp {
+    use super::Server;
+    use crate::coordinator::Service;
+    use crate::serve::http::{self, Parse};
+    use crate::serve::{execute_run, route_request, Reply, Routed, ServeConfig};
+    use std::io::Read;
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+    use std::time::{Duration, Instant};
+
+    pub(super) struct Inner {
+        stop: Arc<AtomicBool>,
+        workers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+        acceptor: Option<JoinHandle<()>>,
+    }
+
+    pub(super) fn start(config: ServeConfig, service: Arc<Service>) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&config.addr)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers = Arc::new(Mutex::new(Vec::new()));
+        let acceptor = {
+            let stop = stop.clone();
+            let workers = workers.clone();
+            let service = service.clone();
+            let max_body = config.max_body_bytes;
+            std::thread::Builder::new()
+                .name("gdrk-acceptor".to_string())
+                .spawn(move || {
+                    for conn in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = conn else { continue };
+                        let stop = stop.clone();
+                        let service = service.clone();
+                        let handle = std::thread::spawn(move || {
+                            serve_conn(stream, &service, &stop, max_body);
+                        });
+                        if let Ok(mut w) = workers.lock() {
+                            w.push(handle);
+                        }
+                    }
+                })?
+        };
+        Ok(Server {
+            local_addr,
+            service,
+            drain: config.drain,
+            inner: Inner {
+                stop,
+                workers,
+                acceptor: Some(acceptor),
+            },
+        })
+    }
+
+    pub(super) fn shutdown(server: Server) {
+        let Server {
+            service,
+            local_addr,
+            mut inner,
+            ..
+        } = server;
+        // 1. Drain: connection threads notice the flag at their next
+        //    request boundary and retire.
+        inner.stop.store(true, Ordering::SeqCst);
+        // Unblock the acceptor with a throwaway connection.
+        let _ = TcpStream::connect(local_addr);
+        if let Some(h) = inner.acceptor.take() {
+            let _ = h.join();
+        }
+        // 2. Wait: joining the workers bounds on their read timeout.
+        let handles = match inner.workers.lock() {
+            Ok(mut w) => w.drain(..).collect::<Vec<_>>(),
+            Err(_) => Vec::new(),
+        };
+        for h in handles {
+            let _ = h.join();
+        }
+        // 3. Halt the coordinator (drains the worker, flushes traces).
+        service.halt();
+    }
+
+    /// Blocking per-connection loop: read a request, answer it, repeat
+    /// until the client closes, an error, or shutdown.
+    fn serve_conn(mut stream: TcpStream, service: &Service, stop: &AtomicBool, max_body: usize) {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+        let _ = stream.set_nodelay(true);
+        let mut buf = Vec::new();
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            match http::parse_request(&buf, max_body) {
+                Parse::Invalid(status, msg) => {
+                    let reply = Reply::text(status, msg);
+                    let _ = std::io::Write::write_all(
+                        &mut stream,
+                        &http::render_response(reply.status, &reply.headers, &reply.body, true),
+                    );
+                    return;
+                }
+                Parse::Complete(req, used) => {
+                    buf.drain(..used);
+                    let close = req.wants_close() || stop.load(Ordering::SeqCst);
+                    let reply = match route_request(service, &req, Instant::now()) {
+                        Routed::Immediate(reply) => reply,
+                        Routed::Run(run) => execute_run(service, *run),
+                    };
+                    let wire =
+                        http::render_response(reply.status, &reply.headers, &reply.body, close);
+                    if std::io::Write::write_all(&mut stream, &wire).is_err() || close {
+                        return;
+                    }
+                }
+                Parse::Partial => {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    match stream.read(&mut chunk) {
+                        Ok(0) => return,
+                        Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                        Err(e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock
+                                || e.kind() == std::io::ErrorKind::TimedOut =>
+                        {
+                            continue
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                        Err(_) => return,
+                    }
+                }
+            }
+        }
+    }
+}

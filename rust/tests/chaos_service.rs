@@ -15,8 +15,10 @@ use gdrk::coordinator::{Backend, Metrics, Service, ServiceConfig, ServiceError};
 use gdrk::faultinject::{write_corrupt_manifest, FaultConfig, INJECTED_PANIC_MSG};
 use gdrk::ops::ExecBackend;
 use gdrk::runtime::Tensor;
+use gdrk::serve::{client, ServeConfig, Server};
 use gdrk::tensor::{NdArray, Shape, TensorBuf};
 use gdrk::util::rng::Rng;
+use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 /// How long a single response may take before the test declares a hang.
@@ -523,4 +525,151 @@ fn fault_free_lifecycle_is_clean() {
     assert_eq!(Metrics::get(&m.queued_bytes), 0);
     assert_eq!(Metrics::get(&m.queued_depth), 0);
     service.shutdown();
+}
+
+/// Socket-level chaos: the same seeded fault plan as the main sweep,
+/// but driven through the whole HTTP stack — reactor, dispatch pool,
+/// codec, coordinator. The lifecycle contract extends to the wire:
+/// **every HTTP response is either `200` with bytes bit-identical to
+/// the naive reference, or a typed error status** (`400`/`500`/`503`/
+/// `504`), never a hang or a torn connection; panic recovery and the
+/// degradation ladder are visible in the Prometheus exposition; and a
+/// graceful shutdown drains an in-flight request deterministically.
+#[test]
+fn chaos_over_http_every_response_correct_or_typed_status() {
+    quiet_injected_panics();
+    let cfg = chaos_config();
+    let kills_armed = cfg.kill_worker_every.is_some();
+    let dir = scratch_dir("http");
+    write_corrupt_manifest(&dir, cfg.seed).expect("corrupt manifest written");
+
+    let server = Server::start(ServeConfig {
+        service: ServiceConfig {
+            artifacts_dir: dir.clone(),
+            max_batch: 4,
+            backend: Backend::HostExec,
+            faults: Some(cfg),
+            ..ServiceConfig::default()
+        },
+        dispatch_threads: 6,
+        ..ServeConfig::default()
+    })
+    .expect("server starts under chaos");
+    let addr = server.local_addr();
+
+    let workload: Vec<(&str, Vec<Tensor>)> = vec![
+        (
+            "permute3d_o201",
+            vec![Tensor::F32(random_f32(&[8, 12, 16], 0xB1))],
+        ),
+        ("copy_4k", vec![Tensor::F32(random_f32(&[1024], 0xB2))]),
+        ("fd2_64", vec![Tensor::F32(random_f32(&[64, 64], 0xB3))]),
+        (
+            "pipe:smooth3x3_96+smooth3x3_96",
+            vec![Tensor::F32(random_f32(&[96, 96], 0xB4))],
+        ),
+        (
+            "pipe:interlace_n2+deinterlace_n2",
+            vec![
+                Tensor::F32(random_f32(&[256], 0xB5)),
+                Tensor::F32(random_f32(&[256], 0xB6)),
+            ],
+        ),
+    ];
+    let references: Vec<Vec<Tensor>> = workload
+        .iter()
+        .map(|(name, inputs)| naive_reference(name, inputs))
+        .collect();
+    let workload = std::sync::Arc::new(workload);
+    let references = std::sync::Arc::new(references);
+
+    const CLIENTS: usize = 4;
+    const ROUNDS: usize = 30;
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let workload = workload.clone();
+            let references = references.clone();
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                stream
+                    .set_read_timeout(Some(ANSWER_TIMEOUT))
+                    .expect("read timeout");
+                let (mut ok, mut typed) = (0u64, 0u64);
+                for r in 0..ROUNDS {
+                    let w = (c + r) % workload.len();
+                    let (artifact, inputs) = &workload[w];
+                    let resp = client::run_over(&mut stream, artifact, inputs, None)
+                        .expect("every request answers over the wire — no torn connections");
+                    match resp.status {
+                        200 => {
+                            ok += 1;
+                            let outs = client::decode_outputs(&resp).expect("200 decodes");
+                            assert_bit_identical(artifact, &outs, &references[w]);
+                        }
+                        400 | 500 | 503 | 504 => {
+                            typed += 1;
+                            assert!(
+                                !resp.body.is_empty(),
+                                "{artifact}: typed error must carry a rendered reason"
+                            );
+                        }
+                        other => panic!("{artifact}: untyped status {other} under chaos"),
+                    }
+                }
+                (ok, typed)
+            })
+        })
+        .collect();
+    let (mut ok, mut typed) = (0u64, 0u64);
+    for h in handles {
+        let (o, t) = h.join().expect("chaos client thread");
+        ok += o;
+        typed += t;
+    }
+    assert_eq!(ok + typed, (CLIENTS * ROUNDS) as u64);
+    assert!(ok > 0, "some wire requests must succeed under chaos");
+
+    // The fault plan is visible end to end in the scraped exposition.
+    let resp = client::get(addr, "/metrics").expect("metrics scrape");
+    assert_eq!(resp.status, 200);
+    let text = String::from_utf8(resp.body).expect("exposition is utf-8");
+    let counter = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| !l.starts_with('#') && l.starts_with(name))
+            .and_then(|l| l.split_whitespace().last())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("counter {name} missing:\n{text}"))
+    };
+    assert!(
+        counter("gdrk_panics_recovered_total") > 0.0,
+        "panic injection at >=10% must hit and be recovered"
+    );
+    assert!(
+        counter("gdrk_degraded_total") > 0.0,
+        "the ladder must serve some wire requests on a fallback rung"
+    );
+    if !kills_armed {
+        assert_eq!(counter("gdrk_worker_restarts_total"), 0.0);
+    }
+
+    // Graceful shutdown with a request racing in: it answers — served
+    // or typed — before its connection goes away. Deterministic either
+    // way: drained-and-answered, never dropped mid-flight.
+    let inflight = std::thread::spawn(move || {
+        let inputs = vec![Tensor::F32(random_f32(&[1024], 0xB7))];
+        client::post_run(addr, "copy_4k", &inputs, None)
+            .expect("in-flight request answers through shutdown")
+    });
+    // 20 ms: enough for the request to fully arrive and dispatch (the
+    // deterministic mid-execution drain is pinned by serve_shutdown.rs
+    // with forced 100 ms delays; here the point is the chaos plan).
+    std::thread::sleep(Duration::from_millis(20));
+    server.shutdown();
+    let resp = inflight.join().expect("in-flight client");
+    assert!(
+        matches!(resp.status, 200 | 400 | 500 | 503 | 504),
+        "drained request must answer typed, got {}",
+        resp.status
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }

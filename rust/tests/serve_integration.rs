@@ -1,0 +1,351 @@
+//! End-to-end tests for the HTTP serving front end.
+//!
+//! Each test starts a real [`Server`] on an ephemeral port and talks to
+//! it over TCP with the blocking [`client`] helpers. The core contract:
+//! a tensor posted over the wire comes back **bit-identical** to the
+//! same request made in-process through [`Service::call_typed`], for
+//! movement ops and fused `pipe:` chains across f32/f64/i32 — the
+//! serving layer adds transport, never arithmetic. The rest pins the
+//! error surface: deterministic `503 + Retry-After` under a tiny queue,
+//! `504` on a millisecond deadline, `400` for unknown artifacts and
+//! malformed wire bytes, and a live `/metrics` + `/healthz`.
+
+use gdrk::coordinator::{Backend, Service, ServiceConfig};
+use gdrk::faultinject::FaultConfig;
+use gdrk::runtime::Tensor;
+use gdrk::serve::{client, ServeConfig, Server};
+use gdrk::tensor::{DType, Shape};
+use gdrk::util::rng::Rng;
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// A scratch artifacts dir unique to this test run.
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gdrk-serve-{tag}-{}", std::process::id()))
+}
+
+fn service_config(tag: &str) -> ServiceConfig {
+    ServiceConfig {
+        artifacts_dir: scratch_dir(tag),
+        backend: Backend::HostExec,
+        ..ServiceConfig::default()
+    }
+}
+
+fn start_server(tag: &str) -> Server {
+    Server::start(ServeConfig {
+        service: service_config(tag),
+        ..ServeConfig::default()
+    })
+    .expect("server starts on an ephemeral port")
+}
+
+fn random(dtype: DType, dims: &[usize], seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    Tensor::random(dtype, Shape::new(dims), &mut rng)
+}
+
+fn assert_bit_identical(artifact: &str, got: &[Tensor], want: &[Tensor]) {
+    assert_eq!(got.len(), want.len(), "{artifact}: output arity");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.dtype(), w.dtype(), "{artifact}: output dtype");
+        assert_eq!(g.shape(), w.shape(), "{artifact}: output shape");
+        assert_eq!(
+            g.as_bytes(),
+            w.as_bytes(),
+            "{artifact}: wire output must be bit-identical to in-process call_typed"
+        );
+    }
+}
+
+/// The tentpole contract: for movement ops and `pipe:` chains across
+/// f32/f64/i32, the bytes that come back over HTTP are exactly the
+/// bytes [`Service::call_typed`] returns in-process.
+#[test]
+fn wire_outputs_bit_identical_to_in_process_call() {
+    let server = start_server("roundtrip");
+    let addr = server.local_addr();
+    let reference =
+        Service::start(service_config("roundtrip-ref")).expect("reference service starts");
+
+    let mut cases: Vec<(&str, Vec<Tensor>)> = Vec::new();
+    for (i, dtype) in [DType::F32, DType::F64, DType::I32].into_iter().enumerate() {
+        let seed = 0x900D + i as u64;
+        cases.push(("copy_4k", vec![random(dtype, &[1024], seed)]));
+        cases.push(("permute3d_o102", vec![random(dtype, &[32, 48, 64], seed + 16)]));
+    }
+    cases.push((
+        "pipe:smooth3x3_96+smooth3x3_96",
+        vec![random(DType::F32, &[96, 96], 0xF00)],
+    ));
+    cases.push((
+        "pipe:smooth3x3_96+smooth3x3_96",
+        vec![random(DType::F64, &[96, 96], 0xF01)],
+    ));
+    cases.push((
+        "pipe:interlace_n2+deinterlace_n2",
+        vec![
+            random(DType::F32, &[256], 0xF02),
+            random(DType::F32, &[256], 0xF03),
+        ],
+    ));
+
+    for (artifact, inputs) in &cases {
+        let resp = client::post_run(addr, artifact, inputs, None).expect("request answers");
+        assert_eq!(
+            resp.status,
+            200,
+            "{artifact}: {}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        let got = client::decode_outputs(&resp).expect("response decodes");
+        let (want, _, _) = reference
+            .call_typed(*artifact, inputs.clone(), None)
+            .expect("in-process reference call succeeds");
+        assert_bit_identical(artifact, &got, &want);
+    }
+
+    reference.shutdown();
+    server.shutdown();
+}
+
+/// Concurrent keep-alive clients hammering mixed workloads: every
+/// response is a 200 whose bytes match the in-process reference.
+#[test]
+fn concurrent_clients_all_get_correct_answers() {
+    let server = start_server("concurrent");
+    let addr = server.local_addr();
+    let reference =
+        Service::start(service_config("concurrent-ref")).expect("reference service starts");
+
+    let workload: Vec<(&str, Vec<Tensor>)> = vec![
+        ("copy_4k", vec![random(DType::F32, &[1024], 0xC0)]),
+        ("permute3d_o102", vec![random(DType::F32, &[32, 48, 64], 0xC1)]),
+        (
+            "pipe:smooth3x3_96+smooth3x3_96",
+            vec![random(DType::F32, &[96, 96], 0xC2)],
+        ),
+    ];
+    let references: Vec<Vec<Tensor>> = workload
+        .iter()
+        .map(|(name, inputs)| {
+            reference
+                .call_typed(*name, inputs.clone(), None)
+                .expect("reference call")
+                .0
+        })
+        .collect();
+
+    const CLIENTS: usize = 6;
+    const ROUNDS: usize = 5;
+    let workload = std::sync::Arc::new(workload);
+    let references = std::sync::Arc::new(references);
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let workload = workload.clone();
+            let references = references.clone();
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                for r in 0..ROUNDS {
+                    let w = (c + r) % workload.len();
+                    let (artifact, inputs) = &workload[w];
+                    let resp = client::run_over(&mut stream, artifact, inputs, None)
+                        .expect("keep-alive request answers");
+                    assert_eq!(
+                        resp.status,
+                        200,
+                        "{artifact}: {}",
+                        String::from_utf8_lossy(&resp.body)
+                    );
+                    let got = client::decode_outputs(&resp).expect("decodes");
+                    assert_bit_identical(artifact, &got, &references[w]);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread");
+    }
+
+    reference.shutdown();
+    server.shutdown();
+}
+
+/// Overload: a depth-1 queue behind an injected-slow worker sheds a
+/// concurrent burst deterministically — shed requests answer `503` with
+/// a positive integer `Retry-After`, everything else answers `200`.
+#[test]
+fn overload_answers_503_with_retry_after() {
+    let faults = FaultConfig {
+        seed: 41,
+        delay_rate: 1.0,
+        delay_ms: 150,
+        sites: Some(vec!["exec".into()]),
+        ..FaultConfig::default()
+    };
+    let server = Server::start(ServeConfig {
+        service: ServiceConfig {
+            artifacts_dir: scratch_dir("shed"),
+            backend: Backend::HostExec,
+            max_batch: 1,
+            max_queue_depth: 1,
+            faults: Some(faults),
+            ..ServiceConfig::default()
+        },
+        dispatch_threads: 8,
+        ..ServeConfig::default()
+    })
+    .expect("server starts");
+    let addr = server.local_addr();
+
+    let handles: Vec<_> = (0..12)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let inputs = vec![random(DType::F32, &[1024], 0x5AE + i as u64)];
+                client::post_run(addr, "copy_4k", &inputs, None)
+                    .expect("shed burst request answers")
+            })
+        })
+        .collect();
+    let responses: Vec<_> = handles.into_iter().map(|h| h.join().expect("client")).collect();
+
+    let (mut ok, mut shed) = (0, 0);
+    for resp in &responses {
+        match resp.status {
+            200 => ok += 1,
+            503 => {
+                shed += 1;
+                let retry: u64 = resp
+                    .header("retry-after")
+                    .expect("503 must carry Retry-After")
+                    .parse()
+                    .expect("Retry-After is an integer");
+                assert!(retry >= 1, "Retry-After must be at least one second");
+            }
+            other => panic!(
+                "burst response must be 200 or 503, got {other}: {}",
+                String::from_utf8_lossy(&resp.body)
+            ),
+        }
+    }
+    assert!(ok > 0, "admitted requests must still serve");
+    assert!(shed > 0, "a 12-wide burst into a depth-1 queue must shed");
+    server.shutdown();
+}
+
+/// Deadlines: a 1 ms wire deadline in front of a worker forced slow by
+/// fault injection answers `504 Gateway Timeout`.
+#[test]
+fn expired_deadline_answers_504() {
+    let faults = FaultConfig {
+        seed: 43,
+        delay_rate: 1.0,
+        delay_ms: 100,
+        sites: Some(vec!["exec".into()]),
+        ..FaultConfig::default()
+    };
+    let server = Server::start(ServeConfig {
+        service: ServiceConfig {
+            artifacts_dir: scratch_dir("deadline"),
+            backend: Backend::HostExec,
+            faults: Some(faults),
+            ..ServiceConfig::default()
+        },
+        ..ServeConfig::default()
+    })
+    .expect("server starts");
+    let addr = server.local_addr();
+
+    let inputs = vec![random(DType::F32, &[1024], 0xDEAD)];
+    let resp = client::post_run(addr, "copy_4k", &inputs, Some(1)).expect("request answers");
+    assert_eq!(
+        resp.status,
+        504,
+        "1 ms deadline against a 100 ms worker must time out: {}",
+        String::from_utf8_lossy(&resp.body)
+    );
+    server.shutdown();
+}
+
+/// Bad requests: unknown artifacts, spec/body mismatches, and malformed
+/// wire bytes all answer `400` without killing the connection handling.
+#[test]
+fn bad_requests_answer_400() {
+    let server = start_server("badreq");
+    let addr = server.local_addr();
+
+    // Unknown artifact: typed Exec error -> 400 with a rendered reason.
+    let inputs = vec![random(DType::F32, &[1024], 0xBAD)];
+    let resp =
+        client::post_run(addr, "definitely_not_an_artifact", &inputs, None).expect("answers");
+    assert_eq!(resp.status, 400);
+    assert!(!resp.body.is_empty(), "400 must carry a reason");
+
+    // Raw malformed request line: rejected by the HTTP layer itself.
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .write_all(b"BANANA /metrics\r\n\r\n")
+        .expect("write garbage");
+    let resp = gdrk::serve::http::read_response(&mut stream).expect("server answers garbage");
+    assert_eq!(resp.status, 400);
+
+    // The server is still fine afterwards.
+    let resp = client::post_run(addr, "copy_4k", &inputs, None).expect("answers");
+    assert_eq!(resp.status, 200);
+    server.shutdown();
+}
+
+/// `/metrics` serves a Prometheus exposition that reflects the traffic;
+/// `/healthz` answers `200 ok` while the worker is live.
+#[test]
+fn metrics_and_healthz_reflect_traffic() {
+    let server = start_server("metrics");
+    let addr = server.local_addr();
+
+    let resp = client::get(addr, "/healthz").expect("healthz answers");
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body, b"ok\n");
+
+    let inputs = vec![random(DType::F32, &[1024], 0x3E7)];
+    for _ in 0..3 {
+        let resp = client::post_run(addr, "copy_4k", &inputs, None).expect("answers");
+        assert_eq!(resp.status, 200);
+    }
+
+    let resp = client::get(addr, "/metrics").expect("metrics answers");
+    assert_eq!(resp.status, 200);
+    let ctype = resp.header("content-type").expect("metrics content type");
+    assert!(ctype.contains("version=0.0.4"), "exposition format: {ctype}");
+    let text = String::from_utf8(resp.body.clone()).expect("metrics is utf-8");
+    let value = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| !l.starts_with('#') && l.starts_with(name))
+            .and_then(|l| l.split_whitespace().last())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("metric {name} missing from exposition:\n{text}"))
+    };
+    assert!(value("gdrk_submitted_total") >= 3.0);
+    assert!(value("gdrk_completed_total") >= 3.0);
+    assert!(value("gdrk_processed_bytes_total") > 0.0);
+    server.shutdown();
+}
+
+/// Pipelined keep-alive: two requests written back-to-back on one
+/// connection both answer, in order.
+#[test]
+fn keep_alive_connection_serves_sequential_requests() {
+    let server = start_server("keepalive");
+    let addr = server.local_addr();
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .expect("read timeout");
+    let inputs = vec![random(DType::F32, &[1024], 0x2E2)];
+    for _ in 0..4 {
+        let resp = client::run_over(&mut stream, "copy_4k", &inputs, None).expect("answers");
+        assert_eq!(resp.status, 200);
+        assert!(resp.header("connection").is_none(), "keep-alive stays open");
+    }
+    server.shutdown();
+}

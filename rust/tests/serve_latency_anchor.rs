@@ -1,0 +1,73 @@
+//! Serving latency anchor, gated on `BENCH_serve.json`.
+//!
+//! CI runs `cargo run --release --example loadgen` right before this
+//! test; the loadgen writes per-workload and aggregate latency rows to
+//! `BENCH_serve.json` and this anchor asserts the serving front end is
+//! sane under load: the aggregate row actually served requests, and the
+//! p99 latency stays within a generous multiple of the p50 — a shared-
+//! machine-tolerant tail bound that still catches a reactor or dispatch
+//! stall (which shows up as a p99 hundreds of times the median).
+//!
+//! Without the JSON the test SKIPs (prints and passes), so plain
+//! `cargo test` stays green without running the load generator.
+
+const BENCH_JSON: &str = "BENCH_serve.json";
+
+/// The p99 may be at most this multiple of the p50. Generous on
+/// purpose: CI machines are noisy neighbours; a stalled reactor is
+/// orders of magnitude worse than this.
+const MAX_P99_OVER_P50: f64 = 20.0;
+
+#[test]
+fn serve_tail_latency_is_anchored() {
+    let text = match std::fs::read_to_string(BENCH_JSON) {
+        Ok(t) => t,
+        Err(_) => {
+            println!(
+                "SKIP: {BENCH_JSON} not found — run \
+                 `cargo run --release --example loadgen` first"
+            );
+            return;
+        }
+    };
+    let v = gdrk::util::json::parse(&text).expect("BENCH_serve.json parses");
+    assert_eq!(
+        v.get("bench").and_then(|b| b.as_str()),
+        Some("serve"),
+        "unexpected bench json: {text}"
+    );
+    let results = v
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .expect("bench json has a results array");
+    let all = results
+        .iter()
+        .find(|r| r.get("workload").and_then(|w| w.as_str()) == Some("all"))
+        .expect("bench json has the aggregate 'all' row");
+    let num = |key: &str| -> f64 {
+        all.get(key)
+            .and_then(|x| x.as_f64())
+            .unwrap_or_else(|| panic!("aggregate row missing '{key}': {text}"))
+    };
+
+    let requests = num("requests");
+    let throughput = num("throughput_rps");
+    let (p50, p99) = (num("p50_ms"), num("p99_ms"));
+    assert!(requests > 0.0, "the load run must complete requests");
+    assert!(
+        throughput > 0.0,
+        "aggregate throughput must be positive, got {throughput}"
+    );
+    assert!(
+        p50 > 0.0 && p99 >= p50,
+        "percentiles must be ordered and positive: p50={p50} p99={p99}"
+    );
+    assert!(
+        p99 <= MAX_P99_OVER_P50 * p50,
+        "serving tail blew past the anchor: p99 {p99:.3} ms > {MAX_P99_OVER_P50}x p50 {p50:.3} ms"
+    );
+    println!(
+        "serve anchor: {requests} requests, {throughput:.1} req/s, \
+         p50 {p50:.3} ms, p99 {p99:.3} ms (bound {MAX_P99_OVER_P50}x)"
+    );
+}

@@ -1,0 +1,127 @@
+//! Shutdown-ordering regression tests for the serving front end.
+//!
+//! The contract under test (the drain fix): [`Server::shutdown`] first
+//! drains in-flight requests — each one answers over its socket — then
+//! halts the [`Service`], which flushes the trace sink to its JSON
+//! file, and only then drops the listener and connections. A request
+//! that was mid-execution when shutdown started must therefore (a) get
+//! its real response and (b) appear in the trace file. Before the fix
+//! the listener went away first and in-flight traces were lost.
+
+use gdrk::coordinator::{Backend, Service, ServiceConfig};
+use gdrk::faultinject::FaultConfig;
+use gdrk::runtime::Tensor;
+use gdrk::serve::{client, ServeConfig, Server};
+use gdrk::tensor::{DType, Shape};
+use gdrk::util::rng::Rng;
+use std::time::Duration;
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("gdrk-servestop-{tag}-{}", std::process::id()))
+}
+
+fn random_input(seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    vec![Tensor::random(DType::F32, Shape::new(&[1024]), &mut rng)]
+}
+
+/// Count of events in a Chrome trace-event JSON file; panics with the
+/// raw text when the file is not the expected array form.
+fn trace_events(path: &std::path::Path) -> usize {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("trace file {} unreadable: {e}", path.display()));
+    let v = gdrk::util::json::parse(&text)
+        .unwrap_or_else(|e| panic!("trace file must be valid JSON ({e}):\n{text}"));
+    v.as_arr()
+        .unwrap_or_else(|| panic!("trace file must be a JSON array:\n{text}"))
+        .len()
+}
+
+/// A request in flight when `Server::shutdown` starts still answers
+/// `200`, and its trace reaches the flushed JSON file.
+#[test]
+fn shutdown_drains_inflight_request_and_flushes_trace() {
+    let trace_path =
+        std::env::temp_dir().join(format!("gdrk-servestop-trace-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&trace_path);
+    // Force execution slow enough that the request is genuinely
+    // mid-flight when shutdown starts.
+    let faults = FaultConfig {
+        seed: 29,
+        delay_rate: 1.0,
+        delay_ms: 100,
+        sites: Some(vec!["exec".into()]),
+        ..FaultConfig::default()
+    };
+    let server = Server::start(ServeConfig {
+        service: ServiceConfig {
+            artifacts_dir: scratch_dir("drain"),
+            backend: Backend::HostExec,
+            faults: Some(faults),
+            trace: Some(trace_path.clone()),
+            ..ServiceConfig::default()
+        },
+        drain: Duration::from_secs(30),
+        ..ServeConfig::default()
+    })
+    .expect("server starts");
+    let addr = server.local_addr();
+
+    let inflight = std::thread::spawn(move || {
+        client::post_run(addr, "copy_4k", &random_input(0x51), None)
+            .expect("in-flight request must still answer through shutdown")
+    });
+    // Let the request reach the worker before pulling the plug.
+    std::thread::sleep(Duration::from_millis(30));
+    server.shutdown();
+
+    let resp = inflight.join().expect("client thread");
+    assert_eq!(
+        resp.status,
+        200,
+        "drained request must answer normally: {}",
+        String::from_utf8_lossy(&resp.body)
+    );
+
+    let events = trace_events(&trace_path);
+    assert!(
+        events > 1,
+        "flushed trace must contain the drained request's spans, got {events} event(s)"
+    );
+    let _ = std::fs::remove_file(&trace_path);
+}
+
+/// `Service::halt` through a shared reference is idempotent: the first
+/// call drains and flushes the trace file, later calls (and the final
+/// `Drop`) change nothing.
+#[test]
+fn halt_is_idempotent_and_flushes_once() {
+    let trace_path =
+        std::env::temp_dir().join(format!("gdrk-servestop-halt-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&trace_path);
+    let service = Service::start(ServiceConfig {
+        artifacts_dir: scratch_dir("halt"),
+        backend: Backend::HostExec,
+        trace: Some(trace_path.clone()),
+        ..ServiceConfig::default()
+    })
+    .expect("service starts");
+
+    service
+        .call_typed("copy_4k", random_input(0x52), None)
+        .expect("traced request serves");
+    assert!(service.worker_alive());
+
+    service.halt();
+    assert!(!service.worker_alive(), "halt joins the worker");
+    let events = trace_events(&trace_path);
+    assert!(events > 1, "halt must flush the trace sink");
+
+    // Second halt and the eventual Drop are no-ops: the flushed file is
+    // untouched and nothing hangs.
+    service.halt();
+    assert_eq!(trace_events(&trace_path), events);
+    drop(service);
+    assert_eq!(trace_events(&trace_path), events);
+    let _ = std::fs::remove_file(&trace_path);
+}
